@@ -1,0 +1,43 @@
+//! Shared helpers for the figure benches: artifact loading with
+//! in-Rust training fallback, dataset access.
+#![allow(dead_code)]
+
+use std::path::Path;
+use tablenet::data::synth::Kind;
+use tablenet::data::{load_or_generate, Dataset};
+use tablenet::nn::{weights, Arch, Model};
+use tablenet::train::{train_dense, TrainConfig};
+
+pub fn dataset(kind: Kind) -> Dataset {
+    load_or_generate(Path::new("data/synth"), kind, 6000, 1000, 7)
+        .expect("dataset generates")
+}
+
+/// Linear model: artifact if present, otherwise a quick in-Rust train.
+pub fn linear_model(kind: Kind) -> (Model, Dataset) {
+    let ds = dataset(kind);
+    let path = match kind {
+        Kind::Digits => "artifacts/weights_linear.bin",
+        Kind::Fashion => "artifacts/weights_linear_fashion.bin",
+    };
+    let model = weights::load_model(Arch::Linear, Path::new(path)).unwrap_or_else(|_| {
+        eprintln!("[bench] {path} missing; training in-Rust");
+        train_dense(
+            &ds.train,
+            &[784, 10],
+            &TrainConfig { steps: 2000, lr: 0.2, input_bits: Some(3), ..Default::default() },
+        )
+    });
+    (model, ds)
+}
+
+/// MLP model from artifacts (falls back to a quick small-width train so
+/// the bench still runs standalone — costs are computed from the paper
+/// geometry either way).
+pub fn mlp_model() -> Option<Model> {
+    weights::load_model(Arch::Mlp, Path::new("artifacts/weights_mlp.bin")).ok()
+}
+
+pub fn cnn_model() -> Option<Model> {
+    weights::load_model(Arch::Cnn, Path::new("artifacts/weights_cnn.bin")).ok()
+}

@@ -1,0 +1,126 @@
+//! Hot-path microbenches (the §Perf instrument): LUT bank evaluation vs
+//! the multiply-full reference, layer-boundary encodes, coordinator
+//! round-trip. This is the bench the performance pass iterates on; its
+//! before/after numbers are recorded in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use std::sync::Arc;
+use tablenet::config::ServeConfig;
+use tablenet::coordinator::Coordinator;
+use tablenet::data::synth::Kind;
+use tablenet::engine::counters::Counters;
+use tablenet::engine::f16enc::acc_vec_to_f16;
+use tablenet::engine::plan::EnginePlan;
+use tablenet::engine::LutModel;
+use tablenet::harness::bench::Bench;
+use tablenet::lut::bitplane::DenseBitplaneLut;
+use tablenet::lut::dense::DenseWholeLut;
+use tablenet::lut::floatplane::{DenseFloatLut, FloatLutConfig};
+use tablenet::lut::Partition;
+use tablenet::quant::FixedFormat;
+use tablenet::tensor::ops::matmul;
+use tablenet::tensor::Tensor;
+use tablenet::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let (p, q) = (10usize, 784usize);
+    let w: Vec<f32> = (0..p * q).map(|_| rng.normal() * 0.1).collect();
+    let b: Vec<f32> = (0..p).map(|_| rng.normal() * 0.02).collect();
+    let x: Vec<f32> = (0..q).map(|_| rng.f32()).collect();
+
+    Bench::header("dense affine 784->10: LUT banks vs reference matmul");
+    let mut bench = Bench::default();
+
+    let wt = Tensor::new(&[q, p], {
+        // transpose for the reference x@W^T layout
+        let mut t = vec![0f32; p * q];
+        for o in 0..p {
+            for i in 0..q {
+                t[i * p + o] = w[o * q + i];
+            }
+        }
+        t
+    });
+    let xt = Tensor::new(&[1, q], x.clone());
+    bench.run("reference matmul f32 (7840 MACs)", || {
+        matmul(&xt, &wt).data()[0]
+    });
+
+    let plane14 = DenseBitplaneLut::build(
+        &w, &b, p, q, Partition::contiguous(q, 14), FixedFormat::new(3),
+    )
+    .unwrap();
+    bench.run("bitplane LUT m=14 r=3 (56 tables)", || {
+        let mut c = Counters::default();
+        plane14.eval_f32(&x, &mut c)[0]
+    });
+
+    let plane1 = DenseBitplaneLut::build(
+        &w, &b, p, q, Partition::contiguous(q, 1), FixedFormat::new(3),
+    )
+    .unwrap();
+    bench.run("bitplane LUT m=1 r=3 (784 tables)", || {
+        let mut c = Counters::default();
+        plane1.eval_f32(&x, &mut c)[0]
+    });
+
+    let whole2 = DenseWholeLut::build(
+        &w, &b, p, q, Partition::contiguous(q, 2), FixedFormat::new(3),
+    )
+    .unwrap();
+    bench.run("whole-code LUT m=2 r=3 (392 tables)", || {
+        let mut c = Counters::default();
+        whole2.eval_f32(&x, &mut c)[0]
+    });
+
+    let fl = DenseFloatLut::build(
+        &w, &b, p, q, Partition::singletons(q), FloatLutConfig::default(),
+    )
+    .unwrap();
+    bench.run("float16-plane LUT m=1 (784 tables)", || {
+        let mut c = Counters::default();
+        fl.eval_f32(&x, &mut c)[0]
+    });
+
+    // quantized-input variants (hot path once input codes are ready)
+    let codes: Vec<u32> = x.iter().map(|&v| FixedFormat::new(3).quantize(v)).collect();
+    bench.run("bitplane LUT m=14 from codes", || {
+        let mut c = Counters::default();
+        plane14.eval_codes(&codes, &mut c)[0]
+    });
+
+    Bench::header("layer-boundary encode");
+    let accs: Vec<i64> = (0..1024).map(|_| (rng.next_u64() >> 20) as i64).collect();
+    bench.run("acc -> f16 encode x1024", || {
+        let mut c = Counters::default();
+        acc_vec_to_f16(&accs, 32, &mut c).len()
+    });
+
+    Bench::header("end-to-end: engine infer + coordinator round-trip");
+    let (model, ds) = common::linear_model(Kind::Digits);
+    let engine = LutModel::compile(&model, &EnginePlan::linear_default()).unwrap();
+    let img = ds.test.image(0).to_vec();
+    bench.run("linear engine infer (end-to-end)", || {
+        engine.infer(&img).class
+    });
+
+    let coord = Coordinator::start(
+        Arc::new(LutModel::compile(&model, &EnginePlan::linear_default()).unwrap()),
+        &ServeConfig { max_batch: 1, max_wait_us: 1, workers: 1, queue_cap: 64 },
+    );
+    let client = coord.client();
+    bench.run("coordinator round-trip (batch=1)", || {
+        client.infer_blocking(img.clone()).unwrap().class
+    });
+    drop(client);
+    coord.shutdown();
+
+    if let Some(ratio) = bench.ratio(
+        "bitplane LUT m=14 r=3 (56 tables)",
+        "reference matmul f32 (7840 MACs)",
+    ) {
+        println!("\nLUT(m=14) / reference-matmul time ratio: {ratio:.2}x");
+    }
+}

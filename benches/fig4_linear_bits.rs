@@ -1,0 +1,42 @@
+//! Fig. 4 — "Number of bits in input versus accuracy on MNIST data
+//! using a linear classifier."
+//!
+//! Regenerates the figure's rows (accuracy per input bit-width for the
+//! LUT engine, with the full-precision reference as the horizontal
+//! line) and times one LUT inference per precision.
+
+mod common;
+
+use tablenet::data::synth::Kind;
+use tablenet::engine::plan::{AffineMode, EnginePlan};
+use tablenet::engine::LutModel;
+use tablenet::harness::{self, bench::Bench};
+
+fn main() {
+    let (model, ds) = common::linear_model(Kind::Digits);
+    let test = ds.test.head(500);
+
+    let rows = harness::bits_sweep(&model, &test, &[1, 2, 3, 4, 5, 6, 7, 8]);
+    harness::print_bits_sweep("Fig 4: accuracy vs input bits (digits corpus)", &rows);
+    harness::write_csv(
+        std::path::Path::new("results"),
+        "fig4_mnist_bits.csv",
+        &harness::bits_csv(&rows),
+    )
+    .ok();
+
+    Bench::header("Fig 4 companion: one LUT inference per precision");
+    let mut b = Bench::default();
+    let img = test.image(0).to_vec();
+    for bits in [1u32, 3, 8] {
+        let plan = EnginePlan {
+            affine: vec![AffineMode::BitplaneFixed { bits, m: 14, range_exp: 0 }],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        let lut = LutModel::compile(&model, &plan).unwrap();
+        b.run(&format!("lut_linear_infer bits={bits} m=14"), || {
+            lut.infer(&img).class
+        });
+    }
+}

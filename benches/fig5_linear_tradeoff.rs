@@ -1,0 +1,55 @@
+//! Fig. 5 — "Tradeoff between total LUT size versus number of
+//! shift-and-add operations for inference on MNIST and Fashion MNIST
+//! data using a linear classifier."
+//!
+//! Sweeps partitions of the 784-pixel input at 3-bit precision, prints
+//! the size/ops frontier (including the paper's named 56-LUT/17.5 MiB
+//! and 784-LUT/30.6 KiB points), measures accuracy on the engine for
+//! materialisable configs, and times inference across chunk sizes.
+
+mod common;
+
+use tablenet::data::synth::Kind;
+use tablenet::engine::plan::{AffineMode, EnginePlan};
+use tablenet::engine::LutModel;
+use tablenet::harness::{self, bench::Bench};
+use tablenet::planner;
+
+fn main() {
+    let (model, ds) = common::linear_model(Kind::Digits);
+    let test = ds.test.head(300);
+
+    let pts = planner::sweep::linear_tradeoff(3);
+    let mut rows = harness::tradeoff_rows(&model, &test, pts, 6);
+    harness::print_tradeoff("Fig 5: LUT size vs shift-and-add (linear, 3-bit)", &mut rows);
+    harness::write_csv(
+        std::path::Path::new("results"),
+        "fig5_linear_tradeoff.csv",
+        &harness::tradeoff_csv(&rows),
+    )
+    .ok();
+
+    // paper's named points must be present
+    let named = rows
+        .iter()
+        .find(|r| r.point.num_luts == 56)
+        .expect("56-LUT config in sweep");
+    println!(
+        "\npaper point: 56 LUTs -> {} (paper 17.5 MiB), {} evals (paper 168)",
+        tablenet::util::fmt_bits(named.point.size_bits),
+        named.point.lut_evals
+    );
+
+    Bench::header("Fig 5 companion: inference time vs chunk size");
+    let mut b = Bench::default();
+    let img = test.image(0).to_vec();
+    for m in [1usize, 4, 14, 16] {
+        let plan = EnginePlan {
+            affine: vec![AffineMode::BitplaneFixed { bits: 3, m, range_exp: 0 }],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        let lut = LutModel::compile(&model, &plan).unwrap();
+        b.run(&format!("lut_linear_infer m={m}"), || lut.infer(&img).class);
+    }
+}

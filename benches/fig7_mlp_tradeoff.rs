@@ -1,0 +1,73 @@
+//! Fig. 7 — "Tradeoff between total LUT size versus number of addition
+//! operations for inference on MNIST data using a MLP classifier."
+//!
+//! Prints the configuration ladder (sorted by total LUT size, as the
+//! paper's caption says), checks the in-text MLP numbers (2320 LUTs;
+//! 162.6 MiB bitplaned vs 32.7 GiB whole-code; 14,652,918 vs 1,330,678
+//! adds vs 1,332,224 reference MACs), and — when artifacts exist —
+//! measures the engine on the real MLP.
+
+mod common;
+
+use tablenet::data::synth::Kind;
+use tablenet::engine::plan::EnginePlan;
+use tablenet::engine::LutModel;
+use tablenet::harness::{self, bench::Bench};
+use tablenet::planner;
+use tablenet::util::{fmt_bits, fmt_ops};
+
+fn main() {
+    let pts = planner::sweep::mlp_tradeoff();
+
+    // planner-only table first (covers the impractically-large configs)
+    let (mut rows, measured): (Vec<_>, bool) = match common::mlp_model() {
+        Some(model) => {
+            let ds = common::dataset(Kind::Digits);
+            let test = ds.test.head(100);
+            (harness::tradeoff_rows(&model, &test, pts, 2), true)
+        }
+        None => (
+            pts.into_iter()
+                .map(|point| harness::TradeoffRow {
+                    point,
+                    measured_acc: None,
+                    measured_evals: None,
+                    measured_ops: None,
+                })
+                .collect(),
+            false,
+        ),
+    };
+    harness::print_tradeoff("Fig 7: LUT size vs additions (MLP)", &mut rows);
+    harness::write_csv(
+        std::path::Path::new("results"),
+        "fig7_mlp_tradeoff.csv",
+        &harness::tradeoff_csv(&rows),
+    )
+    .ok();
+
+    // in-text checks
+    let bitplaned = rows.iter().find(|r| r.point.ops == 14_652_918).expect("paper config");
+    println!(
+        "\npaper bitplaned config: {} LUTs, {} (paper: 2320 LUTs, 162.6 MiB)",
+        bitplaned.point.num_luts,
+        fmt_bits(bitplaned.point.size_bits)
+    );
+    let whole = rows.iter().find(|r| r.point.ops == 1_330_678).expect("whole-code config");
+    println!(
+        "paper whole-code config: {} (paper: 32.7 GiB) — {} adds vs {} MACs",
+        fmt_bits(whole.point.size_bits),
+        fmt_ops(whole.point.ops),
+        fmt_ops(whole.point.ref_macs)
+    );
+
+    if measured {
+        let model = common::mlp_model().unwrap();
+        let ds = common::dataset(Kind::Digits);
+        let img = ds.test.image(0).to_vec();
+        Bench::header("Fig 7 companion: MLP engine inference");
+        let mut b = Bench::default();
+        let lut = LutModel::compile(&model, &EnginePlan::mlp_default()).unwrap();
+        b.run("mlp_lut_infer (2320 LUTs, f16 planes)", || lut.infer(&img).class);
+    }
+}

@@ -1,0 +1,69 @@
+//! Fig. 8 — "Tradeoff between total LUT size versus number of
+//! shift-and-add operations for inference on MNIST data using a CNN
+//! classifier."
+//!
+//! LeNet geometry: conv 5x5x32, conv 5x5x64, fc 3136x1024, fc 1024x10.
+//! Prints the configuration ladder (spatial blocks × float planes ×
+//! dense whole-code variants), checks the in-text CNN numbers (12.49
+//! MiB weights; ~400 MiB smallest all-bitplane config; 12.26 GiB-class
+//! whole-code config), and measures a few engine inferences if
+//! artifacts exist.
+
+mod common;
+
+use tablenet::data::synth::Kind;
+use tablenet::engine::plan::EnginePlan;
+use tablenet::engine::LutModel;
+use tablenet::harness::{self, bench::Bench};
+use tablenet::planner;
+use tablenet::util::fmt_bits;
+
+fn main() {
+    let pts = planner::sweep::cnn_tradeoff();
+    let mut rows: Vec<_> = pts
+        .into_iter()
+        .map(|point| harness::TradeoffRow {
+            point,
+            measured_acc: None,
+            measured_evals: None,
+            measured_ops: None,
+        })
+        .collect();
+    harness::print_tradeoff("Fig 8: LUT size vs shift-and-add (LeNet CNN)", &mut rows);
+    harness::write_csv(
+        std::path::Path::new("results"),
+        "fig8_cnn_tradeoff.csv",
+        &harness::tradeoff_csv(&rows),
+    )
+    .ok();
+
+    // in-text anchors
+    let default_pt =
+        planner::evaluate_plan(&planner::arch_geometry(tablenet::nn::Arch::Cnn), &EnginePlan::cnn_default());
+    println!(
+        "\npaper smallest-config anchor: {} (paper: 400 MiB), weights {} (paper 12.49 MiB)",
+        fmt_bits(default_pt.size_bits),
+        fmt_bits((3_273_504u64) * 32),
+    );
+
+    if let Some(model) = common::cnn_model() {
+        let ds = common::dataset(Kind::Digits);
+        let test = ds.test.head(8);
+        let lut = LutModel::compile(&model, &EnginePlan::cnn_default()).unwrap();
+        let (acc, ctr) = lut.accuracy(&test.images, 784, &test.labels);
+        ctr.assert_multiplier_less();
+        println!(
+            "engine check over {} samples: {:.0}% accuracy, per-inference {ctr}",
+            test.len(),
+            acc * 100.0
+        );
+        Bench::header("Fig 8 companion: one CNN LUT inference");
+        let mut b = Bench::new(
+            std::env::var("TABLENET_BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(3000),
+        );
+        let img = test.image(0).to_vec();
+        b.run("cnn_lut_infer (4 layers)", || lut.infer(&img).class);
+    } else {
+        println!("(no artifacts/weights_cnn.bin — planner table only)");
+    }
+}

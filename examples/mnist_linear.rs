@@ -1,0 +1,74 @@
+//! End-to-end linear classifier: loads the JAX-trained weights (or
+//! trains in-Rust as a fallback), compiles the paper's headline LUT
+//! configuration ("56 LUTs, 17.5 MiB, 168 LUT evaluations"), and
+//! reports accuracy + op counts for the LUT engine vs the reference.
+//!
+//!     cargo run --release --example mnist_linear [-- --dataset fashion]
+
+use std::path::Path;
+use tablenet::config::cli::Args;
+use tablenet::data::synth::Kind;
+use tablenet::data::load_or_generate;
+use tablenet::engine::plan::EnginePlan;
+use tablenet::engine::LutModel;
+use tablenet::nn::{weights, Arch};
+use tablenet::tensor::Tensor;
+use tablenet::train::{train_dense, TrainConfig};
+use tablenet::util::{fmt_bits, fmt_ops};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let kind = Kind::parse(args.get_or("dataset", "mnist")).expect("mnist|fashion");
+    let ds = load_or_generate(Path::new("data/synth"), kind, 6000, 1000, 7)?;
+
+    // prefer the JAX-trained artifact; fall back to in-Rust training
+    let wpath = match kind {
+        Kind::Digits => "artifacts/weights_linear.bin",
+        Kind::Fashion => "artifacts/weights_linear_fashion.bin",
+    };
+    let model = match weights::load_model(Arch::Linear, Path::new(wpath)) {
+        Ok(m) => {
+            println!("loaded {wpath}");
+            m
+        }
+        Err(_) => {
+            println!("no artifact found; training in-Rust (~10 s)...");
+            train_dense(
+                &ds.train,
+                &[784, 10],
+                &TrainConfig { steps: 3000, lr: 0.2, input_bits: Some(3), ..Default::default() },
+            )
+        }
+    };
+
+    // reference accuracy (full precision, multiply-full)
+    let x = Tensor::new(&[ds.test.len(), 784], ds.test.images.clone());
+    let ref_acc = model.accuracy(&x, &ds.test.labels);
+
+    // the paper's two named configs
+    for (name, plan) in [
+        ("56 LUTs (m=14)", EnginePlan::linear_default()),
+        ("784 LUTs (m=1, memory parity)", EnginePlan::linear_parity()),
+    ] {
+        let lut = LutModel::compile(&model, &plan).expect("materialisable");
+        let (acc, ctr) = lut.accuracy(&ds.test.images, 784, &ds.test.labels);
+        ctr.assert_multiplier_less();
+        println!(
+            "\n{name}: size {}  accuracy {:.2}% (ref {:.2}%)",
+            fmt_bits(lut.size_bits()),
+            acc * 100.0,
+            ref_acc * 100.0
+        );
+        println!(
+            "  per inference: {} LUT evals, {} shift-adds, {} adds, 0 multiplies",
+            ctr.lut_evals,
+            fmt_ops(ctr.shift_adds),
+            fmt_ops(ctr.adds)
+        );
+        println!(
+            "  reference does {} multiply-and-adds for the same layer",
+            fmt_ops(7840)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: build a multiplier-less LUT implementation of a small
+//! dense layer and verify it against the float reference — the paper's
+//! core construction in ~60 lines of user code. Needs no artifacts.
+//!
+//!     cargo run --release --example quickstart
+
+use tablenet::engine::counters::Counters;
+use tablenet::lut::bitplane::DenseBitplaneLut;
+use tablenet::lut::{from_acc, Partition};
+use tablenet::quant::FixedFormat;
+use tablenet::util::{fmt_bits, Rng};
+
+fn main() {
+    // a 16 -> 4 dense layer with random weights
+    let (p, q) = (4usize, 16usize);
+    let mut rng = Rng::new(42);
+    let w: Vec<f32> = (0..p * q).map(|_| rng.normal() * 0.5).collect();
+    let b: Vec<f32> = (0..p).map(|_| rng.normal() * 0.1).collect();
+
+    // input quantized to 4 bits, partitioned into chunks of 4 elements:
+    // one 2^4-row table per chunk, reused across all 4 bitplanes
+    let fmt = FixedFormat::new(4);
+    let partition = Partition::contiguous(q, 4);
+    let lut = DenseBitplaneLut::build(&w, &b, p, q, partition, fmt)
+        .expect("table fits comfortably in memory");
+
+    let x: Vec<f32> = (0..q).map(|_| rng.f32()).collect();
+
+    // multiplier-less evaluation: gathers + shift-adds only
+    let mut ctr = Counters::default();
+    let acc = lut.eval_f32(&x, &mut ctr);
+    let lut_out: Vec<f32> = acc.iter().map(|&a| from_acc(a, 0)).collect();
+
+    // float reference on the same (quantized) input
+    let xq: Vec<f32> = x.iter().map(|&v| fmt.fake_quant(v)).collect();
+    let ref_out: Vec<f32> = (0..p)
+        .map(|o| b[o] + (0..q).map(|i| w[o * q + i] * xq[i]).sum::<f32>())
+        .collect();
+
+    println!("input (first 6):  {:?}", &x[..6]);
+    println!("LUT output:       {lut_out:?}");
+    println!("float reference:  {ref_out:?}");
+    let max_err = lut_out
+        .iter()
+        .zip(&ref_out)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("max |Δ| = {max_err:.2e}");
+    assert!(max_err < 1e-4);
+
+    println!("\nop mix for one inference: {ctr}");
+    ctr.assert_multiplier_less();
+    println!(
+        "table storage: {} (vs {} for f32 weights)",
+        fmt_bits(lut.size_bits(16)),
+        fmt_bits((p * q * 32) as u64),
+    );
+    println!("\nquickstart OK — zero multiplies on the data path.");
+}

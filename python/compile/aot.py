@@ -1,0 +1,98 @@
+"""AOT export (Layer 2 -> artifacts): lowers the reference forward
+passes — and the Pallas LUT-kernel graph — to HLO **text** for the Rust
+PJRT runtime.
+
+HLO text (not `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and rust/src/runtime/).
+
+Usage:
+    python -m compile.aot --weights ../artifacts/weights_linear.bin \
+        --arch linear --out-dir ../artifacts [--batches 1,32]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import export
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_reference(arch: str, params, batch: int) -> str:
+    """Reference forward with weights baked in as constants: the Rust
+    side feeds only the image batch."""
+    forward = M.FORWARDS[arch]
+    const_params = {k: jnp.asarray(v) for k, v in params.items()}
+
+    def fn(x):
+        return (forward(const_params, x, quant=False),)
+
+    shape = M.input_shape(arch, batch)
+    # rust runtime always feeds [batch, features]
+    flat_shape = (batch, int(np.prod(shape[1:])))
+    spec = jax.ShapeDtypeStruct(flat_shape, jnp.float32)
+
+    def fn_flat(x):
+        return fn(x.reshape(shape) if arch == "cnn" else x)
+
+    return to_hlo_text(jax.jit(fn_flat).lower(spec))
+
+
+def lower_lut_linear(params, batch: int, *, bits: int = 3, m: int = 4) -> str:
+    """The LUT-path linear forward (contains the Pallas kernel, lowered
+    via interpret=True into plain HLO ops) — proof that Layer 1 lowers
+    into HLO the Rust runtime can execute."""
+    const_params = {k: jnp.asarray(v) for k, v in params.items()}
+
+    def fn(x):
+        return (M.forward_linear_lut(const_params, x, bits=bits, m=m),)
+
+    spec = jax.ShapeDtypeStruct((batch, 784), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=["linear", "mlp", "cnn"], required=True)
+    ap.add_argument("--weights", required=True)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batches", default="1,32")
+    ap.add_argument("--lut", action="store_true",
+                    help="also export the Pallas LUT graph (linear only)")
+    args = ap.parse_args()
+
+    params = export.read_weights(args.weights)
+    os.makedirs(args.out_dir, exist_ok=True)
+    for b in [int(x) for x in args.batches.split(",") if x]:
+        text = lower_reference(args.arch, params, b)
+        path = os.path.join(args.out_dir, f"{args.arch}_ref_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    if args.lut and args.arch == "linear":
+        text = lower_lut_linear(params, 1)
+        path = os.path.join(args.out_dir, "linear_lut_b1.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

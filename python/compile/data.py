@@ -1,0 +1,46 @@
+"""IDX dataset loader for the JAX training path.
+
+Reads the same IDX files the Rust side generates (`tablenet gen-data`),
+so both languages train/evaluate on bit-identical corpora.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+
+import numpy as np
+
+
+def _read_u32(f):
+    return struct.unpack(">I", f.read(4))[0]
+
+
+def load_images(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        magic = _read_u32(f)
+        assert magic == 0x0803, f"bad image magic {magic:#x} in {path}"
+        n, rows, cols = _read_u32(f), _read_u32(f), _read_u32(f)
+        data = np.frombuffer(f.read(n * rows * cols), dtype=np.uint8)
+    return data.reshape(n, rows, cols)
+
+
+def load_labels(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        magic = _read_u32(f)
+        assert magic == 0x0801, f"bad label magic {magic:#x} in {path}"
+        n = _read_u32(f)
+        data = np.frombuffer(f.read(n), dtype=np.uint8)
+    return data.astype(np.int32)
+
+
+def load_dataset(data_dir: str, kind: str = "digits"):
+    """Returns ((train_x, train_y), (test_x, test_y)); x in [0,1] f32
+    of shape [n, 28, 28]."""
+    prefix = "fashion-" if kind in ("fashion", "fashion-mnist") else ""
+    tr_x = load_images(os.path.join(data_dir, f"{prefix}train-images-idx3-ubyte"))
+    tr_y = load_labels(os.path.join(data_dir, f"{prefix}train-labels-idx1-ubyte"))
+    te_x = load_images(os.path.join(data_dir, f"{prefix}t10k-images-idx3-ubyte"))
+    te_y = load_labels(os.path.join(data_dir, f"{prefix}t10k-labels-idx1-ubyte"))
+    to_f = lambda a: (a.astype(np.float32) / 255.0)
+    return (to_f(tr_x), tr_y), (to_f(te_x), te_y)

@@ -1,0 +1,48 @@
+"""TBNW weights export: the little-endian binary format read by
+rust/src/nn/weights.rs (magic `TBNW`, version 1)."""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"TBNW"
+VERSION = 1
+
+
+def write_weights(path: str, weights: dict) -> None:
+    """Write a {name: array} dict, sorted by name (matching the Rust
+    BTreeMap ordering) as f32 row-major."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", VERSION))
+        f.write(struct.pack("<I", len(weights)))
+        for name in sorted(weights):
+            arr = np.ascontiguousarray(np.asarray(weights[name], dtype=np.float32))
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def read_weights(path: str) -> dict:
+    """Read back a TBNW file (round-trip validation in tests)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (version,) = struct.unpack("<I", f.read(4))
+        assert version == VERSION, f"bad version {version}"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            (rank,) = struct.unpack("<I", f.read(4))
+            shape = struct.unpack(f"<{rank}Q", f.read(8 * rank))
+            n = int(np.prod(shape)) if rank else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(shape)
+            out[name] = data
+    return out

@@ -1,0 +1,110 @@
+"""Layer-1 Pallas kernels: the paper's multiplier-less affine hot-spot.
+
+HARDWARE ADAPTATION (see DESIGN.md §Hardware-Adaptation): the paper
+targets LUT memory arrays with bit-rerouting circuitry. On TPU we map
+
+  * LUT table  -> a (2^m, p) block resident in VMEM (scratchpad);
+  * bit routing -> VPU integer shift/and ops computing row indices;
+  * row read + shift-add -> dynamic-slice gather + accumulate, where the
+    2^j plane scaling is an f32 exponent increment (a shift in the
+    hardware's fixed-point view — no MXU, no general multiplier).
+
+The kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); structure, not wallclock, is what we optimise here. The
+VMEM working set per grid step is one table block (2^m · p · 4 B) plus
+one index row — the BlockSpec below expresses exactly that.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Pallas on this jax version requires interpret mode for CPU execution.
+INTERPRET = True
+
+
+def _quantize_kernel(x_ref, o_ref, *, bits: int):
+    levels = 2**bits
+    v = jnp.floor(x_ref[...] * levels)
+    o_ref[...] = jnp.clip(v, 0, levels - 1).astype(jnp.int32)
+
+
+def quantize(x, bits: int):
+    """Pallas elementwise fixed-point quantizer: [..., q] f32 -> int32."""
+    kernel = functools.partial(_quantize_kernel, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int32),
+        interpret=INTERPRET,
+    )(x)
+
+
+def _lut_matmul_kernel(tables_ref, idx_ref, bias_ref, o_ref, *, bits: int, k: int):
+    """Grid over chunks c. Each step gathers this chunk's rows for all
+    planes and accumulates. tables_ref block: [2^m, p] (this chunk's
+    table in VMEM); idx_ref block: [bits, 1]; o_ref: [p] accumulator.
+    """
+    c = pl.program_id(0)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = bias_ref[...]
+
+    table = tables_ref[0]  # [rows, p] — the VMEM-resident chunk table
+    idx = idx_ref[...]  # [bits, 1]
+    acc = jnp.zeros_like(o_ref)
+    for j in range(bits):  # planes: static unroll (n is small: 1..8)
+        row = table[idx[j, 0]]  # dynamic row gather
+        # 2^(j-bits) plane scaling: exponent increment (hardware shift)
+        acc = acc + row * (2.0 ** (j - bits))
+    o_ref[...] += acc
+
+
+def lut_matmul(tables, idx, bias, *, bits: int):
+    """Multiplier-less affine via bitplane LUT gathers.
+
+    tables: [k, 2^m, p] f32 — chunk tables (built at compile time from W)
+    idx:    [bits, k] int32 — plane-j row index per chunk
+    bias:   [p] f32
+    returns [p] f32 == bias + Σ_j 2^(j-bits) Σ_c tables[c, idx[j, c]]
+    """
+    k, rows, p = tables.shape
+    kernel = functools.partial(_lut_matmul_kernel, bits=bits, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(k,),
+        in_specs=[
+            # one chunk's table per grid step — the HBM->VMEM schedule
+            pl.BlockSpec((1, rows, p), lambda c: (c, 0, 0)),
+            pl.BlockSpec((bits, 1), lambda c: (0, c)),
+            pl.BlockSpec((p,), lambda c: (0,)),
+        ],
+        out_specs=pl.BlockSpec((p,), lambda c: (0,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=INTERPRET,
+    )(tables, idx, bias)
+
+
+def lut_matmul_batched(tables, idx, bias, *, bits: int):
+    """Batched wrapper: idx [b, bits, k] -> [b, p] (vmap over the batch;
+    tables and bias are broadcast — they stay resident)."""
+    f = functools.partial(lut_matmul, bits=bits)
+    return jax.vmap(lambda i: f(tables, i, bias))(idx)
+
+
+def lut_affine(w, b, x, *, bits: int, m: int):
+    """End-to-end LUT affine for a batch: quantize (Pallas) -> indices
+    (VPU bit routing) -> LUT matmul (Pallas). Mirrors ref.lut_affine_ref.
+    """
+    from . import ref
+
+    codes = quantize(x, bits)
+    idx = ref.plane_indices(codes, m, bits)
+    tables, bias = ref.build_tables(w, b, m)
+    if x.ndim == 1:
+        return lut_matmul(tables, idx, bias, bits=bits)
+    return lut_matmul_batched(tables, idx, bias, bits=bits)

@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Everything here is straight-line jax.numpy with no Pallas, serving as the
+correctness reference (pytest compares kernel outputs against these).
+
+The paper's construction (fixed-point bitplane LUT matmul):
+  - input x in [0,1]^q quantized to n-bit codes;
+  - q split into k chunks of m elements;
+  - per chunk, a table of 2^m rows holding W restricted to the chunk,
+    evaluated at the LSB-plane scale;
+  - per bitplane j, the chunk's plane-j bits form the row index and the
+    row is accumulated scaled by 2^j (a shift in hardware).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize_ref(x, bits: int):
+    """Fixed-point quantizer: codes = floor(x * 2^bits), saturating."""
+    levels = 2**bits
+    codes = jnp.floor(x * levels)
+    return jnp.clip(codes, 0, levels - 1).astype(jnp.int32)
+
+
+def dequantize_ref(codes, bits: int):
+    return codes.astype(jnp.float32) / (2.0**bits)
+
+
+def affine_ref(w, b, x):
+    """Plain affine Wx + b; w: [p, q], x: [..., q]."""
+    return x @ w.T + b
+
+
+def affine_quant_ref(w, b, x, bits: int):
+    """The semantics the LUT implementation must reproduce: affine on the
+    quantized input."""
+    return affine_ref(w, b, dequantize_ref(quantize_ref(x, bits), bits))
+
+
+def build_tables(w, b, m: int):
+    """Build bitplane LUT tables for a [p, q] weight matrix with chunk
+    size m (q % m == 0 for the kernel path).
+
+    Returns (tables [k, 2^m, p] float32, bias [p]) where
+      tables[c, idx, :] = sum_{e: bit_e(idx)=1} w[:, c*m + e]
+    at unit plane scale (caller applies 2^(j-bits)); the bias is added
+    once by the caller.
+    """
+    w = np.asarray(w)
+    p, q = w.shape
+    assert q % m == 0, f"chunk {m} must divide q={q}"
+    k = q // m
+    rows = 1 << m
+    tables = np.zeros((k, rows, p), dtype=np.float32)
+    for c in range(k):
+        for idx in range(rows):
+            for e in range(m):
+                if (idx >> e) & 1:
+                    tables[c, idx] += w[:, c * m + e]
+    return jnp.asarray(tables), jnp.asarray(np.asarray(b, dtype=np.float32))
+
+
+def plane_indices(codes, m: int, bits: int):
+    """Row indices per (plane, chunk): idx[j, c] = Σ_e bit_j(codes[c*m+e]) << e.
+
+    codes: [..., q] int32 -> [..., bits, k] int32. This is pure bit
+    routing — the part the paper's concluding remarks assign to custom
+    wiring; on TPU it is integer shift/and/sum on the VPU.
+    """
+    q = codes.shape[-1]
+    assert q % m == 0
+    k = q // m
+    j = jnp.arange(bits, dtype=jnp.int32).reshape((1,) * (codes.ndim - 1) + (bits, 1))
+    planes = (codes[..., None, :] >> j) & 1  # [..., bits, q]
+    chunked = planes.reshape(planes.shape[:-1] + (k, m))  # [..., bits, k, m]
+    weights = 1 << jnp.arange(m, dtype=jnp.int32)  # [m]
+    return jnp.sum(chunked * weights, axis=-1).astype(jnp.int32)  # [..., bits, k]
+
+
+def lut_matmul_ref(tables, bias, idx, bits: int):
+    """Oracle for the LUT matmul kernel.
+
+    tables: [k, 2^m, p]; idx: [..., bits, k]; returns [..., p] =
+      bias + Σ_j 2^(j-bits) Σ_c tables[c, idx[..., j, c], :]
+    """
+    k = tables.shape[0]
+    gathered = tables[jnp.arange(k), idx]  # [..., bits, k, p]
+    scales = (2.0 ** (jnp.arange(bits) - bits)).astype(jnp.float32)
+    out = jnp.einsum("...jkp,j->...p", gathered, scales)
+    return out + bias
+
+
+def lut_affine_ref(w, b, x, bits: int, m: int):
+    """End-to-end LUT affine: quantize -> indices -> table gathers.
+
+    Must equal affine_quant_ref to float tolerance (the identity the
+    whole paper rests on).
+    """
+    tables, bias = build_tables(w, b, m)
+    codes = quantize_ref(x, bits)
+    idx = plane_indices(codes, m, bits)
+    return lut_matmul_ref(tables, bias, idx, bits)

@@ -1,0 +1,164 @@
+"""Layer-2 JAX models: the paper's three architectures with the
+quantization ops it inserts "before the input to a CNN or dense linear
+layer". Pure-jax pytrees (no flax); the forward functions are what
+aot.py lowers to HLO text for the Rust PJRT runtime, and the LUT-path
+forward calls the Layer-1 Pallas kernel so it lowers into the same HLO.
+
+Weight orientation matches the Rust side: dense kernels are [p, q]
+(output-major), conv filters are [fh, fw, cin, cout] (NHWC).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import lut_matmul as lk
+from .kernels import ref
+
+IMG = 28
+
+
+# --------------------------------------------------------------------- #
+# quantizers (straight-through estimator for QAT)
+# --------------------------------------------------------------------- #
+def fake_quant_fixed(x, bits: int):
+    """Fixed-point fake-quant with straight-through gradients."""
+    levels = 2.0**bits
+    q = jnp.clip(jnp.floor(x * levels), 0, levels - 1) / levels
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def fake_quant_f16(x):
+    """binary16 fake-quant with straight-through gradients."""
+    q = x.astype(jnp.float16).astype(jnp.float32)
+    return x + jax.lax.stop_gradient(q - x)
+
+
+# --------------------------------------------------------------------- #
+# parameter initialisation
+# --------------------------------------------------------------------- #
+def init_linear(key):
+    k1, _ = jax.random.split(key)
+    return {
+        "fc1.w": jax.random.normal(k1, (10, 784)) * (2.0 / 784) ** 0.5,
+        "fc1.b": jnp.zeros((10,)),
+    }
+
+
+def init_mlp(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "fc1.w": jax.random.normal(k1, (1024, 784)) * (2.0 / 784) ** 0.5,
+        "fc1.b": jnp.zeros((1024,)),
+        "fc2.w": jax.random.normal(k2, (512, 1024)) * (2.0 / 1024) ** 0.5,
+        "fc2.b": jnp.zeros((512,)),
+        "fc3.w": jax.random.normal(k3, (10, 512)) * (2.0 / 512) ** 0.5,
+        "fc3.b": jnp.zeros((10,)),
+    }
+
+
+def init_cnn(key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "conv1.f": jax.random.normal(k1, (5, 5, 1, 32)) * (2.0 / 25) ** 0.5,
+        "conv1.b": jnp.zeros((32,)),
+        "conv2.f": jax.random.normal(k2, (5, 5, 32, 64)) * (2.0 / (25 * 32)) ** 0.5,
+        "conv2.b": jnp.zeros((64,)),
+        "fc1.w": jax.random.normal(k3, (1024, 3136)) * (2.0 / 3136) ** 0.5,
+        "fc1.b": jnp.zeros((1024,)),
+        "fc2.w": jax.random.normal(k4, (10, 1024)) * (2.0 / 1024) ** 0.5,
+        "fc2.b": jnp.zeros((10,)),
+    }
+
+
+INITS = {"linear": init_linear, "mlp": init_mlp, "cnn": init_cnn}
+
+
+# --------------------------------------------------------------------- #
+# forward passes
+# --------------------------------------------------------------------- #
+def forward_linear(params, x, *, quant: bool = False, input_bits: int = 8):
+    """x: [b, 784] -> logits [b, 10]."""
+    if quant:
+        x = fake_quant_fixed(x, input_bits)
+    return x @ params["fc1.w"].T + params["fc1.b"]
+
+
+def forward_mlp(params, x, *, quant: bool = False, input_bits: int = 8):
+    if quant:
+        x = fake_quant_fixed(x, input_bits)
+    h = jax.nn.relu(x @ params["fc1.w"].T + params["fc1.b"])
+    if quant:
+        h = fake_quant_f16(h)
+    h = jax.nn.relu(h @ params["fc2.w"].T + params["fc2.b"])
+    if quant:
+        h = fake_quant_f16(h)
+    return h @ params["fc3.w"].T + params["fc3.b"]
+
+
+def _conv_same(x, f, b):
+    # x: [b, h, w, cin]; f: [fh, fw, cin, cout]
+    out = jax.lax.conv_general_dilated(
+        x,
+        f,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward_cnn(params, x, *, quant: bool = False, input_bits: int = 8):
+    """x: [b, 28, 28, 1] (or [b, 784], reshaped) -> logits [b, 10]."""
+    if x.ndim == 2:
+        x = x.reshape(-1, IMG, IMG, 1)
+    if quant:
+        x = fake_quant_fixed(x, input_bits)
+    h = jax.nn.relu(_conv_same(x, params["conv1.f"], params["conv1.b"]))
+    h = _maxpool2(h)
+    if quant:
+        h = fake_quant_f16(h)
+    h = jax.nn.relu(_conv_same(h, params["conv2.f"], params["conv2.b"]))
+    h = _maxpool2(h)
+    if quant:
+        h = fake_quant_f16(h)
+    h = h.reshape(h.shape[0], -1)  # [b, 3136] NHWC flatten (matches Rust)
+    h = jax.nn.relu(h @ params["fc1.w"].T + params["fc1.b"])
+    if quant:
+        h = fake_quant_f16(h)
+    return h @ params["fc2.w"].T + params["fc2.b"]
+
+
+FORWARDS = {"linear": forward_linear, "mlp": forward_mlp, "cnn": forward_cnn}
+
+
+def forward_linear_lut(params, x, *, bits: int = 3, m: int = 4):
+    """The LUT-path linear forward: calls the Layer-1 Pallas kernel, so
+    `jax.jit(...).lower()` of this function contains the kernel in the
+    exported HLO. x: [b, 784] -> [b, 10]."""
+    return lk.lut_affine(params["fc1.w"], params["fc1.b"], x, bits=bits, m=m)
+
+
+# --------------------------------------------------------------------- #
+# loss / metrics
+# --------------------------------------------------------------------- #
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+
+
+def accuracy(forward, params, x, y, **kw):
+    pred = jnp.argmax(forward(params, x, **kw), axis=-1)
+    return jnp.mean((pred == y).astype(jnp.float32))
+
+
+def input_shape(arch: str, batch: int):
+    return (batch, 784) if arch in ("linear", "mlp") else (batch, IMG, IMG, 1)

@@ -1,0 +1,139 @@
+"""Layer-1 correctness: the Pallas LUT kernels against the pure-jnp
+oracle — the CORE correctness signal of the compile path. Hypothesis
+sweeps shapes, bit-widths and chunk sizes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lut_matmul as lk
+from compile.kernels import ref
+
+
+def rand_case(p, q, seed, scale=0.5):
+    rng = np.random.default_rng(seed)
+    w = (rng.normal(size=(p, q)) * scale).astype(np.float32)
+    b = (rng.normal(size=(p,)) * 0.1).astype(np.float32)
+    x = rng.uniform(size=(q,)).astype(np.float32)
+    return w, b, x
+
+
+class TestQuantizeKernel:
+    def test_matches_ref_basic(self):
+        x = np.linspace(0, 1, 97, dtype=np.float32)
+        got = np.asarray(lk.quantize(x, 3))
+        want = np.asarray(ref.quantize_ref(x, 3))
+        np.testing.assert_array_equal(got, want)
+
+    @given(
+        bits=st.integers(1, 8),
+        n=st.integers(1, 64),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref_hypothesis(self, bits, n, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.uniform(-0.2, 1.2, size=(n,)).astype(np.float32)  # incl. out-of-range
+        got = np.asarray(lk.quantize(x, bits))
+        want = np.asarray(ref.quantize_ref(x, bits))
+        np.testing.assert_array_equal(got, want)
+
+    def test_saturates(self):
+        x = np.array([-1.0, 0.0, 0.999, 5.0], dtype=np.float32)
+        got = np.asarray(lk.quantize(x, 4))
+        assert got[0] == 0 and got[-1] == 15
+
+
+class TestLutMatmulKernel:
+    def test_matches_oracle_small(self):
+        w, b, x = rand_case(5, 12, 0)
+        want = np.asarray(ref.affine_quant_ref(w, b, x, 3))
+        got = np.asarray(lk.lut_affine(w, b, x, bits=3, m=4))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    @given(
+        p=st.integers(1, 16),
+        k=st.integers(1, 8),
+        m=st.sampled_from([1, 2, 3, 4]),
+        bits=st.integers(1, 6),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_matches_oracle_hypothesis(self, p, k, m, bits, seed):
+        q = k * m
+        w, b, x = rand_case(p, q, seed)
+        want = np.asarray(ref.affine_quant_ref(w, b, x, bits))
+        got = np.asarray(lk.lut_affine(w, b, x, bits=bits, m=m))
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def test_batched_matches_per_sample(self):
+        w, b, _ = rand_case(6, 8, 3)
+        rng = np.random.default_rng(4)
+        xb = rng.uniform(size=(5, 8)).astype(np.float32)
+        got = np.asarray(lk.lut_affine(w, b, xb, bits=4, m=2))
+        for i in range(5):
+            single = np.asarray(lk.lut_affine(w, b, xb[i], bits=4, m=2))
+            np.testing.assert_allclose(got[i], single, atol=1e-5)
+
+    def test_chunk_size_invariance(self):
+        # the partition must not change the result (paper's linearity)
+        w, b, x = rand_case(4, 12, 7)
+        outs = [
+            np.asarray(lk.lut_affine(w, b, x, bits=3, m=m)) for m in (1, 2, 3, 4, 6)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], atol=1e-4)
+
+    def test_zero_input_gives_bias(self):
+        w, b, _ = rand_case(5, 8, 9)
+        x = np.zeros(8, dtype=np.float32)
+        got = np.asarray(lk.lut_affine(w, b, x, bits=3, m=2))
+        np.testing.assert_allclose(got, b, atol=1e-6)
+
+    def test_monotone_precision_improves_error(self):
+        # higher input precision must not hurt agreement with the
+        # unquantized affine
+        w, b, x = rand_case(8, 16, 11)
+        exact = np.asarray(ref.affine_ref(w, b, x))
+        errs = []
+        for bits in (1, 3, 6):
+            got = np.asarray(lk.lut_affine(w, b, x, bits=bits, m=4))
+            errs.append(np.max(np.abs(got - exact)))
+        assert errs[2] <= errs[1] <= errs[0] + 1e-6, errs
+
+
+class TestReferenceIdentities:
+    """The oracle itself must satisfy the paper's linearity identities."""
+
+    @given(
+        seed=st.integers(0, 2**16),
+        bits=st.integers(1, 8),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_lut_ref_equals_quant_affine(self, seed, bits):
+        w, b, x = rand_case(6, 12, seed)
+        a = np.asarray(ref.lut_affine_ref(w, b, x, bits, 3))
+        c = np.asarray(ref.affine_quant_ref(w, b, x, bits))
+        np.testing.assert_allclose(a, c, atol=1e-4)
+
+    def test_plane_indices_rebuild_codes(self):
+        rng = np.random.default_rng(0)
+        codes = rng.integers(0, 8, size=(12,)).astype(np.int32)
+        idx = np.asarray(ref.plane_indices(codes, 1, 3))  # m=1: idx == bit
+        rebuilt = sum((idx[j] << j) for j in range(3))
+        np.testing.assert_array_equal(rebuilt, codes)
+
+    def test_tables_first_row_zero(self):
+        w = np.ones((3, 4), dtype=np.float32)
+        tables, _ = ref.build_tables(w, np.zeros(3, np.float32), 2)
+        np.testing.assert_array_equal(np.asarray(tables)[:, 0, :], 0.0)
+
+    def test_tables_superposition(self):
+        # row(a|b) = row(a) + row(b) for disjoint bit sets
+        rng = np.random.default_rng(5)
+        w = rng.normal(size=(4, 6)).astype(np.float32)
+        tables, _ = ref.build_tables(w, np.zeros(4, np.float32), 3)
+        t = np.asarray(tables)
+        for c in range(t.shape[0]):
+            np.testing.assert_allclose(t[c, 0b101], t[c, 0b100] + t[c, 0b001], atol=1e-6)
+            np.testing.assert_allclose(t[c, 0b111], t[c, 0b110] + t[c, 0b001], atol=1e-6)

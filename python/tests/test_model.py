@@ -1,0 +1,124 @@
+"""Layer-2 model checks: shapes, quantization insertion, gradient flow,
+and the LUT-path forward agreeing with the quantized reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def keys():
+    return jax.random.split(jax.random.PRNGKey(42), 4)
+
+
+class TestShapes:
+    def test_linear(self, keys):
+        p = M.init_linear(keys[0])
+        x = jnp.zeros((7, 784))
+        assert M.forward_linear(p, x).shape == (7, 10)
+
+    def test_mlp(self, keys):
+        p = M.init_mlp(keys[1])
+        x = jnp.zeros((3, 784))
+        assert M.forward_mlp(p, x, quant=True).shape == (3, 10)
+
+    def test_cnn(self, keys):
+        p = M.init_cnn(keys[2])
+        x = jnp.zeros((2, 28, 28, 1))
+        assert M.forward_cnn(p, x, quant=True).shape == (2, 10)
+
+    def test_cnn_accepts_flat_input(self, keys):
+        p = M.init_cnn(keys[2])
+        x = jnp.zeros((2, 784))
+        assert M.forward_cnn(p, x).shape == (2, 10)
+
+    def test_param_shapes_match_rust_expectations(self, keys):
+        p = M.init_mlp(keys[1])
+        assert p["fc1.w"].shape == (1024, 784)
+        assert p["fc2.w"].shape == (512, 1024)
+        assert p["fc3.w"].shape == (10, 512)
+        c = M.init_cnn(keys[2])
+        assert c["conv1.f"].shape == (5, 5, 1, 32)
+        assert c["conv2.f"].shape == (5, 5, 32, 64)
+        assert c["fc1.w"].shape == (1024, 3136)
+
+
+class TestQuantization:
+    def test_fake_quant_fixed_levels(self):
+        x = jnp.linspace(0, 1, 100)
+        q = M.fake_quant_fixed(x, 3)
+        assert len(np.unique(np.asarray(q).round(6))) <= 8
+
+    def test_fake_quant_fixed_gradient_is_straight_through(self):
+        g = jax.grad(lambda x: jnp.sum(M.fake_quant_fixed(x, 3)))(jnp.ones(5) * 0.4)
+        np.testing.assert_allclose(np.asarray(g), 1.0)
+
+    def test_fake_quant_f16_error_bound(self):
+        x = jnp.asarray(np.random.default_rng(0).uniform(0.1, 8.0, 100).astype(np.float32))
+        q = M.fake_quant_f16(x)
+        rel = np.max(np.abs(np.asarray(q - x)) / np.asarray(x))
+        assert rel <= 2.0**-11
+
+    def test_quant_changes_forward(self, keys):
+        p = M.init_linear(keys[0])
+        x = jnp.asarray(
+            np.random.default_rng(1).uniform(size=(4, 784)).astype(np.float32)
+        )
+        full = M.forward_linear(p, x, quant=False)
+        q3 = M.forward_linear(p, x, quant=True, input_bits=3)
+        d = np.max(np.abs(np.asarray(full - q3)))
+        assert 0 < d < 1.0
+
+
+class TestGradients:
+    def test_mlp_grads_nonzero_everywhere(self, keys):
+        p = M.init_mlp(keys[1])
+        x = jnp.asarray(
+            np.random.default_rng(2).uniform(size=(8, 784)).astype(np.float32)
+        )
+        y = jnp.arange(8) % 10
+
+        def loss(p):
+            return M.cross_entropy(M.forward_mlp(p, x, quant=True), y)
+
+        g = jax.grad(loss)(p)
+        for name, grad in g.items():
+            assert float(jnp.sum(jnp.abs(grad))) > 0, f"dead gradient for {name}"
+
+    def test_cnn_grads_flow_through_quant(self, keys):
+        p = M.init_cnn(keys[2])
+        x = jnp.asarray(
+            np.random.default_rng(3).uniform(size=(2, 28, 28, 1)).astype(np.float32)
+        )
+        y = jnp.array([1, 7])
+
+        def loss(p):
+            return M.cross_entropy(M.forward_cnn(p, x, quant=True), y)
+
+        g = jax.grad(loss)(p)
+        assert float(jnp.sum(jnp.abs(g["conv1.f"]))) > 0
+
+
+class TestLutForward:
+    def test_linear_lut_matches_quant_reference(self, keys):
+        p = M.init_linear(keys[0])
+        x = jnp.asarray(
+            np.random.default_rng(4).uniform(size=(3, 784)).astype(np.float32)
+        )
+        lut = M.forward_linear_lut(p, x, bits=3, m=4)
+        want = M.forward_linear(p, M.fake_quant_fixed(x, 3), quant=False)
+        np.testing.assert_allclose(np.asarray(lut), np.asarray(want), atol=1e-3)
+
+    def test_linear_lut_classifies_like_reference(self, keys):
+        p = M.init_linear(keys[0])
+        x = jnp.asarray(
+            np.random.default_rng(5).uniform(size=(16, 784)).astype(np.float32)
+        )
+        a = np.argmax(np.asarray(M.forward_linear_lut(p, x, bits=3, m=4)), axis=-1)
+        b = np.argmax(
+            np.asarray(M.forward_linear(p, M.fake_quant_fixed(x, 3))), axis=-1
+        )
+        assert (a == b).mean() >= 15 / 16

@@ -1,0 +1,101 @@
+"""Training smoke tests + TBNW export round-trips + AOT lowering."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, export, train
+from compile import model as M
+
+
+def synthetic_blob_dataset(n=400, seed=0):
+    """Tiny linearly-separable-ish 10-class image dataset: one bright
+    blob per class at a class-specific location."""
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0.0, 0.15, size=(n, 28, 28)).astype(np.float32)
+    y = (np.arange(n) % 10).astype(np.int32)
+    for i in range(n):
+        c = y[i]
+        cy, cx = 4 + (c // 5) * 14, 3 + (c % 5) * 5
+        x[i, cy : cy + 5, cx : cx + 4] += 0.8
+    x = np.clip(x, 0, 1)
+    return (x, y)
+
+
+class TestTraining:
+    def test_linear_loss_decreases(self):
+        xy = synthetic_blob_dataset()
+        params, curve = train.sgd_train(
+            "linear", xy, steps=120, batch=50, lr=0.3, log_every=20
+        )
+        assert curve[-1][1] < curve[0][1] * 0.5, curve
+
+    def test_linear_learns_blobs(self):
+        xy = synthetic_blob_dataset(600)
+        params, _ = train.sgd_train(
+            "linear", xy, steps=200, batch=50, lr=0.3, log_every=0
+        )
+        acc = train.evaluate("linear", params, synthetic_blob_dataset(200, seed=1))
+        assert acc > 0.9, f"acc {acc}"
+
+    def test_qat_quant_flag_respected(self):
+        xy = synthetic_blob_dataset(100)
+        p1, _ = train.sgd_train("linear", xy, steps=5, batch=20, lr=0.1,
+                                log_every=0, quant=False, seed=3)
+        p2, _ = train.sgd_train("linear", xy, steps=5, batch=20, lr=0.1,
+                                log_every=0, quant=True, input_bits=2, seed=3)
+        # different quantization must produce different weights
+        d = float(jnp.max(jnp.abs(p1["fc1.w"] - p2["fc1.w"])))
+        assert d > 0
+
+
+class TestExport:
+    def test_tbnw_roundtrip(self, tmp_path):
+        w = {
+            "fc1.w": np.random.default_rng(0).normal(size=(10, 784)).astype(np.float32),
+            "fc1.b": np.zeros(10, np.float32),
+        }
+        path = str(tmp_path / "w.bin")
+        export.write_weights(path, w)
+        back = export.read_weights(path)
+        assert set(back) == set(w)
+        np.testing.assert_array_equal(back["fc1.w"], w["fc1.w"])
+
+    def test_tbnw_multidim(self, tmp_path):
+        w = {"conv1.f": np.arange(5 * 5 * 1 * 32, dtype=np.float32).reshape(5, 5, 1, 32)}
+        path = str(tmp_path / "c.bin")
+        export.write_weights(path, w)
+        back = export.read_weights(path)
+        assert back["conv1.f"].shape == (5, 5, 1, 32)
+        np.testing.assert_array_equal(back["conv1.f"], w["conv1.f"])
+
+    def test_tbnw_header_bytes(self, tmp_path):
+        path = str(tmp_path / "h.bin")
+        export.write_weights(path, {"a": np.zeros(2, np.float32)})
+        blob = open(path, "rb").read()
+        assert blob[:4] == b"TBNW"
+        assert blob[4:8] == (1).to_bytes(4, "little")
+
+
+class TestAot:
+    def test_reference_lowering_produces_hlo_text(self):
+        params = M.init_linear(jax.random.PRNGKey(0))
+        text = aot.lower_reference("linear", params, batch=2)
+        assert "HloModule" in text
+        # weights are baked in: only the image is a parameter
+        assert text.count("parameter(1)") == 0
+
+    def test_lut_lowering_contains_gathers(self):
+        params = M.init_linear(jax.random.PRNGKey(1))
+        text = aot.lower_lut_linear(params, batch=1, bits=3, m=4)
+        assert "HloModule" in text
+        # the kernel's row gathers lower to dynamic-slice/gather ops
+        assert ("dynamic-slice" in text) or ("gather" in text)
+
+    def test_cnn_lowering(self):
+        params = M.init_cnn(jax.random.PRNGKey(2))
+        text = aot.lower_reference("cnn", params, batch=1)
+        assert "convolution" in text

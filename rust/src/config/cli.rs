@@ -1,0 +1,157 @@
+//! Tiny CLI argument parser (the vendored crate set has no clap):
+//! `--flag value`, `--flag=value`, boolean `--flag`, and positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    /// A bare `--flag` consumes the next token as its value unless the
+    /// flag is listed in `switches` (pure booleans) or the next token is
+    /// another flag. Use [`Args::parse`] when no switches are needed.
+    pub fn parse_with_switches<I: IntoIterator<Item = String>>(
+        args: I,
+        switches: &[&str],
+    ) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if switches.contains(&rest) {
+                    out.bools.push(rest.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.bools.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse with no declared boolean switches.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        Args::parse_with_switches(args, &[])
+    }
+
+    /// Boolean switch names used across the `tablenet` CLI.
+    pub const SWITCHES: &'static [&'static str] =
+        &["verbose", "dry-run", "help", "version", "no-ref", "csv", "quiet"];
+
+    /// Parse from the process environment, skipping argv[0].
+    pub fn from_env() -> Args {
+        Args::parse_with_switches(std::env::args().skip(1), Self::SWITCHES)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> u32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
+    }
+
+    /// True boolean switch only (ignores key=value flags).
+    pub fn switch(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse("serve --port 8080 --arch linear data.bin");
+        assert_eq!(a.positional, vec!["serve", "data.bin"]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("arch"), Some("linear"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--bits=3 --m=14");
+        assert_eq!(a.get_u32("bits", 0), 3);
+        assert_eq!(a.get_usize("m", 0), 14);
+    }
+
+    #[test]
+    fn boolean_switches() {
+        let a = Args::parse_with_switches(
+            "--verbose run --dry-run".split_whitespace().map(String::from),
+            &["verbose", "dry-run"],
+        );
+        assert!(a.switch("verbose"));
+        assert!(a.switch("dry-run"));
+        assert!(!a.switch("quiet"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn undeclared_flag_eats_next_token() {
+        let a = parse("--out file.txt");
+        assert_eq!(a.get("out"), Some("file.txt"));
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let a = parse("cmd --flag");
+        assert!(a.switch("flag"));
+    }
+
+    #[test]
+    fn defaults_kick_in() {
+        let a = parse("cmd");
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_or("missing", "x"), "x");
+        assert_eq!(a.get_f64("missing", 0.5), 0.5);
+    }
+
+    #[test]
+    fn flag_value_looks_positional() {
+        // --out file.txt: file.txt is consumed as the value
+        let a = parse("--out file.txt rest");
+        assert_eq!(a.get("out"), Some("file.txt"));
+        assert_eq!(a.positional, vec!["rest"]);
+    }
+}

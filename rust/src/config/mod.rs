@@ -1,0 +1,311 @@
+//! Configuration system: typed configs with JSON file round-trips (via
+//! the in-repo [`json`] codec) and CLI overrides (via [`cli`]).
+
+pub mod cli;
+pub mod json;
+
+use crate::engine::plan::{AffineMode, EnginePlan};
+use crate::nn::Arch;
+use anyhow::{anyhow, bail, Context, Result};
+use json::Json;
+use std::path::{Path, PathBuf};
+
+/// Serving coordinator configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Maximum dynamic batch size.
+    pub max_batch: usize,
+    /// Maximum time a request may wait for batch-mates.
+    pub max_wait_us: u64,
+    /// Worker threads executing batches.
+    pub workers: usize,
+    /// Bounded request queue capacity (backpressure limit).
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 32, max_wait_us: 500, workers: 1, queue_cap: 1024 }
+    }
+}
+
+impl ServeConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("max_wait_us", Json::num(self.max_wait_us as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("queue_cap", Json::num(self.queue_cap as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
+        Ok(ServeConfig {
+            max_batch: get_usize(j, "max_batch", d.max_batch)?,
+            max_wait_us: get_u64(j, "max_wait_us", d.max_wait_us)?,
+            workers: get_usize(j, "workers", d.workers)?,
+            queue_cap: get_usize(j, "queue_cap", d.queue_cap)?,
+        })
+    }
+
+    /// Apply CLI overrides.
+    pub fn override_with(mut self, args: &cli::Args) -> ServeConfig {
+        self.max_batch = args.get_usize("max-batch", self.max_batch);
+        self.max_wait_us = args.get_u64("max-wait-us", self.max_wait_us);
+        self.workers = args.get_usize("workers", self.workers);
+        self.queue_cap = args.get_usize("queue-cap", self.queue_cap);
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.queue_cap < self.max_batch {
+            bail!("queue_cap ({}) < max_batch ({})", self.queue_cap, self.max_batch);
+        }
+        Ok(())
+    }
+}
+
+/// Top-level run configuration (paths + arch + plan).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub arch: Arch,
+    pub weights: PathBuf,
+    pub data_dir: PathBuf,
+    pub plan: EnginePlan,
+    pub serve: ServeConfig,
+}
+
+impl RunConfig {
+    pub fn defaults(arch: Arch, artifacts: &Path, data_dir: &Path) -> RunConfig {
+        RunConfig {
+            arch,
+            weights: artifacts.join(format!("weights_{}.bin", arch.name())),
+            data_dir: data_dir.to_path_buf(),
+            plan: EnginePlan::default_for(arch),
+            serve: ServeConfig::default(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::str(self.arch.name())),
+            ("weights", Json::str(&self.weights.display().to_string())),
+            ("data_dir", Json::str(&self.data_dir.display().to_string())),
+            ("plan", plan_to_json(&self.plan)),
+            ("serve", self.serve.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let arch_s = j
+            .get("arch")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("config missing 'arch'"))?;
+        let arch = Arch::parse(arch_s).ok_or_else(|| anyhow!("unknown arch '{arch_s}'"))?;
+        let plan = match j.get("plan") {
+            Some(p) => plan_from_json(p)?,
+            None => EnginePlan::default_for(arch),
+        };
+        let serve = match j.get("serve") {
+            Some(s) => ServeConfig::from_json(s)?,
+            None => ServeConfig::default(),
+        };
+        Ok(RunConfig {
+            arch,
+            weights: PathBuf::from(
+                j.get("weights").and_then(Json::as_str).unwrap_or("artifacts/weights.bin"),
+            ),
+            data_dir: PathBuf::from(
+                j.get("data_dir").and_then(Json::as_str).unwrap_or("data/synth"),
+            ),
+            plan,
+            serve,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        RunConfig::from_json(&j)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing config {}", path.display()))
+    }
+}
+
+/// Serialize an [`EnginePlan`] to JSON (manual — no serde offline).
+pub fn plan_to_json(p: &EnginePlan) -> Json {
+    Json::obj(vec![
+        (
+            "affine",
+            Json::Arr(p.affine.iter().map(mode_to_json).collect()),
+        ),
+        ("fallback", mode_to_json(&p.fallback)),
+        ("r_o", Json::num(p.r_o as f64)),
+    ])
+}
+
+fn mode_to_json(m: &AffineMode) -> Json {
+    match *m {
+        AffineMode::WholeFixed { bits, m, range_exp } => Json::obj(vec![
+            ("mode", Json::str("whole_fixed")),
+            ("bits", Json::num(bits as f64)),
+            ("m", Json::num(m as f64)),
+            ("range_exp", Json::num(range_exp as f64)),
+        ]),
+        AffineMode::BitplaneFixed { bits, m, range_exp } => Json::obj(vec![
+            ("mode", Json::str("bitplane_fixed")),
+            ("bits", Json::num(bits as f64)),
+            ("m", Json::num(m as f64)),
+            ("range_exp", Json::num(range_exp as f64)),
+        ]),
+        AffineMode::Float { planes, m } => Json::obj(vec![
+            ("mode", Json::str("float")),
+            ("planes", Json::num(planes as f64)),
+            ("m", Json::num(m as f64)),
+        ]),
+    }
+}
+
+fn mode_from_json(j: &Json) -> Result<AffineMode> {
+    let mode = j
+        .get("mode")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("affine mode missing 'mode'"))?;
+    Ok(match mode {
+        "whole_fixed" => AffineMode::WholeFixed {
+            bits: get_u64(j, "bits", 8)? as u32,
+            m: get_usize(j, "m", 1)?,
+            range_exp: get_i64(j, "range_exp", 0)? as i32,
+        },
+        "bitplane_fixed" => AffineMode::BitplaneFixed {
+            bits: get_u64(j, "bits", 8)? as u32,
+            m: get_usize(j, "m", 1)?,
+            range_exp: get_i64(j, "range_exp", 0)? as i32,
+        },
+        "float" => AffineMode::Float {
+            planes: get_u64(j, "planes", 11)? as u32,
+            m: get_usize(j, "m", 1)?,
+        },
+        other => bail!("unknown affine mode '{other}'"),
+    })
+}
+
+pub fn plan_from_json(j: &Json) -> Result<EnginePlan> {
+    let affine = j
+        .get("affine")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("plan missing 'affine' array"))?
+        .iter()
+        .map(mode_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    let fallback = match j.get("fallback") {
+        Some(f) => mode_from_json(f)?,
+        None => AffineMode::Float { planes: 11, m: 1 },
+    };
+    Ok(EnginePlan { affine, fallback, r_o: get_u64(j, "r_o", 16)? as u32 })
+}
+
+fn get_usize(j: &Json, k: &str, d: usize) -> Result<usize> {
+    match j.get(k) {
+        None => Ok(d),
+        Some(v) => v
+            .as_u64()
+            .map(|u| u as usize)
+            .ok_or_else(|| anyhow!("'{k}' must be a non-negative integer")),
+    }
+}
+
+fn get_u64(j: &Json, k: &str, d: u64) -> Result<u64> {
+    match j.get(k) {
+        None => Ok(d),
+        Some(v) => v.as_u64().ok_or_else(|| anyhow!("'{k}' must be a non-negative integer")),
+    }
+}
+
+fn get_i64(j: &Json, k: &str, d: i64) -> Result<i64> {
+    match j.get(k) {
+        None => Ok(d),
+        Some(v) => v.as_i64().ok_or_else(|| anyhow!("'{k}' must be an integer")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_config_roundtrip() {
+        let c = ServeConfig { max_batch: 8, max_wait_us: 100, workers: 2, queue_cap: 64 };
+        let j = c.to_json();
+        assert_eq!(ServeConfig::from_json(&j).unwrap(), c);
+    }
+
+    #[test]
+    fn serve_config_validation() {
+        let mut c = ServeConfig::default();
+        c.validate().unwrap();
+        c.max_batch = 0;
+        assert!(c.validate().is_err());
+        c = ServeConfig { queue_cap: 1, max_batch: 8, ..ServeConfig::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn plan_roundtrip_all_modes() {
+        for plan in [
+            EnginePlan::linear_default(),
+            EnginePlan::mlp_default(),
+            EnginePlan::cnn_default(),
+        ] {
+            let j = plan_to_json(&plan);
+            let text = j.to_string_pretty();
+            let back = plan_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, plan);
+        }
+    }
+
+    #[test]
+    fn run_config_roundtrip() {
+        let rc = RunConfig::defaults(
+            Arch::Mlp,
+            Path::new("artifacts"),
+            Path::new("data/synth"),
+        );
+        let j = rc.to_json();
+        let back = RunConfig::from_json(&j).unwrap();
+        assert_eq!(back.arch, Arch::Mlp);
+        assert_eq!(back.plan, rc.plan);
+        assert_eq!(back.weights, rc.weights);
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let args = cli::Args::parse(
+            ["--max-batch", "4", "--workers", "3"].iter().map(|s| s.to_string()),
+        );
+        let c = ServeConfig::default().override_with(&args);
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.queue_cap, ServeConfig::default().queue_cap);
+    }
+
+    #[test]
+    fn bad_configs_error_cleanly() {
+        assert!(RunConfig::from_json(&Json::parse("{}").unwrap()).is_err());
+        let j = Json::parse(r#"{"arch": "warp"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"arch":"mlp","serve":{"max_batch":-2}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+}

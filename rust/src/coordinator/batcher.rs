@@ -1,0 +1,120 @@
+//! Dynamic batching policy: collect requests until the batch is full or
+//! the oldest request has waited `max_wait` — the standard
+//! latency/throughput knob of serving systems (vLLM-style), applied to
+//! the LUT engine.
+//!
+//! The policy is a pure function over a channel receiver so it can be
+//! tested deterministically without the full coordinator.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batch formation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait_us: u64) -> Self {
+        BatchPolicy { max_batch, max_wait: Duration::from_micros(max_wait_us) }
+    }
+}
+
+/// Collect the next batch from `rx`. Blocks for the first item; then
+/// keeps accepting until `max_batch` items are queued or `max_wait` has
+/// elapsed since the first item arrived. Returns `None` when the channel
+/// is closed and drained.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+
+    #[test]
+    fn fills_to_max_batch_when_queue_is_hot() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = next_batch(&rx, BatchPolicy::new(4, 10_000)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b2 = next_batch(&rx, BatchPolicy::new(4, 10_000)).unwrap();
+        assert_eq!(b2, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_timeout() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let start = Instant::now();
+        let b = next_batch(&rx, BatchPolicy::new(64, 2_000)).unwrap();
+        assert_eq!(b, vec![1, 2]);
+        assert!(start.elapsed() >= Duration::from_micros(1_500));
+    }
+
+    #[test]
+    fn preserves_fifo_order() {
+        let (tx, rx) = mpsc::channel();
+        let producer = thread::spawn(move || {
+            for i in 0..100 {
+                tx.send(i).unwrap();
+            }
+        });
+        let mut seen = Vec::new();
+        while let Some(b) = next_batch(&rx, BatchPolicy::new(7, 500)) {
+            seen.extend(b);
+        }
+        producer.join().unwrap();
+        assert_eq!(seen, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn returns_none_on_closed_empty_channel() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, BatchPolicy::new(4, 100)).is_none());
+    }
+
+    #[test]
+    fn drains_remaining_after_close() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(9).unwrap();
+        drop(tx);
+        let b = next_batch(&rx, BatchPolicy::new(4, 100)).unwrap();
+        assert_eq!(b, vec![9]);
+        assert!(next_batch(&rx, BatchPolicy::new(4, 100)).is_none());
+    }
+
+    #[test]
+    fn batch_never_exceeds_max() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..1000 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        while let Some(b) = next_batch(&rx, BatchPolicy::new(13, 1_000)) {
+            assert!(b.len() <= 13);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Serving metrics: latency percentiles, throughput, queue rejections,
+//! batch-size distribution and aggregate engine op counters (so a serve
+//! run can report "x lookups, y shift-adds, 0 multiplies" end-to-end).
+
+use crate::engine::counters::Counters;
+use crate::util::percentile;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shared metrics sink. Cheap to update from workers; snapshot on demand.
+pub struct Metrics {
+    started: Instant,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    batch_items: AtomicU64,
+    ops: Mutex<Counters>,
+    /// total latency in µs, and per-request samples for percentiles
+    latency_us: Mutex<Vec<f64>>,
+    queue_us: Mutex<Vec<f64>>,
+}
+
+/// A point-in-time summary.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub elapsed_s: f64,
+    pub throughput_rps: f64,
+    pub latency_p50_us: f64,
+    pub latency_p95_us: f64,
+    pub latency_p99_us: f64,
+    pub queue_p95_us: f64,
+    pub ops: Counters,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            started: Instant::now(),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_items: AtomicU64::new(0),
+            ops: Mutex::new(Counters::default()),
+            latency_us: Mutex::new(Vec::new()),
+            queue_us: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl Metrics {
+    const MAX_SAMPLES: usize = 100_000;
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_items.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_request(&self, queue_us: f64, total_us: f64, ops: Counters) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut l = self.latency_us.lock().unwrap();
+            if l.len() < Self::MAX_SAMPLES {
+                l.push(total_us);
+            }
+        }
+        {
+            let mut q = self.queue_us.lock().unwrap();
+            if q.len() < Self::MAX_SAMPLES {
+                q.push(queue_us);
+            }
+        }
+        *self.ops.lock().unwrap() += ops;
+    }
+
+    pub fn record_rejection(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let items = self.batch_items.load(Ordering::Relaxed);
+        let lat = self.latency_us.lock().unwrap().clone();
+        let q = self.queue_us.lock().unwrap().clone();
+        let elapsed = self.started.elapsed().as_secs_f64();
+        Snapshot {
+            completed,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches,
+            mean_batch: if batches > 0 { items as f64 / batches as f64 } else { 0.0 },
+            elapsed_s: elapsed,
+            throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
+            latency_p50_us: percentile(&lat, 50.0),
+            latency_p95_us: percentile(&lat, 95.0),
+            latency_p99_us: percentile(&lat, 99.0),
+            queue_p95_us: percentile(&q, 95.0),
+            ops: *self.ops.lock().unwrap(),
+        }
+    }
+}
+
+impl std::fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "requests: {} ok, {} rejected | batches: {} (mean {:.1})",
+            self.completed, self.rejected, self.batches, self.mean_batch
+        )?;
+        writeln!(
+            f,
+            "latency µs: p50 {:.0}  p95 {:.0}  p99 {:.0} | queue p95 {:.0}",
+            self.latency_p50_us, self.latency_p95_us, self.latency_p99_us, self.queue_p95_us
+        )?;
+        writeln!(f, "throughput: {:.1} req/s", self.throughput_rps)?;
+        write!(f, "engine ops: {}", self.ops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let m = Metrics::default();
+        m.record_batch(4);
+        m.record_batch(2);
+        for i in 0..6 {
+            m.record_request(
+                10.0,
+                100.0 + i as f64,
+                Counters { lut_evals: 5, ..Default::default() },
+            );
+        }
+        m.record_rejection();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 6);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 3.0).abs() < 1e-9);
+        assert_eq!(s.ops.lut_evals, 30);
+        assert!(s.latency_p50_us >= 100.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_sane() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.mean_batch, 0.0);
+        assert_eq!(s.latency_p99_us, 0.0);
+    }
+
+    #[test]
+    fn display_contains_key_fields() {
+        let m = Metrics::default();
+        m.record_request(1.0, 2.0, Counters::default());
+        let text = format!("{}", m.snapshot());
+        assert!(text.contains("mults=0"));
+        assert!(text.contains("throughput"));
+    }
+}

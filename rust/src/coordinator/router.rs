@@ -1,0 +1,193 @@
+//! Multi-model router: serves several named models (e.g. `digits` and
+//! `fashion` linear classifiers, or a linear + MLP pair) behind one
+//! client API, each with its own batching pipeline — the multi-tenant
+//! shape of a production inference router, applied to the LUT engine.
+
+use super::metrics::Snapshot;
+use super::{Backend, Coordinator, Response, SubmitError};
+use crate::config::ServeConfig;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// A set of independently-batched model pipelines behind one handle.
+pub struct Router {
+    pipelines: BTreeMap<String, Coordinator>,
+}
+
+/// Cloneable multi-model client.
+#[derive(Clone)]
+pub struct RouterClient {
+    clients: BTreeMap<String, super::Client>,
+}
+
+/// Routing error.
+#[derive(Debug)]
+pub enum RouteError {
+    UnknownModel(String),
+    Submit(SubmitError),
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            RouteError::Submit(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+impl Router {
+    /// Start one pipeline per named backend. Each model gets the same
+    /// serving config (per-model configs would be a trivial extension).
+    pub fn start(models: Vec<(String, Arc<dyn Backend>)>, cfg: &ServeConfig) -> Router {
+        let pipelines = models
+            .into_iter()
+            .map(|(name, backend)| (name, Coordinator::start(backend, cfg)))
+            .collect();
+        Router { pipelines }
+    }
+
+    pub fn client(&self) -> RouterClient {
+        RouterClient {
+            clients: self
+                .pipelines
+                .iter()
+                .map(|(n, c)| (n.clone(), c.client()))
+                .collect(),
+        }
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.pipelines.keys().map(String::as_str).collect()
+    }
+
+    /// Drain every pipeline; returns per-model snapshots.
+    pub fn shutdown(self) -> BTreeMap<String, Snapshot> {
+        self.pipelines
+            .into_iter()
+            .map(|(n, c)| (n, c.shutdown()))
+            .collect()
+    }
+}
+
+impl RouterClient {
+    /// Route an inference to a named model (blocking).
+    pub fn infer(&self, model: &str, image: Vec<f32>) -> Result<Response, RouteError> {
+        let client = self
+            .clients
+            .get(model)
+            .ok_or_else(|| RouteError::UnknownModel(model.to_string()))?;
+        client.infer_blocking(image).map_err(RouteError::Submit)
+    }
+
+    /// Fail-fast variant (backpressure-aware).
+    pub fn try_infer(&self, model: &str, image: Vec<f32>) -> Result<Response, RouteError> {
+        let client = self
+            .clients
+            .get(model)
+            .ok_or_else(|| RouteError::UnknownModel(model.to_string()))?;
+        client.infer(image).map_err(RouteError::Submit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::counters::Counters;
+
+    /// Backend that answers with a fixed class (model identity probe).
+    struct Fixed(usize);
+
+    impl Backend for Fixed {
+        fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<super::super::InferOutput> {
+            images
+                .iter()
+                .map(|_| super::super::InferOutput {
+                    class: self.0,
+                    logits: vec![self.0 as f32],
+                    counters: Counters { lut_evals: 1, ..Default::default() },
+                })
+                .collect()
+        }
+
+        fn name(&self) -> &'static str {
+            "fixed"
+        }
+    }
+
+    #[test]
+    fn routes_to_the_right_model() {
+        let router = Router::start(
+            vec![
+                ("a".to_string(), Arc::new(Fixed(1)) as Arc<dyn Backend>),
+                ("b".to_string(), Arc::new(Fixed(2)) as Arc<dyn Backend>),
+            ],
+            &ServeConfig::default(),
+        );
+        let client = router.client();
+        for _ in 0..20 {
+            assert_eq!(client.infer("a", vec![0.0]).unwrap().class, 1);
+            assert_eq!(client.infer("b", vec![0.0]).unwrap().class, 2);
+        }
+        let snaps = router.shutdown();
+        assert_eq!(snaps["a"].completed, 20);
+        assert_eq!(snaps["b"].completed, 20);
+    }
+
+    #[test]
+    fn unknown_model_is_a_clean_error() {
+        let router = Router::start(
+            vec![("only".to_string(), Arc::new(Fixed(0)) as Arc<dyn Backend>)],
+            &ServeConfig::default(),
+        );
+        let client = router.client();
+        match client.infer("nope", vec![0.0]) {
+            Err(RouteError::UnknownModel(m)) => assert_eq!(m, "nope"),
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn pipelines_are_isolated() {
+        // saturating model 'slow' must not stall model 'fast'
+        struct Slow;
+        impl Backend for Slow {
+            fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<super::super::InferOutput> {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                Fixed(9).infer_batch(images)
+            }
+            fn name(&self) -> &'static str {
+                "slow"
+            }
+        }
+        let router = Router::start(
+            vec![
+                ("slow".to_string(), Arc::new(Slow) as Arc<dyn Backend>),
+                ("fast".to_string(), Arc::new(Fixed(3)) as Arc<dyn Backend>),
+            ],
+            &ServeConfig { max_batch: 1, max_wait_us: 10, workers: 1, queue_cap: 4 },
+        );
+        let client = router.client();
+        // occupy the slow pipeline
+        let slow_client = client.clone();
+        let h = std::thread::spawn(move || {
+            for _ in 0..5 {
+                let _ = slow_client.infer("slow", vec![0.0]);
+            }
+        });
+        // fast stays fast
+        let t0 = std::time::Instant::now();
+        for _ in 0..10 {
+            assert_eq!(client.infer("fast", vec![0.0]).unwrap().class, 3);
+        }
+        assert!(
+            t0.elapsed() < std::time::Duration::from_millis(50),
+            "fast pipeline was blocked by the slow one"
+        );
+        h.join().unwrap();
+        router.shutdown();
+    }
+}

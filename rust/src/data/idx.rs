@@ -1,0 +1,162 @@
+//! IDX file codec (the MNIST distribution format): magic 0x0803 for
+//! u8 image tensors, 0x0801 for u8 label vectors, big-endian dims.
+//! Real MNIST/Fashion-MNIST files drop in unchanged; the synthetic
+//! corpus is written through the same codec so every consumer exercises
+//! one loader.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// u8 images: [n, rows, cols].
+pub struct IdxImages {
+    pub n: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u8>,
+}
+
+/// u8 labels: [n].
+pub struct IdxLabels {
+    pub n: usize,
+    pub data: Vec<u8>,
+}
+
+fn read_u32_be<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_be_bytes(b))
+}
+
+/// Read an images file (magic 0x00000803).
+pub fn read_images<R: Read>(mut r: R) -> Result<IdxImages> {
+    let magic = read_u32_be(&mut r)?;
+    if magic != 0x0803 {
+        bail!("bad IDX image magic {magic:#010x} (expected 0x00000803)");
+    }
+    let n = read_u32_be(&mut r)? as usize;
+    let rows = read_u32_be(&mut r)? as usize;
+    let cols = read_u32_be(&mut r)? as usize;
+    if n > 1 << 24 || rows > 4096 || cols > 4096 {
+        bail!("IDX dims unreasonable: {n} x {rows} x {cols}");
+    }
+    let mut data = vec![0u8; n * rows * cols];
+    r.read_exact(&mut data).context("IDX image payload truncated")?;
+    Ok(IdxImages { n, rows, cols, data })
+}
+
+/// Read a labels file (magic 0x00000801).
+pub fn read_labels<R: Read>(mut r: R) -> Result<IdxLabels> {
+    let magic = read_u32_be(&mut r)?;
+    if magic != 0x0801 {
+        bail!("bad IDX label magic {magic:#010x} (expected 0x00000801)");
+    }
+    let n = read_u32_be(&mut r)? as usize;
+    if n > 1 << 24 {
+        bail!("IDX label count unreasonable: {n}");
+    }
+    let mut data = vec![0u8; n];
+    r.read_exact(&mut data).context("IDX label payload truncated")?;
+    Ok(IdxLabels { n, data })
+}
+
+/// Write an images file.
+pub fn write_images<W: Write>(mut w: W, img: &IdxImages) -> Result<()> {
+    assert_eq!(img.data.len(), img.n * img.rows * img.cols);
+    w.write_all(&0x0803u32.to_be_bytes())?;
+    w.write_all(&(img.n as u32).to_be_bytes())?;
+    w.write_all(&(img.rows as u32).to_be_bytes())?;
+    w.write_all(&(img.cols as u32).to_be_bytes())?;
+    w.write_all(&img.data)?;
+    Ok(())
+}
+
+/// Write a labels file.
+pub fn write_labels<W: Write>(mut w: W, l: &IdxLabels) -> Result<()> {
+    assert_eq!(l.data.len(), l.n);
+    w.write_all(&0x0801u32.to_be_bytes())?;
+    w.write_all(&(l.n as u32).to_be_bytes())?;
+    w.write_all(&l.data)?;
+    Ok(())
+}
+
+pub fn load_images(path: &Path) -> Result<IdxImages> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    read_images(std::io::BufReader::new(f))
+}
+
+pub fn load_labels(path: &Path) -> Result<IdxLabels> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    read_labels(std::io::BufReader::new(f))
+}
+
+pub fn save_images(path: &Path, img: &IdxImages) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    write_images(std::io::BufWriter::new(f), img)
+}
+
+pub fn save_labels(path: &Path, l: &IdxLabels) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    write_labels(std::io::BufWriter::new(f), l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_roundtrip() {
+        let img = IdxImages {
+            n: 2,
+            rows: 3,
+            cols: 4,
+            data: (0u8..24).collect(),
+        };
+        let mut buf = Vec::new();
+        write_images(&mut buf, &img).unwrap();
+        let back = read_images(&buf[..]).unwrap();
+        assert_eq!(back.n, 2);
+        assert_eq!(back.rows, 3);
+        assert_eq!(back.cols, 4);
+        assert_eq!(back.data, img.data);
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        let l = IdxLabels { n: 5, data: vec![0, 1, 2, 9, 4] };
+        let mut buf = Vec::new();
+        write_labels(&mut buf, &l).unwrap();
+        let back = read_labels(&buf[..]).unwrap();
+        assert_eq!(back.data, l.data);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let l = IdxLabels { n: 1, data: vec![7] };
+        let mut buf = Vec::new();
+        write_labels(&mut buf, &l).unwrap();
+        assert!(read_images(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let img = IdxImages { n: 1, rows: 28, cols: 28, data: vec![0; 784] };
+        let mut buf = Vec::new();
+        write_images(&mut buf, &img).unwrap();
+        buf.truncate(buf.len() - 100);
+        assert!(read_images(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn big_endian_header() {
+        let img = IdxImages { n: 1, rows: 2, cols: 2, data: vec![0; 4] };
+        let mut buf = Vec::new();
+        write_images(&mut buf, &img).unwrap();
+        assert_eq!(&buf[0..4], &[0, 0, 8, 3]);
+        assert_eq!(&buf[4..8], &[0, 0, 0, 1]);
+    }
+}

@@ -1,0 +1,230 @@
+//! Dataset substrate: loads real MNIST-format IDX files when present,
+//! otherwise generates + caches the deterministic synthetic corpus (see
+//! [`synth`] and DESIGN.md §Substitutions). All consumers — the Rust
+//! trainer, the engine harness and the JAX training path — read the same
+//! IDX files, so the corpora are identical across languages.
+
+pub mod idx;
+pub mod synth;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use synth::{Kind, IMG};
+
+/// An in-memory split: f32 pixels in [0,1], row-major [n, 784].
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub images: Vec<f32>,
+    pub labels: Vec<usize>,
+}
+
+impl Split {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * IMG * IMG..(i + 1) * IMG * IMG]
+    }
+
+    /// First `n` samples as a sub-split (cheap eval subsets).
+    pub fn head(&self, n: usize) -> Split {
+        let n = n.min(self.len());
+        Split {
+            images: self.images[..n * IMG * IMG].to_vec(),
+            labels: self.labels[..n].to_vec(),
+        }
+    }
+
+    fn from_u8(pixels: &[u8], labels: &[u8]) -> Split {
+        Split {
+            images: pixels.iter().map(|&v| v as f32 / 255.0).collect(),
+            labels: labels.iter().map(|&l| l as usize).collect(),
+        }
+    }
+}
+
+/// Train + test splits.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub kind: Kind,
+    pub train: Split,
+    pub test: Split,
+}
+
+/// File names used under the data dir (MNIST's own naming, so real
+/// MNIST files can be dropped in directly).
+fn file_names(kind: Kind) -> [String; 4] {
+    let prefix = match kind {
+        Kind::Digits => "",
+        Kind::Fashion => "fashion-",
+    };
+    [
+        format!("{prefix}train-images-idx3-ubyte"),
+        format!("{prefix}train-labels-idx1-ubyte"),
+        format!("{prefix}t10k-images-idx3-ubyte"),
+        format!("{prefix}t10k-labels-idx1-ubyte"),
+    ]
+}
+
+/// Load a dataset from IDX files under `dir`, generating + caching the
+/// synthetic corpus if any file is missing.
+pub fn load_or_generate(
+    dir: &Path,
+    kind: Kind,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> Result<Dataset> {
+    let names = file_names(kind);
+    let paths: Vec<_> = names.iter().map(|n| dir.join(n)).collect();
+    if paths.iter().all(|p| p.exists()) {
+        let tr_img = idx::load_images(&paths[0])?;
+        let tr_lbl = idx::load_labels(&paths[1])?;
+        let te_img = idx::load_images(&paths[2])?;
+        let te_lbl = idx::load_labels(&paths[3])?;
+        anyhow::ensure!(tr_img.n == tr_lbl.n, "train images/labels count mismatch");
+        anyhow::ensure!(te_img.n == te_lbl.n, "test images/labels count mismatch");
+        anyhow::ensure!(
+            tr_img.rows == IMG && tr_img.cols == IMG,
+            "expected 28x28 images"
+        );
+        let mut ds = Dataset {
+            kind,
+            train: Split::from_u8(&tr_img.data, &tr_lbl.data),
+            test: Split::from_u8(&te_img.data, &te_lbl.data),
+        };
+        if n_train > 0 {
+            ds.train = ds.train.head(n_train);
+        }
+        if n_test > 0 {
+            ds.test = ds.test.head(n_test);
+        }
+        return Ok(ds);
+    }
+    // generate + cache
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating data dir {}", dir.display()))?;
+    let (tr_px, tr_lb) = synth::generate(kind, n_train, seed);
+    let (te_px, te_lb) = synth::generate(kind, n_test, seed ^ 0xDEAD_BEEF);
+    idx::save_images(
+        &paths[0],
+        &idx::IdxImages { n: n_train, rows: IMG, cols: IMG, data: tr_px.clone() },
+    )?;
+    idx::save_labels(&paths[1], &idx::IdxLabels { n: n_train, data: tr_lb.clone() })?;
+    idx::save_images(
+        &paths[2],
+        &idx::IdxImages { n: n_test, rows: IMG, cols: IMG, data: te_px.clone() },
+    )?;
+    idx::save_labels(&paths[3], &idx::IdxLabels { n: n_test, data: te_lb.clone() })?;
+    Ok(Dataset {
+        kind,
+        train: Split::from_u8(&tr_px, &tr_lb),
+        test: Split::from_u8(&te_px, &te_lb),
+    })
+}
+
+/// Minibatch iterator over a split (deterministic order per epoch seed).
+pub struct Batches<'a> {
+    split: &'a Split,
+    order: Vec<usize>,
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> Batches<'a> {
+    pub fn new(split: &'a Split, batch: usize, epoch_seed: u64) -> Batches<'a> {
+        let mut rng = crate::util::Rng::new(epoch_seed);
+        Batches { split, order: rng.permutation(split.len()), batch, pos: 0 }
+    }
+}
+
+impl<'a> Iterator for Batches<'a> {
+    /// (images flat [b, 784], labels [b])
+    type Item = (Vec<f32>, Vec<usize>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let end = (self.pos + self.batch).min(self.order.len());
+        let idxs = &self.order[self.pos..end];
+        self.pos = end;
+        let mut images = Vec::with_capacity(idxs.len() * IMG * IMG);
+        let mut labels = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            images.extend_from_slice(self.split.image(i));
+            labels.push(self.split.labels[i]);
+        }
+        Some((images, labels))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("tablenet_data_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn generate_and_reload_identical() {
+        let dir = tmp_dir("reload");
+        let a = load_or_generate(&dir, Kind::Digits, 50, 20, 1).unwrap();
+        let b = load_or_generate(&dir, Kind::Digits, 50, 20, 999).unwrap();
+        // second call loads from cache: seed must not matter
+        assert_eq!(a.train.images, b.train.images);
+        assert_eq!(a.test.labels, b.test.labels);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pixels_normalized() {
+        let dir = tmp_dir("norm");
+        let ds = load_or_generate(&dir, Kind::Fashion, 20, 10, 2).unwrap();
+        assert!(ds.train.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batches_cover_everything_once() {
+        let dir = tmp_dir("batch");
+        let ds = load_or_generate(&dir, Kind::Digits, 37, 5, 3).unwrap();
+        let mut seen = vec![0usize; 10];
+        let mut total = 0;
+        for (imgs, lbls) in Batches::new(&ds.train, 8, 42) {
+            assert_eq!(imgs.len(), lbls.len() * 784);
+            assert!(lbls.len() <= 8);
+            for &l in &lbls {
+                seen[l] += 1;
+            }
+            total += lbls.len();
+        }
+        assert_eq!(total, 37);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn head_truncates() {
+        let dir = tmp_dir("head");
+        let ds = load_or_generate(&dir, Kind::Digits, 30, 10, 4).unwrap();
+        let h = ds.train.head(7);
+        assert_eq!(h.len(), 7);
+        assert_eq!(h.image(3), ds.train.image(3));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(Kind::parse("MNIST"), Some(Kind::Digits));
+        assert_eq!(Kind::parse("fashion"), Some(Kind::Fashion));
+        assert_eq!(Kind::parse("imagenet"), None);
+    }
+}

@@ -1,0 +1,84 @@
+//! Operation accounting for the multiplier-less engine.
+//!
+//! Every data-path primitive the engine executes increments one of these
+//! counters; `mults` exists precisely so tests can assert it stays at
+//! zero end-to-end — the engine does not merely *claim* to be
+//! multiplier-less, it proves it per inference.
+
+
+use std::ops::AddAssign;
+
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct Counters {
+    /// Table reads (the paper's "LUT evaluations").
+    pub lut_evals: u64,
+    /// Scalar shift-and-add operations (bitplane/spatial shifts).
+    pub shift_adds: u64,
+    /// Plain scalar adds (bias folds, chunk accumulation).
+    pub adds: u64,
+    /// Scalar multiplies — MUST remain 0 on every LUT data path.
+    pub mults: u64,
+    /// Compare/branch ops (ReLU, max-pool, argmax — free of multiplies,
+    /// and excluded from the paper's comparisons; tracked for
+    /// completeness).
+    pub compares: u64,
+}
+
+impl Counters {
+    pub fn total_arith(&self) -> u64 {
+        self.shift_adds + self.adds
+    }
+
+    /// Panic if any multiply was recorded (used by debug assertions in
+    /// the engine and by tests).
+    pub fn assert_multiplier_less(&self) {
+        assert_eq!(self.mults, 0, "multiplier-less invariant violated");
+    }
+}
+
+impl AddAssign for Counters {
+    fn add_assign(&mut self, o: Counters) {
+        self.lut_evals += o.lut_evals;
+        self.shift_adds += o.shift_adds;
+        self.adds += o.adds;
+        self.mults += o.mults;
+        self.compares += o.compares;
+    }
+}
+
+impl std::fmt::Display for Counters {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "lut_evals={} shift_adds={} adds={} mults={} compares={}",
+            self.lut_evals, self.shift_adds, self.adds, self.mults, self.compares
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_assign_accumulates() {
+        let mut a = Counters { lut_evals: 1, shift_adds: 2, adds: 3, mults: 0, compares: 4 };
+        let b = Counters { lut_evals: 10, shift_adds: 20, adds: 30, mults: 0, compares: 40 };
+        a += b;
+        assert_eq!(a.lut_evals, 11);
+        assert_eq!(a.total_arith(), 55);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiplier-less")]
+    fn assert_catches_multiplies() {
+        let c = Counters { mults: 1, ..Default::default() };
+        c.assert_multiplier_less();
+    }
+
+    #[test]
+    fn display_is_stable() {
+        let c = Counters::default();
+        assert!(format!("{c}").contains("mults=0"));
+    }
+}

@@ -1,0 +1,197 @@
+//! Integer-domain binary16 encoder: converts a fixed-point accumulator
+//! (value = acc · 2^-frac_scale) to an [`F16`] using only shifts,
+//! compares and adds — no multiplies, no float arithmetic.
+//!
+//! This is the layer-boundary operation of the engine's float pipeline:
+//! the paper stores full-precision results in the tables and quantizes
+//! layer *inputs*; in hardware this encode is a priority encoder plus a
+//! barrel shifter, which is exactly the bit-rerouting circuitry the
+//! paper's concluding remarks describe.
+
+use crate::engine::counters::Counters;
+use crate::quant::f16::F16;
+
+/// Encode a nonnegative accumulator to binary16 with round-to-nearest-
+/// even. `frac_scale` is the accumulator's fractional bit count.
+pub fn acc_to_f16(acc: i64, frac_scale: u32, ctr: &mut Counters) -> F16 {
+    ctr.compares += 1;
+    if acc <= 0 {
+        return F16(0); // ReLU already clamped; encode exact zero
+    }
+    let acc = acc as u64;
+    // position of the leading 1 (priority encoder)
+    let msb = 63 - acc.leading_zeros(); // value exponent = msb - frac_scale
+    let e2 = msb as i32 - frac_scale as i32;
+    ctr.compares += 1;
+    if e2 >= 16 {
+        // overflow -> f16 max (saturating, like the engine's tables)
+        return F16(0x7BFF);
+    }
+    ctr.compares += 1;
+    if e2 >= -14 {
+        // normal: take 10 fraction bits below the msb, RNE
+        let (mut frac, round) = shift_frac(acc, msb, 10);
+        let mut exp = (e2 + 15) as u32;
+        if round {
+            frac += 1;
+            if frac == 0x400 {
+                frac = 0;
+                exp += 1;
+                if exp >= 0x1F {
+                    return F16(0x7BFF);
+                }
+            }
+        }
+        F16(((exp as u16) << 10) | frac as u16)
+    } else {
+        // subnormal: value = f * 2^(-24); f = acc >> (frac_scale - 24)
+        let shift = frac_scale as i32 - 24;
+        let f = if shift >= 0 {
+            let s = shift as u32;
+            if s >= 64 {
+                0
+            } else {
+                let base = acc >> s;
+                let round_bit = if s == 0 {
+                    false
+                } else {
+                    rne_round_bit(acc, s)
+                };
+                base + round_bit as u64
+            }
+        } else {
+            acc << (-shift) as u32
+        };
+        if f >= 0x400 {
+            // rounded up into the normal range
+            F16(1 << 10)
+        } else {
+            F16(f as u16)
+        }
+    }
+}
+
+/// Extract `bits` fraction bits below position `msb` (exclusive) from
+/// `acc`, returning (fraction, round_up) under round-to-nearest-even.
+fn shift_frac(acc: u64, msb: u32, bits: u32) -> (u64, bool) {
+    if msb >= bits {
+        let s = msb - bits;
+        let frac = (acc >> s) & ((1 << bits) - 1);
+        let round = if s == 0 { false } else { rne_round_bit(acc, s) };
+        (frac, round)
+    } else {
+        ((acc << (bits - msb)) & ((1 << bits) - 1), false)
+    }
+}
+
+/// RNE decision for dropping the low `s` bits of `acc`.
+fn rne_round_bit(acc: u64, s: u32) -> bool {
+    let dropped = acc & ((1u64 << s) - 1);
+    let half = 1u64 << (s - 1);
+    dropped > half || (dropped == half && ((acc >> s) & 1) == 1)
+}
+
+/// Encode a whole accumulator vector (ReLU applied: negatives -> 0).
+pub fn acc_vec_to_f16(acc: &[i64], frac_scale: u32, ctr: &mut Counters) -> Vec<F16> {
+    acc.iter().map(|&a| acc_to_f16(a, frac_scale, ctr)).collect()
+}
+
+/// Signed encode: magnitude through [`acc_to_f16`], sign bit restored.
+/// Used where the consumer handles signs (e.g. the sigmoid scalar LUT,
+/// which is indexed by the full 16-bit pattern).
+pub fn acc_to_f16_signed(acc: i64, frac_scale: u32, ctr: &mut Counters) -> F16 {
+    if acc >= 0 {
+        acc_to_f16(acc, frac_scale, ctr)
+    } else {
+        let mag = acc_to_f16(-acc, frac_scale, ctr);
+        F16(mag.0 | 0x8000)
+    }
+}
+
+/// Signed vector encode.
+pub fn acc_vec_to_f16_signed(acc: &[i64], frac_scale: u32, ctr: &mut Counters) -> Vec<F16> {
+    acc.iter().map(|&a| acc_to_f16_signed(a, frac_scale, ctr)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Oracle: go through f64 and the float-domain encoder.
+    fn oracle(acc: i64, frac_scale: u32) -> F16 {
+        if acc <= 0 {
+            return F16(0);
+        }
+        let v = acc as f64 * (-(frac_scale as f64)).exp2();
+        let f = F16::from_f32(v as f32);
+        if f.0 == 0x7C00 {
+            F16(0x7BFF)
+        } else {
+            f
+        }
+    }
+
+    #[test]
+    fn matches_oracle_exhaustively_small() {
+        let mut ctr = Counters::default();
+        for frac in [8u32, 16, 24, 32, 44] {
+            for acc in 0..=4096i64 {
+                let got = acc_to_f16(acc, frac, &mut ctr);
+                let want = oracle(acc, frac);
+                assert_eq!(got.0, want.0, "acc={acc} frac={frac}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_oracle_random_large() {
+        let mut rng = crate::util::Rng::new(99);
+        let mut ctr = Counters::default();
+        for _ in 0..20_000 {
+            let acc = (rng.next_u64() >> (rng.below(40) as u32 + 2)) as i64;
+            for frac in [16u32, 32, 44] {
+                let got = acc_to_f16(acc, frac, &mut ctr);
+                let want = oracle(acc, frac);
+                assert_eq!(got.0, want.0, "acc={acc} frac={frac}");
+            }
+        }
+    }
+
+    #[test]
+    fn negative_clamps_to_zero() {
+        let mut ctr = Counters::default();
+        assert_eq!(acc_to_f16(-1234, 16, &mut ctr).0, 0);
+    }
+
+    #[test]
+    fn saturates_instead_of_inf() {
+        let mut ctr = Counters::default();
+        let huge = i64::MAX / 2;
+        assert_eq!(acc_to_f16(huge, 8, &mut ctr).0, 0x7BFF);
+    }
+
+    #[test]
+    fn exact_powers_of_two() {
+        let mut ctr = Counters::default();
+        // acc = 2^20 at frac 16 -> value 16.0 -> f16 0x4C00
+        assert_eq!(acc_to_f16(1 << 20, 16, &mut ctr).to_f32(), 16.0);
+        assert_eq!(acc_to_f16(1 << 16, 16, &mut ctr).to_f32(), 1.0);
+    }
+
+    #[test]
+    fn subnormal_range() {
+        let mut ctr = Counters::default();
+        // value 2^-24 (smallest f16 subnormal) at frac 32: acc = 2^8
+        let f = acc_to_f16(1 << 8, 32, &mut ctr);
+        assert_eq!(f.0, 0x0001);
+    }
+
+    #[test]
+    fn vector_encode_applies_relu() {
+        let mut ctr = Counters::default();
+        let v = acc_vec_to_f16(&[-5, 0, 1 << 16], 16, &mut ctr);
+        assert_eq!(v[0].0, 0);
+        assert_eq!(v[1].0, 0);
+        assert_eq!(v[2].to_f32(), 1.0);
+    }
+}

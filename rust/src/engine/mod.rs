@@ -1,0 +1,625 @@
+//! The multiplier-less inference engine: compiles a reference
+//! [`Model`](crate::nn::Model) plus an [`EnginePlan`] into a pipeline of
+//! LUT banks and integer stages, then executes inferences using only
+//! table reads, shifts, adds and compares. [`counters::Counters::mults`]
+//! stays zero across every stage — asserted in debug builds and by the
+//! test suite.
+
+pub mod counters;
+pub mod f16enc;
+pub mod plan;
+
+use crate::lut::bitplane::DenseBitplaneLut;
+use crate::lut::conv::ConvLut;
+use crate::lut::convfloat::ConvFloatLut;
+use crate::lut::dense::DenseWholeLut;
+use crate::lut::floatplane::{DenseFloatLut, FloatLutConfig, FACC};
+use crate::lut::{LutError, Partition, ACC_FRAC};
+use crate::nn::{Layer, Model};
+use crate::quant::f16::F16;
+use crate::quant::FixedFormat;
+use counters::Counters;
+use plan::{AffineMode, EnginePlan};
+
+/// One executable stage of the compiled pipeline.
+enum Stage {
+    DenseWhole(DenseWholeLut),
+    DenseBitplane(DenseBitplaneLut),
+    DenseFloat(DenseFloatLut),
+    ConvFixed(ConvLut),
+    ConvFloat(ConvFloatLut),
+    /// ReLU on integer accumulators (compare + select).
+    ReluInt,
+    /// Sigmoid via the paper's 128 KiB f16->f16 scalar LUT (one memory
+    /// read per element, zero arithmetic).
+    SigmoidLut(crate::lut::scalar::ScalarLut),
+    /// 2x2 max pool on an integer accumulator image.
+    MaxPool2Int { h: usize, w: usize, c: usize },
+    /// Convert accumulators to binary16 codes (priority-encode + shift).
+    ToHalf,
+    /// Convert accumulators to fixed codes via right-shift + clamp.
+    ToFixed { bits: u32, range_exp: i32 },
+}
+
+/// Runtime activation value.
+enum Act {
+    F32(Vec<f32>),
+    Acc { v: Vec<i64>, frac: u32 },
+    Half(Vec<F16>),
+    Codes { v: Vec<u32>, bits: u32 },
+}
+
+/// A compiled multiplier-less model.
+pub struct LutModel {
+    stages: Vec<Stage>,
+    plan: EnginePlan,
+    /// Total LUT bits at the plan's accounting width r_o.
+    size_bits: u64,
+}
+
+/// Result of one inference.
+#[derive(Debug, Clone)]
+pub struct Inference {
+    /// Logits decoded to f32 (display/serving only — argmax happens on
+    /// the integer accumulators).
+    pub logits: Vec<f32>,
+    /// Predicted class.
+    pub class: usize,
+    /// Op mix for this inference.
+    pub counters: Counters,
+}
+
+impl LutModel {
+    /// Compile `model` under `plan`. Fails if a requested table exceeds
+    /// the materialisation cap (those configs are planner-only).
+    pub fn compile(model: &Model, plan: &EnginePlan) -> Result<LutModel, LutError> {
+        let mut stages = Vec::new();
+        let mut size_bits = 0u64;
+        let mut affine_idx = 0usize;
+        // spatial dims tracked through conv stages
+        let mut dims: Option<(usize, usize, usize)> = match model.input_shape.as_slice() {
+            [h, w, c] => Some((*h, *w, *c)),
+            _ => None,
+        };
+        // scale of values flowing *into* the next affine stage relative
+        // to the raw f32 model (used for fixed inner layers)
+        let mut pending_fixed: Option<(u32, i32)> = None;
+
+        for layer in &model.layers {
+            match layer {
+                Layer::QuantFixed { .. } | Layer::QuantF16 => {
+                    // the engine performs its own quantization at stage
+                    // boundaries; fake-quant markers are training-time
+                }
+                Layer::Relu => stages.push(Stage::ReluInt),
+                Layer::Sigmoid => {
+                    // one table read per element; the stage performs its
+                    // own SIGNED acc->f16 encode (pre-activations can be
+                    // negative; sigmoid output is nonneg, so downstream
+                    // float banks keep their sign-free assumption)
+                    let lut = crate::lut::scalar::ScalarLut::sigmoid();
+                    size_bits += lut.size_bits();
+                    stages.push(Stage::SigmoidLut(lut));
+                }
+                Layer::MaxPool2 => {
+                    let (h, w, c) = dims.expect("maxpool needs spatial dims");
+                    stages.push(Stage::MaxPool2Int { h, w, c });
+                    dims = Some((h / 2, w / 2, c));
+                }
+                Layer::Flatten => {
+                    dims = None; // flat from here on
+                }
+                Layer::Dense { w, b } => {
+                    let mode = plan.affine.get(affine_idx).unwrap_or(&plan.fallback);
+                    affine_idx += 1;
+                    let p = w.shape()[0];
+                    let q = w.shape()[1];
+                    // weight scaling for fixed inner layers
+                    let (wdata, conv_needed): (Vec<f32>, Option<Stage>) = match mode {
+                        AffineMode::WholeFixed { bits, m: _, range_exp }
+                        | AffineMode::BitplaneFixed { bits, m: _, range_exp } => {
+                            if affine_idx == 1 {
+                                (w.data().to_vec(), None)
+                            } else {
+                                let s = (*range_exp as f32).exp2();
+                                (
+                                    w.data().iter().map(|&x| x * s).collect(),
+                                    Some(Stage::ToFixed { bits: *bits, range_exp: *range_exp }),
+                                )
+                            }
+                        }
+                        AffineMode::Float { .. } => {
+                            if affine_idx == 1 {
+                                (w.data().to_vec(), None)
+                            } else {
+                                (w.data().to_vec(), Some(Stage::ToHalf))
+                            }
+                        }
+                    };
+                    if let Some(cstage) = conv_needed {
+                        stages.push(cstage);
+                    }
+                    let bank = match mode {
+                        AffineMode::WholeFixed { bits, m, .. } => {
+                            let lut = DenseWholeLut::build(
+                                &wdata,
+                                b.data(),
+                                p,
+                                q,
+                                Partition::contiguous(q, *m),
+                                FixedFormat::new(*bits),
+                            )?;
+                            size_bits += lut.size_bits(plan.r_o);
+                            Stage::DenseWhole(lut)
+                        }
+                        AffineMode::BitplaneFixed { bits, m, .. } => {
+                            let lut = DenseBitplaneLut::build(
+                                &wdata,
+                                b.data(),
+                                p,
+                                q,
+                                Partition::contiguous(q, *m),
+                                FixedFormat::new(*bits),
+                            )?;
+                            size_bits += lut.size_bits(plan.r_o);
+                            Stage::DenseBitplane(lut)
+                        }
+                        AffineMode::Float { planes, m } => {
+                            let lut = DenseFloatLut::build(
+                                &wdata,
+                                b.data(),
+                                p,
+                                q,
+                                Partition::contiguous(q, *m),
+                                FloatLutConfig { planes: *planes },
+                            )?;
+                            size_bits += lut.size_bits(plan.r_o);
+                            Stage::DenseFloat(lut)
+                        }
+                    };
+                    let _ = pending_fixed.take();
+                    stages.push(bank);
+                }
+                Layer::Conv2d { filter, b } => {
+                    let mode = plan.affine.get(affine_idx).unwrap_or(&plan.fallback);
+                    affine_idx += 1;
+                    let (h, w2, cin) = dims.expect("conv needs spatial dims");
+                    let fs = filter.shape()[0];
+                    let r = fs / 2;
+                    let cout = filter.shape()[3];
+                    match mode {
+                        AffineMode::BitplaneFixed { bits, m, range_exp }
+                        | AffineMode::WholeFixed { bits, m, range_exp } => {
+                            let fdata: Vec<f32> = if affine_idx == 1 {
+                                filter.data().to_vec()
+                            } else {
+                                stages.push(Stage::ToFixed {
+                                    bits: *bits,
+                                    range_exp: *range_exp,
+                                });
+                                let s = (*range_exp as f32).exp2();
+                                filter.data().iter().map(|&x| x * s).collect()
+                            };
+                            let lut = ConvLut::build(
+                                &fdata,
+                                b.data(),
+                                h,
+                                w2,
+                                cin,
+                                cout,
+                                r,
+                                *m,
+                                FixedFormat::new(*bits),
+                            )?;
+                            size_bits += lut.size_bits(plan.r_o);
+                            stages.push(Stage::ConvFixed(lut));
+                        }
+                        AffineMode::Float { planes, .. } => {
+                            if affine_idx > 1 {
+                                stages.push(Stage::ToHalf);
+                            }
+                            let lut = ConvFloatLut::build(
+                                filter.data(),
+                                b.data(),
+                                h,
+                                w2,
+                                cin,
+                                cout,
+                                r,
+                                *planes,
+                            )?;
+                            size_bits += lut.size_bits(plan.r_o);
+                            stages.push(Stage::ConvFloat(lut));
+                        }
+                    }
+                    dims = Some((h, w2, cout));
+                }
+            }
+        }
+        Ok(LutModel { stages, plan: plan.clone(), size_bits })
+    }
+
+    /// Total LUT storage in bits at the plan's accounting width.
+    pub fn size_bits(&self) -> u64 {
+        self.size_bits
+    }
+
+    /// The plan this model was compiled from.
+    pub fn plan(&self) -> &EnginePlan {
+        &self.plan
+    }
+
+    /// Run one inference on a raw f32 input (flattened, values in [0,1]).
+    pub fn infer(&self, input: &[f32]) -> Inference {
+        let mut ctr = Counters::default();
+        let mut act = Act::F32(input.to_vec());
+        for stage in &self.stages {
+            act = self.run_stage(stage, act, &mut ctr);
+        }
+        debug_assert_eq!(ctr.mults, 0);
+        let (logits, class) = match act {
+            Act::Acc { v, frac } => {
+                // argmax over integers; decode for display
+                let mut best = 0usize;
+                for i in 1..v.len() {
+                    ctr.compares += 1;
+                    if v[i] > v[best] {
+                        best = i;
+                    }
+                }
+                let scale = (-(frac as f64)).exp2();
+                (v.iter().map(|&a| (a as f64 * scale) as f32).collect(), best)
+            }
+            _ => panic!("model must end with an affine stage"),
+        };
+        Inference { logits, class, counters: ctr }
+    }
+
+    fn run_stage(&self, stage: &Stage, act: Act, ctr: &mut Counters) -> Act {
+        match stage {
+            Stage::DenseWhole(lut) => {
+                let v = match act {
+                    Act::F32(x) => lut.eval_f32(&x, ctr),
+                    Act::Codes { v, bits } => {
+                        debug_assert_eq!(bits, lut.fmt.bits);
+                        lut.eval_codes(&v, ctr)
+                    }
+                    _ => panic!("whole-fixed dense expects f32 or codes"),
+                };
+                Act::Acc { v, frac: ACC_FRAC }
+            }
+            Stage::DenseBitplane(lut) => {
+                let v = match act {
+                    Act::F32(x) => lut.eval_f32(&x, ctr),
+                    Act::Codes { v, bits } => {
+                        debug_assert_eq!(bits, lut.fmt.bits);
+                        lut.eval_codes(&v, ctr)
+                    }
+                    _ => panic!("bitplane dense expects f32 or codes"),
+                };
+                Act::Acc { v, frac: ACC_FRAC }
+            }
+            Stage::DenseFloat(lut) => {
+                let v = match act {
+                    Act::F32(x) => lut.eval_f32(&x, ctr),
+                    Act::Half(h) => lut.eval_f16(&h, ctr),
+                    _ => panic!("float dense expects f32 or half"),
+                };
+                Act::Acc { v, frac: FACC as u32 }
+            }
+            Stage::ConvFixed(lut) => {
+                let v = match act {
+                    Act::F32(x) => lut.eval_f32(&x, ctr),
+                    Act::Codes { v, bits } => {
+                        debug_assert_eq!(bits, lut.fmt.bits);
+                        lut.eval_codes(&v, ctr)
+                    }
+                    _ => panic!("fixed conv expects f32 or codes"),
+                };
+                Act::Acc { v, frac: ACC_FRAC }
+            }
+            Stage::ConvFloat(lut) => {
+                let v = match act {
+                    Act::F32(x) => {
+                        let h: Vec<F16> =
+                            x.iter().map(|&v| F16::from_f32(v.max(0.0))).collect();
+                        lut.eval_f16(&h, ctr)
+                    }
+                    Act::Half(h) => lut.eval_f16(&h, ctr),
+                    _ => panic!("float conv expects f32 or half"),
+                };
+                Act::Acc { v, frac: FACC as u32 }
+            }
+            Stage::SigmoidLut(lut) => {
+                let mut h = match act {
+                    Act::Half(h) => h,
+                    Act::Acc { v, frac } => {
+                        f16enc::acc_vec_to_f16_signed(&v, frac, ctr)
+                    }
+                    Act::F32(x) => x.iter().map(|&v| F16::from_f32(v)).collect(),
+                    _ => panic!("sigmoid LUT expects accumulators or binary16"),
+                };
+                lut.eval_vec(&mut h, ctr);
+                Act::Half(h)
+            }
+            Stage::ReluInt => match act {
+                Act::Acc { mut v, frac } => {
+                    for a in &mut v {
+                        ctr.compares += 1;
+                        if *a < 0 {
+                            *a = 0;
+                        }
+                    }
+                    Act::Acc { v, frac }
+                }
+                other => other, // ReLU on codes/half handled at encode
+            },
+            Stage::MaxPool2Int { h, w, c } => match act {
+                Act::Acc { v, frac } => {
+                    let (oh, ow) = (h / 2, w / 2);
+                    let mut out = vec![i64::MIN; oh * ow * c];
+                    for y in 0..*h {
+                        for x in 0..*w {
+                            for ci in 0..*c {
+                                let val = v[(y * w + x) * c + ci];
+                                let o = &mut out[((y / 2) * ow + x / 2) * c + ci];
+                                ctr.compares += 1;
+                                if val > *o {
+                                    *o = val;
+                                }
+                            }
+                        }
+                    }
+                    Act::Acc { v: out, frac }
+                }
+                _ => panic!("maxpool expects accumulators"),
+            },
+            Stage::ToHalf => match act {
+                Act::Acc { v, frac } => {
+                    Act::Half(f16enc::acc_vec_to_f16(&v, frac, ctr))
+                }
+                Act::F32(x) => Act::Half(
+                    x.iter().map(|&v| F16::from_f32(v.max(0.0))).collect(),
+                ),
+                other => other,
+            },
+            Stage::ToFixed { bits, range_exp } => match act {
+                Act::Acc { v, frac } => {
+                    // code = clamp(acc >> (frac - bits + range_exp));
+                    // value represented = code * 2^(range_exp - bits)
+                    let shift = frac as i32 - *bits as i32 + range_exp;
+                    let maxc = (1u32 << bits) - 1;
+                    let codes = v
+                        .iter()
+                        .map(|&a| {
+                            ctr.compares += 2;
+                            if a <= 0 {
+                                return 0;
+                            }
+                            let c = if shift >= 0 {
+                                (a >> shift as u32) as u64
+                            } else {
+                                (a as u64) << (-shift) as u32
+                            };
+                            (c as u32).min(maxc)
+                        })
+                        .collect();
+                    Act::Codes { v: codes, bits: *bits }
+                }
+                _ => panic!("tofixed expects accumulators"),
+            },
+        }
+    }
+
+    /// Accuracy over a flat dataset (`images` row-major, one row per
+    /// sample). Also returns the op counters of the *first* inference
+    /// (they are identical per sample for a fixed plan/architecture,
+    /// modulo zero-row skips).
+    pub fn accuracy(&self, images: &[f32], row: usize, labels: &[usize]) -> (f64, Counters) {
+        assert_eq!(images.len(), row * labels.len());
+        let mut correct = 0usize;
+        let mut first = Counters::default();
+        for (i, &label) in labels.iter().enumerate() {
+            let inf = self.infer(&images[i * row..(i + 1) * row]);
+            if i == 0 {
+                first = inf.counters;
+            }
+            if inf.class == label {
+                correct += 1;
+            }
+        }
+        (correct as f64 / labels.len() as f64, first)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Model;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn linear_model(seed: u64) -> Model {
+        let mut rng = Rng::new(seed);
+        Model::linear(
+            Tensor::randn(&[10, 784], 0.05, &mut rng),
+            Tensor::randn(&[10], 0.02, &mut rng),
+        )
+    }
+
+    fn mlp_model(seed: u64) -> Model {
+        let mut rng = Rng::new(seed);
+        Model::mlp(vec![
+            (Tensor::randn(&[32, 784], 0.05, &mut rng), Tensor::zeros(&[32])),
+            (Tensor::randn(&[16, 32], 0.2, &mut rng), Tensor::zeros(&[16])),
+            (Tensor::randn(&[10, 16], 0.3, &mut rng), Tensor::zeros(&[10])),
+        ])
+    }
+
+    #[test]
+    fn linear_lut_agrees_with_reference() {
+        let model = linear_model(5);
+        let plan = EnginePlan::linear_default();
+        let lut = LutModel::compile(&model, &plan).unwrap();
+        let mut rng = Rng::new(6);
+        let mut agree = 0;
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..784).map(|_| rng.f32()).collect();
+            // reference on quantized input
+            let fmt = FixedFormat::new(3);
+            let xq: Vec<f32> = x.iter().map(|&v| fmt.fake_quant(v)).collect();
+            let ref_out = model.forward(&Tensor::new(&[1, 784], xq));
+            let inf = lut.infer(&x);
+            inf.counters.assert_multiplier_less();
+            if ref_out.argmax_rows()[0] == inf.class {
+                agree += 1;
+            }
+        }
+        assert!(agree >= 19, "LUT and reference disagree too often: {agree}/20");
+    }
+
+    #[test]
+    fn linear_logits_close_to_reference() {
+        let model = linear_model(7);
+        let plan = EnginePlan::linear_default();
+        let lut = LutModel::compile(&model, &plan).unwrap();
+        let mut rng = Rng::new(8);
+        let x: Vec<f32> = (0..784).map(|_| rng.f32()).collect();
+        let fmt = FixedFormat::new(3);
+        let xq: Vec<f32> = x.iter().map(|&v| fmt.fake_quant(v)).collect();
+        let ref_out = model.forward(&Tensor::new(&[1, 784], xq));
+        let inf = lut.infer(&x);
+        for (g, e) in inf.logits.iter().zip(ref_out.data()) {
+            assert!((g - e).abs() < 1e-3, "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn engine_size_matches_cost_model() {
+        let model = linear_model(9);
+        let plan = EnginePlan::linear_default(); // bitplane, 3 bits, m=14
+        let lut = LutModel::compile(&model, &plan).unwrap();
+        let c = crate::lut::cost::dense_cost(
+            784,
+            10,
+            14,
+            crate::lut::cost::IndexMode::BitplaneFixed { r_i: 3 },
+            16,
+        );
+        assert_eq!(lut.size_bits(), c.size_bits);
+    }
+
+    #[test]
+    fn counters_zero_mults_all_archs_small() {
+        let model = mlp_model(10);
+        let plan = EnginePlan {
+            affine: vec![
+                AffineMode::WholeFixed { bits: 8, m: 1, range_exp: 0 },
+                AffineMode::Float { planes: 11, m: 1 },
+                AffineMode::Float { planes: 11, m: 1 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        let lut = LutModel::compile(&model, &plan).unwrap();
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> = (0..784).map(|_| rng.f32()).collect();
+        let inf = lut.infer(&x);
+        inf.counters.assert_multiplier_less();
+        assert!(inf.counters.lut_evals > 0);
+    }
+
+    #[test]
+    fn mlp_float_pipeline_tracks_reference() {
+        let model = mlp_model(12);
+        let plan = EnginePlan {
+            affine: vec![
+                AffineMode::WholeFixed { bits: 8, m: 1, range_exp: 0 },
+                AffineMode::Float { planes: 11, m: 1 },
+                AffineMode::Float { planes: 11, m: 1 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        let lut = LutModel::compile(&model, &plan).unwrap();
+        let mut rng = Rng::new(13);
+        let mut agree = 0;
+        for _ in 0..10 {
+            let x: Vec<f32> = (0..784).map(|_| rng.f32()).collect();
+            let ref_out = model
+                .with_quantization(8, true, 8)
+                .forward(&Tensor::new(&[1, 784], x.clone()));
+            let inf = lut.infer(&x);
+            if ref_out.argmax_rows()[0] == inf.class {
+                agree += 1;
+            }
+        }
+        assert!(agree >= 9, "MLP pipeline diverges: {agree}/10");
+    }
+
+    #[test]
+    fn sigmoid_pipeline_tracks_reference() {
+        // MLP with sigmoid activations: engine path = float banks + the
+        // paper's 128 KiB scalar LUT; must match the float reference
+        let mut rng = Rng::new(77);
+        let model = Model {
+            arch: crate::nn::Arch::Mlp,
+            layers: vec![
+                crate::nn::Layer::Dense {
+                    w: Tensor::randn(&[24, 784], 0.05, &mut rng),
+                    b: Tensor::zeros(&[24]),
+                },
+                crate::nn::Layer::Sigmoid,
+                crate::nn::Layer::Dense {
+                    w: Tensor::randn(&[10, 24], 0.3, &mut rng),
+                    b: Tensor::zeros(&[10]),
+                },
+            ],
+            input_shape: vec![784],
+        };
+        let plan = EnginePlan {
+            affine: vec![
+                AffineMode::Float { planes: 11, m: 1 },
+                AffineMode::Float { planes: 11, m: 1 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        let lut = LutModel::compile(&model, &plan).unwrap();
+        // size includes the 128 KiB scalar table
+        assert!(lut.size_bits() >= (1 << 16) * 16);
+        let mut agree = 0;
+        for s in 0..10 {
+            let mut r2 = Rng::new(100 + s);
+            let x: Vec<f32> = (0..784).map(|_| r2.f32()).collect();
+            let inf = lut.infer(&x);
+            inf.counters.assert_multiplier_less();
+            let ref_out = model.forward(&Tensor::new(&[1, 784], x));
+            if ref_out.argmax_rows()[0] == inf.class {
+                agree += 1;
+            }
+        }
+        assert!(agree >= 9, "sigmoid pipeline diverged: {agree}/10");
+    }
+
+    #[test]
+    fn fixed_inner_pipeline_runs() {
+        // ablation path: fixed-point inner layers with power-of-2 range
+        let model = mlp_model(14);
+        let plan = EnginePlan {
+            affine: vec![
+                AffineMode::WholeFixed { bits: 8, m: 1, range_exp: 0 },
+                AffineMode::BitplaneFixed { bits: 8, m: 4, range_exp: 3 },
+                AffineMode::BitplaneFixed { bits: 8, m: 4, range_exp: 3 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        let lut = LutModel::compile(&model, &plan).unwrap();
+        let mut rng = Rng::new(15);
+        let x: Vec<f32> = (0..784).map(|_| rng.f32()).collect();
+        let inf = lut.infer(&x);
+        inf.counters.assert_multiplier_less();
+        assert_eq!(inf.logits.len(), 10);
+    }
+}

@@ -1,0 +1,177 @@
+//! Engine plans: which LUT construction each affine layer uses. The
+//! planner (`crate::planner`) sweeps these; the engine compiles them.
+
+
+
+/// LUT construction for one affine (dense or conv) layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AffineMode {
+    /// Whole-code fixed-point indexing: chunk of `m` elements at `bits`
+    /// bits each indexes a `2^(m·bits)`-row table.
+    WholeFixed {
+        bits: u32,
+        m: usize,
+        /// Power-of-two input range exponent for *inner* layers: input
+        /// values are assumed in [0, 2^range_exp); the dequant scale is
+        /// baked into the next table at build time (build-time multiply,
+        /// zero data-path multiplies).
+        range_exp: i32,
+    },
+    /// Bitplane fixed-point indexing: one table of `2^m` rows reused
+    /// across all `bits` planes (for conv layers, `m` is the spatial
+    /// block edge and the chunk is the m×m block).
+    BitplaneFixed { bits: u32, m: usize, range_exp: i32 },
+    /// Binary16 mantissa-plane + full-exponent indexing (`planes` ≤ 11;
+    /// `m` elements per chunk, conv uses m = 1).
+    Float { planes: u32, m: usize },
+}
+
+impl AffineMode {
+    /// The cost-model index mode for this affine mode.
+    pub fn index_mode(&self) -> crate::lut::cost::IndexMode {
+        use crate::lut::cost::IndexMode;
+        match *self {
+            AffineMode::WholeFixed { bits, .. } => IndexMode::WholeFixed { r_i: bits },
+            AffineMode::BitplaneFixed { bits, .. } => {
+                IndexMode::BitplaneFixed { r_i: bits }
+            }
+            AffineMode::Float { planes, .. } => {
+                IndexMode::FloatPlanes { planes, exp_bits: 5 }
+            }
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        match *self {
+            AffineMode::WholeFixed { m, .. }
+            | AffineMode::BitplaneFixed { m, .. }
+            | AffineMode::Float { m, .. } => m,
+        }
+    }
+}
+
+/// A full engine plan: one mode per affine layer, in model order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnginePlan {
+    pub affine: Vec<AffineMode>,
+    /// Used if the model has more affine layers than `affine` entries.
+    pub fallback: AffineMode,
+    /// Accounting width of table entries in bits (the paper uses 16-bit
+    /// half-precision outputs).
+    pub r_o: u32,
+}
+
+impl EnginePlan {
+    /// Paper's headline linear config: 3-bit input, bitplane chunks of
+    /// 14 pixels — "56 LUTs with a total combined size of 17.5 MiB".
+    pub fn linear_default() -> EnginePlan {
+        EnginePlan {
+            affine: vec![AffineMode::BitplaneFixed { bits: 3, m: 14, range_exp: 0 }],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        }
+    }
+
+    /// Paper's linear memory-parity config: "784 LUTs totaling about
+    /// 30.6 KiB ... the same memory footprint as the reference model".
+    pub fn linear_parity() -> EnginePlan {
+        EnginePlan {
+            affine: vec![AffineMode::BitplaneFixed { bits: 3, m: 1, range_exp: 0 }],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        }
+    }
+
+    /// Paper's MLP bitplaned config ("2320 LUTs with a combined size of
+    /// 162.6 MiB and 14652918 shift-and-add operations"): all three
+    /// layers use binary16 mantissa-plane + exponent indexing with
+    /// single-element chunks. (The 162.6 MiB and 14.65 M numbers only
+    /// reproduce with the *first* layer float-indexed as well; the
+    /// engine encodes the [0,1] image through binary16 exactly.)
+    pub fn mlp_default() -> EnginePlan {
+        EnginePlan {
+            affine: vec![
+                AffineMode::Float { planes: 11, m: 1 },
+                AffineMode::Float { planes: 11, m: 1 },
+                AffineMode::Float { planes: 11, m: 1 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        }
+    }
+
+    /// MLP variant with the paper's "8-bit fixed point format to encode
+    /// the input image pixels for the first dense layer" (ablation).
+    pub fn mlp_fixed_input() -> EnginePlan {
+        EnginePlan {
+            affine: vec![
+                AffineMode::WholeFixed { bits: 8, m: 1, range_exp: 0 },
+                AffineMode::Float { planes: 11, m: 1 },
+                AffineMode::Float { planes: 11, m: 1 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        }
+    }
+
+    /// Paper's CNN config: 8-bit fixed input conv (2×2 spatial blocks),
+    /// binary16 single-element partitions for layers 2-4 ("the total
+    /// LUT size is 400 MiB").
+    pub fn cnn_default() -> EnginePlan {
+        EnginePlan {
+            affine: vec![
+                AffineMode::BitplaneFixed { bits: 8, m: 2, range_exp: 0 },
+                AffineMode::Float { planes: 11, m: 1 },
+                AffineMode::Float { planes: 11, m: 1 },
+                AffineMode::Float { planes: 11, m: 1 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        }
+    }
+
+    /// Default plan for an architecture by name.
+    pub fn default_for(arch: crate::nn::Arch) -> EnginePlan {
+        match arch {
+            crate::nn::Arch::Linear => EnginePlan::linear_default(),
+            crate::nn::Arch::Mlp => EnginePlan::mlp_default(),
+            crate::nn::Arch::Cnn => EnginePlan::cnn_default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plans_have_right_layer_counts() {
+        assert_eq!(EnginePlan::linear_default().affine.len(), 1);
+        assert_eq!(EnginePlan::mlp_default().affine.len(), 3);
+        assert_eq!(EnginePlan::cnn_default().affine.len(), 4);
+    }
+
+    #[test]
+    fn index_mode_mapping() {
+        use crate::lut::cost::IndexMode;
+        let a = AffineMode::BitplaneFixed { bits: 3, m: 14, range_exp: 0 };
+        assert_eq!(a.index_mode(), IndexMode::BitplaneFixed { r_i: 3 });
+        let f = AffineMode::Float { planes: 11, m: 1 };
+        assert_eq!(
+            f.index_mode(),
+            IndexMode::FloatPlanes { planes: 11, exp_bits: 5 }
+        );
+    }
+
+    #[test]
+    fn plans_serialize() {
+        // JSON round-trip via the in-repo codec
+        let p = EnginePlan::cnn_default();
+        let j = crate::config::plan_to_json(&p);
+        let back = crate::config::plan_from_json(
+            &crate::config::json::Json::parse(&j.to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(p, back);
+    }
+}

@@ -1,0 +1,178 @@
+//! Micro-benchmark harness (the vendored crate set has no criterion):
+//! warmup + timed iterations, outlier-robust statistics, and a stable
+//! one-line report format shared by every `benches/*.rs` binary.
+
+use crate::util::{mean, percentile, stddev};
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_ns > 0.0 {
+            1e9 / self.mean_ns
+        } else {
+            0.0
+        }
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12} {:>12} {:>12} {:>10.1}/s  (n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            self.per_sec(),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Benchmark runner: adaptive iteration count targeting `budget_ms` of
+/// total measurement time (min 5 iters), with 10% warmup.
+pub struct Bench {
+    pub budget_ms: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // honour an env knob so `make bench-quick` can shrink budgets
+        let budget_ms = std::env::var("TABLENET_BENCH_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1500);
+        Bench { budget_ms, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(budget_ms: u64) -> Bench {
+        Bench { budget_ms, results: Vec::new() }
+    }
+
+    /// Time `f`, which must consume-and-return a black-box value so the
+    /// optimiser cannot elide it.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // one probe iteration to scale the loop
+        let probe = Instant::now();
+        let v = f();
+        std::hint::black_box(v);
+        let probe_ns = probe.elapsed().as_nanos().max(1) as f64;
+        let budget_ns = (self.budget_ms as f64) * 1e6;
+        let iters = ((budget_ns / probe_ns) as usize).clamp(5, 100_000);
+        let warmup = (iters / 10).max(1);
+        for _ in 0..warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean(&samples),
+            p50_ns: percentile(&samples, 50.0),
+            p95_ns: percentile(&samples, 95.0),
+            std_ns: stddev(&samples),
+        };
+        println!("{res}");
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn header(title: &str) {
+        println!("\n### {title}");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12}",
+            "case", "mean", "p50", "p95", "rate"
+        );
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Ratio mean(a)/mean(b) for two recorded results by name.
+    pub fn ratio(&self, a: &str, b: &str) -> Option<f64> {
+        let fa = self.results.iter().find(|r| r.name == a)?.mean_ns;
+        let fb = self.results.iter().find(|r| r.name == b)?.mean_ns;
+        Some(fa / fb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::new(20);
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn ratio_of_known_workloads() {
+        let mut b = Bench::new(30);
+        b.run("short", || {
+            let mut s = 0u64;
+            for i in 0..500u64 {
+                s = s.wrapping_add(std::hint::black_box(i));
+            }
+            s
+        });
+        b.run("long", || {
+            let mut s = 0u64;
+            for i in 0..50_000u64 {
+                s = s.wrapping_add(std::hint::black_box(i));
+            }
+            s
+        });
+        let ratio = b.ratio("long", "short").unwrap();
+        assert!(ratio > 5.0, "long/short ratio {ratio}");
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.1e9), "3.10 s");
+    }
+}

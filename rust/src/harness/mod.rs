@@ -1,0 +1,334 @@
+//! Experiment harness: regenerates every figure/table of the paper as
+//! printable rows + CSV files. Each paper artifact has one entry point;
+//! the `benches/` binaries and the `tablenet` CLI both call in here.
+
+pub mod bench;
+
+use crate::data::Split;
+use crate::engine::plan::{AffineMode, EnginePlan};
+use crate::engine::LutModel;
+use crate::nn::Model;
+use crate::planner::{evaluate_plan, arch_geometry, PlanPoint};
+use crate::quant::FixedFormat;
+use crate::tensor::Tensor;
+use crate::util::{fmt_bits, fmt_ops};
+use anyhow::Result;
+use std::path::Path;
+
+/// One row of the Fig. 4 / Fig. 6 accuracy-vs-bits sweep.
+#[derive(Debug, Clone)]
+pub struct BitsRow {
+    pub bits: u32,
+    /// LUT engine accuracy at this input precision.
+    pub lut_acc: f64,
+    /// Reference model on identically quantized inputs (sanity track).
+    pub ref_quant_acc: f64,
+    /// Full-precision reference accuracy (the orange line in Figs 4/6).
+    pub ref_acc: f64,
+}
+
+/// Figs. 4 & 6: accuracy vs input bits for the linear classifier.
+/// Quantization is applied at eval time (the paper's plateau at ~3 bits
+/// comes from input information content; see EXPERIMENTS.md).
+pub fn bits_sweep(model: &Model, test: &Split, bits_range: &[u32]) -> Vec<BitsRow> {
+    let x_full = Tensor::new(&[test.len(), 784], test.images.clone());
+    let ref_acc = model.accuracy(&x_full, &test.labels);
+    let mut rows = Vec::new();
+    for &bits in bits_range {
+        let fmt = FixedFormat::new(bits);
+        // reference on quantized input
+        let xq: Vec<f32> = test.images.iter().map(|&v| fmt.fake_quant(v)).collect();
+        let ref_quant_acc =
+            model.accuracy(&Tensor::new(&[test.len(), 784], xq), &test.labels);
+        // LUT engine at matching precision (bitplane m=14 default shape)
+        let plan = EnginePlan {
+            affine: vec![AffineMode::BitplaneFixed { bits, m: 14, range_exp: 0 }],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        let lut = LutModel::compile(model, &plan).expect("linear LUT compiles");
+        let (lut_acc, ctr) = lut.accuracy(&test.images, 784, &test.labels);
+        ctr.assert_multiplier_less();
+        rows.push(BitsRow { bits, lut_acc, ref_quant_acc, ref_acc });
+    }
+    rows
+}
+
+/// Measured point for a tradeoff figure: planner costs + engine-measured
+/// accuracy and op counters (when materialisable).
+#[derive(Debug, Clone)]
+pub struct TradeoffRow {
+    pub point: PlanPoint,
+    pub measured_acc: Option<f64>,
+    pub measured_evals: Option<u64>,
+    pub measured_ops: Option<u64>,
+}
+
+/// Evaluate a sweep of plan points against a model + test split,
+/// executing the materialisable ones on the engine.
+pub fn tradeoff_rows(
+    model: &Model,
+    test: &Split,
+    points: Vec<PlanPoint>,
+    max_measured: usize,
+) -> Vec<TradeoffRow> {
+    let mut rows = Vec::new();
+    let mut measured = 0usize;
+    for point in points {
+        let mut row = TradeoffRow {
+            point,
+            measured_acc: None,
+            measured_evals: None,
+            measured_ops: None,
+        };
+        // engine tables are i64 in this software simulation (4x the
+        // r_o=16 accounting width), so cap measured configs well below
+        // the host's memory: <= 512 MiB accounting ≈ 2 GiB resident
+        let measurable = row.point.materialisable && row.point.size_bits < 1u64 << 32;
+        if measurable && measured < max_measured {
+            if let Ok(lut) = LutModel::compile(model, &row.point.plan) {
+                let (acc, ctr) = lut.accuracy(&test.images, 784, &test.labels);
+                ctr.assert_multiplier_less();
+                row.measured_acc = Some(acc);
+                row.measured_evals = Some(ctr.lut_evals);
+                row.measured_ops = Some(ctr.shift_adds + ctr.adds);
+                measured += 1;
+            }
+        }
+        rows.push(row);
+    }
+    rows
+}
+
+/// Print a tradeoff table the way the paper's figures report it
+/// (sorted by total LUT size).
+pub fn print_tradeoff(title: &str, rows: &mut Vec<TradeoffRow>) {
+    rows.sort_by_key(|r| r.point.size_bits);
+    println!("\n== {title} ==");
+    println!(
+        "{:<28} {:>8} {:>12} {:>12} {:>12} {:>10} {:>10}",
+        "config", "#LUTs", "size", "adds(paper)", "ref MACs", "meas.acc", "meas.ops"
+    );
+    for r in rows.iter() {
+        println!(
+            "{:<28} {:>8} {:>12} {:>12} {:>12} {:>10} {:>10}",
+            r.point.label,
+            r.point.num_luts,
+            fmt_bits(r.point.size_bits),
+            fmt_ops(r.point.ops),
+            fmt_ops(r.point.ref_macs),
+            r.measured_acc
+                .map(|a| format!("{:.1}%", a * 100.0))
+                .unwrap_or_else(|| "-".into()),
+            r.measured_ops.map(fmt_ops).unwrap_or_else(|| "-".into()),
+        );
+    }
+}
+
+/// Print a bits sweep (Figs 4/6 shape).
+pub fn print_bits_sweep(title: &str, rows: &[BitsRow]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:>5} {:>10} {:>14} {:>12}",
+        "bits", "LUT acc", "ref(quant)", "ref(full)"
+    );
+    for r in rows {
+        println!(
+            "{:>5} {:>9.1}% {:>13.1}% {:>11.1}%",
+            r.bits,
+            r.lut_acc * 100.0,
+            r.ref_quant_acc * 100.0,
+            r.ref_acc * 100.0
+        );
+    }
+}
+
+/// Dump tradeoff rows to CSV.
+pub fn tradeoff_csv(rows: &[TradeoffRow]) -> String {
+    let mut s = String::from(
+        "config,num_luts,size_bits,lut_evals,adds_paper,adds_exclusive,adds_inclusive,ref_macs,measured_acc,measured_ops\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{}\n",
+            r.point.label.replace(',', ";"),
+            r.point.num_luts,
+            r.point.size_bits,
+            r.point.lut_evals,
+            r.point.ops,
+            r.point.ops_exclusive,
+            r.point.ops_inclusive,
+            r.point.ref_macs,
+            r.measured_acc.map(|a| format!("{a:.4}")).unwrap_or_default(),
+            r.measured_ops.map(|o| o.to_string()).unwrap_or_default(),
+        ));
+    }
+    s
+}
+
+/// Dump bits-sweep rows to CSV.
+pub fn bits_csv(rows: &[BitsRow]) -> String {
+    let mut s = String::from("bits,lut_acc,ref_quant_acc,ref_acc\n");
+    for r in rows {
+        s.push_str(&format!(
+            "{},{:.4},{:.4},{:.4}\n",
+            r.bits, r.lut_acc, r.ref_quant_acc, r.ref_acc
+        ));
+    }
+    s
+}
+
+/// Write a CSV next to the repo's results dir.
+pub fn write_csv(dir: &Path, name: &str, contents: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(name), contents)?;
+    Ok(())
+}
+
+/// In-text configuration check (TXT-LIN / TXT-MLP / TXT-CNN rows of
+/// DESIGN.md): paper-claimed vs computed values.
+pub fn intext_report() -> Vec<(String, String, String)> {
+    use crate::nn::Arch;
+    let mut out = Vec::new();
+    let lin = arch_geometry(Arch::Linear);
+    let p56 = evaluate_plan(&lin, &EnginePlan::linear_default());
+    out.push((
+        "linear 56 LUTs size".into(),
+        "17.5 MiB".into(),
+        fmt_bits(p56.size_bits),
+    ));
+    out.push(("linear 56 LUTs evals".into(), "168".into(), p56.lut_evals.to_string()));
+    out.push((
+        "linear 56 LUTs shift-adds".into(),
+        "1650".into(),
+        p56.ops_exclusive.to_string(),
+    ));
+    let p784 = evaluate_plan(&lin, &EnginePlan::linear_parity());
+    out.push((
+        "linear 784 LUTs size".into(),
+        "30.6 KiB".into(),
+        fmt_bits(p784.size_bits),
+    ));
+    out.push((
+        "linear 784 LUTs ops".into(),
+        "23520".into(),
+        p784.ops_inclusive.to_string(),
+    ));
+    let mlp = arch_geometry(Arch::Mlp);
+    let pm = evaluate_plan(&mlp, &EnginePlan::mlp_default());
+    out.push(("MLP LUT count".into(), "2320".into(), pm.num_luts.to_string()));
+    out.push((
+        "MLP bitplaned size".into(),
+        "162.6 MiB".into(),
+        fmt_bits(pm.size_bits),
+    ));
+    out.push((
+        "MLP bitplaned shift-adds".into(),
+        "14652918".into(),
+        pm.ops.to_string(),
+    ));
+    out.push((
+        "MLP reference MACs".into(),
+        "1332224".into(),
+        pm.ref_macs.to_string(),
+    ));
+    let cnn = arch_geometry(Arch::Cnn);
+    let pc = evaluate_plan(&cnn, &EnginePlan::cnn_default());
+    out.push((
+        "CNN default size".into(),
+        "~400 MiB".into(),
+        fmt_bits(pc.size_bits),
+    ));
+    out.push((
+        "CNN reference MACs".into(),
+        "12.9M (paper)".into(),
+        fmt_ops(pc.ref_macs),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Kind;
+    use crate::data::Dataset;
+    use crate::train::{train_dense, TrainConfig};
+
+    fn quick_dataset() -> Dataset {
+        let (tr_px, tr_lb) = crate::data::synth::generate(Kind::Digits, 400, 5);
+        let (te_px, te_lb) = crate::data::synth::generate(Kind::Digits, 150, 6);
+        Dataset {
+            kind: Kind::Digits,
+            train: Split {
+                images: tr_px.iter().map(|&v| v as f32 / 255.0).collect(),
+                labels: tr_lb.iter().map(|&v| v as usize).collect(),
+            },
+            test: Split {
+                images: te_px.iter().map(|&v| v as f32 / 255.0).collect(),
+                labels: te_lb.iter().map(|&v| v as usize).collect(),
+            },
+        }
+    }
+
+    #[test]
+    fn bits_sweep_shows_plateau() {
+        let ds = quick_dataset();
+        let model = train_dense(
+            &ds.train,
+            &[784, 10],
+            &TrainConfig { steps: 250, lr: 0.3, ..Default::default() },
+        );
+        let rows = bits_sweep(&model, &ds.test, &[1, 2, 3, 4, 8]);
+        assert_eq!(rows.len(), 5);
+        // 3+ bits should be within a few points of full precision
+        let full = rows[0].ref_acc;
+        let at3 = rows.iter().find(|r| r.bits == 3).unwrap().lut_acc;
+        let at8 = rows.iter().find(|r| r.bits == 8).unwrap().lut_acc;
+        assert!(at3 > full - 0.08, "3-bit acc {at3} vs full {full}");
+        assert!(at8 > full - 0.05, "8-bit acc {at8} vs full {full}");
+        // 1-bit should lose noticeably more than 8-bit
+        let at1 = rows.iter().find(|r| r.bits == 1).unwrap().lut_acc;
+        assert!(at1 <= at8 + 0.02);
+    }
+
+    #[test]
+    fn tradeoff_rows_measure_engine() {
+        let ds = quick_dataset();
+        let model = train_dense(
+            &ds.train,
+            &[784, 10],
+            &TrainConfig { steps: 200, lr: 0.3, ..Default::default() },
+        );
+        let pts = crate::planner::sweep::linear_tradeoff(3);
+        let rows = tradeoff_rows(&model, &ds.test.head(60), pts, 3);
+        let measured = rows.iter().filter(|r| r.measured_acc.is_some()).count();
+        assert_eq!(measured, 3);
+        for r in &rows {
+            if let (Some(ops), true) = (r.measured_ops, r.point.materialisable) {
+                assert!(ops > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn intext_matches() {
+        let rows = intext_report();
+        let get = |k: &str| {
+            rows.iter().find(|(n, _, _)| n == k).map(|(_, _, v)| v.clone()).unwrap()
+        };
+        assert_eq!(get("linear 56 LUTs evals"), "168");
+        assert_eq!(get("linear 56 LUTs shift-adds"), "1650");
+        assert_eq!(get("MLP LUT count"), "2320");
+        assert_eq!(get("MLP bitplaned shift-adds"), "14652918");
+        assert_eq!(get("linear 56 LUTs size"), "17.50 MiB");
+    }
+
+    #[test]
+    fn csv_output_is_parsable() {
+        let rows = vec![BitsRow { bits: 3, lut_acc: 0.9, ref_quant_acc: 0.91, ref_acc: 0.92 }];
+        let csv = bits_csv(&rows);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[1].split(',').count(), 4);
+    }
+}

@@ -1,0 +1,34 @@
+//! # TableNet
+//!
+//! A multiplier-less implementation of neural networks for inferencing,
+//! reproducing Wu, "TableNet: a multiplier-less implementation of neural
+//! networks for inferencing" (2019).
+//!
+//! The crate is organised as a three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the Rust coordinator: LUT construction,
+//!   the multiplier-less inference engine, the partition planner / cost
+//!   model, a serving coordinator (router + dynamic batcher), and the
+//!   experiment harness that regenerates every figure of the paper.
+//! * **Layer 2 (`python/compile/model.py`)** — JAX model definitions
+//!   (linear / MLP / LeNet CNN) with quantization-aware training; lowered
+//!   once to HLO text and executed from Rust via PJRT (`runtime`).
+//! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for the
+//!   bitplane-LUT matmul hot-spot, validated against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: `make artifacts` exports HLO
+//! text + trained weights, and the Rust binary is self-contained after.
+
+pub mod tensor;
+pub mod quant;
+pub mod lut;
+pub mod nn;
+pub mod engine;
+pub mod planner;
+pub mod data;
+pub mod train;
+pub mod coordinator;
+pub mod runtime;
+pub mod harness;
+pub mod config;
+pub mod util;

@@ -1,0 +1,259 @@
+//! Fixed-point bitplane LUT bank (paper §Fixed point formats).
+//!
+//! Writing each input element as `x_i = Σ_j a_ij 2^j` and swapping the
+//! summation order gives `Wx = Σ_j 2^j · W a_·j` — the *same* table
+//! serves every bitplane `j`, evaluated `n` times with its output
+//! shifted left by `j` and added. A chunk of `m` elements needs only a
+//! `2^m`-row table (vs `2^(m·n)` for whole-code indexing), at the price
+//! of `n·k` lookups instead of `k`.
+
+use super::{to_acc, LutError, Partition, MAX_TABLE_BYTES};
+use crate::engine::counters::Counters;
+use crate::quant::FixedFormat;
+
+/// One `2^m x p` table per chunk, shared across all n bitplanes.
+#[derive(Debug)]
+pub struct DenseBitplaneLut {
+    pub partition: Partition,
+    pub fmt: FixedFormat,
+    pub p: usize,
+    /// tables[c][idx * p + o] = Σ_{s in chunk, bit_s(idx)=1} W[o, s],
+    /// in accumulator scale *at the LSB plane* (plane j adds `<< j`).
+    tables: Vec<Vec<i64>>,
+    /// Bias in accumulator scale, added once per evaluation.
+    bias_acc: Vec<i64>,
+}
+
+impl DenseBitplaneLut {
+    pub fn build(
+        w: &[f32],
+        b: &[f32],
+        p: usize,
+        q: usize,
+        partition: Partition,
+        fmt: FixedFormat,
+    ) -> Result<Self, LutError> {
+        assert_eq!(w.len(), p * q);
+        assert_eq!(b.len(), p);
+        partition.validate()?;
+        assert_eq!(partition.q, q);
+        let mut tables = Vec::with_capacity(partition.k());
+        for chunk in &partition.chunks {
+            let m = chunk.len();
+            if m >= 28 {
+                return Err(LutError::TooLarge { rows: 1u128 << m, cols: p });
+            }
+            let rows = 1usize << m;
+            if rows * p * 8 > MAX_TABLE_BYTES {
+                return Err(LutError::TooLarge { rows: rows as u128, cols: p });
+            }
+            let mut table = vec![0i64; rows * p];
+            for idx in 0..rows {
+                let row = &mut table[idx * p..(idx + 1) * p];
+                for (e, &col) in chunk.iter().enumerate() {
+                    if (idx >> e) & 1 == 1 {
+                        // LSB-plane weight: w * 2^-n (code LSB value)
+                        let scale = (-(fmt.bits as f64)).exp2();
+                        for (o, r) in row.iter_mut().enumerate() {
+                            *r += to_acc(w[o * q + col] as f64 * scale);
+                        }
+                    }
+                }
+            }
+            tables.push(table);
+        }
+        let bias_acc = b.iter().map(|&v| to_acc(v as f64)).collect();
+        Ok(DenseBitplaneLut { partition, fmt, p, tables, bias_acc })
+    }
+
+    /// Evaluate `Wx + b` from quantized codes: for each chunk and each
+    /// bitplane, gather the plane's bits into an index, look up, shift
+    /// by the plane, add. `n·k` lookups, zero multiplies.
+    ///
+    /// Hot-path notes (§Perf): the plane indices of a chunk are built in
+    /// a *single pass* over its codes (one load per element, bits
+    /// deposited into all n indices) instead of n passes, and the row
+    /// accumulation uses unchecked slices — the index is `< 2^m` by
+    /// construction and the table has exactly `2^m · p` entries.
+    pub fn eval_codes(&self, codes: &[u32], ctr: &mut Counters) -> Vec<i64> {
+        assert_eq!(codes.len(), self.partition.q);
+        let n = self.fmt.bits as usize;
+        let mut acc = self.bias_acc.clone();
+        ctr.adds += self.p as u64; // bias add
+        let mut idx = [0usize; 16]; // n <= 16 by FixedFormat invariant
+        for (c, chunk) in self.partition.chunks.iter().enumerate() {
+            let table = &self.tables[c];
+            // fast path for singleton chunks (the paper's k = q, m_i = 1
+            // memory-parity configuration): the table has two rows and
+            // the code's set bits directly select shifted adds of row 1.
+            if let [col] = chunk.as_slice() {
+                let mut code = unsafe { *codes.get_unchecked(*col) } as usize;
+                ctr.lut_evals += n as u64;
+                let row = unsafe { table.get_unchecked(self.p..2 * self.p) };
+                while code != 0 {
+                    let j = code.trailing_zeros();
+                    for (a, &r) in acc.iter_mut().zip(row) {
+                        *a += r << j;
+                    }
+                    ctr.shift_adds += self.p as u64;
+                    code &= code - 1; // clear lowest set bit
+                }
+                continue;
+            }
+            idx[..n].fill(0);
+            for (e, &col) in chunk.iter().enumerate() {
+                let code = unsafe { *codes.get_unchecked(col) } as usize;
+                for (j, slot) in idx[..n].iter_mut().enumerate() {
+                    *slot |= ((code >> j) & 1) << e;
+                }
+            }
+            ctr.lut_evals += n as u64;
+            for (j, &row_idx) in idx[..n].iter().enumerate() {
+                if row_idx == 0 {
+                    // all-zero row is identically zero; hardware would
+                    // still read it — the lookup is charged above.
+                    continue;
+                }
+                let row = unsafe {
+                    table.get_unchecked(row_idx * self.p..(row_idx + 1) * self.p)
+                };
+                for (a, &r) in acc.iter_mut().zip(row) {
+                    *a += r << j;
+                }
+                ctr.shift_adds += self.p as u64;
+            }
+        }
+        acc
+    }
+
+    /// Quantize then evaluate.
+    pub fn eval_f32(&self, x: &[f32], ctr: &mut Counters) -> Vec<i64> {
+        let codes: Vec<u32> = x.iter().map(|&v| self.fmt.quantize(v)).collect();
+        self.eval_codes(&codes, ctr)
+    }
+
+    /// Total size in bits at `r_o`-bit entries: Σ_i 2^{m_i}·p·r_o.
+    pub fn size_bits(&self, r_o: u32) -> u64 {
+        self.tables
+            .iter()
+            .map(|t| t.len() as u64 * r_o as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::from_acc;
+    use crate::util::Rng;
+
+    fn ref_affine(w: &[f32], b: &[f32], p: usize, q: usize, x: &[f32]) -> Vec<f32> {
+        (0..p)
+            .map(|o| b[o] + (0..q).map(|i| w[o * q + i] * x[i]).sum::<f32>())
+            .collect()
+    }
+
+    fn random_case(p: usize, q: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (
+            (0..p * q).map(|_| rng.normal() * 0.5).collect(),
+            (0..p).map(|_| rng.normal() * 0.1).collect(),
+            (0..q).map(|_| rng.f32()).collect(),
+        )
+    }
+
+    #[test]
+    fn matches_reference_on_quantized_input() {
+        let (p, q) = (6, 16);
+        let (w, b, x) = random_case(p, q, 3);
+        let fmt = FixedFormat::new(5);
+        let xq: Vec<f32> = x.iter().map(|&v| fmt.fake_quant(v)).collect();
+        let lut =
+            DenseBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, 4), fmt)
+                .unwrap();
+        let mut ctr = Counters::default();
+        let acc = lut.eval_f32(&x, &mut ctr);
+        let want = ref_affine(&w, &b, p, q, &xq);
+        for (o, &a) in acc.iter().enumerate() {
+            assert!(
+                (from_acc(a, 0) - want[o]).abs() < 1e-4,
+                "{} vs {}",
+                from_acc(a, 0),
+                want[o]
+            );
+        }
+    }
+
+    #[test]
+    fn agrees_with_whole_code_lut() {
+        use crate::lut::dense::DenseWholeLut;
+        let (p, q) = (4, 8);
+        let (w, b, x) = random_case(p, q, 9);
+        let fmt = FixedFormat::new(3);
+        let whole =
+            DenseWholeLut::build(&w, &b, p, q, Partition::contiguous(q, 2), fmt).unwrap();
+        let plane =
+            DenseBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, 2), fmt)
+                .unwrap();
+        let mut c1 = Counters::default();
+        let mut c2 = Counters::default();
+        let a1 = whole.eval_f32(&x, &mut c1);
+        let a2 = plane.eval_f32(&x, &mut c2);
+        for (x1, x2) in a1.iter().zip(&a2) {
+            assert!((from_acc(*x1, 0) - from_acc(*x2, 0)).abs() < 1e-5);
+        }
+        // bitplane does n× the lookups of whole-code
+        assert_eq!(c2.lut_evals, c1.lut_evals * fmt.bits as u64);
+    }
+
+    #[test]
+    fn lookup_count_is_n_times_k() {
+        let (p, q) = (3, 12);
+        let (w, b, x) = random_case(p, q, 1);
+        let fmt = FixedFormat::new(4);
+        let lut =
+            DenseBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, 3), fmt)
+                .unwrap();
+        let mut ctr = Counters::default();
+        let _ = lut.eval_f32(&x, &mut ctr);
+        assert_eq!(ctr.lut_evals, (4 * 4) as u64); // n=4 planes, k=4 chunks
+        assert_eq!(ctr.mults, 0);
+    }
+
+    #[test]
+    fn size_is_exponential_in_m_not_in_n() {
+        let (p, q) = (10, 8);
+        let w = vec![0.0f32; p * q];
+        let b = vec![0.0f32; p];
+        let s3 = DenseBitplaneLut::build(
+            &w, &b, p, q, Partition::contiguous(q, 2), FixedFormat::new(3),
+        )
+        .unwrap()
+        .size_bits(16);
+        let s8 = DenseBitplaneLut::build(
+            &w, &b, p, q, Partition::contiguous(q, 2), FixedFormat::new(8),
+        )
+        .unwrap()
+        .size_bits(16);
+        // bitplane table size is independent of input precision n
+        assert_eq!(s3, s8);
+        assert_eq!(s3, 4 * 4 * 10 * 16); // k=4, 2^2 rows, p=10, 16-bit
+    }
+
+    #[test]
+    fn zero_input_gives_bias() {
+        let (p, q) = (3, 6);
+        let mut rng = Rng::new(5);
+        let w: Vec<f32> = (0..p * q).map(|_| rng.normal()).collect();
+        let b = vec![1.0f32, -2.0, 0.5];
+        let lut = DenseBitplaneLut::build(
+            &w, &b, p, q, Partition::contiguous(q, 2), FixedFormat::new(4),
+        )
+        .unwrap();
+        let mut ctr = Counters::default();
+        let acc = lut.eval_f32(&vec![0.0; q], &mut ctr);
+        for (o, &a) in acc.iter().enumerate() {
+            assert!((from_acc(a, 0) - b[o]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,307 @@
+//! Convolutional LUTs (paper §Convolutional layers using LUT, Fig. 2).
+//!
+//! The convolution's weight matrix is (block-)circulant, so one table is
+//! shared by *every* spatial block — the table is indexed by the block's
+//! pixel bits and returns the block's dilated output patch (an
+//! `(m+2r) x (m+2r)` support for an `m x m` block under a
+//! `(2r+1) x (2r+1)` filter). Spatial shift-invariance plays the same
+//! role the binary shift plays for bitplanes, and we exploit both: the
+//! same table serves all blocks *and* all bitplanes.
+//!
+//! Tables are per input channel (different channels have different
+//! filter taps, so they cannot share), which is exactly how the paper's
+//! conv2 cost scales.
+
+use super::{to_acc, LutError, Partition, MAX_TABLE_BYTES};
+use crate::engine::counters::Counters;
+use crate::quant::FixedFormat;
+
+/// LUT bank for one 'same'-padded conv layer.
+#[derive(Debug)]
+pub struct ConvLut {
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub cout: usize,
+    /// Filter half-width r (filter is (2r+1) x (2r+1)).
+    pub r: usize,
+    /// Spatial block edge m.
+    pub m: usize,
+    pub fmt: FixedFormat,
+    /// tables[ci][idx * patch + (py*pw + px)*cout + o], one per input
+    /// channel, shared across blocks and bitplanes. Entries at LSB-plane
+    /// accumulator scale.
+    tables: Vec<Vec<i64>>,
+    /// patch edge = m + 2r
+    pe: usize,
+    bias_acc: Vec<i64>,
+}
+
+impl ConvLut {
+    /// Build from an NHWC filter `[2r+1, 2r+1, cin, cout]` + bias.
+    pub fn build(
+        filter: &[f32],
+        bias: &[f32],
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        r: usize,
+        m: usize,
+        fmt: FixedFormat,
+    ) -> Result<Self, LutError> {
+        let fs = 2 * r + 1;
+        assert_eq!(filter.len(), fs * fs * cin * cout);
+        assert_eq!(bias.len(), cout);
+        if h % m != 0 || w % m != 0 {
+            return Err(LutError::BadPartition(format!(
+                "block {m} does not tile {h}x{w}"
+            )));
+        }
+        let a = m * m;
+        if a >= 24 {
+            return Err(LutError::TooLarge { rows: 1u128 << a, cols: cout });
+        }
+        let rows = 1usize << a;
+        let pe = m + 2 * r;
+        let patch = pe * pe * cout;
+        if rows * patch * 8 > MAX_TABLE_BYTES {
+            return Err(LutError::TooLarge { rows: rows as u128, cols: patch });
+        }
+        let lsb = (-(fmt.bits as f64)).exp2();
+        let mut tables = Vec::with_capacity(cin);
+        for ci in 0..cin {
+            let mut table = vec![0i64; rows * patch];
+            for idx in 0..rows {
+                let prow = &mut table[idx * patch..(idx + 1) * patch];
+                for bit in 0..a {
+                    if (idx >> bit) & 1 == 0 {
+                        continue;
+                    }
+                    let (dy, dx) = (bit / m, bit % m);
+                    for ky in 0..fs {
+                        let py = dy + 2 * r - ky;
+                        for kx in 0..fs {
+                            let px = dx + 2 * r - kx;
+                            let base = (py * pe + px) * cout;
+                            let fbase = (ky * fs + kx) * cin * cout + ci * cout;
+                            for o in 0..cout {
+                                prow[base + o] +=
+                                    to_acc(filter[fbase + o] as f64 * lsb);
+                            }
+                        }
+                    }
+                }
+            }
+            tables.push(table);
+        }
+        let bias_acc = bias.iter().map(|&v| to_acc(v as f64)).collect();
+        Ok(ConvLut { h, w, cin, cout, r, m, fmt, tables, pe, bias_acc })
+    }
+
+    /// Evaluate the convolution over a quantized NHWC input
+    /// `[h, w, cin]` given as codes. Returns accumulator image
+    /// `[h, w, cout]`. Pure gathers, shifts and adds.
+    pub fn eval_codes(&self, codes: &[u32], ctr: &mut Counters) -> Vec<i64> {
+        assert_eq!(codes.len(), self.h * self.w * self.cin);
+        let (h, w, r, m, pe) = (self.h, self.w, self.r, self.m, self.pe);
+        let n = self.fmt.bits;
+        let (ph, pw) = (h + 2 * r, w + 2 * r);
+        // padded accumulator, cropped at the end
+        let mut pad = vec![0i64; ph * pw * self.cout];
+        let patch = pe * pe * self.cout;
+        for ci in 0..self.cin {
+            let table = &self.tables[ci];
+            for by in 0..h / m {
+                for bx in 0..w / m {
+                    for j in 0..n {
+                        // gather plane-j bits of the block for channel ci
+                        let mut idx = 0usize;
+                        for dy in 0..m {
+                            for dx in 0..m {
+                                let pix = ((by * m + dy) * w + (bx * m + dx))
+                                    * self.cin
+                                    + ci;
+                                idx |= ((((codes[pix] >> j) & 1) as usize)
+                                    << (dy * m + dx)) as usize;
+                            }
+                        }
+                        ctr.lut_evals += 1;
+                        if idx == 0 {
+                            continue;
+                        }
+                        let prow = &table[idx * patch..(idx + 1) * patch];
+                        // patch origin in padded coords = block origin
+                        let oy0 = by * m;
+                        let ox0 = bx * m;
+                        for py in 0..pe {
+                            let dst = ((oy0 + py) * pw + ox0) * self.cout;
+                            let src = py * pe * self.cout;
+                            for t in 0..pe * self.cout {
+                                pad[dst + t] += prow[src + t] << j;
+                            }
+                        }
+                        ctr.shift_adds += (pe * pe * self.cout) as u64;
+                    }
+                }
+            }
+        }
+        // crop centre h x w and add bias
+        let mut out = vec![0i64; h * w * self.cout];
+        for y in 0..h {
+            for x in 0..w {
+                let src = ((y + r) * pw + (x + r)) * self.cout;
+                let dst = (y * w + x) * self.cout;
+                for o in 0..self.cout {
+                    out[dst + o] = pad[src + o] + self.bias_acc[o];
+                }
+            }
+        }
+        ctr.adds += (h * w * self.cout) as u64;
+        out
+    }
+
+    /// Quantize f32 NHWC input (values in [0,1]) then evaluate.
+    pub fn eval_f32(&self, x: &[f32], ctr: &mut Counters) -> Vec<i64> {
+        let codes: Vec<u32> = x.iter().map(|&v| self.fmt.quantize(v)).collect();
+        self.eval_codes(&codes, ctr)
+    }
+
+    /// The spatial partition this bank implies (for planner cross-checks).
+    pub fn partition(&self) -> Partition {
+        Partition::square_blocks(self.h, self.w, self.m)
+    }
+
+    /// Materialised size in bits at r_o-bit entries:
+    /// cin tables × 2^(m²) rows × (m+2r)²·cout entries.
+    pub fn size_bits(&self, r_o: u32) -> u64 {
+        self.tables.iter().map(|t| t.len() as u64 * r_o as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::from_acc;
+    use crate::tensor::{conv::conv2d_same, Tensor};
+    use crate::util::Rng;
+
+    /// Run the reference conv on the quantized input and compare.
+    fn check_against_reference(
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        r: usize,
+        m: usize,
+        bits: u32,
+        seed: u64,
+    ) {
+        let fs = 2 * r + 1;
+        let mut rng = Rng::new(seed);
+        let filter: Vec<f32> =
+            (0..fs * fs * cin * cout).map(|_| rng.normal() * 0.3).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.05).collect();
+        let x: Vec<f32> = (0..h * w * cin).map(|_| rng.f32()).collect();
+        let fmt = FixedFormat::new(bits);
+        let xq: Vec<f32> = x.iter().map(|&v| fmt.fake_quant(v)).collect();
+
+        let lut = ConvLut::build(&filter, &bias, h, w, cin, cout, r, m, fmt).unwrap();
+        let mut ctr = Counters::default();
+        let acc = lut.eval_f32(&x, &mut ctr);
+        assert_eq!(ctr.mults, 0, "conv LUT path must be multiplier-less");
+
+        let want = conv2d_same(
+            &Tensor::new(&[1, h, w, cin], xq),
+            &Tensor::new(&[fs, fs, cin, cout], filter),
+            &Tensor::new(&[cout], bias),
+        );
+        for (i, &a) in acc.iter().enumerate() {
+            let g = from_acc(a, 0);
+            let e = want.data()[i];
+            assert!((g - e).abs() < 1e-3, "i={i}: {g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn single_channel_3x3_filter() {
+        check_against_reference(6, 6, 1, 2, 1, 2, 3, 1);
+    }
+
+    #[test]
+    fn multi_channel_input() {
+        check_against_reference(4, 4, 3, 2, 1, 2, 3, 2);
+    }
+
+    #[test]
+    fn five_by_five_filter_like_lenet() {
+        check_against_reference(8, 8, 1, 4, 2, 2, 4, 3);
+    }
+
+    #[test]
+    fn block_size_does_not_change_result() {
+        let (h, w, cin, cout, r) = (4, 4, 1, 2, 1);
+        let fs = 2 * r + 1;
+        let mut rng = Rng::new(4);
+        let filter: Vec<f32> =
+            (0..fs * fs * cin * cout).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..h * w * cin).map(|_| rng.f32()).collect();
+        let fmt = FixedFormat::new(3);
+        let mut outs = Vec::new();
+        for m in [1, 2, 4] {
+            let lut =
+                ConvLut::build(&filter, &bias, h, w, cin, cout, r, m, fmt).unwrap();
+            let mut ctr = Counters::default();
+            outs.push(
+                lut.eval_f32(&x, &mut ctr)
+                    .iter()
+                    .map(|&a| from_acc(a, 0))
+                    .collect::<Vec<f32>>(),
+            );
+        }
+        for o in &outs[1..] {
+            for (a, b) in o.iter().zip(&outs[0]) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_count_formula() {
+        // blocks * planes * cin lookups
+        let (h, w, cin, cout, r, m, bits) = (8, 8, 2, 3, 1, 2, 4);
+        let fs = 2 * r + 1;
+        let filter = vec![0.1f32; fs * fs * cin * cout];
+        let bias = vec![0.0f32; cout];
+        let fmt = FixedFormat::new(bits);
+        let lut = ConvLut::build(&filter, &bias, h, w, cin, cout, r, m, fmt).unwrap();
+        let mut ctr = Counters::default();
+        let x = vec![0.7f32; h * w * cin];
+        let _ = lut.eval_f32(&x, &mut ctr);
+        let blocks = (h / m) * (w / m);
+        assert_eq!(ctr.lut_evals, (blocks * bits as usize * cin) as u64);
+    }
+
+    #[test]
+    fn size_formula_matches_paper_patch_geometry() {
+        // a = m², c = (m+2r)² — paper's example geometry
+        let (h, w, cin, cout, r, m) = (8, 8, 1, 1, 2, 2);
+        let filter = vec![0.0f32; 25];
+        let bias = vec![0.0f32];
+        let lut =
+            ConvLut::build(&filter, &bias, h, w, cin, cout, r, m, FixedFormat::new(3))
+                .unwrap();
+        // 2^(2*2) rows * (2+4)^2 patch * 16 bits
+        assert_eq!(lut.size_bits(16), 16 * 36 * 16);
+    }
+
+    #[test]
+    fn rejects_non_tiling_block() {
+        let filter = vec![0.0f32; 9];
+        let bias = vec![0.0f32];
+        let err = ConvLut::build(&filter, &bias, 5, 5, 1, 1, 1, 2, FixedFormat::new(2))
+            .unwrap_err();
+        assert!(matches!(err, LutError::BadPartition(_)));
+    }
+}

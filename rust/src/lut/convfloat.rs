@@ -1,0 +1,246 @@
+//! Convolutional LUT over binary16 inputs (the paper's CNN layers 2-4
+//! configuration: "the mantissa is partitioned into 11 bitplanes and the
+//! spatial partition is into single elements").
+//!
+//! Spatial partition is a single pixel (m = 1): the index per plane is
+//! that pixel's (mantissa-bit, 5-bit exponent) field — 64 rows — and the
+//! table returns the pixel's dilated (2r+1)² × cout output patch. One
+//! table per input channel, shared by all pixels and all planes.
+
+use super::floatplane::FACC;
+use super::{LutError, MAX_TABLE_BYTES};
+use crate::engine::counters::Counters;
+use crate::quant::f16::{F16, EXP_BIAS, FRAC_BITS, SIG_BITS};
+
+/// Float-input conv LUT bank, m = 1.
+#[derive(Debug)]
+pub struct ConvFloatLut {
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub r: usize,
+    /// Mantissa planes evaluated (≤ 11).
+    pub planes: u32,
+    /// tables[ci][idx * patch + (py*pe+px)*cout + o]; pe = 2r+1.
+    tables: Vec<Vec<i64>>,
+    bias_acc: Vec<i64>,
+}
+
+impl ConvFloatLut {
+    /// Build from an NHWC filter `[2r+1, 2r+1, cin, cout]` + bias.
+    pub fn build(
+        filter: &[f32],
+        bias: &[f32],
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        r: usize,
+        planes: u32,
+    ) -> Result<Self, LutError> {
+        let fs = 2 * r + 1;
+        assert_eq!(filter.len(), fs * fs * cin * cout);
+        assert_eq!(bias.len(), cout);
+        let rows = 1usize << 6; // 1 mantissa bit + 5 exponent bits
+        let pe = fs; // patch edge for m=1
+        let patch = pe * pe * cout;
+        if rows * patch * 8 > MAX_TABLE_BYTES {
+            return Err(LutError::TooLarge { rows: rows as u128, cols: patch });
+        }
+        let mut tables = Vec::with_capacity(cin);
+        for ci in 0..cin {
+            let mut table = vec![0i64; rows * patch];
+            for idx in 0..rows {
+                let bit = idx & 1;
+                if bit == 0 {
+                    continue; // zero rows stay zero
+                }
+                let exp_raw = (idx >> 1) as u32 & 0x1F;
+                let scale_exp = exp_raw.max(1) as i32 - EXP_BIAS - FRAC_BITS as i32;
+                let scale = ((scale_exp + FACC) as f64).exp2();
+                let prow = &mut table[idx * patch..(idx + 1) * patch];
+                // pixel at patch centre: output offsets (2r-ky, 2r-kx)
+                // relative to patch origin = pixel - r
+                for ky in 0..fs {
+                    let py = 2 * r - ky;
+                    for kx in 0..fs {
+                        let px = 2 * r - kx;
+                        let base = (py * pe + px) * cout;
+                        let fbase = (ky * fs + kx) * cin * cout + ci * cout;
+                        for o in 0..cout {
+                            prow[base + o] +=
+                                (filter[fbase + o] as f64 * scale).round() as i64;
+                        }
+                    }
+                }
+            }
+            tables.push(table);
+        }
+        let bias_acc = bias
+            .iter()
+            .map(|&v| (v as f64 * (FACC as f64).exp2()).round() as i64)
+            .collect();
+        Ok(ConvFloatLut { h, w, cin, cout, r, planes, tables, bias_acc })
+    }
+
+    /// Evaluate over an NHWC `[h, w, cin]` binary16 input. Returns
+    /// accumulator image `[h, w, cout]` at FACC scale.
+    pub fn eval_f16(&self, x: &[F16], ctr: &mut Counters) -> Vec<i64> {
+        assert_eq!(x.len(), self.h * self.w * self.cin);
+        let (h, w, r) = (self.h, self.w, self.r);
+        let fs = 2 * r + 1;
+        let pe = fs;
+        let patch = pe * pe * self.cout;
+        let (ph, pw) = (h + 2 * r, w + 2 * r);
+        let mut pad = vec![0i64; ph * pw * self.cout];
+        let lo_plane = SIG_BITS - self.planes.min(SIG_BITS);
+        for ci in 0..self.cin {
+            let table = &self.tables[ci];
+            for y in 0..h {
+                for xx in 0..w {
+                    let hval = x[(y * w + xx) * self.cin + ci];
+                    debug_assert_eq!(hval.sign(), 0, "conv float LUT expects nonneg input");
+                    ctr.lut_evals += (SIG_BITS - lo_plane) as u64;
+                    // one row — table[(exp<<1)|1] — serves every plane of
+                    // this pixel; iterate the significand's set bits and
+                    // shift-add the patch (§Perf fast path, same trick
+                    // as the dense float bank).
+                    let mut sig = (hval.significand11() >> lo_plane) << lo_plane;
+                    if sig == 0 {
+                        continue;
+                    }
+                    let idx = ((hval.exponent() << 1) | 1) as usize;
+                    let prow = &table[idx * patch..(idx + 1) * patch];
+                    while sig != 0 {
+                        let j = sig.trailing_zeros();
+                        // patch origin in padded coords = (y, xx)
+                        for py in 0..pe {
+                            let dst = ((y + py) * pw + xx) * self.cout;
+                            let src = py * pe * self.cout;
+                            let dstrow = &mut pad[dst..dst + pe * self.cout];
+                            let srcrow = &prow[src..src + pe * self.cout];
+                            for (d, &s) in dstrow.iter_mut().zip(srcrow) {
+                                *d += s << j;
+                            }
+                        }
+                        ctr.shift_adds += patch as u64;
+                        sig &= sig - 1;
+                    }
+                }
+            }
+        }
+        let mut out = vec![0i64; h * w * self.cout];
+        for y in 0..h {
+            for xx in 0..w {
+                let src = ((y + r) * pw + (xx + r)) * self.cout;
+                let dst = (y * w + xx) * self.cout;
+                for o in 0..self.cout {
+                    out[dst + o] = pad[src + o] + self.bias_acc[o];
+                }
+            }
+        }
+        ctr.adds += (h * w * self.cout) as u64;
+        out
+    }
+
+    /// Size in bits at r_o-bit entries.
+    pub fn size_bits(&self, r_o: u32) -> u64 {
+        self.tables.iter().map(|t| t.len() as u64 * r_o as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{conv::conv2d_same, Tensor};
+    use crate::util::Rng;
+
+    fn check(h: usize, w: usize, cin: usize, cout: usize, r: usize, seed: u64) {
+        let fs = 2 * r + 1;
+        let mut rng = Rng::new(seed);
+        let filter: Vec<f32> =
+            (0..fs * fs * cin * cout).map(|_| rng.normal() * 0.3).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.05).collect();
+        let x: Vec<f32> =
+            (0..h * w * cin).map(|_| rng.f32() * 4.0).collect();
+        let xh: Vec<F16> = x.iter().map(|&v| F16::from_f32(v)).collect();
+        let xq: Vec<f32> = xh.iter().map(|&hh| hh.to_f32()).collect();
+
+        let lut =
+            ConvFloatLut::build(&filter, &bias, h, w, cin, cout, r, SIG_BITS).unwrap();
+        let mut ctr = Counters::default();
+        let acc = lut.eval_f16(&xh, &mut ctr);
+        ctr.assert_multiplier_less();
+
+        let want = conv2d_same(
+            &Tensor::new(&[1, h, w, cin], xq),
+            &Tensor::new(&[fs, fs, cin, cout], filter),
+            &Tensor::new(&[cout], bias),
+        );
+        for (i, &a) in acc.iter().enumerate() {
+            let g = (a as f64 * (-(FACC as f64)).exp2()) as f32;
+            let e = want.data()[i];
+            assert!(
+                (g - e).abs() < 2e-3 * e.abs().max(1.0),
+                "i={i}: {g} vs {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_channel() {
+        check(5, 5, 1, 2, 1, 41);
+    }
+
+    #[test]
+    fn multi_channel_5x5_filter() {
+        check(6, 6, 3, 4, 2, 42);
+    }
+
+    #[test]
+    fn eval_count_is_pixels_planes_channels() {
+        let (h, w, cin, cout, r) = (4, 4, 2, 1, 1);
+        let fs = 2 * r + 1;
+        let filter = vec![0.1f32; fs * fs * cin * cout];
+        let bias = vec![0.0f32; cout];
+        let lut = ConvFloatLut::build(&filter, &bias, h, w, cin, cout, r, 11).unwrap();
+        let mut ctr = Counters::default();
+        let x = vec![F16::from_f32(1.0); h * w * cin];
+        let _ = lut.eval_f16(&x, &mut ctr);
+        assert_eq!(ctr.lut_evals, (h * w * cin * 11) as u64);
+    }
+
+    #[test]
+    fn zero_input_gives_bias() {
+        let (h, w, cin, cout, r) = (3, 3, 1, 2, 1);
+        let filter = vec![0.5f32; 9 * cout];
+        let bias = vec![1.0f32, -1.0];
+        let lut = ConvFloatLut::build(&filter, &bias, h, w, cin, cout, r, 11).unwrap();
+        let mut ctr = Counters::default();
+        let acc = lut.eval_f16(&vec![F16(0); h * w * cin], &mut ctr);
+        for px in 0..h * w {
+            let a0 = (acc[px * 2] as f64 * (-(FACC as f64)).exp2()) as f32;
+            let a1 = (acc[px * 2 + 1] as f64 * (-(FACC as f64)).exp2()) as f32;
+            assert!((a0 - 1.0).abs() < 1e-6);
+            assert!((a1 + 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn size_matches_paper_geometry() {
+        // cin tables × 2^6 rows × (2r+1)²·cout entries × r_o bits
+        let lut = ConvFloatLut::build(
+            &vec![0.0; 25 * 32 * 64],
+            &vec![0.0; 64],
+            14,
+            14,
+            32,
+            64,
+            2,
+            11,
+        )
+        .unwrap();
+        assert_eq!(lut.size_bits(16), 32 * 64 * (25 * 64) * 16);
+    }
+}

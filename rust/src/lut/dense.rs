@@ -1,0 +1,248 @@
+//! Whole-code dense LUT bank: each chunk's *entire* bit string indexes
+//! its table (the paper's base construction in §"Computing the affine
+//! operation Wx + b").
+//!
+//! For a `p x q` weight matrix, a chunk of `m` input elements quantized
+//! to `r_I` bits each gets a table of `2^(m·r_I)` rows × `p` entries,
+//! where row `idx` holds `W·x_chunk(idx) + b/k` — the bias is *baked
+//! into the tables* (1/k per chunk), so summing the k table rows yields
+//! `Wx + b` with zero multiplies.
+
+use super::{to_acc, LutError, Partition, MAX_TABLE_BYTES};
+use crate::engine::counters::Counters;
+use crate::quant::FixedFormat;
+
+/// One table per chunk; entries in the shared fixed accumulator scale.
+#[derive(Debug)]
+pub struct DenseWholeLut {
+    pub partition: Partition,
+    pub fmt: FixedFormat,
+    pub p: usize,
+    /// tables[c] has `2^(m_c * r_I)` rows of `p` i64 entries, flattened.
+    tables: Vec<Vec<i64>>,
+}
+
+impl DenseWholeLut {
+    /// Build from weights `w` (row-major `p x q`), bias `b` (`p`), a
+    /// partition of the q inputs and the input fixed-point format.
+    ///
+    /// Table row for index `idx`: the chunk's elements are decoded from
+    /// the concatenated codes (element 0 of the chunk in the *least*
+    /// significant `r_I` bits), dequantized, and pushed through W.
+    pub fn build(
+        w: &[f32],
+        b: &[f32],
+        p: usize,
+        q: usize,
+        partition: Partition,
+        fmt: FixedFormat,
+    ) -> Result<Self, LutError> {
+        assert_eq!(w.len(), p * q);
+        assert_eq!(b.len(), p);
+        partition.validate()?;
+        assert_eq!(partition.q, q);
+        let k = partition.k() as f64;
+        let r_i = fmt.bits;
+        let mut tables = Vec::with_capacity(partition.k());
+        for chunk in &partition.chunks {
+            let m = chunk.len();
+            let idx_bits = (m as u32) * r_i;
+            if idx_bits >= 28 {
+                let rows = if idx_bits >= 127 { u128::MAX } else { 1u128 << idx_bits };
+                return Err(LutError::TooLarge { rows, cols: p });
+            }
+            let rows = 1usize << idx_bits;
+            if rows * p * 8 > MAX_TABLE_BYTES {
+                return Err(LutError::TooLarge { rows: rows as u128, cols: p });
+            }
+            let mut table = vec![0i64; rows * p];
+            for idx in 0..rows {
+                let row = &mut table[idx * p..(idx + 1) * p];
+                for (e, &col) in chunk.iter().enumerate() {
+                    let code = ((idx >> (e as u32 * r_i)) as u32) & ((1 << r_i) - 1);
+                    let xv = fmt.dequantize(code) as f64;
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for (o, r) in row.iter_mut().enumerate() {
+                        *r += to_acc(xv * w[o * q + col] as f64);
+                    }
+                }
+                for (o, r) in row.iter_mut().enumerate() {
+                    *r += to_acc(b[o] as f64 / k);
+                }
+            }
+            tables.push(table);
+        }
+        Ok(DenseWholeLut { partition, fmt, p, tables })
+    }
+
+    /// Evaluate `Wx + b` for a quantized input (codes, length q) into an
+    /// accumulator vector. Pure gathers and adds; `ctr` records the op
+    /// mix (and would record any multiply — there are none).
+    pub fn eval_codes(&self, codes: &[u32], ctr: &mut Counters) -> Vec<i64> {
+        assert_eq!(codes.len(), self.partition.q);
+        let r_i = self.fmt.bits;
+        let mut acc = vec![0i64; self.p];
+        for (c, chunk) in self.partition.chunks.iter().enumerate() {
+            let mut idx = 0usize;
+            for (e, &col) in chunk.iter().enumerate() {
+                idx |= (codes[col] as usize) << (e as u32 * r_i);
+            }
+            ctr.lut_evals += 1;
+            let row = &self.tables[c][idx * self.p..(idx + 1) * self.p];
+            for (a, &r) in acc.iter_mut().zip(row) {
+                *a += r;
+            }
+            ctr.adds += self.p as u64;
+        }
+        // the k-th row add is counted above; the paper charges k-1 vector
+        // adds (the first row is a move) — counters track raw adds, the
+        // planner reports the paper's convention.
+        acc
+    }
+
+    /// Quantize an f32 input (values in [0,1]) then evaluate.
+    pub fn eval_f32(&self, x: &[f32], ctr: &mut Counters) -> Vec<i64> {
+        let codes: Vec<u32> = x.iter().map(|&v| self.fmt.quantize(v)).collect();
+        self.eval_codes(&codes, ctr)
+    }
+
+    /// Total materialised size in bits, counting entries at `r_o` bits
+    /// each (the paper's accounting; the in-memory i64 is an artifact of
+    /// the software simulation, see DESIGN.md).
+    pub fn size_bits(&self, r_o: u32) -> u64 {
+        self.tables
+            .iter()
+            .map(|t| (t.len() / self.p) as u64 * self.p as u64 * r_o as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::from_acc;
+    use crate::util::Rng;
+
+    /// Reference float evaluation for comparison.
+    fn ref_affine(w: &[f32], b: &[f32], p: usize, q: usize, x: &[f32]) -> Vec<f32> {
+        (0..p)
+            .map(|o| {
+                b[o] + (0..q).map(|i| w[o * q + i] * x[i]).sum::<f32>()
+            })
+            .collect()
+    }
+
+    fn random_case(
+        p: usize,
+        q: usize,
+        seed: u64,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..p * q).map(|_| rng.normal() * 0.5).collect();
+        let b: Vec<f32> = (0..p).map(|_| rng.normal() * 0.1).collect();
+        let x: Vec<f32> = (0..q).map(|_| rng.f32()).collect();
+        (w, b, x)
+    }
+
+    #[test]
+    fn matches_reference_on_quantized_input() {
+        let (p, q) = (5, 12);
+        let (w, b, x) = random_case(p, q, 42);
+        let fmt = FixedFormat::new(4);
+        let xq: Vec<f32> = x.iter().map(|&v| fmt.fake_quant(v)).collect();
+        let lut = DenseWholeLut::build(&w, &b, p, q, Partition::contiguous(q, 3), fmt)
+            .unwrap();
+        let mut ctr = Counters::default();
+        let acc = lut.eval_f32(&x, &mut ctr);
+        let got: Vec<f32> = acc.iter().map(|&a| from_acc(a, 0)).collect();
+        let want = ref_affine(&w, &b, p, q, &xq);
+        for (g, w_) in got.iter().zip(&want) {
+            assert!((g - w_).abs() < 1e-4, "{g} vs {w_}");
+        }
+    }
+
+    #[test]
+    fn zero_multiplies_on_eval_path() {
+        let (p, q) = (3, 8);
+        let (w, b, x) = random_case(p, q, 7);
+        let fmt = FixedFormat::new(3);
+        let lut =
+            DenseWholeLut::build(&w, &b, p, q, Partition::contiguous(q, 2), fmt).unwrap();
+        let mut ctr = Counters::default();
+        let _ = lut.eval_f32(&x, &mut ctr);
+        assert_eq!(ctr.mults, 0);
+        assert_eq!(ctr.lut_evals, 4); // k = 8/2
+        assert_eq!(ctr.adds, 4 * p as u64);
+    }
+
+    #[test]
+    fn bias_fully_recovered_across_chunks() {
+        // zero weights: output must be exactly b regardless of partition
+        let (p, q) = (4, 9);
+        let w = vec![0.0f32; p * q];
+        let b = vec![0.25f32, -1.5, 3.0, 0.0];
+        let x = vec![0.5f32; q];
+        for m in [1, 2, 3, 9] {
+            let lut = DenseWholeLut::build(
+                &w,
+                &b,
+                p,
+                q,
+                Partition::contiguous(q, m),
+                FixedFormat::new(2),
+            )
+            .unwrap();
+            let mut ctr = Counters::default();
+            let acc = lut.eval_f32(&x, &mut ctr);
+            for (o, &a) in acc.iter().enumerate() {
+                assert!((from_acc(a, 0) - b[o]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_choice_does_not_change_result() {
+        let (p, q) = (4, 12);
+        let (w, b, x) = random_case(p, q, 11);
+        let fmt = FixedFormat::new(3);
+        let mut results = Vec::new();
+        for m in [1, 2, 4, 6] {
+            let lut =
+                DenseWholeLut::build(&w, &b, p, q, Partition::contiguous(q, m), fmt)
+                    .unwrap();
+            let mut ctr = Counters::default();
+            let acc = lut.eval_f32(&x, &mut ctr);
+            results.push(acc.iter().map(|&a| from_acc(a, 0)).collect::<Vec<f32>>());
+        }
+        for r in &results[1..] {
+            for (a, b_) in r.iter().zip(&results[0]) {
+                assert!((a - b_).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn size_formula() {
+        let (p, q) = (10, 8);
+        let w = vec![0.0f32; p * q];
+        let b = vec![0.0f32; p];
+        let fmt = FixedFormat::new(3);
+        let lut =
+            DenseWholeLut::build(&w, &b, p, q, Partition::contiguous(q, 2), fmt).unwrap();
+        // k=4 chunks of m=2 -> 4 * 2^(2*3) * 10 * 16 bits at r_O=16
+        assert_eq!(lut.size_bits(16), 4 * 64 * 10 * 16);
+    }
+
+    #[test]
+    fn rejects_oversized_tables() {
+        let (p, q) = (10, 32);
+        let w = vec![0.0f32; p * q];
+        let b = vec![0.0f32; p];
+        let fmt = FixedFormat::new(8);
+        let err =
+            DenseWholeLut::build(&w, &b, p, q, Partition::whole(q), fmt).unwrap_err();
+        assert!(matches!(err, LutError::TooLarge { .. }));
+    }
+}

@@ -1,0 +1,326 @@
+//! Binary16 floating-point LUT bank (paper §Floating point formats,
+//! Fig. 1): the mantissa is split into bitplanes (the same LUT serves
+//! all 11 planes) while the *entire 5-bit exponent* is part of every
+//! index. A chunk of `m` elements therefore indexes `m·(1+t)` bits, and
+//! the table holds `Σ_s w[o,s] · bit_s · 2^(e_s - bias - frac_bits)` —
+//! the shift structure of the float format is baked into the table.
+//!
+//! Inputs are assumed nonnegative (post-ReLU), matching the paper's
+//! "the sign bit is always 0 ... reduce the LUT size by half".
+
+use super::{LutError, Partition, MAX_TABLE_BYTES};
+use crate::engine::counters::Counters;
+use crate::quant::f16::{F16, EXP_BIAS, FRAC_BITS, SIG_BITS};
+
+
+/// Scale for float-path accumulators: entries are value * 2^FACC at the
+/// LSB mantissa plane; plane j contributes entry << j.
+pub const FACC: i32 = 44;
+
+/// Number of exponent bits indexed per element (t in the paper).
+pub const EXP_BITS: u32 = 5;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FloatLutConfig {
+    /// Mantissa bitplanes evaluated (≤ 11). The paper uses all 11; fewer
+    /// planes trade accuracy for ops (an ablation axis).
+    pub planes: u32,
+}
+
+impl Default for FloatLutConfig {
+    fn default() -> Self {
+        FloatLutConfig { planes: SIG_BITS }
+    }
+}
+
+/// One table per chunk: rows = 2^(m·(1+5)), cols = p.
+#[derive(Debug)]
+pub struct DenseFloatLut {
+    pub partition: Partition,
+    pub p: usize,
+    pub cfg: FloatLutConfig,
+    tables: Vec<Vec<i64>>,
+    bias_acc: Vec<i64>,
+}
+
+impl DenseFloatLut {
+    pub fn build(
+        w: &[f32],
+        b: &[f32],
+        p: usize,
+        q: usize,
+        partition: Partition,
+        cfg: FloatLutConfig,
+    ) -> Result<Self, LutError> {
+        assert_eq!(w.len(), p * q);
+        assert_eq!(b.len(), p);
+        partition.validate()?;
+        assert_eq!(partition.q, q);
+        let per_elem_bits = 1 + EXP_BITS; // 1 mantissa bit + whole exponent
+        let mut tables = Vec::with_capacity(partition.k());
+        for chunk in &partition.chunks {
+            let m = chunk.len() as u32;
+            let idx_bits = m * per_elem_bits;
+            if idx_bits >= 26 {
+                return Err(LutError::TooLarge { rows: 1u128 << idx_bits, cols: p });
+            }
+            let rows = 1usize << idx_bits;
+            if rows * p * 8 > MAX_TABLE_BYTES {
+                return Err(LutError::TooLarge { rows: rows as u128, cols: p });
+            }
+            let mut table = vec![0i64; rows * p];
+            for idx in 0..rows {
+                let row = &mut table[idx * p..(idx + 1) * p];
+                for (e, &col) in chunk.iter().enumerate() {
+                    let field = (idx >> (e as u32 * per_elem_bits)) as u32
+                        & ((1 << per_elem_bits) - 1);
+                    let bit = field & 1;
+                    if bit == 0 {
+                        continue;
+                    }
+                    let exp_raw = (field >> 1) & 0x1F;
+                    // normals: 2^(e-15-10); subnormals (e=0): 2^(1-15-10)
+                    let scale_exp =
+                        exp_raw.max(1) as i32 - EXP_BIAS - FRAC_BITS as i32;
+                    let scale = ((scale_exp + FACC) as f64).exp2();
+                    for (o, r) in row.iter_mut().enumerate() {
+                        *r += (w[o * q + col] as f64 * scale).round() as i64;
+                    }
+                }
+            }
+            tables.push(table);
+        }
+        let bias_acc = b
+            .iter()
+            .map(|&v| (v as f64 * (FACC as f64).exp2()).round() as i64)
+            .collect();
+        Ok(DenseFloatLut { partition, p, cfg, tables, bias_acc })
+    }
+
+    /// Evaluate `Wx + b` from binary16 inputs. For each chunk and each
+    /// mantissa plane j, the index interleaves (per element) the plane's
+    /// significand bit with the full 5-bit exponent; the table output is
+    /// shifted left by j and accumulated. The same table serves all
+    /// planes — the paper's Fig. 1.
+    pub fn eval_f16(&self, x: &[F16], ctr: &mut Counters) -> Vec<i64> {
+        assert_eq!(x.len(), self.partition.q);
+        let per_elem_bits = 1 + EXP_BITS;
+        let planes = self.cfg.planes.min(SIG_BITS);
+        let mut acc = self.bias_acc.clone();
+        ctr.adds += self.p as u64;
+        for (c, chunk) in self.partition.chunks.iter().enumerate() {
+            let table = &self.tables[c];
+            // fast path for singleton chunks (the paper's m=1 layout):
+            // for a fixed element the exponent is constant across
+            // planes, so ONE row — table[(exp<<1)|1] — serves every
+            // mantissa plane; iterate the significand's set bits.
+            if let [col] = chunk.as_slice() {
+                let h = x[*col];
+                debug_assert_eq!(h.sign(), 0, "float LUT path expects ReLU-nonneg input");
+                ctr.lut_evals += planes as u64;
+                let lo = SIG_BITS - planes;
+                let mut sig = (h.significand11() >> lo) << lo; // drop truncated planes
+                if sig == 0 {
+                    continue;
+                }
+                let row_idx = ((h.exponent() << 1) | 1) as usize;
+                let row = &table[row_idx * self.p..(row_idx + 1) * self.p];
+                while sig != 0 {
+                    let j = sig.trailing_zeros();
+                    for (a, &r) in acc.iter_mut().zip(row) {
+                        *a += r << j;
+                    }
+                    ctr.shift_adds += self.p as u64;
+                    sig &= sig - 1;
+                }
+                continue;
+            }
+            // drop the lowest (SIG_BITS - planes) planes if truncating
+            for j in (SIG_BITS - planes)..SIG_BITS {
+                let mut idx = 0usize;
+                // rows whose mantissa bits are ALL zero are identically
+                // zero (the exponent only scales a set bit), so track
+                // the bit mask and skip the gather+add entirely — in
+                // hardware this is the row-enable line; the lookup is
+                // still charged.
+                let mut bits = 0u32;
+                for (e, &col) in chunk.iter().enumerate() {
+                    let h = x[col];
+                    debug_assert_eq!(h.sign(), 0, "float LUT path expects ReLU-nonneg input");
+                    let bit = h.sig_bitplane(j);
+                    bits |= bit;
+                    let field = (bit | (h.exponent() << 1)) as usize;
+                    idx |= field << (e as u32 * per_elem_bits);
+                }
+                ctr.lut_evals += 1;
+                if bits == 0 {
+                    continue;
+                }
+                let row = &table[idx * self.p..(idx + 1) * self.p];
+                for (a, &r) in acc.iter_mut().zip(row) {
+                    *a += r << j;
+                }
+                ctr.shift_adds += self.p as u64;
+            }
+        }
+        acc
+    }
+
+    /// Convenience: quantize f32 inputs through binary16 then evaluate.
+    pub fn eval_f32(&self, x: &[f32], ctr: &mut Counters) -> Vec<i64> {
+        let h: Vec<F16> = x.iter().map(|&v| F16::from_f32(v.max(0.0))).collect();
+        self.eval_f16(&h, ctr)
+    }
+
+    /// Decode an accumulator value to f32.
+    pub fn acc_to_f32(a: i64) -> f32 {
+        (a as f64 * (-(FACC as f64)).exp2()) as f32
+    }
+
+    /// Size in bits at r_o-bit entries: Σ_i 2^(m_i(1+t)) · p · r_o.
+    /// With `halve_sign`, exploits the always-zero sign bit (not modeled
+    /// in the index here; accounting hook for the paper's halving).
+    pub fn size_bits(&self, r_o: u32) -> u64 {
+        self.tables
+            .iter()
+            .map(|t| t.len() as u64 * r_o as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn ref_affine(w: &[f32], b: &[f32], p: usize, q: usize, x: &[f32]) -> Vec<f32> {
+        (0..p)
+            .map(|o| b[o] + (0..q).map(|i| w[o * q + i] * x[i]).sum::<f32>())
+            .collect()
+    }
+
+    fn random_case(p: usize, q: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (
+            (0..p * q).map(|_| rng.normal() * 0.5).collect(),
+            (0..p).map(|_| rng.normal() * 0.1).collect(),
+            // mixed magnitudes to exercise the exponent path
+            (0..q).map(|_| rng.f32() * 8.0 + 0.001).collect(),
+        )
+    }
+
+    #[test]
+    fn matches_reference_on_f16_input() {
+        let (p, q) = (5, 10);
+        let (w, b, x) = random_case(p, q, 21);
+        let xq: Vec<f32> = x.iter().map(|&v| F16::fake_quant(v)).collect();
+        let lut = DenseFloatLut::build(
+            &w, &b, p, q, Partition::singletons(q), FloatLutConfig::default(),
+        )
+        .unwrap();
+        let mut ctr = Counters::default();
+        let acc = lut.eval_f32(&x, &mut ctr);
+        let want = ref_affine(&w, &b, p, q, &xq);
+        for (o, &a) in acc.iter().enumerate() {
+            let got = DenseFloatLut::acc_to_f32(a);
+            assert!(
+                (got - want[o]).abs() < 1e-3 * want[o].abs().max(1.0),
+                "{got} vs {}",
+                want[o]
+            );
+        }
+    }
+
+    #[test]
+    fn handles_subnormals_and_zero() {
+        let (p, q) = (2, 3);
+        let w = vec![1.0f32, 2.0, 3.0, -1.0, 0.5, 0.25];
+        let b = vec![0.0f32, 0.0];
+        let x = vec![0.0f32, 3.0e-8, 1.0]; // zero, f16-subnormal, one
+        let xq: Vec<f32> = x.iter().map(|&v| F16::fake_quant(v)).collect();
+        let lut = DenseFloatLut::build(
+            &w, &b, p, q, Partition::singletons(q), FloatLutConfig::default(),
+        )
+        .unwrap();
+        let mut ctr = Counters::default();
+        let acc = lut.eval_f32(&x, &mut ctr);
+        let want = ref_affine(&w, &b, p, q, &xq);
+        for (o, &a) in acc.iter().enumerate() {
+            let got = DenseFloatLut::acc_to_f32(a);
+            assert!((got - want[o]).abs() < 1e-6, "{got} vs {}", want[o]);
+        }
+    }
+
+    #[test]
+    fn lookups_are_planes_times_chunks() {
+        let (p, q) = (3, 6);
+        let (w, b, x) = random_case(p, q, 2);
+        let lut = DenseFloatLut::build(
+            &w, &b, p, q, Partition::singletons(q), FloatLutConfig::default(),
+        )
+        .unwrap();
+        let mut ctr = Counters::default();
+        let _ = lut.eval_f32(&x, &mut ctr);
+        assert_eq!(ctr.lut_evals, (SIG_BITS as u64) * q as u64);
+        assert_eq!(ctr.mults, 0);
+    }
+
+    #[test]
+    fn chunked_float_partition_matches_singletons() {
+        let (p, q) = (4, 8);
+        let (w, b, x) = random_case(p, q, 13);
+        let single = DenseFloatLut::build(
+            &w, &b, p, q, Partition::singletons(q), FloatLutConfig::default(),
+        )
+        .unwrap();
+        let pair = DenseFloatLut::build(
+            &w, &b, p, q, Partition::contiguous(q, 2), FloatLutConfig::default(),
+        )
+        .unwrap();
+        let mut c1 = Counters::default();
+        let mut c2 = Counters::default();
+        let a1 = single.eval_f32(&x, &mut c1);
+        let a2 = pair.eval_f32(&x, &mut c2);
+        for (u, v) in a1.iter().zip(&a2) {
+            let (fu, fv) = (DenseFloatLut::acc_to_f32(*u), DenseFloatLut::acc_to_f32(*v));
+            assert!((fu - fv).abs() < 1e-4 * fu.abs().max(1.0));
+        }
+        assert_eq!(c2.lut_evals * 2, c1.lut_evals);
+    }
+
+    #[test]
+    fn truncating_planes_degrades_gracefully() {
+        let (p, q) = (4, 12);
+        let (w, b, x) = random_case(p, q, 31);
+        let full = DenseFloatLut::build(
+            &w, &b, p, q, Partition::singletons(q), FloatLutConfig { planes: 11 },
+        )
+        .unwrap();
+        let trunc = DenseFloatLut::build(
+            &w, &b, p, q, Partition::singletons(q), FloatLutConfig { planes: 6 },
+        )
+        .unwrap();
+        let mut c = Counters::default();
+        let af: Vec<f32> =
+            full.eval_f32(&x, &mut c).iter().map(|&a| DenseFloatLut::acc_to_f32(a)).collect();
+        let at: Vec<f32> =
+            trunc.eval_f32(&x, &mut c).iter().map(|&a| DenseFloatLut::acc_to_f32(a)).collect();
+        // truncation error is bounded by dropped-plane mass: 2^-5 relative-ish
+        for (f, t) in af.iter().zip(&at) {
+            assert!((f - t).abs() < 0.3 * f.abs().max(1.0), "{f} vs {t}");
+        }
+    }
+
+    #[test]
+    fn size_formula_includes_exponent() {
+        let (p, q) = (10, 4);
+        let w = vec![0.0f32; p * q];
+        let b = vec![0.0f32; p];
+        let lut = DenseFloatLut::build(
+            &w, &b, p, q, Partition::singletons(q), FloatLutConfig::default(),
+        )
+        .unwrap();
+        // q tables of 2^(1+5) rows x 10 entries x 16 bits
+        assert_eq!(lut.size_bits(16), 4 * 64 * 10 * 16);
+    }
+}

@@ -1,0 +1,220 @@
+//! The LUT framework (paper §"LUT framework and notation" and
+//! §"Computing the affine operation Wx + b").
+//!
+//! A LUT is a function `I -> O` realised as a memory array indexed by the
+//! β(I) bits of the input. The paper's core trick is *linearity*: split
+//! the input vector `x` into `k` chunks `x_i`, build one table per chunk
+//! holding `W x_i + b/k`, and sum the table outputs — `k` lookups and
+//! `k-1` vector adds replace all `p·q` multiplies.
+//!
+//! Submodules:
+//! * [`dense`]      — whole-code indexing (each chunk's full bit string).
+//! * [`bitplane`]   — fixed-point bitplane decomposition with LUT reuse
+//!                    across planes (§Fixed point formats).
+//! * [`floatplane`] — binary16 mantissa-bitplane + full-exponent
+//!                    indexing (§Floating point formats, Fig. 1).
+//! * [`signed`]     — two's-complement MSB handling (§Dealing with
+//!                    signed numbers, Fig. 3).
+//! * [`conv`]       — convolutional LUTs with one shared table shifted
+//!                    across space (§Convolutional layers, Fig. 2).
+//! * [`cost`]       — the paper's size/op formulas, used by the planner.
+
+pub mod dense;
+pub mod bitplane;
+pub mod floatplane;
+pub mod signed;
+pub mod conv;
+pub mod convfloat;
+pub mod cost;
+pub mod scalar;
+
+
+
+/// Fixed-point scale used for integer table entries: entries are stored
+/// as `round(value * 2^ACC_FRAC)` in `i64`, accumulated with adds and
+/// shifts only, and rescaled *once* at the layer boundary (the rescale
+/// is folded into the next layer's quantizer, so the data path itself
+/// stays multiplier-less — see `engine::counters` which proves it).
+pub const ACC_FRAC: u32 = 32;
+
+/// Maximum bytes a single materialised table may occupy. Configurations
+/// beyond this are planner-only (the paper also reports configurations —
+/// e.g. 32.7 GiB — it calls "not practical in current implementations").
+pub const MAX_TABLE_BYTES: usize = 1 << 30;
+
+/// Error type for LUT construction.
+#[derive(Debug)]
+pub enum LutError {
+    /// Table would exceed [`MAX_TABLE_BYTES`].
+    TooLarge { rows: u128, cols: usize },
+    /// Partition does not cover the input exactly once.
+    BadPartition(String),
+}
+
+impl std::fmt::Display for LutError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LutError::TooLarge { rows, cols } => {
+                write!(f, "LUT too large to materialise: {rows} rows x {cols} cols")
+            }
+            LutError::BadPartition(s) => write!(f, "bad partition: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for LutError {}
+
+/// A partition of input indices `0..q` into disjoint chunks (the paper's
+/// `x = Σ_i x_i` segmentation; footnote 2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    pub q: usize,
+    pub chunks: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    /// Contiguous chunks of size `m` (last chunk may be smaller).
+    pub fn contiguous(q: usize, m: usize) -> Self {
+        assert!(m >= 1);
+        let chunks = (0..q)
+            .collect::<Vec<_>>()
+            .chunks(m)
+            .map(|c| c.to_vec())
+            .collect();
+        Partition { q, chunks }
+    }
+
+    /// One chunk per element (the paper's `k = q, m_i = 1` extreme).
+    pub fn singletons(q: usize) -> Self {
+        Partition::contiguous(q, 1)
+    }
+
+    /// A single chunk covering everything (`k = 1`).
+    pub fn whole(q: usize) -> Self {
+        Partition { q, chunks: vec![(0..q).collect()] }
+    }
+
+    /// Square contiguous `m x m` pixel blocks of an `h x w` image,
+    /// row-major over blocks — the layout the paper recommends for
+    /// convolutional LUTs ("it is better to have the partition be in
+    /// square contiguous blocks"). `h` and `w` must be divisible by `m`.
+    pub fn square_blocks(h: usize, w: usize, m: usize) -> Self {
+        assert!(h % m == 0 && w % m == 0, "{h}x{w} not divisible by {m}");
+        let mut chunks = Vec::new();
+        for by in 0..h / m {
+            for bx in 0..w / m {
+                let mut c = Vec::with_capacity(m * m);
+                for dy in 0..m {
+                    for dx in 0..m {
+                        c.push((by * m + dy) * w + (bx * m + dx));
+                    }
+                }
+                chunks.push(c);
+            }
+        }
+        Partition { q: h * w, chunks }
+    }
+
+    /// Number of chunks k.
+    pub fn k(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Largest chunk size.
+    pub fn max_chunk(&self) -> usize {
+        self.chunks.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Validate: every index 0..q appears exactly once.
+    pub fn validate(&self) -> Result<(), LutError> {
+        let mut seen = vec![false; self.q];
+        for c in &self.chunks {
+            for &i in c {
+                if i >= self.q {
+                    return Err(LutError::BadPartition(format!("index {i} >= q {}", self.q)));
+                }
+                if seen[i] {
+                    return Err(LutError::BadPartition(format!("index {i} duplicated")));
+                }
+                seen[i] = true;
+            }
+        }
+        if let Some(missing) = seen.iter().position(|&s| !s) {
+            return Err(LutError::BadPartition(format!("index {missing} uncovered")));
+        }
+        Ok(())
+    }
+}
+
+/// Convert an f32 to the shared fixed accumulator scale.
+#[inline]
+pub(crate) fn to_acc(v: f64) -> i64 {
+    (v * (1u64 << ACC_FRAC) as f64).round() as i64
+}
+
+/// Convert an accumulator value back to f32 (layer boundary / display
+/// only — never on the multiplier-less data path).
+#[inline]
+pub fn from_acc(v: i64, extra_shift: i32) -> f32 {
+    // value = v * 2^-(ACC_FRAC + extra_shift)
+    (v as f64 * (-(ACC_FRAC as i32 + extra_shift) as f64).exp2()) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_partition_covers() {
+        let p = Partition::contiguous(10, 3);
+        assert_eq!(p.k(), 4);
+        assert_eq!(p.chunks[3], vec![9]);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn singletons_and_whole() {
+        assert_eq!(Partition::singletons(5).k(), 5);
+        assert_eq!(Partition::whole(5).k(), 1);
+        Partition::singletons(5).validate().unwrap();
+        Partition::whole(5).validate().unwrap();
+    }
+
+    #[test]
+    fn square_blocks_cover_image() {
+        let p = Partition::square_blocks(4, 6, 2);
+        assert_eq!(p.k(), 6);
+        assert!(p.chunks.iter().all(|c| c.len() == 4));
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn square_blocks_first_block_indices() {
+        let p = Partition::square_blocks(4, 4, 2);
+        assert_eq!(p.chunks[0], vec![0, 1, 4, 5]);
+        assert_eq!(p.chunks[1], vec![2, 3, 6, 7]);
+    }
+
+    #[test]
+    fn validate_catches_duplicates_and_gaps() {
+        let dup = Partition { q: 3, chunks: vec![vec![0, 1], vec![1, 2]] };
+        assert!(dup.validate().is_err());
+        let gap = Partition { q: 3, chunks: vec![vec![0], vec![2]] };
+        assert!(gap.validate().is_err());
+    }
+
+    #[test]
+    fn acc_roundtrip() {
+        for v in [0.0, 1.0, -0.5, 0.123456, 100.25] {
+            let a = to_acc(v);
+            let back = from_acc(a, 0);
+            assert!((back - v as f32).abs() < 1e-6, "{v}");
+        }
+    }
+
+    #[test]
+    fn from_acc_applies_shift() {
+        let a = to_acc(8.0);
+        assert!((from_acc(a, 3) - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,132 @@
+//! Scalar-nonlinearity LUTs (paper §Computing a nonlinear function f
+//! with LUT): a binary16 -> binary16 table is 2^16 · 16 bits = 128 KiB
+//! ("reducing the input and output to a 16-bit half-precision float
+//! reduces the LUT table size to 128 Kibibytes") and replaces sigmoids /
+//! tanh / any scalar activation with a single memory read.
+//!
+//! ReLU deliberately has no table — the paper implements it as a
+//! compare-and-branch, and so does the engine.
+
+use crate::engine::counters::Counters;
+use crate::lut::cost::scalar_fn_size_bits;
+use crate::quant::f16::F16;
+
+/// A full binary16 -> binary16 scalar function table.
+pub struct ScalarLut {
+    /// Human-readable function name (metrics/debug).
+    pub name: &'static str,
+    /// table[bits] = f16 output bits for f16 input pattern `bits`.
+    table: Vec<u16>,
+}
+
+impl ScalarLut {
+    /// Tabulate an arbitrary scalar function over every f16 input
+    /// pattern (full precision inside — "the computations needed to
+    /// produce the elements in O ... can all be done in full
+    /// precision"). Non-finite inputs map through the function of their
+    /// decoded value; NaN-in propagates NaN-out.
+    pub fn tabulate(name: &'static str, f: impl Fn(f32) -> f32) -> ScalarLut {
+        let mut table = Vec::with_capacity(1 << 16);
+        for bits in 0..=u16::MAX {
+            let x = F16(bits).to_f32();
+            table.push(F16::from_f32(f(x)).0);
+        }
+        ScalarLut { name, table }
+    }
+
+    /// The logistic sigmoid 1/(1+e^-x).
+    pub fn sigmoid() -> ScalarLut {
+        ScalarLut::tabulate("sigmoid", |x| 1.0 / (1.0 + (-x).exp()))
+    }
+
+    /// tanh.
+    pub fn tanh() -> ScalarLut {
+        ScalarLut::tabulate("tanh", f32::tanh)
+    }
+
+    /// One lookup per element — no arithmetic at all.
+    #[inline]
+    pub fn eval(&self, x: F16, ctr: &mut Counters) -> F16 {
+        ctr.lut_evals += 1;
+        F16(self.table[x.0 as usize])
+    }
+
+    /// Map a whole vector in place.
+    pub fn eval_vec(&self, xs: &mut [F16], ctr: &mut Counters) {
+        for x in xs.iter_mut() {
+            *x = F16(self.table[x.0 as usize]);
+        }
+        ctr.lut_evals += xs.len() as u64;
+    }
+
+    /// Size in bits: 2^16 · 16 — the paper's 128 KiB.
+    pub fn size_bits(&self) -> u64 {
+        scalar_fn_size_bits(16, 16)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_is_the_papers_128_kib() {
+        let s = ScalarLut::sigmoid();
+        assert_eq!(s.size_bits() / 8 / 1024, 128);
+    }
+
+    #[test]
+    fn sigmoid_matches_function_to_f16_precision() {
+        let s = ScalarLut::sigmoid();
+        let mut ctr = Counters::default();
+        for x in [-8.0f32, -2.0, -0.5, 0.0, 0.5, 2.0, 8.0] {
+            let got = s.eval(F16::from_f32(x), &mut ctr).to_f32();
+            let want = 1.0 / (1.0 + (-F16::fake_quant(x)).exp());
+            assert!(
+                (got - want).abs() <= 2.0 * (want * 2.0f32.powi(-11)).abs() + 1e-4,
+                "x={x}: {got} vs {want}"
+            );
+        }
+        assert_eq!(ctr.mults, 0);
+        assert_eq!(ctr.lut_evals, 7);
+    }
+
+    #[test]
+    fn tanh_is_odd_through_the_table() {
+        let t = ScalarLut::tanh();
+        let mut ctr = Counters::default();
+        for x in [0.25f32, 1.0, 3.0] {
+            let pos = t.eval(F16::from_f32(x), &mut ctr).to_f32();
+            let neg = t.eval(F16::from_f32(-x), &mut ctr).to_f32();
+            assert!((pos + neg).abs() < 1e-3, "tanh not odd at {x}");
+        }
+    }
+
+    #[test]
+    fn eval_vec_counts_and_transforms() {
+        let s = ScalarLut::sigmoid();
+        let mut v: Vec<F16> = vec![F16::from_f32(0.0); 10];
+        let mut ctr = Counters::default();
+        s.eval_vec(&mut v, &mut ctr);
+        assert_eq!(ctr.lut_evals, 10);
+        for h in v {
+            assert!((h.to_f32() - 0.5).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn sigmoid_saturates_cleanly() {
+        let s = ScalarLut::sigmoid();
+        let mut ctr = Counters::default();
+        assert_eq!(s.eval(F16::from_f32(30.0), &mut ctr).to_f32(), 1.0);
+        assert_eq!(s.eval(F16::from_f32(-30.0), &mut ctr).to_f32(), 0.0);
+    }
+
+    #[test]
+    fn nan_propagates() {
+        let s = ScalarLut::tabulate("id", |x| x);
+        let mut ctr = Counters::default();
+        let nan = F16(0x7C01);
+        assert!(s.eval(nan, &mut ctr).to_f32().is_nan());
+    }
+}

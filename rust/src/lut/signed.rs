@@ -1,0 +1,163 @@
+//! Signed-input handling (paper §Dealing with signed numbers, Fig. 3).
+//!
+//! A two's-complement code `x` with MSB `s` represents `x_b - s·2^(n-1)`
+//! where `x_b` is the magnitude bitstring. The paper's architecture
+//! applies the *same* LUTs to the magnitude bitplanes and once more to
+//! the MSB plane, shifting the MSB result left by `n-1` bits and
+//! *subtracting* it. This wrapper implements exactly that on top of the
+//! unsigned [`DenseBitplaneLut`].
+
+use super::bitplane::DenseBitplaneLut;
+use super::{LutError, Partition};
+use crate::engine::counters::Counters;
+use crate::quant::{FixedFormat, SignedFixedFormat};
+
+/// Signed bitplane LUT: reuses one unsigned table bank for both the
+/// magnitude planes and the sign plane.
+#[derive(Debug)]
+pub struct SignedBitplaneLut {
+    pub fmt: SignedFixedFormat,
+    inner: DenseBitplaneLut,
+}
+
+impl SignedBitplaneLut {
+    pub fn build(
+        w: &[f32],
+        b: &[f32],
+        p: usize,
+        q: usize,
+        partition: Partition,
+        fmt: SignedFixedFormat,
+    ) -> Result<Self, LutError> {
+        // The inner bank is built for an unsigned (n-1)-bit magnitude
+        // format over [0,1): code LSB = 2^-(n-1).
+        let inner = DenseBitplaneLut::build(
+            w,
+            b,
+            p,
+            q,
+            partition,
+            FixedFormat::new(fmt.bits - 1),
+        )?;
+        Ok(SignedBitplaneLut { fmt, inner })
+    }
+
+    /// Evaluate `Wx + b` for signed values in [-1, 1).
+    pub fn eval_f32(&self, x: &[f32], ctr: &mut Counters) -> Vec<i64> {
+        let codes: Vec<u32> = x.iter().map(|&v| self.fmt.quantize(v)).collect();
+        self.eval_codes(&codes, ctr)
+    }
+
+    /// Evaluate from two's-complement codes.
+    pub fn eval_codes(&self, codes: &[u32], ctr: &mut Counters) -> Vec<i64> {
+        let n = self.fmt.bits;
+        // magnitude part: planes 0..n-1 via the unsigned bank
+        let mag_codes: Vec<u32> =
+            codes.iter().map(|&c| self.fmt.magnitude_bits(c)).collect();
+        let mut acc = self.inner.eval_codes(&mag_codes, ctr);
+
+        // sign part: feed the MSB plane through the SAME tables (the
+        // paper's reuse), shift by n-1, subtract. We reuse eval_codes
+        // with the MSB placed at plane 0, then shift the delta.
+        let msb_codes: Vec<u32> = codes.iter().map(|&c| self.fmt.msb(c)).collect();
+        // Build a zero-bias evaluation: eval includes the bias, so
+        // subtract it back out before shifting.
+        let msb_acc = self.inner.eval_codes(&msb_codes, ctr);
+        let zero_acc = self.inner.eval_codes(&vec![0; codes.len()], ctr);
+        for ((a, m), z) in acc.iter_mut().zip(&msb_acc).zip(&zero_acc) {
+            let contrib = m - z; // pure W·msb at plane 0 scale
+            *a -= contrib << (n - 1);
+            ctr.shift_adds += 1;
+        }
+        acc
+    }
+
+    pub fn size_bits(&self, r_o: u32) -> u64 {
+        self.inner.size_bits(r_o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::from_acc;
+    use crate::util::Rng;
+
+    fn ref_affine(w: &[f32], b: &[f32], p: usize, q: usize, x: &[f32]) -> Vec<f32> {
+        (0..p)
+            .map(|o| b[o] + (0..q).map(|i| w[o * q + i] * x[i]).sum::<f32>())
+            .collect()
+    }
+
+    #[test]
+    fn matches_reference_on_signed_input() {
+        let (p, q) = (5, 10);
+        let mut rng = Rng::new(17);
+        let w: Vec<f32> = (0..p * q).map(|_| rng.normal() * 0.5).collect();
+        let b: Vec<f32> = (0..p).map(|_| rng.normal() * 0.1).collect();
+        let x: Vec<f32> = (0..q).map(|_| rng.range(-1.0, 1.0)).collect();
+        let fmt = SignedFixedFormat::new(6);
+        let xq: Vec<f32> = x.iter().map(|&v| fmt.dequantize(fmt.quantize(v))).collect();
+        let lut =
+            SignedBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, 2), fmt)
+                .unwrap();
+        let mut ctr = Counters::default();
+        let acc = lut.eval_f32(&x, &mut ctr);
+        let want = ref_affine(&w, &b, p, q, &xq);
+        for (o, &a) in acc.iter().enumerate() {
+            assert!(
+                (from_acc(a, 0) - want[o]).abs() < 1e-4,
+                "{} vs {}",
+                from_acc(a, 0),
+                want[o]
+            );
+        }
+        assert_eq!(ctr.mults, 0);
+    }
+
+    #[test]
+    fn negative_only_input() {
+        let (p, q) = (2, 4);
+        let w = vec![1.0f32; p * q];
+        let b = vec![0.0f32; p];
+        let fmt = SignedFixedFormat::new(5);
+        let x = vec![-0.5f32; q];
+        let lut =
+            SignedBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, 2), fmt)
+                .unwrap();
+        let mut ctr = Counters::default();
+        let acc = lut.eval_f32(&x, &mut ctr);
+        for &a in &acc {
+            assert!((from_acc(a, 0) + 2.0).abs() < 1e-4, "{}", from_acc(a, 0));
+        }
+    }
+
+    #[test]
+    fn nonnegative_input_matches_unsigned_bank() {
+        // with MSB=0 everywhere the signed wrapper reduces to unsigned
+        let (p, q) = (3, 6);
+        let mut rng = Rng::new(23);
+        let w: Vec<f32> = (0..p * q).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..p).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..q).map(|_| rng.f32() * 0.49).collect();
+        let fmt = SignedFixedFormat::new(6);
+        let lut =
+            SignedBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, 3), fmt)
+                .unwrap();
+        let mut ctr = Counters::default();
+        let acc = lut.eval_f32(&x, &mut ctr);
+        let xq: Vec<f32> = x.iter().map(|&v| fmt.dequantize(fmt.quantize(v))).collect();
+        let want = ref_affine(&w, &b, p, q, &xq);
+        for (o, &a) in acc.iter().enumerate() {
+            assert!((from_acc(a, 0) - want[o]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn extremes_quantize_correctly() {
+        let fmt = SignedFixedFormat::new(4);
+        assert_eq!(fmt.dequantize(fmt.quantize(-1.0)), -1.0);
+        let near_one = fmt.dequantize(fmt.quantize(0.999));
+        assert!((near_one - 0.875).abs() < 1e-6); // 7/8 is the max code
+    }
+}

@@ -1,0 +1,381 @@
+//! `tablenet` — CLI launcher for the TableNet reproduction.
+//!
+//! Subcommands:
+//!   gen-data          generate + cache the synthetic corpora (IDX files)
+//!   train             in-Rust SGD training (linear / mlp)
+//!   eval              accuracy: LUT engine vs reference, with op counters
+//!   sweep-bits        Fig 4 / Fig 6 accuracy-vs-input-bits sweep
+//!   sweep-partitions  Fig 5 / 7 / 8 size-vs-ops tradeoff tables
+//!   plan              planner tables + paper in-text config check
+//!   serve             run the serving coordinator under synthetic load
+//!   ref-check         PJRT reference artifact vs in-Rust forward
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use tablenet::config::cli::Args;
+use tablenet::config::ServeConfig;
+use tablenet::data::synth::Kind;
+use tablenet::data::{load_or_generate, Dataset};
+use tablenet::engine::plan::EnginePlan;
+use tablenet::engine::LutModel;
+use tablenet::harness;
+use tablenet::nn::{weights, Arch, Model};
+use tablenet::planner;
+use tablenet::tensor::Tensor;
+use tablenet::train::{train_dense, TrainConfig};
+use tablenet::util::{fmt_bits, fmt_ops};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "gen-data" => gen_data(args),
+        "train" => train(args),
+        "eval" => eval(args),
+        "sweep-bits" => sweep_bits(args),
+        "sweep-partitions" => sweep_partitions(args),
+        "plan" => plan(args),
+        "serve" => serve(args),
+        "ref-check" => ref_check(args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "tablenet — multiplier-less LUT inference (TableNet reproduction)\n\n\
+         usage: tablenet <cmd> [--flags]\n\n\
+         commands:\n\
+         \x20 gen-data         --dir data/synth --train 4000 --test 1000 --seed 7\n\
+         \x20 train            --arch linear|mlp --dataset mnist|fashion --steps N --out w.bin\n\
+         \x20 eval             --arch A --weights w.bin --dataset D [--plan plan.json] [--n 500]\n\
+         \x20 sweep-bits       --arch linear --weights w.bin --dataset D [--csv-out f.csv]\n\
+         \x20 sweep-partitions --arch linear|mlp|cnn [--weights w.bin --dataset D]\n\
+         \x20 plan             [--arch A]\n\
+         \x20 serve            --arch A --weights w.bin --requests 2000 [--max-batch 32]\n\
+         \x20 ref-check        --arch A --weights w.bin --hlo artifacts/linear_ref_b1.hlo.txt"
+    );
+}
+
+fn data_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("dir", "data/synth"))
+}
+
+fn dataset(args: &Args) -> Result<Dataset> {
+    let kind = Kind::parse(args.get_or("dataset", "mnist"))
+        .ok_or_else(|| anyhow!("unknown dataset (mnist|fashion)"))?;
+    let n_train = args.get_usize("train", 4000);
+    let n_test = args.get_usize("test", 1000);
+    load_or_generate(&data_dir(args), kind, n_train, n_test, args.get_u64("seed", 7))
+}
+
+fn arch(args: &Args) -> Result<Arch> {
+    Arch::parse(args.get_or("arch", "linear"))
+        .ok_or_else(|| anyhow!("unknown arch (linear|mlp|cnn)"))
+}
+
+fn load_model(args: &Args) -> Result<Model> {
+    let a = arch(args)?;
+    let path = PathBuf::from(
+        args.get("weights")
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("artifacts/weights_{}.bin", a.name())),
+    );
+    weights::load_model(a, &path).with_context(|| {
+        format!(
+            "loading {} (run `make artifacts` or `tablenet train`)",
+            path.display()
+        )
+    })
+}
+
+fn plan_from_args(args: &Args, a: Arch) -> Result<EnginePlan> {
+    match args.get("plan") {
+        None => Ok(EnginePlan::default_for(a)),
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            let j = tablenet::config::json::Json::parse(&text)
+                .map_err(|e| anyhow!("{path}: {e}"))?;
+            tablenet::config::plan_from_json(&j)
+        }
+    }
+}
+
+fn gen_data(args: &Args) -> Result<()> {
+    let dir = data_dir(args);
+    let n_train = args.get_usize("train", 4000);
+    let n_test = args.get_usize("test", 1000);
+    let seed = args.get_u64("seed", 7);
+    for kind in [Kind::Digits, Kind::Fashion] {
+        let ds = load_or_generate(&dir, kind, n_train, n_test, seed)?;
+        println!(
+            "{}: train {} / test {} samples in {}",
+            kind.name(),
+            ds.train.len(),
+            ds.test.len(),
+            dir.display()
+        );
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let a = arch(args)?;
+    let ds = dataset(args)?;
+    let widths: Vec<usize> = match a {
+        Arch::Linear => vec![784, 10],
+        Arch::Mlp => vec![784, 1024, 512, 10],
+        Arch::Cnn => bail!("CNN training runs in JAX: `make artifacts`"),
+    };
+    let cfg = TrainConfig {
+        steps: args.get_usize("steps", if a == Arch::Linear { 3000 } else { 800 }),
+        lr: args.get_f64("lr", 0.2) as f32,
+        batch: args.get_usize("batch", 100),
+        seed: args.get_u64("seed", 0x7AB1E7),
+        input_bits: args.get("input-bits").and_then(|v| v.parse().ok()),
+        weight_decay: args.get_f64("weight-decay", 1e-4) as f32,
+        log_every: args.get_usize("log-every", 200),
+    };
+    eprintln!("training {} on {} ({} steps)...", a.name(), ds.kind.name(), cfg.steps);
+    let model = train_dense(&ds.train, &widths, &cfg);
+    let x = Tensor::new(&[ds.test.len(), 784], ds.test.images.clone());
+    println!("test accuracy: {:.2}%", model.accuracy(&x, &ds.test.labels) * 100.0);
+    if let Some(out) = args.get("out") {
+        let mut map = weights::WeightMap::new();
+        for (i, layer) in model
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                tablenet::nn::Layer::Dense { w, b } => Some((w, b)),
+                _ => None,
+            })
+            .enumerate()
+        {
+            map.insert(format!("fc{}.w", i + 1), layer.0.clone());
+            map.insert(format!("fc{}.b", i + 1), layer.1.clone());
+        }
+        weights::save(Path::new(out), &map)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let ds = dataset(args)?;
+    let n = args.get_usize("n", 500);
+    let test = ds.test.head(n);
+    let plan = plan_from_args(args, model.arch)?;
+
+    let flat = match model.arch {
+        Arch::Cnn => Tensor::new(&[test.len(), 28, 28, 1], test.images.clone()),
+        _ => Tensor::new(&[test.len(), 784], test.images.clone()),
+    };
+    let ref_acc = model.accuracy(&flat, &test.labels);
+    println!("reference (f32, multiply-full): {:.2}%", ref_acc * 100.0);
+
+    let lut = LutModel::compile(&model, &plan)
+        .map_err(|e| anyhow!("plan not materialisable: {e}"))?;
+    let (acc, ctr) = lut.accuracy(&test.images, 784, &test.labels);
+    ctr.assert_multiplier_less();
+    println!(
+        "LUT engine: {:.2}%  | size {}  | per-inference {}",
+        acc * 100.0,
+        fmt_bits(lut.size_bits()),
+        ctr
+    );
+    Ok(())
+}
+
+fn sweep_bits(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    if model.arch != Arch::Linear {
+        bail!("sweep-bits reproduces Figs 4/6 (linear classifier)");
+    }
+    let ds = dataset(args)?;
+    let test = ds.test.head(args.get_usize("n", 1000));
+    let rows = harness::bits_sweep(&model, &test, &[1, 2, 3, 4, 5, 6, 7, 8]);
+    harness::print_bits_sweep(
+        &format!("Fig 4/6: accuracy vs input bits ({})", ds.kind.name()),
+        &rows,
+    );
+    if let Some(out) = args.get("csv-out") {
+        std::fs::write(out, harness::bits_csv(&rows))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn sweep_partitions(args: &Args) -> Result<()> {
+    let a = arch(args)?;
+    let pts = match a {
+        Arch::Linear => planner::sweep::linear_tradeoff(args.get_u32("bits", 3)),
+        Arch::Mlp => planner::sweep::mlp_tradeoff(),
+        Arch::Cnn => planner::sweep::cnn_tradeoff(),
+    };
+    // measure on the engine when weights are available
+    let mut rows = if let Ok(model) = load_model(args) {
+        let ds = dataset(args)?;
+        let test = ds.test.head(args.get_usize("n", 200));
+        harness::tradeoff_rows(&model, &test, pts, args.get_usize("measure", 4))
+    } else {
+        pts.into_iter()
+            .map(|point| harness::TradeoffRow {
+                point,
+                measured_acc: None,
+                measured_evals: None,
+                measured_ops: None,
+            })
+            .collect()
+    };
+    harness::print_tradeoff(&format!("Fig 5/7/8 tradeoff: {}", a.name()), &mut rows);
+    if let Some(out) = args.get("csv-out") {
+        std::fs::write(out, harness::tradeoff_csv(&rows))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn plan(args: &Args) -> Result<()> {
+    println!("== paper in-text configuration check ==");
+    println!("{:<30} {:>16} {:>16}", "quantity", "paper", "computed");
+    for (name, paper, computed) in harness::intext_report() {
+        println!("{name:<30} {paper:>16} {computed:>16}");
+    }
+    if let Some(a) = args.get("arch").and_then(Arch::parse) {
+        let geoms = planner::arch_geometry(a);
+        let pt = planner::evaluate_plan(&geoms, &EnginePlan::default_for(a));
+        println!(
+            "\ndefault plan for {}: {} LUTs, {}, {} adds, ref {} MACs",
+            a.name(),
+            pt.num_luts,
+            fmt_bits(pt.size_bits),
+            fmt_ops(pt.ops),
+            fmt_ops(pt.ref_macs)
+        );
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let plan = plan_from_args(args, model.arch)?;
+    let lut = LutModel::compile(&model, &plan)
+        .map_err(|e| anyhow!("plan not materialisable: {e}"))?;
+    let cfg = ServeConfig::default().override_with(args);
+    cfg.validate()?;
+    let ds = dataset(args)?;
+    let n_requests = args.get_usize("requests", 2000);
+    let clients = args.get_usize("clients", 4).max(1);
+    println!(
+        "serving {} on the LUT engine ({}) with {:?}",
+        model.arch.name(),
+        fmt_bits(lut.size_bits()),
+        cfg
+    );
+
+    let coord = tablenet::coordinator::Coordinator::start(Arc::new(lut), &cfg);
+    let test = Arc::new(ds.test);
+    let start = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let client = coord.client();
+        let test = test.clone();
+        let per_client = n_requests / clients;
+        joins.push(std::thread::spawn(move || {
+            let mut correct = 0usize;
+            let mut served = 0usize;
+            for i in 0..per_client {
+                let idx = (c * per_client + i) % test.len();
+                match client.infer_blocking(test.image(idx).to_vec()) {
+                    Ok(resp) => {
+                        served += 1;
+                        if resp.class == test.labels[idx] {
+                            correct += 1;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            (served, correct)
+        }));
+    }
+    let mut served = 0;
+    let mut correct = 0;
+    for j in joins {
+        let (s, c) = j.join().unwrap();
+        served += s;
+        correct += c;
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let snap = coord.shutdown();
+    println!("{snap}");
+    println!(
+        "served {served} requests in {elapsed:.2}s ({:.1} req/s), accuracy {:.2}%",
+        served as f64 / elapsed,
+        100.0 * correct as f64 / served.max(1) as f64
+    );
+    Ok(())
+}
+
+fn ref_check(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let a = model.arch;
+    let batch = args.get_usize("batch", 1);
+    let hlo = PathBuf::from(args.get("hlo").map(str::to_string).unwrap_or_else(|| {
+        tablenet::runtime::ref_hlo_path(Path::new("artifacts"), a, batch)
+            .display()
+            .to_string()
+    }));
+    let features: usize = model.input_shape.iter().product();
+    let pjrt = tablenet::runtime::PjrtModel::load(&hlo, batch, features, 10)?;
+    println!("PJRT platform: {}", pjrt.platform());
+    let ds = dataset(args)?;
+    let n = args.get_usize("n", 32);
+    let mut max_diff = 0f32;
+    let mut agree = 0usize;
+    for i in 0..n {
+        let img = ds.test.image(i).to_vec();
+        let pj = pjrt.infer_padded(&[img.clone()])?;
+        let shape: Vec<usize> = std::iter::once(1usize)
+            .chain(model.input_shape.iter().copied())
+            .collect();
+        let rust_out = model.forward(&Tensor::new(&shape, img));
+        for (x, y) in pj[0].iter().zip(rust_out.data()) {
+            max_diff = max_diff.max((x - y).abs());
+        }
+        let pj_class = pj[0]
+            .iter()
+            .enumerate()
+            .max_by(|u, v| u.1.partial_cmp(v.1).unwrap())
+            .unwrap()
+            .0;
+        if pj_class == rust_out.argmax_rows()[0] {
+            agree += 1;
+        }
+    }
+    println!(
+        "PJRT vs rust forward over {n} samples: max |Δlogit| = {max_diff:.2e}, argmax agreement {agree}/{n}"
+    );
+    anyhow::ensure!(agree == n, "prediction mismatch between PJRT and rust reference");
+    Ok(())
+}

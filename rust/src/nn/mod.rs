@@ -1,0 +1,305 @@
+//! Reference (multiplier-full) neural networks: the three architectures
+//! the paper evaluates — linear classifier, 3-layer MLP, and a
+//! LeNet-style CNN — plus the weights-file interchange with the JAX
+//! training path (`python/compile/train.py`).
+//!
+//! This is the paper's comparison baseline: full-precision forward with
+//! `p·q` multiply-and-adds per dense layer (counted by `tensor::ops`).
+
+pub mod weights;
+
+use crate::quant::FixedFormat;
+use crate::tensor::conv::{conv2d_same, flatten, maxpool2};
+use crate::tensor::ops::{add_bias, matmul, relu, transpose};
+use crate::tensor::Tensor;
+
+
+/// The three paper architectures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    /// Single dense layer 784 x 10.
+    Linear,
+    /// Dense 784x1024 - ReLU - 1024x512 - ReLU - 512x10.
+    Mlp,
+    /// LeNet: conv5x5x32 - pool - conv5x5x64 - pool - fc3136x1024 - fc1024x10.
+    Cnn,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Option<Arch> {
+        match s.to_ascii_lowercase().as_str() {
+            "linear" => Some(Arch::Linear),
+            "mlp" => Some(Arch::Mlp),
+            "cnn" | "lenet" => Some(Arch::Cnn),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::Linear => "linear",
+            Arch::Mlp => "mlp",
+            Arch::Cnn => "cnn",
+        }
+    }
+}
+
+/// A layer of the reference network.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    /// Fully connected: `w` is `[p, q]` row-major (output-major, same
+    /// orientation the LUT builder consumes), `b` is `[p]`.
+    Dense { w: Tensor, b: Tensor },
+    /// 'same' conv: `filter` is `[fh, fw, cin, cout]`, `b` is `[cout]`.
+    Conv2d { filter: Tensor, b: Tensor },
+    Relu,
+    /// Logistic sigmoid — implemented by the engine as a 128 KiB
+    /// f16->f16 scalar LUT (paper §Computing a nonlinear function f).
+    Sigmoid,
+    MaxPool2,
+    Flatten,
+    /// Fake-quantize activations to a fixed-point format (the paper
+    /// inserts these "before the input to a CNN or dense linear layer").
+    QuantFixed { fmt: FixedFormat },
+    /// Fake-quantize activations through IEEE binary16.
+    QuantF16,
+}
+
+/// A feed-forward model: the paper's Eq. (1).
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub arch: Arch,
+    pub layers: Vec<Layer>,
+    /// Input shape excluding batch: [784] or [28, 28, 1].
+    pub input_shape: Vec<usize>,
+}
+
+impl Model {
+    /// Forward a batch. Input: `[batch, ...input_shape]`. Output logits
+    /// `[batch, 10]`.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut cur = x.clone();
+        for layer in &self.layers {
+            cur = match layer {
+                Layer::Dense { w, b } => {
+                    let wt = transpose(w); // [q, p]
+                    add_bias(&matmul(&cur, &wt), b)
+                }
+                Layer::Conv2d { filter, b } => conv2d_same(&cur, filter, b),
+                Layer::Relu => relu(&cur),
+                Layer::Sigmoid => Tensor::new(
+                    cur.shape(),
+                    cur.data().iter().map(|&v| 1.0 / (1.0 + (-v).exp())).collect(),
+                ),
+                Layer::MaxPool2 => maxpool2(&cur),
+                Layer::Flatten => flatten(&cur),
+                Layer::QuantFixed { fmt } => Tensor::new(
+                    cur.shape(),
+                    cur.data().iter().map(|&v| fmt.fake_quant(v)).collect(),
+                ),
+                Layer::QuantF16 => Tensor::new(
+                    cur.shape(),
+                    cur.data()
+                        .iter()
+                        .map(|&v| crate::quant::f16::F16::fake_quant(v))
+                        .collect(),
+                ),
+            };
+        }
+        cur
+    }
+
+    /// Classification accuracy over a labelled set. Input rows must
+    /// already be flattened to `input_shape`.
+    pub fn accuracy(&self, images: &Tensor, labels: &[usize]) -> f64 {
+        let preds = self.forward(images).argmax_rows();
+        let correct = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+        correct as f64 / labels.len() as f64
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Dense { w, b } => w.len() + b.len(),
+                Layer::Conv2d { filter, b } => filter.len() + b.len(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Weight storage in bytes at f32 — the paper's "30.7 KiB" /
+    /// "5.1 MiB" / "12.49 MiB" memory-footprint baseline.
+    pub fn weight_bytes(&self) -> usize {
+        self.num_params() * 4
+    }
+
+    /// Build the linear classifier from raw tensors.
+    pub fn linear(w: Tensor, b: Tensor) -> Model {
+        assert_eq!(w.shape(), &[10, 784]);
+        Model {
+            arch: Arch::Linear,
+            layers: vec![Layer::Dense { w, b }],
+            input_shape: vec![784],
+        }
+    }
+
+    /// Build the 3-layer MLP.
+    pub fn mlp(params: Vec<(Tensor, Tensor)>) -> Model {
+        assert_eq!(params.len(), 3);
+        let mut layers = Vec::new();
+        for (i, (w, b)) in params.into_iter().enumerate() {
+            layers.push(Layer::Dense { w, b });
+            if i < 2 {
+                layers.push(Layer::Relu);
+            }
+        }
+        Model { arch: Arch::Mlp, layers, input_shape: vec![784] }
+    }
+
+    /// Build the LeNet CNN.
+    pub fn lenet(
+        conv1: (Tensor, Tensor),
+        conv2: (Tensor, Tensor),
+        fc1: (Tensor, Tensor),
+        fc2: (Tensor, Tensor),
+    ) -> Model {
+        Model {
+            arch: Arch::Cnn,
+            layers: vec![
+                Layer::Conv2d { filter: conv1.0, b: conv1.1 },
+                Layer::Relu,
+                Layer::MaxPool2,
+                Layer::Conv2d { filter: conv2.0, b: conv2.1 },
+                Layer::Relu,
+                Layer::MaxPool2,
+                Layer::Flatten,
+                Layer::Dense { w: fc1.0, b: fc1.1 },
+                Layer::Relu,
+                Layer::Dense { w: fc2.0, b: fc2.1 },
+            ],
+            input_shape: vec![28, 28, 1],
+        }
+    }
+
+    /// Insert fake-quant layers before every Dense/Conv input, as the
+    /// paper does for LUT-aware evaluation: `input_fmt` before the first
+    /// layer, `QuantF16` (or a fixed format) before the rest.
+    pub fn with_quantization(&self, input_bits: u32, inner_f16: bool, inner_bits: u32) -> Model {
+        let mut layers = Vec::new();
+        let mut first = true;
+        for l in &self.layers {
+            match l {
+                Layer::Dense { .. } | Layer::Conv2d { .. } => {
+                    if first {
+                        layers.push(Layer::QuantFixed { fmt: FixedFormat::new(input_bits) });
+                        first = false;
+                    } else if inner_f16 {
+                        layers.push(Layer::QuantF16);
+                    } else {
+                        layers.push(Layer::QuantFixed { fmt: FixedFormat::new(inner_bits) });
+                    }
+                    layers.push(l.clone());
+                }
+                other => layers.push(other.clone()),
+            }
+        }
+        Model { arch: self.arch, layers, input_shape: self.input_shape.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tiny_linear() -> Model {
+        let mut rng = Rng::new(1);
+        Model::linear(
+            Tensor::randn(&[10, 784], 0.05, &mut rng),
+            Tensor::zeros(&[10]),
+        )
+    }
+
+    #[test]
+    fn linear_forward_shape() {
+        let m = tiny_linear();
+        let x = Tensor::zeros(&[4, 784]);
+        assert_eq!(m.forward(&x).shape(), &[4, 10]);
+    }
+
+    #[test]
+    fn linear_param_count_matches_paper() {
+        let m = tiny_linear();
+        assert_eq!(m.num_params(), 784 * 10 + 10);
+        // paper: "total storage ... 30.7 KiB"
+        let kib = m.weight_bytes() as f64 / 1024.0;
+        assert!((kib - 30.66).abs() < 0.1, "{kib}");
+    }
+
+    #[test]
+    fn mlp_param_storage_matches_paper() {
+        let mut rng = Rng::new(2);
+        let m = Model::mlp(vec![
+            (Tensor::randn(&[1024, 784], 0.03, &mut rng), Tensor::zeros(&[1024])),
+            (Tensor::randn(&[512, 1024], 0.03, &mut rng), Tensor::zeros(&[512])),
+            (Tensor::randn(&[10, 512], 0.03, &mut rng), Tensor::zeros(&[10])),
+        ]);
+        // paper: "about 5.1 MiB"
+        let mib = m.weight_bytes() as f64 / (1024.0 * 1024.0);
+        assert!((mib - 5.08).abs() < 0.1, "{mib}");
+        let x = Tensor::zeros(&[2, 784]);
+        assert_eq!(m.forward(&x).shape(), &[2, 10]);
+    }
+
+    #[test]
+    fn lenet_param_storage_matches_paper() {
+        let mut rng = Rng::new(3);
+        let m = Model::lenet(
+            (Tensor::randn(&[5, 5, 1, 32], 0.1, &mut rng), Tensor::zeros(&[32])),
+            (Tensor::randn(&[5, 5, 32, 64], 0.1, &mut rng), Tensor::zeros(&[64])),
+            (Tensor::randn(&[1024, 3136], 0.02, &mut rng), Tensor::zeros(&[1024])),
+            (Tensor::randn(&[10, 1024], 0.05, &mut rng), Tensor::zeros(&[10])),
+        );
+        // paper: "about 12.49 MiB"
+        let mib = m.weight_bytes() as f64 / (1024.0 * 1024.0);
+        assert!((mib - 12.49).abs() < 0.05, "{mib}");
+        let x = Tensor::zeros(&[1, 28, 28, 1]);
+        assert_eq!(m.forward(&x).shape(), &[1, 10]);
+    }
+
+    #[test]
+    fn quantized_model_structure() {
+        let m = tiny_linear().with_quantization(3, true, 8);
+        assert!(matches!(m.layers[0], Layer::QuantFixed { .. }));
+        assert!(matches!(m.layers[1], Layer::Dense { .. }));
+    }
+
+    #[test]
+    fn quantization_changes_output_boundedly() {
+        let mut rng = Rng::new(4);
+        let m = tiny_linear();
+        let mq = m.with_quantization(8, true, 8);
+        let x = Tensor::new(&[1, 784], (0..784).map(|_| rng.f32()).collect());
+        let d = m.forward(&x).max_abs_diff(&mq.forward(&x));
+        assert!(d < 0.5, "8-bit quantization shifted logits by {d}");
+        assert!(d > 0.0, "quantization should not be a no-op");
+    }
+
+    #[test]
+    fn accuracy_counts_correct() {
+        let m = tiny_linear();
+        let x = Tensor::zeros(&[3, 784]);
+        let preds = m.forward(&x).argmax_rows();
+        let acc = m.accuracy(&x, &preds);
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn arch_parse() {
+        assert_eq!(Arch::parse("linear"), Some(Arch::Linear));
+        assert_eq!(Arch::parse("LeNet"), Some(Arch::Cnn));
+        assert_eq!(Arch::parse("nope"), None);
+    }
+}

@@ -1,0 +1,247 @@
+//! Weights interchange: the `TBNW` little-endian binary format written
+//! by `python/compile/export.py` after JAX training and read here to
+//! build both the reference model and the LUT banks.
+//!
+//! Layout: magic `TBNW` | u32 version | u32 count | count × tensor,
+//! tensor = u32 name_len | name bytes | u32 rank | rank × u64 dims |
+//! f32 data (row-major).
+
+use crate::nn::{Arch, Model};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"TBNW";
+pub const VERSION: u32 = 1;
+
+/// Named tensor collection, order-preserving by name.
+pub type WeightMap = BTreeMap<String, Tensor>;
+
+/// Serialize a weight map.
+pub fn write_weights<W: Write>(mut w: W, weights: &WeightMap) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(weights.len() as u32).to_le_bytes())?;
+    for (name, t) in weights {
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        w.write_all(&(t.rank() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &v in t.data() {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize a weight map.
+pub fn read_weights<R: Read>(mut r: R) -> Result<WeightMap> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("reading magic")?;
+    if &magic != MAGIC {
+        bail!("bad magic {magic:?}, expected TBNW");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported TBNW version {version}");
+    }
+    let count = read_u32(&mut r)?;
+    let mut map = WeightMap::new();
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("tensor name too long ({name_len})");
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf8")?;
+        let rank = read_u32(&mut r)? as usize;
+        if rank > 8 {
+            bail!("rank {rank} too large");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        if n > 64 << 20 {
+            bail!("tensor {name} too large ({n} elements)");
+        }
+        let mut buf = vec![0u8; n * 4];
+        r.read_exact(&mut buf)
+            .with_context(|| format!("reading data of {name}"))?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        map.insert(name, Tensor::new(&shape, data));
+    }
+    Ok(map)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Save to a file.
+pub fn save(path: &Path, weights: &WeightMap) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    write_weights(std::io::BufWriter::new(f), weights)
+}
+
+/// Load from a file.
+pub fn load(path: &Path) -> Result<WeightMap> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    read_weights(std::io::BufReader::new(f))
+}
+
+fn take(map: &mut WeightMap, name: &str, shape: &[usize]) -> Result<Tensor> {
+    let t = map
+        .remove(name)
+        .with_context(|| format!("weights file missing tensor '{name}'"))?;
+    if t.shape() != shape {
+        bail!("tensor '{name}' has shape {:?}, expected {shape:?}", t.shape());
+    }
+    Ok(t)
+}
+
+/// Assemble a [`Model`] of the given architecture from a weight map
+/// (shape-checked against the paper's layer sizes).
+pub fn model_from_weights(arch: Arch, mut map: WeightMap) -> Result<Model> {
+    let model = match arch {
+        Arch::Linear => Model::linear(
+            take(&mut map, "fc1.w", &[10, 784])?,
+            take(&mut map, "fc1.b", &[10])?,
+        ),
+        Arch::Mlp => Model::mlp(vec![
+            (
+                take(&mut map, "fc1.w", &[1024, 784])?,
+                take(&mut map, "fc1.b", &[1024])?,
+            ),
+            (
+                take(&mut map, "fc2.w", &[512, 1024])?,
+                take(&mut map, "fc2.b", &[512])?,
+            ),
+            (
+                take(&mut map, "fc3.w", &[10, 512])?,
+                take(&mut map, "fc3.b", &[10])?,
+            ),
+        ]),
+        Arch::Cnn => Model::lenet(
+            (
+                take(&mut map, "conv1.f", &[5, 5, 1, 32])?,
+                take(&mut map, "conv1.b", &[32])?,
+            ),
+            (
+                take(&mut map, "conv2.f", &[5, 5, 32, 64])?,
+                take(&mut map, "conv2.b", &[64])?,
+            ),
+            (
+                take(&mut map, "fc1.w", &[1024, 3136])?,
+                take(&mut map, "fc1.b", &[1024])?,
+            ),
+            (
+                take(&mut map, "fc2.w", &[10, 1024])?,
+                take(&mut map, "fc2.b", &[10])?,
+            ),
+        ),
+    };
+    Ok(model)
+}
+
+/// Load a model directly from a TBNW file.
+pub fn load_model(arch: Arch, path: &Path) -> Result<Model> {
+    model_from_weights(arch, load(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample_map() -> WeightMap {
+        let mut rng = Rng::new(8);
+        let mut m = WeightMap::new();
+        m.insert("fc1.w".into(), Tensor::randn(&[10, 784], 0.1, &mut rng));
+        m.insert("fc1.b".into(), Tensor::randn(&[10], 0.1, &mut rng));
+        m
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let map = sample_map();
+        let mut buf = Vec::new();
+        write_weights(&mut buf, &map).unwrap();
+        let back = read_weights(&buf[..]).unwrap();
+        assert_eq!(map.len(), back.len());
+        for (k, t) in &map {
+            assert_eq!(back[k], *t);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let err = read_weights(&b"NOPE\0\0\0\0"[..]).unwrap_err();
+        assert!(err.to_string().contains("bad magic"));
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let map = sample_map();
+        let mut buf = Vec::new();
+        write_weights(&mut buf, &map).unwrap();
+        buf.truncate(buf.len() - 10);
+        assert!(read_weights(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&99u32.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        assert!(read_weights(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn model_from_weights_builds_linear() {
+        let m = model_from_weights(Arch::Linear, sample_map()).unwrap();
+        assert_eq!(m.num_params(), 7850);
+    }
+
+    #[test]
+    fn model_from_weights_checks_shapes() {
+        let mut map = sample_map();
+        map.insert("fc1.w".into(), Tensor::zeros(&[10, 10]));
+        let err = model_from_weights(Arch::Linear, map).unwrap_err();
+        assert!(err.to_string().contains("shape"));
+    }
+
+    #[test]
+    fn model_from_weights_reports_missing() {
+        let err = model_from_weights(Arch::Linear, WeightMap::new()).unwrap_err();
+        assert!(err.to_string().contains("missing tensor"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("tablenet_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let map = sample_map();
+        save(&path, &map).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), map.len());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,237 @@
+//! Partition planner: sweeps LUT configurations per architecture,
+//! evaluates the paper's cost formulas, and extracts the Pareto frontier
+//! of total-LUT-size vs operation-count — the machinery behind Figs. 5,
+//! 7 and 8 and the planner behind `tablenet plan`.
+
+pub mod sweep;
+
+use crate::engine::plan::{AffineMode, EnginePlan};
+use crate::lut::cost::{conv_cost, dense_cost};
+use crate::nn::Arch;
+
+/// One evaluated configuration: the plan plus its aggregate costs.
+#[derive(Debug, Clone)]
+pub struct PlanPoint {
+    pub plan: EnginePlan,
+    /// Human-readable config label, e.g. "plane r3 m14".
+    pub label: String,
+    pub num_luts: u64,
+    pub size_bits: u64,
+    pub lut_evals: u64,
+    /// Paper convention: (n·k − 1)·p summed over layers.
+    pub ops: u64,
+    /// n·(k−1)·p convention (paper Fig. 5 text).
+    pub ops_exclusive: u64,
+    /// n·k·p convention.
+    pub ops_inclusive: u64,
+    pub ref_macs: u64,
+    /// Whether every table fits the materialisation cap (the engine can
+    /// actually run it, vs planner-only accounting).
+    pub materialisable: bool,
+}
+
+/// Layer geometry for cost evaluation.
+#[derive(Debug, Clone, Copy)]
+pub enum LayerGeom {
+    Dense { q: u64, p: u64 },
+    Conv { h: u64, w: u64, cin: u64, cout: u64, r: u64 },
+}
+
+/// The affine-layer geometries of each paper architecture.
+pub fn arch_geometry(arch: Arch) -> Vec<LayerGeom> {
+    match arch {
+        Arch::Linear => vec![LayerGeom::Dense { q: 784, p: 10 }],
+        Arch::Mlp => vec![
+            LayerGeom::Dense { q: 784, p: 1024 },
+            LayerGeom::Dense { q: 1024, p: 512 },
+            LayerGeom::Dense { q: 512, p: 10 },
+        ],
+        Arch::Cnn => vec![
+            LayerGeom::Conv { h: 28, w: 28, cin: 1, cout: 32, r: 2 },
+            LayerGeom::Conv { h: 14, w: 14, cin: 32, cout: 64, r: 2 },
+            LayerGeom::Dense { q: 3136, p: 1024 },
+            LayerGeom::Dense { q: 1024, p: 10 },
+        ],
+    }
+}
+
+/// Aggregate the costs of a full plan over an architecture's geometry.
+pub fn evaluate_plan(geoms: &[LayerGeom], plan: &EnginePlan) -> PlanPoint {
+    let mut num_luts = 0u64;
+    let mut size_bits = 0u64;
+    let mut lut_evals = 0u64;
+    let mut ops = 0u64;
+    let mut ops_ex = 0u64;
+    let mut ops_in = 0u64;
+    let mut ref_macs = 0u64;
+    let mut materialisable = true;
+    let mut labels = Vec::new();
+    for (i, geom) in geoms.iter().enumerate() {
+        let mode = plan.affine.get(i).unwrap_or(&plan.fallback);
+        let im = mode.index_mode();
+        match *geom {
+            LayerGeom::Dense { q, p } => {
+                let c = dense_cost(q, p, mode.m() as u64, im, plan.r_o);
+                num_luts += c.num_luts;
+                size_bits = size_bits.saturating_add(c.size_bits);
+                lut_evals += c.lut_evals;
+                ops += c.adds;
+                ops_ex += c.adds_exclusive;
+                ops_in += c.adds_inclusive;
+                ref_macs += c.ref_macs;
+                let idx_bits = mode.m() as u64 * im.index_bits_per_elem() as u64;
+                let rows = if idx_bits >= 63 { u64::MAX } else { 1u64 << idx_bits };
+                if rows.saturating_mul(p).saturating_mul(8)
+                    > crate::lut::MAX_TABLE_BYTES as u64
+                {
+                    materialisable = false;
+                }
+            }
+            LayerGeom::Conv { h, w, cin, cout, r } => {
+                let c = conv_cost(h, w, cin, cout, r, mode.m() as u64, im, plan.r_o);
+                num_luts += c.num_luts;
+                size_bits = size_bits.saturating_add(c.size_bits);
+                lut_evals += c.lut_evals;
+                ops += c.adds;
+                ops_ex += c.adds;
+                ops_in += c.adds;
+                ref_macs += c.ref_macs;
+                let a = (mode.m() * mode.m()) as u64;
+                let idx_bits = a * im.index_bits_per_elem() as u64;
+                let patch = (mode.m() as u64 + 2 * r).pow(2) * cout;
+                let rows = if idx_bits >= 63 { u64::MAX } else { 1u64 << idx_bits };
+                if rows.saturating_mul(patch).saturating_mul(8)
+                    > crate::lut::MAX_TABLE_BYTES as u64
+                {
+                    materialisable = false;
+                }
+            }
+        }
+        labels.push(mode_label(mode));
+    }
+    PlanPoint {
+        plan: plan.clone(),
+        label: labels.join(" | "),
+        num_luts,
+        size_bits,
+        lut_evals,
+        ops,
+        ops_exclusive: ops_ex,
+        ops_inclusive: ops_in,
+        ref_macs,
+        materialisable,
+    }
+}
+
+fn mode_label(m: &AffineMode) -> String {
+    match *m {
+        AffineMode::WholeFixed { bits, m, .. } => format!("whole r{bits} m{m}"),
+        AffineMode::BitplaneFixed { bits, m, .. } => format!("plane r{bits} m{m}"),
+        AffineMode::Float { planes, m } => format!("f16 x{planes} m{m}"),
+    }
+}
+
+/// Extract the Pareto frontier (strictly decreasing ops as size grows);
+/// result sorted by size ascending, as the paper's figure captions say
+/// ("sorted according to total LUT size").
+pub fn pareto(points: &[PlanPoint]) -> Vec<PlanPoint> {
+    let mut sorted: Vec<&PlanPoint> = points.iter().collect();
+    sorted.sort_by_key(|p| (p.size_bits, p.ops));
+    let mut out: Vec<PlanPoint> = Vec::new();
+    let mut best_ops = u64::MAX;
+    for p in sorted {
+        if p.ops < best_ops {
+            best_ops = p.ops;
+            out.push(p.clone());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_default_point_matches_paper() {
+        let geoms = arch_geometry(Arch::Linear);
+        let pt = evaluate_plan(&geoms, &EnginePlan::linear_default());
+        assert_eq!(pt.num_luts, 56);
+        assert_eq!(pt.lut_evals, 168);
+        let mib = pt.size_bits as f64 / (8.0 * 1024.0 * 1024.0);
+        assert!((mib - 17.5).abs() < 0.01, "{mib}");
+        assert_eq!(pt.ops_exclusive, 1650);
+        assert!(pt.materialisable);
+    }
+
+    #[test]
+    fn mlp_default_matches_paper_lut_count() {
+        let geoms = arch_geometry(Arch::Mlp);
+        let pt = evaluate_plan(&geoms, &EnginePlan::mlp_default());
+        assert_eq!(pt.num_luts, 2320);
+        assert_eq!(pt.ref_macs, 1_332_224);
+    }
+
+    #[test]
+    fn cnn_geometry_macs() {
+        let geoms = arch_geometry(Arch::Cnn);
+        let pt = evaluate_plan(&geoms, &EnginePlan::cnn_default());
+        // conv1 28²·25·32 = 627,200; conv2 14²·25·32·64 = 10,035,200;
+        // fc1 3136·1024 = 3,211,264; fc2 10,240 → 13.88M ('same'
+        // padding counted densely; the paper quotes ≈12.9M)
+        assert_eq!(pt.ref_macs, 13_883_904);
+        assert!(pt.materialisable);
+    }
+
+    #[test]
+    fn pareto_is_monotone() {
+        let geoms = arch_geometry(Arch::Linear);
+        let pts: Vec<PlanPoint> = [1usize, 2, 4, 7, 14, 28, 56]
+            .iter()
+            .map(|&m| {
+                let mut plan = EnginePlan::linear_default();
+                plan.affine[0] =
+                    AffineMode::BitplaneFixed { bits: 3, m, range_exp: 0 };
+                evaluate_plan(&geoms, &plan)
+            })
+            .collect();
+        let front = pareto(&pts);
+        assert!(!front.is_empty());
+        for w in front.windows(2) {
+            assert!(w[1].size_bits >= w[0].size_bits);
+            assert!(w[1].ops < w[0].ops);
+        }
+    }
+
+    #[test]
+    fn bigger_chunks_cost_more_memory_fewer_ops() {
+        let geoms = arch_geometry(Arch::Linear);
+        let mut small = EnginePlan::linear_default();
+        small.affine[0] = AffineMode::BitplaneFixed { bits: 3, m: 2, range_exp: 0 };
+        let mut big = EnginePlan::linear_default();
+        big.affine[0] = AffineMode::BitplaneFixed { bits: 3, m: 16, range_exp: 0 };
+        let ps = evaluate_plan(&geoms, &small);
+        let pb = evaluate_plan(&geoms, &big);
+        assert!(pb.size_bits > ps.size_bits);
+        assert!(pb.ops < ps.ops);
+    }
+
+    #[test]
+    fn mlp_whole_code_reproduces_32_7_gib() {
+        let geoms = arch_geometry(Arch::Mlp);
+        let plan = EnginePlan {
+            affine: vec![
+                AffineMode::WholeFixed { bits: 8, m: 1, range_exp: 0 },
+                AffineMode::WholeFixed { bits: 15, m: 1, range_exp: 0 },
+                AffineMode::WholeFixed { bits: 15, m: 1, range_exp: 0 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        let pt = evaluate_plan(&geoms, &plan);
+        let gib = pt.size_bits as f64 / (8.0 * 1024.0 * 1024.0 * 1024.0);
+        assert!((gib - 32.7).abs() < 0.8, "{gib} GiB");
+        assert_eq!(pt.num_luts, 2320);
+        assert_eq!(pt.ops, 1_330_678);
+    }
+}

@@ -1,0 +1,194 @@
+//! Configuration sweeps for each paper figure: enumerate the partition /
+//! precision space, evaluate costs, return points ready for the
+//! harness/bench layer to print or dump to CSV.
+
+use super::{arch_geometry, evaluate_plan, PlanPoint};
+use crate::engine::plan::{AffineMode, EnginePlan};
+use crate::nn::Arch;
+
+/// Chunk sizes that divide 784 (the linear/MLP input) — the natural
+/// partition ladder for Figs. 5.
+pub const DIVISORS_784: &[usize] = &[1, 2, 4, 7, 8, 14, 16, 28, 49, 56, 98, 112, 196];
+
+/// Fig. 5 sweep: linear classifier, fixed 3-bit input (the accuracy
+/// plateau from Fig. 4), bitplane and whole-code indexing across chunk
+/// sizes. Same costs apply to MNIST and Fashion-MNIST (the figure plots
+/// both datasets on one tradeoff curve).
+pub fn linear_tradeoff(bits: u32) -> Vec<PlanPoint> {
+    let geoms = arch_geometry(Arch::Linear);
+    let mut pts = Vec::new();
+    for &m in DIVISORS_784 {
+        for mode in [
+            AffineMode::BitplaneFixed { bits, m, range_exp: 0 },
+            AffineMode::WholeFixed { bits, m, range_exp: 0 },
+        ] {
+            // skip absurd whole-code chunks (beyond u64 sizes)
+            if let AffineMode::WholeFixed { .. } = mode {
+                if m as u64 * bits as u64 > 48 {
+                    continue;
+                }
+            }
+            let plan = EnginePlan {
+                affine: vec![mode],
+                fallback: AffineMode::Float { planes: 11, m: 1 },
+                r_o: 16,
+            };
+            let pt = evaluate_plan(&geoms, &plan);
+            // keep the figure's axis meaningful: drop configs beyond a
+            // pebibyte (the paper's plot spans KiB..GiB)
+            if pt.size_bits < 1u64 << 53 {
+                pts.push(pt);
+            }
+        }
+    }
+    pts
+}
+
+/// Fig. 7 sweep: MLP with 8-bit fixed input layer and binary16 inner
+/// layers; varies the inner chunk size m (whole-code vs bitplaned) and
+/// the first-layer chunking.
+pub fn mlp_tradeoff() -> Vec<PlanPoint> {
+    let geoms = arch_geometry(Arch::Mlp);
+    let mut pts = Vec::new();
+    // all-float plans (the paper's bitplaned family): chunk size per
+    // layer; index bits = 6m, keep within u64 sizes
+    for &m_in in &[1usize, 2, 3, 4] {
+        for &m1 in &[1usize, 2, 4] {
+            let plan = EnginePlan {
+                affine: vec![
+                    AffineMode::Float { planes: 11, m: m1 },
+                    AffineMode::Float { planes: 11, m: m_in },
+                    AffineMode::Float { planes: 11, m: m_in },
+                ],
+                fallback: AffineMode::Float { planes: 11, m: 1 },
+                r_o: 16,
+            };
+            pts.push(evaluate_plan(&geoms, &plan));
+        }
+    }
+    // fixed-8-bit first layer (the paper's input-encoding ablation)
+    for &m_in in &[1usize, 2] {
+        for &m1 in &[1usize, 2, 4, 7] {
+            let plan = EnginePlan {
+                affine: vec![
+                    AffineMode::WholeFixed { bits: 8, m: m1, range_exp: 0 },
+                    AffineMode::Float { planes: 11, m: m_in },
+                    AffineMode::Float { planes: 11, m: m_in },
+                ],
+                fallback: AffineMode::Float { planes: 11, m: 1 },
+                r_o: 16,
+            };
+            pts.push(evaluate_plan(&geoms, &plan));
+        }
+    }
+    // the paper's whole-16-bit configuration (impractically large)
+    for &r_i in &[15u32, 16] {
+        let plan = EnginePlan {
+            affine: vec![
+                AffineMode::WholeFixed { bits: 8, m: 1, range_exp: 0 },
+                AffineMode::WholeFixed { bits: r_i, m: 1, range_exp: 0 },
+                AffineMode::WholeFixed { bits: r_i, m: 1, range_exp: 0 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        pts.push(evaluate_plan(&geoms, &plan));
+    }
+    pts
+}
+
+/// Fig. 8 sweep: LeNet CNN; spatial blocks for conv1, float planes for
+/// the rest, plus whole-code variants for the dense tail.
+pub fn cnn_tradeoff() -> Vec<PlanPoint> {
+    let geoms = arch_geometry(Arch::Cnn);
+    let mut pts = Vec::new();
+    for &mc in &[1usize, 2, 4] {
+        for &md in &[1usize, 2, 3] {
+            let plan = EnginePlan {
+                affine: vec![
+                    AffineMode::BitplaneFixed { bits: 8, m: mc, range_exp: 0 },
+                    AffineMode::Float { planes: 11, m: 1 },
+                    AffineMode::Float { planes: 11, m: md },
+                    AffineMode::Float { planes: 11, m: md },
+                ],
+                fallback: AffineMode::Float { planes: 11, m: 1 },
+                r_o: 16,
+            };
+            pts.push(evaluate_plan(&geoms, &plan));
+        }
+    }
+    // whole-code dense tail (the paper's 12.26 GiB-class config)
+    for &r_i in &[15u32] {
+        let plan = EnginePlan {
+            affine: vec![
+                AffineMode::BitplaneFixed { bits: 8, m: 2, range_exp: 0 },
+                AffineMode::Float { planes: 11, m: 1 },
+                AffineMode::WholeFixed { bits: r_i, m: 1, range_exp: 0 },
+                AffineMode::WholeFixed { bits: r_i, m: 1, range_exp: 0 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        pts.push(evaluate_plan(&geoms, &plan));
+    }
+    pts
+}
+
+/// Input-bits ladder for Figs. 4 and 6 (accuracy sweeps pair these with
+/// measured accuracy from the engine; cost side only here).
+pub fn bits_ladder() -> Vec<u32> {
+    (1..=8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::pareto;
+
+    #[test]
+    fn linear_sweep_covers_paper_points() {
+        let pts = linear_tradeoff(3);
+        // must contain the 56-LUT/17.5MiB and 784-LUT/30.6KiB configs
+        assert!(pts.iter().any(|p| p.num_luts == 56
+            && (p.size_bits as f64 / (8.0 * 1024.0 * 1024.0) - 17.5).abs() < 0.01));
+        assert!(pts
+            .iter()
+            .any(|p| p.num_luts == 784 && p.size_bits == 784 * 2 * 10 * 16));
+    }
+
+    #[test]
+    fn linear_sweep_has_nontrivial_pareto() {
+        let pts = linear_tradeoff(3);
+        let front = pareto(&pts);
+        assert!(front.len() >= 4, "frontier too small: {}", front.len());
+    }
+
+    #[test]
+    fn mlp_sweep_includes_paper_configs() {
+        let pts = mlp_tradeoff();
+        // bitplaned config: 2320 LUTs, 162.6 MiB, 14,652,918 adds
+        assert!(pts.iter().any(|p| p.num_luts == 2320 && p.ops == 14_652_918));
+        // whole-code 15-bit config: 1,330,678 adds
+        assert!(pts.iter().any(|p| p.ops == 1_330_678));
+    }
+
+    #[test]
+    fn cnn_sweep_spans_orders_of_magnitude() {
+        let pts = cnn_tradeoff();
+        let min = pts.iter().map(|p| p.size_bits).min().unwrap();
+        let max = pts.iter().map(|p| p.size_bits).max().unwrap();
+        assert!(max / min.max(1) > 100, "sweep too narrow: {min}..{max}");
+    }
+
+    #[test]
+    fn cnn_sweep_contains_400mib_class_config() {
+        // paper: "total LUT size is 400 MiB" for all-single-element float
+        let pts = cnn_tradeoff();
+        let close = pts
+            .iter()
+            .map(|p| p.size_bits as f64 / (8.0 * 1024.0 * 1024.0))
+            .filter(|mib| (*mib - 400.0).abs() < 200.0)
+            .count();
+        assert!(close >= 1);
+    }
+}

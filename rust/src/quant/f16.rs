@@ -1,0 +1,259 @@
+//! IEEE 754 binary16 codec, written from scratch (no `half` crate): the
+//! paper's intermediate-layer format ("IEEE 754 binary16 16-bit floating
+//! point format for the output of the first layer and the second layer").
+//!
+//! Layout: 1 sign bit | 5 exponent bits (bias 15) | 10 fraction bits.
+//! The paper indexes LUTs with the *entire* exponent plus one mantissa
+//! bitplane at a time (Fig. 1); [`F16::significand11`] exposes the 11-bit
+//! significand (implicit bit included — "the precision in the mantissa of
+//! the IEEE 754 binary16 format is 11 bits").
+
+/// A binary16 value stored as its bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct F16(pub u16);
+
+pub const EXP_BITS: u32 = 5;
+pub const FRAC_BITS: u32 = 10;
+/// Mantissa precision including the implicit leading 1.
+pub const SIG_BITS: u32 = 11;
+pub const EXP_BIAS: i32 = 15;
+
+impl F16 {
+    /// Encode an f32 with round-to-nearest-even (the IEEE default).
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 31) & 1) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let frac = bits & 0x7F_FFFF;
+
+        if exp == 0xFF {
+            // Inf / NaN
+            let f16_frac = if frac != 0 { 0x200 } else { 0 };
+            return F16((sign << 15) | (0x1F << 10) | f16_frac);
+        }
+
+        // unbiased exponent
+        let e = exp - 127;
+        if e > 15 {
+            // overflow -> inf
+            return F16((sign << 15) | (0x1F << 10));
+        }
+        if e >= -14 {
+            // normal range: round 23-bit frac to 10 bits, RNE
+            let mut f = frac >> 13;
+            let rem = frac & 0x1FFF;
+            let halfway = 0x1000;
+            if rem > halfway || (rem == halfway && (f & 1) == 1) {
+                f += 1;
+            }
+            let mut e16 = (e + EXP_BIAS) as u32;
+            if f == 0x400 {
+                // rounding carried into the exponent
+                f = 0;
+                e16 += 1;
+                if e16 >= 0x1F {
+                    return F16((sign << 15) | (0x1F << 10));
+                }
+            }
+            return F16((sign << 15) | ((e16 as u16) << 10) | f as u16);
+        }
+        if e >= -25 {
+            // subnormal in f16: value = f * 2^-24 with f = sig * 2^(e+1)
+            // where sig is the 24-bit significand (implicit bit added);
+            // e in [-25, -15] so the shift is 14..=24 (e = -25 rounds to
+            // either 0 or the smallest subnormal under RNE).
+            let sig = 0x80_0000 | frac; // add implicit bit
+            let total_shift = (-1 - e) as u32;
+            let mut f = sig >> total_shift;
+            let rem_mask = (1u32 << total_shift) - 1;
+            let rem = sig & rem_mask;
+            let halfway = 1u32 << (total_shift - 1);
+            if rem > halfway || (rem == halfway && (f & 1) == 1) {
+                f += 1;
+            }
+            return F16((sign << 15) | f as u16);
+        }
+        // underflow -> signed zero
+        F16(sign << 15)
+    }
+
+    /// Decode to f32 (exact — every binary16 value is representable).
+    pub fn to_f32(self) -> f32 {
+        let sign = ((self.0 >> 15) & 1) as u32;
+        let exp = ((self.0 >> 10) & 0x1F) as u32;
+        let frac = (self.0 & 0x3FF) as u32;
+        let f32bits = if exp == 0 {
+            if frac == 0 {
+                sign << 31
+            } else {
+                // subnormal: renormalize
+                let mut e = -14i32;
+                let mut f = frac;
+                while f & 0x400 == 0 {
+                    f <<= 1;
+                    e -= 1;
+                }
+                f &= 0x3FF;
+                (sign << 31) | (((e + 127) as u32) << 23) | (f << 13)
+            }
+        } else if exp == 0x1F {
+            (sign << 31) | (0xFF << 23) | (frac << 13)
+        } else {
+            (sign << 31) | ((exp + 127 - 15) << 23) | (frac << 13)
+        };
+        f32::from_bits(f32bits)
+    }
+
+    /// Quantize-dequantize through binary16 (fake-quant for training and
+    /// for the engine's intermediate activations).
+    pub fn fake_quant(x: f32) -> f32 {
+        F16::from_f32(x).to_f32()
+    }
+
+    pub fn sign(self) -> u32 {
+        ((self.0 >> 15) & 1) as u32
+    }
+
+    /// Raw 5-bit exponent field (0 = zero/subnormal, 31 = inf/nan).
+    pub fn exponent(self) -> u32 {
+        ((self.0 >> 10) & 0x1F) as u32
+    }
+
+    /// Raw 10-bit fraction field.
+    pub fn fraction(self) -> u32 {
+        (self.0 & 0x3FF) as u32
+    }
+
+    /// 11-bit significand with the implicit bit made explicit (0 for
+    /// zero/subnormals' leading bit). This is what the paper splits into
+    /// 11 bitplanes.
+    pub fn significand11(self) -> u32 {
+        if self.exponent() == 0 {
+            self.fraction() // subnormal: implicit bit is 0
+        } else {
+            0x400 | self.fraction()
+        }
+    }
+
+    /// Bit `j` (0 = LSB) of the 11-bit significand.
+    pub fn sig_bitplane(self, j: u32) -> u32 {
+        debug_assert!(j < SIG_BITS);
+        (self.significand11() >> j) & 1
+    }
+
+    /// The value this f16 represents, reconstructed from exponent and
+    /// significand: (-1)^s * sig11 * 2^(e - 15 - 10)  (normals),
+    /// sig11 * 2^(-14 - 10) (subnormals). Used by tests to prove the
+    /// bitplane-LUT decomposition is exact.
+    pub fn decompose_value(self) -> f64 {
+        let s = if self.sign() == 1 { -1.0 } else { 1.0 };
+        let e = self.exponent();
+        let scale_exp = if e == 0 {
+            -14 - FRAC_BITS as i32
+        } else {
+            e as i32 - EXP_BIAS - FRAC_BITS as i32
+        };
+        s * self.significand11() as f64 * (scale_exp as f64).exp2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_encodings() {
+        assert_eq!(F16::from_f32(0.0).0, 0x0000);
+        assert_eq!(F16::from_f32(1.0).0, 0x3C00);
+        assert_eq!(F16::from_f32(-2.0).0, 0xC000);
+        assert_eq!(F16::from_f32(0.5).0, 0x3800);
+        assert_eq!(F16::from_f32(65504.0).0, 0x7BFF); // f16 max
+        assert_eq!(F16::from_f32(f32::INFINITY).0, 0x7C00);
+    }
+
+    #[test]
+    fn known_decodings() {
+        assert_eq!(F16(0x3C00).to_f32(), 1.0);
+        assert_eq!(F16(0xC000).to_f32(), -2.0);
+        assert_eq!(F16(0x7BFF).to_f32(), 65504.0);
+        assert_eq!(F16(0x0001).to_f32(), 5.9604645e-8); // smallest subnormal
+        assert!(F16(0x7C01).to_f32().is_nan());
+    }
+
+    #[test]
+    fn roundtrip_exact_for_f16_values() {
+        // every finite f16 bit pattern decodes and re-encodes to itself
+        for bits in 0..=0xFFFFu16 {
+            let exp = (bits >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue; // inf/nan
+            }
+            let x = F16(bits).to_f32();
+            assert_eq!(F16::from_f32(x).0, bits, "bits {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 and 1.0+2^-10:
+        // rounds to even (1.0)
+        let x = 1.0 + (2.0f32).powi(-11);
+        assert_eq!(F16::from_f32(x).0, 0x3C00);
+        // slightly above halfway rounds up
+        let y = 1.0 + (2.0f32).powi(-11) + (2.0f32).powi(-20);
+        assert_eq!(F16::from_f32(y).0, 0x3C01);
+    }
+
+    #[test]
+    fn overflow_to_inf_and_underflow_to_zero() {
+        assert_eq!(F16::from_f32(1e6).0, 0x7C00);
+        assert_eq!(F16::from_f32(-1e6).0, 0xFC00);
+        assert_eq!(F16::from_f32(1e-10).0, 0x0000);
+    }
+
+    #[test]
+    fn subnormal_encoding() {
+        // 2^-15 = 0.5 * 2^-14 -> subnormal with frac 0x200
+        assert_eq!(F16::from_f32((2.0f32).powi(-15)).0, 0x0200);
+        assert_eq!(F16::from_f32((2.0f32).powi(-24)).0, 0x0001);
+    }
+
+    #[test]
+    fn quantization_error_bounded_relative() {
+        // normals: relative error <= 2^-11
+        let mut x = 0.001f32;
+        while x < 60000.0 {
+            let q = F16::fake_quant(x);
+            let rel = ((q - x) / x).abs();
+            assert!(rel <= (2.0f32).powi(-11), "x={x} q={q} rel={rel}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn significand_has_implicit_bit() {
+        let one = F16::from_f32(1.0);
+        assert_eq!(one.significand11(), 0x400);
+        assert_eq!(one.exponent(), 15);
+        let sub = F16(0x0001);
+        assert_eq!(sub.significand11(), 1); // no implicit bit
+    }
+
+    #[test]
+    fn bitplane_decomposition_is_exact() {
+        // sum over bitplanes of (bit << j) rebuilds the significand, and
+        // decompose_value matches to_f32 — the identity the LUT engine
+        // relies on.
+        for bits in [0x3C00u16, 0x3555, 0x7BFF, 0x0001, 0x0200, 0x4248] {
+            let h = F16(bits);
+            let rebuilt: u32 = (0..SIG_BITS).map(|j| h.sig_bitplane(j) << j).sum();
+            assert_eq!(rebuilt, h.significand11());
+            let v = h.decompose_value();
+            assert!(
+                (v - h.to_f32() as f64).abs() <= 1e-12 * v.abs().max(1e-30),
+                "bits {bits:#06x}: {v} vs {}",
+                h.to_f32()
+            );
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! 8-bit minifloat (the paper cites minifloats as an example of a small
+//! input set `I` with β(I)=8). Configurable exponent/mantissa split with
+//! a sign bit; default 1-4-3 (sign, 4 exp, 3 frac), IEEE-like with
+//! subnormals, round-to-nearest-even, no infinities (saturating).
+
+/// Minifloat format descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MiniFloatFormat {
+    pub exp_bits: u32,
+    pub frac_bits: u32,
+}
+
+impl MiniFloatFormat {
+    pub fn new(exp_bits: u32, frac_bits: u32) -> Self {
+        assert!(exp_bits >= 2 && frac_bits >= 1 && 1 + exp_bits + frac_bits <= 8);
+        MiniFloatFormat { exp_bits, frac_bits }
+    }
+
+    /// The classic 8-bit minifloat: 1 sign, 4 exponent, 3 fraction.
+    pub fn e4m3() -> Self {
+        MiniFloatFormat::new(4, 3)
+    }
+
+    pub fn bits(&self) -> u32 {
+        1 + self.exp_bits + self.frac_bits
+    }
+
+    pub fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    fn max_exp(&self) -> i32 {
+        ((1 << self.exp_bits) - 1) - self.bias()
+    }
+
+    /// Largest finite value.
+    pub fn max_value(&self) -> f32 {
+        let frac_max = 1.0 + ((1u32 << self.frac_bits) - 1) as f32
+            / (1u32 << self.frac_bits) as f32;
+        frac_max * (self.max_exp() as f32).exp2()
+    }
+
+    /// Encode f32 -> code in the low `bits()` bits. Saturating at
+    /// `max_value`, flushes tiny values through the subnormal range.
+    pub fn encode(&self, x: f32) -> u8 {
+        let sign = if x.is_sign_negative() { 1u8 } else { 0 };
+        let ax = x.abs();
+        let sbit = sign << (self.exp_bits + self.frac_bits);
+        if ax == 0.0 || ax.is_nan() {
+            return sbit;
+        }
+        if ax >= self.max_value() {
+            // saturate to max finite
+            let code = (((1u32 << self.exp_bits) - 1) << self.frac_bits
+                | ((1 << self.frac_bits) - 1)) as u8;
+            return sbit | code;
+        }
+        let e = ax.log2().floor() as i32;
+        let min_norm_exp = 1 - self.bias();
+        if e >= min_norm_exp {
+            // normal
+            let mant = ax / (e as f32).exp2(); // in [1, 2)
+            let scaled = (mant - 1.0) * (1u32 << self.frac_bits) as f32;
+            let mut f = scaled.round_ties_even() as u32;
+            let mut ecode = (e + self.bias()) as u32;
+            if f == 1 << self.frac_bits {
+                f = 0;
+                ecode += 1;
+                if ecode >= (1 << self.exp_bits) {
+                    // saturate
+                    return sbit
+                        | ((((1u32 << self.exp_bits) - 1) << self.frac_bits)
+                            | ((1 << self.frac_bits) - 1)) as u8;
+                }
+            }
+            sbit | ((ecode << self.frac_bits) | f) as u8
+        } else {
+            // subnormal: value = f * 2^(min_norm_exp - frac_bits)
+            let step = ((min_norm_exp - self.frac_bits as i32) as f32).exp2();
+            let f = (ax / step).round_ties_even() as u32;
+            if f >= 1 << self.frac_bits {
+                // rounded up into the normal range
+                return sbit | (1u32 << self.frac_bits) as u8;
+            }
+            sbit | f as u8
+        }
+    }
+
+    /// Decode a code back to f32.
+    pub fn decode(&self, code: u8) -> f32 {
+        let code = code as u32;
+        let sign = (code >> (self.exp_bits + self.frac_bits)) & 1;
+        let ecode = (code >> self.frac_bits) & ((1 << self.exp_bits) - 1);
+        let f = code & ((1 << self.frac_bits) - 1);
+        let mag = if ecode == 0 {
+            f as f32 * ((1 - self.bias() - self.frac_bits as i32) as f32).exp2()
+        } else {
+            (1.0 + f as f32 / (1u32 << self.frac_bits) as f32)
+                * ((ecode as i32 - self.bias()) as f32).exp2()
+        };
+        if sign == 1 {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    /// Quantize-dequantize through the minifloat.
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.decode(self.encode(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_basics() {
+        let f = MiniFloatFormat::e4m3();
+        assert_eq!(f.bits(), 8);
+        assert_eq!(f.bias(), 7);
+        assert_eq!(f.fake_quant(1.0), 1.0);
+        assert_eq!(f.fake_quant(0.0), 0.0);
+        assert_eq!(f.fake_quant(-1.5), -1.5);
+    }
+
+    #[test]
+    fn roundtrip_all_codes() {
+        let f = MiniFloatFormat::e4m3();
+        for code in 0u8..=255 {
+            let x = f.decode(code);
+            let back = f.encode(x);
+            // -0 and +0 collapse; everything else must round-trip
+            if x == 0.0 {
+                assert_eq!(back & 0x7F, 0);
+            } else {
+                assert_eq!(back, code, "code {code:#04x} -> {x} -> {back:#04x}");
+            }
+        }
+    }
+
+    #[test]
+    fn saturates_at_max() {
+        let f = MiniFloatFormat::e4m3();
+        let m = f.max_value();
+        assert_eq!(f.fake_quant(m * 100.0), m);
+        assert_eq!(f.fake_quant(-m * 100.0), -m);
+    }
+
+    #[test]
+    fn subnormals_representable() {
+        let f = MiniFloatFormat::e4m3();
+        // smallest subnormal = 2^(1-7-3) = 2^-9
+        let tiny = (2.0f32).powi(-9);
+        assert_eq!(f.fake_quant(tiny), tiny);
+    }
+
+    #[test]
+    fn relative_error_bounded_for_normals() {
+        let f = MiniFloatFormat::e4m3();
+        let mut x = 0.02f32;
+        while x < f.max_value() {
+            let rel = ((f.fake_quant(x) - x) / x).abs();
+            assert!(rel <= 1.0 / 16.0, "x={x} rel={rel}");
+            x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn other_splits_work() {
+        let f = MiniFloatFormat::new(5, 2);
+        assert_eq!(f.fake_quant(2.0), 2.0);
+        let g = MiniFloatFormat::new(2, 3);
+        assert_eq!(g.fake_quant(1.25), 1.25);
+    }
+}

@@ -1,0 +1,195 @@
+//! Number-format substrate: fixed-point Q formats, an IEEE 754 binary16
+//! codec written from scratch, an 8-bit minifloat, and LUT-based
+//! stochastic rounding — everything the paper's input sets `I` need.
+//!
+//! The paper's LUT is indexed by *bit patterns*; these modules own the
+//! mapping between `f32` values and those patterns, so the `lut` and
+//! `engine` layers can stay purely integer.
+
+pub mod f16;
+pub mod minifloat;
+pub mod stochastic;
+
+/// Unsigned fixed-point format with `bits` total bits, all fractional:
+/// code `c` represents `c / 2^bits`, covering [0, 1). This is the format
+/// the paper uses for image inputs ("8-bits in fixed point format to
+/// encode the input images", "input quantized to 3 bits").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixedFormat {
+    /// Total bits per element (the paper's r_I).
+    pub bits: u32,
+}
+
+impl FixedFormat {
+    pub fn new(bits: u32) -> Self {
+        assert!((1..=16).contains(&bits), "fixed format bits in 1..=16");
+        FixedFormat { bits }
+    }
+
+    /// Number of representable codes.
+    pub fn levels(&self) -> u32 {
+        1 << self.bits
+    }
+
+    /// Quantize a value in [0, 1] to its code (floor, saturating).
+    /// `as u32` truncates toward zero == floor for non-negatives, and
+    /// saturates NaN to 0 — one multiply + cast + min on the hot path.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> u32 {
+        let v = (x.max(0.0) * self.levels() as f32) as u32;
+        v.min(self.levels() - 1)
+    }
+
+    /// Dequantize a code back to f32 (mid-tread: c / 2^bits).
+    #[inline]
+    pub fn dequantize(&self, code: u32) -> f32 {
+        code as f32 / self.levels() as f32
+    }
+
+    /// Quantize-dequantize (the fake-quant op inserted before LUT-fed
+    /// layers during training).
+    #[inline]
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.dequantize(self.quantize(x))
+    }
+
+    /// Extract bitplane `j` (0 = LSB) of the code for value x.
+    #[inline]
+    pub fn bitplane(&self, x: f32, j: u32) -> u32 {
+        debug_assert!(j < self.bits);
+        (self.quantize(x) >> j) & 1
+    }
+}
+
+/// Signed two's-complement fixed-point: `bits` total, MSB is the sign
+/// bit, remaining bits fractional over [-1, 1). Used by the signed-LUT
+/// path (paper §Dealing with signed numbers, Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SignedFixedFormat {
+    pub bits: u32,
+}
+
+impl SignedFixedFormat {
+    pub fn new(bits: u32) -> Self {
+        assert!((2..=16).contains(&bits), "signed fixed bits in 2..=16");
+        SignedFixedFormat { bits }
+    }
+
+    /// Quantize x in [-1, 1) to an n-bit two's-complement code
+    /// (returned in the low `bits` bits of the u32).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> u32 {
+        let half = (1u32 << (self.bits - 1)) as f32;
+        let v = (x * half).floor().clamp(-half, half - 1.0) as i32;
+        (v as u32) & ((1 << self.bits) - 1)
+    }
+
+    /// Dequantize a two's-complement code back to f32.
+    #[inline]
+    pub fn dequantize(&self, code: u32) -> f32 {
+        let n = self.bits;
+        let raw = code & ((1 << n) - 1);
+        let signed = if raw >> (n - 1) == 1 {
+            raw as i64 - (1i64 << n)
+        } else {
+            raw as i64
+        };
+        signed as f32 / (1u32 << (n - 1)) as f32
+    }
+
+    /// The magnitude bits x_b (code minus the MSB) — the paper's
+    /// "bitstring x minus the MSB".
+    #[inline]
+    pub fn magnitude_bits(&self, code: u32) -> u32 {
+        code & ((1 << (self.bits - 1)) - 1)
+    }
+
+    /// The sign (MSB) bit.
+    #[inline]
+    pub fn msb(&self, code: u32) -> u32 {
+        (code >> (self.bits - 1)) & 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_quant_roundtrip_monotone() {
+        let f = FixedFormat::new(3);
+        assert_eq!(f.levels(), 8);
+        let mut last = 0;
+        for i in 0..=100 {
+            let x = i as f32 / 100.0;
+            let c = f.quantize(x);
+            assert!(c >= last, "quantize must be monotone");
+            assert!(c < 8);
+            last = c;
+        }
+    }
+
+    #[test]
+    fn fixed_quant_error_bounded() {
+        let f = FixedFormat::new(8);
+        for i in 0..1000 {
+            let x = i as f32 / 1000.0;
+            let err = (f.fake_quant(x) - x).abs();
+            assert!(err <= 1.0 / 256.0 + 1e-6, "err {err} at {x}");
+        }
+    }
+
+    #[test]
+    fn fixed_quant_saturates() {
+        let f = FixedFormat::new(4);
+        assert_eq!(f.quantize(2.0), 15);
+        assert_eq!(f.quantize(-1.0), 0);
+        assert_eq!(f.quantize(1.0), 15);
+    }
+
+    #[test]
+    fn bitplanes_reassemble_code() {
+        let f = FixedFormat::new(5);
+        for i in 0..100 {
+            let x = i as f32 / 100.0;
+            let code = f.quantize(x);
+            let rebuilt: u32 = (0..5).map(|j| f.bitplane(x, j) << j).sum();
+            assert_eq!(rebuilt, code);
+        }
+    }
+
+    #[test]
+    fn signed_roundtrip() {
+        let f = SignedFixedFormat::new(8);
+        for i in -100..100 {
+            let x = i as f32 / 101.0;
+            let c = f.quantize(x);
+            let y = f.dequantize(c);
+            assert!((x - y).abs() <= 1.0 / 128.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn signed_msb_split_identity() {
+        // value = magnitude_bits - msb * 2^(n-1)  (paper Fig. 3)
+        let f = SignedFixedFormat::new(6);
+        for code in 0..64u32 {
+            let xb = f.magnitude_bits(code) as i64;
+            let msb = f.msb(code) as i64;
+            let v = xb - msb * (1 << 5);
+            let expect = if code >> 5 == 1 {
+                code as i64 - 64
+            } else {
+                code as i64
+            };
+            assert_eq!(v, expect);
+        }
+    }
+
+    #[test]
+    fn signed_negative_has_msb() {
+        let f = SignedFixedFormat::new(4);
+        assert_eq!(f.msb(f.quantize(-0.5)), 1);
+        assert_eq!(f.msb(f.quantize(0.5)), 0);
+    }
+}

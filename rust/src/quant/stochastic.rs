@@ -1,0 +1,182 @@
+//! LUT-based stochastic rounding (paper §Stochastic rounding).
+//!
+//! The paper augments the rounding function with a counter input: a
+//! sequence r(0..R) of pseudo-random thresholds is *baked into the
+//! table*, so at inference time rounding is a pure table lookup —
+//!
+//!   f(x, i) = floor(x)      if r(i) <= 1 + (floor(x) - x)/eps
+//!             floor(x)+eps  otherwise
+//!
+//! and the LUT size is R * 2^β(I) * β(O) bits.
+
+use crate::util::Rng;
+
+/// A stochastic-rounding LUT from `in_bits`-bit fixed codes to
+/// `out_bits`-bit codes (out_bits < in_bits; eps = 2^(in_bits-out_bits)
+/// input steps). Indexed by (code, counter).
+#[derive(Debug, Clone)]
+pub struct StochasticRounder {
+    pub in_bits: u32,
+    pub out_bits: u32,
+    /// Number of dither phases R.
+    pub phases: u32,
+    /// table[(i * 2^in_bits) + code] = rounded out-code.
+    table: Vec<u32>,
+    counter: u32,
+}
+
+impl StochasticRounder {
+    /// Build the table. `r(i)` is drawn from the deterministic PRNG so
+    /// the whole pipeline stays reproducible (the paper also allows a
+    /// 1-d dither/halftoning sequence — see [`Self::with_thresholds`]).
+    pub fn new(in_bits: u32, out_bits: u32, phases: u32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let thresholds: Vec<f64> = (0..phases).map(|_| rng.f64()).collect();
+        Self::with_thresholds(in_bits, out_bits, &thresholds)
+    }
+
+    /// Build with the classic 4x4 Bayer ordered-dither thresholds — the
+    /// paper's footnote 4: "r(i) can also be chosen using a 1-d
+    /// dithering or halftoning algorithm". 16 phases, uniformly spread.
+    pub fn bayer(in_bits: u32, out_bits: u32) -> Self {
+        const BAYER4: [u8; 16] = [0, 8, 2, 10, 12, 4, 14, 6, 3, 11, 1, 9, 15, 7, 13, 5];
+        let thresholds: Vec<f64> =
+            BAYER4.iter().map(|&v| (v as f64 + 0.5) / 16.0).collect();
+        Self::with_thresholds(in_bits, out_bits, &thresholds)
+    }
+
+    /// Build with explicit thresholds r(i) in [0,1) — e.g. a Bayer /
+    /// void-and-cluster dither sequence.
+    pub fn with_thresholds(in_bits: u32, out_bits: u32, thresholds: &[f64]) -> Self {
+        assert!(out_bits < in_bits, "rounding must drop bits");
+        assert!(in_bits <= 16);
+        let phases = thresholds.len() as u32;
+        assert!(phases >= 1);
+        let drop = in_bits - out_bits;
+        let eps = 1u32 << drop; // out-step measured in in-steps
+        let n_in = 1u32 << in_bits;
+        let out_max = (1u32 << out_bits) - 1;
+        let mut table = Vec::with_capacity((phases * n_in) as usize);
+        for &r in thresholds {
+            for code in 0..n_in {
+                let floor = code >> drop; // floor(x) in out-steps
+                let frac = (code & (eps - 1)) as f64 / eps as f64; // x - floor(x)
+                // r <= 1 - frac  => round down
+                let rounded = if r <= 1.0 - frac { floor } else { floor + 1 };
+                table.push(rounded.min(out_max));
+            }
+        }
+        StochasticRounder { in_bits, out_bits, phases, table, counter: 0 }
+    }
+
+    /// Round one code; increments the counter (mod R) exactly as the
+    /// paper specifies ("the index i is incremented (modulo R) each time
+    /// the LUT table is accessed").
+    #[inline]
+    pub fn round(&mut self, code: u32) -> u32 {
+        debug_assert!(code < 1 << self.in_bits);
+        let idx = (self.counter * (1 << self.in_bits) + code) as usize;
+        self.counter = (self.counter + 1) % self.phases;
+        self.table[idx]
+    }
+
+    /// Deterministic round at an explicit phase (no counter mutation).
+    #[inline]
+    pub fn round_at(&self, code: u32, phase: u32) -> u32 {
+        self.table[((phase % self.phases) * (1 << self.in_bits) + code) as usize]
+    }
+
+    /// LUT size in bits: R * 2^β(I) * β(O)  (paper formula).
+    pub fn size_bits(&self) -> u64 {
+        self.phases as u64 * (1u64 << self.in_bits) * self.out_bits as u64
+    }
+
+    pub fn reset(&mut self) {
+        self.counter = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_never_move() {
+        // codes that are multiples of eps are exact in the output grid
+        let mut r = StochasticRounder::new(8, 4, 16, 1);
+        for phase in 0..16 {
+            for out_code in 0..16u32 {
+                let code = out_code << 4;
+                assert_eq!(r.round_at(code, phase), out_code);
+            }
+        }
+        r.reset();
+    }
+
+    #[test]
+    fn rounds_to_adjacent_levels_only() {
+        let r = StochasticRounder::new(8, 4, 32, 2);
+        for phase in 0..32 {
+            for code in 0..256u32 {
+                let out = r.round_at(code, phase);
+                let floor = code >> 4;
+                assert!(out == floor || out == (floor + 1).min(15));
+            }
+        }
+    }
+
+    #[test]
+    fn expectation_is_unbiased() {
+        // average over many phases approximates the fractional part
+        let r = StochasticRounder::new(8, 4, 4096, 3);
+        let code = 0x13; // floor=1, frac=3/16
+        let mean: f64 = (0..4096)
+            .map(|p| r.round_at(code, p) as f64)
+            .sum::<f64>()
+            / 4096.0;
+        let expect = 1.0 + 3.0 / 16.0;
+        assert!((mean - expect).abs() < 0.03, "mean {mean} expect {expect}");
+    }
+
+    #[test]
+    fn counter_cycles_modulo_r() {
+        let mut r = StochasticRounder::new(4, 2, 3, 4);
+        let a: Vec<u32> = (0..6).map(|_| r.round(0b0110)).collect();
+        assert_eq!(a[0..3], a[3..6], "counter must cycle with period R");
+    }
+
+    #[test]
+    fn size_formula_matches_paper() {
+        let r = StochasticRounder::new(8, 4, 16, 5);
+        // R * 2^β(I) * β(O) = 16 * 256 * 4
+        assert_eq!(r.size_bits(), 16 * 256 * 4);
+    }
+
+    #[test]
+    fn bayer_dither_is_exactly_unbiased_over_a_period() {
+        // Bayer thresholds are uniformly spaced, so the mean over one
+        // full period is exact (not just statistically close): a code
+        // with fractional part f/16 rounds up in exactly f of 16 phases.
+        let r = StochasticRounder::bayer(8, 4);
+        assert_eq!(r.phases, 16);
+        for code in 0..256u32 {
+            let sum: u32 = (0..16).map(|p| r.round_at(code, p)).sum();
+            let floor = code >> 4;
+            let frac = code & 15;
+            let expect = if floor == 15 {
+                16 * 15 // saturated at the top level
+            } else {
+                16 * floor + frac
+            };
+            assert_eq!(sum, expect, "code {code}");
+        }
+    }
+
+    #[test]
+    fn saturates_at_top() {
+        let r = StochasticRounder::new(8, 4, 8, 6);
+        for phase in 0..8 {
+            assert_eq!(r.round_at(255, phase), 15);
+        }
+    }
+}

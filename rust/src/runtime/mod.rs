@@ -1,0 +1,110 @@
+//! PJRT runtime: loads the HLO-text artifacts exported by
+//! `python/compile/aot.py` and executes them on the XLA CPU client via
+//! the `xla` crate. This is the *reference* (multiplier-full) execution
+//! path the LUT engine is compared against; it is also proof that the
+//! JAX model and the Rust weights agree.
+//!
+//! Interchange is HLO **text**, not serialized protos — jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// A compiled XLA executable with a fixed input signature
+/// `f32[batch, features] -> (f32[batch, classes],)`.
+pub struct PjrtModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub features: usize,
+    pub classes: usize,
+    platform: String,
+}
+
+impl PjrtModel {
+    /// Load and compile an HLO text file. `batch`/`features`/`classes`
+    /// must match the shapes the artifact was lowered with.
+    pub fn load(path: &Path, batch: usize, features: usize, classes: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let platform = client.platform_name();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(PjrtModel { exe, batch, features, classes, platform })
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Run a full batch. `images` must be exactly `batch * features`
+    /// long; returns `batch * classes` logits.
+    pub fn infer_batch(&self, images: &[f32]) -> Result<Vec<f32>> {
+        ensure!(
+            images.len() == self.batch * self.features,
+            "expected {} values, got {}",
+            self.batch * self.features,
+            images.len()
+        );
+        let x = xla::Literal::vec1(images)
+            .reshape(&[self.batch as i64, self.features as i64])
+            .context("reshaping input literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[x])?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True -> 1-tuple
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let logits = out.to_vec::<f32>().context("reading logits")?;
+        ensure!(
+            logits.len() == self.batch * self.classes,
+            "expected {} logits, got {}",
+            self.batch * self.classes,
+            logits.len()
+        );
+        Ok(logits)
+    }
+
+    /// Run up to `batch` images, padding the tail with zeros; returns
+    /// one logits row per input image.
+    pub fn infer_padded(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        ensure!(images.len() <= self.batch, "batch overflow");
+        let mut flat = vec![0f32; self.batch * self.features];
+        for (i, img) in images.iter().enumerate() {
+            ensure!(img.len() == self.features, "image {i} has wrong size");
+            flat[i * self.features..(i + 1) * self.features].copy_from_slice(img);
+        }
+        let logits = self.infer_batch(&flat)?;
+        Ok(images
+            .iter()
+            .enumerate()
+            .map(|(i, _)| logits[i * self.classes..(i + 1) * self.classes].to_vec())
+            .collect())
+    }
+
+    /// Classify a batch (argmax per row).
+    pub fn classify(&self, images: &[Vec<f32>]) -> Result<Vec<usize>> {
+        Ok(self
+            .infer_padded(images)?
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+}
+
+/// Standard artifact path for a reference model.
+pub fn ref_hlo_path(artifacts: &Path, arch: crate::nn::Arch, batch: usize) -> std::path::PathBuf {
+    artifacts.join(format!("{}_ref_b{batch}.hlo.txt", arch.name()))
+}
+
+// NOTE: runtime tests live in rust/tests/runtime_integration.rs — they
+// need `make artifacts` to have produced HLO files and are integration-
+// scoped, not unit-scoped.

@@ -1,0 +1,176 @@
+//! 2-D convolution / pooling on [batch, h, w, c] (NHWC) tensors — the
+//! reference implementation of the paper's convolutional layers (LeNet:
+//! 5×5 'same' convolutions + 2×2 max pooling).
+
+use super::Tensor;
+use crate::tensor::ops::REF_MACS;
+use std::sync::atomic::Ordering;
+
+/// 'same'-padded conv2d. `input`: [b,h,w,cin], `filter`: [fh,fw,cin,cout],
+/// `bias`: [cout]. Stride 1. Charges `b*h*w*fh*fw*cin*cout` MACs.
+pub fn conv2d_same(input: &Tensor, filter: &Tensor, bias: &Tensor) -> Tensor {
+    assert_eq!(input.rank(), 4);
+    assert_eq!(filter.rank(), 4);
+    let (b, h, w, cin) = (
+        input.shape()[0],
+        input.shape()[1],
+        input.shape()[2],
+        input.shape()[3],
+    );
+    let (fh, fw, fcin, cout) = (
+        filter.shape()[0],
+        filter.shape()[1],
+        filter.shape()[2],
+        filter.shape()[3],
+    );
+    assert_eq!(cin, fcin, "conv channel mismatch");
+    assert_eq!(bias.shape(), &[cout]);
+    let (ph, pw) = (fh / 2, fw / 2);
+    let mut out = vec![0.0f32; b * h * w * cout];
+    let id = input.data();
+    let fd = filter.data();
+    for bi in 0..b {
+        for oy in 0..h {
+            for ox in 0..w {
+                let obase = ((bi * h + oy) * w + ox) * cout;
+                out[obase..obase + cout].copy_from_slice(bias.data());
+                for ky in 0..fh {
+                    let iy = oy as isize + ky as isize - ph as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..fw {
+                        let ix = ox as isize + kx as isize - pw as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let ibase = ((bi * h + iy as usize) * w + ix as usize) * cin;
+                        let fbase = (ky * fw + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let iv = id[ibase + ci];
+                            if iv == 0.0 {
+                                continue;
+                            }
+                            let frow = &fd[fbase + ci * cout..fbase + (ci + 1) * cout];
+                            let orow = &mut out[obase..obase + cout];
+                            for (o, &f) in orow.iter_mut().zip(frow) {
+                                *o += iv * f;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    REF_MACS.fetch_add((b * h * w * fh * fw * cin * cout) as u64, Ordering::Relaxed);
+    Tensor::new(&[b, h, w, cout], out)
+}
+
+/// 2×2 max pooling, stride 2. Comparison-only (no multiplies), as the
+/// paper notes for pooling layers.
+pub fn maxpool2(input: &Tensor) -> Tensor {
+    assert_eq!(input.rank(), 4);
+    let (b, h, w, c) = (
+        input.shape()[0],
+        input.shape()[1],
+        input.shape()[2],
+        input.shape()[3],
+    );
+    assert!(h % 2 == 0 && w % 2 == 0, "maxpool2 needs even h,w");
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; b * oh * ow * c];
+    let id = input.data();
+    for bi in 0..b {
+        for y in 0..h {
+            for x in 0..w {
+                for ci in 0..c {
+                    let v = id[((bi * h + y) * w + x) * c + ci];
+                    let o = &mut out[((bi * oh + y / 2) * ow + x / 2) * c + ci];
+                    if v > *o {
+                        *o = v;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(&[b, oh, ow, c], out)
+}
+
+/// Flatten [b, ...] -> [b, prod(rest)].
+pub fn flatten(input: &Tensor) -> Tensor {
+    let b = input.shape()[0];
+    let rest: usize = input.shape()[1..].iter().product();
+    input.clone().reshape(&[b, rest])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{ref_macs, reset_ref_macs};
+
+    #[test]
+    fn conv_identity_filter() {
+        // 1x1 filter = passthrough scale
+        let input = Tensor::new(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let filter = Tensor::new(&[1, 1, 1, 1], vec![2.0]);
+        let bias = Tensor::zeros(&[1]);
+        let out = conv2d_same(&input, &filter, &bias);
+        assert_eq!(out.data(), &[2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn conv_box_filter_sums_neighbourhood() {
+        let input = Tensor::full(&[1, 3, 3, 1], 1.0);
+        let filter = Tensor::full(&[3, 3, 1, 1], 1.0);
+        let bias = Tensor::zeros(&[1]);
+        let out = conv2d_same(&input, &filter, &bias);
+        // centre pixel sees all 9; corner sees 4
+        assert_eq!(out.data()[4], 9.0);
+        assert_eq!(out.data()[0], 4.0);
+    }
+
+    #[test]
+    fn conv_bias_applied() {
+        let input = Tensor::zeros(&[1, 2, 2, 1]);
+        let filter = Tensor::zeros(&[3, 3, 1, 2]);
+        let bias = Tensor::new(&[2], vec![0.5, -0.5]);
+        let out = conv2d_same(&input, &filter, &bias);
+        assert_eq!(out.shape(), &[1, 2, 2, 2]);
+        assert_eq!(out.data()[0], 0.5);
+        assert_eq!(out.data()[1], -0.5);
+    }
+
+    #[test]
+    fn conv_charges_macs() {
+        reset_ref_macs();
+        let input = Tensor::zeros(&[1, 4, 4, 2]);
+        let filter = Tensor::zeros(&[5, 5, 2, 3]);
+        let bias = Tensor::zeros(&[3]);
+        let _ = conv2d_same(&input, &filter, &bias);
+        assert_eq!(ref_macs(), (4 * 4 * 5 * 5 * 2 * 3) as u64);
+    }
+
+    #[test]
+    fn maxpool_takes_max() {
+        let input = Tensor::new(&[1, 2, 2, 1], vec![1.0, 5.0, 3.0, 2.0]);
+        let out = maxpool2(&input);
+        assert_eq!(out.shape(), &[1, 1, 1, 1]);
+        assert_eq!(out.data(), &[5.0]);
+    }
+
+    #[test]
+    fn maxpool_per_channel() {
+        let input = Tensor::new(
+            &[1, 2, 2, 2],
+            vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0],
+        );
+        let out = maxpool2(&input);
+        assert_eq!(out.data(), &[4.0, 40.0]);
+    }
+
+    #[test]
+    fn flatten_shape() {
+        let input = Tensor::zeros(&[2, 3, 4, 5]);
+        assert_eq!(flatten(&input).shape(), &[2, 60]);
+    }
+}

@@ -1,0 +1,183 @@
+//! Dense tensor substrate: the minimal numeric fabric the reference
+//! (multiplier-full) network and the trainer run on. Row-major `f32`
+//! storage; shapes are validated at op boundaries.
+//!
+//! This is deliberately a small, dependency-free substrate — the paper's
+//! comparison baseline is "pq multiply-and-add operations for a standard
+//! implementation of Wx + b", and [`ops::matmul`] is exactly that
+//! implementation (with a multiply counter so the comparison is honest).
+
+pub mod ops;
+pub mod conv;
+
+use crate::util::Rng;
+
+/// Row-major dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from raw parts; panics if `data.len() != prod(shape)`.
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} != data len {}", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// All-`v` tensor.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    /// He-normal initialisation (used by the in-Rust trainer).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.normal() * std).collect(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape without copying; total element count must match.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {shape:?}", self.shape);
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D element access.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Index of the maximum element (ties: first).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Row-wise argmax for a [batch, classes] tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.rank(), 2);
+        let (b, c) = (self.shape[0], self.shape[1]);
+        (0..b)
+            .map(|i| {
+                let row = &self.data[i * c..(i + 1) * c];
+                let mut best = 0;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    /// Max absolute difference against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        let t = Tensor::new(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn new_rejects_mismatch() {
+        Tensor::new(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(&[2, 3], (0..6).map(|x| x as f32).collect());
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.shape(), &[3, 2]);
+    }
+
+    #[test]
+    fn argmax_ties_first() {
+        let t = Tensor::new(&[4], vec![1.0, 3.0, 3.0, 2.0]);
+        assert_eq!(t.argmax(), 1);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let t = Tensor::new(&[2, 3], vec![0.0, 1.0, 0.5, 9.0, -1.0, 3.0]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Rng::new(11);
+        let mut r2 = Rng::new(11);
+        let a = Tensor::randn(&[4, 4], 0.1, &mut r1);
+        let b = Tensor::randn(&[4, 4], 0.1, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn max_abs_diff_zero_for_same() {
+        let t = Tensor::full(&[3, 3], 1.5);
+        assert_eq!(t.max_abs_diff(&t.clone()), 0.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Elementwise and linear-algebra ops over [`Tensor`], with an op-count
+//! instrument so the reference path's multiply-and-add cost is measured,
+//! not asserted.
+
+use super::Tensor;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Global multiply-and-add counter for the *reference* (multiplier-full)
+/// path. The LUT engine has its own counters in `engine::counters`; this
+/// one exists so tests can prove the reference path really does the
+/// `p*q` MACs the paper charges it with.
+pub static REF_MACS: AtomicU64 = AtomicU64::new(0);
+
+/// Reset the reference MAC counter (tests/benches).
+pub fn reset_ref_macs() {
+    REF_MACS.store(0, Ordering::Relaxed);
+}
+
+/// Read the reference MAC counter.
+pub fn ref_macs() -> u64 {
+    REF_MACS.load(Ordering::Relaxed)
+}
+
+/// `a @ b` for a:[m,k], b:[k,n] — the paper's "standard implementation
+/// of Wx+b" baseline: m*k*n multiply-and-adds.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dim {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // skip but still charge: paper charges dense cost
+            }
+            let brow = &bd[l * n..(l + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    REF_MACS.fetch_add((m * k * n) as u64, Ordering::Relaxed);
+    Tensor::new(&[m, n], out)
+}
+
+/// Broadcast-add a row vector b:[n] to every row of a:[m,n].
+pub fn add_bias(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 1);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(b.shape()[0], n);
+    let mut out = a.data().to_vec();
+    for i in 0..m {
+        for j in 0..n {
+            out[i * n + j] += b.data()[j];
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// Elementwise ReLU — comparison only, no multiplies (paper: "compare
+/// and branch").
+pub fn relu(a: &Tensor) -> Tensor {
+    Tensor::new(
+        a.shape(),
+        a.data().iter().map(|&x| if x > 0.0 { x } else { 0.0 }).collect(),
+    )
+}
+
+/// Elementwise add of same-shape tensors.
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    Tensor::new(
+        a.shape(),
+        a.data().iter().zip(b.data()).map(|(x, y)| x + y).collect(),
+    )
+}
+
+/// Scale by a constant (training-path only; never on the LUT data path).
+pub fn scale(a: &Tensor, s: f32) -> Tensor {
+    Tensor::new(a.shape(), a.data().iter().map(|&x| x * s).collect())
+}
+
+/// Row-wise softmax for [batch, classes].
+pub fn softmax_rows(a: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let row = &a.data()[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for j in 0..n {
+            let e = (row[j] - mx).exp();
+            out[i * n + j] = e;
+            sum += e;
+        }
+        for j in 0..n {
+            out[i * n + j] /= sum;
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// Transpose a 2-D tensor.
+pub fn transpose(a: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = a.data()[i * n + j];
+        }
+    }
+    Tensor::new(&[n, m], out)
+}
+
+/// Mean cross-entropy between softmax probs:[b,c] and integer labels.
+pub fn cross_entropy(probs: &Tensor, labels: &[usize]) -> f32 {
+    let (b, c) = (probs.shape()[0], probs.shape()[1]);
+    assert_eq!(b, labels.len());
+    let mut loss = 0.0f32;
+    for (i, &l) in labels.iter().enumerate() {
+        loss -= probs.data()[i * c + l].max(1e-12).ln();
+    }
+    loss / b as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], d: &[f32]) -> Tensor {
+        Tensor::new(shape, d.to_vec())
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = t(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let b = t(&[2, 2], &[1.0, 1.0, 1.0, 1.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_counts_macs() {
+        reset_ref_macs();
+        let a = Tensor::full(&[3, 5], 1.0);
+        let b = Tensor::full(&[5, 7], 1.0);
+        let _ = matmul(&a, &b);
+        assert_eq!(ref_macs(), 3 * 5 * 7);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = t(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let eye = t(&[2, 2], &[1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(matmul(&a, &eye).data(), a.data());
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_rejects_bad_dims() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        let _ = matmul(&a, &b);
+    }
+
+    #[test]
+    fn add_bias_broadcasts() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = t(&[3], &[1.0, 2.0, 3.0]);
+        let c = add_bias(&a, &b);
+        assert_eq!(c.data(), &[1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let a = t(&[4], &[-1.0, 0.0, 0.5, 2.0]);
+        assert_eq!(relu(&a).data(), &[0.0, 0.0, 0.5, 2.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let a = t(&[2, 3], &[1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let s = softmax_rows(&a);
+        for i in 0..2 {
+            let sum: f32 = s.data()[i * 3..(i + 1) * 3].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let a = t(&[1, 3], &[1.0, 2.0, 3.0]);
+        let b = t(&[1, 3], &[101.0, 102.0, 103.0]);
+        assert!(softmax_rows(&a).max_abs_diff(&softmax_rows(&b)) < 1e-6);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = t(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(transpose(&transpose(&a)), a);
+    }
+
+    #[test]
+    fn cross_entropy_perfect_prediction_is_zero() {
+        let p = t(&[1, 2], &[1.0, 0.0]);
+        assert!(cross_entropy(&p, &[0]) < 1e-6);
+    }
+}

@@ -1,0 +1,280 @@
+//! In-Rust SGD trainer (softmax cross-entropy, minibatch SGD, optional
+//! quantization-aware inputs). The primary training path is JAX
+//! (`python/compile/train.py`) — this trainer exists so the Rust stack
+//! is self-contained end-to-end (paper's linear classifier trains in
+//! seconds) and so tests can train tiny models without artifacts.
+
+use crate::data::{Batches, Split};
+use crate::nn::{Arch, Layer, Model};
+use crate::quant::FixedFormat;
+use crate::tensor::ops::{add_bias, cross_entropy, matmul, relu, softmax_rows, transpose};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Trainer hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub lr: f32,
+    pub steps: usize,
+    pub batch: usize,
+    pub seed: u64,
+    /// Fake-quantize inputs to this many fixed-point bits during
+    /// training (the paper's "insert quantization operations before the
+    /// input"). None = full precision.
+    pub input_bits: Option<u32>,
+    /// L2 weight decay.
+    pub weight_decay: f32,
+    /// Print loss every n steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            lr: 0.1,
+            steps: 2000,
+            batch: 100,
+            seed: 0x7AB1E7,
+            input_bits: None,
+            weight_decay: 1e-4,
+            log_every: 0,
+        }
+    }
+}
+
+/// Dense-stack trainer state: weights + biases per layer, ReLU between.
+pub struct DenseNet {
+    /// (w [p,q], b [p]) per layer.
+    pub layers: Vec<(Tensor, Tensor)>,
+}
+
+impl DenseNet {
+    /// He-init a stack with the given layer widths, e.g. [784, 10] for
+    /// the linear classifier or [784, 1024, 512, 10] for the MLP.
+    pub fn init(widths: &[usize], rng: &mut Rng) -> DenseNet {
+        assert!(widths.len() >= 2);
+        let layers = widths
+            .windows(2)
+            .map(|wh| {
+                let (q, p) = (wh[0], wh[1]);
+                let std = (2.0 / q as f32).sqrt();
+                (Tensor::randn(&[p, q], std, rng), Tensor::zeros(&[p]))
+            })
+            .collect();
+        DenseNet { layers }
+    }
+
+    /// Forward pass keeping pre-activations for backprop.
+    /// Returns (activations after each ReLU incl. input, logits).
+    fn forward_cached(&self, x: &Tensor) -> (Vec<Tensor>, Tensor) {
+        let mut acts = vec![x.clone()];
+        let mut cur = x.clone();
+        for (i, (w, b)) in self.layers.iter().enumerate() {
+            let z = add_bias(&matmul(&cur, &transpose(w)), b);
+            if i + 1 < self.layers.len() {
+                cur = relu(&z);
+                acts.push(cur.clone());
+            } else {
+                return (acts, z);
+            }
+        }
+        unreachable!()
+    }
+
+    /// One SGD step on a batch; returns the loss.
+    pub fn step(&mut self, x: &Tensor, labels: &[usize], lr: f32, wd: f32) -> f32 {
+        let bsz = labels.len();
+        let (acts, logits) = self.forward_cached(x);
+        let probs = softmax_rows(&logits);
+        let loss = cross_entropy(&probs, labels);
+
+        // dL/dlogits = (probs - onehot) / b
+        let c = logits.shape()[1];
+        let mut delta = probs.data().to_vec();
+        for (i, &l) in labels.iter().enumerate() {
+            delta[i * c + l] -= 1.0;
+        }
+        for d in &mut delta {
+            *d /= bsz as f32;
+        }
+        let mut delta = Tensor::new(&[bsz, c], delta);
+
+        for li in (0..self.layers.len()).rev() {
+            let a_in = &acts[li];
+            // grads
+            let gw = matmul(&transpose(&delta), a_in); // [p, q]
+            let gb: Vec<f32> = {
+                let (b_, p) = (delta.shape()[0], delta.shape()[1]);
+                (0..p)
+                    .map(|j| (0..b_).map(|i| delta.at2(i, j)).sum())
+                    .collect()
+            };
+            // propagate before updating weights
+            if li > 0 {
+                let mut dprev = matmul(&delta, &self.layers[li].0); // [b, q]
+                // ReLU mask from a_in (post-ReLU activations)
+                for (d, &a) in dprev.data_mut().iter_mut().zip(a_in.data()) {
+                    if a <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+                delta = dprev;
+            }
+            // SGD + weight decay
+            let (w, b) = &mut self.layers[li];
+            for (wv, gv) in w.data_mut().iter_mut().zip(gw.data()) {
+                *wv -= lr * (gv + wd * *wv);
+            }
+            for (bv, gv) in b.data_mut().iter_mut().zip(&gb) {
+                *bv -= lr * gv;
+            }
+        }
+        loss
+    }
+
+    /// Convert to an inference [`Model`] with the right architecture tag.
+    pub fn into_model(self) -> Model {
+        let n = self.layers.len();
+        let arch = match n {
+            1 => Arch::Linear,
+            3 => Arch::Mlp,
+            _ => Arch::Mlp, // generic dense stack: tag as MLP
+        };
+        let mut layers = Vec::new();
+        for (i, (w, b)) in self.layers.into_iter().enumerate() {
+            layers.push(Layer::Dense { w, b });
+            if i + 1 < n {
+                layers.push(Layer::Relu);
+            }
+        }
+        Model { arch, layers, input_shape: vec![784] }
+    }
+}
+
+/// Train a dense stack on a split. `widths` excludes nothing: pass the
+/// full ladder (e.g. `[784, 10]`).
+pub fn train_dense(split: &Split, widths: &[usize], cfg: &TrainConfig) -> Model {
+    let mut rng = Rng::new(cfg.seed);
+    let mut net = DenseNet::init(widths, &mut rng);
+    let quant = cfg.input_bits.map(FixedFormat::new);
+    let mut step = 0usize;
+    let mut epoch = 0u64;
+    'outer: loop {
+        for (mut images, labels) in Batches::new(split, cfg.batch, cfg.seed ^ epoch) {
+            if let Some(fmt) = quant {
+                for v in &mut images {
+                    *v = fmt.fake_quant(*v);
+                }
+            }
+            let x = Tensor::new(&[labels.len(), widths[0]], images);
+            let loss = net.step(&x, &labels, cfg.lr, cfg.weight_decay);
+            step += 1;
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                eprintln!("step {step}: loss {loss:.4}");
+            }
+            if step >= cfg.steps {
+                break 'outer;
+            }
+        }
+        epoch += 1;
+    }
+    net.into_model()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Kind;
+
+    fn toy_dataset(kind: Kind, n: usize) -> Split {
+        let (px, lb) = crate::data::synth::generate(kind, n, 77);
+        Split {
+            images: px.iter().map(|&v| v as f32 / 255.0).collect(),
+            labels: lb.iter().map(|&l| l as usize).collect(),
+        }
+    }
+
+    #[test]
+    fn linear_learns_digits() {
+        let train = toy_dataset(Kind::Digits, 600);
+        let test = toy_dataset(Kind::Digits, 200);
+        let cfg = TrainConfig { steps: 300, lr: 0.3, ..Default::default() };
+        let model = train_dense(&train, &[784, 10], &cfg);
+        let x = Tensor::new(&[test.len(), 784], test.images.clone());
+        let acc = model.accuracy(&x, &test.labels);
+        assert!(acc > 0.8, "linear classifier only reached {acc}");
+    }
+
+    #[test]
+    fn quant_aware_training_still_learns() {
+        let train = toy_dataset(Kind::Digits, 600);
+        let cfg = TrainConfig {
+            steps: 300,
+            lr: 0.3,
+            input_bits: Some(3),
+            ..Default::default()
+        };
+        let model = train_dense(&train, &[784, 10], &cfg);
+        // evaluate on 3-bit quantized inputs, as deployed
+        let test = toy_dataset(Kind::Digits, 200);
+        let fmt = FixedFormat::new(3);
+        let xq: Vec<f32> = test.images.iter().map(|&v| fmt.fake_quant(v)).collect();
+        let x = Tensor::new(&[test.len(), 784], xq);
+        let acc = model.accuracy(&x, &test.labels);
+        assert!(acc > 0.75, "QAT linear reached only {acc}");
+    }
+
+    #[test]
+    fn tiny_mlp_beats_linear_on_fashion() {
+        let train = toy_dataset(Kind::Fashion, 800);
+        let test = toy_dataset(Kind::Fashion, 200);
+        let lin = train_dense(
+            &train,
+            &[784, 10],
+            &TrainConfig { steps: 250, lr: 0.2, ..Default::default() },
+        );
+        let mlp = train_dense(
+            &train,
+            &[784, 64, 10],
+            &TrainConfig { steps: 400, lr: 0.2, ..Default::default() },
+        );
+        let x = Tensor::new(&[test.len(), 784], test.images.clone());
+        let al = lin.accuracy(&x, &test.labels);
+        let am = mlp.accuracy(&x, &test.labels);
+        assert!(am > 0.6, "mlp acc {am}");
+        assert!(am + 0.05 >= al, "mlp ({am}) should not lose badly to linear ({al})");
+    }
+
+    #[test]
+    fn loss_decreases() {
+        let train = toy_dataset(Kind::Digits, 300);
+        let mut rng = Rng::new(5);
+        let mut net = DenseNet::init(&[784, 10], &mut rng);
+        let x = Tensor::new(&[100, 784], train.images[..100 * 784].to_vec());
+        let labels = &train.labels[..100];
+        let first = net.step(&x, labels, 0.2, 0.0);
+        let mut last = first;
+        for _ in 0..30 {
+            last = net.step(&x, labels, 0.2, 0.0);
+        }
+        assert!(last < first * 0.5, "loss did not drop: {first} -> {last}");
+    }
+
+    #[test]
+    fn weight_decay_shrinks_weights() {
+        let train = toy_dataset(Kind::Digits, 100);
+        let x = Tensor::new(&[50, 784], train.images[..50 * 784].to_vec());
+        let labels = &train.labels[..50];
+        let mut rng = Rng::new(6);
+        let mut a = DenseNet::init(&[784, 10], &mut rng);
+        let mut b = DenseNet { layers: a.layers.clone() };
+        for _ in 0..20 {
+            a.step(&x, labels, 0.1, 0.0);
+            b.step(&x, labels, 0.1, 0.01);
+        }
+        let norm = |n: &DenseNet| -> f32 {
+            n.layers[0].0.data().iter().map(|v| v * v).sum()
+        };
+        assert!(norm(&b) < norm(&a));
+    }
+}

@@ -1,0 +1,111 @@
+//! CLI integration: drives the `tablenet` binary end-to-end the way a
+//! user would (gen-data, train, eval, plan, sweeps) in a temp sandbox.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_tablenet"))
+}
+
+fn sandbox(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tablenet_cli_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["gen-data", "train", "eval", "sweep-bits", "sweep-partitions", "serve"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn unknown_command_fails_with_message() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn gen_data_writes_idx_files() {
+    let dir = sandbox("gendata");
+    let out = bin()
+        .args(["gen-data", "--dir"])
+        .arg(dir.join("synth"))
+        .args(["--train", "60", "--test", "20"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    for f in [
+        "train-images-idx3-ubyte",
+        "t10k-labels-idx1-ubyte",
+        "fashion-train-images-idx3-ubyte",
+    ] {
+        assert!(dir.join("synth").join(f).exists(), "missing {f}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_then_eval_roundtrip() {
+    let dir = sandbox("traineval");
+    let weights = dir.join("w.bin");
+    let out = bin()
+        .args(["train", "--arch", "linear", "--steps", "400", "--dir"])
+        .arg(dir.join("synth"))
+        .args(["--train", "800", "--test", "200", "--out"])
+        .arg(&weights)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(weights.exists());
+
+    let out = bin()
+        .args(["eval", "--arch", "linear", "--weights"])
+        .arg(&weights)
+        .args(["--dir"])
+        .arg(dir.join("synth"))
+        .args(["--train", "800", "--test", "200", "--n", "100"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("LUT engine"));
+    assert!(text.contains("mults=0"), "eval must report zero multiplies: {text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn plan_reports_paper_numbers() {
+    let out = bin().arg("plan").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("17.50 MiB"), "{text}");
+    assert!(text.contains("14652918"), "{text}");
+    assert!(text.contains("2320"), "{text}");
+}
+
+#[test]
+fn sweep_partitions_planner_only_works_without_weights() {
+    let dir = sandbox("sweep");
+    let out = bin()
+        .args(["sweep-partitions", "--arch", "mlp", "--weights", "/nonexistent.bin"])
+        .args(["--dir"])
+        .arg(dir.join("synth"))
+        .args(["--train", "60", "--test", "20"])
+        .args(["--csv-out"])
+        .arg(dir.join("fig7.csv"))
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let csv = std::fs::read_to_string(dir.join("fig7.csv")).unwrap();
+    assert!(csv.lines().count() > 5);
+    assert!(csv.starts_with("config,"));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,178 @@
+//! Coordinator integration: the serving stack over the real LUT engine,
+//! including load, backpressure, failure injection and the end-to-end
+//! multiplier-less invariant.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use tablenet::config::ServeConfig;
+use tablenet::coordinator::{Backend, Coordinator, InferOutput, SubmitError};
+use tablenet::data::synth::Kind;
+use tablenet::data::Split;
+use tablenet::engine::counters::Counters;
+use tablenet::engine::plan::EnginePlan;
+use tablenet::engine::LutModel;
+use tablenet::train::{train_dense, TrainConfig};
+
+fn toy_split(n: usize, seed: u64) -> Split {
+    let (px, lb) = tablenet::data::synth::generate(Kind::Digits, n, seed);
+    Split {
+        images: px.iter().map(|&v| v as f32 / 255.0).collect(),
+        labels: lb.iter().map(|&v| v as usize).collect(),
+    }
+}
+
+fn trained_engine() -> (LutModel, Split) {
+    let train = toy_split(800, 21);
+    let test = toy_split(200, 22);
+    let model = train_dense(
+        &train,
+        &[784, 10],
+        &TrainConfig { steps: 400, lr: 0.25, ..Default::default() },
+    );
+    (
+        LutModel::compile(&model, &EnginePlan::linear_default()).unwrap(),
+        test,
+    )
+}
+
+#[test]
+fn serve_run_preserves_accuracy_and_multiplier_less_invariant() {
+    let (engine, test) = trained_engine();
+    // engine accuracy measured directly
+    let (direct_acc, _) = engine.accuracy(&test.images, 784, &test.labels);
+
+    let coord = Coordinator::start(
+        Arc::new(engine),
+        &ServeConfig { max_batch: 16, max_wait_us: 300, workers: 2, queue_cap: 512 },
+    );
+    let test = Arc::new(test);
+    let mut joins = Vec::new();
+    for t in 0..4usize {
+        let client = coord.client();
+        let test = test.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut correct = 0usize;
+            for i in 0..50 {
+                let idx = (t * 50 + i) % test.len();
+                let r = client.infer_blocking(test.image(idx).to_vec()).unwrap();
+                if r.class == test.labels[idx] {
+                    correct += 1;
+                }
+            }
+            correct
+        }));
+    }
+    let correct: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed, 200);
+    snap.ops.assert_multiplier_less();
+    let served_acc = correct as f64 / 200.0;
+    assert!(
+        (served_acc - direct_acc).abs() < 0.1,
+        "served accuracy {served_acc} vs direct {direct_acc}"
+    );
+    // per-request op counters aggregated: 200 requests x 168 evals
+    assert_eq!(snap.ops.lut_evals, 200 * 168);
+}
+
+#[test]
+fn saturation_rejects_but_never_loses_accepted_requests() {
+    struct Slow(AtomicUsize);
+    impl Backend for Slow {
+        fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            self.0.fetch_add(images.len(), Ordering::SeqCst);
+            images
+                .iter()
+                .map(|_| InferOutput {
+                    class: 0,
+                    logits: vec![0.0],
+                    counters: Counters::default(),
+                })
+                .collect()
+        }
+        fn name(&self) -> &'static str {
+            "slow"
+        }
+    }
+    let backend = Arc::new(Slow(AtomicUsize::new(0)));
+    let coord = Coordinator::start(
+        backend.clone(),
+        &ServeConfig { max_batch: 4, max_wait_us: 100, workers: 1, queue_cap: 8 },
+    );
+    let mut joins = Vec::new();
+    for _ in 0..64 {
+        let client = coord.client();
+        joins.push(std::thread::spawn(move || client.infer(vec![0.0]).is_ok()));
+    }
+    let accepted = joins.into_iter().filter(|_| true).map(|j| j.join().unwrap()).filter(|&ok| ok).count();
+    let snap = coord.shutdown();
+    // every accepted request was executed exactly once
+    assert_eq!(snap.completed as usize, accepted);
+    assert_eq!(backend.0.load(Ordering::SeqCst), accepted);
+    assert_eq!(snap.completed + snap.rejected, 64);
+}
+
+#[test]
+fn requests_after_shutdown_fail_cleanly() {
+    let (engine, test) = trained_engine();
+    let coord = Coordinator::start(Arc::new(engine), &ServeConfig::default());
+    let client = coord.client();
+    let img = test.image(0).to_vec();
+    assert!(client.infer_blocking(img.clone()).is_ok());
+    coord.shutdown();
+    // the pipeline is gone; a subsequent submit must error, not hang
+    match client.infer_blocking(img) {
+        Err(SubmitError::ShutDown) => {}
+        other => panic!("expected ShutDown, got {other:?}"),
+    }
+}
+
+#[test]
+fn batching_amortizes_throughput() {
+    // with a per-batch fixed cost backend, larger max_batch must yield
+    // fewer batches for the same request count
+    struct Counting;
+    impl Backend for Counting {
+        fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+            std::thread::sleep(std::time::Duration::from_micros(300));
+            images
+                .iter()
+                .map(|_| InferOutput {
+                    class: 0,
+                    logits: vec![],
+                    counters: Counters::default(),
+                })
+                .collect()
+        }
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+    }
+    let mut batch_counts = Vec::new();
+    for max_batch in [1usize, 16] {
+        let coord = Coordinator::start(
+            Arc::new(Counting),
+            &ServeConfig { max_batch, max_wait_us: 2000, workers: 1, queue_cap: 256 },
+        );
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let client = coord.client();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..16 {
+                    client.infer_blocking(vec![0.0]).unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 128);
+        batch_counts.push(snap.batches);
+    }
+    assert!(
+        batch_counts[1] < batch_counts[0],
+        "batching had no effect: {batch_counts:?}"
+    );
+}

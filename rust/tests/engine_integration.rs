@@ -1,0 +1,170 @@
+//! Cross-module integration: trained models -> LUT engine -> accuracy
+//! tracks the reference across all three architectures; engine size and
+//! eval counts agree with the planner; JAX artifacts load when present.
+
+use std::path::Path;
+use tablenet::data::synth::Kind;
+use tablenet::data::{load_or_generate, Split};
+use tablenet::engine::plan::{AffineMode, EnginePlan};
+use tablenet::engine::LutModel;
+use tablenet::nn::{weights, Arch, Model};
+use tablenet::tensor::Tensor;
+use tablenet::train::{train_dense, TrainConfig};
+use tablenet::util::Rng;
+
+fn toy_split(kind: Kind, n: usize, seed: u64) -> Split {
+    let (px, lb) = tablenet::data::synth::generate(kind, n, seed);
+    Split {
+        images: px.iter().map(|&v| v as f32 / 255.0).collect(),
+        labels: lb.iter().map(|&v| v as usize).collect(),
+    }
+}
+
+#[test]
+fn linear_lut_tracks_reference_accuracy() {
+    let train = toy_split(Kind::Digits, 1200, 1);
+    let test = toy_split(Kind::Digits, 400, 2);
+    let model = train_dense(
+        &train,
+        &[784, 10],
+        &TrainConfig { steps: 600, lr: 0.25, input_bits: Some(3), ..Default::default() },
+    );
+    let x = Tensor::new(&[test.len(), 784], test.images.clone());
+    let ref_acc = model.accuracy(&x, &test.labels);
+
+    let lut = LutModel::compile(&model, &EnginePlan::linear_default()).unwrap();
+    let (lut_acc, ctr) = lut.accuracy(&test.images, 784, &test.labels);
+    ctr.assert_multiplier_less();
+    assert!(
+        (lut_acc - ref_acc).abs() < 0.03,
+        "LUT {lut_acc} vs ref {ref_acc} drifted"
+    );
+    // paper: 56 LUTs, 168 evals at 3 bits / m=14
+    assert_eq!(ctr.lut_evals, 168);
+}
+
+#[test]
+fn memory_parity_config_matches_reference_footprint() {
+    // paper: "784 LUTs totaling about 30.6 KiB ... same memory footprint
+    // as the reference model" (30.7 KiB)
+    let train = toy_split(Kind::Digits, 400, 3);
+    let model = train_dense(
+        &train,
+        &[784, 10],
+        &TrainConfig { steps: 100, lr: 0.3, ..Default::default() },
+    );
+    let lut = LutModel::compile(&model, &EnginePlan::linear_parity()).unwrap();
+    let lut_kib = lut.size_bits() as f64 / 8.0 / 1024.0;
+    let ref_kib = model.weight_bytes() as f64 / 1024.0;
+    assert!((lut_kib - 30.625).abs() < 0.1, "lut {lut_kib} KiB");
+    assert!((ref_kib - 30.66).abs() < 0.1, "ref {ref_kib} KiB");
+}
+
+#[test]
+fn small_mlp_float_pipeline_tracks_reference() {
+    let train = toy_split(Kind::Digits, 1500, 5);
+    let test = toy_split(Kind::Digits, 300, 6);
+    let model = train_dense(
+        &train,
+        &[784, 64, 10],
+        &TrainConfig { steps: 700, lr: 0.2, ..Default::default() },
+    );
+    let x = Tensor::new(&[test.len(), 784], test.images.clone());
+    let ref_acc = model.accuracy(&x, &test.labels);
+    let plan = EnginePlan {
+        affine: vec![
+            AffineMode::Float { planes: 11, m: 1 },
+            AffineMode::Float { planes: 11, m: 1 },
+        ],
+        fallback: AffineMode::Float { planes: 11, m: 1 },
+        r_o: 16,
+    };
+    let lut = LutModel::compile(&model, &plan).unwrap();
+    let (acc, ctr) = lut.accuracy(&test.images, 784, &test.labels);
+    ctr.assert_multiplier_less();
+    assert!(
+        (acc - ref_acc).abs() < 0.04,
+        "MLP float pipeline {acc} vs ref {ref_acc}"
+    );
+}
+
+#[test]
+fn tiny_cnn_lut_matches_reference_forward() {
+    // random-weight LeNet-shaped CNN on a small image: LUT forward must
+    // classify like the quantized reference forward
+    let mut rng = Rng::new(9);
+    let model = Model::lenet(
+        (Tensor::randn(&[5, 5, 1, 32], 0.08, &mut rng), Tensor::zeros(&[32])),
+        (Tensor::randn(&[5, 5, 32, 64], 0.02, &mut rng), Tensor::zeros(&[64])),
+        (Tensor::randn(&[1024, 3136], 0.01, &mut rng), Tensor::zeros(&[1024])),
+        (Tensor::randn(&[10, 1024], 0.03, &mut rng), Tensor::zeros(&[10])),
+    );
+    let lut = LutModel::compile(&model, &EnginePlan::cnn_default()).unwrap();
+    let test = toy_split(Kind::Digits, 3, 10);
+    let mut agree = 0;
+    for i in 0..3 {
+        let img = test.image(i);
+        let inf = lut.infer(img);
+        inf.counters.assert_multiplier_less();
+        let ref_out = model
+            .with_quantization(8, true, 8)
+            .forward(&Tensor::new(&[1, 28, 28, 1], img.to_vec()));
+        if ref_out.argmax_rows()[0] == inf.class {
+            agree += 1;
+        }
+    }
+    assert!(agree >= 2, "CNN LUT agreed on only {agree}/3");
+}
+
+#[test]
+fn jax_artifacts_load_and_classify_well_when_present() {
+    // integration with the L2 compile path: uses `make artifacts` output
+    let path = Path::new("artifacts/weights_linear.bin");
+    if !path.exists() {
+        eprintln!("skipping: {} not built", path.display());
+        return;
+    }
+    let model = weights::load_model(Arch::Linear, path).unwrap();
+    let ds = load_or_generate(Path::new("data/synth"), Kind::Digits, 6000, 1000, 7).unwrap();
+    let lut = LutModel::compile(&model, &EnginePlan::linear_default()).unwrap();
+    let (acc, _) = lut.accuracy(&ds.test.images, 784, &ds.test.labels);
+    assert!(acc > 0.7, "JAX-trained linear LUT accuracy only {acc}");
+}
+
+#[test]
+fn plan_ablation_fixed_inner_is_worse_than_float() {
+    // the paper's finding: fixed-point inner layers lose accuracy vs f16
+    let train = toy_split(Kind::Digits, 1500, 11);
+    let test = toy_split(Kind::Digits, 300, 12);
+    let model = train_dense(
+        &train,
+        &[784, 48, 10],
+        &TrainConfig { steps: 700, lr: 0.2, ..Default::default() },
+    );
+    let float_plan = EnginePlan {
+        affine: vec![
+            AffineMode::Float { planes: 11, m: 1 },
+            AffineMode::Float { planes: 11, m: 1 },
+        ],
+        fallback: AffineMode::Float { planes: 11, m: 1 },
+        r_o: 16,
+    };
+    let fixed_plan = EnginePlan {
+        affine: vec![
+            AffineMode::WholeFixed { bits: 8, m: 1, range_exp: 0 },
+            AffineMode::BitplaneFixed { bits: 4, m: 4, range_exp: 3 },
+        ],
+        fallback: AffineMode::Float { planes: 11, m: 1 },
+        r_o: 16,
+    };
+    let (facc, _) = LutModel::compile(&model, &float_plan)
+        .unwrap()
+        .accuracy(&test.images, 784, &test.labels);
+    let (xacc, _) = LutModel::compile(&model, &fixed_plan)
+        .unwrap()
+        .accuracy(&test.images, 784, &test.labels);
+    assert!(
+        facc + 0.02 >= xacc,
+        "float pipeline ({facc}) should be >= low-bit fixed pipeline ({xacc})"
+    );
+}

@@ -1,0 +1,266 @@
+//! Property-based invariant tests. The vendored crate set has no
+//! proptest, so this file carries a small deterministic forall-runner
+//! over the repo's own PRNG: each property is checked across a few
+//! hundred random cases with seeds printed on failure.
+
+use tablenet::config::json::Json;
+use tablenet::config::{plan_from_json, plan_to_json};
+use tablenet::engine::counters::Counters;
+use tablenet::engine::plan::{AffineMode, EnginePlan};
+use tablenet::lut::bitplane::DenseBitplaneLut;
+use tablenet::lut::cost::{dense_cost, IndexMode};
+use tablenet::lut::dense::DenseWholeLut;
+use tablenet::lut::{from_acc, Partition};
+use tablenet::quant::f16::F16;
+use tablenet::quant::stochastic::StochasticRounder;
+use tablenet::quant::FixedFormat;
+use tablenet::util::Rng;
+
+/// forall-runner: `cases` seeds, prints the failing seed.
+fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0x5EED_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn rand_affine(rng: &mut Rng, p: usize, q: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    (
+        (0..p * q).map(|_| rng.normal() * 0.5).collect(),
+        (0..p).map(|_| rng.normal() * 0.1).collect(),
+        (0..q).map(|_| rng.f32()).collect(),
+    )
+}
+
+fn ref_affine(w: &[f32], b: &[f32], p: usize, q: usize, x: &[f32]) -> Vec<f32> {
+    (0..p)
+        .map(|o| b[o] + (0..q).map(|i| w[o * q + i] * x[i]).sum::<f32>())
+        .collect()
+}
+
+#[test]
+fn prop_random_partitions_cover_exactly_once() {
+    forall("partition-cover", 300, |rng| {
+        let q = 1 + rng.below(64);
+        let m = 1 + rng.below(q);
+        let p = Partition::contiguous(q, m);
+        p.validate().unwrap();
+        let total: usize = p.chunks.iter().map(Vec::len).sum();
+        assert_eq!(total, q);
+        assert!(p.max_chunk() <= m);
+    });
+}
+
+#[test]
+fn prop_lut_equals_reference_on_quantized_input() {
+    forall("lut-vs-ref", 120, |rng| {
+        let p = 1 + rng.below(8);
+        let q = 2 + rng.below(20);
+        let m = 1 + rng.below(6.min(q));
+        let bits = 1 + rng.below(6) as u32;
+        let (w, b, x) = rand_affine(rng, p, q);
+        let fmt = FixedFormat::new(bits);
+        let lut =
+            DenseBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, m), fmt)
+                .unwrap();
+        let mut ctr = Counters::default();
+        let acc = lut.eval_f32(&x, &mut ctr);
+        ctr.assert_multiplier_less();
+        let xq: Vec<f32> = x.iter().map(|&v| fmt.fake_quant(v)).collect();
+        let want = ref_affine(&w, &b, p, q, &xq);
+        for (o, &a) in acc.iter().enumerate() {
+            assert!(
+                (from_acc(a, 0) - want[o]).abs() < 1e-3,
+                "p={p} q={q} m={m} bits={bits}: {} vs {}",
+                from_acc(a, 0),
+                want[o]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_whole_and_bitplane_banks_agree() {
+    forall("whole-vs-bitplane", 80, |rng| {
+        let p = 1 + rng.below(6);
+        let q = 2 + rng.below(12);
+        let m = 1 + rng.below(3.min(q));
+        let bits = 1 + rng.below(4) as u32;
+        let (w, b, x) = rand_affine(rng, p, q);
+        let fmt = FixedFormat::new(bits);
+        let whole =
+            DenseWholeLut::build(&w, &b, p, q, Partition::contiguous(q, m), fmt).unwrap();
+        let plane =
+            DenseBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, m), fmt)
+                .unwrap();
+        let mut c1 = Counters::default();
+        let mut c2 = Counters::default();
+        let a1 = whole.eval_f32(&x, &mut c1);
+        let a2 = plane.eval_f32(&x, &mut c2);
+        for (u, v) in a1.iter().zip(&a2) {
+            assert!((from_acc(*u, 0) - from_acc(*v, 0)).abs() < 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_engine_eval_counts_match_cost_model() {
+    // the measured lut_evals of a bitplane bank == the planner's n·k
+    forall("counters-vs-cost", 60, |rng| {
+        let p = 1 + rng.below(6);
+        let q = 2 + rng.below(20);
+        let m = 1 + rng.below(5.min(q));
+        let bits = 1 + rng.below(5) as u32;
+        let (w, b, x) = rand_affine(rng, p, q);
+        let lut = DenseBitplaneLut::build(
+            &w, &b, p, q, Partition::contiguous(q, m), FixedFormat::new(bits),
+        )
+        .unwrap();
+        let mut ctr = Counters::default();
+        let _ = lut.eval_f32(&x, &mut ctr);
+        let cost = dense_cost(
+            q as u64, p as u64, m as u64, IndexMode::BitplaneFixed { r_i: bits }, 16,
+        );
+        assert_eq!(ctr.lut_evals, cost.lut_evals);
+        // measured adds never exceed the model's inclusive bound
+        assert!(ctr.shift_adds <= cost.adds_inclusive);
+    });
+}
+
+#[test]
+fn prop_f16_roundtrip_monotone_and_exact() {
+    forall("f16-codec", 200, |rng| {
+        // exactness on decode->encode
+        let bits = (rng.next_u64() & 0x7BFF) as u16; // finite values
+        let x = F16(bits).to_f32();
+        assert_eq!(F16::from_f32(x).0, bits);
+        // monotone encode on positives
+        let a = rng.f32() * 100.0;
+        let c = a * (1.0 + rng.f32() * 0.5) + 1e-3;
+        let fa = F16::from_f32(a).0;
+        let fc = F16::from_f32(c).0;
+        assert!(fa <= fc, "encode not monotone: {a} -> {fa:#x}, {c} -> {fc:#x}");
+    });
+}
+
+#[test]
+fn prop_plan_json_roundtrip() {
+    forall("plan-json", 150, |rng| {
+        let n_layers = 1 + rng.below(5);
+        let affine: Vec<AffineMode> = (0..n_layers)
+            .map(|_| match rng.below(3) {
+                0 => AffineMode::WholeFixed {
+                    bits: 1 + rng.below(16) as u32,
+                    m: 1 + rng.below(8),
+                    range_exp: rng.below(9) as i32 - 4,
+                },
+                1 => AffineMode::BitplaneFixed {
+                    bits: 1 + rng.below(16) as u32,
+                    m: 1 + rng.below(8),
+                    range_exp: rng.below(9) as i32 - 4,
+                },
+                _ => AffineMode::Float { planes: 1 + rng.below(11) as u32, m: 1 + rng.below(4) },
+            })
+            .collect();
+        let plan = EnginePlan {
+            affine,
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 8 + rng.below(24) as u32,
+        };
+        let text = plan_to_json(&plan).to_string_pretty();
+        let back = plan_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, plan);
+    });
+}
+
+#[test]
+fn prop_json_parse_never_panics_on_mutations() {
+    // fuzz-ish: random mutations of valid JSON parse or error, never panic
+    forall("json-fuzz", 300, |rng| {
+        let base = r#"{"a": [1, 2.5, "x"], "b": {"c": true, "d": null}}"#;
+        let mut bytes = base.as_bytes().to_vec();
+        for _ in 0..1 + rng.below(4) {
+            let i = rng.below(bytes.len());
+            bytes[i] = (rng.next_u64() & 0x7F) as u8;
+        }
+        if let Ok(s) = std::str::from_utf8(&bytes) {
+            let _ = Json::parse(s); // Ok or Err; must not panic
+        }
+    });
+}
+
+#[test]
+fn prop_stochastic_rounding_unbiased() {
+    forall("stochastic-unbiased", 40, |rng| {
+        let in_bits = 6 + rng.below(3) as u32;
+        let out_bits = 2 + rng.below(3) as u32;
+        let r = StochasticRounder::new(in_bits, out_bits, 2048, rng.next_u64());
+        let drop = in_bits - out_bits;
+        let code = rng.below((1 << in_bits) - (1 << drop)) as u32;
+        let mean: f64 = (0..2048).map(|p| r.round_at(code, p) as f64).sum::<f64>() / 2048.0;
+        let expect = code as f64 / (1 << drop) as f64;
+        assert!(
+            (mean - expect).abs() < 0.05,
+            "in={in_bits} out={out_bits} code={code}: mean {mean} expect {expect}"
+        );
+    });
+}
+
+#[test]
+fn prop_quantizer_error_bound_and_monotonicity() {
+    forall("fixed-quant", 300, |rng| {
+        let bits = 1 + rng.below(8) as u32;
+        let fmt = FixedFormat::new(bits);
+        let a = rng.f32();
+        let b = rng.f32();
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        assert!(fmt.quantize(lo) <= fmt.quantize(hi));
+        let err = (fmt.fake_quant(a) - a).abs();
+        assert!(err <= 1.0 / (1u32 << bits) as f32 + 1e-6);
+    });
+}
+
+#[test]
+fn prop_bits_ladder_accuracy_is_roughly_monotone() {
+    // A trained toy classifier's LUT accuracy should not collapse as
+    // precision increases (allowing small non-monotonic wiggle — the
+    // paper itself observes slight decreases).
+    use tablenet::data::synth::{generate, Kind};
+    use tablenet::data::Split;
+    use tablenet::engine::LutModel;
+    use tablenet::train::{train_dense, TrainConfig};
+
+    let (px, lb) = generate(Kind::Digits, 500, 33);
+    let train = Split {
+        images: px.iter().map(|&v| v as f32 / 255.0).collect(),
+        labels: lb.iter().map(|&v| v as usize).collect(),
+    };
+    let (tpx, tlb) = generate(Kind::Digits, 150, 44);
+    let test = Split {
+        images: tpx.iter().map(|&v| v as f32 / 255.0).collect(),
+        labels: tlb.iter().map(|&v| v as usize).collect(),
+    };
+    let model = train_dense(
+        &train,
+        &[784, 10],
+        &TrainConfig { steps: 250, lr: 0.3, ..Default::default() },
+    );
+    let mut accs = Vec::new();
+    for bits in [1u32, 3, 6] {
+        let plan = EnginePlan {
+            affine: vec![AffineMode::BitplaneFixed { bits, m: 14, range_exp: 0 }],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        let lut = LutModel::compile(&model, &plan).unwrap();
+        let (acc, _) = lut.accuracy(&test.images, 784, &test.labels);
+        accs.push(acc);
+    }
+    assert!(accs[1] + 0.05 >= accs[0], "{accs:?}");
+    assert!(accs[2] + 0.05 >= accs[1], "{accs:?}");
+}

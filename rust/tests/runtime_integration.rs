@@ -1,0 +1,117 @@
+//! PJRT runtime integration: loads the HLO-text artifacts produced by
+//! `make artifacts` and verifies that the XLA execution agrees with the
+//! in-Rust reference forward on the same weights — the cross-language
+//! contract of the whole compile path. Skips (with a notice) when
+//! artifacts are absent so `cargo test` works on a fresh clone.
+
+use std::path::Path;
+use tablenet::data::synth::Kind;
+use tablenet::data::load_or_generate;
+use tablenet::nn::{weights, Arch};
+use tablenet::runtime::{ref_hlo_path, PjrtModel};
+use tablenet::tensor::Tensor;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("weights_linear.bin").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping runtime integration: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn pjrt_linear_matches_rust_reference() {
+    let Some(art) = artifacts() else { return };
+    let hlo = ref_hlo_path(art, Arch::Linear, 1);
+    if !hlo.exists() {
+        eprintln!("skipping: {} missing", hlo.display());
+        return;
+    }
+    let model = weights::load_model(Arch::Linear, &art.join("weights_linear.bin")).unwrap();
+    let pjrt = PjrtModel::load(&hlo, 1, 784, 10).unwrap();
+    let ds = load_or_generate(Path::new("data/synth"), Kind::Digits, 6000, 1000, 7).unwrap();
+    let mut max_diff = 0f32;
+    for i in 0..16 {
+        let img = ds.test.image(i).to_vec();
+        let out = pjrt.infer_padded(&[img.clone()]).unwrap();
+        let rust_out = model.forward(&Tensor::new(&[1, 784], img));
+        for (a, b) in out[0].iter().zip(rust_out.data()) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+    }
+    assert!(max_diff < 1e-3, "PJRT vs rust reference diverged: {max_diff}");
+}
+
+#[test]
+fn pjrt_batch32_matches_batch1() {
+    let Some(art) = artifacts() else { return };
+    let h1 = ref_hlo_path(art, Arch::Linear, 1);
+    let h32 = ref_hlo_path(art, Arch::Linear, 32);
+    if !h1.exists() || !h32.exists() {
+        eprintln!("skipping: batch artifacts missing");
+        return;
+    }
+    let p1 = PjrtModel::load(&h1, 1, 784, 10).unwrap();
+    let p32 = PjrtModel::load(&h32, 32, 784, 10).unwrap();
+    let ds = load_or_generate(Path::new("data/synth"), Kind::Digits, 6000, 1000, 7).unwrap();
+    let images: Vec<Vec<f32>> = (0..10).map(|i| ds.test.image(i).to_vec()).collect();
+    let out32 = p32.infer_padded(&images).unwrap();
+    for (i, img) in images.iter().enumerate() {
+        let out1 = p1.infer_padded(&[img.clone()]).unwrap();
+        for (a, b) in out1[0].iter().zip(&out32[i]) {
+            assert!((a - b).abs() < 1e-4, "batch inconsistency at {i}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_lut_graph_executes_and_classifies_like_reference() {
+    // the Pallas LUT kernel graph (lowered via interpret=True) must be
+    // loadable and agree with the reference on argmax
+    let Some(art) = artifacts() else { return };
+    let hlo = art.join("linear_lut_b1.hlo.txt");
+    if !hlo.exists() {
+        eprintln!("skipping: {} missing", hlo.display());
+        return;
+    }
+    let model = weights::load_model(Arch::Linear, &art.join("weights_linear.bin")).unwrap();
+    let pjrt = PjrtModel::load(&hlo, 1, 784, 10).unwrap();
+    let ds = load_or_generate(Path::new("data/synth"), Kind::Digits, 6000, 1000, 7).unwrap();
+    let mut agree = 0;
+    let n = 24;
+    for i in 0..n {
+        let img = ds.test.image(i).to_vec();
+        let cls = pjrt.classify(&[img.clone()]).unwrap()[0];
+        // reference on 3-bit quantized input (the LUT graph quantizes)
+        let fmt = tablenet::quant::FixedFormat::new(3);
+        let xq: Vec<f32> = img.iter().map(|&v| fmt.fake_quant(v)).collect();
+        let rc = model.forward(&Tensor::new(&[1, 784], xq)).argmax_rows()[0];
+        if cls == rc {
+            agree += 1;
+        }
+    }
+    assert!(agree >= n - 1, "LUT HLO graph agreed on only {agree}/{n}");
+}
+
+#[test]
+fn pjrt_cnn_loads_when_present() {
+    let Some(art) = artifacts() else { return };
+    let hlo = ref_hlo_path(art, Arch::Cnn, 1);
+    if !hlo.exists() {
+        eprintln!("skipping: {} missing", hlo.display());
+        return;
+    }
+    let model = weights::load_model(Arch::Cnn, &art.join("weights_cnn.bin")).unwrap();
+    let pjrt = PjrtModel::load(&hlo, 1, 784, 10).unwrap();
+    let ds = load_or_generate(Path::new("data/synth"), Kind::Digits, 6000, 1000, 7).unwrap();
+    let img = ds.test.image(0).to_vec();
+    let out = pjrt.infer_padded(&[img.clone()]).unwrap();
+    let rust_out = model.forward(&Tensor::new(&[1, 28, 28, 1], img));
+    let mut max_diff = 0f32;
+    for (a, b) in out[0].iter().zip(rust_out.data()) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 1e-2, "CNN PJRT vs rust reference diverged: {max_diff}");
+}
