@@ -1,27 +1,119 @@
 //! Hot-path microbenches (the §Perf instrument): LUT bank evaluation vs
-//! the multiply-full reference, layer-boundary encodes, coordinator
-//! round-trip. This is the bench the performance pass iterates on; its
-//! before/after numbers are recorded in EXPERIMENTS.md §Perf.
+//! the multiply-full reference, batched table-stationary evaluation vs
+//! the per-sample path, layer-boundary encodes, coordinator round-trip.
+//!
+//! This is the bench the performance pass iterates on. Alongside the
+//! human-readable table it emits machine-readable `BENCH_hotpath.json`
+//! so the perf trajectory is tracked from PR to PR. The "seed batch=1
+//! path" case reconstructs the pre-arena implementation (boxed
+//! `Vec<Vec<i64>>` tables, n-pass plane-index deposit, per-call
+//! allocation) as the before/after baseline for the batched engine.
 
 mod common;
 
 use std::sync::Arc;
+use std::time::Instant;
 use tablenet::config::ServeConfig;
 use tablenet::coordinator::Coordinator;
 use tablenet::data::synth::Kind;
 use tablenet::engine::counters::Counters;
 use tablenet::engine::f16enc::acc_vec_to_f16;
 use tablenet::engine::plan::EnginePlan;
+use tablenet::engine::scratch::Scratch;
 use tablenet::engine::LutModel;
-use tablenet::harness::bench::Bench;
+use tablenet::harness::bench::{Bench, BenchResult};
 use tablenet::lut::bitplane::DenseBitplaneLut;
 use tablenet::lut::dense::DenseWholeLut;
 use tablenet::lut::floatplane::{DenseFloatLut, FloatLutConfig};
-use tablenet::lut::Partition;
+use tablenet::lut::{Partition, ACC_FRAC};
+use tablenet::quant::f16::F16;
 use tablenet::quant::FixedFormat;
 use tablenet::tensor::ops::matmul;
 use tablenet::tensor::Tensor;
 use tablenet::util::Rng;
+
+/// Faithful reconstruction of the seed's bitplane bank: one boxed
+/// `Vec<i64>` per chunk and the pre-refactor per-sample inner loop
+/// (n-pass-free index build but no packing, i64 rows, fresh accumulator
+/// allocation per call). Kept here as the perf baseline the batched
+/// arena engine is measured against.
+struct SeedBitplane {
+    chunks: Vec<Vec<usize>>,
+    tables: Vec<Vec<i64>>,
+    bias_acc: Vec<i64>,
+    p: usize,
+    q: usize,
+    bits: u32,
+}
+
+impl SeedBitplane {
+    fn build(w: &[f32], b: &[f32], p: usize, q: usize, m: usize, bits: u32) -> SeedBitplane {
+        let to_acc = |v: f64| (v * (1u64 << ACC_FRAC) as f64).round() as i64;
+        let part = Partition::contiguous(q, m);
+        let mut tables = Vec::new();
+        for chunk in &part.chunks {
+            let rows = 1usize << chunk.len();
+            let mut table = vec![0i64; rows * p];
+            for idx in 0..rows {
+                for (e, &col) in chunk.iter().enumerate() {
+                    if (idx >> e) & 1 == 1 {
+                        let scale = (-(bits as f64)).exp2();
+                        for o in 0..p {
+                            table[idx * p + o] += to_acc(w[o * q + col] as f64 * scale);
+                        }
+                    }
+                }
+            }
+            tables.push(table);
+        }
+        let bias_acc = b.iter().map(|&v| to_acc(v as f64)).collect();
+        SeedBitplane { chunks: part.chunks, tables, bias_acc, p, q, bits }
+    }
+
+    fn eval_codes(&self, codes: &[u32], ctr: &mut Counters) -> Vec<i64> {
+        assert_eq!(codes.len(), self.q);
+        let n = self.bits as usize;
+        let mut acc = self.bias_acc.clone();
+        ctr.adds += self.p as u64;
+        let mut idx = [0usize; 16];
+        for (c, chunk) in self.chunks.iter().enumerate() {
+            let table = &self.tables[c];
+            idx[..n].fill(0);
+            for (e, &col) in chunk.iter().enumerate() {
+                let code = codes[col] as usize;
+                for (j, slot) in idx[..n].iter_mut().enumerate() {
+                    *slot |= ((code >> j) & 1) << e;
+                }
+            }
+            ctr.lut_evals += n as u64;
+            for (j, &row_idx) in idx[..n].iter().enumerate() {
+                if row_idx == 0 {
+                    continue;
+                }
+                let row = &table[row_idx * self.p..(row_idx + 1) * self.p];
+                for (a, &r) in acc.iter_mut().zip(row) {
+                    *a += r << j;
+                }
+                ctr.shift_adds += self.p as u64;
+            }
+        }
+        acc
+    }
+}
+
+/// samples/sec for a recorded case that evaluates `n` samples per
+/// closure invocation.
+fn samples_per_sec(r: &BenchResult, n: usize) -> f64 {
+    if r.mean_ns > 0.0 {
+        n as f64 * 1e9 / r.mean_ns
+    } else {
+        0.0
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
 
 fn main() {
     let mut rng = Rng::new(1);
@@ -32,6 +124,11 @@ fn main() {
 
     Bench::header("dense affine 784->10: LUT banks vs reference matmul");
     let mut bench = Bench::default();
+    // name -> samples evaluated per closure call (for samples/sec)
+    let mut case_samples: Vec<(String, usize)> = Vec::new();
+    fn track(name: &str, n: usize, cs: &mut Vec<(String, usize)>) {
+        cs.push((name.to_string(), n));
+    }
 
     let wt = Tensor::new(&[q, p], {
         // transpose for the reference x@W^T layout
@@ -44,6 +141,7 @@ fn main() {
         t
     });
     let xt = Tensor::new(&[1, q], x.clone());
+    track("reference matmul f32 (7840 MACs)", 1, &mut case_samples);
     bench.run("reference matmul f32 (7840 MACs)", || {
         matmul(&xt, &wt).data()[0]
     });
@@ -52,6 +150,7 @@ fn main() {
         &w, &b, p, q, Partition::contiguous(q, 14), FixedFormat::new(3),
     )
     .unwrap();
+    track("bitplane LUT m=14 r=3 (56 tables)", 1, &mut case_samples);
     bench.run("bitplane LUT m=14 r=3 (56 tables)", || {
         let mut c = Counters::default();
         plane14.eval_f32(&x, &mut c)[0]
@@ -61,6 +160,7 @@ fn main() {
         &w, &b, p, q, Partition::contiguous(q, 1), FixedFormat::new(3),
     )
     .unwrap();
+    track("bitplane LUT m=1 r=3 (784 tables)", 1, &mut case_samples);
     bench.run("bitplane LUT m=1 r=3 (784 tables)", || {
         let mut c = Counters::default();
         plane1.eval_f32(&x, &mut c)[0]
@@ -70,6 +170,7 @@ fn main() {
         &w, &b, p, q, Partition::contiguous(q, 2), FixedFormat::new(3),
     )
     .unwrap();
+    track("whole-code LUT m=2 r=3 (392 tables)", 1, &mut case_samples);
     bench.run("whole-code LUT m=2 r=3 (392 tables)", || {
         let mut c = Counters::default();
         whole2.eval_f32(&x, &mut c)[0]
@@ -79,20 +180,92 @@ fn main() {
         &w, &b, p, q, Partition::singletons(q), FloatLutConfig::default(),
     )
     .unwrap();
+    track("float16-plane LUT m=1 (784 tables)", 1, &mut case_samples);
     bench.run("float16-plane LUT m=1 (784 tables)", || {
         let mut c = Counters::default();
         fl.eval_f32(&x, &mut c)[0]
     });
 
     // quantized-input variants (hot path once input codes are ready)
-    let codes: Vec<u32> = x.iter().map(|&v| FixedFormat::new(3).quantize(v)).collect();
+    let fmt3 = FixedFormat::new(3);
+    let codes: Vec<u32> = x.iter().map(|&v| fmt3.quantize(v)).collect();
+    track("bitplane LUT m=14 from codes", 1, &mut case_samples);
     bench.run("bitplane LUT m=14 from codes", || {
         let mut c = Counters::default();
         plane14.eval_codes(&codes, &mut c)[0]
     });
 
+    // ---- batched table-stationary evaluation --------------------------
+    Bench::header("batched table-stationary eval (784->10, m=14, r=3)");
+    let nsamp = 128usize;
+    let xs: Vec<f32> = (0..nsamp * q).map(|_| rng.f32()).collect();
+    let codes_all: Vec<u32> = xs.iter().map(|&v| fmt3.quantize(v)).collect();
+
+    // the seed's batch=1 path: boxed i64 tables, per-sample eval with a
+    // fresh accumulator per call — what serving executed before this PR
+    let seed = SeedBitplane::build(&w, &b, p, q, 14, 3);
+    {
+        // sanity: the seed reconstruction and the arena bank agree
+        let mut c1 = Counters::default();
+        let mut c2 = Counters::default();
+        let a = seed.eval_codes(&codes, &mut c1);
+        let bnew = plane14.eval_codes(&codes, &mut c2);
+        assert_eq!(a, bnew, "seed baseline diverged from arena bank");
+    }
+    track("seed batch=1 path (32 samples, boxed i64)", 32, &mut case_samples);
+    bench.run("seed batch=1 path (32 samples, boxed i64)", || {
+        let mut c = Counters::default();
+        let mut sum = 0i64;
+        for s in 0..32 {
+            sum += seed.eval_codes(&codes_all[s * q..(s + 1) * q], &mut c)[0];
+        }
+        sum
+    });
+
+    track("arena per-sample eval_codes (32 samples)", 32, &mut case_samples);
+    bench.run("arena per-sample eval_codes (32 samples)", || {
+        let mut c = Counters::default();
+        let mut sum = 0i64;
+        for s in 0..32 {
+            sum += plane14.eval_codes(&codes_all[s * q..(s + 1) * q], &mut c)[0];
+        }
+        sum
+    });
+
+    let mut out = vec![0i64; nsamp * p];
+    for &bsz in &[1usize, 8, 32, 128] {
+        let name = format!("bitplane eval_batch batch={bsz}");
+        track(&name, bsz, &mut case_samples);
+        bench.run(&name, || {
+            let mut c = Counters::default();
+            plane14.eval_batch(
+                &codes_all[..bsz * q],
+                bsz,
+                &mut out[..bsz * p],
+                &mut c,
+            );
+            out[0]
+        });
+    }
+
+    track("whole-code eval_batch batch=32", 32, &mut case_samples);
+    bench.run("whole-code eval_batch batch=32", || {
+        let mut c = Counters::default();
+        whole2.eval_batch(&codes_all[..32 * q], 32, &mut out[..32 * p], &mut c);
+        out[0]
+    });
+
+    let halves: Vec<F16> = xs.iter().map(|&v| F16::from_f32(v.max(0.0))).collect();
+    track("float16-plane eval_batch batch=32", 32, &mut case_samples);
+    bench.run("float16-plane eval_batch batch=32", || {
+        let mut c = Counters::default();
+        fl.eval_batch_f16(&halves[..32 * q], 32, &mut out[..32 * p], &mut c);
+        out[0]
+    });
+
     Bench::header("layer-boundary encode");
     let accs: Vec<i64> = (0..1024).map(|_| (rng.next_u64() >> 20) as i64).collect();
+    track("acc -> f16 encode x1024", 1, &mut case_samples);
     bench.run("acc -> f16 encode x1024", || {
         let mut c = Counters::default();
         acc_vec_to_f16(&accs, 32, &mut c).len()
@@ -102,8 +275,19 @@ fn main() {
     let (model, ds) = common::linear_model(Kind::Digits);
     let engine = LutModel::compile(&model, &EnginePlan::linear_default()).unwrap();
     let img = ds.test.image(0).to_vec();
+    track("linear engine infer (end-to-end)", 1, &mut case_samples);
     bench.run("linear engine infer (end-to-end)", || {
         engine.infer(&img).class
+    });
+
+    // batched end-to-end on 32 distinct test images
+    let batch_imgs: Vec<f32> = (0..32)
+        .flat_map(|i| ds.test.image(i % ds.test.len()).to_vec())
+        .collect();
+    let mut scratch = Scratch::new();
+    track("linear engine infer_batch (batch=32)", 32, &mut case_samples);
+    bench.run("linear engine infer_batch (batch=32)", || {
+        engine.infer_batch(&batch_imgs, 32, &mut scratch).classes[0]
     });
 
     let coord = Coordinator::start(
@@ -111,11 +295,44 @@ fn main() {
         &ServeConfig { max_batch: 1, max_wait_us: 1, workers: 1, queue_cap: 64 },
     );
     let client = coord.client();
+    track("coordinator round-trip (batch=1)", 1, &mut case_samples);
     bench.run("coordinator round-trip (batch=1)", || {
         client.infer_blocking(img.clone()).unwrap().class
     });
     drop(client);
     coord.shutdown();
+
+    // coordinator throughput with real dynamic batching (max_batch=32,
+    // 4 concurrent clients) — measured manually, not via Bench
+    let n_requests = 2000usize;
+    let coord = Coordinator::start(
+        Arc::new(LutModel::compile(&model, &EnginePlan::linear_default()).unwrap()),
+        &ServeConfig { max_batch: 32, max_wait_us: 200, workers: 1, queue_cap: 1024 },
+    );
+    let test = Arc::new(ds.test);
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..4usize {
+        let client = coord.client();
+        let test = test.clone();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..n_requests / 4 {
+                let idx = (c * 97 + i) % test.len();
+                let _ = client.infer_blocking(test.image(idx).to_vec()).unwrap();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let coord_rps = n_requests as f64 / elapsed;
+    let snap = coord.shutdown();
+    println!(
+        "\ncoordinator throughput (max_batch=32, 4 clients): {coord_rps:.0} req/s, \
+         mean batch {:.1}",
+        snap.mean_batch
+    );
 
     if let Some(ratio) = bench.ratio(
         "bitplane LUT m=14 r=3 (56 tables)",
@@ -123,4 +340,57 @@ fn main() {
     ) {
         println!("\nLUT(m=14) / reference-matmul time ratio: {ratio:.2}x");
     }
+
+    // headline acceptance ratio: batched arena eval vs the seed's
+    // batch=1 path, in samples/sec
+    let find = |name: &str| bench.results().iter().find(|r| r.name == name);
+    let speedup = match (
+        find("bitplane eval_batch batch=32"),
+        find("seed batch=1 path (32 samples, boxed i64)"),
+    ) {
+        (Some(b32), Some(b1)) => {
+            let s = samples_per_sec(b32, 32) / samples_per_sec(b1, 32).max(1e-9);
+            println!(
+                "batched speedup (batch=32 vs seed batch=1 path): {s:.2}x samples/sec"
+            );
+            Some(s)
+        }
+        _ => None,
+    };
+
+    // ---- machine-readable output: BENCH_hotpath.json ------------------
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"engine_hotpath\",\n");
+    json.push_str("  \"config\": {\"p\": 10, \"q\": 784, \"m\": 14, \"bits\": 3},\n");
+    json.push_str("  \"cases\": [\n");
+    let results = bench.results();
+    for (i, r) in results.iter().enumerate() {
+        let n = case_samples
+            .iter()
+            .find(|(name, _)| name == &r.name)
+            .map(|(_, n)| *n)
+            .unwrap_or(1);
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"p50_ns\": {:.1}, \
+             \"p95_ns\": {:.1}, \"samples_per_iter\": {}, \"samples_per_sec\": {:.1}}}{}\n",
+            json_escape(&r.name),
+            r.mean_ns,
+            r.p50_ns,
+            r.p95_ns,
+            n,
+            samples_per_sec(r, n),
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"coordinator_throughput_rps\": {coord_rps:.1},\n"
+    ));
+    json.push_str(&format!(
+        "  \"speedup_batch32_vs_batch1_path\": {}\n",
+        speedup.map(|s| format!("{s:.2}")).unwrap_or_else(|| "null".to_string())
+    ));
+    json.push_str("}\n");
+    std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
+    println!("\nwrote BENCH_hotpath.json");
 }

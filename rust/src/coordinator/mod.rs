@@ -28,7 +28,8 @@ pub mod metrics;
 pub mod router;
 
 use crate::engine::counters::Counters;
-use crate::engine::LutModel;
+use crate::engine::scratch::Scratch;
+use crate::engine::{BatchInference, LutModel};
 use batcher::{next_batch, BatchPolicy};
 use metrics::Metrics;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
@@ -40,6 +41,20 @@ use std::time::Instant;
 /// model, or a test double.
 pub trait Backend: Send + Sync + 'static {
     fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput>;
+
+    /// Batched entry point with a worker-owned [`Scratch`]. Backends
+    /// with a true batched path (the LUT engine) override this to run
+    /// allocation-free; the default ignores the scratch and falls back
+    /// to [`Backend::infer_batch`].
+    fn infer_batch_scratch(
+        &self,
+        images: &[Vec<f32>],
+        scratch: &mut Scratch,
+    ) -> Vec<InferOutput> {
+        let _ = scratch;
+        self.infer_batch(images)
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -53,15 +68,57 @@ pub struct InferOutput {
 
 impl Backend for LutModel {
     fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
-        images
-            .iter()
-            .map(|img| {
-                let inf = self.infer(img);
-                InferOutput {
-                    class: inf.class,
-                    logits: inf.logits,
-                    counters: inf.counters,
-                }
+        let mut scratch = Scratch::new();
+        self.infer_batch_scratch(images, &mut scratch)
+    }
+
+    /// The real batched path: images are staged contiguously in the
+    /// scratch, one `LutModel::infer_batch_into` call executes every
+    /// stage batch-at-a-time over the table arenas, and `max_batch > 1`
+    /// buys actual throughput instead of a serial loop.
+    fn infer_batch_scratch(
+        &self,
+        images: &[Vec<f32>],
+        scratch: &mut Scratch,
+    ) -> Vec<InferOutput> {
+        if images.is_empty() {
+            return Vec::new();
+        }
+        let features = images[0].len();
+        if images.iter().any(|img| img.len() != features) {
+            // heterogeneous rows cannot be batched; serve per sample
+            return images
+                .iter()
+                .map(|img| {
+                    let inf = self.infer(img);
+                    InferOutput {
+                        class: inf.class,
+                        logits: inf.logits,
+                        counters: inf.counters,
+                    }
+                })
+                .collect();
+        }
+        let batch = images.len();
+        scratch.input.clear();
+        for img in images {
+            scratch.input.extend_from_slice(img);
+        }
+        // split the input staging out of the scratch so the stage
+        // runner can borrow the remaining buffers mutably
+        let input = std::mem::take(&mut scratch.input);
+        let mut out = BatchInference::default();
+        self.infer_batch_into(&input, batch, scratch, &mut out);
+        scratch.input = input;
+        let nclass = out.logits.len() / batch;
+        (0..batch)
+            .map(|s| InferOutput {
+                class: out.classes[s],
+                logits: out.logits[s * nclass..(s + 1) * nclass].to_vec(),
+                // ops are accounted once per batch (totals are exact;
+                // per-request attribution assigns the batch to its
+                // first sample)
+                counters: if s == 0 { out.counters } else { Counters::default() },
             })
             .collect()
     }
@@ -245,6 +302,10 @@ fn worker_loop(
     backend: Arc<dyn Backend>,
     metrics: Arc<Metrics>,
 ) {
+    // worker-owned scratch: all batched-engine intermediates live here
+    // and are reused for the lifetime of the worker (steady-state
+    // serving allocates nothing inside the engine)
+    let mut scratch = Scratch::new();
     loop {
         let batch = {
             let guard = rx.lock().unwrap();
@@ -259,7 +320,7 @@ fn worker_loop(
             images.push(img);
             meta.push((enqueued, resp));
         }
-        let outputs = backend.infer_batch(&images);
+        let outputs = backend.infer_batch_scratch(&images, &mut scratch);
         debug_assert_eq!(outputs.len(), meta.len());
         for ((enqueued, resp), out) in meta.into_iter().zip(outputs) {
             let queue_us = (start - enqueued).as_micros() as u64;
@@ -377,6 +438,44 @@ mod tests {
         let snap = coord.shutdown();
         assert_eq!(snap.rejected as usize, rejected);
         assert_eq!(snap.completed as usize + rejected, 8);
+    }
+
+    #[test]
+    fn lut_backend_batched_matches_per_sample() {
+        use crate::engine::plan::{AffineMode, EnginePlan};
+        use crate::nn::Model;
+        use crate::tensor::Tensor;
+        use crate::util::Rng;
+        let mut rng = Rng::new(44);
+        let model = Model::linear(
+            Tensor::randn(&[10, 784], 0.05, &mut rng),
+            Tensor::randn(&[10], 0.02, &mut rng),
+        );
+        let plan = EnginePlan {
+            affine: vec![AffineMode::BitplaneFixed { bits: 3, m: 8, range_exp: 0 }],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        let lut = LutModel::compile(&model, &plan).unwrap();
+        let images: Vec<Vec<f32>> =
+            (0..6).map(|_| (0..784).map(|_| rng.f32()).collect()).collect();
+        // UFCS: the trait entry point the coordinator workers use
+        let outs = Backend::infer_batch(&lut, &images);
+        assert_eq!(outs.len(), images.len());
+        let mut total = Counters::default();
+        for (s, out) in outs.iter().enumerate() {
+            let single = lut.infer(&images[s]);
+            assert_eq!(out.class, single.class, "class diverges at {s}");
+            assert_eq!(out.logits, single.logits, "logits diverge at {s}");
+            total += single.counters;
+        }
+        let mut agg = Counters::default();
+        for o in &outs {
+            agg += o.counters;
+        }
+        // batch ops attributed to the first sample; totals are exact
+        assert_eq!(agg, total);
+        agg.assert_multiplier_less();
     }
 
     #[test]

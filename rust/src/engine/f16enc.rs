@@ -113,6 +113,30 @@ pub fn acc_vec_to_f16_signed(acc: &[i64], frac_scale: u32, ctr: &mut Counters) -
     acc.iter().map(|&a| acc_to_f16_signed(a, frac_scale, ctr)).collect()
 }
 
+/// Allocation-free vector encode into a reusable buffer (the batched
+/// engine's layer-boundary path): `out` is cleared and refilled, so it
+/// never reallocates once its capacity has reached the batch size.
+pub fn acc_slice_to_f16_into(
+    acc: &[i64],
+    frac_scale: u32,
+    out: &mut Vec<F16>,
+    ctr: &mut Counters,
+) {
+    out.clear();
+    out.extend(acc.iter().map(|&a| acc_to_f16(a, frac_scale, ctr)));
+}
+
+/// Allocation-free signed vector encode into a reusable buffer.
+pub fn acc_slice_to_f16_signed_into(
+    acc: &[i64],
+    frac_scale: u32,
+    out: &mut Vec<F16>,
+    ctr: &mut Counters,
+) {
+    out.clear();
+    out.extend(acc.iter().map(|&a| acc_to_f16_signed(a, frac_scale, ctr)));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,6 +8,7 @@
 pub mod counters;
 pub mod f16enc;
 pub mod plan;
+pub mod scratch;
 
 use crate::lut::bitplane::DenseBitplaneLut;
 use crate::lut::conv::ConvLut;
@@ -20,6 +21,7 @@ use crate::quant::f16::F16;
 use crate::quant::FixedFormat;
 use counters::Counters;
 use plan::{AffineMode, EnginePlan};
+use scratch::{reset_len_i64, Scratch};
 
 /// One executable stage of the compiled pipeline.
 enum Stage {
@@ -67,6 +69,40 @@ pub struct Inference {
     pub class: usize,
     /// Op mix for this inference.
     pub counters: Counters,
+}
+
+/// Result of one batched inference. Output vectors are reused across
+/// calls by [`LutModel::infer_batch_into`] — steady-state serving
+/// allocates nothing.
+#[derive(Debug, Clone, Default)]
+pub struct BatchInference {
+    /// Predicted class per sample.
+    pub classes: Vec<usize>,
+    /// Logits, row-major `batch x classes` (decoded for display only).
+    pub logits: Vec<f32>,
+    /// Op mix aggregated over the whole batch (totals equal the sum of
+    /// the per-sample counters of [`LutModel::infer`] — asserted by the
+    /// property tests).
+    pub counters: Counters,
+}
+
+impl BatchInference {
+    /// Logits of sample `s`.
+    pub fn logits_row(&self, s: usize) -> &[f32] {
+        let n = self.logits.len() / self.classes.len().max(1);
+        &self.logits[s * n..(s + 1) * n]
+    }
+}
+
+/// Tag of the activation representation flowing between batched stages.
+/// The data itself lives in the [`Scratch`] buffers (`acc`, `half`,
+/// `codes`) or, for `F32`, in the caller's input slice.
+#[derive(Debug, Clone, Copy)]
+enum Repr {
+    F32,
+    Acc(u32),
+    Half,
+    Codes(u32),
 }
 
 impl LutModel {
@@ -273,6 +309,249 @@ impl LutModel {
             _ => panic!("model must end with an affine stage"),
         };
         Inference { logits, class, counters: ctr }
+    }
+
+    /// Run a batch of inferences over `images` (row-major
+    /// `batch x features`, values in [0,1]) reusing `scratch`. Convenience
+    /// wrapper over [`LutModel::infer_batch_into`] that allocates the
+    /// output struct.
+    pub fn infer_batch(
+        &self,
+        images: &[f32],
+        batch: usize,
+        scratch: &mut Scratch,
+    ) -> BatchInference {
+        let mut out = BatchInference::default();
+        self.infer_batch_into(images, batch, scratch, &mut out);
+        out
+    }
+
+    /// Batched inference into a reusable output struct. This is the
+    /// serving hot path: stages execute *batch-at-a-time* over the
+    /// contiguous table arenas (chunk-outer, sample-inner inside each
+    /// bank), all intermediates live in `scratch`, and counters
+    /// accumulate per batch. After one warm-up call with the same batch
+    /// geometry, the whole path performs zero heap allocations.
+    ///
+    /// Results are bit-exact with per-sample [`LutModel::infer`]: same
+    /// classes, same logits, and counter totals equal to the sum of the
+    /// per-sample counters.
+    pub fn infer_batch_into(
+        &self,
+        images: &[f32],
+        batch: usize,
+        scratch: &mut Scratch,
+        out: &mut BatchInference,
+    ) {
+        assert!(batch > 0, "batch must be >= 1");
+        assert_eq!(images.len() % batch, 0, "images not divisible into batch rows");
+        let mut ctr = Counters::default();
+        let mut repr = Repr::F32;
+        for stage in &self.stages {
+            repr = self.run_stage_batch(stage, repr, images, batch, scratch, &mut ctr);
+        }
+        let frac = match repr {
+            Repr::Acc(frac) => frac,
+            _ => panic!("model must end with an affine stage"),
+        };
+        let nclass = scratch.acc.len() / batch;
+        out.classes.clear();
+        out.logits.clear();
+        let scale = (-(frac as f64)).exp2();
+        for s in 0..batch {
+            let row = &scratch.acc[s * nclass..(s + 1) * nclass];
+            // argmax over integers; decode for display
+            let mut best = 0usize;
+            for i in 1..row.len() {
+                ctr.compares += 1;
+                if row[i] > row[best] {
+                    best = i;
+                }
+            }
+            out.classes.push(best);
+            out.logits.extend(row.iter().map(|&a| (a as f64 * scale) as f32));
+        }
+        debug_assert_eq!(ctr.mults, 0);
+        out.counters = ctr;
+    }
+
+    /// One batched stage. The activation tag moves between the scratch
+    /// buffers; `images` is only read while the tag is still `F32`
+    /// (i.e. before the first quantizing stage).
+    fn run_stage_batch(
+        &self,
+        stage: &Stage,
+        repr: Repr,
+        images: &[f32],
+        batch: usize,
+        scratch: &mut Scratch,
+        ctr: &mut Counters,
+    ) -> Repr {
+        let Scratch { codes, half, acc, acc2, pad, .. } = scratch;
+        match stage {
+            Stage::DenseWhole(lut) => {
+                match repr {
+                    Repr::F32 => {
+                        assert_eq!(images.len(), batch * lut.partition.q);
+                        codes.clear();
+                        codes.extend(images.iter().map(|&v| lut.fmt.quantize(v)));
+                    }
+                    Repr::Codes(bits) => debug_assert_eq!(bits, lut.fmt.bits),
+                    _ => panic!("whole-fixed dense expects f32 or codes"),
+                }
+                reset_len_i64(acc, batch * lut.p);
+                lut.eval_batch(codes, batch, acc, ctr);
+                Repr::Acc(ACC_FRAC)
+            }
+            Stage::DenseBitplane(lut) => {
+                match repr {
+                    Repr::F32 => {
+                        assert_eq!(images.len(), batch * lut.partition.q);
+                        codes.clear();
+                        codes.extend(images.iter().map(|&v| lut.fmt.quantize(v)));
+                    }
+                    Repr::Codes(bits) => debug_assert_eq!(bits, lut.fmt.bits),
+                    _ => panic!("bitplane dense expects f32 or codes"),
+                }
+                reset_len_i64(acc, batch * lut.p);
+                lut.eval_batch(codes, batch, acc, ctr);
+                Repr::Acc(ACC_FRAC)
+            }
+            Stage::DenseFloat(lut) => {
+                match repr {
+                    Repr::F32 => {
+                        assert_eq!(images.len(), batch * lut.partition.q);
+                        half.clear();
+                        half.extend(images.iter().map(|&v| F16::from_f32(v.max(0.0))));
+                    }
+                    Repr::Half => {}
+                    _ => panic!("float dense expects f32 or half"),
+                }
+                reset_len_i64(acc, batch * lut.p);
+                lut.eval_batch_f16(half, batch, acc, ctr);
+                Repr::Acc(FACC as u32)
+            }
+            Stage::ConvFixed(lut) => {
+                match repr {
+                    Repr::F32 => {
+                        assert_eq!(images.len(), batch * lut.h * lut.w * lut.cin);
+                        codes.clear();
+                        codes.extend(images.iter().map(|&v| lut.fmt.quantize(v)));
+                    }
+                    Repr::Codes(bits) => debug_assert_eq!(bits, lut.fmt.bits),
+                    _ => panic!("fixed conv expects f32 or codes"),
+                }
+                reset_len_i64(acc, batch * lut.h * lut.w * lut.cout);
+                lut.eval_batch(codes, batch, acc, pad, ctr);
+                Repr::Acc(ACC_FRAC)
+            }
+            Stage::ConvFloat(lut) => {
+                match repr {
+                    Repr::F32 => {
+                        assert_eq!(images.len(), batch * lut.h * lut.w * lut.cin);
+                        half.clear();
+                        half.extend(images.iter().map(|&v| F16::from_f32(v.max(0.0))));
+                    }
+                    Repr::Half => {}
+                    _ => panic!("float conv expects f32 or half"),
+                }
+                reset_len_i64(acc, batch * lut.h * lut.w * lut.cout);
+                lut.eval_batch_f16(half, batch, acc, pad, ctr);
+                Repr::Acc(FACC as u32)
+            }
+            Stage::SigmoidLut(lut) => {
+                match repr {
+                    Repr::Half => {}
+                    Repr::Acc(frac) => {
+                        f16enc::acc_slice_to_f16_signed_into(acc, frac, half, ctr);
+                    }
+                    Repr::F32 => {
+                        half.clear();
+                        half.extend(images.iter().map(|&v| F16::from_f32(v)));
+                    }
+                    Repr::Codes(_) => {
+                        panic!("sigmoid LUT expects accumulators or binary16")
+                    }
+                }
+                lut.eval_vec(half, ctr);
+                Repr::Half
+            }
+            Stage::ReluInt => match repr {
+                Repr::Acc(frac) => {
+                    for a in acc.iter_mut() {
+                        if *a < 0 {
+                            *a = 0;
+                        }
+                    }
+                    ctr.compares += acc.len() as u64;
+                    Repr::Acc(frac)
+                }
+                other => other, // ReLU on codes/half handled at encode
+            },
+            Stage::MaxPool2Int { h, w, c } => match repr {
+                Repr::Acc(frac) => {
+                    let (h, w, c) = (*h, *w, *c);
+                    let (oh, ow) = (h / 2, w / 2);
+                    assert_eq!(acc.len(), batch * h * w * c);
+                    reset_len_i64(acc2, batch * oh * ow * c);
+                    acc2.fill(i64::MIN);
+                    for s in 0..batch {
+                        let src = &acc[s * h * w * c..(s + 1) * h * w * c];
+                        let dst = &mut acc2[s * oh * ow * c..(s + 1) * oh * ow * c];
+                        for y in 0..h {
+                            for x in 0..w {
+                                for ci in 0..c {
+                                    let val = src[(y * w + x) * c + ci];
+                                    let o = &mut dst[((y / 2) * ow + x / 2) * c + ci];
+                                    if val > *o {
+                                        *o = val;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    ctr.compares += (batch * h * w * c) as u64;
+                    std::mem::swap(acc, acc2);
+                    Repr::Acc(frac)
+                }
+                _ => panic!("maxpool expects accumulators"),
+            },
+            Stage::ToHalf => match repr {
+                Repr::Acc(frac) => {
+                    f16enc::acc_slice_to_f16_into(acc, frac, half, ctr);
+                    Repr::Half
+                }
+                Repr::F32 => {
+                    half.clear();
+                    half.extend(images.iter().map(|&v| F16::from_f32(v.max(0.0))));
+                    Repr::Half
+                }
+                other => other,
+            },
+            Stage::ToFixed { bits, range_exp } => match repr {
+                Repr::Acc(frac) => {
+                    // code = clamp(acc >> (frac - bits + range_exp));
+                    // value represented = code * 2^(range_exp - bits)
+                    let shift = frac as i32 - *bits as i32 + range_exp;
+                    let maxc = (1u32 << bits) - 1;
+                    ctr.compares += 2 * acc.len() as u64;
+                    codes.clear();
+                    codes.extend(acc.iter().map(|&a| {
+                        if a <= 0 {
+                            return 0;
+                        }
+                        let c = if shift >= 0 {
+                            (a >> shift as u32) as u64
+                        } else {
+                            (a as u64) << (-shift) as u32
+                        };
+                        (c as u32).min(maxc)
+                    }));
+                    Repr::Codes(*bits)
+                }
+                _ => panic!("tofixed expects accumulators"),
+            },
+        }
     }
 
     fn run_stage(&self, stage: &Stage, act: Act, ctr: &mut Counters) -> Act {
@@ -600,6 +879,166 @@ mod tests {
             }
         }
         assert!(agree >= 9, "sigmoid pipeline diverged: {agree}/10");
+    }
+
+    /// infer_batch must agree bit-exactly with per-sample infer: same
+    /// classes, same logits, and counter totals equal to the per-sample
+    /// sum — across every stage kind the compiler can emit.
+    fn assert_batch_matches_single(model: &Model, plan: &EnginePlan, seed: u64) {
+        let lut = LutModel::compile(model, plan).unwrap();
+        let features: usize = model.input_shape.iter().product();
+        let mut rng = Rng::new(seed);
+        let batch = 4;
+        let images: Vec<f32> = (0..batch * features).map(|_| rng.f32()).collect();
+        let mut scratch = scratch::Scratch::new();
+        let got = lut.infer_batch(&images, batch, &mut scratch);
+        got.counters.assert_multiplier_less();
+        let mut total = Counters::default();
+        for s in 0..batch {
+            let single = lut.infer(&images[s * features..(s + 1) * features]);
+            assert_eq!(got.classes[s], single.class, "class diverges at sample {s}");
+            assert_eq!(
+                got.logits_row(s),
+                single.logits.as_slice(),
+                "logits diverge at sample {s}"
+            );
+            total += single.counters;
+        }
+        assert_eq!(got.counters, total, "batched counter totals diverge");
+    }
+
+    #[test]
+    fn infer_batch_matches_single_linear_bitplane() {
+        let model = linear_model(31);
+        assert_batch_matches_single(&model, &EnginePlan::linear_default(), 131);
+    }
+
+    #[test]
+    fn infer_batch_matches_single_mlp_float() {
+        let model = mlp_model(32);
+        let plan = EnginePlan {
+            affine: vec![
+                AffineMode::WholeFixed { bits: 8, m: 1, range_exp: 0 },
+                AffineMode::Float { planes: 11, m: 1 },
+                AffineMode::Float { planes: 11, m: 1 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        assert_batch_matches_single(&model, &plan, 132);
+    }
+
+    #[test]
+    fn infer_batch_matches_single_fixed_inner() {
+        let model = mlp_model(33);
+        let plan = EnginePlan {
+            affine: vec![
+                AffineMode::WholeFixed { bits: 8, m: 1, range_exp: 0 },
+                AffineMode::BitplaneFixed { bits: 8, m: 4, range_exp: 3 },
+                AffineMode::BitplaneFixed { bits: 8, m: 4, range_exp: 3 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        assert_batch_matches_single(&model, &plan, 133);
+    }
+
+    #[test]
+    fn infer_batch_matches_single_sigmoid() {
+        let mut rng = Rng::new(78);
+        let model = Model {
+            arch: crate::nn::Arch::Mlp,
+            layers: vec![
+                crate::nn::Layer::Dense {
+                    w: Tensor::randn(&[24, 784], 0.05, &mut rng),
+                    b: Tensor::zeros(&[24]),
+                },
+                crate::nn::Layer::Sigmoid,
+                crate::nn::Layer::Dense {
+                    w: Tensor::randn(&[10, 24], 0.3, &mut rng),
+                    b: Tensor::zeros(&[10]),
+                },
+            ],
+            input_shape: vec![784],
+        };
+        let plan = EnginePlan {
+            affine: vec![
+                AffineMode::Float { planes: 11, m: 1 },
+                AffineMode::Float { planes: 11, m: 1 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        assert_batch_matches_single(&model, &plan, 134);
+    }
+
+    #[test]
+    fn infer_batch_matches_single_cnn() {
+        // exercises the batched conv wiring end-to-end: ConvFixed,
+        // ReluInt, MaxPool2Int (acc/acc2 swap), ToHalf, ConvFloat (pad
+        // scratch), Flatten, DenseFloat
+        let mut rng = Rng::new(79);
+        let model = Model {
+            arch: crate::nn::Arch::Cnn,
+            layers: vec![
+                crate::nn::Layer::Conv2d {
+                    filter: Tensor::randn(&[3, 3, 1, 2], 0.3, &mut rng),
+                    b: Tensor::randn(&[2], 0.05, &mut rng),
+                },
+                crate::nn::Layer::Relu,
+                crate::nn::Layer::MaxPool2,
+                crate::nn::Layer::Conv2d {
+                    filter: Tensor::randn(&[3, 3, 2, 3], 0.2, &mut rng),
+                    b: Tensor::randn(&[3], 0.05, &mut rng),
+                },
+                crate::nn::Layer::Relu,
+                crate::nn::Layer::Flatten,
+                crate::nn::Layer::Dense {
+                    w: Tensor::randn(&[10, 4 * 4 * 3], 0.2, &mut rng),
+                    b: Tensor::zeros(&[10]),
+                },
+            ],
+            input_shape: vec![8, 8, 1],
+        };
+        let plan = EnginePlan {
+            affine: vec![
+                AffineMode::BitplaneFixed { bits: 3, m: 2, range_exp: 0 },
+                AffineMode::Float { planes: 11, m: 1 },
+                AffineMode::Float { planes: 11, m: 1 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        assert_batch_matches_single(&model, &plan, 135);
+    }
+
+    #[test]
+    fn scratch_buffers_stabilize_after_warmup() {
+        // after one warm-up batch, further batches of the same geometry
+        // must not grow any scratch buffer (the zero-allocation
+        // precondition; the allocator-level assert lives in
+        // rust/tests/alloc_discipline.rs)
+        let model = linear_model(36);
+        let plan = EnginePlan {
+            affine: vec![AffineMode::BitplaneFixed { bits: 3, m: 8, range_exp: 0 }],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        let lut = LutModel::compile(&model, &plan).unwrap();
+        let mut rng = Rng::new(37);
+        let batch = 8;
+        let images: Vec<f32> = (0..batch * 784).map(|_| rng.f32()).collect();
+        let mut scratch = scratch::Scratch::new();
+        let mut out = BatchInference::default();
+        lut.infer_batch_into(&images, batch, &mut scratch, &mut out);
+        let bytes = scratch.resident_bytes();
+        let (cap_c, cap_l) = (out.classes.capacity(), out.logits.capacity());
+        for _ in 0..5 {
+            lut.infer_batch_into(&images, batch, &mut scratch, &mut out);
+        }
+        assert_eq!(scratch.resident_bytes(), bytes, "scratch grew after warm-up");
+        assert_eq!(out.classes.capacity(), cap_c);
+        assert_eq!(out.logits.capacity(), cap_l);
     }
 
     #[test]

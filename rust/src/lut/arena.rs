@@ -1,0 +1,227 @@
+//! Contiguous table arenas — the storage substrate of the batched,
+//! table-stationary evaluation engine.
+//!
+//! Every LUT bank used to hold its per-chunk tables as boxed
+//! `Vec<Vec<i64>>`: one heap allocation per chunk, 8 bytes per entry,
+//! no locality between neighbouring chunks. The arena flattens a bank
+//! into **one** allocation with per-chunk entry offsets, and *narrows*
+//! entries to `i32` when every entry fits — half the bytes per cache
+//! line on the row-gather hot path. Entry magnitudes usually do fit:
+//! at `ACC_FRAC = 32` a fixed-point table entry is
+//! `round(w · 2^(32-bits))`, within i32 for the weight scales the
+//! trained models produce. When any entry does not fit (the float banks
+//! at `FACC = 44` never do), the arena falls back to `i64` — the
+//! overflow check is the narrowing itself, performed once at build
+//! time; evaluation is generic over the entry width and bit-exact in
+//! both (entries are widened to `i64` before accumulation).
+
+/// Backing storage: narrowed (`i32`) when every entry fits, else `i64`.
+#[derive(Debug)]
+pub enum ArenaStore {
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+/// One flat allocation holding every chunk's table back to back.
+#[derive(Debug)]
+pub struct TableArena {
+    store: ArenaStore,
+    /// Entry offset of chunk `c`'s table; `offsets[num_chunks]` = total.
+    offsets: Vec<usize>,
+    /// Entries per row (uniform within a bank: `p` for dense banks, the
+    /// dilated patch size for conv banks).
+    row_len: usize,
+}
+
+impl TableArena {
+    /// Flatten per-chunk tables (entries in `i64` accumulator scale)
+    /// into one arena, narrowing to `i32` when possible.
+    pub fn from_tables(tables: &[Vec<i64>], row_len: usize) -> TableArena {
+        let mut offsets = Vec::with_capacity(tables.len() + 1);
+        let mut total = 0usize;
+        offsets.push(0);
+        for t in tables {
+            debug_assert_eq!(t.len() % row_len.max(1), 0);
+            total += t.len();
+            offsets.push(total);
+        }
+        let narrow = tables
+            .iter()
+            .flat_map(|t| t.iter())
+            .all(|&v| i32::try_from(v).is_ok());
+        let store = if narrow {
+            let mut flat = Vec::with_capacity(total);
+            for t in tables {
+                flat.extend(t.iter().map(|&v| v as i32));
+            }
+            ArenaStore::I32(flat)
+        } else {
+            let mut flat = Vec::with_capacity(total);
+            for t in tables {
+                flat.extend_from_slice(t);
+            }
+            ArenaStore::I64(flat)
+        };
+        TableArena { store, offsets, row_len }
+    }
+
+    pub fn store(&self) -> &ArenaStore {
+        &self.store
+    }
+
+    /// True when entries are stored narrowed to `i32`.
+    pub fn is_narrow(&self) -> bool {
+        matches!(self.store, ArenaStore::I32(_))
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    /// Total entries across all chunks.
+    pub fn total_entries(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Entries in chunk `c`'s table.
+    pub fn chunk_entries(&self, c: usize) -> usize {
+        self.offsets[c + 1] - self.offsets[c]
+    }
+
+    /// Rows in chunk `c`'s table.
+    pub fn chunk_rows(&self, c: usize) -> usize {
+        self.chunk_entries(c) / self.row_len
+    }
+
+    /// Chunk `c`'s table as a typed slice; `E` must match the store
+    /// width (banks dispatch on [`TableArena::store`] once per call).
+    #[inline]
+    pub fn chunk_slice<E: ArenaEntry>(&self, c: usize) -> &[E] {
+        &E::entries(&self.store)[self.offsets[c]..self.offsets[c + 1]]
+    }
+
+    /// Resident bytes of the arena (diagnostics / DESIGN accounting).
+    pub fn resident_bytes(&self) -> usize {
+        match &self.store {
+            ArenaStore::I32(v) => v.len() * 4,
+            ArenaStore::I64(v) => v.len() * 8,
+        }
+    }
+
+    /// Entry at flat index `i`, widened (tests / debugging).
+    pub fn entry(&self, i: usize) -> i64 {
+        match &self.store {
+            ArenaStore::I32(v) => v[i] as i64,
+            ArenaStore::I64(v) => v[i],
+        }
+    }
+}
+
+/// Entry width the evaluation loops are generic over.
+pub trait ArenaEntry: Copy + 'static {
+    fn widen(self) -> i64;
+    fn entries(store: &ArenaStore) -> &[Self];
+}
+
+impl ArenaEntry for i32 {
+    #[inline(always)]
+    fn widen(self) -> i64 {
+        self as i64
+    }
+    #[inline]
+    fn entries(store: &ArenaStore) -> &[i32] {
+        match store {
+            ArenaStore::I32(v) => v,
+            ArenaStore::I64(_) => unreachable!("arena width mismatch: want i32"),
+        }
+    }
+}
+
+impl ArenaEntry for i64 {
+    #[inline(always)]
+    fn widen(self) -> i64 {
+        self
+    }
+    #[inline]
+    fn entries(store: &ArenaStore) -> &[i64] {
+        match store {
+            ArenaStore::I64(v) => v,
+            ArenaStore::I32(_) => unreachable!("arena width mismatch: want i64"),
+        }
+    }
+}
+
+/// Dispatch an expression over the arena's entry width. Usage:
+/// `with_arena!(self.arena, E => self.eval_impl::<E>(args))`.
+macro_rules! with_arena {
+    ($arena:expr, $E:ident => $body:expr) => {
+        match $arena.store() {
+            $crate::lut::arena::ArenaStore::I32(_) => {
+                type $E = i32;
+                $body
+            }
+            $crate::lut::arena::ArenaStore::I64(_) => {
+                type $E = i64;
+                $body
+            }
+        }
+    };
+}
+pub(crate) use with_arena;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn narrows_when_entries_fit() {
+        let tables = vec![vec![1i64, -2, 3, 4], vec![5, 6]];
+        let a = TableArena::from_tables(&tables, 2);
+        assert!(a.is_narrow());
+        assert_eq!(a.num_chunks(), 2);
+        assert_eq!(a.total_entries(), 6);
+        assert_eq!(a.chunk_rows(0), 2);
+        assert_eq!(a.chunk_rows(1), 1);
+        assert_eq!(a.chunk_slice::<i32>(1), &[5, 6]);
+        assert_eq!(a.entry(1), -2);
+        assert_eq!(a.resident_bytes(), 24);
+    }
+
+    #[test]
+    fn falls_back_to_i64_on_wide_entries() {
+        let wide = i64::from(i32::MAX) + 1;
+        let tables = vec![vec![0i64, wide]];
+        let a = TableArena::from_tables(&tables, 1);
+        assert!(!a.is_narrow());
+        assert_eq!(a.chunk_slice::<i64>(0), &[0, wide]);
+        assert_eq!(a.entry(1), wide);
+        assert_eq!(a.resident_bytes(), 16);
+    }
+
+    #[test]
+    fn negative_extreme_still_narrow() {
+        let tables = vec![vec![i64::from(i32::MIN), i64::from(i32::MAX)]];
+        let a = TableArena::from_tables(&tables, 1);
+        assert!(a.is_narrow());
+        assert_eq!(a.entry(0), i64::from(i32::MIN));
+    }
+
+    #[test]
+    fn widen_roundtrips() {
+        assert_eq!((-7i32).widen(), -7i64);
+        assert_eq!(7i64.widen(), 7);
+    }
+
+    #[test]
+    fn dispatch_macro_selects_width() {
+        let a = TableArena::from_tables(&[vec![1i64, 2]], 1);
+        let total = with_arena!(a, E => {
+            a.chunk_slice::<E>(0).iter().map(|e| e.widen()).sum::<i64>()
+        });
+        assert_eq!(total, 3);
+    }
+}

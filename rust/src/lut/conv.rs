@@ -10,8 +10,13 @@
 //!
 //! Tables are per input channel (different channels have different
 //! filter taps, so they cannot share), which is exactly how the paper's
-//! conv2 cost scales.
+//! conv2 cost scales. Storage is one contiguous [`TableArena`] (one
+//! "chunk" per input channel); [`ConvLut::eval_batch`] is
+//! channel-outer / sample-inner so each channel's table is streamed
+//! once per batch, with the padded accumulator image provided by the
+//! caller's scratch (zero per-call allocations).
 
+use super::arena::{with_arena, ArenaEntry, TableArena};
 use super::{to_acc, LutError, Partition, MAX_TABLE_BYTES};
 use crate::engine::counters::Counters;
 use crate::quant::FixedFormat;
@@ -28,10 +33,10 @@ pub struct ConvLut {
     /// Spatial block edge m.
     pub m: usize,
     pub fmt: FixedFormat,
-    /// tables[ci][idx * patch + (py*pw + px)*cout + o], one per input
-    /// channel, shared across blocks and bitplanes. Entries at LSB-plane
-    /// accumulator scale.
-    tables: Vec<Vec<i64>>,
+    /// arena chunk ci, row idx, entry (py*pe + px)*cout + o — one chunk
+    /// per input channel, shared across blocks and bitplanes. Entries at
+    /// LSB-plane accumulator scale.
+    arena: TableArena,
     /// patch edge = m + 2r
     pe: usize,
     bias_acc: Vec<i64>,
@@ -65,8 +70,10 @@ impl ConvLut {
         let rows = 1usize << a;
         let pe = m + 2 * r;
         let patch = pe * pe * cout;
-        if rows * patch * 8 > MAX_TABLE_BYTES {
-            return Err(LutError::TooLarge { rows: rows as u128, cols: patch });
+        // checked: rows * patch * 8 can wrap usize on huge configs
+        match rows.checked_mul(patch).and_then(|e| e.checked_mul(8)) {
+            Some(bytes) if bytes <= MAX_TABLE_BYTES => {}
+            _ => return Err(LutError::TooLarge { rows: rows as u128, cols: patch }),
         }
         let lsb = (-(fmt.bits as f64)).exp2();
         let mut tables = Vec::with_capacity(cin);
@@ -96,69 +103,113 @@ impl ConvLut {
             tables.push(table);
         }
         let bias_acc = bias.iter().map(|&v| to_acc(v as f64)).collect();
-        Ok(ConvLut { h, w, cin, cout, r, m, fmt, tables, pe, bias_acc })
+        let arena = TableArena::from_tables(&tables, patch);
+        Ok(ConvLut { h, w, cin, cout, r, m, fmt, arena, pe, bias_acc })
+    }
+
+    /// The arena (diagnostics: width, residency).
+    pub fn arena(&self) -> &TableArena {
+        &self.arena
     }
 
     /// Evaluate the convolution over a quantized NHWC input
     /// `[h, w, cin]` given as codes. Returns accumulator image
     /// `[h, w, cout]`. Pure gathers, shifts and adds.
     pub fn eval_codes(&self, codes: &[u32], ctr: &mut Counters) -> Vec<i64> {
-        assert_eq!(codes.len(), self.h * self.w * self.cin);
+        let mut out = vec![0i64; self.h * self.w * self.cout];
+        let mut pad = Vec::new();
+        self.eval_batch(codes, 1, &mut out, &mut pad, ctr);
+        out
+    }
+
+    /// Batched evaluation: `codes` row-major `batch x (h·w·cin)`, `out`
+    /// `batch x (h·w·cout)` (overwritten). `pad` is caller-provided
+    /// scratch for the padded accumulator images (resized as needed and
+    /// reused across calls — zero steady-state allocations). Loop order
+    /// is channel-outer / sample-inner so each channel's shared table is
+    /// streamed once per batch.
+    pub fn eval_batch(
+        &self,
+        codes: &[u32],
+        batch: usize,
+        out: &mut [i64],
+        pad: &mut Vec<i64>,
+        ctr: &mut Counters,
+    ) {
+        let (h, w, r) = (self.h, self.w, self.r);
+        assert_eq!(codes.len(), batch * h * w * self.cin);
+        assert_eq!(out.len(), batch * h * w * self.cout);
+        let (ph, pw) = (h + 2 * r, w + 2 * r);
+        let pimg = ph * pw * self.cout;
+        pad.clear();
+        pad.resize(batch * pimg, 0);
+        let shift_adds =
+            with_arena!(self.arena, E => self.eval_batch_impl::<E>(codes, batch, pad));
+        super::crop_add_bias(pad, out, batch, h, w, r, self.cout, &self.bias_acc);
+        let blocks = (h / self.m) * (w / self.m);
+        ctr.lut_evals +=
+            (blocks * self.fmt.bits as usize * self.cin * batch) as u64;
+        ctr.shift_adds += shift_adds;
+        ctr.adds += (batch * h * w * self.cout) as u64;
+    }
+
+    fn eval_batch_impl<E: ArenaEntry>(
+        &self,
+        codes: &[u32],
+        batch: usize,
+        pad: &mut [i64],
+    ) -> u64 {
         let (h, w, r, m, pe) = (self.h, self.w, self.r, self.m, self.pe);
         let n = self.fmt.bits;
         let (ph, pw) = (h + 2 * r, w + 2 * r);
-        // padded accumulator, cropped at the end
-        let mut pad = vec![0i64; ph * pw * self.cout];
+        let pimg = ph * pw * self.cout;
+        let simg = h * w * self.cin;
         let patch = pe * pe * self.cout;
+        let mut shift_adds = 0u64;
         for ci in 0..self.cin {
-            let table = &self.tables[ci];
-            for by in 0..h / m {
-                for bx in 0..w / m {
-                    for j in 0..n {
-                        // gather plane-j bits of the block for channel ci
-                        let mut idx = 0usize;
-                        for dy in 0..m {
-                            for dx in 0..m {
-                                let pix = ((by * m + dy) * w + (bx * m + dx))
-                                    * self.cin
-                                    + ci;
-                                idx |= ((((codes[pix] >> j) & 1) as usize)
-                                    << (dy * m + dx)) as usize;
+            let table = self.arena.chunk_slice::<E>(ci);
+            for s in 0..batch {
+                let scodes = &codes[s * simg..(s + 1) * simg];
+                let spad = &mut pad[s * pimg..(s + 1) * pimg];
+                for by in 0..h / m {
+                    for bx in 0..w / m {
+                        for j in 0..n {
+                            // gather plane-j bits of the block, channel ci
+                            let mut idx = 0usize;
+                            for dy in 0..m {
+                                for dx in 0..m {
+                                    let pix = ((by * m + dy) * w + (bx * m + dx))
+                                        * self.cin
+                                        + ci;
+                                    idx |= (((scodes[pix] >> j) & 1) as usize)
+                                        << (dy * m + dx);
+                                }
                             }
-                        }
-                        ctr.lut_evals += 1;
-                        if idx == 0 {
-                            continue;
-                        }
-                        let prow = &table[idx * patch..(idx + 1) * patch];
-                        // patch origin in padded coords = block origin
-                        let oy0 = by * m;
-                        let ox0 = bx * m;
-                        for py in 0..pe {
-                            let dst = ((oy0 + py) * pw + ox0) * self.cout;
-                            let src = py * pe * self.cout;
-                            for t in 0..pe * self.cout {
-                                pad[dst + t] += prow[src + t] << j;
+                            if idx == 0 {
+                                // zero row: skipped gather, lookup still
+                                // charged (per batch, in eval_batch)
+                                continue;
                             }
+                            let prow = &table[idx * patch..(idx + 1) * patch];
+                            // patch origin in padded coords = block origin
+                            let oy0 = by * m;
+                            let ox0 = bx * m;
+                            for py in 0..pe {
+                                let dst = ((oy0 + py) * pw + ox0) * self.cout;
+                                let src = py * pe * self.cout;
+                                let drow = &mut spad[dst..dst + pe * self.cout];
+                                let srow = &prow[src..src + pe * self.cout];
+                                for (d, t) in drow.iter_mut().zip(srow) {
+                                    *d += t.widen() << j;
+                                }
+                            }
+                            shift_adds += (pe * pe * self.cout) as u64;
                         }
-                        ctr.shift_adds += (pe * pe * self.cout) as u64;
                     }
                 }
             }
         }
-        // crop centre h x w and add bias
-        let mut out = vec![0i64; h * w * self.cout];
-        for y in 0..h {
-            for x in 0..w {
-                let src = ((y + r) * pw + (x + r)) * self.cout;
-                let dst = (y * w + x) * self.cout;
-                for o in 0..self.cout {
-                    out[dst + o] = pad[src + o] + self.bias_acc[o];
-                }
-            }
-        }
-        ctr.adds += (h * w * self.cout) as u64;
-        out
+        shift_adds
     }
 
     /// Quantize f32 NHWC input (values in [0,1]) then evaluate.
@@ -175,7 +226,7 @@ impl ConvLut {
     /// Materialised size in bits at r_o-bit entries:
     /// cin tables × 2^(m²) rows × (m+2r)²·cout entries.
     pub fn size_bits(&self, r_o: u32) -> u64 {
-        self.tables.iter().map(|t| t.len() as u64 * r_o as u64).sum()
+        self.arena.total_entries() as u64 * r_o as u64
     }
 }
 
@@ -265,6 +316,34 @@ mod tests {
                 assert!((a - b).abs() < 1e-4);
             }
         }
+    }
+
+    #[test]
+    fn eval_batch_bit_exact_with_per_sample() {
+        let (h, w, cin, cout, r, m, bits) = (4, 4, 2, 3, 1, 2, 3);
+        let fs = 2 * r + 1;
+        let mut rng = Rng::new(91);
+        let filter: Vec<f32> =
+            (0..fs * fs * cin * cout).map(|_| rng.normal() * 0.3).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+        let fmt = FixedFormat::new(bits);
+        let lut = ConvLut::build(&filter, &bias, h, w, cin, cout, r, m, fmt).unwrap();
+        let batch = 3;
+        let simg = h * w * cin;
+        let codes: Vec<u32> =
+            (0..batch * simg).map(|_| rng.below(1 << bits) as u32).collect();
+        let mut out = vec![0i64; batch * h * w * cout];
+        let mut pad = Vec::new();
+        let mut cb = Counters::default();
+        lut.eval_batch(&codes, batch, &mut out, &mut pad, &mut cb);
+        let mut cs = Counters::default();
+        let oimg = h * w * cout;
+        for s in 0..batch {
+            let single = lut.eval_codes(&codes[s * simg..(s + 1) * simg], &mut cs);
+            assert_eq!(&out[s * oimg..(s + 1) * oimg], single.as_slice(), "sample {s}");
+        }
+        assert_eq!(cb, cs, "batched counters must equal summed per-sample counters");
+        cb.assert_multiplier_less();
     }
 
     #[test]

@@ -6,7 +6,12 @@
 //! that pixel's (mantissa-bit, 5-bit exponent) field — 64 rows — and the
 //! table returns the pixel's dilated (2r+1)² × cout output patch. One
 //! table per input channel, shared by all pixels and all planes.
+//!
+//! Storage is a contiguous [`TableArena`] (one "chunk" per input
+//! channel); [`ConvFloatLut::eval_batch_f16`] is channel-outer /
+//! sample-inner with caller-provided padded scratch.
 
+use super::arena::{with_arena, ArenaEntry, TableArena};
 use super::floatplane::FACC;
 use super::{LutError, MAX_TABLE_BYTES};
 use crate::engine::counters::Counters;
@@ -22,8 +27,8 @@ pub struct ConvFloatLut {
     pub r: usize,
     /// Mantissa planes evaluated (≤ 11).
     pub planes: u32,
-    /// tables[ci][idx * patch + (py*pe+px)*cout + o]; pe = 2r+1.
-    tables: Vec<Vec<i64>>,
+    /// arena chunk ci, row idx, entry (py*pe+px)*cout + o; pe = 2r+1.
+    arena: TableArena,
     bias_acc: Vec<i64>,
 }
 
@@ -45,8 +50,10 @@ impl ConvFloatLut {
         let rows = 1usize << 6; // 1 mantissa bit + 5 exponent bits
         let pe = fs; // patch edge for m=1
         let patch = pe * pe * cout;
-        if rows * patch * 8 > MAX_TABLE_BYTES {
-            return Err(LutError::TooLarge { rows: rows as u128, cols: patch });
+        // checked: rows * patch * 8 can wrap usize on huge configs
+        match rows.checked_mul(patch).and_then(|e| e.checked_mul(8)) {
+            Some(bytes) if bytes <= MAX_TABLE_BYTES => {}
+            _ => return Err(LutError::TooLarge { rows: rows as u128, cols: patch }),
         }
         let mut tables = Vec::with_capacity(cin);
         for ci in 0..cin {
@@ -81,72 +88,114 @@ impl ConvFloatLut {
             .iter()
             .map(|&v| (v as f64 * (FACC as f64).exp2()).round() as i64)
             .collect();
-        Ok(ConvFloatLut { h, w, cin, cout, r, planes, tables, bias_acc })
+        let arena = TableArena::from_tables(&tables, patch);
+        Ok(ConvFloatLut { h, w, cin, cout, r, planes, arena, bias_acc })
+    }
+
+    /// The arena (diagnostics: width, residency).
+    pub fn arena(&self) -> &TableArena {
+        &self.arena
     }
 
     /// Evaluate over an NHWC `[h, w, cin]` binary16 input. Returns
     /// accumulator image `[h, w, cout]` at FACC scale.
     pub fn eval_f16(&self, x: &[F16], ctr: &mut Counters) -> Vec<i64> {
-        assert_eq!(x.len(), self.h * self.w * self.cin);
+        let mut out = vec![0i64; self.h * self.w * self.cout];
+        let mut pad = Vec::new();
+        self.eval_batch_f16(x, 1, &mut out, &mut pad, ctr);
+        out
+    }
+
+    /// Batched evaluation: `x` row-major `batch x (h·w·cin)`, `out`
+    /// `batch x (h·w·cout)` (overwritten). `pad` is caller-provided
+    /// scratch reused across calls. Channel-outer / sample-inner.
+    pub fn eval_batch_f16(
+        &self,
+        x: &[F16],
+        batch: usize,
+        out: &mut [i64],
+        pad: &mut Vec<i64>,
+        ctr: &mut Counters,
+    ) {
+        let (h, w, r) = (self.h, self.w, self.r);
+        assert_eq!(x.len(), batch * h * w * self.cin);
+        assert_eq!(out.len(), batch * h * w * self.cout);
+        let (ph, pw) = (h + 2 * r, w + 2 * r);
+        let pimg = ph * pw * self.cout;
+        pad.clear();
+        pad.resize(batch * pimg, 0);
+        let shift_adds =
+            with_arena!(self.arena, E => self.eval_batch_impl::<E>(x, batch, pad));
+        super::crop_add_bias(pad, out, batch, h, w, r, self.cout, &self.bias_acc);
+        let planes = self.planes.min(SIG_BITS);
+        ctr.lut_evals += (h * w * self.cin * planes as usize * batch) as u64;
+        ctr.shift_adds += shift_adds;
+        ctr.adds += (batch * h * w * self.cout) as u64;
+    }
+
+    fn eval_batch_impl<E: ArenaEntry>(
+        &self,
+        x: &[F16],
+        batch: usize,
+        pad: &mut [i64],
+    ) -> u64 {
         let (h, w, r) = (self.h, self.w, self.r);
         let fs = 2 * r + 1;
         let pe = fs;
         let patch = pe * pe * self.cout;
         let (ph, pw) = (h + 2 * r, w + 2 * r);
-        let mut pad = vec![0i64; ph * pw * self.cout];
+        let pimg = ph * pw * self.cout;
+        let simg = h * w * self.cin;
         let lo_plane = SIG_BITS - self.planes.min(SIG_BITS);
+        let mut shift_adds = 0u64;
         for ci in 0..self.cin {
-            let table = &self.tables[ci];
-            for y in 0..h {
-                for xx in 0..w {
-                    let hval = x[(y * w + xx) * self.cin + ci];
-                    debug_assert_eq!(hval.sign(), 0, "conv float LUT expects nonneg input");
-                    ctr.lut_evals += (SIG_BITS - lo_plane) as u64;
-                    // one row — table[(exp<<1)|1] — serves every plane of
-                    // this pixel; iterate the significand's set bits and
-                    // shift-add the patch (§Perf fast path, same trick
-                    // as the dense float bank).
-                    let mut sig = (hval.significand11() >> lo_plane) << lo_plane;
-                    if sig == 0 {
-                        continue;
-                    }
-                    let idx = ((hval.exponent() << 1) | 1) as usize;
-                    let prow = &table[idx * patch..(idx + 1) * patch];
-                    while sig != 0 {
-                        let j = sig.trailing_zeros();
-                        // patch origin in padded coords = (y, xx)
-                        for py in 0..pe {
-                            let dst = ((y + py) * pw + xx) * self.cout;
-                            let src = py * pe * self.cout;
-                            let dstrow = &mut pad[dst..dst + pe * self.cout];
-                            let srcrow = &prow[src..src + pe * self.cout];
-                            for (d, &s) in dstrow.iter_mut().zip(srcrow) {
-                                *d += s << j;
-                            }
+            let table = self.arena.chunk_slice::<E>(ci);
+            for s in 0..batch {
+                let sx = &x[s * simg..(s + 1) * simg];
+                let spad = &mut pad[s * pimg..(s + 1) * pimg];
+                for y in 0..h {
+                    for xx in 0..w {
+                        let hval = sx[(y * w + xx) * self.cin + ci];
+                        debug_assert_eq!(
+                            hval.sign(),
+                            0,
+                            "conv float LUT expects nonneg input"
+                        );
+                        // one row — table[(exp<<1)|1] — serves every plane
+                        // of this pixel; iterate the significand's set
+                        // bits and shift-add the patch (§Perf fast path,
+                        // same trick as the dense float bank).
+                        let mut sig = (hval.significand11() >> lo_plane) << lo_plane;
+                        if sig == 0 {
+                            continue;
                         }
-                        ctr.shift_adds += patch as u64;
-                        sig &= sig - 1;
+                        let idx = ((hval.exponent() << 1) | 1) as usize;
+                        let prow = &table[idx * patch..(idx + 1) * patch];
+                        while sig != 0 {
+                            let j = sig.trailing_zeros();
+                            // patch origin in padded coords = (y, xx)
+                            for py in 0..pe {
+                                let dst = ((y + py) * pw + xx) * self.cout;
+                                let src = py * pe * self.cout;
+                                let dstrow = &mut spad[dst..dst + pe * self.cout];
+                                let srcrow = &prow[src..src + pe * self.cout];
+                                for (d, t) in dstrow.iter_mut().zip(srcrow) {
+                                    *d += t.widen() << j;
+                                }
+                            }
+                            shift_adds += patch as u64;
+                            sig &= sig - 1;
+                        }
                     }
                 }
             }
         }
-        let mut out = vec![0i64; h * w * self.cout];
-        for y in 0..h {
-            for xx in 0..w {
-                let src = ((y + r) * pw + (xx + r)) * self.cout;
-                let dst = (y * w + xx) * self.cout;
-                for o in 0..self.cout {
-                    out[dst + o] = pad[src + o] + self.bias_acc[o];
-                }
-            }
-        }
-        ctr.adds += (h * w * self.cout) as u64;
-        out
+        shift_adds
     }
 
     /// Size in bits at r_o-bit entries.
     pub fn size_bits(&self, r_o: u32) -> u64 {
-        self.tables.iter().map(|t| t.len() as u64 * r_o as u64).sum()
+        self.arena.total_entries() as u64 * r_o as u64
     }
 }
 
@@ -209,6 +258,34 @@ mod tests {
         let x = vec![F16::from_f32(1.0); h * w * cin];
         let _ = lut.eval_f16(&x, &mut ctr);
         assert_eq!(ctr.lut_evals, (h * w * cin * 11) as u64);
+    }
+
+    #[test]
+    fn eval_batch_bit_exact_with_per_sample() {
+        let (h, w, cin, cout, r) = (4, 4, 2, 2, 1);
+        let fs = 2 * r + 1;
+        let mut rng = Rng::new(93);
+        let filter: Vec<f32> =
+            (0..fs * fs * cin * cout).map(|_| rng.normal() * 0.3).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+        let lut =
+            ConvFloatLut::build(&filter, &bias, h, w, cin, cout, r, SIG_BITS).unwrap();
+        let batch = 3;
+        let simg = h * w * cin;
+        let x: Vec<F16> =
+            (0..batch * simg).map(|_| F16::from_f32(rng.f32() * 4.0)).collect();
+        let mut out = vec![0i64; batch * h * w * cout];
+        let mut pad = Vec::new();
+        let mut cb = Counters::default();
+        lut.eval_batch_f16(&x, batch, &mut out, &mut pad, &mut cb);
+        let mut cs = Counters::default();
+        let oimg = h * w * cout;
+        for s in 0..batch {
+            let single = lut.eval_f16(&x[s * simg..(s + 1) * simg], &mut cs);
+            assert_eq!(&out[s * oimg..(s + 1) * oimg], single.as_slice(), "sample {s}");
+        }
+        assert_eq!(cb, cs);
+        cb.assert_multiplier_less();
     }
 
     #[test]

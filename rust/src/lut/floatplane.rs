@@ -7,7 +7,12 @@
 //!
 //! Inputs are assumed nonnegative (post-ReLU), matching the paper's
 //! "the sign bit is always 0 ... reduce the LUT size by half".
+//!
+//! Tables live in a contiguous [`TableArena`]; entries at `FACC = 44`
+//! scale exceed i32, so this bank is the arena's designed i64 fallback.
+//! [`DenseFloatLut::eval_batch_f16`] runs chunk-outer / sample-inner.
 
+use super::arena::{with_arena, ArenaEntry, TableArena};
 use super::{LutError, Partition, MAX_TABLE_BYTES};
 use crate::engine::counters::Counters;
 use crate::quant::f16::{F16, EXP_BIAS, FRAC_BITS, SIG_BITS};
@@ -39,7 +44,7 @@ pub struct DenseFloatLut {
     pub partition: Partition,
     pub p: usize,
     pub cfg: FloatLutConfig,
-    tables: Vec<Vec<i64>>,
+    arena: TableArena,
     bias_acc: Vec<i64>,
 }
 
@@ -65,8 +70,10 @@ impl DenseFloatLut {
                 return Err(LutError::TooLarge { rows: 1u128 << idx_bits, cols: p });
             }
             let rows = 1usize << idx_bits;
-            if rows * p * 8 > MAX_TABLE_BYTES {
-                return Err(LutError::TooLarge { rows: rows as u128, cols: p });
+            // checked: rows * p * 8 can wrap usize on huge configs
+            match rows.checked_mul(p).and_then(|e| e.checked_mul(8)) {
+                Some(bytes) if bytes <= MAX_TABLE_BYTES => {}
+                _ => return Err(LutError::TooLarge { rows: rows as u128, cols: p }),
             }
             let mut table = vec![0i64; rows * p];
             for idx in 0..rows {
@@ -94,7 +101,13 @@ impl DenseFloatLut {
             .iter()
             .map(|&v| (v as f64 * (FACC as f64).exp2()).round() as i64)
             .collect();
-        Ok(DenseFloatLut { partition, p, cfg, tables, bias_acc })
+        let arena = TableArena::from_tables(&tables, p);
+        Ok(DenseFloatLut { partition, p, cfg, arena, bias_acc })
+    }
+
+    /// The arena (diagnostics: width, residency).
+    pub fn arena(&self) -> &TableArena {
+        &self.arena
     }
 
     /// Evaluate `Wx + b` from binary16 inputs. For each chunk and each
@@ -103,67 +116,102 @@ impl DenseFloatLut {
     /// shifted left by j and accumulated. The same table serves all
     /// planes — the paper's Fig. 1.
     pub fn eval_f16(&self, x: &[F16], ctr: &mut Counters) -> Vec<i64> {
-        assert_eq!(x.len(), self.partition.q);
+        let mut acc = vec![0i64; self.p];
+        self.eval_batch_f16(x, 1, &mut acc, ctr);
+        acc
+    }
+
+    /// Batched evaluation: `x` row-major `batch x q`, `out` `batch x p`
+    /// (overwritten). Chunk-outer / sample-inner; per-batch counters.
+    pub fn eval_batch_f16(
+        &self,
+        x: &[F16],
+        batch: usize,
+        out: &mut [i64],
+        ctr: &mut Counters,
+    ) {
+        let q = self.partition.q;
+        let p = self.p;
+        assert_eq!(x.len(), batch * q);
+        assert_eq!(out.len(), batch * p);
+        for s in 0..batch {
+            out[s * p..(s + 1) * p].copy_from_slice(&self.bias_acc);
+        }
+        let planes = self.cfg.planes.min(SIG_BITS);
+        let shift_adds =
+            with_arena!(self.arena, E => self.eval_batch_impl::<E>(x, batch, out));
+        ctr.adds += (batch * p) as u64; // bias adds
+        ctr.lut_evals += planes as u64 * self.partition.k() as u64 * batch as u64;
+        ctr.shift_adds += shift_adds;
+    }
+
+    fn eval_batch_impl<E: ArenaEntry>(&self, x: &[F16], batch: usize, out: &mut [i64]) -> u64 {
+        let q = self.partition.q;
+        let p = self.p;
         let per_elem_bits = 1 + EXP_BITS;
         let planes = self.cfg.planes.min(SIG_BITS);
-        let mut acc = self.bias_acc.clone();
-        ctr.adds += self.p as u64;
+        let lo = SIG_BITS - planes;
+        let mut shift_adds = 0u64;
         for (c, chunk) in self.partition.chunks.iter().enumerate() {
-            let table = &self.tables[c];
+            let table = self.arena.chunk_slice::<E>(c);
             // fast path for singleton chunks (the paper's m=1 layout):
             // for a fixed element the exponent is constant across
             // planes, so ONE row — table[(exp<<1)|1] — serves every
             // mantissa plane; iterate the significand's set bits.
             if let [col] = chunk.as_slice() {
-                let h = x[*col];
-                debug_assert_eq!(h.sign(), 0, "float LUT path expects ReLU-nonneg input");
-                ctr.lut_evals += planes as u64;
-                let lo = SIG_BITS - planes;
-                let mut sig = (h.significand11() >> lo) << lo; // drop truncated planes
-                if sig == 0 {
-                    continue;
-                }
-                let row_idx = ((h.exponent() << 1) | 1) as usize;
-                let row = &table[row_idx * self.p..(row_idx + 1) * self.p];
-                while sig != 0 {
-                    let j = sig.trailing_zeros();
-                    for (a, &r) in acc.iter_mut().zip(row) {
-                        *a += r << j;
+                for s in 0..batch {
+                    let h = x[s * q + col];
+                    debug_assert_eq!(h.sign(), 0, "float LUT path expects ReLU-nonneg input");
+                    let mut sig = (h.significand11() >> lo) << lo; // drop truncated planes
+                    if sig == 0 {
+                        continue;
                     }
-                    ctr.shift_adds += self.p as u64;
-                    sig &= sig - 1;
+                    let row_idx = ((h.exponent() << 1) | 1) as usize;
+                    let row = &table[row_idx * p..(row_idx + 1) * p];
+                    let acc = &mut out[s * p..(s + 1) * p];
+                    while sig != 0 {
+                        let j = sig.trailing_zeros();
+                        for (a, r) in acc.iter_mut().zip(row) {
+                            *a += r.widen() << j;
+                        }
+                        shift_adds += p as u64;
+                        sig &= sig - 1;
+                    }
                 }
                 continue;
             }
-            // drop the lowest (SIG_BITS - planes) planes if truncating
-            for j in (SIG_BITS - planes)..SIG_BITS {
-                let mut idx = 0usize;
-                // rows whose mantissa bits are ALL zero are identically
-                // zero (the exponent only scales a set bit), so track
-                // the bit mask and skip the gather+add entirely — in
-                // hardware this is the row-enable line; the lookup is
-                // still charged.
-                let mut bits = 0u32;
-                for (e, &col) in chunk.iter().enumerate() {
-                    let h = x[col];
-                    debug_assert_eq!(h.sign(), 0, "float LUT path expects ReLU-nonneg input");
-                    let bit = h.sig_bitplane(j);
-                    bits |= bit;
-                    let field = (bit | (h.exponent() << 1)) as usize;
-                    idx |= field << (e as u32 * per_elem_bits);
+            for s in 0..batch {
+                let srow = &x[s * q..(s + 1) * q];
+                let acc = &mut out[s * p..(s + 1) * p];
+                // drop the lowest (SIG_BITS - planes) planes if truncating
+                for j in lo..SIG_BITS {
+                    let mut idx = 0usize;
+                    // rows whose mantissa bits are ALL zero are identically
+                    // zero (the exponent only scales a set bit), so track
+                    // the bit mask and skip the gather+add entirely — in
+                    // hardware this is the row-enable line; the lookup is
+                    // still charged (per batch, in eval_batch_f16).
+                    let mut bits = 0u32;
+                    for (e, &col) in chunk.iter().enumerate() {
+                        let h = srow[col];
+                        debug_assert_eq!(h.sign(), 0, "float LUT path expects ReLU-nonneg input");
+                        let bit = h.sig_bitplane(j);
+                        bits |= bit;
+                        let field = (bit | (h.exponent() << 1)) as usize;
+                        idx |= field << (e as u32 * per_elem_bits);
+                    }
+                    if bits == 0 {
+                        continue;
+                    }
+                    let row = &table[idx * p..(idx + 1) * p];
+                    for (a, r) in acc.iter_mut().zip(row) {
+                        *a += r.widen() << j;
+                    }
+                    shift_adds += p as u64;
                 }
-                ctr.lut_evals += 1;
-                if bits == 0 {
-                    continue;
-                }
-                let row = &table[idx * self.p..(idx + 1) * self.p];
-                for (a, &r) in acc.iter_mut().zip(row) {
-                    *a += r << j;
-                }
-                ctr.shift_adds += self.p as u64;
             }
         }
-        acc
+        shift_adds
     }
 
     /// Convenience: quantize f32 inputs through binary16 then evaluate.
@@ -181,10 +229,7 @@ impl DenseFloatLut {
     /// With `halve_sign`, exploits the always-zero sign bit (not modeled
     /// in the index here; accounting hook for the paper's halving).
     pub fn size_bits(&self, r_o: u32) -> u64 {
-        self.tables
-            .iter()
-            .map(|t| t.len() as u64 * r_o as u64)
-            .sum()
+        self.arena.total_entries() as u64 * r_o as u64
     }
 }
 
@@ -286,6 +331,33 @@ mod tests {
             assert!((fu - fv).abs() < 1e-4 * fu.abs().max(1.0));
         }
         assert_eq!(c2.lut_evals * 2, c1.lut_evals);
+    }
+
+    #[test]
+    fn eval_batch_bit_exact_with_per_sample() {
+        let (p, q) = (4, 9);
+        let (w, b, _) = random_case(p, q, 71);
+        let mut rng = Rng::new(72);
+        for m in [1, 2, 3] {
+            let lut = DenseFloatLut::build(
+                &w, &b, p, q, Partition::contiguous(q, m), FloatLutConfig::default(),
+            )
+            .unwrap();
+            let batch = 4;
+            let x: Vec<F16> = (0..batch * q)
+                .map(|_| F16::from_f32(rng.f32() * 6.0))
+                .collect();
+            let mut out = vec![0i64; batch * p];
+            let mut cb = Counters::default();
+            lut.eval_batch_f16(&x, batch, &mut out, &mut cb);
+            let mut cs = Counters::default();
+            for s in 0..batch {
+                let single = lut.eval_f16(&x[s * q..(s + 1) * q], &mut cs);
+                assert_eq!(&out[s * p..(s + 1) * p], single.as_slice(), "m={m} s={s}");
+            }
+            assert_eq!(cb, cs, "m={m}: counter totals diverge");
+            cb.assert_multiplier_less();
+        }
     }
 
     #[test]

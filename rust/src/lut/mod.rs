@@ -18,7 +18,10 @@
 //! * [`conv`]       — convolutional LUTs with one shared table shifted
 //!                    across space (§Convolutional layers, Fig. 2).
 //! * [`cost`]       — the paper's size/op formulas, used by the planner.
+//! * [`arena`]      — contiguous i32/i64 table arenas backing every bank
+//!                    (the batched, table-stationary hot path).
 
+pub mod arena;
 pub mod dense;
 pub mod bitplane;
 pub mod floatplane;
@@ -143,6 +146,41 @@ impl Partition {
             return Err(LutError::BadPartition(format!("index {missing} uncovered")));
         }
         Ok(())
+    }
+}
+
+/// Shared epilogue of the conv banks' batched evaluation: crop the
+/// centre `h x w` of each sample's padded accumulator image (padding
+/// `r`, channel count `cout`) into `out`, adding the bias once per
+/// output element.
+pub(crate) fn crop_add_bias(
+    pad: &[i64],
+    out: &mut [i64],
+    batch: usize,
+    h: usize,
+    w: usize,
+    r: usize,
+    cout: usize,
+    bias_acc: &[i64],
+) {
+    let pw = w + 2 * r;
+    let pimg = (h + 2 * r) * pw * cout;
+    let oimg = h * w * cout;
+    debug_assert_eq!(pad.len(), batch * pimg);
+    debug_assert_eq!(out.len(), batch * oimg);
+    debug_assert_eq!(bias_acc.len(), cout);
+    for s in 0..batch {
+        let spad = &pad[s * pimg..(s + 1) * pimg];
+        let sout = &mut out[s * oimg..(s + 1) * oimg];
+        for y in 0..h {
+            for x in 0..w {
+                let src = ((y + r) * pw + (x + r)) * cout;
+                let dst = (y * w + x) * cout;
+                for o in 0..cout {
+                    sout[dst + o] = spad[src + o] + bias_acc[o];
+                }
+            }
+        }
     }
 }
 

@@ -133,6 +133,138 @@ fn prop_engine_eval_counts_match_cost_model() {
 }
 
 #[test]
+fn prop_eval_batch_bit_exact_with_per_sample() {
+    // the batched, arena-backed path must agree BIT-EXACTLY with the
+    // per-sample path across random partitions, bit-widths and batch
+    // sizes — and stay multiplier-less
+    forall("eval-batch-vs-single", 80, |rng| {
+        let p = 1 + rng.below(8);
+        let q = 2 + rng.below(24);
+        let m = 1 + rng.below(8.min(q));
+        let bits = 1 + rng.below(9) as u32; // crosses the packed-path gate
+        let batch = 1 + rng.below(8);
+        let fmt = FixedFormat::new(bits);
+        let (w, b, _) = rand_affine(rng, p, q);
+        let codes: Vec<u32> = (0..batch * q)
+            .map(|_| rng.below(fmt.levels() as usize) as u32)
+            .collect();
+
+        let plane =
+            DenseBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, m), fmt)
+                .unwrap();
+        let mut out = vec![0i64; batch * p];
+        let mut cb = Counters::default();
+        plane.eval_batch(&codes, batch, &mut out, &mut cb);
+        cb.assert_multiplier_less();
+        assert_eq!(cb.mults, 0, "zero-multiplies invariant on the batched path");
+        let mut cs = Counters::default();
+        for s in 0..batch {
+            let single = plane.eval_codes(&codes[s * q..(s + 1) * q], &mut cs);
+            assert_eq!(
+                &out[s * p..(s + 1) * p],
+                single.as_slice(),
+                "bitplane p={p} q={q} m={m} bits={bits} batch={batch} sample={s}"
+            );
+        }
+        assert_eq!(cb, cs, "bitplane counter totals p={p} q={q} m={m} bits={bits}");
+
+        // whole-code bank (small m·bits only: table is 2^(m·bits) rows)
+        if m as u32 * bits < 12 {
+            let whole =
+                DenseWholeLut::build(&w, &b, p, q, Partition::contiguous(q, m), fmt)
+                    .unwrap();
+            let mut wout = vec![0i64; batch * p];
+            let mut wb = Counters::default();
+            whole.eval_batch(&codes, batch, &mut wout, &mut wb);
+            wb.assert_multiplier_less();
+            let mut ws = Counters::default();
+            for s in 0..batch {
+                let single = whole.eval_codes(&codes[s * q..(s + 1) * q], &mut ws);
+                assert_eq!(
+                    &wout[s * p..(s + 1) * p],
+                    single.as_slice(),
+                    "whole p={p} q={q} m={m} bits={bits} sample={s}"
+                );
+            }
+            assert_eq!(wb, ws);
+        }
+    });
+}
+
+#[test]
+fn prop_float_eval_batch_bit_exact_with_per_sample() {
+    use tablenet::lut::floatplane::{DenseFloatLut, FloatLutConfig};
+    forall("float-batch-vs-single", 40, |rng| {
+        let p = 1 + rng.below(6);
+        let q = 2 + rng.below(10);
+        let m = 1 + rng.below(3.min(q));
+        let batch = 1 + rng.below(6);
+        let (w, b, _) = rand_affine(rng, p, q);
+        let lut = DenseFloatLut::build(
+            &w, &b, p, q, Partition::contiguous(q, m), FloatLutConfig::default(),
+        )
+        .unwrap();
+        let x: Vec<F16> = (0..batch * q)
+            .map(|_| F16::from_f32(rng.f32() * 8.0))
+            .collect();
+        let mut out = vec![0i64; batch * p];
+        let mut cb = Counters::default();
+        lut.eval_batch_f16(&x, batch, &mut out, &mut cb);
+        cb.assert_multiplier_less();
+        let mut cs = Counters::default();
+        for s in 0..batch {
+            let single = lut.eval_f16(&x[s * q..(s + 1) * q], &mut cs);
+            assert_eq!(
+                &out[s * p..(s + 1) * p],
+                single.as_slice(),
+                "float p={p} q={q} m={m} batch={batch} sample={s}"
+            );
+        }
+        assert_eq!(cb, cs);
+    });
+}
+
+#[test]
+fn prop_engine_infer_batch_matches_per_sample() {
+    // whole-pipeline parity: classes, logits and counter TOTALS of
+    // infer_batch equal the per-sample infer results, and the batched
+    // path records zero multiplies
+    use tablenet::engine::scratch::Scratch;
+    use tablenet::engine::LutModel;
+    use tablenet::nn::Model;
+    use tablenet::tensor::Tensor;
+    forall("engine-batch-vs-single", 8, |rng| {
+        let q = 32 + rng.below(64);
+        let p = 4 + rng.below(8);
+        let model = Model::linear(
+            Tensor::randn(&[p, q], 0.1, rng),
+            Tensor::randn(&[p], 0.05, rng),
+        );
+        let m = 1 + rng.below(8);
+        let bits = 1 + rng.below(4) as u32;
+        let plan = EnginePlan {
+            affine: vec![AffineMode::BitplaneFixed { bits, m, range_exp: 0 }],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        let lut = LutModel::compile(&model, &plan).unwrap();
+        let batch = 1 + rng.below(6);
+        let images: Vec<f32> = (0..batch * q).map(|_| rng.f32()).collect();
+        let mut scratch = Scratch::new();
+        let got = lut.infer_batch(&images, batch, &mut scratch);
+        assert_eq!(got.counters.mults, 0);
+        let mut total = Counters::default();
+        for s in 0..batch {
+            let single = lut.infer(&images[s * q..(s + 1) * q]);
+            assert_eq!(got.classes[s], single.class);
+            assert_eq!(got.logits_row(s), single.logits.as_slice());
+            total += single.counters;
+        }
+        assert_eq!(got.counters, total);
+    });
+}
+
+#[test]
 fn prop_f16_roundtrip_monotone_and_exact() {
     forall("f16-codec", 200, |rng| {
         // exactness on decode->encode

@@ -1,0 +1,251 @@
+//! Offline, dependency-free shim implementing the subset of the
+//! `anyhow` API this workspace uses: [`Error`], [`Result`], the
+//! [`Context`] extension trait and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Semantics match upstream anyhow for that subset:
+//!
+//! * `?` converts any `E: std::error::Error + Send + Sync + 'static`
+//!   into [`Error`] (the source chain is preserved as context frames);
+//! * `{:#}` formats the whole context chain `outer: inner: ...`;
+//! * `{:?}` formats the anyhow-style `outer\n\nCaused by:\n    inner`.
+//!
+//! The shim exists because the build must work with no network access;
+//! it can be deleted in favour of the real crate wherever a registry is
+//! available (the API is a strict subset, nothing else changes).
+
+use std::fmt;
+
+/// Context-carrying error: a message plus an optional cause chain.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), cause: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    fn wrap(self, ctx: String) -> Error {
+        Error { msg: ctx, cause: Some(Box::new(self)) }
+    }
+
+    /// The outermost message.
+    pub fn to_string_outer(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The innermost error in the chain.
+    pub fn root_cause(&self) -> &Error {
+        let mut cur = self;
+        while let Some(c) = &cur.cause {
+            cur = c;
+        }
+        cur
+    }
+}
+
+/// Iterator over the context chain of an [`Error`].
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.cause.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, colon-separated (anyhow's format)
+            let mut first = true;
+            for e in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{}", e.msg)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for e in self.chain().skip(1) {
+                write!(f, "\n    {}", e.msg)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`,
+// exactly like the real anyhow::Error — that is what makes the blanket
+// `From` below coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // flatten the std source chain into context frames
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            err = Some(Error { msg, cause: err.map(Box::new) });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).wrap(ctx.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.wrap(ctx.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Assert a condition, early-returning an error when it fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert_eq!(format!("{e}"), "missing file");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading weights").unwrap_err();
+        assert_eq!(format!("{e}"), "loading weights");
+        assert_eq!(format!("{e:#}"), "loading weights: missing file");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn with_context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+        assert_eq!(e.root_cause().to_string_outer(), "inner 7");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative: -1");
+        assert_eq!(format!("{}", f(200).unwrap_err()), "too big");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("absent").unwrap_err();
+        assert_eq!(format!("{e}"), "absent");
+    }
+}
