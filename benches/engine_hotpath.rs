@@ -20,7 +20,7 @@ use tablenet::engine::counters::Counters;
 use tablenet::engine::f16enc::acc_vec_to_f16;
 use tablenet::engine::plan::EnginePlan;
 use tablenet::engine::scratch::Scratch;
-use tablenet::engine::LutModel;
+use tablenet::engine::Compiler;
 use tablenet::harness::bench::{Bench, BenchResult};
 use tablenet::lut::bitplane::DenseBitplaneLut;
 use tablenet::lut::dense::DenseWholeLut;
@@ -233,16 +233,16 @@ fn main() {
     });
 
     let mut out = vec![0i64; nsamp * p];
+    let mut batch_ctrs = vec![Counters::default(); nsamp];
     for &bsz in &[1usize, 8, 32, 128] {
         let name = format!("bitplane eval_batch batch={bsz}");
         track(&name, bsz, &mut case_samples);
         bench.run(&name, || {
-            let mut c = Counters::default();
             plane14.eval_batch(
                 &codes_all[..bsz * q],
                 bsz,
                 &mut out[..bsz * p],
-                &mut c,
+                &mut batch_ctrs[..bsz],
             );
             out[0]
         });
@@ -250,16 +250,14 @@ fn main() {
 
     track("whole-code eval_batch batch=32", 32, &mut case_samples);
     bench.run("whole-code eval_batch batch=32", || {
-        let mut c = Counters::default();
-        whole2.eval_batch(&codes_all[..32 * q], 32, &mut out[..32 * p], &mut c);
+        whole2.eval_batch(&codes_all[..32 * q], 32, &mut out[..32 * p], &mut batch_ctrs[..32]);
         out[0]
     });
 
     let halves: Vec<F16> = xs.iter().map(|&v| F16::from_f32(v.max(0.0))).collect();
     track("float16-plane eval_batch batch=32", 32, &mut case_samples);
     bench.run("float16-plane eval_batch batch=32", || {
-        let mut c = Counters::default();
-        fl.eval_batch_f16(&halves[..32 * q], 32, &mut out[..32 * p], &mut c);
+        fl.eval_batch_f16(&halves[..32 * q], 32, &mut out[..32 * p], &mut batch_ctrs[..32]);
         out[0]
     });
 
@@ -273,7 +271,7 @@ fn main() {
 
     Bench::header("end-to-end: engine infer + coordinator round-trip");
     let (model, ds) = common::linear_model(Kind::Digits);
-    let engine = LutModel::compile(&model, &EnginePlan::linear_default()).unwrap();
+    let engine = Compiler::new(&model).plan(&EnginePlan::linear_default()).build().unwrap();
     let img = ds.test.image(0).to_vec();
     track("linear engine infer (end-to-end)", 1, &mut case_samples);
     bench.run("linear engine infer (end-to-end)", || {
@@ -291,7 +289,7 @@ fn main() {
     });
 
     let coord = Coordinator::start(
-        Arc::new(LutModel::compile(&model, &EnginePlan::linear_default()).unwrap()),
+        Arc::new(Compiler::new(&model).plan(&EnginePlan::linear_default()).build().unwrap()),
         &ServeConfig { max_batch: 1, max_wait_us: 1, workers: 1, queue_cap: 64 },
     );
     let client = coord.client();
@@ -306,7 +304,7 @@ fn main() {
     // 4 concurrent clients) — measured manually, not via Bench
     let n_requests = 2000usize;
     let coord = Coordinator::start(
-        Arc::new(LutModel::compile(&model, &EnginePlan::linear_default()).unwrap()),
+        Arc::new(Compiler::new(&model).plan(&EnginePlan::linear_default()).build().unwrap()),
         &ServeConfig { max_batch: 32, max_wait_us: 200, workers: 1, queue_cap: 1024 },
     );
     let test = Arc::new(ds.test);

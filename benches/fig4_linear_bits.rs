@@ -9,7 +9,7 @@ mod common;
 
 use tablenet::data::synth::Kind;
 use tablenet::engine::plan::{AffineMode, EnginePlan};
-use tablenet::engine::LutModel;
+use tablenet::engine::Compiler;
 use tablenet::harness::{self, bench::Bench};
 
 fn main() {
@@ -34,7 +34,7 @@ fn main() {
             fallback: AffineMode::Float { planes: 11, m: 1 },
             r_o: 16,
         };
-        let lut = LutModel::compile(&model, &plan).unwrap();
+        let lut = Compiler::new(&model).plan(&plan).build().unwrap();
         b.run(&format!("lut_linear_infer bits={bits} m=14"), || {
             lut.infer(&img).class
         });

@@ -11,7 +11,7 @@ mod common;
 
 use tablenet::data::synth::Kind;
 use tablenet::engine::plan::EnginePlan;
-use tablenet::engine::LutModel;
+use tablenet::engine::Compiler;
 use tablenet::harness::{self, bench::Bench};
 use tablenet::planner;
 use tablenet::util::{fmt_bits, fmt_ops};
@@ -67,7 +67,7 @@ fn main() {
         let img = ds.test.image(0).to_vec();
         Bench::header("Fig 7 companion: MLP engine inference");
         let mut b = Bench::default();
-        let lut = LutModel::compile(&model, &EnginePlan::mlp_default()).unwrap();
+        let lut = Compiler::new(&model).plan(&EnginePlan::mlp_default()).build().unwrap();
         b.run("mlp_lut_infer (2320 LUTs, f16 planes)", || lut.infer(&img).class);
     }
 }

@@ -13,7 +13,7 @@ mod common;
 
 use tablenet::data::synth::Kind;
 use tablenet::engine::plan::EnginePlan;
-use tablenet::engine::LutModel;
+use tablenet::engine::Compiler;
 use tablenet::harness::{self, bench::Bench};
 use tablenet::planner;
 use tablenet::util::fmt_bits;
@@ -49,7 +49,7 @@ fn main() {
     if let Some(model) = common::cnn_model() {
         let ds = common::dataset(Kind::Digits);
         let test = ds.test.head(8);
-        let lut = LutModel::compile(&model, &EnginePlan::cnn_default()).unwrap();
+        let lut = Compiler::new(&model).plan(&EnginePlan::cnn_default()).build().unwrap();
         let (acc, ctr) = lut.accuracy(&test.images, 784, &test.labels);
         ctr.assert_multiplier_less();
         println!(

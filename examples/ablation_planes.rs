@@ -14,7 +14,7 @@ use tablenet::config::cli::Args;
 use tablenet::data::synth::Kind;
 use tablenet::data::load_or_generate;
 use tablenet::engine::plan::{AffineMode, EnginePlan};
-use tablenet::engine::LutModel;
+use tablenet::engine::Compiler;
 use tablenet::nn::{weights, Arch};
 use tablenet::util::fmt_ops;
 
@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
             fallback: AffineMode::Float { planes, m: 1 },
             r_o: 16,
         };
-        let lut = LutModel::compile(&model, &plan).expect("materialisable");
+        let lut = Compiler::new(&model).plan(&plan).build().expect("materialisable");
         let t0 = std::time::Instant::now();
         let (acc, ctr) = lut.accuracy(&test.images, 784, &test.labels);
         let ms = t0.elapsed().as_secs_f64() * 1000.0 / n as f64;

@@ -11,7 +11,7 @@ use tablenet::config::cli::Args;
 use tablenet::data::synth::Kind;
 use tablenet::data::load_or_generate;
 use tablenet::engine::plan::EnginePlan;
-use tablenet::engine::LutModel;
+use tablenet::engine::Compiler;
 use tablenet::nn::{weights, Arch};
 use tablenet::planner::{arch_geometry, evaluate_plan};
 use tablenet::tensor::Tensor;
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("compiling LUT banks (builds tables for all 4 layers)...");
     let t0 = std::time::Instant::now();
-    let lut = LutModel::compile(&model, &plan).expect("cnn default materialises");
+    let lut = Compiler::new(&model).plan(&plan).build().expect("cnn default materialises");
     println!("compiled in {:.1}s, {} resident", t0.elapsed().as_secs_f64(), fmt_bits(lut.size_bits()));
 
     // reference accuracy on the same subset

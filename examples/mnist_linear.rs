@@ -10,7 +10,7 @@ use tablenet::config::cli::Args;
 use tablenet::data::synth::Kind;
 use tablenet::data::load_or_generate;
 use tablenet::engine::plan::EnginePlan;
-use tablenet::engine::LutModel;
+use tablenet::engine::Compiler;
 use tablenet::nn::{weights, Arch};
 use tablenet::tensor::Tensor;
 use tablenet::train::{train_dense, TrainConfig};
@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
         ("56 LUTs (m=14)", EnginePlan::linear_default()),
         ("784 LUTs (m=1, memory parity)", EnginePlan::linear_parity()),
     ] {
-        let lut = LutModel::compile(&model, &plan).expect("materialisable");
+        let lut = Compiler::new(&model).plan(&plan).build().expect("materialisable");
         let (acc, ctr) = lut.accuracy(&ds.test.images, 784, &ds.test.labels);
         ctr.assert_multiplier_less();
         println!(

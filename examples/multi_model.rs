@@ -14,7 +14,7 @@ use tablenet::coordinator::Backend;
 use tablenet::data::synth::Kind;
 use tablenet::data::load_or_generate;
 use tablenet::engine::plan::EnginePlan;
-use tablenet::engine::LutModel;
+use tablenet::engine::Compiler;
 use tablenet::nn::{weights, Arch};
 
 fn main() -> anyhow::Result<()> {
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
 
     let mk = |path: &str| -> anyhow::Result<Arc<dyn Backend>> {
         let model = weights::load_model(Arch::Linear, Path::new(path))?;
-        Ok(Arc::new(LutModel::compile(&model, &EnginePlan::linear_default()).unwrap()))
+        Ok(Arc::new(Compiler::new(&model).plan(&EnginePlan::linear_default()).build().unwrap()))
     };
     let router = Router::start(
         vec![

@@ -18,7 +18,7 @@ use tablenet::coordinator::Coordinator;
 use tablenet::data::synth::Kind;
 use tablenet::data::load_or_generate;
 use tablenet::engine::plan::EnginePlan;
-use tablenet::engine::LutModel;
+use tablenet::engine::Compiler;
 use tablenet::nn::{weights, Arch};
 use tablenet::train::{train_dense, TrainConfig};
 use tablenet::util::fmt_bits;
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     let plan = EnginePlan::default_for(arch);
-    let engine = LutModel::compile(&model, &plan).expect("default plan materialises");
+    let engine = Compiler::new(&model).plan(&plan).build().expect("default plan materialises");
     println!(
         "engine: {} of LUTs, plan {:?}",
         fmt_bits(engine.size_bits()),

@@ -40,6 +40,7 @@ impl ServeConfig {
     }
 
     pub fn from_json(j: &Json) -> Result<ServeConfig> {
+        reject_unknown_keys(j, "serve config", &["max_batch", "max_wait_us", "workers", "queue_cap"])?;
         let d = ServeConfig::default();
         Ok(ServeConfig {
             max_batch: get_usize(j, "max_batch", d.max_batch)?,
@@ -104,6 +105,7 @@ impl RunConfig {
     }
 
     pub fn from_json(j: &Json) -> Result<RunConfig> {
+        reject_unknown_keys(j, "run config", &["arch", "weights", "data_dir", "plan", "serve"])?;
         let arch_s = j
             .get("arch")
             .and_then(Json::as_str)
@@ -182,26 +184,54 @@ fn mode_from_json(j: &Json) -> Result<AffineMode> {
         .get("mode")
         .and_then(Json::as_str)
         .ok_or_else(|| anyhow!("affine mode missing 'mode'"))?;
+    // range-check the numeric fields here so a bad plan file fails
+    // with a config error instead of panicking inside the bank
+    // constructors (`FixedFormat::new` asserts 1..=16)
+    let bits_checked = |j: &Json| -> Result<u32> {
+        let bits = get_u64(j, "bits", 8)? as u32;
+        if !(1..=16).contains(&bits) {
+            bail!("'bits' must be in 1..=16, got {bits}");
+        }
+        Ok(bits)
+    };
+    let m_checked = |j: &Json| -> Result<usize> {
+        let m = get_usize(j, "m", 1)?;
+        if m == 0 {
+            bail!("'m' must be >= 1");
+        }
+        Ok(m)
+    };
     Ok(match mode {
-        "whole_fixed" => AffineMode::WholeFixed {
-            bits: get_u64(j, "bits", 8)? as u32,
-            m: get_usize(j, "m", 1)?,
-            range_exp: get_i64(j, "range_exp", 0)? as i32,
-        },
-        "bitplane_fixed" => AffineMode::BitplaneFixed {
-            bits: get_u64(j, "bits", 8)? as u32,
-            m: get_usize(j, "m", 1)?,
-            range_exp: get_i64(j, "range_exp", 0)? as i32,
-        },
-        "float" => AffineMode::Float {
-            planes: get_u64(j, "planes", 11)? as u32,
-            m: get_usize(j, "m", 1)?,
-        },
+        "whole_fixed" => {
+            reject_unknown_keys(j, "whole_fixed mode", &["mode", "bits", "m", "range_exp"])?;
+            AffineMode::WholeFixed {
+                bits: bits_checked(j)?,
+                m: m_checked(j)?,
+                range_exp: get_i64(j, "range_exp", 0)? as i32,
+            }
+        }
+        "bitplane_fixed" => {
+            reject_unknown_keys(j, "bitplane_fixed mode", &["mode", "bits", "m", "range_exp"])?;
+            AffineMode::BitplaneFixed {
+                bits: bits_checked(j)?,
+                m: m_checked(j)?,
+                range_exp: get_i64(j, "range_exp", 0)? as i32,
+            }
+        }
+        "float" => {
+            reject_unknown_keys(j, "float mode", &["mode", "planes", "m"])?;
+            let planes = get_u64(j, "planes", 11)? as u32;
+            if !(1..=11).contains(&planes) {
+                bail!("'planes' must be in 1..=11, got {planes}");
+            }
+            AffineMode::Float { planes, m: m_checked(j)? }
+        }
         other => bail!("unknown affine mode '{other}'"),
     })
 }
 
 pub fn plan_from_json(j: &Json) -> Result<EnginePlan> {
+    reject_unknown_keys(j, "engine plan", &["affine", "fallback", "r_o"])?;
     let affine = j
         .get("affine")
         .and_then(Json::as_arr)
@@ -214,6 +244,23 @@ pub fn plan_from_json(j: &Json) -> Result<EnginePlan> {
         None => AffineMode::Float { planes: 11, m: 1 },
     };
     Ok(EnginePlan { affine, fallback, r_o: get_u64(j, "r_o", 16)? as u32 })
+}
+
+/// Strict decoding: a typo'd key is a config error, never a silent
+/// fallback to the default (so `max_batc` fails loudly instead of
+/// serving with `max_batch = 32`).
+fn reject_unknown_keys(j: &Json, ctx: &str, allowed: &[&str]) -> Result<()> {
+    if let Json::Obj(m) = j {
+        for k in m.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!(
+                    "unknown key '{k}' in {ctx} (allowed: {})",
+                    allowed.join(", ")
+                );
+            }
+        }
+    }
+    Ok(())
 }
 
 fn get_usize(j: &Json, k: &str, d: usize) -> Result<usize> {
@@ -307,5 +354,46 @@ mod tests {
         assert!(RunConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"arch":"mlp","serve":{"max_batch":-2}}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_not_ignored() {
+        // typo'd serve key
+        let j = Json::parse(r#"{"max_batc": 4}"#).unwrap();
+        let e = ServeConfig::from_json(&j).unwrap_err();
+        assert!(format!("{e}").contains("max_batc"), "{e}");
+        // typo'd run-config key
+        let j = Json::parse(r#"{"arch":"mlp","wieghts":"w.bin"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        // typo'd plan key
+        let j = Json::parse(r#"{"affine": [], "ro": 16}"#).unwrap();
+        assert!(plan_from_json(&j).is_err());
+        // typo'd mode key
+        let j = Json::parse(r#"{"affine": [{"mode":"float","planez":3}], "r_o": 16}"#)
+            .unwrap();
+        let e = plan_from_json(&j).unwrap_err();
+        assert!(format!("{e}").contains("planez"), "{e}");
+        // well-formed configs still decode
+        let j = Json::parse(r#"{"max_batch": 4}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().max_batch, 4);
+    }
+
+    #[test]
+    fn out_of_range_mode_fields_are_rejected() {
+        for bad in [
+            r#"{"affine": [{"mode":"float","planes":0}], "r_o": 16}"#,
+            r#"{"affine": [{"mode":"float","planes":12}], "r_o": 16}"#,
+            r#"{"affine": [{"mode":"bitplane_fixed","bits":0}], "r_o": 16}"#,
+            r#"{"affine": [{"mode":"whole_fixed","bits":17}], "r_o": 16}"#,
+            r#"{"affine": [{"mode":"float","planes":11,"m":0}], "r_o": 16}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(plan_from_json(&j).is_err(), "accepted: {bad}");
+        }
+        let ok = Json::parse(
+            r#"{"affine": [{"mode":"float","planes":11,"m":1}], "r_o": 16}"#,
+        )
+        .unwrap();
+        assert!(plan_from_json(&ok).is_ok());
     }
 }

@@ -115,10 +115,11 @@ impl Backend for LutModel {
             .map(|s| InferOutput {
                 class: out.classes[s],
                 logits: out.logits[s * nclass..(s + 1) * nclass].to_vec(),
-                // ops are accounted once per batch (totals are exact;
-                // per-request attribution assigns the batch to its
-                // first sample)
-                counters: if s == 0 { out.counters } else { Counters::default() },
+                // exact per-request attribution: the engine's stage
+                // pipeline lands every op on the counter row of the
+                // sample that incurred it (tenant billing stays exact
+                // under dynamic batching)
+                counters: out.per_sample[s],
             })
             .collect()
     }
@@ -443,6 +444,7 @@ mod tests {
     #[test]
     fn lut_backend_batched_matches_per_sample() {
         use crate::engine::plan::{AffineMode, EnginePlan};
+        use crate::engine::Compiler;
         use crate::nn::Model;
         use crate::tensor::Tensor;
         use crate::util::Rng;
@@ -456,7 +458,7 @@ mod tests {
             fallback: AffineMode::Float { planes: 11, m: 1 },
             r_o: 16,
         };
-        let lut = LutModel::compile(&model, &plan).unwrap();
+        let lut = Compiler::new(&model).plan(&plan).build().unwrap();
         let images: Vec<Vec<f32>> =
             (0..6).map(|_| (0..784).map(|_| rng.f32()).collect()).collect();
         // UFCS: the trait entry point the coordinator workers use
@@ -467,13 +469,14 @@ mod tests {
             let single = lut.infer(&images[s]);
             assert_eq!(out.class, single.class, "class diverges at {s}");
             assert_eq!(out.logits, single.logits, "logits diverge at {s}");
+            // per-request counters are EXACT, not batch-to-first-sample
+            assert_eq!(out.counters, single.counters, "counters diverge at {s}");
             total += single.counters;
         }
         let mut agg = Counters::default();
         for o in &outs {
             agg += o.counters;
         }
-        // batch ops attributed to the first sample; totals are exact
         assert_eq!(agg, total);
         agg.assert_multiplier_less();
     }

@@ -1,0 +1,206 @@
+//! First-class activation buffer for the open stage pipeline.
+//!
+//! [`ActBuf`] owns the batched activation flowing between stages: one
+//! representation tag plus one reusable buffer per representation
+//! (f32 staging, fixed-point codes, binary16 codes, integer
+//! accumulators). A [`crate::engine::stages::Stage`] reads the buffer
+//! matching the current [`Repr`], writes its output into the buffer of
+//! its output representation, and retags. Buffers are `clear()` +
+//! `extend()`d so, after one warm-up batch, the whole pipeline runs
+//! without heap allocations (see `rust/tests/alloc_discipline.rs`).
+//!
+//! The buffers are public on purpose: stage implementations live in
+//! separate modules and need disjoint `&`/`&mut` borrows of individual
+//! buffers (e.g. gather from `codes` while accumulating into `acc`).
+//! The `repr`/`batch` tags stay private so retagging goes through
+//! [`ActBuf::set_repr`] / [`ActBuf::load_f32`].
+
+use crate::quant::f16::F16;
+use crate::quant::FixedFormat;
+
+/// Representation of the activation currently held by an [`ActBuf`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Repr {
+    /// Raw f32 rows in `f32s` (model input before the first
+    /// quantizing stage).
+    #[default]
+    F32,
+    /// Fixed-point codes of the given bit width in `codes`.
+    Codes(u32),
+    /// Binary16 codes in `half`.
+    Half,
+    /// Integer accumulators in `acc` with the given fractional scale.
+    Acc(u32),
+}
+
+/// Batched activation: a representation tag plus the reusable buffers
+/// the representations live in. Row-major `batch x elems` everywhere.
+#[derive(Debug, Default)]
+pub struct ActBuf {
+    batch: usize,
+    repr: Repr,
+    /// f32 staging rows (valid while `repr` is [`Repr::F32`]).
+    pub f32s: Vec<f32>,
+    /// Quantized fixed-point codes (valid under [`Repr::Codes`]).
+    pub codes: Vec<u32>,
+    /// Binary16 codes (valid under [`Repr::Half`]).
+    pub half: Vec<F16>,
+    /// Integer accumulators (valid under [`Repr::Acc`]).
+    pub acc: Vec<i64>,
+}
+
+impl ActBuf {
+    pub fn new() -> ActBuf {
+        ActBuf::default()
+    }
+
+    /// Stage a batch of raw f32 rows as the pipeline input.
+    ///
+    /// This copies the rows (one memcpy per batch, reusing capacity).
+    /// Deliberate trade-off: it keeps `ActBuf` (and the whole `Stage`
+    /// trait) free of borrowed lifetimes, which is what lets stages be
+    /// boxed, serialized and added without touching the engine. The
+    /// copy is a few µs next to streaming megabytes of tables; a
+    /// borrowed-staging variant is a ROADMAP follow-up if profiles
+    /// ever show it.
+    pub fn load_f32(&mut self, images: &[f32], batch: usize) {
+        assert!(batch > 0, "batch must be >= 1");
+        assert_eq!(images.len() % batch, 0, "rows not divisible into batch");
+        self.f32s.clear();
+        self.f32s.extend_from_slice(images);
+        self.batch = batch;
+        self.repr = Repr::F32;
+    }
+
+    /// Samples in the buffer.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// The current representation tag.
+    pub fn repr(&self) -> Repr {
+        self.repr
+    }
+
+    /// Retag after a stage wrote its output buffer.
+    pub fn set_repr(&mut self, repr: Repr) {
+        self.repr = repr;
+    }
+
+    /// Fractional scale of the accumulators; panics unless `repr` is
+    /// [`Repr::Acc`].
+    pub fn acc_frac(&self) -> u32 {
+        match self.repr {
+            Repr::Acc(frac) => frac,
+            other => panic!("expected accumulators, activation is {other:?}"),
+        }
+    }
+
+    /// Make `codes` hold `fmt`-quantized activations: quantizes f32
+    /// input in place, accepts matching codes, rejects anything else.
+    /// The width check is a hard assert (once per batch, not per
+    /// element): a mismatched upstream `ToFixed` — possible only via a
+    /// hand-crafted artifact — must fail with a clear message, not
+    /// with out-of-range table indexing.
+    pub fn ensure_codes(&mut self, fmt: FixedFormat) {
+        match self.repr {
+            Repr::F32 => {
+                self.codes.clear();
+                self.codes.extend(self.f32s.iter().map(|&v| fmt.quantize(v)));
+                self.repr = Repr::Codes(fmt.bits);
+            }
+            Repr::Codes(bits) => assert_eq!(
+                bits, fmt.bits,
+                "upstream stage produced {bits}-bit codes, bank expects {}",
+                fmt.bits
+            ),
+            other => panic!(
+                "stage expects f32 or {}-bit codes, activation is {other:?}",
+                fmt.bits
+            ),
+        }
+    }
+
+    /// Make `half` hold nonnegative binary16 activations: encodes f32
+    /// input (clamped at 0, the float banks' ReLU-nonneg contract),
+    /// accepts binary16, rejects anything else. Acc-to-half conversion
+    /// is the `ToHalf` stage's job, not an implicit coercion.
+    pub fn ensure_half_nonneg(&mut self) {
+        match self.repr {
+            Repr::F32 => {
+                self.half.clear();
+                self.half
+                    .extend(self.f32s.iter().map(|&v| F16::from_f32(v.max(0.0))));
+                self.repr = Repr::Half;
+            }
+            Repr::Half => {}
+            other => panic!("stage expects f32 or binary16, activation is {other:?}"),
+        }
+    }
+
+    /// Sum of buffer capacities in bytes (diagnostics).
+    pub fn resident_bytes(&self) -> usize {
+        self.f32s.capacity() * 4
+            + self.codes.capacity() * 4
+            + self.half.capacity() * 2
+            + self.acc.capacity() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_sets_tag_and_batch() {
+        let mut a = ActBuf::new();
+        a.load_f32(&[0.1, 0.2, 0.3, 0.4], 2);
+        assert_eq!(a.batch(), 2);
+        assert_eq!(a.repr(), Repr::F32);
+        assert_eq!(a.f32s.len(), 4);
+    }
+
+    #[test]
+    fn ensure_codes_quantizes_once() {
+        let mut a = ActBuf::new();
+        a.load_f32(&[0.0, 0.5, 0.99], 1);
+        let fmt = FixedFormat::new(2);
+        a.ensure_codes(fmt);
+        assert_eq!(a.repr(), Repr::Codes(2));
+        assert_eq!(a.codes, vec![0, 2, 3]);
+        // idempotent on matching codes
+        a.ensure_codes(fmt);
+        assert_eq!(a.codes, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn ensure_half_clamps_negatives() {
+        let mut a = ActBuf::new();
+        a.load_f32(&[-1.0, 2.0], 1);
+        a.ensure_half_nonneg();
+        assert_eq!(a.repr(), Repr::Half);
+        assert_eq!(a.half[0].to_f32(), 0.0);
+        assert_eq!(a.half[1].to_f32(), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected accumulators")]
+    fn acc_frac_rejects_wrong_repr() {
+        let a = ActBuf::new();
+        let _ = a.acc_frac();
+    }
+
+    #[test]
+    fn buffers_keep_capacity_across_reloads() {
+        let mut a = ActBuf::new();
+        a.load_f32(&vec![0.5; 64], 8);
+        a.ensure_codes(FixedFormat::new(3));
+        let (cf, cc) = (a.f32s.capacity(), a.codes.capacity());
+        for _ in 0..5 {
+            a.load_f32(&vec![0.25; 64], 8);
+            a.ensure_codes(FixedFormat::new(3));
+        }
+        assert_eq!(a.f32s.capacity(), cf);
+        assert_eq!(a.codes.capacity(), cc);
+    }
+}

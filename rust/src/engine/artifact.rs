@@ -1,0 +1,216 @@
+//! The `.ltm` compiled-model artifact: a versioned binary container
+//! holding everything a deployment serves — the engine plan plus every
+//! stage's tables and metadata. `serve`/`eval` can start from an
+//! artifact without weights or recompilation, and the round-trip is
+//! bit-exact (same classes, same logits, same zero-multiply counters;
+//! asserted by `rust/tests/artifact_roundtrip.rs`).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic   b"LTM1"
+//! u32     container version (1)
+//! u32     plan JSON length | plan JSON (the EnginePlan, via config)
+//! u32     stage count
+//! stage*  u16 kind tag | u64 payload length | payload bytes
+//! u64     FNV-1a 64 checksum of every preceding byte
+//! ```
+//!
+//! Stage payloads are owned by the stage modules (`Stage::write_payload`
+//! / `read_stage`), so new stage kinds serialize without touching this
+//! container. The trailing checksum rejects truncation and bit rot
+//! before any payload is parsed.
+
+use crate::engine::stages::{read_stage, Stage, StageKind};
+use crate::engine::LutModel;
+use crate::lut::wire::{self, Reader};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"LTM1";
+pub const VERSION: u32 = 1;
+
+/// Largest artifact the loader will accept (matches the engine's
+/// table materialisation cap with headroom for metadata).
+const MAX_ARTIFACT_BYTES: u64 = 8 << 30;
+
+/// FNV-1a 64 (vendored crate set has no hash crates; collision
+/// resistance is not a goal — this is an integrity check, not MAC).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize a compiled model to the `.ltm` byte format.
+pub fn to_bytes(model: &LutModel) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    wire::put_u32(&mut out, VERSION);
+    let plan_json = crate::config::plan_to_json(model.plan()).to_string();
+    wire::put_u32(&mut out, plan_json.len() as u32);
+    out.extend_from_slice(plan_json.as_bytes());
+    wire::put_u32(&mut out, model.stages().len() as u32);
+    let mut payload = Vec::new();
+    for stage in model.stages() {
+        payload.clear();
+        stage.write_payload(&mut payload);
+        wire::put_u16(&mut out, stage.kind().tag());
+        wire::put_u64(&mut out, payload.len() as u64);
+        out.extend_from_slice(&payload);
+    }
+    let sum = fnv1a(&out);
+    wire::put_u64(&mut out, sum);
+    out
+}
+
+/// Parse a `.ltm` byte buffer back into a compiled model.
+pub fn from_bytes(bytes: &[u8]) -> Result<LutModel> {
+    if bytes.len() < MAGIC.len() + 4 + 4 + 4 + 8 {
+        bail!("artifact too short ({} bytes) to be a .ltm file", bytes.len());
+    }
+    let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+    let computed = fnv1a(body);
+    if stored != computed {
+        bail!("artifact checksum mismatch (stored {stored:#018x}, computed {computed:#018x}) — file is corrupted or truncated");
+    }
+    let mut r = Reader::new(body);
+    let magic = r.take(4).map_err(wire_err)?;
+    if magic != MAGIC {
+        bail!("bad artifact magic {magic:?}, expected {MAGIC:?}");
+    }
+    let version = r.u32().map_err(wire_err)?;
+    if version != VERSION {
+        bail!("unsupported .ltm version {version} (this build reads {VERSION})");
+    }
+    let plan_len = r
+        .len_capped_u32(1 << 20, "plan JSON")
+        .map_err(wire_err)?;
+    let plan_bytes = r.take(plan_len).map_err(wire_err)?;
+    let plan_text =
+        std::str::from_utf8(plan_bytes).context("artifact plan JSON is not utf-8")?;
+    let plan_json = crate::config::json::Json::parse(plan_text)
+        .map_err(|e| anyhow!("artifact plan JSON: {e}"))?;
+    let plan = crate::config::plan_from_json(&plan_json)?;
+    let n_stages = r.u32().map_err(wire_err)? as usize;
+    if n_stages > 4096 {
+        bail!("artifact claims {n_stages} stages — refusing");
+    }
+    let mut stages: Vec<Box<dyn Stage>> = Vec::with_capacity(n_stages);
+    for i in 0..n_stages {
+        let tag = r.u16().map_err(wire_err)?;
+        let kind = StageKind::from_tag(tag)
+            .ok_or_else(|| anyhow!("stage {i}: unknown kind tag {tag}"))?;
+        let len = r.u64().map_err(wire_err)? as usize;
+        let payload = r
+            .take(len)
+            .map_err(wire_err)
+            .with_context(|| format!("stage {i} ({}) payload", kind.name()))?;
+        let mut pr = Reader::new(payload);
+        let stage = read_stage(kind, &mut pr)
+            .map_err(wire_err)
+            .with_context(|| format!("decoding stage {i} ({})", kind.name()))?;
+        if !pr.is_empty() {
+            bail!(
+                "stage {i} ({}) payload has {} trailing bytes",
+                kind.name(),
+                pr.remaining()
+            );
+        }
+        stages.push(stage);
+    }
+    if !r.is_empty() {
+        bail!("artifact has {} trailing bytes after the stage table", r.remaining());
+    }
+    // pipeline-level sanity: each payload validated its own shape above,
+    // but a crafted (checksum-recomputed) artifact could still describe
+    // an unservable pipeline. Reject the cheap-to-check global
+    // invariants here; per-stage input contracts (representation tags,
+    // code widths) are additionally hard-asserted by the stages on
+    // first use, so an inconsistent pipeline fails loudly, never with
+    // out-of-bounds indexing.
+    if stages.is_empty() {
+        bail!("artifact describes an empty pipeline");
+    }
+    // mirror the runtime contract (inference argmaxes integer
+    // accumulators): walking back over the Acc-preserving stages
+    // (ReLU, max-pool), the pipeline must reach an affine bank. This
+    // accepts exactly the pipelines `infer` can finish.
+    let tail_bank = stages
+        .iter()
+        .rev()
+        .map(|s| s.kind())
+        .find(|k| !matches!(k, StageKind::ReluInt | StageKind::MaxPool2Int));
+    let ends_in_acc = matches!(
+        tail_bank,
+        Some(
+            StageKind::DenseWhole
+                | StageKind::DenseBitplane
+                | StageKind::DenseFloat
+                | StageKind::ConvFixed
+                | StageKind::ConvFloat
+        )
+    );
+    if !ends_in_acc {
+        bail!(
+            "artifact pipeline ends with {} — inference must end on integer accumulators",
+            stages.last().unwrap().kind().name()
+        );
+    }
+    Ok(LutModel::from_parts(stages, plan))
+}
+
+fn wire_err(e: wire::WireError) -> anyhow::Error {
+    anyhow!("{e}")
+}
+
+/// Write a compiled model to `path`.
+pub fn save(model: &LutModel, path: &Path) -> Result<()> {
+    let bytes = to_bytes(model);
+    std::fs::write(path, bytes)
+        .with_context(|| format!("writing artifact {}", path.display()))
+}
+
+/// Load a compiled model from `path`.
+pub fn load(path: &Path) -> Result<LutModel> {
+    let meta = std::fs::metadata(path)
+        .with_context(|| format!("reading artifact {}", path.display()))?;
+    if meta.len() > MAX_ARTIFACT_BYTES {
+        bail!(
+            "artifact {} is {} bytes — larger than the {} byte cap",
+            path.display(),
+            meta.len(),
+            MAX_ARTIFACT_BYTES
+        );
+    }
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading artifact {}", path.display()))?;
+    from_bytes(&bytes).with_context(|| format!("parsing artifact {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_vectors() {
+        // reference vectors for FNV-1a 64
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn garbage_is_rejected() {
+        assert!(from_bytes(b"not an artifact").is_err());
+        assert!(from_bytes(b"").is_err());
+        let mut fake = Vec::new();
+        fake.extend_from_slice(b"LTM1");
+        fake.extend_from_slice(&[0u8; 32]);
+        assert!(from_bytes(&fake).is_err(), "checksumless bytes must fail");
+    }
+}

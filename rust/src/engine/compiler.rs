@@ -1,0 +1,265 @@
+//! The compiler: lowers a reference [`Model`] plus an [`EnginePlan`]
+//! into the stage pipeline of a [`LutModel`]. This is the **one** way
+//! to construct a `LutModel` from weights; the other constructor is
+//! [`LutModel::load`](crate::engine::LutModel::load), which revives a
+//! previously compiled `.ltm` artifact without touching weights.
+//!
+//! ```no_run
+//! # use tablenet::engine::{Compiler, plan::EnginePlan};
+//! # fn demo(model: &tablenet::nn::Model) -> Result<(), tablenet::lut::LutError> {
+//! let lut = Compiler::new(model)
+//!     .plan(&EnginePlan::default_for(model.arch))
+//!     .build()?;
+//! # Ok(()) }
+//! ```
+
+use crate::engine::plan::{AffineMode, EnginePlan};
+use crate::engine::stages::{
+    ConvFixedStage, ConvFloatStage, DenseBitplaneStage, DenseFloatStage, DenseWholeStage,
+    MaxPool2IntStage, ReluIntStage, SigmoidLutStage, Stage, ToFixedStage, ToHalfStage,
+};
+use crate::engine::LutModel;
+use crate::lut::bitplane::DenseBitplaneLut;
+use crate::lut::conv::ConvLut;
+use crate::lut::convfloat::ConvFloatLut;
+use crate::lut::dense::DenseWholeLut;
+use crate::lut::floatplane::{DenseFloatLut, FloatLutConfig};
+use crate::lut::{LutError, Partition};
+use crate::nn::{Layer, Model};
+use crate::quant::FixedFormat;
+
+/// Builder for compiling a model into a [`LutModel`].
+pub struct Compiler<'m> {
+    model: &'m Model,
+    plan: Option<EnginePlan>,
+}
+
+impl<'m> Compiler<'m> {
+    /// Start compiling `model`. Without an explicit [`Compiler::plan`],
+    /// the architecture's default plan is used.
+    pub fn new(model: &'m Model) -> Compiler<'m> {
+        Compiler { model, plan: None }
+    }
+
+    /// Use `plan` for the affine layers.
+    pub fn plan(mut self, plan: &EnginePlan) -> Compiler<'m> {
+        self.plan = Some(plan.clone());
+        self
+    }
+
+    /// Build the stage pipeline. Fails if a requested table exceeds the
+    /// materialisation cap (those configs are planner-only).
+    pub fn build(self) -> Result<LutModel, LutError> {
+        let plan = self
+            .plan
+            .unwrap_or_else(|| EnginePlan::default_for(self.model.arch));
+        let model = self.model;
+        let mut stages: Vec<Box<dyn Stage>> = Vec::new();
+        let mut affine_idx = 0usize;
+        // spatial dims tracked through conv stages
+        let mut dims: Option<(usize, usize, usize)> = match model.input_shape.as_slice() {
+            [h, w, c] => Some((*h, *w, *c)),
+            _ => None,
+        };
+
+        for layer in &model.layers {
+            match layer {
+                Layer::QuantFixed { .. } | Layer::QuantF16 => {
+                    // the engine performs its own quantization at stage
+                    // boundaries; fake-quant markers are training-time
+                }
+                Layer::Relu => stages.push(Box::new(ReluIntStage)),
+                Layer::Sigmoid => {
+                    // one table read per element; the stage performs its
+                    // own SIGNED acc->f16 encode (pre-activations can be
+                    // negative; sigmoid output is nonneg, so downstream
+                    // float banks keep their sign-free assumption)
+                    let lut = crate::lut::scalar::ScalarLut::sigmoid();
+                    stages.push(Box::new(SigmoidLutStage::new(lut)));
+                }
+                Layer::MaxPool2 => {
+                    let (h, w, c) = dims.expect("maxpool needs spatial dims");
+                    stages.push(Box::new(MaxPool2IntStage { h, w, c }));
+                    dims = Some((h / 2, w / 2, c));
+                }
+                Layer::Flatten => {
+                    dims = None; // flat from here on
+                }
+                Layer::Dense { w, b } => {
+                    let mode = plan.affine.get(affine_idx).unwrap_or(&plan.fallback);
+                    affine_idx += 1;
+                    let p = w.shape()[0];
+                    let q = w.shape()[1];
+                    // weight scaling for fixed inner layers
+                    let (wdata, boundary): (Vec<f32>, Option<Box<dyn Stage>>) = match mode
+                    {
+                        AffineMode::WholeFixed { bits, m: _, range_exp }
+                        | AffineMode::BitplaneFixed { bits, m: _, range_exp } => {
+                            if affine_idx == 1 {
+                                (w.data().to_vec(), None)
+                            } else {
+                                let s = (*range_exp as f32).exp2();
+                                (
+                                    w.data().iter().map(|&x| x * s).collect(),
+                                    Some(Box::new(ToFixedStage {
+                                        bits: *bits,
+                                        range_exp: *range_exp,
+                                    })),
+                                )
+                            }
+                        }
+                        AffineMode::Float { .. } => {
+                            if affine_idx == 1 {
+                                (w.data().to_vec(), None)
+                            } else {
+                                (w.data().to_vec(), Some(Box::new(ToHalfStage)))
+                            }
+                        }
+                    };
+                    if let Some(bstage) = boundary {
+                        stages.push(bstage);
+                    }
+                    let bank: Box<dyn Stage> = match mode {
+                        AffineMode::WholeFixed { bits, m, .. } => {
+                            let lut = DenseWholeLut::build(
+                                &wdata,
+                                b.data(),
+                                p,
+                                q,
+                                Partition::contiguous(q, *m),
+                                FixedFormat::new(*bits),
+                            )?;
+                            Box::new(DenseWholeStage::new(lut))
+                        }
+                        AffineMode::BitplaneFixed { bits, m, .. } => {
+                            let lut = DenseBitplaneLut::build(
+                                &wdata,
+                                b.data(),
+                                p,
+                                q,
+                                Partition::contiguous(q, *m),
+                                FixedFormat::new(*bits),
+                            )?;
+                            Box::new(DenseBitplaneStage::new(lut))
+                        }
+                        AffineMode::Float { planes, m } => {
+                            let lut = DenseFloatLut::build(
+                                &wdata,
+                                b.data(),
+                                p,
+                                q,
+                                Partition::contiguous(q, *m),
+                                FloatLutConfig { planes: *planes },
+                            )?;
+                            Box::new(DenseFloatStage::new(lut))
+                        }
+                    };
+                    stages.push(bank);
+                }
+                Layer::Conv2d { filter, b } => {
+                    let mode = plan.affine.get(affine_idx).unwrap_or(&plan.fallback);
+                    affine_idx += 1;
+                    let (h, w2, cin) = dims.expect("conv needs spatial dims");
+                    let fs = filter.shape()[0];
+                    let r = fs / 2;
+                    let cout = filter.shape()[3];
+                    match mode {
+                        AffineMode::BitplaneFixed { bits, m, range_exp }
+                        | AffineMode::WholeFixed { bits, m, range_exp } => {
+                            let fdata: Vec<f32> = if affine_idx == 1 {
+                                filter.data().to_vec()
+                            } else {
+                                stages.push(Box::new(ToFixedStage {
+                                    bits: *bits,
+                                    range_exp: *range_exp,
+                                }));
+                                let s = (*range_exp as f32).exp2();
+                                filter.data().iter().map(|&x| x * s).collect()
+                            };
+                            let lut = ConvLut::build(
+                                &fdata,
+                                b.data(),
+                                h,
+                                w2,
+                                cin,
+                                cout,
+                                r,
+                                *m,
+                                FixedFormat::new(*bits),
+                            )?;
+                            stages.push(Box::new(ConvFixedStage::new(lut)));
+                        }
+                        AffineMode::Float { planes, .. } => {
+                            if affine_idx > 1 {
+                                stages.push(Box::new(ToHalfStage));
+                            }
+                            let lut = ConvFloatLut::build(
+                                filter.data(),
+                                b.data(),
+                                h,
+                                w2,
+                                cin,
+                                cout,
+                                r,
+                                *planes,
+                            )?;
+                            stages.push(Box::new(ConvFloatStage::new(lut)));
+                        }
+                    }
+                    dims = Some((h, w2, cout));
+                }
+            }
+        }
+        Ok(LutModel::from_parts(stages, plan))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::stages::StageKind;
+    use crate::nn::Arch;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    #[test]
+    fn default_plan_is_used_when_none_given() {
+        let mut rng = Rng::new(3);
+        let model = Model::linear(
+            Tensor::randn(&[10, 784], 0.05, &mut rng),
+            Tensor::randn(&[10], 0.02, &mut rng),
+        );
+        assert_eq!(model.arch, Arch::Linear);
+        let lut = Compiler::new(&model).build().unwrap();
+        assert_eq!(lut.plan(), &EnginePlan::linear_default());
+        assert_eq!(lut.num_stages(), 1);
+        assert_eq!(lut.stages()[0].kind(), StageKind::DenseBitplane);
+    }
+
+    #[test]
+    fn mlp_pipeline_emits_boundary_stages() {
+        let mut rng = Rng::new(4);
+        let model = Model::mlp(vec![
+            (Tensor::randn(&[32, 784], 0.05, &mut rng), Tensor::zeros(&[32])),
+            (Tensor::randn(&[16, 32], 0.2, &mut rng), Tensor::zeros(&[16])),
+            (Tensor::randn(&[10, 16], 0.3, &mut rng), Tensor::zeros(&[10])),
+        ]);
+        let lut = Compiler::new(&model)
+            .plan(&EnginePlan::mlp_default())
+            .build()
+            .unwrap();
+        let kinds: Vec<StageKind> = lut.stages().iter().map(|s| s.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                StageKind::DenseFloat,
+                StageKind::ReluInt,
+                StageKind::ToHalf,
+                StageKind::DenseFloat,
+                StageKind::ReluInt,
+                StageKind::ToHalf,
+                StageKind::DenseFloat,
+            ]
+        );
+    }
+}

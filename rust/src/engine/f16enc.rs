@@ -113,28 +113,46 @@ pub fn acc_vec_to_f16_signed(acc: &[i64], frac_scale: u32, ctr: &mut Counters) -
     acc.iter().map(|&a| acc_to_f16_signed(a, frac_scale, ctr)).collect()
 }
 
-/// Allocation-free vector encode into a reusable buffer (the batched
-/// engine's layer-boundary path): `out` is cleared and refilled, so it
-/// never reallocates once its capacity has reached the batch size.
-pub fn acc_slice_to_f16_into(
+/// Allocation-free batched encode into a reusable buffer (the stage
+/// pipeline's layer-boundary path): `acc` is row-major
+/// `batch x elems`, `out` is cleared and refilled (so it never
+/// reallocates once its capacity has reached the batch size), and the
+/// encode's compare ops land on each sample's own counter row.
+pub fn acc_rows_to_f16_into(
     acc: &[i64],
+    batch: usize,
     frac_scale: u32,
     out: &mut Vec<F16>,
-    ctr: &mut Counters,
+    ctrs: &mut [Counters],
 ) {
+    assert_eq!(ctrs.len(), batch);
+    assert_eq!(acc.len() % batch.max(1), 0);
+    let n = acc.len() / batch.max(1);
     out.clear();
-    out.extend(acc.iter().map(|&a| acc_to_f16(a, frac_scale, ctr)));
+    for (s, ctr) in ctrs.iter_mut().enumerate() {
+        out.extend(acc[s * n..(s + 1) * n].iter().map(|&a| acc_to_f16(a, frac_scale, ctr)));
+    }
 }
 
-/// Allocation-free signed vector encode into a reusable buffer.
-pub fn acc_slice_to_f16_signed_into(
+/// Allocation-free batched signed encode (see [`acc_rows_to_f16_into`]).
+pub fn acc_rows_to_f16_signed_into(
     acc: &[i64],
+    batch: usize,
     frac_scale: u32,
     out: &mut Vec<F16>,
-    ctr: &mut Counters,
+    ctrs: &mut [Counters],
 ) {
+    assert_eq!(ctrs.len(), batch);
+    assert_eq!(acc.len() % batch.max(1), 0);
+    let n = acc.len() / batch.max(1);
     out.clear();
-    out.extend(acc.iter().map(|&a| acc_to_f16_signed(a, frac_scale, ctr)));
+    for (s, ctr) in ctrs.iter_mut().enumerate() {
+        out.extend(
+            acc[s * n..(s + 1) * n]
+                .iter()
+                .map(|&a| acc_to_f16_signed(a, frac_scale, ctr)),
+        );
+    }
 }
 
 #[cfg(test)]
@@ -208,6 +226,25 @@ mod tests {
         // value 2^-24 (smallest f16 subnormal) at frac 32: acc = 2^8
         let f = acc_to_f16(1 << 8, 32, &mut ctr);
         assert_eq!(f.0, 0x0001);
+    }
+
+    #[test]
+    fn rows_encode_attributes_counters_per_sample() {
+        // two samples with different op mixes: positive accs cost more
+        // compares than negatives, and each lands on its own row
+        let acc = vec![-5i64, -7, 1 << 16, 1 << 18];
+        let mut out = Vec::new();
+        let mut ctrs = vec![Counters::default(); 2];
+        acc_rows_to_f16_into(&acc, 2, 16, &mut out, &mut ctrs);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[2].to_f32(), 1.0);
+        let mut c0 = Counters::default();
+        let mut c1 = Counters::default();
+        let _ = acc_vec_to_f16(&acc[..2], 16, &mut c0);
+        let _ = acc_vec_to_f16(&acc[2..], 16, &mut c1);
+        assert_eq!(ctrs[0], c0);
+        assert_eq!(ctrs[1], c1);
+        assert!(c1.compares > c0.compares);
     }
 
     #[test]

@@ -1,62 +1,46 @@
-//! The multiplier-less inference engine: compiles a reference
-//! [`Model`](crate::nn::Model) plus an [`EnginePlan`] into a pipeline of
-//! LUT banks and integer stages, then executes inferences using only
-//! table reads, shifts, adds and compares. [`counters::Counters::mults`]
-//! stays zero across every stage — asserted in debug builds and by the
-//! test suite.
+//! The multiplier-less inference engine: a [`Compiler`] lowers a
+//! reference [`Model`](crate::nn::Model) plus an [`EnginePlan`] into a
+//! pipeline of [`Stage`] trait objects (LUT banks and integer stages),
+//! and [`LutModel`] executes inferences using only table reads, shifts,
+//! adds and compares. [`counters::Counters::mults`] stays zero across
+//! every stage — asserted in debug builds and by the test suite.
+//!
+//! The stage pipeline is **open**: stage kinds live in
+//! [`stages`] as independent modules behind the [`Stage`] trait, so a
+//! new bank kind is an additive change (new module + compiler emission
+//! + artifact tag), not an engine edit. A compiled model serializes to
+//! a versioned `.ltm` artifact ([`LutModel::save`] /
+//! [`LutModel::load`]) that deploys without weights or recompilation.
+//!
+//! There is exactly one evaluation path: [`LutModel::infer`] is
+//! batch-of-one through the same batched stages, so per-sample and
+//! batched results are bit-exact by construction, and op counters are
+//! attributed exactly per sample (`BatchInference::per_sample`).
 
+pub mod act;
+pub mod artifact;
+pub mod compiler;
 pub mod counters;
 pub mod f16enc;
 pub mod plan;
 pub mod scratch;
+pub mod stages;
 
-use crate::lut::bitplane::DenseBitplaneLut;
-use crate::lut::conv::ConvLut;
-use crate::lut::convfloat::ConvFloatLut;
-use crate::lut::dense::DenseWholeLut;
-use crate::lut::floatplane::{DenseFloatLut, FloatLutConfig, FACC};
-use crate::lut::{LutError, Partition, ACC_FRAC};
-use crate::nn::{Layer, Model};
-use crate::quant::f16::F16;
-use crate::quant::FixedFormat;
+pub use act::{ActBuf, Repr};
+pub use compiler::Compiler;
+pub use stages::{Stage, StageKind};
+
 use counters::Counters;
-use plan::{AffineMode, EnginePlan};
-use scratch::{reset_len_i64, Scratch};
+use plan::EnginePlan;
+use scratch::Scratch;
+use std::path::Path;
 
-/// One executable stage of the compiled pipeline.
-enum Stage {
-    DenseWhole(DenseWholeLut),
-    DenseBitplane(DenseBitplaneLut),
-    DenseFloat(DenseFloatLut),
-    ConvFixed(ConvLut),
-    ConvFloat(ConvFloatLut),
-    /// ReLU on integer accumulators (compare + select).
-    ReluInt,
-    /// Sigmoid via the paper's 128 KiB f16->f16 scalar LUT (one memory
-    /// read per element, zero arithmetic).
-    SigmoidLut(crate::lut::scalar::ScalarLut),
-    /// 2x2 max pool on an integer accumulator image.
-    MaxPool2Int { h: usize, w: usize, c: usize },
-    /// Convert accumulators to binary16 codes (priority-encode + shift).
-    ToHalf,
-    /// Convert accumulators to fixed codes via right-shift + clamp.
-    ToFixed { bits: u32, range_exp: i32 },
-}
-
-/// Runtime activation value.
-enum Act {
-    F32(Vec<f32>),
-    Acc { v: Vec<i64>, frac: u32 },
-    Half(Vec<F16>),
-    Codes { v: Vec<u32>, bits: u32 },
-}
-
-/// A compiled multiplier-less model.
+/// A compiled multiplier-less model: an executable stage pipeline plus
+/// the plan it was compiled from. Construct with [`Compiler`] (from
+/// weights) or [`LutModel::load`] (from a `.ltm` artifact).
 pub struct LutModel {
-    stages: Vec<Stage>,
+    stages: Vec<Box<dyn Stage>>,
     plan: EnginePlan,
-    /// Total LUT bits at the plan's accounting width r_o.
-    size_bits: u64,
 }
 
 /// Result of one inference.
@@ -80,10 +64,14 @@ pub struct BatchInference {
     pub classes: Vec<usize>,
     /// Logits, row-major `batch x classes` (decoded for display only).
     pub logits: Vec<f32>,
-    /// Op mix aggregated over the whole batch (totals equal the sum of
-    /// the per-sample counters of [`LutModel::infer`] — asserted by the
-    /// property tests).
+    /// Op mix aggregated over the whole batch (equals the sum of
+    /// [`BatchInference::per_sample`]).
     pub counters: Counters,
+    /// Exact per-sample op attribution — every primitive lands on the
+    /// row of the sample that incurred it, so `per_sample[s]` equals
+    /// the counters of a standalone [`LutModel::infer`] on sample `s`
+    /// (asserted by the property tests).
+    pub per_sample: Vec<Counters>,
 }
 
 impl BatchInference {
@@ -94,190 +82,26 @@ impl BatchInference {
     }
 }
 
-/// Tag of the activation representation flowing between batched stages.
-/// The data itself lives in the [`Scratch`] buffers (`acc`, `half`,
-/// `codes`) or, for `F32`, in the caller's input slice.
-#[derive(Debug, Clone, Copy)]
-enum Repr {
-    F32,
-    Acc(u32),
-    Half,
-    Codes(u32),
-}
-
 impl LutModel {
-    /// Compile `model` under `plan`. Fails if a requested table exceeds
-    /// the materialisation cap (those configs are planner-only).
-    pub fn compile(model: &Model, plan: &EnginePlan) -> Result<LutModel, LutError> {
-        let mut stages = Vec::new();
-        let mut size_bits = 0u64;
-        let mut affine_idx = 0usize;
-        // spatial dims tracked through conv stages
-        let mut dims: Option<(usize, usize, usize)> = match model.input_shape.as_slice() {
-            [h, w, c] => Some((*h, *w, *c)),
-            _ => None,
-        };
-        // scale of values flowing *into* the next affine stage relative
-        // to the raw f32 model (used for fixed inner layers)
-        let mut pending_fixed: Option<(u32, i32)> = None;
+    /// Assemble from parts (used by [`Compiler::build`] and the
+    /// artifact loader).
+    pub(crate) fn from_parts(stages: Vec<Box<dyn Stage>>, plan: EnginePlan) -> LutModel {
+        LutModel { stages, plan }
+    }
 
-        for layer in &model.layers {
-            match layer {
-                Layer::QuantFixed { .. } | Layer::QuantF16 => {
-                    // the engine performs its own quantization at stage
-                    // boundaries; fake-quant markers are training-time
-                }
-                Layer::Relu => stages.push(Stage::ReluInt),
-                Layer::Sigmoid => {
-                    // one table read per element; the stage performs its
-                    // own SIGNED acc->f16 encode (pre-activations can be
-                    // negative; sigmoid output is nonneg, so downstream
-                    // float banks keep their sign-free assumption)
-                    let lut = crate::lut::scalar::ScalarLut::sigmoid();
-                    size_bits += lut.size_bits();
-                    stages.push(Stage::SigmoidLut(lut));
-                }
-                Layer::MaxPool2 => {
-                    let (h, w, c) = dims.expect("maxpool needs spatial dims");
-                    stages.push(Stage::MaxPool2Int { h, w, c });
-                    dims = Some((h / 2, w / 2, c));
-                }
-                Layer::Flatten => {
-                    dims = None; // flat from here on
-                }
-                Layer::Dense { w, b } => {
-                    let mode = plan.affine.get(affine_idx).unwrap_or(&plan.fallback);
-                    affine_idx += 1;
-                    let p = w.shape()[0];
-                    let q = w.shape()[1];
-                    // weight scaling for fixed inner layers
-                    let (wdata, conv_needed): (Vec<f32>, Option<Stage>) = match mode {
-                        AffineMode::WholeFixed { bits, m: _, range_exp }
-                        | AffineMode::BitplaneFixed { bits, m: _, range_exp } => {
-                            if affine_idx == 1 {
-                                (w.data().to_vec(), None)
-                            } else {
-                                let s = (*range_exp as f32).exp2();
-                                (
-                                    w.data().iter().map(|&x| x * s).collect(),
-                                    Some(Stage::ToFixed { bits: *bits, range_exp: *range_exp }),
-                                )
-                            }
-                        }
-                        AffineMode::Float { .. } => {
-                            if affine_idx == 1 {
-                                (w.data().to_vec(), None)
-                            } else {
-                                (w.data().to_vec(), Some(Stage::ToHalf))
-                            }
-                        }
-                    };
-                    if let Some(cstage) = conv_needed {
-                        stages.push(cstage);
-                    }
-                    let bank = match mode {
-                        AffineMode::WholeFixed { bits, m, .. } => {
-                            let lut = DenseWholeLut::build(
-                                &wdata,
-                                b.data(),
-                                p,
-                                q,
-                                Partition::contiguous(q, *m),
-                                FixedFormat::new(*bits),
-                            )?;
-                            size_bits += lut.size_bits(plan.r_o);
-                            Stage::DenseWhole(lut)
-                        }
-                        AffineMode::BitplaneFixed { bits, m, .. } => {
-                            let lut = DenseBitplaneLut::build(
-                                &wdata,
-                                b.data(),
-                                p,
-                                q,
-                                Partition::contiguous(q, *m),
-                                FixedFormat::new(*bits),
-                            )?;
-                            size_bits += lut.size_bits(plan.r_o);
-                            Stage::DenseBitplane(lut)
-                        }
-                        AffineMode::Float { planes, m } => {
-                            let lut = DenseFloatLut::build(
-                                &wdata,
-                                b.data(),
-                                p,
-                                q,
-                                Partition::contiguous(q, *m),
-                                FloatLutConfig { planes: *planes },
-                            )?;
-                            size_bits += lut.size_bits(plan.r_o);
-                            Stage::DenseFloat(lut)
-                        }
-                    };
-                    let _ = pending_fixed.take();
-                    stages.push(bank);
-                }
-                Layer::Conv2d { filter, b } => {
-                    let mode = plan.affine.get(affine_idx).unwrap_or(&plan.fallback);
-                    affine_idx += 1;
-                    let (h, w2, cin) = dims.expect("conv needs spatial dims");
-                    let fs = filter.shape()[0];
-                    let r = fs / 2;
-                    let cout = filter.shape()[3];
-                    match mode {
-                        AffineMode::BitplaneFixed { bits, m, range_exp }
-                        | AffineMode::WholeFixed { bits, m, range_exp } => {
-                            let fdata: Vec<f32> = if affine_idx == 1 {
-                                filter.data().to_vec()
-                            } else {
-                                stages.push(Stage::ToFixed {
-                                    bits: *bits,
-                                    range_exp: *range_exp,
-                                });
-                                let s = (*range_exp as f32).exp2();
-                                filter.data().iter().map(|&x| x * s).collect()
-                            };
-                            let lut = ConvLut::build(
-                                &fdata,
-                                b.data(),
-                                h,
-                                w2,
-                                cin,
-                                cout,
-                                r,
-                                *m,
-                                FixedFormat::new(*bits),
-                            )?;
-                            size_bits += lut.size_bits(plan.r_o);
-                            stages.push(Stage::ConvFixed(lut));
-                        }
-                        AffineMode::Float { planes, .. } => {
-                            if affine_idx > 1 {
-                                stages.push(Stage::ToHalf);
-                            }
-                            let lut = ConvFloatLut::build(
-                                filter.data(),
-                                b.data(),
-                                h,
-                                w2,
-                                cin,
-                                cout,
-                                r,
-                                *planes,
-                            )?;
-                            size_bits += lut.size_bits(plan.r_o);
-                            stages.push(Stage::ConvFloat(lut));
-                        }
-                    }
-                    dims = Some((h, w2, cout));
-                }
-            }
-        }
-        Ok(LutModel { stages, plan: plan.clone(), size_bits })
+    /// The stage pipeline, in execution order.
+    pub fn stages(&self) -> &[Box<dyn Stage>] {
+        &self.stages
+    }
+
+    /// Number of pipeline stages.
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
     }
 
     /// Total LUT storage in bits at the plan's accounting width.
     pub fn size_bits(&self) -> u64 {
-        self.size_bits
+        self.stages.iter().map(|s| s.size_bits(self.plan.r_o)).sum()
     }
 
     /// The plan this model was compiled from.
@@ -285,36 +109,36 @@ impl LutModel {
         &self.plan
     }
 
-    /// Run one inference on a raw f32 input (flattened, values in [0,1]).
+    /// Serialize the compiled pipeline to a `.ltm` artifact file.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        artifact::save(self, path)
+    }
+
+    /// Load a compiled pipeline from a `.ltm` artifact file — no
+    /// weights, no recompilation; bit-exact with the saved model.
+    pub fn load(path: &Path) -> anyhow::Result<LutModel> {
+        artifact::load(path)
+    }
+
+    /// Run one inference on a raw f32 input (flattened, values in
+    /// [0,1]). This is batch-of-one through the batched stage pipeline;
+    /// convenience only — hot paths should hold a [`Scratch`] and call
+    /// [`LutModel::infer_batch_into`].
     pub fn infer(&self, input: &[f32]) -> Inference {
-        let mut ctr = Counters::default();
-        let mut act = Act::F32(input.to_vec());
-        for stage in &self.stages {
-            act = self.run_stage(stage, act, &mut ctr);
+        let mut scratch = Scratch::new();
+        let mut out = BatchInference::default();
+        self.infer_batch_into(input, 1, &mut scratch, &mut out);
+        Inference {
+            logits: std::mem::take(&mut out.logits),
+            class: out.classes[0],
+            counters: out.counters,
         }
-        debug_assert_eq!(ctr.mults, 0);
-        let (logits, class) = match act {
-            Act::Acc { v, frac } => {
-                // argmax over integers; decode for display
-                let mut best = 0usize;
-                for i in 1..v.len() {
-                    ctr.compares += 1;
-                    if v[i] > v[best] {
-                        best = i;
-                    }
-                }
-                let scale = (-(frac as f64)).exp2();
-                (v.iter().map(|&a| (a as f64 * scale) as f32).collect(), best)
-            }
-            _ => panic!("model must end with an affine stage"),
-        };
-        Inference { logits, class, counters: ctr }
     }
 
     /// Run a batch of inferences over `images` (row-major
-    /// `batch x features`, values in [0,1]) reusing `scratch`. Convenience
-    /// wrapper over [`LutModel::infer_batch_into`] that allocates the
-    /// output struct.
+    /// `batch x features`, values in [0,1]) reusing `scratch`.
+    /// Convenience wrapper over [`LutModel::infer_batch_into`] that
+    /// allocates the output struct.
     pub fn infer_batch(
         &self,
         images: &[f32],
@@ -329,13 +153,9 @@ impl LutModel {
     /// Batched inference into a reusable output struct. This is the
     /// serving hot path: stages execute *batch-at-a-time* over the
     /// contiguous table arenas (chunk-outer, sample-inner inside each
-    /// bank), all intermediates live in `scratch`, and counters
-    /// accumulate per batch. After one warm-up call with the same batch
-    /// geometry, the whole path performs zero heap allocations.
-    ///
-    /// Results are bit-exact with per-sample [`LutModel::infer`]: same
-    /// classes, same logits, and counter totals equal to the sum of the
-    /// per-sample counters.
+    /// bank), all intermediates live in `scratch`, and counters land on
+    /// exact per-sample rows. After one warm-up call with the same
+    /// batch geometry, the whole path performs zero heap allocations.
     pub fn infer_batch_into(
         &self,
         images: &[f32],
@@ -345,25 +165,30 @@ impl LutModel {
     ) {
         assert!(batch > 0, "batch must be >= 1");
         assert_eq!(images.len() % batch, 0, "images not divisible into batch rows");
-        let mut ctr = Counters::default();
-        let mut repr = Repr::F32;
+        // split the activation and counter rows out of the scratch so
+        // stages can borrow the remaining buffers (pad, acc2) mutably
+        let mut act = std::mem::take(&mut scratch.act);
+        let mut ctrs = std::mem::take(&mut scratch.sample_counters);
+        ctrs.clear();
+        ctrs.resize(batch, Counters::default());
+        act.load_f32(images, batch);
         for stage in &self.stages {
-            repr = self.run_stage_batch(stage, repr, images, batch, scratch, &mut ctr);
+            stage.eval_batch(&mut act, scratch, &mut ctrs);
         }
-        let frac = match repr {
+        let frac = match act.repr() {
             Repr::Acc(frac) => frac,
-            _ => panic!("model must end with an affine stage"),
+            other => panic!("model must end with an affine stage, got {other:?}"),
         };
-        let nclass = scratch.acc.len() / batch;
+        let nclass = act.acc.len() / batch;
         out.classes.clear();
         out.logits.clear();
         let scale = (-(frac as f64)).exp2();
         for s in 0..batch {
-            let row = &scratch.acc[s * nclass..(s + 1) * nclass];
+            let row = &act.acc[s * nclass..(s + 1) * nclass];
             // argmax over integers; decode for display
             let mut best = 0usize;
             for i in 1..row.len() {
-                ctr.compares += 1;
+                ctrs[s].compares += 1;
                 if row[i] > row[best] {
                     best = i;
                 }
@@ -371,341 +196,57 @@ impl LutModel {
             out.classes.push(best);
             out.logits.extend(row.iter().map(|&a| (a as f64 * scale) as f32));
         }
-        debug_assert_eq!(ctr.mults, 0);
-        out.counters = ctr;
-    }
-
-    /// One batched stage. The activation tag moves between the scratch
-    /// buffers; `images` is only read while the tag is still `F32`
-    /// (i.e. before the first quantizing stage).
-    fn run_stage_batch(
-        &self,
-        stage: &Stage,
-        repr: Repr,
-        images: &[f32],
-        batch: usize,
-        scratch: &mut Scratch,
-        ctr: &mut Counters,
-    ) -> Repr {
-        let Scratch { codes, half, acc, acc2, pad, .. } = scratch;
-        match stage {
-            Stage::DenseWhole(lut) => {
-                match repr {
-                    Repr::F32 => {
-                        assert_eq!(images.len(), batch * lut.partition.q);
-                        codes.clear();
-                        codes.extend(images.iter().map(|&v| lut.fmt.quantize(v)));
-                    }
-                    Repr::Codes(bits) => debug_assert_eq!(bits, lut.fmt.bits),
-                    _ => panic!("whole-fixed dense expects f32 or codes"),
-                }
-                reset_len_i64(acc, batch * lut.p);
-                lut.eval_batch(codes, batch, acc, ctr);
-                Repr::Acc(ACC_FRAC)
-            }
-            Stage::DenseBitplane(lut) => {
-                match repr {
-                    Repr::F32 => {
-                        assert_eq!(images.len(), batch * lut.partition.q);
-                        codes.clear();
-                        codes.extend(images.iter().map(|&v| lut.fmt.quantize(v)));
-                    }
-                    Repr::Codes(bits) => debug_assert_eq!(bits, lut.fmt.bits),
-                    _ => panic!("bitplane dense expects f32 or codes"),
-                }
-                reset_len_i64(acc, batch * lut.p);
-                lut.eval_batch(codes, batch, acc, ctr);
-                Repr::Acc(ACC_FRAC)
-            }
-            Stage::DenseFloat(lut) => {
-                match repr {
-                    Repr::F32 => {
-                        assert_eq!(images.len(), batch * lut.partition.q);
-                        half.clear();
-                        half.extend(images.iter().map(|&v| F16::from_f32(v.max(0.0))));
-                    }
-                    Repr::Half => {}
-                    _ => panic!("float dense expects f32 or half"),
-                }
-                reset_len_i64(acc, batch * lut.p);
-                lut.eval_batch_f16(half, batch, acc, ctr);
-                Repr::Acc(FACC as u32)
-            }
-            Stage::ConvFixed(lut) => {
-                match repr {
-                    Repr::F32 => {
-                        assert_eq!(images.len(), batch * lut.h * lut.w * lut.cin);
-                        codes.clear();
-                        codes.extend(images.iter().map(|&v| lut.fmt.quantize(v)));
-                    }
-                    Repr::Codes(bits) => debug_assert_eq!(bits, lut.fmt.bits),
-                    _ => panic!("fixed conv expects f32 or codes"),
-                }
-                reset_len_i64(acc, batch * lut.h * lut.w * lut.cout);
-                lut.eval_batch(codes, batch, acc, pad, ctr);
-                Repr::Acc(ACC_FRAC)
-            }
-            Stage::ConvFloat(lut) => {
-                match repr {
-                    Repr::F32 => {
-                        assert_eq!(images.len(), batch * lut.h * lut.w * lut.cin);
-                        half.clear();
-                        half.extend(images.iter().map(|&v| F16::from_f32(v.max(0.0))));
-                    }
-                    Repr::Half => {}
-                    _ => panic!("float conv expects f32 or half"),
-                }
-                reset_len_i64(acc, batch * lut.h * lut.w * lut.cout);
-                lut.eval_batch_f16(half, batch, acc, pad, ctr);
-                Repr::Acc(FACC as u32)
-            }
-            Stage::SigmoidLut(lut) => {
-                match repr {
-                    Repr::Half => {}
-                    Repr::Acc(frac) => {
-                        f16enc::acc_slice_to_f16_signed_into(acc, frac, half, ctr);
-                    }
-                    Repr::F32 => {
-                        half.clear();
-                        half.extend(images.iter().map(|&v| F16::from_f32(v)));
-                    }
-                    Repr::Codes(_) => {
-                        panic!("sigmoid LUT expects accumulators or binary16")
-                    }
-                }
-                lut.eval_vec(half, ctr);
-                Repr::Half
-            }
-            Stage::ReluInt => match repr {
-                Repr::Acc(frac) => {
-                    for a in acc.iter_mut() {
-                        if *a < 0 {
-                            *a = 0;
-                        }
-                    }
-                    ctr.compares += acc.len() as u64;
-                    Repr::Acc(frac)
-                }
-                other => other, // ReLU on codes/half handled at encode
-            },
-            Stage::MaxPool2Int { h, w, c } => match repr {
-                Repr::Acc(frac) => {
-                    let (h, w, c) = (*h, *w, *c);
-                    let (oh, ow) = (h / 2, w / 2);
-                    assert_eq!(acc.len(), batch * h * w * c);
-                    reset_len_i64(acc2, batch * oh * ow * c);
-                    acc2.fill(i64::MIN);
-                    for s in 0..batch {
-                        let src = &acc[s * h * w * c..(s + 1) * h * w * c];
-                        let dst = &mut acc2[s * oh * ow * c..(s + 1) * oh * ow * c];
-                        for y in 0..h {
-                            for x in 0..w {
-                                for ci in 0..c {
-                                    let val = src[(y * w + x) * c + ci];
-                                    let o = &mut dst[((y / 2) * ow + x / 2) * c + ci];
-                                    if val > *o {
-                                        *o = val;
-                                    }
-                                }
-                            }
-                        }
-                    }
-                    ctr.compares += (batch * h * w * c) as u64;
-                    std::mem::swap(acc, acc2);
-                    Repr::Acc(frac)
-                }
-                _ => panic!("maxpool expects accumulators"),
-            },
-            Stage::ToHalf => match repr {
-                Repr::Acc(frac) => {
-                    f16enc::acc_slice_to_f16_into(acc, frac, half, ctr);
-                    Repr::Half
-                }
-                Repr::F32 => {
-                    half.clear();
-                    half.extend(images.iter().map(|&v| F16::from_f32(v.max(0.0))));
-                    Repr::Half
-                }
-                other => other,
-            },
-            Stage::ToFixed { bits, range_exp } => match repr {
-                Repr::Acc(frac) => {
-                    // code = clamp(acc >> (frac - bits + range_exp));
-                    // value represented = code * 2^(range_exp - bits)
-                    let shift = frac as i32 - *bits as i32 + range_exp;
-                    let maxc = (1u32 << bits) - 1;
-                    ctr.compares += 2 * acc.len() as u64;
-                    codes.clear();
-                    codes.extend(acc.iter().map(|&a| {
-                        if a <= 0 {
-                            return 0;
-                        }
-                        let c = if shift >= 0 {
-                            (a >> shift as u32) as u64
-                        } else {
-                            (a as u64) << (-shift) as u32
-                        };
-                        (c as u32).min(maxc)
-                    }));
-                    Repr::Codes(*bits)
-                }
-                _ => panic!("tofixed expects accumulators"),
-            },
+        let mut total = Counters::default();
+        for c in &ctrs {
+            total += *c;
         }
-    }
-
-    fn run_stage(&self, stage: &Stage, act: Act, ctr: &mut Counters) -> Act {
-        match stage {
-            Stage::DenseWhole(lut) => {
-                let v = match act {
-                    Act::F32(x) => lut.eval_f32(&x, ctr),
-                    Act::Codes { v, bits } => {
-                        debug_assert_eq!(bits, lut.fmt.bits);
-                        lut.eval_codes(&v, ctr)
-                    }
-                    _ => panic!("whole-fixed dense expects f32 or codes"),
-                };
-                Act::Acc { v, frac: ACC_FRAC }
-            }
-            Stage::DenseBitplane(lut) => {
-                let v = match act {
-                    Act::F32(x) => lut.eval_f32(&x, ctr),
-                    Act::Codes { v, bits } => {
-                        debug_assert_eq!(bits, lut.fmt.bits);
-                        lut.eval_codes(&v, ctr)
-                    }
-                    _ => panic!("bitplane dense expects f32 or codes"),
-                };
-                Act::Acc { v, frac: ACC_FRAC }
-            }
-            Stage::DenseFloat(lut) => {
-                let v = match act {
-                    Act::F32(x) => lut.eval_f32(&x, ctr),
-                    Act::Half(h) => lut.eval_f16(&h, ctr),
-                    _ => panic!("float dense expects f32 or half"),
-                };
-                Act::Acc { v, frac: FACC as u32 }
-            }
-            Stage::ConvFixed(lut) => {
-                let v = match act {
-                    Act::F32(x) => lut.eval_f32(&x, ctr),
-                    Act::Codes { v, bits } => {
-                        debug_assert_eq!(bits, lut.fmt.bits);
-                        lut.eval_codes(&v, ctr)
-                    }
-                    _ => panic!("fixed conv expects f32 or codes"),
-                };
-                Act::Acc { v, frac: ACC_FRAC }
-            }
-            Stage::ConvFloat(lut) => {
-                let v = match act {
-                    Act::F32(x) => {
-                        let h: Vec<F16> =
-                            x.iter().map(|&v| F16::from_f32(v.max(0.0))).collect();
-                        lut.eval_f16(&h, ctr)
-                    }
-                    Act::Half(h) => lut.eval_f16(&h, ctr),
-                    _ => panic!("float conv expects f32 or half"),
-                };
-                Act::Acc { v, frac: FACC as u32 }
-            }
-            Stage::SigmoidLut(lut) => {
-                let mut h = match act {
-                    Act::Half(h) => h,
-                    Act::Acc { v, frac } => {
-                        f16enc::acc_vec_to_f16_signed(&v, frac, ctr)
-                    }
-                    Act::F32(x) => x.iter().map(|&v| F16::from_f32(v)).collect(),
-                    _ => panic!("sigmoid LUT expects accumulators or binary16"),
-                };
-                lut.eval_vec(&mut h, ctr);
-                Act::Half(h)
-            }
-            Stage::ReluInt => match act {
-                Act::Acc { mut v, frac } => {
-                    for a in &mut v {
-                        ctr.compares += 1;
-                        if *a < 0 {
-                            *a = 0;
-                        }
-                    }
-                    Act::Acc { v, frac }
-                }
-                other => other, // ReLU on codes/half handled at encode
-            },
-            Stage::MaxPool2Int { h, w, c } => match act {
-                Act::Acc { v, frac } => {
-                    let (oh, ow) = (h / 2, w / 2);
-                    let mut out = vec![i64::MIN; oh * ow * c];
-                    for y in 0..*h {
-                        for x in 0..*w {
-                            for ci in 0..*c {
-                                let val = v[(y * w + x) * c + ci];
-                                let o = &mut out[((y / 2) * ow + x / 2) * c + ci];
-                                ctr.compares += 1;
-                                if val > *o {
-                                    *o = val;
-                                }
-                            }
-                        }
-                    }
-                    Act::Acc { v: out, frac }
-                }
-                _ => panic!("maxpool expects accumulators"),
-            },
-            Stage::ToHalf => match act {
-                Act::Acc { v, frac } => {
-                    Act::Half(f16enc::acc_vec_to_f16(&v, frac, ctr))
-                }
-                Act::F32(x) => Act::Half(
-                    x.iter().map(|&v| F16::from_f32(v.max(0.0))).collect(),
-                ),
-                other => other,
-            },
-            Stage::ToFixed { bits, range_exp } => match act {
-                Act::Acc { v, frac } => {
-                    // code = clamp(acc >> (frac - bits + range_exp));
-                    // value represented = code * 2^(range_exp - bits)
-                    let shift = frac as i32 - *bits as i32 + range_exp;
-                    let maxc = (1u32 << bits) - 1;
-                    let codes = v
-                        .iter()
-                        .map(|&a| {
-                            ctr.compares += 2;
-                            if a <= 0 {
-                                return 0;
-                            }
-                            let c = if shift >= 0 {
-                                (a >> shift as u32) as u64
-                            } else {
-                                (a as u64) << (-shift) as u32
-                            };
-                            (c as u32).min(maxc)
-                        })
-                        .collect();
-                    Act::Codes { v: codes, bits: *bits }
-                }
-                _ => panic!("tofixed expects accumulators"),
-            },
-        }
+        debug_assert_eq!(total.mults, 0);
+        out.counters = total;
+        out.per_sample.clear();
+        out.per_sample.extend_from_slice(&ctrs);
+        scratch.act = act;
+        scratch.sample_counters = ctrs;
     }
 
     /// Accuracy over a flat dataset (`images` row-major, one row per
-    /// sample). Also returns the op counters of the *first* inference
-    /// (they are identical per sample for a fixed plan/architecture,
-    /// modulo zero-row skips).
+    /// sample), executed on the batched path over an internal
+    /// [`Scratch`]. Also returns the op counters of the *first*
+    /// inference (exact — per-sample attribution), which are identical
+    /// per sample for a fixed plan/architecture modulo zero-row skips.
     pub fn accuracy(&self, images: &[f32], row: usize, labels: &[usize]) -> (f64, Counters) {
+        let mut scratch = Scratch::new();
+        self.accuracy_scratch(images, row, labels, &mut scratch)
+    }
+
+    /// [`LutModel::accuracy`] over a caller-owned [`Scratch`] — the
+    /// harness sweeps thread one scratch through every plan they
+    /// measure, so the fig benches run allocation-free on the batched
+    /// path.
+    pub fn accuracy_scratch(
+        &self,
+        images: &[f32],
+        row: usize,
+        labels: &[usize],
+        scratch: &mut Scratch,
+    ) -> (f64, Counters) {
         assert_eq!(images.len(), row * labels.len());
+        const EVAL_BATCH: usize = 32;
+        let mut out = BatchInference::default();
         let mut correct = 0usize;
         let mut first = Counters::default();
-        for (i, &label) in labels.iter().enumerate() {
-            let inf = self.infer(&images[i * row..(i + 1) * row]);
+        let mut i = 0usize;
+        while i < labels.len() {
+            let b = EVAL_BATCH.min(labels.len() - i);
+            self.infer_batch_into(&images[i * row..(i + b) * row], b, scratch, &mut out);
             if i == 0 {
-                first = inf.counters;
+                first = out.per_sample[0];
             }
-            if inf.class == label {
-                correct += 1;
+            for (s, &label) in labels[i..i + b].iter().enumerate() {
+                if out.classes[s] == label {
+                    correct += 1;
+                }
             }
+            i += b;
         }
         (correct as f64 / labels.len() as f64, first)
     }
@@ -713,6 +254,7 @@ impl LutModel {
 
 #[cfg(test)]
 mod tests {
+    use super::plan::AffineMode;
     use super::*;
     use crate::nn::Model;
     use crate::tensor::Tensor;
@@ -735,17 +277,21 @@ mod tests {
         ])
     }
 
+    fn compile(model: &Model, plan: &EnginePlan) -> LutModel {
+        Compiler::new(model).plan(plan).build().unwrap()
+    }
+
     #[test]
     fn linear_lut_agrees_with_reference() {
         let model = linear_model(5);
         let plan = EnginePlan::linear_default();
-        let lut = LutModel::compile(&model, &plan).unwrap();
+        let lut = compile(&model, &plan);
         let mut rng = Rng::new(6);
         let mut agree = 0;
         for _ in 0..20 {
             let x: Vec<f32> = (0..784).map(|_| rng.f32()).collect();
             // reference on quantized input
-            let fmt = FixedFormat::new(3);
+            let fmt = crate::quant::FixedFormat::new(3);
             let xq: Vec<f32> = x.iter().map(|&v| fmt.fake_quant(v)).collect();
             let ref_out = model.forward(&Tensor::new(&[1, 784], xq));
             let inf = lut.infer(&x);
@@ -761,10 +307,10 @@ mod tests {
     fn linear_logits_close_to_reference() {
         let model = linear_model(7);
         let plan = EnginePlan::linear_default();
-        let lut = LutModel::compile(&model, &plan).unwrap();
+        let lut = compile(&model, &plan);
         let mut rng = Rng::new(8);
         let x: Vec<f32> = (0..784).map(|_| rng.f32()).collect();
-        let fmt = FixedFormat::new(3);
+        let fmt = crate::quant::FixedFormat::new(3);
         let xq: Vec<f32> = x.iter().map(|&v| fmt.fake_quant(v)).collect();
         let ref_out = model.forward(&Tensor::new(&[1, 784], xq));
         let inf = lut.infer(&x);
@@ -777,7 +323,7 @@ mod tests {
     fn engine_size_matches_cost_model() {
         let model = linear_model(9);
         let plan = EnginePlan::linear_default(); // bitplane, 3 bits, m=14
-        let lut = LutModel::compile(&model, &plan).unwrap();
+        let lut = compile(&model, &plan);
         let c = crate::lut::cost::dense_cost(
             784,
             10,
@@ -800,7 +346,7 @@ mod tests {
             fallback: AffineMode::Float { planes: 11, m: 1 },
             r_o: 16,
         };
-        let lut = LutModel::compile(&model, &plan).unwrap();
+        let lut = compile(&model, &plan);
         let mut rng = Rng::new(11);
         let x: Vec<f32> = (0..784).map(|_| rng.f32()).collect();
         let inf = lut.infer(&x);
@@ -820,7 +366,7 @@ mod tests {
             fallback: AffineMode::Float { planes: 11, m: 1 },
             r_o: 16,
         };
-        let lut = LutModel::compile(&model, &plan).unwrap();
+        let lut = compile(&model, &plan);
         let mut rng = Rng::new(13);
         let mut agree = 0;
         for _ in 0..10 {
@@ -836,12 +382,9 @@ mod tests {
         assert!(agree >= 9, "MLP pipeline diverges: {agree}/10");
     }
 
-    #[test]
-    fn sigmoid_pipeline_tracks_reference() {
-        // MLP with sigmoid activations: engine path = float banks + the
-        // paper's 128 KiB scalar LUT; must match the float reference
-        let mut rng = Rng::new(77);
-        let model = Model {
+    fn sigmoid_model(seed: u64) -> Model {
+        let mut rng = Rng::new(seed);
+        Model {
             arch: crate::nn::Arch::Mlp,
             layers: vec![
                 crate::nn::Layer::Dense {
@@ -855,7 +398,14 @@ mod tests {
                 },
             ],
             input_shape: vec![784],
-        };
+        }
+    }
+
+    #[test]
+    fn sigmoid_pipeline_tracks_reference() {
+        // MLP with sigmoid activations: engine path = float banks + the
+        // paper's 128 KiB scalar LUT; must match the float reference
+        let model = sigmoid_model(77);
         let plan = EnginePlan {
             affine: vec![
                 AffineMode::Float { planes: 11, m: 1 },
@@ -864,7 +414,7 @@ mod tests {
             fallback: AffineMode::Float { planes: 11, m: 1 },
             r_o: 16,
         };
-        let lut = LutModel::compile(&model, &plan).unwrap();
+        let lut = compile(&model, &plan);
         // size includes the 128 KiB scalar table
         assert!(lut.size_bits() >= (1 << 16) * 16);
         let mut agree = 0;
@@ -882,10 +432,10 @@ mod tests {
     }
 
     /// infer_batch must agree bit-exactly with per-sample infer: same
-    /// classes, same logits, and counter totals equal to the per-sample
-    /// sum — across every stage kind the compiler can emit.
+    /// classes, same logits, and EXACT per-sample counters — across
+    /// every stage kind the compiler can emit.
     fn assert_batch_matches_single(model: &Model, plan: &EnginePlan, seed: u64) {
-        let lut = LutModel::compile(model, plan).unwrap();
+        let lut = compile(model, plan);
         let features: usize = model.input_shape.iter().product();
         let mut rng = Rng::new(seed);
         let batch = 4;
@@ -901,6 +451,10 @@ mod tests {
                 got.logits_row(s),
                 single.logits.as_slice(),
                 "logits diverge at sample {s}"
+            );
+            assert_eq!(
+                got.per_sample[s], single.counters,
+                "per-sample counters diverge at sample {s}"
             );
             total += single.counters;
         }
@@ -945,22 +499,7 @@ mod tests {
 
     #[test]
     fn infer_batch_matches_single_sigmoid() {
-        let mut rng = Rng::new(78);
-        let model = Model {
-            arch: crate::nn::Arch::Mlp,
-            layers: vec![
-                crate::nn::Layer::Dense {
-                    w: Tensor::randn(&[24, 784], 0.05, &mut rng),
-                    b: Tensor::zeros(&[24]),
-                },
-                crate::nn::Layer::Sigmoid,
-                crate::nn::Layer::Dense {
-                    w: Tensor::randn(&[10, 24], 0.3, &mut rng),
-                    b: Tensor::zeros(&[10]),
-                },
-            ],
-            input_shape: vec![784],
-        };
+        let model = sigmoid_model(78);
         let plan = EnginePlan {
             affine: vec![
                 AffineMode::Float { planes: 11, m: 1 },
@@ -1024,7 +563,7 @@ mod tests {
             fallback: AffineMode::Float { planes: 11, m: 1 },
             r_o: 16,
         };
-        let lut = LutModel::compile(&model, &plan).unwrap();
+        let lut = compile(&model, &plan);
         let mut rng = Rng::new(37);
         let batch = 8;
         let images: Vec<f32> = (0..batch * 784).map(|_| rng.f32()).collect();
@@ -1054,11 +593,57 @@ mod tests {
             fallback: AffineMode::Float { planes: 11, m: 1 },
             r_o: 16,
         };
-        let lut = LutModel::compile(&model, &plan).unwrap();
+        let lut = compile(&model, &plan);
         let mut rng = Rng::new(15);
         let x: Vec<f32> = (0..784).map(|_| rng.f32()).collect();
         let inf = lut.infer(&x);
         inf.counters.assert_multiplier_less();
         assert_eq!(inf.logits.len(), 10);
+    }
+
+    #[test]
+    fn accuracy_scratch_matches_per_sample_path() {
+        // batched accuracy (the harness path) must agree with a manual
+        // per-sample loop, and the returned counters must be the first
+        // sample's exact counters
+        let model = linear_model(40);
+        let lut = compile(&model, &EnginePlan::linear_default());
+        let mut rng = Rng::new(41);
+        let n = 70; // not a multiple of the internal eval batch
+        let images: Vec<f32> = (0..n * 784).map(|_| rng.f32()).collect();
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(10)).collect();
+        let mut scratch = scratch::Scratch::new();
+        let (acc, first) = lut.accuracy_scratch(&images, 784, &labels, &mut scratch);
+        let mut correct = 0usize;
+        for (i, &label) in labels.iter().enumerate() {
+            let inf = lut.infer(&images[i * 784..(i + 1) * 784]);
+            if i == 0 {
+                assert_eq!(first, inf.counters, "first-sample counters diverge");
+            }
+            if inf.class == label {
+                correct += 1;
+            }
+        }
+        assert_eq!(acc, correct as f64 / n as f64);
+    }
+
+    #[test]
+    fn artifact_roundtrip_smoke() {
+        // full save -> load -> bit-exact infer loop (the exhaustive
+        // version lives in rust/tests/artifact_roundtrip.rs)
+        let model = mlp_model(50);
+        let lut = compile(&model, &EnginePlan::mlp_fixed_input());
+        let bytes = artifact::to_bytes(&lut);
+        let back = artifact::from_bytes(&bytes).unwrap();
+        assert_eq!(back.plan(), lut.plan());
+        assert_eq!(back.size_bits(), lut.size_bits());
+        assert_eq!(back.num_stages(), lut.num_stages());
+        let mut rng = Rng::new(51);
+        let x: Vec<f32> = (0..784).map(|_| rng.f32()).collect();
+        let a = lut.infer(&x);
+        let b = back.infer(&x);
+        assert_eq!(a.class, b.class);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.counters, b.counters);
     }
 }

@@ -1,12 +1,12 @@
 //! Reusable scratch arena for batched inference.
 //!
-//! [`Scratch`] owns every intermediate buffer the batched stage runner
-//! needs — quantized codes, binary16 codes, integer accumulators (two,
-//! for stages that cannot run in place, e.g. max-pool), the conv banks'
-//! padded accumulator images, and a flattened input staging area for
-//! the coordinator. Buffers are `clear()` + `resize()`d per stage:
-//! after one warm-up batch every buffer has reached its high-water
-//! capacity and steady-state inference performs **zero heap
+//! [`Scratch`] owns everything the stage pipeline needs besides the
+//! model itself: the [`ActBuf`] activation flowing between stages, the
+//! max-pool ping-pong accumulator, the conv banks' padded accumulator
+//! images, the per-sample counter rows, and a flattened input staging
+//! area for the coordinator. Buffers are `clear()` + `resize()`d per
+//! stage: after one warm-up batch every buffer has reached its
+//! high-water capacity and steady-state inference performs **zero heap
 //! allocations** (asserted by `rust/tests/alloc_discipline.rs` with a
 //! counting global allocator).
 //!
@@ -14,25 +14,24 @@
 //! thread, a bench loop, a caller of `LutModel::infer_batch`) and
 //! threaded `&mut` through every stage — it is deliberately not shared.
 
-use crate::quant::f16::F16;
+use crate::engine::act::ActBuf;
+use crate::engine::counters::Counters;
 
-/// Per-executor scratch buffers. All fields are public: LUT banks and
+/// Per-executor scratch buffers. All fields are public: stages and
 /// benches borrow individual buffers directly.
 #[derive(Default)]
 pub struct Scratch {
     /// Flattened f32 input staging (coordinator: rows copied from the
     /// per-request `Vec<f32>` payloads).
     pub input: Vec<f32>,
-    /// Quantized fixed-point codes, `batch x q`.
-    pub codes: Vec<u32>,
-    /// Binary16 codes, `batch x q`.
-    pub half: Vec<F16>,
-    /// Primary integer accumulators, `batch x p`.
-    pub acc: Vec<i64>,
+    /// The activation buffer threaded through the stage pipeline.
+    pub act: ActBuf,
     /// Secondary accumulators (max-pool ping-pong).
     pub acc2: Vec<i64>,
     /// Conv banks' padded accumulator images, `batch x ph x pw x cout`.
     pub pad: Vec<i64>,
+    /// Exact per-sample counter rows for the batch in flight.
+    pub sample_counters: Vec<Counters>,
 }
 
 impl Scratch {
@@ -43,11 +42,10 @@ impl Scratch {
     /// Sum of buffer capacities in bytes (diagnostics).
     pub fn resident_bytes(&self) -> usize {
         self.input.capacity() * 4
-            + self.codes.capacity() * 4
-            + self.half.capacity() * 2
-            + self.acc.capacity() * 8
+            + self.act.resident_bytes()
             + self.acc2.capacity() * 8
             + self.pad.capacity() * 8
+            + self.sample_counters.capacity() * std::mem::size_of::<Counters>()
     }
 }
 
@@ -66,23 +64,23 @@ mod tests {
     #[test]
     fn buffers_keep_capacity_across_reuse() {
         let mut s = Scratch::new();
-        reset_len_i64(&mut s.acc, 1024);
-        let cap = s.acc.capacity();
-        let ptr = s.acc.as_ptr();
+        reset_len_i64(&mut s.act.acc, 1024);
+        let cap = s.act.acc.capacity();
+        let ptr = s.act.acc.as_ptr();
         for _ in 0..10 {
-            reset_len_i64(&mut s.acc, 1024);
-            assert_eq!(s.acc.capacity(), cap);
-            assert_eq!(s.acc.as_ptr(), ptr, "buffer must not reallocate");
+            reset_len_i64(&mut s.act.acc, 1024);
+            assert_eq!(s.act.acc.capacity(), cap);
+            assert_eq!(s.act.acc.as_ptr(), ptr, "buffer must not reallocate");
         }
-        reset_len_i64(&mut s.acc, 100);
-        assert_eq!(s.acc.capacity(), cap, "shrinking length keeps capacity");
+        reset_len_i64(&mut s.act.acc, 100);
+        assert_eq!(s.act.acc.capacity(), cap, "shrinking length keeps capacity");
     }
 
     #[test]
     fn resident_bytes_counts_capacity() {
         let mut s = Scratch::new();
         assert_eq!(s.resident_bytes(), 0);
-        s.acc.reserve_exact(10);
+        s.act.acc.reserve_exact(10);
         assert!(s.resident_bytes() >= 80);
     }
 }

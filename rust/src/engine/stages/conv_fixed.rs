@@ -1,0 +1,79 @@
+//! Fixed-point convolutional stage over the [`ConvLut`] bank. The
+//! padded accumulator images live in `scratch.pad`.
+
+use super::{Stage, StageKind};
+use crate::engine::act::{ActBuf, Repr};
+use crate::engine::counters::Counters;
+use crate::engine::scratch::{reset_len_i64, Scratch};
+use crate::lut::conv::ConvLut;
+use crate::lut::{wire, ACC_FRAC};
+
+pub struct ConvFixedStage {
+    pub lut: ConvLut,
+}
+
+impl ConvFixedStage {
+    pub fn new(lut: ConvLut) -> ConvFixedStage {
+        ConvFixedStage { lut }
+    }
+
+    pub fn read_payload(r: &mut wire::Reader) -> wire::Result<ConvFixedStage> {
+        Ok(ConvFixedStage { lut: ConvLut::read_wire(r)? })
+    }
+}
+
+impl Stage for ConvFixedStage {
+    fn kind(&self) -> StageKind {
+        StageKind::ConvFixed
+    }
+
+    fn eval_batch(&self, act: &mut ActBuf, scratch: &mut Scratch, counters: &mut [Counters]) {
+        act.ensure_codes(self.lut.fmt);
+        let batch = act.batch();
+        let oimg = self.lut.h * self.lut.w * self.lut.cout;
+        reset_len_i64(&mut act.acc, batch * oimg);
+        self.lut
+            .eval_batch(&act.codes, batch, &mut act.acc, &mut scratch.pad, counters);
+        act.set_repr(Repr::Acc(ACC_FRAC));
+    }
+
+    fn size_bits(&self, r_o: u32) -> u64 {
+        self.lut.size_bits(r_o)
+    }
+
+    fn write_payload(&self, out: &mut Vec<u8>) {
+        self.lut.write_wire(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::FixedFormat;
+    use crate::util::Rng;
+
+    #[test]
+    fn stage_matches_bank_eval() {
+        let (h, w, cin, cout, r, m, bits) = (4, 4, 1, 2, 1, 2, 3);
+        let fs = 2 * r + 1;
+        let mut rng = Rng::new(13);
+        let filter: Vec<f32> =
+            (0..fs * fs * cin * cout).map(|_| rng.normal() * 0.3).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+        let fmt = FixedFormat::new(bits);
+        let lut = ConvLut::build(&filter, &bias, h, w, cin, cout, r, m, fmt).unwrap();
+        let x: Vec<f32> = (0..h * w * cin).map(|_| rng.f32()).collect();
+        let mut want_ctr = Counters::default();
+        let want = lut.eval_f32(&x, &mut want_ctr);
+
+        let stage = ConvFixedStage::new(lut);
+        let mut act = ActBuf::new();
+        let mut scratch = Scratch::new();
+        let mut ctrs = vec![Counters::default()];
+        act.load_f32(&x, 1);
+        stage.eval_batch(&mut act, &mut scratch, &mut ctrs);
+        assert_eq!(act.repr(), Repr::Acc(ACC_FRAC));
+        assert_eq!(act.acc, want);
+        assert_eq!(ctrs[0], want_ctr);
+    }
+}

@@ -1,0 +1,81 @@
+//! Binary16 convolutional stage over the [`ConvFloatLut`] bank.
+
+use super::{Stage, StageKind};
+use crate::engine::act::{ActBuf, Repr};
+use crate::engine::counters::Counters;
+use crate::engine::scratch::{reset_len_i64, Scratch};
+use crate::lut::convfloat::ConvFloatLut;
+use crate::lut::floatplane::FACC;
+use crate::lut::wire;
+
+pub struct ConvFloatStage {
+    pub lut: ConvFloatLut,
+}
+
+impl ConvFloatStage {
+    pub fn new(lut: ConvFloatLut) -> ConvFloatStage {
+        ConvFloatStage { lut }
+    }
+
+    pub fn read_payload(r: &mut wire::Reader) -> wire::Result<ConvFloatStage> {
+        Ok(ConvFloatStage { lut: ConvFloatLut::read_wire(r)? })
+    }
+}
+
+impl Stage for ConvFloatStage {
+    fn kind(&self) -> StageKind {
+        StageKind::ConvFloat
+    }
+
+    fn eval_batch(&self, act: &mut ActBuf, scratch: &mut Scratch, counters: &mut [Counters]) {
+        act.ensure_half_nonneg();
+        let batch = act.batch();
+        let oimg = self.lut.h * self.lut.w * self.lut.cout;
+        reset_len_i64(&mut act.acc, batch * oimg);
+        self.lut
+            .eval_batch_f16(&act.half, batch, &mut act.acc, &mut scratch.pad, counters);
+        act.set_repr(Repr::Acc(FACC as u32));
+    }
+
+    fn size_bits(&self, r_o: u32) -> u64 {
+        self.lut.size_bits(r_o)
+    }
+
+    fn write_payload(&self, out: &mut Vec<u8>) {
+        self.lut.write_wire(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::f16::SIG_BITS;
+    use crate::util::Rng;
+
+    #[test]
+    fn stage_matches_bank_eval() {
+        let (h, w, cin, cout, r) = (4, 4, 1, 2, 1);
+        let fs = 2 * r + 1;
+        let mut rng = Rng::new(17);
+        let filter: Vec<f32> =
+            (0..fs * fs * cin * cout).map(|_| rng.normal() * 0.3).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+        let lut =
+            ConvFloatLut::build(&filter, &bias, h, w, cin, cout, r, SIG_BITS).unwrap();
+        let x: Vec<f32> = (0..h * w * cin).map(|_| rng.f32() * 2.0).collect();
+        let xh: Vec<crate::quant::f16::F16> =
+            x.iter().map(|&v| crate::quant::f16::F16::from_f32(v)).collect();
+        let mut want_ctr = Counters::default();
+        let want = lut.eval_f16(&xh, &mut want_ctr);
+
+        let stage = ConvFloatStage::new(lut);
+        let mut act = ActBuf::new();
+        let mut scratch = Scratch::new();
+        let mut ctrs = vec![Counters::default()];
+        act.load_f32(&x, 1);
+        stage.eval_batch(&mut act, &mut scratch, &mut ctrs);
+        assert_eq!(act.repr(), Repr::Acc(FACC as u32));
+        assert_eq!(act.acc, want);
+        assert_eq!(ctrs[0], want_ctr);
+    }
+}

@@ -1,0 +1,79 @@
+//! Bitplane fixed-point dense stage over the [`DenseBitplaneLut`] bank.
+
+use super::{Stage, StageKind};
+use crate::engine::act::{ActBuf, Repr};
+use crate::engine::counters::Counters;
+use crate::engine::scratch::{reset_len_i64, Scratch};
+use crate::lut::bitplane::DenseBitplaneLut;
+use crate::lut::{wire, ACC_FRAC};
+
+pub struct DenseBitplaneStage {
+    pub lut: DenseBitplaneLut,
+}
+
+impl DenseBitplaneStage {
+    pub fn new(lut: DenseBitplaneLut) -> DenseBitplaneStage {
+        DenseBitplaneStage { lut }
+    }
+
+    pub fn read_payload(r: &mut wire::Reader) -> wire::Result<DenseBitplaneStage> {
+        Ok(DenseBitplaneStage { lut: DenseBitplaneLut::read_wire(r)? })
+    }
+}
+
+impl Stage for DenseBitplaneStage {
+    fn kind(&self) -> StageKind {
+        StageKind::DenseBitplane
+    }
+
+    fn eval_batch(&self, act: &mut ActBuf, _scratch: &mut Scratch, counters: &mut [Counters]) {
+        act.ensure_codes(self.lut.fmt);
+        let batch = act.batch();
+        reset_len_i64(&mut act.acc, batch * self.lut.p);
+        self.lut.eval_batch(&act.codes, batch, &mut act.acc, counters);
+        act.set_repr(Repr::Acc(ACC_FRAC));
+    }
+
+    fn size_bits(&self, r_o: u32) -> u64 {
+        self.lut.size_bits(r_o)
+    }
+
+    fn write_payload(&self, out: &mut Vec<u8>) {
+        self.lut.write_wire(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::Partition;
+    use crate::quant::FixedFormat;
+    use crate::util::Rng;
+
+    #[test]
+    fn stage_matches_bank_eval_batched() {
+        let (p, q, batch) = (4, 12, 3);
+        let mut rng = Rng::new(7);
+        let w: Vec<f32> = (0..p * q).map(|_| rng.normal() * 0.4).collect();
+        let b: Vec<f32> = (0..p).map(|_| rng.normal() * 0.1).collect();
+        let fmt = FixedFormat::new(3);
+        let lut =
+            DenseBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, 4), fmt)
+                .unwrap();
+        let xs: Vec<f32> = (0..batch * q).map(|_| rng.f32()).collect();
+        let codes: Vec<u32> = xs.iter().map(|&v| fmt.quantize(v)).collect();
+        let mut want = vec![0i64; batch * p];
+        let mut want_ctrs = vec![Counters::default(); batch];
+        lut.eval_batch(&codes, batch, &mut want, &mut want_ctrs);
+
+        let stage = DenseBitplaneStage::new(lut);
+        let mut act = ActBuf::new();
+        let mut scratch = Scratch::new();
+        let mut ctrs = vec![Counters::default(); batch];
+        act.load_f32(&xs, batch);
+        stage.eval_batch(&mut act, &mut scratch, &mut ctrs);
+        assert_eq!(act.repr(), Repr::Acc(ACC_FRAC));
+        assert_eq!(act.acc, want);
+        assert_eq!(ctrs, want_ctrs);
+    }
+}

@@ -1,0 +1,79 @@
+//! Binary16 mantissa-plane dense stage over the [`DenseFloatLut`] bank.
+//! Accepts f32 input (first layer — encoded through binary16 with the
+//! ReLU-nonneg clamp) or binary16 from an upstream `ToHalf`/sigmoid.
+
+use super::{Stage, StageKind};
+use crate::engine::act::{ActBuf, Repr};
+use crate::engine::counters::Counters;
+use crate::engine::scratch::{reset_len_i64, Scratch};
+use crate::lut::floatplane::{DenseFloatLut, FACC};
+use crate::lut::wire;
+
+pub struct DenseFloatStage {
+    pub lut: DenseFloatLut,
+}
+
+impl DenseFloatStage {
+    pub fn new(lut: DenseFloatLut) -> DenseFloatStage {
+        DenseFloatStage { lut }
+    }
+
+    pub fn read_payload(r: &mut wire::Reader) -> wire::Result<DenseFloatStage> {
+        Ok(DenseFloatStage { lut: DenseFloatLut::read_wire(r)? })
+    }
+}
+
+impl Stage for DenseFloatStage {
+    fn kind(&self) -> StageKind {
+        StageKind::DenseFloat
+    }
+
+    fn eval_batch(&self, act: &mut ActBuf, _scratch: &mut Scratch, counters: &mut [Counters]) {
+        act.ensure_half_nonneg();
+        let batch = act.batch();
+        reset_len_i64(&mut act.acc, batch * self.lut.p);
+        self.lut.eval_batch_f16(&act.half, batch, &mut act.acc, counters);
+        act.set_repr(Repr::Acc(FACC as u32));
+    }
+
+    fn size_bits(&self, r_o: u32) -> u64 {
+        self.lut.size_bits(r_o)
+    }
+
+    fn write_payload(&self, out: &mut Vec<u8>) {
+        self.lut.write_wire(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::floatplane::FloatLutConfig;
+    use crate::lut::Partition;
+    use crate::util::Rng;
+
+    #[test]
+    fn stage_matches_bank_eval() {
+        let (p, q) = (3, 6);
+        let mut rng = Rng::new(11);
+        let w: Vec<f32> = (0..p * q).map(|_| rng.normal() * 0.4).collect();
+        let b: Vec<f32> = (0..p).map(|_| rng.normal() * 0.1).collect();
+        let lut = DenseFloatLut::build(
+            &w, &b, p, q, Partition::singletons(q), FloatLutConfig::default(),
+        )
+        .unwrap();
+        let x: Vec<f32> = (0..q).map(|_| rng.f32() * 4.0).collect();
+        let mut want_ctr = Counters::default();
+        let want = lut.eval_f32(&x, &mut want_ctr);
+
+        let stage = DenseFloatStage::new(lut);
+        let mut act = ActBuf::new();
+        let mut scratch = Scratch::new();
+        let mut ctrs = vec![Counters::default()];
+        act.load_f32(&x, 1);
+        stage.eval_batch(&mut act, &mut scratch, &mut ctrs);
+        assert_eq!(act.repr(), Repr::Acc(FACC as u32));
+        assert_eq!(act.acc, want);
+        assert_eq!(ctrs[0], want_ctr);
+    }
+}

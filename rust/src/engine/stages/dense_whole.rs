@@ -1,0 +1,78 @@
+//! Whole-code fixed-point dense stage: quantizes f32 input (or accepts
+//! matching codes from an upstream `ToFixed`) and runs the
+//! [`DenseWholeLut`] bank over the batch.
+
+use super::{Stage, StageKind};
+use crate::engine::act::{ActBuf, Repr};
+use crate::engine::counters::Counters;
+use crate::engine::scratch::{reset_len_i64, Scratch};
+use crate::lut::dense::DenseWholeLut;
+use crate::lut::{wire, ACC_FRAC};
+
+pub struct DenseWholeStage {
+    pub lut: DenseWholeLut,
+}
+
+impl DenseWholeStage {
+    pub fn new(lut: DenseWholeLut) -> DenseWholeStage {
+        DenseWholeStage { lut }
+    }
+
+    pub fn read_payload(r: &mut wire::Reader) -> wire::Result<DenseWholeStage> {
+        Ok(DenseWholeStage { lut: DenseWholeLut::read_wire(r)? })
+    }
+}
+
+impl Stage for DenseWholeStage {
+    fn kind(&self) -> StageKind {
+        StageKind::DenseWhole
+    }
+
+    fn eval_batch(&self, act: &mut ActBuf, _scratch: &mut Scratch, counters: &mut [Counters]) {
+        act.ensure_codes(self.lut.fmt);
+        let batch = act.batch();
+        reset_len_i64(&mut act.acc, batch * self.lut.p);
+        self.lut.eval_batch(&act.codes, batch, &mut act.acc, counters);
+        act.set_repr(Repr::Acc(ACC_FRAC));
+    }
+
+    fn size_bits(&self, r_o: u32) -> u64 {
+        self.lut.size_bits(r_o)
+    }
+
+    fn write_payload(&self, out: &mut Vec<u8>) {
+        self.lut.write_wire(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::Partition;
+    use crate::quant::FixedFormat;
+    use crate::util::Rng;
+
+    #[test]
+    fn stage_matches_bank_eval() {
+        let (p, q) = (3, 8);
+        let mut rng = Rng::new(5);
+        let w: Vec<f32> = (0..p * q).map(|_| rng.normal() * 0.4).collect();
+        let b: Vec<f32> = (0..p).map(|_| rng.normal() * 0.1).collect();
+        let fmt = FixedFormat::new(3);
+        let lut =
+            DenseWholeLut::build(&w, &b, p, q, Partition::contiguous(q, 2), fmt).unwrap();
+        let x: Vec<f32> = (0..q).map(|_| rng.f32()).collect();
+        let mut want_ctr = Counters::default();
+        let want = lut.eval_f32(&x, &mut want_ctr);
+
+        let stage = DenseWholeStage::new(lut);
+        let mut act = ActBuf::new();
+        let mut scratch = Scratch::new();
+        let mut ctrs = vec![Counters::default()];
+        act.load_f32(&x, 1);
+        stage.eval_batch(&mut act, &mut scratch, &mut ctrs);
+        assert_eq!(act.repr(), Repr::Acc(ACC_FRAC));
+        assert_eq!(act.acc, want);
+        assert_eq!(ctrs[0], want_ctr);
+    }
+}

@@ -1,0 +1,101 @@
+//! 2×2 max pool on integer accumulator images (compare + select only).
+//! Ping-pongs through `scratch.acc2` because pooling cannot run in
+//! place.
+
+use super::{Stage, StageKind};
+use crate::engine::act::{ActBuf, Repr};
+use crate::engine::counters::Counters;
+use crate::engine::scratch::{reset_len_i64, Scratch};
+use crate::lut::wire;
+
+pub struct MaxPool2IntStage {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl MaxPool2IntStage {
+    pub fn read_payload(r: &mut wire::Reader) -> wire::Result<MaxPool2IntStage> {
+        const DIM_CAP: usize = 1 << 20;
+        let h = r.len_capped(DIM_CAP, "maxpool h")?;
+        let w = r.len_capped(DIM_CAP, "maxpool w")?;
+        let c = r.len_capped(DIM_CAP, "maxpool c")?;
+        Ok(MaxPool2IntStage { h, w, c })
+    }
+}
+
+impl Stage for MaxPool2IntStage {
+    fn kind(&self) -> StageKind {
+        StageKind::MaxPool2Int
+    }
+
+    fn eval_batch(&self, act: &mut ActBuf, scratch: &mut Scratch, counters: &mut [Counters]) {
+        match act.repr() {
+            Repr::Acc(_) => {
+                let batch = act.batch();
+                let (h, w, c) = (self.h, self.w, self.c);
+                let (oh, ow) = (h / 2, w / 2);
+                assert_eq!(act.acc.len(), batch * h * w * c);
+                reset_len_i64(&mut scratch.acc2, batch * oh * ow * c);
+                scratch.acc2.fill(i64::MIN);
+                for s in 0..batch {
+                    let src = &act.acc[s * h * w * c..(s + 1) * h * w * c];
+                    let dst = &mut scratch.acc2[s * oh * ow * c..(s + 1) * oh * ow * c];
+                    for y in 0..h {
+                        for x in 0..w {
+                            for ci in 0..c {
+                                let val = src[(y * w + x) * c + ci];
+                                let o = &mut dst[((y / 2) * ow + x / 2) * c + ci];
+                                if val > *o {
+                                    *o = val;
+                                }
+                            }
+                        }
+                    }
+                    counters[s].compares += (h * w * c) as u64;
+                }
+                std::mem::swap(&mut act.acc, &mut scratch.acc2);
+            }
+            _ => panic!("maxpool expects accumulators"),
+        }
+    }
+
+    fn size_bits(&self, _r_o: u32) -> u64 {
+        0
+    }
+
+    fn write_payload(&self, out: &mut Vec<u8>) {
+        wire::put_u64(out, self.h as u64);
+        wire::put_u64(out, self.w as u64);
+        wire::put_u64(out, self.c as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pools_and_swaps_buffers() {
+        let stage = MaxPool2IntStage { h: 2, w: 2, c: 1 };
+        let mut act = ActBuf::new();
+        act.load_f32(&[0.0; 4], 1);
+        act.acc.extend_from_slice(&[1, 7, -2, 4]);
+        act.set_repr(Repr::Acc(32));
+        let mut scratch = Scratch::new();
+        let mut ctrs = vec![Counters::default()];
+        stage.eval_batch(&mut act, &mut scratch, &mut ctrs);
+        assert_eq!(act.acc, vec![7]);
+        assert_eq!(act.repr(), Repr::Acc(32));
+        assert_eq!(ctrs[0].compares, 4);
+    }
+
+    #[test]
+    fn payload_roundtrip() {
+        let stage = MaxPool2IntStage { h: 8, w: 6, c: 3 };
+        let mut buf = Vec::new();
+        stage.write_payload(&mut buf);
+        let back = MaxPool2IntStage::read_payload(&mut wire::Reader::new(&buf)).unwrap();
+        assert_eq!((back.h, back.w, back.c), (8, 6, 3));
+    }
+}

@@ -1,0 +1,198 @@
+//! The open stage API: one executable pipeline step of a compiled
+//! multiplier-less model.
+//!
+//! [`Stage`] replaces the engine's former closed `Stage`/`Act` enums
+//! and their duplicated single-vs-batched match arms. A stage reads the
+//! [`ActBuf`] in whatever representation it expects, writes its output
+//! buffer, retags the activation, and records its op mix on the
+//! per-sample counter rows. The per-sample path is batch-of-one, so
+//! there is exactly one evaluation code path per stage kind.
+//!
+//! Adding a new bank kind is additive: implement [`Stage`] in a new
+//! module here, give it a [`StageKind`] tag, emit it from the
+//! [`crate::engine::Compiler`], and register its decoder in
+//! [`read_stage`] — no engine match arms to edit.
+//!
+//! Each built-in stage lives in its own module:
+//!
+//! | module             | stage                         | paper section |
+//! |--------------------|-------------------------------|---------------|
+//! | [`dense_whole`]    | whole-code fixed dense bank   | §Wx + b       |
+//! | [`dense_bitplane`] | bitplane fixed dense bank     | §Fixed point  |
+//! | [`dense_float`]    | binary16-plane dense bank     | §Floating pt  |
+//! | [`conv_fixed`]     | fixed-point conv bank         | §Conv layers  |
+//! | [`conv_float`]     | binary16 conv bank            | §Conv layers  |
+//! | [`relu`]           | integer ReLU                  | compare only  |
+//! | [`sigmoid`]        | 128 KiB scalar-function LUT   | §Nonlinear f  |
+//! | [`maxpool`]        | 2×2 integer max pool          | compare only  |
+//! | [`tohalf`]         | acc → binary16 boundary encode| §Floating pt  |
+//! | [`tofixed`]        | acc → fixed-code boundary     | §Fixed point  |
+
+pub mod conv_fixed;
+pub mod conv_float;
+pub mod dense_bitplane;
+pub mod dense_float;
+pub mod dense_whole;
+pub mod maxpool;
+pub mod relu;
+pub mod sigmoid;
+pub mod tofixed;
+pub mod tohalf;
+
+pub use conv_fixed::ConvFixedStage;
+pub use conv_float::ConvFloatStage;
+pub use dense_bitplane::DenseBitplaneStage;
+pub use dense_float::DenseFloatStage;
+pub use dense_whole::DenseWholeStage;
+pub use maxpool::MaxPool2IntStage;
+pub use relu::ReluIntStage;
+pub use sigmoid::SigmoidLutStage;
+pub use tofixed::ToFixedStage;
+pub use tohalf::ToHalfStage;
+
+use crate::engine::act::ActBuf;
+use crate::engine::counters::Counters;
+use crate::engine::scratch::Scratch;
+use crate::lut::wire;
+
+/// One executable stage of a compiled pipeline.
+///
+/// Contract:
+/// * `eval_batch` is the only evaluation entry point — batch-of-one IS
+///   the per-sample path, so batched and per-sample results are
+///   bit-exact by construction;
+/// * every data-path primitive lands on the counter row of the sample
+///   that incurred it (`counters.len() == act.batch()`), and none of
+///   them may be a multiply;
+/// * after one warm-up batch of a given geometry, `eval_batch` performs
+///   zero heap allocations (all intermediates live in `act`/`scratch`).
+pub trait Stage: Send + Sync {
+    /// Stable kind tag (artifact serialization, diagnostics).
+    fn kind(&self) -> StageKind;
+
+    /// Execute the stage batch-at-a-time: consume `act` in this stage's
+    /// input representation, leave the output representation behind.
+    fn eval_batch(&self, act: &mut ActBuf, scratch: &mut Scratch, counters: &mut [Counters]);
+
+    /// Total LUT storage in bits at accounting width `r_o` (0 for
+    /// table-free stages).
+    fn size_bits(&self, r_o: u32) -> u64;
+
+    /// Serialize this stage's payload (tables + metadata) for the
+    /// `.ltm` artifact. Must round-trip bit-exactly through the decoder
+    /// registered in [`read_stage`].
+    fn write_payload(&self, out: &mut Vec<u8>);
+}
+
+/// Stable stage identifiers. The `u16` tags are the on-disk artifact
+/// encoding — append-only, never renumber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    DenseWhole,
+    DenseBitplane,
+    DenseFloat,
+    ConvFixed,
+    ConvFloat,
+    ReluInt,
+    SigmoidLut,
+    MaxPool2Int,
+    ToHalf,
+    ToFixed,
+}
+
+impl StageKind {
+    /// On-disk tag.
+    pub fn tag(self) -> u16 {
+        match self {
+            StageKind::DenseWhole => 1,
+            StageKind::DenseBitplane => 2,
+            StageKind::DenseFloat => 3,
+            StageKind::ConvFixed => 4,
+            StageKind::ConvFloat => 5,
+            StageKind::ReluInt => 6,
+            StageKind::SigmoidLut => 7,
+            StageKind::MaxPool2Int => 8,
+            StageKind::ToHalf => 9,
+            StageKind::ToFixed => 10,
+        }
+    }
+
+    /// Decode an on-disk tag.
+    pub fn from_tag(tag: u16) -> Option<StageKind> {
+        Some(match tag {
+            1 => StageKind::DenseWhole,
+            2 => StageKind::DenseBitplane,
+            3 => StageKind::DenseFloat,
+            4 => StageKind::ConvFixed,
+            5 => StageKind::ConvFloat,
+            6 => StageKind::ReluInt,
+            7 => StageKind::SigmoidLut,
+            8 => StageKind::MaxPool2Int,
+            9 => StageKind::ToHalf,
+            10 => StageKind::ToFixed,
+            _ => return None,
+        })
+    }
+
+    /// Human-readable name (diagnostics).
+    pub fn name(self) -> &'static str {
+        match self {
+            StageKind::DenseWhole => "dense-whole",
+            StageKind::DenseBitplane => "dense-bitplane",
+            StageKind::DenseFloat => "dense-float",
+            StageKind::ConvFixed => "conv-fixed",
+            StageKind::ConvFloat => "conv-float",
+            StageKind::ReluInt => "relu-int",
+            StageKind::SigmoidLut => "sigmoid-lut",
+            StageKind::MaxPool2Int => "maxpool2-int",
+            StageKind::ToHalf => "to-half",
+            StageKind::ToFixed => "to-fixed",
+        }
+    }
+}
+
+/// Decode one stage payload by kind — the artifact loader's dispatch
+/// table. New stage kinds register here.
+pub fn read_stage(kind: StageKind, r: &mut wire::Reader) -> wire::Result<Box<dyn Stage>> {
+    Ok(match kind {
+        StageKind::DenseWhole => Box::new(DenseWholeStage::read_payload(r)?),
+        StageKind::DenseBitplane => Box::new(DenseBitplaneStage::read_payload(r)?),
+        StageKind::DenseFloat => Box::new(DenseFloatStage::read_payload(r)?),
+        StageKind::ConvFixed => Box::new(ConvFixedStage::read_payload(r)?),
+        StageKind::ConvFloat => Box::new(ConvFloatStage::read_payload(r)?),
+        StageKind::ReluInt => Box::new(ReluIntStage::read_payload(r)?),
+        StageKind::SigmoidLut => Box::new(SigmoidLutStage::read_payload(r)?),
+        StageKind::MaxPool2Int => Box::new(MaxPool2IntStage::read_payload(r)?),
+        StageKind::ToHalf => Box::new(ToHalfStage::read_payload(r)?),
+        StageKind::ToFixed => Box::new(ToFixedStage::read_payload(r)?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_roundtrip_and_are_unique() {
+        let kinds = [
+            StageKind::DenseWhole,
+            StageKind::DenseBitplane,
+            StageKind::DenseFloat,
+            StageKind::ConvFixed,
+            StageKind::ConvFloat,
+            StageKind::ReluInt,
+            StageKind::SigmoidLut,
+            StageKind::MaxPool2Int,
+            StageKind::ToHalf,
+            StageKind::ToFixed,
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        for k in kinds {
+            assert!(seen.insert(k.tag()), "duplicate tag {}", k.tag());
+            assert_eq!(StageKind::from_tag(k.tag()), Some(k));
+            assert!(!k.name().is_empty());
+        }
+        assert_eq!(StageKind::from_tag(0), None);
+        assert_eq!(StageKind::from_tag(999), None);
+    }
+}

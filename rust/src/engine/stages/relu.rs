@@ -1,0 +1,66 @@
+//! Integer ReLU: compare + select on the accumulators. The paper
+//! implements ReLU without a table, and so does the engine. On
+//! code/binary16 activations the stage is a no-op — the clamp is folded
+//! into the boundary encode.
+
+use super::{Stage, StageKind};
+use crate::engine::act::{ActBuf, Repr};
+use crate::engine::counters::Counters;
+use crate::engine::scratch::Scratch;
+use crate::lut::wire;
+
+pub struct ReluIntStage;
+
+impl ReluIntStage {
+    pub fn read_payload(_r: &mut wire::Reader) -> wire::Result<ReluIntStage> {
+        Ok(ReluIntStage)
+    }
+}
+
+impl Stage for ReluIntStage {
+    fn kind(&self) -> StageKind {
+        StageKind::ReluInt
+    }
+
+    fn eval_batch(&self, act: &mut ActBuf, _scratch: &mut Scratch, counters: &mut [Counters]) {
+        if let Repr::Acc(_) = act.repr() {
+            for a in act.acc.iter_mut() {
+                if *a < 0 {
+                    *a = 0;
+                }
+            }
+            let batch = act.batch();
+            let n = (act.acc.len() / batch) as u64;
+            for ctr in counters.iter_mut() {
+                ctr.compares += n;
+            }
+        }
+        // codes/binary16: clamp already handled at encode — pass through
+    }
+
+    fn size_bits(&self, _r_o: u32) -> u64 {
+        0
+    }
+
+    fn write_payload(&self, _out: &mut Vec<u8>) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamps_negatives_and_charges_compares() {
+        let stage = ReluIntStage;
+        let mut act = ActBuf::new();
+        act.load_f32(&[0.0; 4], 2);
+        act.acc.extend_from_slice(&[-3, 5, 0, -1]);
+        act.set_repr(Repr::Acc(32));
+        let mut scratch = Scratch::new();
+        let mut ctrs = vec![Counters::default(); 2];
+        stage.eval_batch(&mut act, &mut scratch, &mut ctrs);
+        assert_eq!(act.acc, vec![0, 5, 0, 0]);
+        assert_eq!(ctrs[0].compares, 2);
+        assert_eq!(ctrs[1].compares, 2);
+    }
+}

@@ -1,0 +1,88 @@
+//! Scalar-nonlinearity stage: the paper's 128 KiB binary16→binary16
+//! table, one memory read per element. Performs its own SIGNED
+//! acc→binary16 encode (pre-activations can be negative; the table is
+//! indexed by the full 16-bit pattern).
+
+use super::{Stage, StageKind};
+use crate::engine::act::{ActBuf, Repr};
+use crate::engine::counters::Counters;
+use crate::engine::f16enc;
+use crate::engine::scratch::Scratch;
+use crate::lut::scalar::ScalarLut;
+use crate::lut::wire;
+use crate::quant::f16::F16;
+
+pub struct SigmoidLutStage {
+    pub lut: ScalarLut,
+}
+
+impl SigmoidLutStage {
+    pub fn new(lut: ScalarLut) -> SigmoidLutStage {
+        SigmoidLutStage { lut }
+    }
+
+    pub fn read_payload(r: &mut wire::Reader) -> wire::Result<SigmoidLutStage> {
+        Ok(SigmoidLutStage { lut: ScalarLut::read_wire(r)? })
+    }
+}
+
+impl Stage for SigmoidLutStage {
+    fn kind(&self) -> StageKind {
+        StageKind::SigmoidLut
+    }
+
+    fn eval_batch(&self, act: &mut ActBuf, _scratch: &mut Scratch, counters: &mut [Counters]) {
+        let batch = act.batch();
+        match act.repr() {
+            Repr::Half => {}
+            Repr::Acc(frac) => {
+                f16enc::acc_rows_to_f16_signed_into(
+                    &act.acc, batch, frac, &mut act.half, counters,
+                );
+                act.set_repr(Repr::Half);
+            }
+            Repr::F32 => {
+                act.half.clear();
+                act.half.extend(act.f32s.iter().map(|&v| F16::from_f32(v)));
+                act.set_repr(Repr::Half);
+            }
+            Repr::Codes(_) => panic!("sigmoid LUT expects accumulators or binary16"),
+        }
+        let n = act.half.len() / batch;
+        for (s, ctr) in counters.iter_mut().enumerate() {
+            self.lut.eval_vec(&mut act.half[s * n..(s + 1) * n], ctr);
+        }
+    }
+
+    fn size_bits(&self, _r_o: u32) -> u64 {
+        self.lut.size_bits()
+    }
+
+    fn write_payload(&self, out: &mut Vec<u8>) {
+        self.lut.write_wire(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_accumulators_through_the_table() {
+        let stage = SigmoidLutStage::new(ScalarLut::sigmoid());
+        let mut act = ActBuf::new();
+        act.load_f32(&[0.0; 2], 2);
+        // value 0 and value 1.0 at frac 16
+        act.acc.extend_from_slice(&[0, 1 << 16]);
+        act.set_repr(Repr::Acc(16));
+        let mut scratch = Scratch::new();
+        let mut ctrs = vec![Counters::default(); 2];
+        stage.eval_batch(&mut act, &mut scratch, &mut ctrs);
+        assert_eq!(act.repr(), Repr::Half);
+        assert!((act.half[0].to_f32() - 0.5).abs() < 1e-3);
+        assert!((act.half[1].to_f32() - 0.731).abs() < 1e-2);
+        assert_eq!(ctrs[0].lut_evals, 1);
+        assert_eq!(ctrs[1].lut_evals, 1);
+        assert_eq!(ctrs[0].mults, 0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Layer-boundary encode: accumulators → fixed-point codes via
+//! right-shift + clamp, for fixed-format inner layers with a
+//! power-of-two input range.
+
+use super::{Stage, StageKind};
+use crate::engine::act::{ActBuf, Repr};
+use crate::engine::counters::Counters;
+use crate::engine::scratch::Scratch;
+use crate::lut::wire;
+
+pub struct ToFixedStage {
+    pub bits: u32,
+    pub range_exp: i32,
+}
+
+impl ToFixedStage {
+    pub fn read_payload(r: &mut wire::Reader) -> wire::Result<ToFixedStage> {
+        let bits = r.u32()?;
+        if !(1..=16).contains(&bits) {
+            return wire::err(format!("to-fixed: bad bits {bits}"));
+        }
+        let range_exp = r.i32()?;
+        if !(-64..=64).contains(&range_exp) {
+            return wire::err(format!("to-fixed: bad range_exp {range_exp}"));
+        }
+        Ok(ToFixedStage { bits, range_exp })
+    }
+}
+
+impl Stage for ToFixedStage {
+    fn kind(&self) -> StageKind {
+        StageKind::ToFixed
+    }
+
+    fn eval_batch(&self, act: &mut ActBuf, _scratch: &mut Scratch, counters: &mut [Counters]) {
+        match act.repr() {
+            Repr::Acc(frac) => {
+                // code = clamp(acc >> (frac - bits + range_exp));
+                // value represented = code * 2^(range_exp - bits).
+                // The shift is clamped into i64 range: an extreme
+                // range_exp (possible via plan JSON or artifact) then
+                // saturates codes to 0/maxc instead of hitting a
+                // masked/overflowing shift.
+                let shift =
+                    (frac as i32 - self.bits as i32 + self.range_exp).clamp(-63, 63);
+                let maxc = (1u32 << self.bits) - 1;
+                let batch = act.batch();
+                let n = (act.acc.len() / batch) as u64;
+                for ctr in counters.iter_mut() {
+                    ctr.compares += 2 * n;
+                }
+                act.codes.clear();
+                act.codes.extend(act.acc.iter().map(|&a| {
+                    if a <= 0 {
+                        return 0;
+                    }
+                    let c = if shift >= 0 {
+                        (a >> shift as u32) as u64
+                    } else {
+                        (a as u64) << (-shift) as u32
+                    };
+                    (c as u32).min(maxc)
+                }));
+                act.set_repr(Repr::Codes(self.bits));
+            }
+            _ => panic!("tofixed expects accumulators"),
+        }
+    }
+
+    fn size_bits(&self, _r_o: u32) -> u64 {
+        0
+    }
+
+    fn write_payload(&self, out: &mut Vec<u8>) {
+        wire::put_u32(out, self.bits);
+        wire::put_i32(out, self.range_exp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantizes_with_shift_and_clamp() {
+        let stage = ToFixedStage { bits: 3, range_exp: 0 };
+        let mut act = ActBuf::new();
+        act.load_f32(&[0.0; 3], 1);
+        // frac 32: value 0.5 -> code 4 at 3 bits; negatives clamp to 0
+        act.acc.extend_from_slice(&[1i64 << 31, -5, i64::MAX / 2]);
+        act.set_repr(Repr::Acc(32));
+        let mut scratch = Scratch::new();
+        let mut ctrs = vec![Counters::default()];
+        stage.eval_batch(&mut act, &mut scratch, &mut ctrs);
+        assert_eq!(act.repr(), Repr::Codes(3));
+        assert_eq!(act.codes, vec![4, 0, 7]);
+        assert_eq!(ctrs[0].compares, 6);
+    }
+
+    #[test]
+    fn payload_roundtrip() {
+        let stage = ToFixedStage { bits: 8, range_exp: 3 };
+        let mut buf = Vec::new();
+        stage.write_payload(&mut buf);
+        let back = ToFixedStage::read_payload(&mut wire::Reader::new(&buf)).unwrap();
+        assert_eq!(back.bits, 8);
+        assert_eq!(back.range_exp, 3);
+    }
+}

@@ -1,0 +1,69 @@
+//! Layer-boundary encode: accumulators → binary16 codes (priority
+//! encode + shift, see `engine::f16enc`). Applies the ReLU clamp —
+//! downstream float banks assume nonnegative input.
+
+use super::{Stage, StageKind};
+use crate::engine::act::{ActBuf, Repr};
+use crate::engine::counters::Counters;
+use crate::engine::f16enc;
+use crate::engine::scratch::Scratch;
+use crate::lut::wire;
+use crate::quant::f16::F16;
+
+pub struct ToHalfStage;
+
+impl ToHalfStage {
+    pub fn read_payload(_r: &mut wire::Reader) -> wire::Result<ToHalfStage> {
+        Ok(ToHalfStage)
+    }
+}
+
+impl Stage for ToHalfStage {
+    fn kind(&self) -> StageKind {
+        StageKind::ToHalf
+    }
+
+    fn eval_batch(&self, act: &mut ActBuf, _scratch: &mut Scratch, counters: &mut [Counters]) {
+        match act.repr() {
+            Repr::Acc(frac) => {
+                let batch = act.batch();
+                f16enc::acc_rows_to_f16_into(&act.acc, batch, frac, &mut act.half, counters);
+                act.set_repr(Repr::Half);
+            }
+            Repr::F32 => {
+                act.half.clear();
+                act.half
+                    .extend(act.f32s.iter().map(|&v| F16::from_f32(v.max(0.0))));
+                act.set_repr(Repr::Half);
+            }
+            _ => {} // codes/binary16 pass through
+        }
+    }
+
+    fn size_bits(&self, _r_o: u32) -> u64 {
+        0
+    }
+
+    fn write_payload(&self, _out: &mut Vec<u8>) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encodes_accs_with_relu() {
+        let stage = ToHalfStage;
+        let mut act = ActBuf::new();
+        act.load_f32(&[0.0; 2], 1);
+        act.acc.extend_from_slice(&[-9, 1 << 16]);
+        act.set_repr(Repr::Acc(16));
+        let mut scratch = Scratch::new();
+        let mut ctrs = vec![Counters::default()];
+        stage.eval_batch(&mut act, &mut scratch, &mut ctrs);
+        assert_eq!(act.repr(), Repr::Half);
+        assert_eq!(act.half[0].to_f32(), 0.0);
+        assert_eq!(act.half[1].to_f32(), 1.0);
+        assert!(ctrs[0].compares > 0);
+    }
+}

@@ -6,7 +6,8 @@ pub mod bench;
 
 use crate::data::Split;
 use crate::engine::plan::{AffineMode, EnginePlan};
-use crate::engine::LutModel;
+use crate::engine::scratch::Scratch;
+use crate::engine::Compiler;
 use crate::nn::Model;
 use crate::planner::{evaluate_plan, arch_geometry, PlanPoint};
 use crate::quant::FixedFormat;
@@ -34,6 +35,9 @@ pub fn bits_sweep(model: &Model, test: &Split, bits_range: &[u32]) -> Vec<BitsRo
     let x_full = Tensor::new(&[test.len(), 784], test.images.clone());
     let ref_acc = model.accuracy(&x_full, &test.labels);
     let mut rows = Vec::new();
+    // one scratch threaded through every measured plan: the whole sweep
+    // runs on the batched engine path, allocation-free after warm-up
+    let mut scratch = Scratch::new();
     for &bits in bits_range {
         let fmt = FixedFormat::new(bits);
         // reference on quantized input
@@ -46,8 +50,9 @@ pub fn bits_sweep(model: &Model, test: &Split, bits_range: &[u32]) -> Vec<BitsRo
             fallback: AffineMode::Float { planes: 11, m: 1 },
             r_o: 16,
         };
-        let lut = LutModel::compile(model, &plan).expect("linear LUT compiles");
-        let (lut_acc, ctr) = lut.accuracy(&test.images, 784, &test.labels);
+        let lut = Compiler::new(model).plan(&plan).build().expect("linear LUT compiles");
+        let (lut_acc, ctr) =
+            lut.accuracy_scratch(&test.images, 784, &test.labels, &mut scratch);
         ctr.assert_multiplier_less();
         rows.push(BitsRow { bits, lut_acc, ref_quant_acc, ref_acc });
     }
@@ -74,6 +79,8 @@ pub fn tradeoff_rows(
 ) -> Vec<TradeoffRow> {
     let mut rows = Vec::new();
     let mut measured = 0usize;
+    // one scratch reused across every measured plan (batched path)
+    let mut scratch = Scratch::new();
     for point in points {
         let mut row = TradeoffRow {
             point,
@@ -86,8 +93,9 @@ pub fn tradeoff_rows(
         // the host's memory: <= 512 MiB accounting ≈ 2 GiB resident
         let measurable = row.point.materialisable && row.point.size_bits < 1u64 << 32;
         if measurable && measured < max_measured {
-            if let Ok(lut) = LutModel::compile(model, &row.point.plan) {
-                let (acc, ctr) = lut.accuracy(&test.images, 784, &test.labels);
+            if let Ok(lut) = Compiler::new(model).plan(&row.point.plan).build() {
+                let (acc, ctr) =
+                    lut.accuracy_scratch(&test.images, 784, &test.labels, &mut scratch);
                 ctr.assert_multiplier_less();
                 row.measured_acc = Some(acc);
                 row.measured_evals = Some(ctr.lut_evals);

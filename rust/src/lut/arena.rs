@@ -15,6 +15,8 @@
 //! time; evaluation is generic over the entry width and bit-exact in
 //! both (entries are widened to `i64` before accumulation).
 
+use super::wire;
+
 /// Backing storage: narrowed (`i32`) when every entry fits, else `i64`.
 #[derive(Debug)]
 pub enum ArenaStore {
@@ -119,6 +121,87 @@ impl TableArena {
             ArenaStore::I64(v) => v[i],
         }
     }
+
+    /// Serialize the arena (store width preserved — the round-trip is
+    /// bit-exact, including the i32-vs-i64 narrowing decision).
+    pub fn write_wire(&self, out: &mut Vec<u8>) {
+        wire::put_u64(out, self.row_len as u64);
+        wire::put_u64(out, self.offsets.len() as u64);
+        for &o in &self.offsets {
+            wire::put_u64(out, o as u64);
+        }
+        match &self.store {
+            ArenaStore::I32(v) => {
+                wire::put_u8(out, 0);
+                wire::put_u64(out, v.len() as u64);
+                for &e in v {
+                    wire::put_i32(out, e);
+                }
+            }
+            ArenaStore::I64(v) => {
+                wire::put_u8(out, 1);
+                wire::put_u64(out, v.len() as u64);
+                for &e in v {
+                    wire::put_i64(out, e);
+                }
+            }
+        }
+    }
+
+    /// Deserialize an arena written by [`TableArena::write_wire`].
+    pub fn read_wire(r: &mut wire::Reader) -> wire::Result<TableArena> {
+        // cap: entries bounded by the materialisation limit (i32 floor)
+        let entry_cap = super::MAX_TABLE_BYTES / 4;
+        let row_len = r.len_capped(entry_cap, "arena row_len")?;
+        if row_len == 0 {
+            // chunk_rows divides by row_len; banks never build empty rows
+            return wire::err("arena row_len must be >= 1");
+        }
+        let n_off = r.len_capped(entry_cap, "arena offsets")?;
+        if n_off == 0 {
+            return wire::err("arena needs at least one offset");
+        }
+        let mut offsets = Vec::with_capacity(n_off);
+        for _ in 0..n_off {
+            offsets.push(r.len_capped(entry_cap, "arena offset")?);
+        }
+        if offsets[0] != 0 || offsets.windows(2).any(|w| w[0] > w[1]) {
+            return wire::err("arena offsets must start at 0 and be non-decreasing");
+        }
+        let tag = r.u8()?;
+        let total = r.len_capped(entry_cap, "arena entries")?;
+        if total != *offsets.last().unwrap() {
+            return wire::err("arena entry count disagrees with offsets");
+        }
+        if total % row_len != 0 {
+            return wire::err("arena entries not divisible by row_len");
+        }
+        // bulk decode: one bounds check for the whole entry block, then
+        // chunked conversion — arenas dominate artifact size, and the
+        // deployment start-up path loads hundreds of MiB through here
+        let store = match tag {
+            0 => {
+                let bytes = r.take(total * 4)?;
+                let mut v = Vec::with_capacity(total);
+                v.extend(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+                );
+                ArenaStore::I32(v)
+            }
+            1 => {
+                let bytes = r.take(total * 8)?;
+                let mut v = Vec::with_capacity(total);
+                v.extend(bytes.chunks_exact(8).map(|c| {
+                    i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+                }));
+                ArenaStore::I64(v)
+            }
+            other => return wire::err(format!("unknown arena store tag {other}")),
+        };
+        Ok(TableArena { store, offsets, row_len })
+    }
 }
 
 /// Entry width the evaluation loops are generic over.
@@ -214,6 +297,35 @@ mod tests {
     fn widen_roundtrips() {
         assert_eq!((-7i32).widen(), -7i64);
         assert_eq!(7i64.widen(), 7);
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_store_width() {
+        for tables in [
+            vec![vec![1i64, -2, 3, 4], vec![5, 6]],
+            vec![vec![0i64, i64::from(i32::MAX) + 1]],
+        ] {
+            let row_len = tables[0].len().min(2);
+            let a = TableArena::from_tables(&tables, row_len);
+            let mut buf = Vec::new();
+            a.write_wire(&mut buf);
+            let back = TableArena::read_wire(&mut wire::Reader::new(&buf)).unwrap();
+            assert_eq!(back.is_narrow(), a.is_narrow());
+            assert_eq!(back.row_len(), a.row_len());
+            assert_eq!(back.num_chunks(), a.num_chunks());
+            for i in 0..a.total_entries() {
+                assert_eq!(back.entry(i), a.entry(i));
+            }
+        }
+    }
+
+    #[test]
+    fn wire_rejects_truncation() {
+        let a = TableArena::from_tables(&[vec![1i64, 2, 3, 4]], 2);
+        let mut buf = Vec::new();
+        a.write_wire(&mut buf);
+        buf.truncate(buf.len() - 3);
+        assert!(TableArena::read_wire(&mut wire::Reader::new(&buf)).is_err());
     }
 
     #[test]

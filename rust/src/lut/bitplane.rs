@@ -21,9 +21,29 @@
 //!   m=14 → 42 packed bits) takes this path.
 
 use super::arena::{with_arena, ArenaEntry, TableArena};
-use super::{to_acc, LutError, Partition, MAX_TABLE_BYTES};
+use super::{to_acc, wire, LutError, Partition, MAX_TABLE_BYTES};
 use crate::engine::counters::Counters;
 use crate::quant::FixedFormat;
+
+/// Packed-plane spread table for `(n, stride)`: `spread[code] =
+/// Σ_j bit_j(code) << (j·stride)`; `None` when packing does not fit in
+/// a u64. Shared by [`DenseBitplaneLut::build`] and the artifact
+/// decoder so both construct byte-identical fast paths.
+fn spread_table(n: u32, stride: u32) -> Option<Vec<u64>> {
+    if n <= 8 && n * stride <= 64 && stride >= 1 {
+        Some(
+            (0..(1u32 << n))
+                .map(|code| {
+                    (0..n)
+                        .map(|j| (((code >> j) & 1) as u64) << (j * stride))
+                        .sum()
+                })
+                .collect(),
+        )
+    } else {
+        None
+    }
+}
 
 /// One `2^m x p` table per chunk, shared across all n bitplanes.
 #[derive(Debug)]
@@ -86,21 +106,8 @@ impl DenseBitplaneLut {
         }
         let bias_acc = b.iter().map(|&v| to_acc(v as f64)).collect();
         let arena = TableArena::from_tables(&tables, p);
-        let n = fmt.bits;
         let stride = partition.max_chunk() as u32;
-        let spread = if n <= 8 && n * stride <= 64 && stride >= 1 {
-            Some(
-                (0..(1u32 << n))
-                    .map(|code| {
-                        (0..n)
-                            .map(|j| (((code >> j) & 1) as u64) << (j * stride))
-                            .sum()
-                    })
-                    .collect(),
-            )
-        } else {
-            None
-        };
+        let spread = spread_table(fmt.bits, stride);
         Ok(DenseBitplaneLut { partition, fmt, p, arena, bias_acc, spread, stride })
     }
 
@@ -114,46 +121,50 @@ impl DenseBitplaneLut {
     /// by the plane, add. `n·k` lookups, zero multiplies.
     pub fn eval_codes(&self, codes: &[u32], ctr: &mut Counters) -> Vec<i64> {
         let mut acc = vec![0i64; self.p];
-        self.eval_batch(codes, 1, &mut acc, ctr);
+        self.eval_batch(codes, 1, &mut acc, std::slice::from_mut(ctr));
         acc
     }
 
     /// Batched evaluation: `codes` row-major `batch x q`, `out`
-    /// `batch x p` (overwritten with bias-initialised accumulators).
-    /// Chunk-outer / sample-inner; counters accumulate per batch.
-    /// Bit-exact with per-sample evaluation — identical adds in
-    /// identical per-sample order.
-    pub fn eval_batch(&self, codes: &[u32], batch: usize, out: &mut [i64], ctr: &mut Counters) {
+    /// `batch x p` (overwritten with bias-initialised accumulators),
+    /// `ctrs` one counter row per sample (shift-adds are data-dependent
+    /// and attributed to the exact sample that incurred them).
+    /// Chunk-outer / sample-inner. Bit-exact with per-sample
+    /// evaluation — identical adds in identical per-sample order.
+    pub fn eval_batch(&self, codes: &[u32], batch: usize, out: &mut [i64], ctrs: &mut [Counters]) {
         let q = self.partition.q;
         let p = self.p;
         assert_eq!(codes.len(), batch * q);
         assert_eq!(out.len(), batch * p);
+        assert_eq!(ctrs.len(), batch);
         for s in 0..batch {
             out[s * p..(s + 1) * p].copy_from_slice(&self.bias_acc);
         }
-        let shift_adds =
-            with_arena!(self.arena, E => self.eval_batch_impl::<E>(codes, batch, out));
+        with_arena!(self.arena, E => self.eval_batch_impl::<E>(codes, batch, out, ctrs));
         let n = self.fmt.bits as u64;
-        ctr.adds += (batch * p) as u64; // bias adds
-        // every plane of every chunk is charged a lookup (hardware reads
-        // the row even when the index is all-zero and skipped here)
-        ctr.lut_evals += n * self.partition.k() as u64 * batch as u64;
-        ctr.shift_adds += shift_adds;
+        let k = self.partition.k() as u64;
+        for ctr in ctrs.iter_mut() {
+            ctr.adds += p as u64; // bias adds
+            // every plane of every chunk is charged a lookup (hardware
+            // reads the row even when the index is all-zero and skipped)
+            ctr.lut_evals += n * k;
+        }
     }
 
-    /// Returns the shift-add count (rows actually gathered × p).
+    /// Records the data-dependent shift-adds (rows actually gathered
+    /// × p) on the owning sample's counter row.
     fn eval_batch_impl<E: ArenaEntry>(
         &self,
         codes: &[u32],
         batch: usize,
         out: &mut [i64],
-    ) -> u64 {
+        ctrs: &mut [Counters],
+    ) {
         let q = self.partition.q;
         let p = self.p;
         let n = self.fmt.bits as usize;
         let stride = self.stride;
         let mask = if stride >= 64 { u64::MAX } else { (1u64 << stride) - 1 };
-        let mut shift_adds = 0u64;
         for (c, chunk) in self.partition.chunks.iter().enumerate() {
             let table = self.arena.chunk_slice::<E>(c);
             // fast path for singleton chunks (the paper's k = q, m_i = 1
@@ -169,7 +180,7 @@ impl DenseBitplaneLut {
                         for (a, r) in acc.iter_mut().zip(row) {
                             *a += r.widen() << j;
                         }
-                        shift_adds += p as u64;
+                        ctrs[s].shift_adds += p as u64;
                         code &= code - 1; // clear lowest set bit
                     }
                 }
@@ -198,7 +209,7 @@ impl DenseBitplaneLut {
                         for (a, r) in acc.iter_mut().zip(row) {
                             *a += r.widen() << j;
                         }
-                        shift_adds += p as u64;
+                        ctrs[s].shift_adds += p as u64;
                     }
                 }
                 continue;
@@ -224,11 +235,10 @@ impl DenseBitplaneLut {
                     for (a, r) in acc.iter_mut().zip(row) {
                         *a += r.widen() << j;
                     }
-                    shift_adds += p as u64;
+                    ctrs[s].shift_adds += p as u64;
                 }
             }
         }
-        shift_adds
     }
 
     /// Quantize then evaluate.
@@ -240,6 +250,42 @@ impl DenseBitplaneLut {
     /// Total size in bits at `r_o`-bit entries: Σ_i 2^{m_i}·p·r_o.
     pub fn size_bits(&self, r_o: u32) -> u64 {
         self.arena.total_entries() as u64 * r_o as u64
+    }
+
+    /// Serialize for the `.ltm` artifact. The packed-plane spread table
+    /// is derived state and is rebuilt on load.
+    pub fn write_wire(&self, out: &mut Vec<u8>) {
+        self.partition.write_wire(out);
+        wire::put_u32(out, self.fmt.bits);
+        wire::put_u64(out, self.p as u64);
+        self.arena.write_wire(out);
+        wire::put_i64_seq(out, &self.bias_acc);
+    }
+
+    /// Deserialize a bank written by [`DenseBitplaneLut::write_wire`].
+    pub fn read_wire(r: &mut wire::Reader) -> wire::Result<DenseBitplaneLut> {
+        let partition = Partition::read_wire(r)?;
+        let bits = r.u32()?;
+        if !(1..=16).contains(&bits) {
+            return wire::err(format!("bitplane: bad input bits {bits}"));
+        }
+        let fmt = FixedFormat::new(bits);
+        let p = r.len_capped(1 << 24, "bitplane p")?;
+        let arena = TableArena::read_wire(r)?;
+        let bias_acc = r.i64_seq(1 << 24, "bitplane bias")?;
+        if arena.row_len() != p || arena.num_chunks() != partition.k() || bias_acc.len() != p {
+            return wire::err("bitplane: arena/bias shape disagrees with partition");
+        }
+        // every chunk table must hold exactly 2^m_i rows (plane indexes
+        // gather up to row 2^m_i - 1 at eval time)
+        for (c, chunk) in partition.chunks.iter().enumerate() {
+            if chunk.len() >= 28 || arena.chunk_rows(c) != 1usize << chunk.len() {
+                return wire::err(format!("bitplane: chunk {c} row count mismatch"));
+            }
+        }
+        let stride = partition.max_chunk() as u32;
+        let spread = spread_table(fmt.bits, stride);
+        Ok(DenseBitplaneLut { partition, fmt, p, arena, bias_acc, spread, stride })
     }
 }
 
@@ -378,19 +424,49 @@ mod tests {
                 .map(|_| rng.below(fmt.levels() as usize) as u32)
                 .collect();
             let mut out = vec![0i64; batch * p];
-            let mut cb = Counters::default();
+            let mut cb = vec![Counters::default(); batch];
             lut.eval_batch(&codes, batch, &mut out, &mut cb);
-            let mut cs = Counters::default();
             for s in 0..batch {
+                let mut cs = Counters::default();
                 let single = lut.eval_codes(&codes[s * q..(s + 1) * q], &mut cs);
                 assert_eq!(
                     &out[s * p..(s + 1) * p],
                     single.as_slice(),
                     "m={m} bits={bits} sample {s}"
                 );
+                assert_eq!(cb[s], cs, "m={m} bits={bits}: sample {s} counters diverge");
+                cb[s].assert_multiplier_less();
             }
-            assert_eq!(cb, cs, "m={m} bits={bits}: counter totals diverge");
-            cb.assert_multiplier_less();
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_rebuilds_packed_path() {
+        let (p, q) = (5, 14);
+        let (w, b, _) = random_case(p, q, 63);
+        for (m, bits) in [(14, 3), (4, 9)] {
+            let fmt = FixedFormat::new(bits);
+            let lut =
+                DenseBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, m), fmt)
+                    .unwrap();
+            let mut buf = Vec::new();
+            lut.write_wire(&mut buf);
+            let back =
+                DenseBitplaneLut::read_wire(&mut crate::lut::wire::Reader::new(&buf))
+                    .unwrap();
+            assert_eq!(back.spread.is_some(), lut.spread.is_some(), "m={m} bits={bits}");
+            assert_eq!(back.stride, lut.stride);
+            assert_eq!(back.bias_acc, lut.bias_acc);
+            let mut rng = Rng::new(64);
+            let codes: Vec<u32> =
+                (0..q).map(|_| rng.below(fmt.levels() as usize) as u32).collect();
+            let mut c1 = Counters::default();
+            let mut c2 = Counters::default();
+            assert_eq!(
+                lut.eval_codes(&codes, &mut c1),
+                back.eval_codes(&codes, &mut c2)
+            );
+            assert_eq!(c1, c2);
         }
     }
 

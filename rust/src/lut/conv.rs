@@ -17,7 +17,7 @@
 //! caller's scratch (zero per-call allocations).
 
 use super::arena::{with_arena, ArenaEntry, TableArena};
-use super::{to_acc, LutError, Partition, MAX_TABLE_BYTES};
+use super::{to_acc, wire, LutError, Partition, MAX_TABLE_BYTES};
 use crate::engine::counters::Counters;
 use crate::quant::FixedFormat;
 
@@ -118,39 +118,40 @@ impl ConvLut {
     pub fn eval_codes(&self, codes: &[u32], ctr: &mut Counters) -> Vec<i64> {
         let mut out = vec![0i64; self.h * self.w * self.cout];
         let mut pad = Vec::new();
-        self.eval_batch(codes, 1, &mut out, &mut pad, ctr);
+        self.eval_batch(codes, 1, &mut out, &mut pad, std::slice::from_mut(ctr));
         out
     }
 
     /// Batched evaluation: `codes` row-major `batch x (h·w·cin)`, `out`
-    /// `batch x (h·w·cout)` (overwritten). `pad` is caller-provided
-    /// scratch for the padded accumulator images (resized as needed and
-    /// reused across calls — zero steady-state allocations). Loop order
-    /// is channel-outer / sample-inner so each channel's shared table is
-    /// streamed once per batch.
+    /// `batch x (h·w·cout)` (overwritten), `ctrs` one counter row per
+    /// sample. `pad` is caller-provided scratch for the padded
+    /// accumulator images (resized as needed and reused across calls —
+    /// zero steady-state allocations). Loop order is channel-outer /
+    /// sample-inner so each channel's shared table is streamed once per
+    /// batch.
     pub fn eval_batch(
         &self,
         codes: &[u32],
         batch: usize,
         out: &mut [i64],
         pad: &mut Vec<i64>,
-        ctr: &mut Counters,
+        ctrs: &mut [Counters],
     ) {
         let (h, w, r) = (self.h, self.w, self.r);
         assert_eq!(codes.len(), batch * h * w * self.cin);
         assert_eq!(out.len(), batch * h * w * self.cout);
+        assert_eq!(ctrs.len(), batch);
         let (ph, pw) = (h + 2 * r, w + 2 * r);
         let pimg = ph * pw * self.cout;
         pad.clear();
         pad.resize(batch * pimg, 0);
-        let shift_adds =
-            with_arena!(self.arena, E => self.eval_batch_impl::<E>(codes, batch, pad));
+        with_arena!(self.arena, E => self.eval_batch_impl::<E>(codes, batch, pad, ctrs));
         super::crop_add_bias(pad, out, batch, h, w, r, self.cout, &self.bias_acc);
         let blocks = (h / self.m) * (w / self.m);
-        ctr.lut_evals +=
-            (blocks * self.fmt.bits as usize * self.cin * batch) as u64;
-        ctr.shift_adds += shift_adds;
-        ctr.adds += (batch * h * w * self.cout) as u64;
+        for ctr in ctrs.iter_mut() {
+            ctr.lut_evals += (blocks * self.fmt.bits as usize * self.cin) as u64;
+            ctr.adds += (h * w * self.cout) as u64;
+        }
     }
 
     fn eval_batch_impl<E: ArenaEntry>(
@@ -158,14 +159,14 @@ impl ConvLut {
         codes: &[u32],
         batch: usize,
         pad: &mut [i64],
-    ) -> u64 {
+        ctrs: &mut [Counters],
+    ) {
         let (h, w, r, m, pe) = (self.h, self.w, self.r, self.m, self.pe);
         let n = self.fmt.bits;
         let (ph, pw) = (h + 2 * r, w + 2 * r);
         let pimg = ph * pw * self.cout;
         let simg = h * w * self.cin;
         let patch = pe * pe * self.cout;
-        let mut shift_adds = 0u64;
         for ci in 0..self.cin {
             let table = self.arena.chunk_slice::<E>(ci);
             for s in 0..batch {
@@ -187,7 +188,7 @@ impl ConvLut {
                             }
                             if idx == 0 {
                                 // zero row: skipped gather, lookup still
-                                // charged (per batch, in eval_batch)
+                                // charged (per sample, in eval_batch)
                                 continue;
                             }
                             let prow = &table[idx * patch..(idx + 1) * patch];
@@ -203,13 +204,12 @@ impl ConvLut {
                                     *d += t.widen() << j;
                                 }
                             }
-                            shift_adds += (pe * pe * self.cout) as u64;
+                            ctrs[s].shift_adds += (pe * pe * self.cout) as u64;
                         }
                     }
                 }
             }
         }
-        shift_adds
     }
 
     /// Quantize f32 NHWC input (values in [0,1]) then evaluate.
@@ -227,6 +227,50 @@ impl ConvLut {
     /// cin tables × 2^(m²) rows × (m+2r)²·cout entries.
     pub fn size_bits(&self, r_o: u32) -> u64 {
         self.arena.total_entries() as u64 * r_o as u64
+    }
+
+    /// Serialize for the `.ltm` artifact.
+    pub fn write_wire(&self, out: &mut Vec<u8>) {
+        for v in [self.h, self.w, self.cin, self.cout, self.r, self.m] {
+            wire::put_u64(out, v as u64);
+        }
+        wire::put_u32(out, self.fmt.bits);
+        self.arena.write_wire(out);
+        wire::put_i64_seq(out, &self.bias_acc);
+    }
+
+    /// Deserialize a bank written by [`ConvLut::write_wire`].
+    pub fn read_wire(r: &mut wire::Reader) -> wire::Result<ConvLut> {
+        const DIM_CAP: usize = 1 << 20;
+        let h = r.len_capped(DIM_CAP, "conv h")?;
+        let w = r.len_capped(DIM_CAP, "conv w")?;
+        let cin = r.len_capped(DIM_CAP, "conv cin")?;
+        let cout = r.len_capped(DIM_CAP, "conv cout")?;
+        let rr = r.len_capped(DIM_CAP, "conv r")?;
+        let m = r.len_capped(DIM_CAP, "conv m")?;
+        let bits = r.u32()?;
+        if !(1..=16).contains(&bits) {
+            return wire::err(format!("conv: bad input bits {bits}"));
+        }
+        if m == 0 || h == 0 || w == 0 || h % m != 0 || w % m != 0 {
+            return wire::err("conv: block does not tile the image");
+        }
+        let fmt = FixedFormat::new(bits);
+        let arena = TableArena::read_wire(r)?;
+        let bias_acc = r.i64_seq(DIM_CAP, "conv bias")?;
+        let pe = m + 2 * rr;
+        if arena.num_chunks() != cin
+            || arena.row_len() != pe * pe * cout
+            || bias_acc.len() != cout
+        {
+            return wire::err("conv: arena/bias shape disagrees with geometry");
+        }
+        // every channel table must hold exactly 2^(m²) rows
+        let a = m * m;
+        if a >= 24 || (0..cin).any(|c| arena.chunk_rows(c) != 1usize << a) {
+            return wire::err("conv: channel table row count mismatch");
+        }
+        Ok(ConvLut { h, w, cin, cout, r: rr, m, fmt, arena, pe, bias_acc })
     }
 }
 
@@ -334,16 +378,37 @@ mod tests {
             (0..batch * simg).map(|_| rng.below(1 << bits) as u32).collect();
         let mut out = vec![0i64; batch * h * w * cout];
         let mut pad = Vec::new();
-        let mut cb = Counters::default();
+        let mut cb = vec![Counters::default(); batch];
         lut.eval_batch(&codes, batch, &mut out, &mut pad, &mut cb);
-        let mut cs = Counters::default();
         let oimg = h * w * cout;
         for s in 0..batch {
+            let mut cs = Counters::default();
             let single = lut.eval_codes(&codes[s * simg..(s + 1) * simg], &mut cs);
             assert_eq!(&out[s * oimg..(s + 1) * oimg], single.as_slice(), "sample {s}");
+            assert_eq!(cb[s], cs, "per-sample counter attribution at sample {s}");
+            cb[s].assert_multiplier_less();
         }
-        assert_eq!(cb, cs, "batched counters must equal summed per-sample counters");
-        cb.assert_multiplier_less();
+    }
+
+    #[test]
+    fn wire_roundtrip_is_bit_exact() {
+        let (h, w, cin, cout, r, m, bits) = (4, 4, 2, 3, 1, 2, 3);
+        let fs = 2 * r + 1;
+        let mut rng = Rng::new(95);
+        let filter: Vec<f32> =
+            (0..fs * fs * cin * cout).map(|_| rng.normal() * 0.3).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+        let fmt = FixedFormat::new(bits);
+        let lut = ConvLut::build(&filter, &bias, h, w, cin, cout, r, m, fmt).unwrap();
+        let mut buf = Vec::new();
+        lut.write_wire(&mut buf);
+        let back = ConvLut::read_wire(&mut crate::lut::wire::Reader::new(&buf)).unwrap();
+        let codes: Vec<u32> =
+            (0..h * w * cin).map(|_| rng.below(1 << bits) as u32).collect();
+        let mut c1 = Counters::default();
+        let mut c2 = Counters::default();
+        assert_eq!(lut.eval_codes(&codes, &mut c1), back.eval_codes(&codes, &mut c2));
+        assert_eq!(c1, c2);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 use super::arena::{with_arena, ArenaEntry, TableArena};
 use super::floatplane::FACC;
-use super::{LutError, MAX_TABLE_BYTES};
+use super::{wire, LutError, MAX_TABLE_BYTES};
 use crate::engine::counters::Counters;
 use crate::quant::f16::{F16, EXP_BIAS, FRAC_BITS, SIG_BITS};
 
@@ -47,6 +47,13 @@ impl ConvFloatLut {
         let fs = 2 * r + 1;
         assert_eq!(filter.len(), fs * fs * cin * cout);
         assert_eq!(bias.len(), cout);
+        // loud failure, never a silent clamp (matches the dense float
+        // bank; keeps every compiled model `.ltm`-loadable)
+        if planes == 0 || planes > SIG_BITS {
+            return Err(LutError::BadConfig(format!(
+                "float planes {planes} outside 1..={SIG_BITS}"
+            )));
+        }
         let rows = 1usize << 6; // 1 mantissa bit + 5 exponent bits
         let pe = fs; // patch edge for m=1
         let patch = pe * pe * cout;
@@ -102,35 +109,37 @@ impl ConvFloatLut {
     pub fn eval_f16(&self, x: &[F16], ctr: &mut Counters) -> Vec<i64> {
         let mut out = vec![0i64; self.h * self.w * self.cout];
         let mut pad = Vec::new();
-        self.eval_batch_f16(x, 1, &mut out, &mut pad, ctr);
+        self.eval_batch_f16(x, 1, &mut out, &mut pad, std::slice::from_mut(ctr));
         out
     }
 
     /// Batched evaluation: `x` row-major `batch x (h·w·cin)`, `out`
-    /// `batch x (h·w·cout)` (overwritten). `pad` is caller-provided
-    /// scratch reused across calls. Channel-outer / sample-inner.
+    /// `batch x (h·w·cout)` (overwritten), `ctrs` one counter row per
+    /// sample. `pad` is caller-provided scratch reused across calls.
+    /// Channel-outer / sample-inner.
     pub fn eval_batch_f16(
         &self,
         x: &[F16],
         batch: usize,
         out: &mut [i64],
         pad: &mut Vec<i64>,
-        ctr: &mut Counters,
+        ctrs: &mut [Counters],
     ) {
         let (h, w, r) = (self.h, self.w, self.r);
         assert_eq!(x.len(), batch * h * w * self.cin);
         assert_eq!(out.len(), batch * h * w * self.cout);
+        assert_eq!(ctrs.len(), batch);
         let (ph, pw) = (h + 2 * r, w + 2 * r);
         let pimg = ph * pw * self.cout;
         pad.clear();
         pad.resize(batch * pimg, 0);
-        let shift_adds =
-            with_arena!(self.arena, E => self.eval_batch_impl::<E>(x, batch, pad));
+        with_arena!(self.arena, E => self.eval_batch_impl::<E>(x, batch, pad, ctrs));
         super::crop_add_bias(pad, out, batch, h, w, r, self.cout, &self.bias_acc);
         let planes = self.planes.min(SIG_BITS);
-        ctr.lut_evals += (h * w * self.cin * planes as usize * batch) as u64;
-        ctr.shift_adds += shift_adds;
-        ctr.adds += (batch * h * w * self.cout) as u64;
+        for ctr in ctrs.iter_mut() {
+            ctr.lut_evals += (h * w * self.cin * planes as usize) as u64;
+            ctr.adds += (h * w * self.cout) as u64;
+        }
     }
 
     fn eval_batch_impl<E: ArenaEntry>(
@@ -138,7 +147,8 @@ impl ConvFloatLut {
         x: &[F16],
         batch: usize,
         pad: &mut [i64],
-    ) -> u64 {
+        ctrs: &mut [Counters],
+    ) {
         let (h, w, r) = (self.h, self.w, self.r);
         let fs = 2 * r + 1;
         let pe = fs;
@@ -147,7 +157,6 @@ impl ConvFloatLut {
         let pimg = ph * pw * self.cout;
         let simg = h * w * self.cin;
         let lo_plane = SIG_BITS - self.planes.min(SIG_BITS);
-        let mut shift_adds = 0u64;
         for ci in 0..self.cin {
             let table = self.arena.chunk_slice::<E>(ci);
             for s in 0..batch {
@@ -183,19 +192,57 @@ impl ConvFloatLut {
                                     *d += t.widen() << j;
                                 }
                             }
-                            shift_adds += patch as u64;
+                            ctrs[s].shift_adds += patch as u64;
                             sig &= sig - 1;
                         }
                     }
                 }
             }
         }
-        shift_adds
     }
 
     /// Size in bits at r_o-bit entries.
     pub fn size_bits(&self, r_o: u32) -> u64 {
         self.arena.total_entries() as u64 * r_o as u64
+    }
+
+    /// Serialize for the `.ltm` artifact.
+    pub fn write_wire(&self, out: &mut Vec<u8>) {
+        for v in [self.h, self.w, self.cin, self.cout, self.r] {
+            wire::put_u64(out, v as u64);
+        }
+        wire::put_u32(out, self.planes);
+        self.arena.write_wire(out);
+        wire::put_i64_seq(out, &self.bias_acc);
+    }
+
+    /// Deserialize a bank written by [`ConvFloatLut::write_wire`].
+    pub fn read_wire(r: &mut wire::Reader) -> wire::Result<ConvFloatLut> {
+        const DIM_CAP: usize = 1 << 20;
+        let h = r.len_capped(DIM_CAP, "convfloat h")?;
+        let w = r.len_capped(DIM_CAP, "convfloat w")?;
+        let cin = r.len_capped(DIM_CAP, "convfloat cin")?;
+        let cout = r.len_capped(DIM_CAP, "convfloat cout")?;
+        let rr = r.len_capped(DIM_CAP, "convfloat r")?;
+        let planes = r.u32()?;
+        if planes == 0 || planes > SIG_BITS {
+            return wire::err(format!("convfloat: bad plane count {planes}"));
+        }
+        let arena = TableArena::read_wire(r)?;
+        let bias_acc = r.i64_seq(DIM_CAP, "convfloat bias")?;
+        let pe = 2 * rr + 1;
+        if arena.num_chunks() != cin
+            || arena.row_len() != pe * pe * cout
+            || bias_acc.len() != cout
+        {
+            return wire::err("convfloat: arena/bias shape disagrees with geometry");
+        }
+        // every channel table must hold the fixed 2^6 (mantissa-bit ×
+        // exponent) rows the m=1 float index gathers from
+        if (0..cin).any(|c| arena.chunk_rows(c) != 1 << 6) {
+            return wire::err("convfloat: channel table row count mismatch");
+        }
+        Ok(ConvFloatLut { h, w, cin, cout, r: rr, planes, arena, bias_acc })
     }
 }
 
@@ -276,16 +323,38 @@ mod tests {
             (0..batch * simg).map(|_| F16::from_f32(rng.f32() * 4.0)).collect();
         let mut out = vec![0i64; batch * h * w * cout];
         let mut pad = Vec::new();
-        let mut cb = Counters::default();
+        let mut cb = vec![Counters::default(); batch];
         lut.eval_batch_f16(&x, batch, &mut out, &mut pad, &mut cb);
-        let mut cs = Counters::default();
         let oimg = h * w * cout;
         for s in 0..batch {
+            let mut cs = Counters::default();
             let single = lut.eval_f16(&x[s * simg..(s + 1) * simg], &mut cs);
             assert_eq!(&out[s * oimg..(s + 1) * oimg], single.as_slice(), "sample {s}");
+            assert_eq!(cb[s], cs, "per-sample counter attribution at sample {s}");
+            cb[s].assert_multiplier_less();
         }
-        assert_eq!(cb, cs);
-        cb.assert_multiplier_less();
+    }
+
+    #[test]
+    fn wire_roundtrip_is_bit_exact() {
+        let (h, w, cin, cout, r) = (4, 4, 2, 2, 1);
+        let fs = 2 * r + 1;
+        let mut rng = Rng::new(97);
+        let filter: Vec<f32> =
+            (0..fs * fs * cin * cout).map(|_| rng.normal() * 0.3).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+        let lut =
+            ConvFloatLut::build(&filter, &bias, h, w, cin, cout, r, SIG_BITS).unwrap();
+        let mut buf = Vec::new();
+        lut.write_wire(&mut buf);
+        let back =
+            ConvFloatLut::read_wire(&mut crate::lut::wire::Reader::new(&buf)).unwrap();
+        let x: Vec<F16> =
+            (0..h * w * cin).map(|_| F16::from_f32(rng.f32() * 4.0)).collect();
+        let mut c1 = Counters::default();
+        let mut c2 = Counters::default();
+        assert_eq!(lut.eval_f16(&x, &mut c1), back.eval_f16(&x, &mut c2));
+        assert_eq!(c1, c2);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! so each table is streamed once per batch, not once per sample.
 
 use super::arena::{with_arena, ArenaEntry, TableArena};
-use super::{to_acc, LutError, Partition, MAX_TABLE_BYTES};
+use super::{to_acc, wire, LutError, Partition, MAX_TABLE_BYTES};
 use crate::engine::counters::Counters;
 use crate::quant::FixedFormat;
 
@@ -97,23 +97,30 @@ impl DenseWholeLut {
     /// mix (and would record any multiply — there are none).
     pub fn eval_codes(&self, codes: &[u32], ctr: &mut Counters) -> Vec<i64> {
         let mut acc = vec![0i64; self.p];
-        self.eval_batch(codes, 1, &mut acc, ctr);
+        self.eval_batch(codes, 1, &mut acc, std::slice::from_mut(ctr));
         acc
     }
 
     /// Batched evaluation over `batch` samples: `codes` is row-major
-    /// `batch x q`, `out` is `batch x p` (overwritten). Loop order is
-    /// *chunk-outer, sample-inner* — each chunk's table is streamed once
-    /// per batch. Bit-exact with per-sample [`DenseWholeLut::eval_codes`]
-    /// (integer adds in identical per-sample order), zero allocations.
-    pub fn eval_batch(&self, codes: &[u32], batch: usize, out: &mut [i64], ctr: &mut Counters) {
+    /// `batch x q`, `out` is `batch x p` (overwritten), `ctrs` is one
+    /// counter row per sample (exact per-sample attribution). Loop order
+    /// is *chunk-outer, sample-inner* — each chunk's table is streamed
+    /// once per batch. Bit-exact with per-sample
+    /// [`DenseWholeLut::eval_codes`] (integer adds in identical
+    /// per-sample order), zero allocations.
+    pub fn eval_batch(&self, codes: &[u32], batch: usize, out: &mut [i64], ctrs: &mut [Counters]) {
         assert_eq!(codes.len(), batch * self.partition.q);
         assert_eq!(out.len(), batch * self.p);
+        assert_eq!(ctrs.len(), batch);
         out.fill(0);
         with_arena!(self.arena, E => self.eval_batch_impl::<E>(codes, batch, out));
-        // counters accumulate per batch, not per row, on the hot path
-        ctr.lut_evals += (self.partition.k() * batch) as u64;
-        ctr.adds += (self.partition.k() * batch * self.p) as u64;
+        // whole-code op counts are uniform per sample: k lookups and
+        // k·p adds each — attributed outside the gather loop
+        let k = self.partition.k() as u64;
+        for ctr in ctrs.iter_mut() {
+            ctr.lut_evals += k;
+            ctr.adds += k * self.p as u64;
+        }
     }
 
     fn eval_batch_impl<E: ArenaEntry>(&self, codes: &[u32], batch: usize, out: &mut [i64]) {
@@ -148,6 +155,38 @@ impl DenseWholeLut {
     /// artifact of the software simulation, see DESIGN notes in README).
     pub fn size_bits(&self, r_o: u32) -> u64 {
         self.arena.total_entries() as u64 * r_o as u64
+    }
+
+    /// Serialize for the `.ltm` artifact (partition, format, arena).
+    pub fn write_wire(&self, out: &mut Vec<u8>) {
+        self.partition.write_wire(out);
+        wire::put_u32(out, self.fmt.bits);
+        wire::put_u64(out, self.p as u64);
+        self.arena.write_wire(out);
+    }
+
+    /// Deserialize a bank written by [`DenseWholeLut::write_wire`].
+    pub fn read_wire(r: &mut wire::Reader) -> wire::Result<DenseWholeLut> {
+        let partition = Partition::read_wire(r)?;
+        let bits = r.u32()?;
+        if !(1..=16).contains(&bits) {
+            return wire::err(format!("dense whole: bad input bits {bits}"));
+        }
+        let fmt = FixedFormat::new(bits);
+        let p = r.len_capped(1 << 24, "dense whole p")?;
+        let arena = TableArena::read_wire(r)?;
+        if arena.row_len() != p || arena.num_chunks() != partition.k() {
+            return wire::err("dense whole: arena shape disagrees with partition");
+        }
+        // every chunk must hold exactly 2^(m_i·bits) rows, else a code
+        // in range would gather out of bounds at eval time
+        for (c, chunk) in partition.chunks.iter().enumerate() {
+            let idx_bits = chunk.len() as u32 * bits;
+            if idx_bits >= 28 || arena.chunk_rows(c) != 1usize << idx_bits {
+                return wire::err(format!("dense whole: chunk {c} row count mismatch"));
+            }
+        }
+        Ok(DenseWholeLut { partition, fmt, p, arena })
     }
 }
 
@@ -267,15 +306,37 @@ mod tests {
         let codes: Vec<u32> =
             (0..batch * q).map(|_| rng.below(fmt.levels() as usize) as u32).collect();
         let mut out = vec![0i64; batch * p];
-        let mut cb = Counters::default();
+        let mut cb = vec![Counters::default(); batch];
         lut.eval_batch(&codes, batch, &mut out, &mut cb);
-        let mut cs = Counters::default();
         for s in 0..batch {
+            let mut cs = Counters::default();
             let single = lut.eval_codes(&codes[s * q..(s + 1) * q], &mut cs);
             assert_eq!(&out[s * p..(s + 1) * p], single.as_slice(), "sample {s}");
+            assert_eq!(cb[s], cs, "per-sample counter attribution at sample {s}");
+            cb[s].assert_multiplier_less();
         }
-        assert_eq!(cb, cs, "batched counters must equal summed per-sample counters");
-        cb.assert_multiplier_less();
+    }
+
+    #[test]
+    fn wire_roundtrip_is_bit_exact() {
+        let (p, q) = (4, 10);
+        let (w, b, _) = random_case(p, q, 29);
+        let fmt = FixedFormat::new(3);
+        let lut =
+            DenseWholeLut::build(&w, &b, p, q, Partition::contiguous(q, 2), fmt).unwrap();
+        let mut buf = Vec::new();
+        lut.write_wire(&mut buf);
+        let back =
+            DenseWholeLut::read_wire(&mut crate::lut::wire::Reader::new(&buf)).unwrap();
+        assert_eq!(back.partition, lut.partition);
+        assert_eq!(back.fmt, lut.fmt);
+        let mut rng = Rng::new(30);
+        let codes: Vec<u32> =
+            (0..q).map(|_| rng.below(fmt.levels() as usize) as u32).collect();
+        let mut c1 = Counters::default();
+        let mut c2 = Counters::default();
+        assert_eq!(lut.eval_codes(&codes, &mut c1), back.eval_codes(&codes, &mut c2));
+        assert_eq!(c1, c2);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! [`DenseFloatLut::eval_batch_f16`] runs chunk-outer / sample-inner.
 
 use super::arena::{with_arena, ArenaEntry, TableArena};
-use super::{LutError, Partition, MAX_TABLE_BYTES};
+use super::{wire, LutError, Partition, MAX_TABLE_BYTES};
 use crate::engine::counters::Counters;
 use crate::quant::f16::{F16, EXP_BIAS, FRAC_BITS, SIG_BITS};
 
@@ -61,6 +61,15 @@ impl DenseFloatLut {
         assert_eq!(b.len(), p);
         partition.validate()?;
         assert_eq!(partition.q, q);
+        // loud failure, never a silent clamp: an out-of-range plane
+        // count (possible via plan JSON) would otherwise compile to a
+        // model that cannot round-trip through the `.ltm` loader
+        if cfg.planes == 0 || cfg.planes > SIG_BITS {
+            return Err(LutError::BadConfig(format!(
+                "float planes {} outside 1..={SIG_BITS}",
+                cfg.planes
+            )));
+        }
         let per_elem_bits = 1 + EXP_BITS; // 1 mantissa bit + whole exponent
         let mut tables = Vec::with_capacity(partition.k());
         for chunk in &partition.chunks {
@@ -117,41 +126,50 @@ impl DenseFloatLut {
     /// planes — the paper's Fig. 1.
     pub fn eval_f16(&self, x: &[F16], ctr: &mut Counters) -> Vec<i64> {
         let mut acc = vec![0i64; self.p];
-        self.eval_batch_f16(x, 1, &mut acc, ctr);
+        self.eval_batch_f16(x, 1, &mut acc, std::slice::from_mut(ctr));
         acc
     }
 
     /// Batched evaluation: `x` row-major `batch x q`, `out` `batch x p`
-    /// (overwritten). Chunk-outer / sample-inner; per-batch counters.
+    /// (overwritten), `ctrs` one counter row per sample. Chunk-outer /
+    /// sample-inner; data-dependent shift-adds land on the exact sample
+    /// that incurred them.
     pub fn eval_batch_f16(
         &self,
         x: &[F16],
         batch: usize,
         out: &mut [i64],
-        ctr: &mut Counters,
+        ctrs: &mut [Counters],
     ) {
         let q = self.partition.q;
         let p = self.p;
         assert_eq!(x.len(), batch * q);
         assert_eq!(out.len(), batch * p);
+        assert_eq!(ctrs.len(), batch);
         for s in 0..batch {
             out[s * p..(s + 1) * p].copy_from_slice(&self.bias_acc);
         }
         let planes = self.cfg.planes.min(SIG_BITS);
-        let shift_adds =
-            with_arena!(self.arena, E => self.eval_batch_impl::<E>(x, batch, out));
-        ctr.adds += (batch * p) as u64; // bias adds
-        ctr.lut_evals += planes as u64 * self.partition.k() as u64 * batch as u64;
-        ctr.shift_adds += shift_adds;
+        with_arena!(self.arena, E => self.eval_batch_impl::<E>(x, batch, out, ctrs));
+        let k = self.partition.k() as u64;
+        for ctr in ctrs.iter_mut() {
+            ctr.adds += p as u64; // bias adds
+            ctr.lut_evals += planes as u64 * k;
+        }
     }
 
-    fn eval_batch_impl<E: ArenaEntry>(&self, x: &[F16], batch: usize, out: &mut [i64]) -> u64 {
+    fn eval_batch_impl<E: ArenaEntry>(
+        &self,
+        x: &[F16],
+        batch: usize,
+        out: &mut [i64],
+        ctrs: &mut [Counters],
+    ) {
         let q = self.partition.q;
         let p = self.p;
         let per_elem_bits = 1 + EXP_BITS;
         let planes = self.cfg.planes.min(SIG_BITS);
         let lo = SIG_BITS - planes;
-        let mut shift_adds = 0u64;
         for (c, chunk) in self.partition.chunks.iter().enumerate() {
             let table = self.arena.chunk_slice::<E>(c);
             // fast path for singleton chunks (the paper's m=1 layout):
@@ -174,7 +192,7 @@ impl DenseFloatLut {
                         for (a, r) in acc.iter_mut().zip(row) {
                             *a += r.widen() << j;
                         }
-                        shift_adds += p as u64;
+                        ctrs[s].shift_adds += p as u64;
                         sig &= sig - 1;
                     }
                 }
@@ -190,7 +208,7 @@ impl DenseFloatLut {
                     // zero (the exponent only scales a set bit), so track
                     // the bit mask and skip the gather+add entirely — in
                     // hardware this is the row-enable line; the lookup is
-                    // still charged (per batch, in eval_batch_f16).
+                    // still charged (per sample, in eval_batch_f16).
                     let mut bits = 0u32;
                     for (e, &col) in chunk.iter().enumerate() {
                         let h = srow[col];
@@ -207,11 +225,10 @@ impl DenseFloatLut {
                     for (a, r) in acc.iter_mut().zip(row) {
                         *a += r.widen() << j;
                     }
-                    shift_adds += p as u64;
+                    ctrs[s].shift_adds += p as u64;
                 }
             }
         }
-        shift_adds
     }
 
     /// Convenience: quantize f32 inputs through binary16 then evaluate.
@@ -230,6 +247,44 @@ impl DenseFloatLut {
     /// in the index here; accounting hook for the paper's halving).
     pub fn size_bits(&self, r_o: u32) -> u64 {
         self.arena.total_entries() as u64 * r_o as u64
+    }
+
+    /// Serialize for the `.ltm` artifact.
+    pub fn write_wire(&self, out: &mut Vec<u8>) {
+        self.partition.write_wire(out);
+        wire::put_u64(out, self.p as u64);
+        wire::put_u32(out, self.cfg.planes);
+        self.arena.write_wire(out);
+        wire::put_i64_seq(out, &self.bias_acc);
+    }
+
+    /// Deserialize a bank written by [`DenseFloatLut::write_wire`].
+    pub fn read_wire(r: &mut wire::Reader) -> wire::Result<DenseFloatLut> {
+        let partition = Partition::read_wire(r)?;
+        let p = r.len_capped(1 << 24, "float dense p")?;
+        let planes = r.u32()?;
+        if planes == 0 || planes > SIG_BITS {
+            return wire::err(format!("float dense: bad plane count {planes}"));
+        }
+        let arena = TableArena::read_wire(r)?;
+        let bias_acc = r.i64_seq(1 << 24, "float dense bias")?;
+        if arena.row_len() != p || arena.num_chunks() != partition.k() || bias_acc.len() != p {
+            return wire::err("float dense: arena/bias shape disagrees with partition");
+        }
+        // every chunk table must hold exactly 2^(m_i·(1+t)) rows
+        for (c, chunk) in partition.chunks.iter().enumerate() {
+            let idx_bits = chunk.len() as u32 * (1 + EXP_BITS);
+            if idx_bits >= 26 || arena.chunk_rows(c) != 1usize << idx_bits {
+                return wire::err(format!("float dense: chunk {c} row count mismatch"));
+            }
+        }
+        Ok(DenseFloatLut {
+            partition,
+            p,
+            cfg: FloatLutConfig { planes },
+            arena,
+            bias_acc,
+        })
     }
 }
 
@@ -348,16 +403,36 @@ mod tests {
                 .map(|_| F16::from_f32(rng.f32() * 6.0))
                 .collect();
             let mut out = vec![0i64; batch * p];
-            let mut cb = Counters::default();
+            let mut cb = vec![Counters::default(); batch];
             lut.eval_batch_f16(&x, batch, &mut out, &mut cb);
-            let mut cs = Counters::default();
             for s in 0..batch {
+                let mut cs = Counters::default();
                 let single = lut.eval_f16(&x[s * q..(s + 1) * q], &mut cs);
                 assert_eq!(&out[s * p..(s + 1) * p], single.as_slice(), "m={m} s={s}");
+                assert_eq!(cb[s], cs, "m={m}: sample {s} counters diverge");
+                cb[s].assert_multiplier_less();
             }
-            assert_eq!(cb, cs, "m={m}: counter totals diverge");
-            cb.assert_multiplier_less();
         }
+    }
+
+    #[test]
+    fn wire_roundtrip_is_bit_exact() {
+        let (p, q) = (4, 9);
+        let (w, b, x) = random_case(p, q, 73);
+        let lut = DenseFloatLut::build(
+            &w, &b, p, q, Partition::singletons(q), FloatLutConfig { planes: 7 },
+        )
+        .unwrap();
+        let mut buf = Vec::new();
+        lut.write_wire(&mut buf);
+        let back =
+            DenseFloatLut::read_wire(&mut crate::lut::wire::Reader::new(&buf)).unwrap();
+        assert_eq!(back.cfg, lut.cfg);
+        assert_eq!(back.bias_acc, lut.bias_acc);
+        let mut c1 = Counters::default();
+        let mut c2 = Counters::default();
+        assert_eq!(lut.eval_f32(&x, &mut c1), back.eval_f32(&x, &mut c2));
+        assert_eq!(c1, c2);
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod conv;
 pub mod convfloat;
 pub mod cost;
 pub mod scalar;
+pub mod wire;
 
 
 
@@ -52,6 +53,8 @@ pub enum LutError {
     TooLarge { rows: u128, cols: usize },
     /// Partition does not cover the input exactly once.
     BadPartition(String),
+    /// A bank parameter is outside its representable range.
+    BadConfig(String),
 }
 
 impl std::fmt::Display for LutError {
@@ -61,6 +64,7 @@ impl std::fmt::Display for LutError {
                 write!(f, "LUT too large to materialise: {rows} rows x {cols} cols")
             }
             LutError::BadPartition(s) => write!(f, "bad partition: {s}"),
+            LutError::BadConfig(s) => write!(f, "bad bank config: {s}"),
         }
     }
 }
@@ -126,6 +130,38 @@ impl Partition {
     /// Largest chunk size.
     pub fn max_chunk(&self) -> usize {
         self.chunks.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Serialize for the `.ltm` artifact.
+    pub fn write_wire(&self, out: &mut Vec<u8>) {
+        wire::put_u64(out, self.q as u64);
+        wire::put_u64(out, self.chunks.len() as u64);
+        for c in &self.chunks {
+            wire::put_u64(out, c.len() as u64);
+            for &i in c {
+                wire::put_u64(out, i as u64);
+            }
+        }
+    }
+
+    /// Deserialize a partition written by [`Partition::write_wire`];
+    /// the result is validated (exact cover) before being returned.
+    pub fn read_wire(r: &mut wire::Reader) -> wire::Result<Partition> {
+        const Q_CAP: usize = 1 << 24;
+        let q = r.len_capped(Q_CAP, "partition q")?;
+        let k = r.len_capped(Q_CAP, "partition chunk count")?;
+        let mut chunks = Vec::with_capacity(k);
+        for _ in 0..k {
+            let m = r.len_capped(Q_CAP, "partition chunk len")?;
+            let mut c = Vec::with_capacity(m);
+            for _ in 0..m {
+                c.push(r.len_capped(Q_CAP, "partition index")?);
+            }
+            chunks.push(c);
+        }
+        let p = Partition { q, chunks };
+        p.validate().map_err(|e| wire::WireError(e.to_string()))?;
+        Ok(p)
     }
 
     /// Validate: every index 0..q appears exactly once.

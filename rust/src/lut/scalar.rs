@@ -9,6 +9,7 @@
 
 use crate::engine::counters::Counters;
 use crate::lut::cost::scalar_fn_size_bits;
+use crate::lut::wire;
 use crate::quant::f16::F16;
 
 /// A full binary16 -> binary16 scalar function table.
@@ -62,6 +63,40 @@ impl ScalarLut {
     /// Size in bits: 2^16 · 16 — the paper's 128 KiB.
     pub fn size_bits(&self) -> u64 {
         scalar_fn_size_bits(16, 16)
+    }
+
+    /// Serialize for the `.ltm` artifact: name + the full 128 KiB table
+    /// (the table is the ground truth — arbitrary tabulated functions
+    /// round-trip bit-exactly, not just the named ones).
+    pub fn write_wire(&self, out: &mut Vec<u8>) {
+        let name = self.name.as_bytes();
+        wire::put_u32(out, name.len() as u32);
+        out.extend_from_slice(name);
+        for &e in &self.table {
+            wire::put_u16(out, e);
+        }
+    }
+
+    /// Deserialize a table written by [`ScalarLut::write_wire`]. The
+    /// name is mapped back to a known static label ("custom" when the
+    /// function is not one of the built-ins).
+    pub fn read_wire(r: &mut wire::Reader) -> wire::Result<ScalarLut> {
+        let name_len = r.u32()? as usize;
+        if name_len > 64 {
+            return wire::err(format!("scalar LUT name too long ({name_len})"));
+        }
+        let name_bytes = r.take(name_len)?;
+        let name = match std::str::from_utf8(name_bytes) {
+            Ok("sigmoid") => "sigmoid",
+            Ok("tanh") => "tanh",
+            Ok(_) => "custom",
+            Err(_) => return wire::err("scalar LUT name not utf-8"),
+        };
+        let mut table = Vec::with_capacity(1 << 16);
+        for _ in 0..(1usize << 16) {
+            table.push(r.u16()?);
+        }
+        Ok(ScalarLut { name, table })
     }
 }
 
@@ -120,6 +155,22 @@ mod tests {
         let mut ctr = Counters::default();
         assert_eq!(s.eval(F16::from_f32(30.0), &mut ctr).to_f32(), 1.0);
         assert_eq!(s.eval(F16::from_f32(-30.0), &mut ctr).to_f32(), 0.0);
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_table() {
+        let s = ScalarLut::sigmoid();
+        let mut buf = Vec::new();
+        s.write_wire(&mut buf);
+        let back = ScalarLut::read_wire(&mut wire::Reader::new(&buf)).unwrap();
+        assert_eq!(back.name, "sigmoid");
+        assert_eq!(back.table, s.table);
+        let custom = ScalarLut::tabulate("square", |x| x * x);
+        let mut buf2 = Vec::new();
+        custom.write_wire(&mut buf2);
+        let back2 = ScalarLut::read_wire(&mut wire::Reader::new(&buf2)).unwrap();
+        assert_eq!(back2.name, "custom");
+        assert_eq!(back2.table, custom.table);
     }
 
     #[test]

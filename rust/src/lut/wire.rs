@@ -1,0 +1,209 @@
+//! Little-endian binary wire codec for the `.ltm` compiled-model
+//! artifact (see `engine::artifact` for the container layout). The
+//! vendored crate set has no serde/bincode, so the banks carry their
+//! own field-by-field encoders — deliberately boring: fixed-width
+//! integers, length-prefixed sequences, no varints, no padding.
+//!
+//! Reads are bounds-checked and length-capped so a truncated or
+//! hostile payload surfaces as a [`WireError`], never a panic or an
+//! attempted huge allocation (the artifact checksum catches flipped
+//! bits before parsing; these checks are defense in depth).
+
+/// Decode error: what was being read and why it failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError(pub String);
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire decode error: {}", self.0)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+pub type Result<T> = std::result::Result<T, WireError>;
+
+pub(crate) fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(WireError(msg.into()))
+}
+
+// -- writers ------------------------------------------------------------
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_i32(out: &mut Vec<u8>, v: i32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_i64(out: &mut Vec<u8>, v: i64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+/// Length-prefixed i64 sequence.
+pub fn put_i64_seq(out: &mut Vec<u8>, seq: &[i64]) {
+    put_usize(out, seq.len());
+    for &v in seq {
+        put_i64(out, v);
+    }
+}
+
+// -- reader -------------------------------------------------------------
+
+/// Bounds-checked cursor over a decoded payload.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Take the next `n` bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return err(format!(
+                "truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(self.u32()? as i32)
+    }
+
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(self.u64()? as i64)
+    }
+
+    /// A u64 length field validated against `cap` (rejects corrupt
+    /// lengths before they become allocations).
+    pub fn len_capped(&mut self, cap: usize, what: &str) -> Result<usize> {
+        let v = self.u64()?;
+        if v > cap as u64 {
+            return err(format!("{what} length {v} exceeds cap {cap}"));
+        }
+        Ok(v as usize)
+    }
+
+    /// A u32 length field validated against `cap`.
+    pub fn len_capped_u32(&mut self, cap: usize, what: &str) -> Result<usize> {
+        let v = self.u32()?;
+        if v as usize > cap {
+            return err(format!("{what} length {v} exceeds cap {cap}"));
+        }
+        Ok(v as usize)
+    }
+
+    /// Length-prefixed i64 sequence (cap on element count).
+    pub fn i64_seq(&mut self, cap: usize, what: &str) -> Result<Vec<i64>> {
+        let n = self.len_capped(cap, what)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.i64()?);
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut b = Vec::new();
+        put_u8(&mut b, 7);
+        put_u16(&mut b, 0xBEEF);
+        put_u32(&mut b, 0xDEAD_BEEF);
+        put_u64(&mut b, u64::MAX - 1);
+        put_i32(&mut b, -12345);
+        put_i64(&mut b, i64::MIN + 3);
+        let mut r = Reader::new(&b);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 0xBEEF);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.i32().unwrap(), -12345);
+        assert_eq!(r.i64().unwrap(), i64::MIN + 3);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn seq_roundtrip() {
+        let mut b = Vec::new();
+        put_i64_seq(&mut b, &[1, -2, 3]);
+        let mut r = Reader::new(&b);
+        assert_eq!(r.i64_seq(8, "seq").unwrap(), vec![1, -2, 3]);
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut b = Vec::new();
+        put_u64(&mut b, 42);
+        b.truncate(5);
+        let mut r = Reader::new(&b);
+        assert!(r.u64().is_err());
+    }
+
+    #[test]
+    fn oversized_length_rejected() {
+        let mut b = Vec::new();
+        put_u64(&mut b, 1 << 40);
+        let mut r = Reader::new(&b);
+        assert!(r.len_capped(1 << 20, "test").is_err());
+    }
+}

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   gen-data          generate + cache the synthetic corpora (IDX files)
 //!   train             in-Rust SGD training (linear / mlp)
+//!   compile           compile weights + plan into a .ltm artifact
 //!   eval              accuracy: LUT engine vs reference, with op counters
 //!   sweep-bits        Fig 4 / Fig 6 accuracy-vs-input-bits sweep
 //!   sweep-partitions  Fig 5 / 7 / 8 size-vs-ops tradeoff tables
@@ -18,7 +19,7 @@ use tablenet::config::ServeConfig;
 use tablenet::data::synth::Kind;
 use tablenet::data::{load_or_generate, Dataset};
 use tablenet::engine::plan::EnginePlan;
-use tablenet::engine::LutModel;
+use tablenet::engine::{Compiler, LutModel};
 use tablenet::harness;
 use tablenet::nn::{weights, Arch, Model};
 use tablenet::planner;
@@ -43,6 +44,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "gen-data" => gen_data(args),
         "train" => train(args),
+        "compile" => compile(args),
         "eval" => eval(args),
         "sweep-bits" => sweep_bits(args),
         "sweep-partitions" => sweep_partitions(args),
@@ -67,11 +69,12 @@ fn print_help() {
          commands:\n\
          \x20 gen-data         --dir data/synth --train 4000 --test 1000 --seed 7\n\
          \x20 train            --arch linear|mlp --dataset mnist|fashion --steps N --out w.bin\n\
-         \x20 eval             --arch A --weights w.bin --dataset D [--plan plan.json] [--n 500]\n\
+         \x20 compile          --arch A --weights w.bin [--plan plan.json] --out model.ltm\n\
+         \x20 eval             --arch A --weights w.bin --dataset D [--plan plan.json] [--artifact model.ltm] [--n 500]\n\
          \x20 sweep-bits       --arch linear --weights w.bin --dataset D [--csv-out f.csv]\n\
          \x20 sweep-partitions --arch linear|mlp|cnn [--weights w.bin --dataset D]\n\
          \x20 plan             [--arch A]\n\
-         \x20 serve            --arch A --weights w.bin --requests 2000 [--max-batch 32]\n\
+         \x20 serve            --arch A --weights w.bin [--artifact model.ltm] --requests 2000 [--max-batch 32]\n\
          \x20 ref-check        --arch A --weights w.bin --hlo artifacts/linear_ref_b1.hlo.txt"
     );
 }
@@ -179,22 +182,91 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn eval(args: &Args) -> Result<()> {
+/// Compile weights + plan into a servable `.ltm` artifact.
+fn compile(args: &Args) -> Result<()> {
     let model = load_model(args)?;
+    let plan = plan_from_args(args, model.arch)?;
+    let lut = Compiler::new(&model)
+        .plan(&plan)
+        .build()
+        .map_err(|e| anyhow!("plan not materialisable: {e}"))?;
+    let out = PathBuf::from(
+        args.get("out")
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("artifacts/model_{}.ltm", model.arch.name())),
+    );
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    lut.save(&out)?;
+    println!(
+        "wrote {} ({} stages, {} of tables at r_o={})",
+        out.display(),
+        lut.num_stages(),
+        fmt_bits(lut.size_bits()),
+        lut.plan().r_o
+    );
+    Ok(())
+}
+
+/// Build the engine either from a `.ltm` artifact (no weights needed)
+/// or by compiling weights under the requested plan. `model` lets a
+/// caller that already loaded the weights (eval's reference line)
+/// avoid a second load.
+fn engine_from_args(args: &Args, model: Option<&Model>) -> Result<LutModel> {
+    if let Some(path) = args.get("artifact") {
+        let lut = LutModel::load(Path::new(path))?;
+        println!(
+            "loaded artifact {path} ({} stages, {})",
+            lut.num_stages(),
+            fmt_bits(lut.size_bits())
+        );
+        return Ok(lut);
+    }
+    let owned;
+    let model = match model {
+        Some(m) => m,
+        None => {
+            owned = load_model(args)?;
+            &owned
+        }
+    };
+    let plan = plan_from_args(args, model.arch)?;
+    Compiler::new(model)
+        .plan(&plan)
+        .build()
+        .map_err(|e| anyhow!("plan not materialisable: {e}"))
+}
+
+fn eval(args: &Args) -> Result<()> {
     let ds = dataset(args)?;
     let n = args.get_usize("n", 500);
     let test = ds.test.head(n);
-    let plan = plan_from_args(args, model.arch)?;
 
-    let flat = match model.arch {
-        Arch::Cnn => Tensor::new(&[test.len(), 28, 28, 1], test.images.clone()),
-        _ => Tensor::new(&[test.len(), 784], test.images.clone()),
+    // weights are required without --artifact; with it they are
+    // optional (reference-accuracy line only). Loaded exactly once.
+    let artifact = args.get("artifact");
+    let model = match load_model(args) {
+        Ok(m) => Some(m),
+        Err(e) if artifact.is_some() => {
+            eprintln!("note: skipping the reference line ({e:#})");
+            None
+        }
+        Err(e) => return Err(e),
     };
-    let ref_acc = model.accuracy(&flat, &test.labels);
-    println!("reference (f32, multiply-full): {:.2}%", ref_acc * 100.0);
+    if let Some(model) = &model {
+        let flat = match model.arch {
+            Arch::Cnn => Tensor::new(&[test.len(), 28, 28, 1], test.images.clone()),
+            _ => Tensor::new(&[test.len(), 784], test.images.clone()),
+        };
+        let ref_acc = model.accuracy(&flat, &test.labels);
+        println!("reference (f32, multiply-full): {:.2}%", ref_acc * 100.0);
+    }
 
-    let lut = LutModel::compile(&model, &plan)
-        .map_err(|e| anyhow!("plan not materialisable: {e}"))?;
+    let lut = engine_from_args(args, model.as_ref())?;
     let (acc, ctr) = lut.accuracy(&test.images, 784, &test.labels);
     ctr.assert_multiplier_less();
     println!(
@@ -277,19 +349,16 @@ fn plan(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let model = load_model(args)?;
-    let plan = plan_from_args(args, model.arch)?;
-    let lut = LutModel::compile(&model, &plan)
-        .map_err(|e| anyhow!("plan not materialisable: {e}"))?;
+    let lut = engine_from_args(args, None)?;
     let cfg = ServeConfig::default().override_with(args);
     cfg.validate()?;
     let ds = dataset(args)?;
     let n_requests = args.get_usize("requests", 2000);
     let clients = args.get_usize("clients", 4).max(1);
     println!(
-        "serving {} on the LUT engine ({}) with {:?}",
-        model.arch.name(),
+        "serving the LUT engine ({}, {} stages) with {:?}",
         fmt_bits(lut.size_bits()),
+        lut.num_stages(),
         cfg
     );
 

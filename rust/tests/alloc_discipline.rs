@@ -13,7 +13,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use tablenet::engine::plan::{AffineMode, EnginePlan};
 use tablenet::engine::scratch::Scratch;
-use tablenet::engine::{BatchInference, LutModel};
+use tablenet::engine::{BatchInference, Compiler};
 use tablenet::nn::Model;
 use tablenet::tensor::Tensor;
 use tablenet::util::Rng;
@@ -58,7 +58,7 @@ fn steady_state_infer_batch_allocates_nothing() {
         fallback: AffineMode::Float { planes: 11, m: 1 },
         r_o: 16,
     };
-    let lut = LutModel::compile(&model, &plan).unwrap();
+    let lut = Compiler::new(&model).plan(&plan).build().unwrap();
 
     let batch = 16usize;
     let images: Vec<f32> = (0..batch * q).map(|_| rng.f32()).collect();

@@ -1,0 +1,202 @@
+//! `.ltm` artifact invariants: save -> load -> infer must be bit-exact
+//! with the in-memory compiled model across every stage kind the
+//! compiler can emit (property-style, over the repo's own PRNG), and
+//! corrupted / truncated artifacts must be rejected — never served.
+
+use tablenet::engine::plan::{AffineMode, EnginePlan};
+use tablenet::engine::scratch::Scratch;
+use tablenet::engine::{artifact, Compiler, LutModel};
+use tablenet::nn::Model;
+use tablenet::tensor::Tensor;
+use tablenet::util::Rng;
+
+fn linear_model(rng: &mut Rng) -> Model {
+    Model::linear(
+        Tensor::randn(&[10, 784], 0.05, rng),
+        Tensor::randn(&[10], 0.02, rng),
+    )
+}
+
+fn mlp_model(rng: &mut Rng) -> Model {
+    Model::mlp(vec![
+        (Tensor::randn(&[32, 784], 0.05, rng), Tensor::zeros(&[32])),
+        (Tensor::randn(&[16, 32], 0.2, rng), Tensor::zeros(&[16])),
+        (Tensor::randn(&[10, 16], 0.3, rng), Tensor::zeros(&[10])),
+    ])
+}
+
+fn sigmoid_model(rng: &mut Rng) -> Model {
+    Model {
+        arch: tablenet::nn::Arch::Mlp,
+        layers: vec![
+            tablenet::nn::Layer::Dense {
+                w: Tensor::randn(&[24, 784], 0.05, rng),
+                b: Tensor::zeros(&[24]),
+            },
+            tablenet::nn::Layer::Sigmoid,
+            tablenet::nn::Layer::Dense {
+                w: Tensor::randn(&[10, 24], 0.3, rng),
+                b: Tensor::zeros(&[10]),
+            },
+        ],
+        input_shape: vec![784],
+    }
+}
+
+fn cnn_model(rng: &mut Rng) -> Model {
+    Model {
+        arch: tablenet::nn::Arch::Cnn,
+        layers: vec![
+            tablenet::nn::Layer::Conv2d {
+                filter: Tensor::randn(&[3, 3, 1, 2], 0.3, rng),
+                b: Tensor::randn(&[2], 0.05, rng),
+            },
+            tablenet::nn::Layer::Relu,
+            tablenet::nn::Layer::MaxPool2,
+            tablenet::nn::Layer::Conv2d {
+                filter: Tensor::randn(&[3, 3, 2, 3], 0.2, rng),
+                b: Tensor::randn(&[3], 0.05, rng),
+            },
+            tablenet::nn::Layer::Relu,
+            tablenet::nn::Layer::Flatten,
+            tablenet::nn::Layer::Dense {
+                w: Tensor::randn(&[10, 4 * 4 * 3], 0.2, rng),
+                b: Tensor::zeros(&[10]),
+            },
+        ],
+        input_shape: vec![8, 8, 1],
+    }
+}
+
+/// Every (model, plan) the compiler handles: linear bitplane, MLP with
+/// whole-fixed input + float inner, MLP with fixed inner (ToFixed),
+/// sigmoid (scalar LUT), CNN (both conv banks, maxpool, relu).
+fn cases(rng: &mut Rng) -> Vec<(Model, EnginePlan)> {
+    let float11 = AffineMode::Float { planes: 11, m: 1 };
+    vec![
+        (linear_model(rng), EnginePlan::linear_default()),
+        (linear_model(rng), EnginePlan::linear_parity()),
+        (mlp_model(rng), EnginePlan::mlp_fixed_input()),
+        (
+            mlp_model(rng),
+            EnginePlan {
+                affine: vec![
+                    AffineMode::WholeFixed { bits: 8, m: 1, range_exp: 0 },
+                    AffineMode::BitplaneFixed { bits: 8, m: 4, range_exp: 3 },
+                    AffineMode::BitplaneFixed { bits: 8, m: 4, range_exp: 3 },
+                ],
+                fallback: float11,
+                r_o: 16,
+            },
+        ),
+        (
+            sigmoid_model(rng),
+            EnginePlan { affine: vec![float11, float11], fallback: float11, r_o: 16 },
+        ),
+        (
+            cnn_model(rng),
+            EnginePlan {
+                affine: vec![
+                    AffineMode::BitplaneFixed { bits: 3, m: 2, range_exp: 0 },
+                    float11,
+                    float11,
+                ],
+                fallback: float11,
+                r_o: 16,
+            },
+        ),
+    ]
+}
+
+#[test]
+fn prop_save_load_infer_batch_bit_exact() {
+    let mut rng = Rng::new(0xA27F);
+    for (case, (model, plan)) in cases(&mut rng).into_iter().enumerate() {
+        let lut = Compiler::new(&model).plan(&plan).build().unwrap();
+        let bytes = artifact::to_bytes(&lut);
+        let back = artifact::from_bytes(&bytes).unwrap();
+        assert_eq!(back.plan(), lut.plan(), "case {case}: plan diverged");
+        assert_eq!(back.size_bits(), lut.size_bits(), "case {case}: size diverged");
+        assert_eq!(back.num_stages(), lut.num_stages(), "case {case}");
+        for (a, b) in lut.stages().iter().zip(back.stages()) {
+            assert_eq!(a.kind(), b.kind(), "case {case}: stage kinds diverged");
+        }
+
+        let features: usize = model.input_shape.iter().product();
+        let batch = 3;
+        let images: Vec<f32> = (0..batch * features).map(|_| rng.f32()).collect();
+        let mut s1 = Scratch::new();
+        let mut s2 = Scratch::new();
+        let got = lut.infer_batch(&images, batch, &mut s1);
+        let loaded = back.infer_batch(&images, batch, &mut s2);
+        assert_eq!(got.classes, loaded.classes, "case {case}: classes diverged");
+        assert_eq!(got.logits, loaded.logits, "case {case}: logits diverged");
+        assert_eq!(got.counters, loaded.counters, "case {case}: counters diverged");
+        assert_eq!(
+            got.per_sample, loaded.per_sample,
+            "case {case}: per-sample counters diverged"
+        );
+        loaded.counters.assert_multiplier_less();
+    }
+}
+
+#[test]
+fn file_roundtrip_through_save_and_load() {
+    let mut rng = Rng::new(0xF11E);
+    let model = linear_model(&mut rng);
+    let lut = Compiler::new(&model).build().unwrap();
+    let dir = std::env::temp_dir().join("tablenet_test_artifact");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("linear.ltm");
+    lut.save(&path).unwrap();
+    let back = LutModel::load(&path).unwrap();
+    let x: Vec<f32> = (0..784).map(|_| rng.f32()).collect();
+    let a = lut.infer(&x);
+    let b = back.infer(&x);
+    assert_eq!(a.class, b.class);
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.counters, b.counters);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn prop_corrupted_artifacts_are_rejected() {
+    let mut rng = Rng::new(0xBADF);
+    let model = linear_model(&mut rng);
+    let plan = EnginePlan {
+        affine: vec![AffineMode::BitplaneFixed { bits: 3, m: 8, range_exp: 0 }],
+        fallback: AffineMode::Float { planes: 11, m: 1 },
+        r_o: 16,
+    };
+    let lut = Compiler::new(&model).plan(&plan).build().unwrap();
+    let bytes = artifact::to_bytes(&lut);
+
+    // pristine bytes parse
+    assert!(artifact::from_bytes(&bytes).is_ok());
+
+    // any single flipped bit is caught (checksum), wherever it lands
+    for _ in 0..50 {
+        let mut mutated = bytes.clone();
+        let i = rng.below(mutated.len());
+        let bit = 1u8 << (rng.below(8) as u8);
+        mutated[i] ^= bit;
+        assert!(
+            artifact::from_bytes(&mutated).is_err(),
+            "flipped bit {bit:#x} at byte {i}/{} was accepted",
+            mutated.len()
+        );
+    }
+
+    // every truncation point is rejected
+    for cut in [1, 8, 100, bytes.len() / 2, bytes.len() - 1] {
+        assert!(
+            artifact::from_bytes(&bytes[..cut]).is_err(),
+            "truncation at {cut} was accepted"
+        );
+    }
+
+    // wrong magic / version with an otherwise plausible prefix
+    let mut wrong_magic = bytes.clone();
+    wrong_magic[0] = b'X';
+    assert!(artifact::from_bytes(&wrong_magic).is_err());
+}

@@ -20,9 +20,12 @@ fn help_lists_commands() {
     let out = bin().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["gen-data", "train", "eval", "sweep-bits", "sweep-partitions", "serve"] {
+    for cmd in
+        ["gen-data", "train", "compile", "eval", "sweep-bits", "sweep-partitions", "serve"]
+    {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
+    assert!(text.contains("--artifact"), "help missing --artifact flag");
 }
 
 #[test]
@@ -78,6 +81,98 @@ fn train_then_eval_roundtrip() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("LUT engine"));
     assert!(text.contains("mults=0"), "eval must report zero multiplies: {text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn compile_then_eval_artifact_is_bit_identical_to_weights() {
+    let dir = sandbox("compileeval");
+    let weights = dir.join("w.bin");
+    let out = bin()
+        .args(["train", "--arch", "linear", "--steps", "400", "--dir"])
+        .arg(dir.join("synth"))
+        .args(["--train", "800", "--test", "200", "--out"])
+        .arg(&weights)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // compile weights -> .ltm artifact
+    let ltm = dir.join("model.ltm");
+    let out = bin()
+        .args(["compile", "--arch", "linear", "--weights"])
+        .arg(&weights)
+        .args(["--out"])
+        .arg(&ltm)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(ltm.exists(), "compile did not write the artifact");
+
+    // eval from weights and from the artifact: the LUT engine line
+    // (accuracy, size, per-inference counters) must be IDENTICAL
+    let eval = |extra: &[&std::ffi::OsStr]| -> String {
+        let mut cmd = bin();
+        cmd.args(["eval", "--arch", "linear", "--dir"])
+            .arg(dir.join("synth"))
+            .args(["--train", "800", "--test", "200", "--n", "100", "--weights"])
+            .arg(&weights);
+        for a in extra {
+            cmd.arg(a);
+        }
+        let out = cmd.output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout).to_string();
+        text.lines()
+            .find(|l| l.starts_with("LUT engine:"))
+            .unwrap_or_else(|| panic!("no LUT engine line in: {text}"))
+            .to_string()
+    };
+    let from_weights = eval(&[]);
+    let flag = std::ffi::OsString::from("--artifact");
+    let from_artifact = eval(&[flag.as_os_str(), ltm.as_os_str()]);
+    assert_eq!(
+        from_weights, from_artifact,
+        "artifact-served engine diverged from weight-compiled engine"
+    );
+    assert!(from_weights.contains("mults=0"), "{from_weights}");
+
+    // serve can start from the artifact alone (no --weights) and the
+    // whole run stays multiplier-less
+    let out = bin()
+        .args(["serve", "--artifact"])
+        .arg(&ltm)
+        .args(["--dir"])
+        .arg(dir.join("synth"))
+        .args(["--train", "800", "--test", "200", "--requests", "40", "--clients", "2"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("loaded artifact"), "{text}");
+    assert!(text.contains("mults=0"), "serve run must report zero multiplies: {text}");
+
+    // corrupted artifact must be rejected, not served
+    let mut bytes = std::fs::read(&ltm).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    let bad = dir.join("bad.ltm");
+    std::fs::write(&bad, &bytes).unwrap();
+    let out = bin()
+        .args(["eval", "--arch", "linear", "--dir"])
+        .arg(dir.join("synth"))
+        .args(["--train", "800", "--test", "200", "--weights"])
+        .arg(&weights)
+        .args(["--artifact"])
+        .arg(&bad)
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "corrupted artifact was accepted");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("checksum"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
     std::fs::remove_dir_all(&dir).ok();
 }
 

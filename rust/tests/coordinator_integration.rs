@@ -10,7 +10,7 @@ use tablenet::data::synth::Kind;
 use tablenet::data::Split;
 use tablenet::engine::counters::Counters;
 use tablenet::engine::plan::EnginePlan;
-use tablenet::engine::LutModel;
+use tablenet::engine::{Compiler, LutModel};
 use tablenet::train::{train_dense, TrainConfig};
 
 fn toy_split(n: usize, seed: u64) -> Split {
@@ -30,7 +30,7 @@ fn trained_engine() -> (LutModel, Split) {
         &TrainConfig { steps: 400, lr: 0.25, ..Default::default() },
     );
     (
-        LutModel::compile(&model, &EnginePlan::linear_default()).unwrap(),
+        Compiler::new(&model).plan(&EnginePlan::linear_default()).build().unwrap(),
         test,
     )
 }

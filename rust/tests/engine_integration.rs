@@ -6,7 +6,7 @@ use std::path::Path;
 use tablenet::data::synth::Kind;
 use tablenet::data::{load_or_generate, Split};
 use tablenet::engine::plan::{AffineMode, EnginePlan};
-use tablenet::engine::LutModel;
+use tablenet::engine::Compiler;
 use tablenet::nn::{weights, Arch, Model};
 use tablenet::tensor::Tensor;
 use tablenet::train::{train_dense, TrainConfig};
@@ -32,7 +32,7 @@ fn linear_lut_tracks_reference_accuracy() {
     let x = Tensor::new(&[test.len(), 784], test.images.clone());
     let ref_acc = model.accuracy(&x, &test.labels);
 
-    let lut = LutModel::compile(&model, &EnginePlan::linear_default()).unwrap();
+    let lut = Compiler::new(&model).plan(&EnginePlan::linear_default()).build().unwrap();
     let (lut_acc, ctr) = lut.accuracy(&test.images, 784, &test.labels);
     ctr.assert_multiplier_less();
     assert!(
@@ -53,7 +53,7 @@ fn memory_parity_config_matches_reference_footprint() {
         &[784, 10],
         &TrainConfig { steps: 100, lr: 0.3, ..Default::default() },
     );
-    let lut = LutModel::compile(&model, &EnginePlan::linear_parity()).unwrap();
+    let lut = Compiler::new(&model).plan(&EnginePlan::linear_parity()).build().unwrap();
     let lut_kib = lut.size_bits() as f64 / 8.0 / 1024.0;
     let ref_kib = model.weight_bytes() as f64 / 1024.0;
     assert!((lut_kib - 30.625).abs() < 0.1, "lut {lut_kib} KiB");
@@ -79,7 +79,7 @@ fn small_mlp_float_pipeline_tracks_reference() {
         fallback: AffineMode::Float { planes: 11, m: 1 },
         r_o: 16,
     };
-    let lut = LutModel::compile(&model, &plan).unwrap();
+    let lut = Compiler::new(&model).plan(&plan).build().unwrap();
     let (acc, ctr) = lut.accuracy(&test.images, 784, &test.labels);
     ctr.assert_multiplier_less();
     assert!(
@@ -99,7 +99,7 @@ fn tiny_cnn_lut_matches_reference_forward() {
         (Tensor::randn(&[1024, 3136], 0.01, &mut rng), Tensor::zeros(&[1024])),
         (Tensor::randn(&[10, 1024], 0.03, &mut rng), Tensor::zeros(&[10])),
     );
-    let lut = LutModel::compile(&model, &EnginePlan::cnn_default()).unwrap();
+    let lut = Compiler::new(&model).plan(&EnginePlan::cnn_default()).build().unwrap();
     let test = toy_split(Kind::Digits, 3, 10);
     let mut agree = 0;
     for i in 0..3 {
@@ -126,7 +126,7 @@ fn jax_artifacts_load_and_classify_well_when_present() {
     }
     let model = weights::load_model(Arch::Linear, path).unwrap();
     let ds = load_or_generate(Path::new("data/synth"), Kind::Digits, 6000, 1000, 7).unwrap();
-    let lut = LutModel::compile(&model, &EnginePlan::linear_default()).unwrap();
+    let lut = Compiler::new(&model).plan(&EnginePlan::linear_default()).build().unwrap();
     let (acc, _) = lut.accuracy(&ds.test.images, 784, &ds.test.labels);
     assert!(acc > 0.7, "JAX-trained linear LUT accuracy only {acc}");
 }
@@ -157,10 +157,10 @@ fn plan_ablation_fixed_inner_is_worse_than_float() {
         fallback: AffineMode::Float { planes: 11, m: 1 },
         r_o: 16,
     };
-    let (facc, _) = LutModel::compile(&model, &float_plan)
+    let (facc, _) = Compiler::new(&model).plan(&float_plan).build()
         .unwrap()
         .accuracy(&test.images, 784, &test.labels);
-    let (xacc, _) = LutModel::compile(&model, &fixed_plan)
+    let (xacc, _) = Compiler::new(&model).plan(&fixed_plan).build()
         .unwrap()
         .accuracy(&test.images, 784, &test.labels);
     assert!(

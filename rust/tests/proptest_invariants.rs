@@ -153,20 +153,22 @@ fn prop_eval_batch_bit_exact_with_per_sample() {
             DenseBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, m), fmt)
                 .unwrap();
         let mut out = vec![0i64; batch * p];
-        let mut cb = Counters::default();
+        let mut cb = vec![Counters::default(); batch];
         plane.eval_batch(&codes, batch, &mut out, &mut cb);
-        cb.assert_multiplier_less();
-        assert_eq!(cb.mults, 0, "zero-multiplies invariant on the batched path");
-        let mut cs = Counters::default();
         for s in 0..batch {
+            cb[s].assert_multiplier_less();
+            let mut cs = Counters::default();
             let single = plane.eval_codes(&codes[s * q..(s + 1) * q], &mut cs);
             assert_eq!(
                 &out[s * p..(s + 1) * p],
                 single.as_slice(),
                 "bitplane p={p} q={q} m={m} bits={bits} batch={batch} sample={s}"
             );
+            assert_eq!(
+                cb[s], cs,
+                "bitplane per-sample counters p={p} q={q} m={m} bits={bits} sample={s}"
+            );
         }
-        assert_eq!(cb, cs, "bitplane counter totals p={p} q={q} m={m} bits={bits}");
 
         // whole-code bank (small m·bits only: table is 2^(m·bits) rows)
         if m as u32 * bits < 12 {
@@ -174,19 +176,19 @@ fn prop_eval_batch_bit_exact_with_per_sample() {
                 DenseWholeLut::build(&w, &b, p, q, Partition::contiguous(q, m), fmt)
                     .unwrap();
             let mut wout = vec![0i64; batch * p];
-            let mut wb = Counters::default();
+            let mut wb = vec![Counters::default(); batch];
             whole.eval_batch(&codes, batch, &mut wout, &mut wb);
-            wb.assert_multiplier_less();
-            let mut ws = Counters::default();
             for s in 0..batch {
+                wb[s].assert_multiplier_less();
+                let mut ws = Counters::default();
                 let single = whole.eval_codes(&codes[s * q..(s + 1) * q], &mut ws);
                 assert_eq!(
                     &wout[s * p..(s + 1) * p],
                     single.as_slice(),
                     "whole p={p} q={q} m={m} bits={bits} sample={s}"
                 );
+                assert_eq!(wb[s], ws);
             }
-            assert_eq!(wb, ws);
         }
     });
 }
@@ -208,19 +210,19 @@ fn prop_float_eval_batch_bit_exact_with_per_sample() {
             .map(|_| F16::from_f32(rng.f32() * 8.0))
             .collect();
         let mut out = vec![0i64; batch * p];
-        let mut cb = Counters::default();
+        let mut cb = vec![Counters::default(); batch];
         lut.eval_batch_f16(&x, batch, &mut out, &mut cb);
-        cb.assert_multiplier_less();
-        let mut cs = Counters::default();
         for s in 0..batch {
+            cb[s].assert_multiplier_less();
+            let mut cs = Counters::default();
             let single = lut.eval_f16(&x[s * q..(s + 1) * q], &mut cs);
             assert_eq!(
                 &out[s * p..(s + 1) * p],
                 single.as_slice(),
                 "float p={p} q={q} m={m} batch={batch} sample={s}"
             );
+            assert_eq!(cb[s], cs, "float per-sample counters sample={s}");
         }
-        assert_eq!(cb, cs);
     });
 }
 
@@ -230,7 +232,7 @@ fn prop_engine_infer_batch_matches_per_sample() {
     // infer_batch equal the per-sample infer results, and the batched
     // path records zero multiplies
     use tablenet::engine::scratch::Scratch;
-    use tablenet::engine::LutModel;
+    use tablenet::engine::Compiler;
     use tablenet::nn::Model;
     use tablenet::tensor::Tensor;
     forall("engine-batch-vs-single", 8, |rng| {
@@ -247,7 +249,7 @@ fn prop_engine_infer_batch_matches_per_sample() {
             fallback: AffineMode::Float { planes: 11, m: 1 },
             r_o: 16,
         };
-        let lut = LutModel::compile(&model, &plan).unwrap();
+        let lut = Compiler::new(&model).plan(&plan).build().unwrap();
         let batch = 1 + rng.below(6);
         let images: Vec<f32> = (0..batch * q).map(|_| rng.f32()).collect();
         let mut scratch = Scratch::new();
@@ -364,7 +366,7 @@ fn prop_bits_ladder_accuracy_is_roughly_monotone() {
     // paper itself observes slight decreases).
     use tablenet::data::synth::{generate, Kind};
     use tablenet::data::Split;
-    use tablenet::engine::LutModel;
+    use tablenet::engine::Compiler;
     use tablenet::train::{train_dense, TrainConfig};
 
     let (px, lb) = generate(Kind::Digits, 500, 33);
@@ -389,7 +391,7 @@ fn prop_bits_ladder_accuracy_is_roughly_monotone() {
             fallback: AffineMode::Float { planes: 11, m: 1 },
             r_o: 16,
         };
-        let lut = LutModel::compile(&model, &plan).unwrap();
+        let lut = Compiler::new(&model).plan(&plan).build().unwrap();
         let (acc, _) = lut.accuracy(&test.images, 784, &test.labels);
         accs.push(acc);
     }
