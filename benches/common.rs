@@ -8,6 +8,11 @@ use tablenet::data::{load_or_generate, Dataset};
 use tablenet::nn::{weights, Arch, Model};
 use tablenet::train::{train_dense, TrainConfig};
 
+/// Escape a string for embedding in the BENCH_*.json outputs.
+pub fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
 pub fn dataset(kind: Kind) -> Dataset {
     load_or_generate(Path::new("data/synth"), kind, 6000, 1000, 7)
         .expect("dataset generates")

@@ -111,9 +111,7 @@ fn samples_per_sec(r: &BenchResult, n: usize) -> f64 {
     }
 }
 
-fn json_escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
-}
+use common::json_escape;
 
 fn main() {
     let mut rng = Rng::new(1);

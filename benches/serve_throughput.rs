@@ -1,0 +1,148 @@
+//! Registry serving bench (the Layer-3 perf instrument): N named LUT
+//! models behind one `ModelRegistry`, mixed concurrent load, a mid-run
+//! hot-swap, and machine-readable `BENCH_serve.json` output (per-model
+//! p50/p99 latency, req/s, mean batch size, plus fleet totals) so the
+//! serving-path trajectory is tracked from PR to PR alongside
+//! `BENCH_hotpath.json`.
+//!
+//!     cargo bench --bench serve_throughput -- [--requests 4000] \
+//!         [--clients 4] [--models 3] [--max-batch 32]
+//!
+//! `TABLENET_BENCH_REQUESTS` overrides the request count (CI smoke).
+
+mod common;
+
+use std::sync::Arc;
+use tablenet::config::cli::Args;
+use tablenet::config::ServeConfig;
+use tablenet::coordinator::registry::ModelRegistry;
+use tablenet::data::synth::Kind;
+use tablenet::engine::plan::{AffineMode, EnginePlan};
+use tablenet::engine::Compiler;
+
+use common::json_escape;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_requests = std::env::var("TABLENET_BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| args.get_usize("requests", 4000));
+    let n_clients = args.get_usize("clients", 4).max(1);
+    let n_models = args.get_usize("models", 3).clamp(1, 8);
+    let cfg = ServeConfig {
+        max_batch: args.get_usize("max-batch", 32),
+        max_wait_us: args.get_u64("max-wait-us", 200),
+        workers: args.get_usize("workers", 1),
+        queue_cap: args.get_usize("queue-cap", 1024),
+    };
+
+    let (model, ds) = common::linear_model(Kind::Digits);
+    let plan_bits = |bits: u32| EnginePlan {
+        affine: vec![AffineMode::BitplaneFixed { bits, m: 14, range_exp: 0 }],
+        fallback: AffineMode::Float { planes: 11, m: 1 },
+        r_o: 16,
+    };
+
+    // N tenants: the same trained weights compiled under distinct
+    // plans, so each pipeline streams different table geometry
+    let registry = ModelRegistry::new();
+    let mut names = Vec::new();
+    for i in 0..n_models {
+        let bits = 2 + (i as u32 % 3);
+        let engine =
+            Compiler::new(&model).plan(&plan_bits(bits)).build().expect("plan materialises");
+        let name = format!("m{i}_b{bits}");
+        registry.register(&name, Arc::new(engine), &cfg).expect("unique names");
+        names.push(name);
+    }
+    println!(
+        "serve_throughput: {n_models} models, {n_clients} clients, {n_requests} requests, \
+         max_batch {}",
+        cfg.max_batch
+    );
+
+    let client_handle = registry.client();
+    let names = Arc::new(names);
+    let test = Arc::new(ds.test);
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..n_clients {
+        let client = client_handle.clone();
+        let names = names.clone();
+        let test = test.clone();
+        let per_client = n_requests / n_clients;
+        joins.push(std::thread::spawn(move || {
+            let mut served = 0usize;
+            for i in 0..per_client {
+                let k = c * per_client + i;
+                let name = &names[k % names.len()];
+                let idx = k % test.len();
+                if client.infer(name, test.image(idx).to_vec()).is_ok() {
+                    served += 1;
+                }
+            }
+            served
+        }));
+    }
+
+    // hot-swap tenant 0 mid-load: the bench doubles as a rolling-deploy
+    // smoke under real traffic
+    let planned = (n_requests / n_clients) * n_clients;
+    while registry.fleet_completed() < (planned / 2) as u64 {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    let v2 = Compiler::new(&model).plan(&plan_bits(4)).build().expect("v2 materialises");
+    let swapped_version =
+        registry.swap(&names[0], Arc::new(v2)).expect("swap succeeds under load");
+
+    let served: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    let wall = t0.elapsed().as_secs_f64();
+    let fleet = registry.shutdown();
+    assert_eq!(fleet.completed() as usize, served, "request lost under bench load");
+    fleet.assert_multiplier_less();
+
+    println!("{fleet}");
+    let total_rps = served as f64 / wall;
+    println!(
+        "wall {wall:.2}s -> {total_rps:.0} req/s | swapped '{}' to v{swapped_version} mid-run",
+        names[0]
+    );
+
+    // ---- machine-readable output: BENCH_serve.json --------------------
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"serve_throughput\",\n");
+    json.push_str(&format!(
+        "  \"config\": {{\"models\": {n_models}, \"clients\": {n_clients}, \
+         \"requests\": {n_requests}, \"max_batch\": {}, \"workers\": {}}},\n",
+        cfg.max_batch, cfg.workers
+    ));
+    json.push_str("  \"models\": [\n");
+    let entries: Vec<String> = fleet
+        .models
+        .iter()
+        .map(|(name, m)| {
+            format!(
+                "    {{\"name\": \"{}\", \"version\": {}, \"completed\": {}, \
+                 \"p50_us\": {:.1}, \"p99_us\": {:.1}, \"rps\": {:.1}, \
+                 \"mean_batch\": {:.2}, \"mults\": {}}}",
+                json_escape(name),
+                m.version,
+                m.stats.completed,
+                m.stats.latency_p50_us,
+                m.stats.latency_p99_us,
+                m.stats.throughput_rps,
+                m.stats.mean_batch,
+                m.stats.ops.mults
+            )
+        })
+        .collect();
+    json.push_str(&entries.join(",\n"));
+    json.push_str("\n  ],\n");
+    json.push_str(&format!("  \"total_rps\": {total_rps:.1},\n"));
+    json.push_str(&format!("  \"wall_s\": {wall:.3},\n"));
+    json.push_str(&format!("  \"swapped_model_version\": {swapped_version}\n"));
+    json.push_str("}\n");
+    std::fs::write("BENCH_serve.json", &json).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+}

@@ -1,7 +1,12 @@
-//! Multi-model serving: one router, two LUT engines (digits + fashion
-//! linear classifiers), independently batched pipelines — the
-//! multi-tenant edge-deployment shape the paper's concluding remarks
-//! motivate ("having a LUT at each sensor").
+//! Multi-model fleet serving: one registry, two LUT engines (digits +
+//! fashion linear classifiers) loaded from `.ltm` artifacts and served
+//! behind independently-batched pipelines — the multi-tenant edge
+//! deployment the paper's concluding remarks motivate ("having a LUT
+//! at each sensor"). Exercises the full fleet lifecycle under load:
+//! register both tenants, hot-swap the digits model to a v2 mid-run
+//! (zero requests lost, versions never mixed in a batch), then retire
+//! the fashion model and show routing to it fails cleanly while digits
+//! keeps serving.
 //!
 //!     cargo run --release --example multi_model -- [--requests 2000]
 
@@ -9,13 +14,40 @@ use std::path::Path;
 use std::sync::Arc;
 use tablenet::config::cli::Args;
 use tablenet::config::ServeConfig;
-use tablenet::coordinator::router::Router;
-use tablenet::coordinator::Backend;
-use tablenet::data::synth::Kind;
+use tablenet::coordinator::registry::ModelRegistry;
+use tablenet::coordinator::router::RouteError;
 use tablenet::data::load_or_generate;
-use tablenet::engine::plan::EnginePlan;
-use tablenet::engine::Compiler;
-use tablenet::nn::{weights, Arch};
+use tablenet::data::synth::Kind;
+use tablenet::data::Split;
+use tablenet::engine::plan::{AffineMode, EnginePlan};
+use tablenet::engine::{Compiler, LutModel};
+use tablenet::nn::{weights, Arch, Model};
+use tablenet::train::{train_dense, TrainConfig};
+
+/// Load trained linear weights, or train a quick in-Rust replacement so
+/// the example runs from a bare checkout.
+fn linear_model(wpath: &str, train: &Split) -> anyhow::Result<Model> {
+    match weights::load_model(Arch::Linear, Path::new(wpath)) {
+        Ok(m) => Ok(m),
+        Err(e) => {
+            println!("({e}); training in-Rust instead");
+            Ok(train_dense(
+                train,
+                &[784, 10],
+                &TrainConfig { steps: 1500, lr: 0.2, ..Default::default() },
+            ))
+        }
+    }
+}
+
+/// Compile to a `.ltm`, then serve from the artifact — never the
+/// weights — mirroring a real deployment.
+fn compile_artifact(model: &Model, plan: &EnginePlan, path: &str) -> anyhow::Result<LutModel> {
+    let lut = Compiler::new(model).plan(plan).build().expect("plan materialises");
+    std::fs::create_dir_all("artifacts")?;
+    lut.save(Path::new(path))?;
+    Ok(LutModel::load(Path::new(path))?)
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
@@ -24,50 +56,97 @@ fn main() -> anyhow::Result<()> {
     let digits = load_or_generate(Path::new("data/synth"), Kind::Digits, 6000, 1000, 7)?;
     let fashion = load_or_generate(Path::new("data/synth"), Kind::Fashion, 6000, 1000, 7)?;
 
-    let mk = |path: &str| -> anyhow::Result<Arc<dyn Backend>> {
-        let model = weights::load_model(Arch::Linear, Path::new(path))?;
-        Ok(Arc::new(Compiler::new(&model).plan(&EnginePlan::linear_default()).build().unwrap()))
-    };
-    let router = Router::start(
-        vec![
-            ("digits".to_string(), mk("artifacts/weights_linear.bin")?),
-            ("fashion".to_string(), mk("artifacts/weights_linear_fashion.bin")?),
-        ],
-        &ServeConfig { max_batch: 32, max_wait_us: 200, workers: 1, queue_cap: 512 },
-    );
-    println!("serving models: {:?}", router.models());
+    let digits_model = linear_model("artifacts/weights_linear.bin", &digits.train)?;
+    let fashion_model = linear_model("artifacts/weights_linear_fashion.bin", &fashion.train)?;
+    let plan = EnginePlan::linear_default();
 
-    let client = router.client();
+    let registry = ModelRegistry::new();
+    // per-model batching policies: the digits tenant takes bursty
+    // traffic (bigger batches), fashion stays latency-tight
+    registry.register(
+        "digits",
+        Arc::new(compile_artifact(&digits_model, &plan, "artifacts/model_digits.ltm")?),
+        &ServeConfig { max_batch: 32, max_wait_us: 200, workers: 1, queue_cap: 512 },
+    )?;
+    registry.register(
+        "fashion",
+        Arc::new(compile_artifact(&fashion_model, &plan, "artifacts/model_fashion.ltm")?),
+        &ServeConfig { max_batch: 8, max_wait_us: 50, workers: 1, queue_cap: 512 },
+    )?;
+    for info in registry.models() {
+        println!("serving '{}' v{} ({}, {} workers)", info.name, info.version, info.backend, info.workers);
+    }
+
+    let client = registry.client();
     let t0 = std::time::Instant::now();
     let mut correct = [0usize; 2];
     let mut served = [0usize; 2];
+    let mut digits_v2 = 0usize;
+    let swap_at = n_requests / 2;
+    let retire_at = n_requests * 3 / 4;
+    let mut fashion_retired = false;
     for i in 0..n_requests {
-        // interleave traffic across tenants
+        if i == swap_at {
+            // rolling deployment: digits v2 (sharper input bits) goes
+            // live under load; in-flight batches finish on v1
+            let v2_plan = EnginePlan {
+                affine: vec![AffineMode::BitplaneFixed { bits: 4, m: 14, range_exp: 0 }],
+                fallback: AffineMode::Float { planes: 11, m: 1 },
+                r_o: 16,
+            };
+            let v2 =
+                compile_artifact(&digits_model, &v2_plan, "artifacts/model_digits_v2.ltm")?;
+            let version = registry.swap("digits", Arc::new(v2))?;
+            println!("[{i}] hot-swapped 'digits' -> v{version}");
+        }
+        if i == retire_at {
+            let snap = registry.retire("fashion")?;
+            println!(
+                "[{i}] retired 'fashion' after {} requests (drained, zero lost)",
+                snap.completed
+            );
+            fashion_retired = true;
+        }
+        // interleave traffic across tenants; after retirement the
+        // fashion share routes must fail cleanly, never hang
         let (name, ds, slot) = if i % 2 == 0 {
             ("digits", &digits, 0)
         } else {
             ("fashion", &fashion, 1)
         };
         let idx = (i / 2) % ds.test.len();
-        let resp = client.infer(name, ds.test.image(idx).to_vec())?;
-        served[slot] += 1;
-        if resp.class == ds.test.labels[idx] {
-            correct[slot] += 1;
+        match client.infer(name, ds.test.image(idx).to_vec()) {
+            Ok(resp) => {
+                served[slot] += 1;
+                if resp.class == ds.test.labels[idx] {
+                    correct[slot] += 1;
+                }
+                if name == "digits" && resp.version >= 2 {
+                    digits_v2 += 1;
+                }
+            }
+            Err(RouteError::UnknownModel(m)) => {
+                assert!(fashion_retired && m == "fashion", "unexpected unknown model {m}");
+            }
+            Err(e) => return Err(e.into()),
         }
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    let snaps = router.shutdown();
-    for (name, snap) in &snaps {
-        println!("\n[{name}]\n{snap}");
-        snap.ops.assert_multiplier_less();
-    }
+    let fleet = registry.shutdown();
+    println!("\n{fleet}");
+    fleet.assert_multiplier_less();
     println!(
-        "\ndigits acc {:.1}%  fashion acc {:.1}%  | {:.0} req/s total",
-        100.0 * correct[0] as f64 / served[0] as f64,
-        100.0 * correct[1] as f64 / served[1] as f64,
-        n_requests as f64 / wall
+        "\ndigits acc {:.1}% ({} served, {} by v2)  fashion acc {:.1}% ({} served before retirement)",
+        100.0 * correct[0] as f64 / served[0].max(1) as f64,
+        served[0],
+        digits_v2,
+        100.0 * correct[1] as f64 / served[1].max(1) as f64,
+        served[1],
     );
-    println!("both tenants multiplier-less ✓");
+    println!(
+        "{:.0} req/s total | every tenant multiplier-less, swap + retire under load ✓",
+        (served[0] + served[1]) as f64 / wall
+    );
     Ok(())
 }

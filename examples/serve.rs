@@ -1,10 +1,11 @@
-//! END-TO-END DRIVER: loads a trained model, compiles the
-//! multiplier-less engine, starts the serving coordinator (router +
-//! dynamic batcher + worker pool), drives it with concurrent clients on
-//! a real workload, and reports latency percentiles, throughput,
-//! accuracy and the aggregate op counters (proving zero multiplies
-//! across the whole serve run). This exercises every layer: artifacts
-//! (L2-trained weights) -> LUT banks (L1 semantics) -> coordinator (L3).
+//! END-TO-END DRIVER: trains (or loads) a model, compiles it to a
+//! servable `.ltm` artifact, starts the registry serving runtime from
+//! the ARTIFACT ALONE (the deployment shape — no weights on the serve
+//! path), drives it with concurrent clients on a real workload, and
+//! hot-swaps a freshly compiled v2 mid-load: zero requests lost, no
+//! batch mixes versions, and the whole run stays multiplier-less.
+//! This exercises every layer: trained weights (L2) -> compiled LUT
+//! artifact (L1 semantics) -> registry/batcher/workers (L3).
 //!
 //!     cargo run --release --example serve -- \
 //!         [--arch linear|mlp] [--requests 2000] [--clients 4] \
@@ -14,11 +15,11 @@ use std::path::Path;
 use std::sync::Arc;
 use tablenet::config::cli::Args;
 use tablenet::config::ServeConfig;
-use tablenet::coordinator::Coordinator;
-use tablenet::data::synth::Kind;
+use tablenet::coordinator::registry::ModelRegistry;
 use tablenet::data::load_or_generate;
-use tablenet::engine::plan::EnginePlan;
-use tablenet::engine::Compiler;
+use tablenet::data::synth::Kind;
+use tablenet::engine::plan::{AffineMode, EnginePlan};
+use tablenet::engine::{Compiler, LutModel};
 use tablenet::nn::{weights, Arch};
 use tablenet::train::{train_dense, TrainConfig};
 use tablenet::util::fmt_bits;
@@ -45,12 +46,17 @@ fn main() -> anyhow::Result<()> {
         Err(e) => return Err(e),
     };
 
+    // compile -> artifact -> load: serve from the .ltm, not the weights
     let plan = EnginePlan::default_for(arch);
-    let engine = Compiler::new(&model).plan(&plan).build().expect("default plan materialises");
+    let v1 = Compiler::new(&model).plan(&plan).build().expect("default plan materialises");
+    std::fs::create_dir_all("artifacts")?;
+    let ltm = format!("artifacts/model_{}.ltm", arch.name());
+    v1.save(Path::new(&ltm))?;
+    let engine = LutModel::load(Path::new(&ltm))?;
     println!(
-        "engine: {} of LUTs, plan {:?}",
+        "serving artifact {ltm}: {} of LUTs, plan {:?}",
         fmt_bits(engine.size_bits()),
-        plan.affine
+        engine.plan().affine
     );
 
     let cfg = ServeConfig {
@@ -59,49 +65,77 @@ fn main() -> anyhow::Result<()> {
         workers: args.get_usize("workers", 1),
         queue_cap: args.get_usize("queue-cap", 1024),
     };
-    cfg.validate()?;
     let n_requests = args.get_usize("requests", 2000);
     let n_clients = args.get_usize("clients", 4).max(1);
 
-    let coord = Coordinator::start(Arc::new(engine), &cfg);
+    let registry = ModelRegistry::new();
+    registry.register("primary", Arc::new(engine), &cfg)?;
+
+    let client_handle = registry.client();
     let test = Arc::new(ds.test);
     let t0 = std::time::Instant::now();
     let mut joins = Vec::new();
     for c in 0..n_clients {
-        let client = coord.client();
+        let client = client_handle.clone();
         let test = test.clone();
         let n = n_requests / n_clients;
         joins.push(std::thread::spawn(move || {
             let mut correct = 0usize;
+            let mut v2_seen = 0usize;
             for i in 0..n {
                 let idx = (c * n + i) % test.len();
                 let resp = client
-                    .infer_blocking(test.image(idx).to_vec())
-                    .expect("coordinator alive");
+                    .infer("primary", test.image(idx).to_vec())
+                    .expect("registry alive");
                 if resp.class == test.labels[idx] {
                     correct += 1;
                 }
+                if resp.version >= 2 {
+                    v2_seen += 1;
+                }
             }
-            (n, correct)
+            (n, correct, v2_seen)
         }));
     }
-    let (mut served, mut correct) = (0usize, 0usize);
+
+    // rolling deployment under load: recompile with a sharper input
+    // quantization and hot-swap it in; in-flight batches finish on v1
+    let planned = (n_requests / n_clients) * n_clients;
+    while registry.fleet_completed() < (planned / 2) as u64 {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    let plan_v2 = match arch {
+        Arch::Linear => EnginePlan {
+            affine: vec![AffineMode::BitplaneFixed { bits: 4, m: 14, range_exp: 0 }],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        },
+        _ => plan.clone(),
+    };
+    let v2 = Compiler::new(&model).plan(&plan_v2).build().expect("v2 plan materialises");
+    let version = registry.swap("primary", Arc::new(v2))?;
+    println!("hot-swapped 'primary' -> version {version} (input bits bumped)");
+
+    let (mut served, mut correct, mut v2_seen) = (0usize, 0usize, 0usize);
     for j in joins {
-        let (s, c) = j.join().unwrap();
+        let (s, c, v) = j.join().unwrap();
         served += s;
         correct += c;
+        v2_seen += v;
     }
     let wall = t0.elapsed().as_secs_f64();
-    let snap = coord.shutdown();
+    let fleet = registry.shutdown();
 
-    println!("\n=== serve report ({} clients, batch<= {}) ===", n_clients, cfg.max_batch);
-    println!("{snap}");
+    println!("\n=== serve report ({n_clients} clients, batch <= {}) ===", cfg.max_batch);
+    println!("{fleet}");
     println!(
-        "\nwall: {wall:.2}s -> {:.0} req/s | accuracy {:.2}% over {served} requests",
+        "\nwall: {wall:.2}s -> {:.0} req/s | accuracy {:.2}% over {served} requests \
+         ({v2_seen} served by v2)",
         served as f64 / wall,
         100.0 * correct as f64 / served as f64
     );
-    snap.ops.assert_multiplier_less();
-    println!("multiplier-less invariant held across the entire run ✓");
+    assert_eq!(fleet.completed() as usize, served, "a request went missing");
+    fleet.assert_multiplier_less();
+    println!("zero requests lost across the swap; multiplier-less invariant held ✓");
     Ok(())
 }

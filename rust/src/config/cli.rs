@@ -7,6 +7,10 @@ use std::collections::BTreeMap;
 pub struct Args {
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
+    /// Every `--key value` occurrence in order — lets flags repeat
+    /// (`--artifact a=x.ltm --artifact b=y.ltm`); `flags` keeps the
+    /// last occurrence for the scalar getters.
+    repeats: Vec<(String, String)>,
     bools: Vec<String>,
 }
 
@@ -25,6 +29,7 @@ impl Args {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
+                    out.repeats.push((k.to_string(), v.to_string()));
                 } else if switches.contains(&rest) {
                     out.bools.push(rest.to_string());
                 } else if it
@@ -33,7 +38,8 @@ impl Args {
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
-                    out.flags.insert(rest.to_string(), v);
+                    out.flags.insert(rest.to_string(), v.clone());
+                    out.repeats.push((rest.to_string(), v));
                 } else {
                     out.bools.push(rest.to_string());
                 }
@@ -64,6 +70,15 @@ impl Args {
 
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
+    }
+
+    /// Every value of a repeated `--key value` flag, in argv order.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.repeats
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
@@ -137,6 +152,18 @@ mod tests {
     fn trailing_boolean_flag() {
         let a = parse("cmd --flag");
         assert!(a.switch("flag"));
+    }
+
+    #[test]
+    fn repeated_flags_accumulate_in_order() {
+        let a = parse("serve --artifact digits=d.ltm --artifact fashion=f.ltm");
+        assert_eq!(a.get_all("artifact"), vec!["digits=d.ltm", "fashion=f.ltm"]);
+        // scalar getter sees the last occurrence
+        assert_eq!(a.get("artifact"), Some("fashion=f.ltm"));
+        // equals form mixes with space form
+        let a = parse("--artifact=x.ltm --artifact y.ltm");
+        assert_eq!(a.get_all("artifact"), vec!["x.ltm", "y.ltm"]);
+        assert!(a.get_all("missing").is_empty());
     }
 
     #[test]

@@ -100,6 +100,15 @@ impl Json {
         }
     }
 
+    /// Borrow the key/value map, if this is an object (the multi-model
+    /// fleet config iterates model entries by name this way).
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),

@@ -40,13 +40,19 @@ impl ServeConfig {
     }
 
     pub fn from_json(j: &Json) -> Result<ServeConfig> {
+        ServeConfig::from_json_over(j, &ServeConfig::default())
+    }
+
+    /// Strict decode with `base` supplying any unspecified knob — a
+    /// fleet file's per-model override inherits the fleet defaults for
+    /// the keys it does not mention, not the global built-ins.
+    pub fn from_json_over(j: &Json, base: &ServeConfig) -> Result<ServeConfig> {
         reject_unknown_keys(j, "serve config", &["max_batch", "max_wait_us", "workers", "queue_cap"])?;
-        let d = ServeConfig::default();
         Ok(ServeConfig {
-            max_batch: get_usize(j, "max_batch", d.max_batch)?,
-            max_wait_us: get_u64(j, "max_wait_us", d.max_wait_us)?,
-            workers: get_usize(j, "workers", d.workers)?,
-            queue_cap: get_usize(j, "queue_cap", d.queue_cap)?,
+            max_batch: get_usize(j, "max_batch", base.max_batch)?,
+            max_wait_us: get_u64(j, "max_wait_us", base.max_wait_us)?,
+            workers: get_usize(j, "workers", base.workers)?,
+            queue_cap: get_usize(j, "queue_cap", base.queue_cap)?,
         })
     }
 
@@ -70,6 +76,153 @@ impl ServeConfig {
             bail!("queue_cap ({}) < max_batch ({})", self.queue_cap, self.max_batch);
         }
         Ok(())
+    }
+}
+
+/// One model of a serving fleet: a compiled `.ltm` artifact plus an
+/// optional per-model serving override (None = fleet defaults).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub artifact: PathBuf,
+    pub serve: Option<ServeConfig>,
+}
+
+/// Multi-model serving configuration: fleet-wide defaults plus one
+/// [`ModelConfig`] per named model. This is what `tablenet serve`
+/// builds from repeated `--artifact name=path` flags or a `--fleet`
+/// JSON file, and what the registry starts pipelines from.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FleetConfig {
+    pub defaults: ServeConfig,
+    pub models: std::collections::BTreeMap<String, ModelConfig>,
+}
+
+/// Parse one `--artifact` spec: `name=path`, or a bare `path` whose
+/// file stem becomes the model name.
+pub fn parse_artifact_spec(spec: &str) -> Result<(String, PathBuf)> {
+    if let Some((name, path)) = spec.split_once('=') {
+        if name.is_empty() || path.is_empty() {
+            bail!("bad --artifact spec '{spec}' (want name=path or path)");
+        }
+        return Ok((name.to_string(), PathBuf::from(path)));
+    }
+    let path = PathBuf::from(spec);
+    let name = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .filter(|s| !s.is_empty())
+        .ok_or_else(|| anyhow!("cannot derive a model name from '{spec}'; use name=path"))?
+        .to_string();
+    Ok((name, path))
+}
+
+impl FleetConfig {
+    /// The effective serving config of `name`: its override, or the
+    /// fleet defaults.
+    pub fn effective(&self, name: &str) -> ServeConfig {
+        self.models
+            .get(name)
+            .and_then(|m| m.serve.clone())
+            .unwrap_or_else(|| self.defaults.clone())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let models = self
+            .models
+            .iter()
+            .map(|(name, m)| {
+                let mut fields = vec![(
+                    "artifact".to_string(),
+                    Json::str(&m.artifact.display().to_string()),
+                )];
+                if let Some(s) = &m.serve {
+                    fields.push(("serve".to_string(), s.to_json()));
+                }
+                (name.clone(), Json::Obj(fields.into_iter().collect()))
+            })
+            .collect();
+        Json::obj(vec![
+            ("defaults", self.defaults.to_json()),
+            ("models", Json::Obj(models)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FleetConfig> {
+        reject_unknown_keys(j, "fleet config", &["defaults", "models"])?;
+        let defaults = match j.get("defaults") {
+            Some(d) => ServeConfig::from_json(d)?,
+            None => ServeConfig::default(),
+        };
+        let mut models = std::collections::BTreeMap::new();
+        if let Some(mj) = j.get("models") {
+            let map = mj
+                .as_obj()
+                .ok_or_else(|| anyhow!("'models' must be an object of name -> model"))?;
+            for (name, entry) in map {
+                reject_unknown_keys(entry, &format!("model '{name}'"), &["artifact", "serve"])?;
+                let artifact = entry
+                    .get("artifact")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("model '{name}' missing 'artifact'"))?;
+                // partial overrides inherit the FLEET defaults, not the
+                // global built-ins
+                let serve = match entry.get("serve") {
+                    Some(s) => Some(ServeConfig::from_json_over(s, &defaults)?),
+                    None => None,
+                };
+                models.insert(
+                    name.clone(),
+                    ModelConfig { artifact: PathBuf::from(artifact), serve },
+                );
+            }
+        }
+        Ok(FleetConfig { defaults, models })
+    }
+
+    /// Build from CLI args: an optional `--fleet config.json` base,
+    /// fleet-wide knob overrides (`--max-batch` etc. apply to
+    /// `defaults`), then repeated `--artifact name=path` additions.
+    pub fn from_args(args: &cli::Args) -> Result<FleetConfig> {
+        let mut fc = match args.get("fleet") {
+            Some(path) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading fleet config {path}"))?;
+                let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+                FleetConfig::from_json(&j)?
+            }
+            None => FleetConfig::default(),
+        };
+        fc.defaults = fc.defaults.override_with(args);
+        // CLI knobs outrank the fleet file everywhere: per-model
+        // overrides were materialized over the FILE defaults inside
+        // from_json, so apply the same CLI flags to them too — a model
+        // keeps its own explicit knobs for flags the CLI didn't set
+        for m in fc.models.values_mut() {
+            if let Some(s) = m.serve.take() {
+                m.serve = Some(s.override_with(args));
+            }
+        }
+        for spec in args.get_all("artifact") {
+            let (name, path) = parse_artifact_spec(spec)?;
+            // a name collision (two --artifact flags, or a flag
+            // shadowing a --fleet entry) is an operator typo, never a
+            // silent replace — mirror the registry's duplicate rule
+            if fc.models.contains_key(&name) {
+                bail!("duplicate model name '{name}' (from --artifact {spec})");
+            }
+            fc.models.insert(name, ModelConfig { artifact: path, serve: None });
+        }
+        Ok(fc)
+    }
+
+    /// Validate every model's effective config.
+    pub fn validate(&self) -> Result<()> {
+        for name in self.models.keys() {
+            self.effective(name)
+                .validate()
+                .with_context(|| format!("model '{name}'"))?;
+        }
+        self.defaults.validate()
     }
 }
 
@@ -306,6 +459,131 @@ mod tests {
         assert!(c.validate().is_err());
         c = ServeConfig { queue_cap: 1, max_batch: 8, ..ServeConfig::default() };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_config_roundtrip_and_overrides() {
+        let mut fc = FleetConfig::default();
+        fc.defaults.max_batch = 16;
+        fc.models.insert(
+            "digits".to_string(),
+            ModelConfig { artifact: PathBuf::from("d.ltm"), serve: None },
+        );
+        fc.models.insert(
+            "fashion".to_string(),
+            ModelConfig {
+                artifact: PathBuf::from("f.ltm"),
+                serve: Some(ServeConfig { max_batch: 4, ..ServeConfig::default() }),
+            },
+        );
+        let text = fc.to_json().to_string_pretty();
+        let back = FleetConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, fc);
+        // per-model override wins; others inherit defaults
+        assert_eq!(back.effective("fashion").max_batch, 4);
+        assert_eq!(back.effective("digits").max_batch, 16);
+        assert_eq!(back.effective("unknown").max_batch, 16);
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn fleet_config_rejects_unknown_and_malformed_keys() {
+        for bad in [
+            r#"{"default": {}}"#,
+            r#"{"models": {"m": {"artifcat": "x.ltm"}}}"#,
+            r#"{"models": {"m": {}}}"#,
+            r#"{"models": {"m": {"artifact": "x.ltm", "serve": {"max_batc": 3}}}}"#,
+            r#"{"models": [1, 2]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(FleetConfig::from_json(&j).is_err(), "accepted: {bad}");
+        }
+        let ok = Json::parse(r#"{"models": {"m": {"artifact": "x.ltm"}}}"#).unwrap();
+        assert!(FleetConfig::from_json(&ok).is_ok());
+    }
+
+    #[test]
+    fn fleet_from_repeated_artifact_flags() {
+        let args = cli::Args::parse(
+            ["--artifact", "digits=d.ltm", "--artifact", "path/to/fashion.ltm",
+             "--max-batch", "8"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let fc = FleetConfig::from_args(&args).unwrap();
+        assert_eq!(fc.models.len(), 2);
+        assert_eq!(fc.models["digits"].artifact, PathBuf::from("d.ltm"));
+        // bare path: model name = file stem
+        assert_eq!(fc.models["fashion"].artifact, PathBuf::from("path/to/fashion.ltm"));
+        assert_eq!(fc.defaults.max_batch, 8);
+    }
+
+    #[test]
+    fn partial_model_override_inherits_fleet_defaults() {
+        // only 'workers' is overridden; the rest must come from the
+        // fleet defaults (max_batch 64), NOT ServeConfig::default()
+        let j = Json::parse(
+            r#"{"defaults": {"max_batch": 64},
+                "models": {"m": {"artifact": "m.ltm", "serve": {"workers": 2}}}}"#,
+        )
+        .unwrap();
+        let fc = FleetConfig::from_json(&j).unwrap();
+        let eff = fc.effective("m");
+        assert_eq!(eff.workers, 2);
+        assert_eq!(eff.max_batch, 64, "override must inherit fleet defaults");
+        assert_eq!(eff.queue_cap, ServeConfig::default().queue_cap);
+    }
+
+    #[test]
+    fn cli_knobs_outrank_fleet_file_for_overridden_models_too() {
+        // a model with a partial per-model override must still see CLI
+        // flags (CLI > per-model > file defaults), keeping its own
+        // explicit knobs for flags the CLI did not set
+        let dir = std::env::temp_dir().join("tablenet_fleet_cli");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fleet.json");
+        std::fs::write(
+            &path,
+            r#"{"defaults": {"max_batch": 64},
+                "models": {"m": {"artifact": "m.ltm", "serve": {"workers": 2}}}}"#,
+        )
+        .unwrap();
+        let args = cli::Args::parse(
+            ["--fleet", path.to_str().unwrap(), "--max-batch", "8"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let fc = FleetConfig::from_args(&args).unwrap();
+        assert_eq!(fc.defaults.max_batch, 8);
+        let eff = fc.effective("m");
+        assert_eq!(eff.max_batch, 8, "CLI flag must reach overridden models");
+        assert_eq!(eff.workers, 2, "model keeps its own explicit knobs");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn duplicate_artifact_names_are_rejected() {
+        let args = cli::Args::parse(
+            ["--artifact", "a=old.ltm", "--artifact", "a=new.ltm"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let e = FleetConfig::from_args(&args).unwrap_err();
+        assert!(format!("{e}").contains("duplicate model name 'a'"), "{e}");
+    }
+
+    #[test]
+    fn artifact_spec_parsing() {
+        assert_eq!(
+            parse_artifact_spec("a=m.ltm").unwrap(),
+            ("a".to_string(), PathBuf::from("m.ltm"))
+        );
+        assert_eq!(
+            parse_artifact_spec("dir/model_linear.ltm").unwrap(),
+            ("model_linear".to_string(), PathBuf::from("dir/model_linear.ltm"))
+        );
+        assert!(parse_artifact_spec("=x").is_err());
+        assert!(parse_artifact_spec("a=").is_err());
     }
 
     #[test]

@@ -20,6 +20,12 @@ impl BatchPolicy {
     pub fn new(max_batch: usize, max_wait_us: u64) -> Self {
         BatchPolicy { max_batch, max_wait: Duration::from_micros(max_wait_us) }
     }
+
+    /// The policy a [`crate::config::ServeConfig`] describes — each
+    /// registered model runs its own policy (per-model batching knobs).
+    pub fn from_cfg(cfg: &crate::config::ServeConfig) -> Self {
+        BatchPolicy::new(cfg.max_batch, cfg.max_wait_us)
+    }
 }
 
 /// Collect the next batch from `rx`. Blocks for the first item; then

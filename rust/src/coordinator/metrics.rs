@@ -1,9 +1,12 @@
 //! Serving metrics: latency percentiles, throughput, queue rejections,
 //! batch-size distribution and aggregate engine op counters (so a serve
 //! run can report "x lookups, y shift-adds, 0 multiplies" end-to-end).
+//! Per-model [`Snapshot`]s roll up into a [`FleetSnapshot`] when the
+//! registry serves several models.
 
 use crate::engine::counters::Counters;
 use crate::util::percentile;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -14,6 +17,7 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
     pub batches: AtomicU64,
+    pub swaps: AtomicU64,
     batch_items: AtomicU64,
     ops: Mutex<Counters>,
     /// total latency in µs, and per-request samples for percentiles
@@ -27,6 +31,8 @@ pub struct Snapshot {
     pub completed: u64,
     pub rejected: u64,
     pub batches: u64,
+    /// Hot-swaps installed over the pipeline's lifetime.
+    pub swaps: u64,
     pub mean_batch: f64,
     pub elapsed_s: f64,
     pub throughput_rps: f64,
@@ -44,6 +50,7 @@ impl Default for Metrics {
             completed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
             batch_items: AtomicU64::new(0),
             ops: Mutex::new(Counters::default()),
             latency_us: Mutex::new(Vec::new()),
@@ -81,6 +88,10 @@ impl Metrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_swap(&self) {
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
@@ -92,6 +103,7 @@ impl Metrics {
             completed,
             rejected: self.rejected.load(Ordering::Relaxed),
             batches,
+            swaps: self.swaps.load(Ordering::Relaxed),
             mean_batch: if batches > 0 { items as f64 / batches as f64 } else { 0.0 },
             elapsed_s: elapsed,
             throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
@@ -101,6 +113,75 @@ impl Metrics {
             queue_p95_us: percentile(&q, 95.0),
             ops: *self.ops.lock().unwrap(),
         }
+    }
+}
+
+/// One model's snapshot plus its registry identity (installed version
+/// and backend name) at snapshot time.
+#[derive(Debug, Clone)]
+pub struct ModelSnapshot {
+    /// Monotonic backend version installed when the snapshot was taken
+    /// (1 for the initially registered backend).
+    pub version: u64,
+    /// `Backend::name` of the installed backend.
+    pub backend: String,
+    pub stats: Snapshot,
+}
+
+/// Per-model snapshots rolled up across the registry, plus fleet-level
+/// totals derived from them.
+#[derive(Debug, Clone, Default)]
+pub struct FleetSnapshot {
+    pub models: BTreeMap<String, ModelSnapshot>,
+}
+
+impl FleetSnapshot {
+    pub fn completed(&self) -> u64 {
+        self.models.values().map(|m| m.stats.completed).sum()
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.models.values().map(|m| m.stats.rejected).sum()
+    }
+
+    pub fn swaps(&self) -> u64 {
+        self.models.values().map(|m| m.stats.swaps).sum()
+    }
+
+    /// Aggregate op mix across every model.
+    pub fn ops(&self) -> Counters {
+        let mut total = Counters::default();
+        for m in self.models.values() {
+            total += m.stats.ops;
+        }
+        total
+    }
+
+    /// The multiplier-less invariant must hold **per model**, not just
+    /// in aggregate — a multiply in one tenant cannot hide behind
+    /// another tenant's clean counters.
+    pub fn assert_multiplier_less(&self) {
+        for (name, m) in &self.models {
+            assert_eq!(m.stats.ops.mults, 0, "model '{name}' recorded multiplies");
+        }
+    }
+}
+
+impl std::fmt::Display for FleetSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (name, m) in &self.models {
+            writeln!(f, "[{name} v{} · {}]", m.version, m.backend)?;
+            writeln!(f, "{}", m.stats)?;
+        }
+        write!(
+            f,
+            "fleet: {} models | {} ok, {} rejected, {} swaps | ops {}",
+            self.models.len(),
+            self.completed(),
+            self.rejected(),
+            self.swaps(),
+            self.ops()
+        )
     }
 }
 
@@ -162,5 +243,40 @@ mod tests {
         let text = format!("{}", m.snapshot());
         assert!(text.contains("mults=0"));
         assert!(text.contains("throughput"));
+    }
+
+    #[test]
+    fn fleet_rollup_sums_models() {
+        let mk = |n: u64| {
+            let m = Metrics::default();
+            for _ in 0..n {
+                m.record_request(1.0, 2.0, Counters { lut_evals: 3, ..Default::default() });
+            }
+            m.record_swap();
+            ModelSnapshot { version: 2, backend: "echo".into(), stats: m.snapshot() }
+        };
+        let mut fleet = FleetSnapshot::default();
+        fleet.models.insert("a".into(), mk(4));
+        fleet.models.insert("b".into(), mk(6));
+        assert_eq!(fleet.completed(), 10);
+        assert_eq!(fleet.swaps(), 2);
+        assert_eq!(fleet.ops().lut_evals, 30);
+        fleet.assert_multiplier_less();
+        let text = format!("{fleet}");
+        assert!(text.contains("[a v2 · echo]"), "{text}");
+        assert!(text.contains("fleet: 2 models"), "{text}");
+    }
+
+    #[test]
+    #[should_panic(expected = "recorded multiplies")]
+    fn fleet_multiplier_invariant_is_per_model() {
+        let m = Metrics::default();
+        m.record_request(1.0, 2.0, Counters { mults: 1, ..Default::default() });
+        let mut fleet = FleetSnapshot::default();
+        fleet.models.insert(
+            "dirty".into(),
+            ModelSnapshot { version: 1, backend: "x".into(), stats: m.snapshot() },
+        );
+        fleet.assert_multiplier_less();
     }
 }

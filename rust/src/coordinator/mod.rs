@@ -1,30 +1,42 @@
-//! Serving coordinator (Layer 3): a single-node request router with a
-//! dynamic batcher, a worker pool and bounded-queue backpressure —
-//! serving the multiplier-less engine the way an edge deployment would
-//! (paper §Concluding remarks: sensor-level LUT inference).
+//! Serving runtime (Layer 3): a multi-model registry of named,
+//! versioned, hot-swappable backends, each behind its own dynamic
+//! batching pipeline with bounded-queue backpressure — serving the
+//! multiplier-less engine the way an edge fleet deployment would
+//! (paper §Concluding remarks: one small table model per task/sensor).
 //!
-//! Topology:
+//! Topology (one pipeline per registered model):
 //!
 //! ```text
-//! Client::infer ──► bounded request queue ──► batcher thread
-//!                                              │ (max_batch / max_wait)
-//!                                              ▼
-//!                                        batch queue ──► N worker threads
-//!                                                          │ Backend::infer_batch
-//!                                                          ▼
-//!                                               per-request response channel
+//! FleetClient::infer("name", row)
+//!      │ registry lookup (live: register/swap/retire visible)
+//!      ▼
+//! bounded request queue ──► batcher thread (max_batch / max_wait)
+//!                               ▼
+//!                         batch queue ──► N worker threads
+//!                                           │ BackendSlot::get ─ one
+//!                                           │ (version, backend) per batch
+//!                                           │ Backend::infer_batch_scratch
+//!                                           ▼
+//!                                per-request response channel
 //! ```
 //!
 //! Invariants (tested, incl. property tests in `rust/tests/`):
 //! * no request is lost or duplicated — every submitted request gets
-//!   exactly one response (or an explicit rejection at submit time);
+//!   exactly one response (or an explicit rejection at submit time),
+//!   including across [`Coordinator::swap`] hot-swaps;
+//! * a batch executes entirely on ONE backend version: workers take the
+//!   `(version, backend)` pair once per batch, so a swap installs the
+//!   new version for subsequent batches while in-flight batches finish
+//!   on the old one — no batch ever mixes versions;
 //! * batches never exceed `max_batch`;
 //! * FIFO order is preserved through the batcher (single-worker config
 //!   preserves it end-to-end);
-//! * the engine op counters aggregated in metrics show zero multiplies.
+//! * the engine op counters aggregated in metrics show zero multiplies,
+//!   per model, not just in aggregate.
 
 pub mod batcher;
 pub mod metrics;
+pub mod registry;
 pub mod router;
 
 use crate::engine::counters::Counters;
@@ -72,10 +84,11 @@ impl Backend for LutModel {
         self.infer_batch_scratch(images, &mut scratch)
     }
 
-    /// The real batched path: images are staged contiguously in the
-    /// scratch, one `LutModel::infer_batch_into` call executes every
-    /// stage batch-at-a-time over the table arenas, and `max_batch > 1`
-    /// buys actual throughput instead of a serial loop.
+    /// The real batched path: request rows land in the activation
+    /// buffer with ONE copy (`LutModel::infer_batch_rows_into` — no
+    /// intermediate flattened staging), every stage executes
+    /// batch-at-a-time over the table arenas, and `max_batch > 1` buys
+    /// actual throughput instead of a serial loop.
     fn infer_batch_scratch(
         &self,
         images: &[Vec<f32>],
@@ -100,16 +113,8 @@ impl Backend for LutModel {
                 .collect();
         }
         let batch = images.len();
-        scratch.input.clear();
-        for img in images {
-            scratch.input.extend_from_slice(img);
-        }
-        // split the input staging out of the scratch so the stage
-        // runner can borrow the remaining buffers mutably
-        let input = std::mem::take(&mut scratch.input);
         let mut out = BatchInference::default();
-        self.infer_batch_into(&input, batch, scratch, &mut out);
-        scratch.input = input;
+        self.infer_batch_rows_into(images, scratch, &mut out);
         let nclass = out.logits.len() / batch;
         (0..batch)
             .map(|s| InferOutput {
@@ -145,10 +150,42 @@ enum Request {
 pub struct Response {
     pub class: usize,
     pub logits: Vec<f32>,
+    /// Backend version that served this request (monotonic per
+    /// pipeline, 1 = the initially installed backend). Every response
+    /// is attributable to exactly one version: the worker executes the
+    /// whole batch on the one backend it took from the slot.
+    pub version: u64,
     /// Time spent waiting for batch-mates + in the queue.
     pub queue_us: u64,
     /// Total latency submit -> response send.
     pub total_us: u64,
+}
+
+/// The hot-swap point of a pipeline: the current `(version, backend)`
+/// pair. Workers take the pair once per batch under a short lock, so a
+/// batch executes entirely on one version; [`BackendSlot::swap`]
+/// installs the next version for all subsequent batches while in-flight
+/// batches finish on the Arc they already hold.
+struct BackendSlot {
+    current: Mutex<(u64, Arc<dyn Backend>)>,
+}
+
+impl BackendSlot {
+    fn new(backend: Arc<dyn Backend>) -> BackendSlot {
+        BackendSlot { current: Mutex::new((1, backend)) }
+    }
+
+    fn get(&self) -> (u64, Arc<dyn Backend>) {
+        let g = self.current.lock().unwrap();
+        (g.0, g.1.clone())
+    }
+
+    fn swap(&self, backend: Arc<dyn Backend>) -> u64 {
+        let mut g = self.current.lock().unwrap();
+        g.0 += 1;
+        g.1 = backend;
+        g.0
+    }
 }
 
 /// Submission error: the queue is full (backpressure) or the
@@ -207,23 +244,27 @@ impl Client {
     }
 }
 
-/// The running coordinator; call [`Coordinator::shutdown`] to drain and
-/// join all threads (safe even while client clones are still alive —
-/// their subsequent submits fail with `ShutDown`).
+/// The running coordinator: one model's batching pipeline around a
+/// hot-swappable [`BackendSlot`]. Call [`Coordinator::shutdown`] to
+/// drain and join all threads (safe even while client clones are still
+/// alive — their subsequent submits fail with `ShutDown`).
 pub struct Coordinator {
     client: Client,
+    slot: Arc<BackendSlot>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start with the given backend and serving config.
+    /// Start with the given backend (installed as version 1) and
+    /// serving config.
     pub fn start(backend: Arc<dyn Backend>, cfg: &crate::config::ServeConfig) -> Coordinator {
         let metrics = Arc::new(Metrics::default());
+        let slot = Arc::new(BackendSlot::new(backend));
         let (req_tx, req_rx) = sync_channel::<Request>(cfg.queue_cap);
         let (batch_tx, batch_rx) =
             sync_channel::<Vec<WorkItem>>(cfg.workers * 2);
         let batch_rx = Arc::new(Mutex::new(batch_rx));
-        let policy = BatchPolicy::new(cfg.max_batch, cfg.max_wait_us);
+        let policy = BatchPolicy::from_cfg(cfg);
         let mut handles = Vec::new();
 
         // batcher thread
@@ -235,19 +276,46 @@ impl Coordinator {
         }
         // worker pool
         for _ in 0..cfg.workers {
-            let backend = backend.clone();
+            let slot = slot.clone();
             let metrics = metrics.clone();
             let batch_rx = batch_rx.clone();
             handles.push(std::thread::spawn(move || {
-                worker_loop(batch_rx, backend, metrics);
+                worker_loop(batch_rx, slot, metrics);
             }));
         }
 
-        Coordinator { client: Client { tx: req_tx, metrics }, handles }
+        Coordinator { client: Client { tx: req_tx, metrics }, slot, handles }
     }
 
     pub fn client(&self) -> Client {
         self.client.clone()
+    }
+
+    /// Atomic zero-downtime hot-swap: install `backend` as the next
+    /// version. All batches taken after this call execute on the new
+    /// backend; batches already in flight finish on the old one (their
+    /// workers hold its Arc). No request is lost — the queue and the
+    /// pipeline threads are untouched. Returns the new version number.
+    pub fn swap(&self, backend: Arc<dyn Backend>) -> u64 {
+        self.client.metrics.record_swap();
+        self.slot.swap(backend)
+    }
+
+    /// Currently installed backend version (1 = initial).
+    pub fn version(&self) -> u64 {
+        self.slot.get().0
+    }
+
+    /// Requests served so far — one atomic load, no snapshot cost.
+    /// Poll this (not [`Client::metrics`], which clones and sorts the
+    /// latency samples) when watching load progress.
+    pub fn completed(&self) -> u64 {
+        self.client.metrics.completed.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// `Backend::name` of the currently installed backend.
+    pub fn backend_name(&self) -> &'static str {
+        self.slot.get().1.name()
     }
 
     /// Graceful shutdown: requests queued before this call are served,
@@ -300,12 +368,12 @@ type WorkItem = (Vec<f32>, Instant, SyncSender<Response>);
 
 fn worker_loop(
     rx: Arc<Mutex<Receiver<Vec<WorkItem>>>>,
-    backend: Arc<dyn Backend>,
+    slot: Arc<BackendSlot>,
     metrics: Arc<Metrics>,
 ) {
     // worker-owned scratch: all batched-engine intermediates live here
-    // and are reused for the lifetime of the worker (steady-state
-    // serving allocates nothing inside the engine)
+    // and are reused for the lifetime of the worker — across hot-swaps
+    // too (steady-state serving allocates nothing inside the engine)
     let mut scratch = Scratch::new();
     loop {
         let batch = {
@@ -321,6 +389,9 @@ fn worker_loop(
             images.push(img);
             meta.push((enqueued, resp));
         }
+        // ONE (version, backend) pair for the whole batch: a concurrent
+        // swap changes later batches, never splits this one
+        let (version, backend) = slot.get();
         let outputs = backend.infer_batch_scratch(&images, &mut scratch);
         debug_assert_eq!(outputs.len(), meta.len());
         for ((enqueued, resp), out) in meta.into_iter().zip(outputs) {
@@ -330,6 +401,7 @@ fn worker_loop(
             let _ = resp.send(Response {
                 class: out.class,
                 logits: out.logits,
+                version,
                 queue_us,
                 total_us,
             });
@@ -479,6 +551,80 @@ mod tests {
         }
         assert_eq!(agg, total);
         agg.assert_multiplier_less();
+    }
+
+    /// Backend stamping its installed version: class == stamp.
+    struct VersionEcho(usize);
+
+    impl Backend for VersionEcho {
+        fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+            images
+                .iter()
+                .map(|_| InferOutput {
+                    class: self.0,
+                    logits: vec![self.0 as f32],
+                    counters: Counters::default(),
+                })
+                .collect()
+        }
+
+        fn name(&self) -> &'static str {
+            "version-echo"
+        }
+    }
+
+    #[test]
+    fn swap_installs_new_version_for_subsequent_requests() {
+        let coord = Coordinator::start(Arc::new(VersionEcho(1)), &ServeConfig::default());
+        let client = coord.client();
+        let r = client.infer_blocking(vec![0.0]).unwrap();
+        assert_eq!((r.class, r.version), (1, 1));
+        assert_eq!(coord.version(), 1);
+        let v2 = coord.swap(Arc::new(VersionEcho(2)));
+        assert_eq!(v2, 2);
+        assert_eq!(coord.version(), 2);
+        // quiesced pipeline: the next batch must run on the new backend
+        let r = client.infer_blocking(vec![0.0]).unwrap();
+        assert_eq!((r.class, r.version), (2, 2));
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.swaps, 1);
+    }
+
+    #[test]
+    fn swap_loses_no_requests_under_load() {
+        let coord = Coordinator::start(
+            Arc::new(VersionEcho(1)),
+            &ServeConfig { max_batch: 8, max_wait_us: 100, workers: 2, queue_cap: 512 },
+        );
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let client = coord.client();
+            joins.push(std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                for _ in 0..60 {
+                    let r = client.infer_blocking(vec![0.0]).unwrap();
+                    // exact attribution: the stamped class IS the
+                    // version the coordinator reports
+                    assert_eq!(r.class as u64, r.version, "mixed-version response");
+                    seen.push(r.version);
+                }
+                seen
+            }));
+        }
+        for v in 2..=3usize {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            coord.swap(Arc::new(VersionEcho(v)));
+        }
+        let mut versions = Vec::new();
+        for j in joins {
+            versions.extend(j.join().unwrap());
+        }
+        assert_eq!(versions.len(), 240, "a request was lost or duplicated");
+        assert!(versions.iter().all(|&v| (1..=3).contains(&v)));
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 240);
+        assert_eq!(snap.swaps, 2);
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Hot-swappable model registry: the fleet-management half of the
+//! serving runtime. A [`ModelRegistry`] owns one named
+//! [`Coordinator`] pipeline per model — its own [`super::batcher`]
+//! policy, its own worker pool (and per-worker `Scratch`), its own
+//! metrics — and supports rolling deployments over live traffic:
+//!
+//! * [`ModelRegistry::register`] — start serving a new named model;
+//! * [`ModelRegistry::swap`] — atomic zero-downtime version bump: all
+//!   subsequent batches run the new backend, in-flight batches finish
+//!   on the old one, no request lost, no batch mixing versions;
+//! * [`ModelRegistry::retire`] — drain a model's pipeline and remove it
+//!   from the fleet, leaving every other model untouched;
+//! * [`ModelRegistry::fleet`] — per-model snapshots rolled up into a
+//!   [`FleetSnapshot`] (exact per-model op counters, zero multiplies
+//!   asserted per model).
+//!
+//! Request dispatch by model name lives in [`super::router`]
+//! ([`super::router::FleetClient`]); clients resolve names against the
+//! live table, so registrations, swaps and retirements are visible
+//! without re-handing out clients.
+
+use super::metrics::{FleetSnapshot, ModelSnapshot, Snapshot};
+use super::router::FleetClient;
+use super::{Backend, Coordinator};
+use crate::config::ServeConfig;
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+/// Registry-level errors (dispatch-time errors are
+/// [`super::router::RouteError`]).
+#[derive(Debug)]
+pub enum RegistryError {
+    DuplicateModel(String),
+    UnknownModel(String),
+    InvalidConfig(String),
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::DuplicateModel(m) => {
+                write!(f, "model '{m}' is already registered")
+            }
+            RegistryError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            RegistryError::InvalidConfig(e) => write!(f, "invalid serve config: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// One registered model: its running pipeline plus the config it was
+/// started with.
+pub(super) struct ModelEntry {
+    pub(super) coord: Coordinator,
+    pub(super) cfg: ServeConfig,
+}
+
+/// The live model table, shared between the registry handle and every
+/// [`FleetClient`].
+pub(super) struct RegistryShared {
+    pub(super) models: RwLock<BTreeMap<String, ModelEntry>>,
+}
+
+/// Identity card of a registered model at listing time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelInfo {
+    pub name: String,
+    /// Installed backend version (1 = as registered).
+    pub version: u64,
+    /// `Backend::name` of the installed backend.
+    pub backend: &'static str,
+    /// Worker threads of this model's pipeline.
+    pub workers: usize,
+}
+
+/// A set of named, versioned, independently-batched model pipelines
+/// behind one management handle.
+pub struct ModelRegistry {
+    shared: Arc<RegistryShared>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        ModelRegistry::new()
+    }
+}
+
+impl ModelRegistry {
+    /// An empty fleet; add models with [`ModelRegistry::register`].
+    pub fn new() -> ModelRegistry {
+        ModelRegistry {
+            shared: Arc::new(RegistryShared { models: RwLock::new(BTreeMap::new()) }),
+        }
+    }
+
+    /// Start serving `backend` under `name` with its own batching
+    /// pipeline configured by `cfg`. Errors if the name is taken or the
+    /// config is invalid; on success the model is immediately routable
+    /// from every existing [`FleetClient`].
+    pub fn register(
+        &self,
+        name: &str,
+        backend: Arc<dyn Backend>,
+        cfg: &ServeConfig,
+    ) -> Result<(), RegistryError> {
+        cfg.validate().map_err(|e| RegistryError::InvalidConfig(e.to_string()))?;
+        let mut models = self.shared.models.write().unwrap();
+        if models.contains_key(name) {
+            return Err(RegistryError::DuplicateModel(name.to_string()));
+        }
+        models.insert(
+            name.to_string(),
+            ModelEntry { coord: Coordinator::start(backend, cfg), cfg: cfg.clone() },
+        );
+        Ok(())
+    }
+
+    /// Atomic zero-downtime hot-swap of `name` to a new backend
+    /// version (see [`Coordinator::swap`] for the batch-level
+    /// guarantees). Returns the new version number.
+    pub fn swap(&self, name: &str, backend: Arc<dyn Backend>) -> Result<u64, RegistryError> {
+        let models = self.shared.models.read().unwrap();
+        let entry = models
+            .get(name)
+            .ok_or_else(|| RegistryError::UnknownModel(name.to_string()))?;
+        Ok(entry.coord.swap(backend))
+    }
+
+    /// Drain `name`'s pipeline (every accepted request is served) and
+    /// remove it from the fleet. Subsequent routes to `name` fail with
+    /// `UnknownModel`; other models are untouched. Returns the retired
+    /// pipeline's final metrics.
+    pub fn retire(&self, name: &str) -> Result<Snapshot, RegistryError> {
+        let entry = {
+            let mut models = self.shared.models.write().unwrap();
+            models
+                .remove(name)
+                .ok_or_else(|| RegistryError::UnknownModel(name.to_string()))?
+        };
+        // shutdown outside the lock: draining must not block routing
+        // to the rest of the fleet
+        Ok(entry.coord.shutdown())
+    }
+
+    /// A dispatch handle over the live table (cheap to clone).
+    pub fn client(&self) -> FleetClient {
+        FleetClient::new(self.shared.clone())
+    }
+
+    /// The registered models, name-sorted, with installed versions.
+    pub fn models(&self) -> Vec<ModelInfo> {
+        self.shared
+            .models
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(name, e)| ModelInfo {
+                name: name.clone(),
+                version: e.coord.version(),
+                backend: e.coord.backend_name(),
+                workers: e.cfg.workers,
+            })
+            .collect()
+    }
+
+    /// Total requests served across the fleet — cheap atomic reads,
+    /// safe to poll in a tight loop (unlike [`ModelRegistry::fleet`],
+    /// which clones and sorts every model's latency samples).
+    pub fn fleet_completed(&self) -> u64 {
+        self.shared
+            .models
+            .read()
+            .unwrap()
+            .values()
+            .map(|e| e.coord.completed())
+            .sum()
+    }
+
+    /// Live per-model snapshots rolled up into a fleet view.
+    pub fn fleet(&self) -> FleetSnapshot {
+        let models = self.shared.models.read().unwrap();
+        let mut fleet = FleetSnapshot::default();
+        for (name, e) in models.iter() {
+            fleet.models.insert(
+                name.clone(),
+                ModelSnapshot {
+                    version: e.coord.version(),
+                    backend: e.coord.backend_name().to_string(),
+                    stats: e.coord.client().metrics(),
+                },
+            );
+        }
+        fleet
+    }
+
+    /// Drain and stop every pipeline; returns the final fleet snapshot.
+    pub fn shutdown(self) -> FleetSnapshot {
+        let mut models = self.shared.models.write().unwrap();
+        let mut fleet = FleetSnapshot::default();
+        for (name, e) in std::mem::take(&mut *models) {
+            let version = e.coord.version();
+            let backend = e.coord.backend_name().to_string();
+            fleet.models.insert(
+                name,
+                ModelSnapshot { version, backend, stats: e.coord.shutdown() },
+            );
+        }
+        fleet
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::InferOutput;
+    use super::*;
+    use crate::engine::counters::Counters;
+
+    /// Fixed-class probe backend.
+    struct Fixed(usize);
+
+    impl Backend for Fixed {
+        fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+            images
+                .iter()
+                .map(|_| InferOutput {
+                    class: self.0,
+                    logits: vec![self.0 as f32],
+                    counters: Counters { lut_evals: 1, ..Default::default() },
+                })
+                .collect()
+        }
+
+        fn name(&self) -> &'static str {
+            "fixed"
+        }
+    }
+
+    #[test]
+    fn register_swap_retire_lifecycle() {
+        let reg = ModelRegistry::new();
+        let cfg = ServeConfig::default();
+        reg.register("a", Arc::new(Fixed(1)), &cfg).unwrap();
+        reg.register("b", Arc::new(Fixed(2)), &cfg).unwrap();
+        // duplicate name is an error, not a silent replace
+        assert!(matches!(
+            reg.register("a", Arc::new(Fixed(9)), &cfg),
+            Err(RegistryError::DuplicateModel(_))
+        ));
+        let infos = reg.models();
+        assert_eq!(infos.len(), 2);
+        assert_eq!((infos[0].name.as_str(), infos[0].version), ("a", 1));
+
+        let client = reg.client();
+        assert_eq!(client.infer("a", vec![0.0]).unwrap().class, 1);
+        assert_eq!(client.infer("b", vec![0.0]).unwrap().class, 2);
+
+        // hot-swap 'a' to a new version; 'b' unaffected
+        assert_eq!(reg.swap("a", Arc::new(Fixed(7))).unwrap(), 2);
+        let r = client.infer("a", vec![0.0]).unwrap();
+        assert_eq!((r.class, r.version), (7, 2));
+        assert_eq!(client.infer("b", vec![0.0]).unwrap().version, 1);
+        assert!(matches!(
+            reg.swap("nope", Arc::new(Fixed(0))),
+            Err(RegistryError::UnknownModel(_))
+        ));
+
+        // retire 'b'; its snapshot is final, and routing to it now fails
+        let snap = reg.retire("b").unwrap();
+        assert_eq!(snap.completed, 2);
+        assert!(client.infer("b", vec![0.0]).is_err());
+        assert_eq!(client.infer("a", vec![0.0]).unwrap().class, 7);
+        assert!(matches!(reg.retire("b"), Err(RegistryError::UnknownModel(_))));
+
+        let fleet = reg.shutdown();
+        assert_eq!(fleet.models.len(), 1);
+        assert_eq!(fleet.models["a"].version, 2);
+        fleet.assert_multiplier_less();
+    }
+
+    #[test]
+    fn late_registration_is_visible_to_existing_clients() {
+        let reg = ModelRegistry::new();
+        let client = reg.client();
+        assert!(client.infer("late", vec![0.0]).is_err());
+        reg.register("late", Arc::new(Fixed(4)), &ServeConfig::default()).unwrap();
+        assert_eq!(client.infer("late", vec![0.0]).unwrap().class, 4);
+        reg.shutdown();
+    }
+
+    #[test]
+    fn invalid_config_is_rejected_at_register() {
+        let reg = ModelRegistry::new();
+        let bad = ServeConfig { max_batch: 0, ..ServeConfig::default() };
+        assert!(matches!(
+            reg.register("x", Arc::new(Fixed(0)), &bad),
+            Err(RegistryError::InvalidConfig(_))
+        ));
+        assert!(reg.models().is_empty());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn fleet_snapshot_attributes_ops_per_model() {
+        let reg = ModelRegistry::new();
+        let cfg = ServeConfig::default();
+        reg.register("a", Arc::new(Fixed(1)), &cfg).unwrap();
+        reg.register("b", Arc::new(Fixed(2)), &cfg).unwrap();
+        let client = reg.client();
+        for _ in 0..3 {
+            client.infer("a", vec![0.0]).unwrap();
+        }
+        client.infer("b", vec![0.0]).unwrap();
+        let fleet = reg.fleet();
+        assert_eq!(fleet.models["a"].stats.ops.lut_evals, 3);
+        assert_eq!(fleet.models["b"].stats.ops.lut_evals, 1);
+        assert_eq!(fleet.completed(), 4);
+        reg.shutdown();
+    }
+}

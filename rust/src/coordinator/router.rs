@@ -1,23 +1,24 @@
-//! Multi-model router: serves several named models (e.g. `digits` and
-//! `fashion` linear classifiers, or a linear + MLP pair) behind one
-//! client API, each with its own batching pipeline — the multi-tenant
-//! shape of a production inference router, applied to the LUT engine.
+//! Request router: per-request dispatch by model name over the live
+//! registry table. This is the data-plane half of the serving runtime —
+//! the control plane (register / swap / retire) is
+//! [`super::registry::ModelRegistry`].
+//!
+//! A [`FleetClient`] resolves the model name against the registry **at
+//! call time**, so it observes the fleet as it changes: a model
+//! registered after the client was handed out is routable, a retired
+//! model fails with [`RouteError::UnknownModel`], and a hot-swapped
+//! model keeps serving without the client noticing (beyond the bumped
+//! `Response::version`). Each model's pipeline batches independently,
+//! so one saturated tenant cannot stall another.
 
-use super::metrics::Snapshot;
-use super::{Backend, Coordinator, Response, SubmitError};
-use crate::config::ServeConfig;
-use std::collections::BTreeMap;
+use super::registry::RegistryShared;
+use super::{Client, Response, SubmitError};
 use std::sync::Arc;
 
-/// A set of independently-batched model pipelines behind one handle.
-pub struct Router {
-    pipelines: BTreeMap<String, Coordinator>,
-}
-
-/// Cloneable multi-model client.
+/// Cloneable multi-model dispatch handle over the live registry.
 #[derive(Clone)]
-pub struct RouterClient {
-    clients: BTreeMap<String, super::Client>,
+pub struct FleetClient {
+    shared: Arc<RegistryShared>,
 }
 
 /// Routing error.
@@ -38,73 +39,56 @@ impl std::fmt::Display for RouteError {
 
 impl std::error::Error for RouteError {}
 
-impl Router {
-    /// Start one pipeline per named backend. Each model gets the same
-    /// serving config (per-model configs would be a trivial extension).
-    pub fn start(models: Vec<(String, Arc<dyn Backend>)>, cfg: &ServeConfig) -> Router {
-        let pipelines = models
-            .into_iter()
-            .map(|(name, backend)| (name, Coordinator::start(backend, cfg)))
-            .collect();
-        Router { pipelines }
+impl FleetClient {
+    pub(super) fn new(shared: Arc<RegistryShared>) -> FleetClient {
+        FleetClient { shared }
     }
 
-    pub fn client(&self) -> RouterClient {
-        RouterClient {
-            clients: self
-                .pipelines
-                .iter()
-                .map(|(n, c)| (n.clone(), c.client()))
-                .collect(),
-        }
+    /// Resolve `model` against the live table. The read lock is held
+    /// only for the lookup — the actual submit/wait happens outside it,
+    /// so slow inference never blocks fleet management or other routes.
+    fn resolve(&self, model: &str) -> Result<Client, RouteError> {
+        self.shared
+            .models
+            .read()
+            .unwrap()
+            .get(model)
+            .map(|e| e.coord.client())
+            .ok_or_else(|| RouteError::UnknownModel(model.to_string()))
     }
 
-    pub fn models(&self) -> Vec<&str> {
-        self.pipelines.keys().map(String::as_str).collect()
-    }
-
-    /// Drain every pipeline; returns per-model snapshots.
-    pub fn shutdown(self) -> BTreeMap<String, Snapshot> {
-        self.pipelines
-            .into_iter()
-            .map(|(n, c)| (n, c.shutdown()))
-            .collect()
-    }
-}
-
-impl RouterClient {
     /// Route an inference to a named model (blocking).
     pub fn infer(&self, model: &str, image: Vec<f32>) -> Result<Response, RouteError> {
-        let client = self
-            .clients
-            .get(model)
-            .ok_or_else(|| RouteError::UnknownModel(model.to_string()))?;
-        client.infer_blocking(image).map_err(RouteError::Submit)
+        self.resolve(model)?.infer_blocking(image).map_err(RouteError::Submit)
     }
 
     /// Fail-fast variant (backpressure-aware).
     pub fn try_infer(&self, model: &str, image: Vec<f32>) -> Result<Response, RouteError> {
-        let client = self
-            .clients
-            .get(model)
-            .ok_or_else(|| RouteError::UnknownModel(model.to_string()))?;
-        client.infer(image).map_err(RouteError::Submit)
+        self.resolve(model)?.infer(image).map_err(RouteError::Submit)
+    }
+
+    /// Names currently routable, sorted.
+    pub fn models(&self) -> Vec<String> {
+        self.shared.models.read().unwrap().keys().cloned().collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::registry::ModelRegistry;
+    use super::super::{Backend, InferOutput};
     use super::*;
+    use crate::config::ServeConfig;
     use crate::engine::counters::Counters;
 
     /// Backend that answers with a fixed class (model identity probe).
     struct Fixed(usize);
 
     impl Backend for Fixed {
-        fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<super::super::InferOutput> {
+        fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
             images
                 .iter()
-                .map(|_| super::super::InferOutput {
+                .map(|_| InferOutput {
                     class: self.0,
                     logits: vec![self.0 as f32],
                     counters: Counters { lut_evals: 1, ..Default::default() },
@@ -117,37 +101,37 @@ mod tests {
         }
     }
 
+    fn fleet_of(models: &[(&str, usize)], cfg: &ServeConfig) -> ModelRegistry {
+        let reg = ModelRegistry::new();
+        for &(name, class) in models {
+            reg.register(name, std::sync::Arc::new(Fixed(class)), cfg).unwrap();
+        }
+        reg
+    }
+
     #[test]
     fn routes_to_the_right_model() {
-        let router = Router::start(
-            vec![
-                ("a".to_string(), Arc::new(Fixed(1)) as Arc<dyn Backend>),
-                ("b".to_string(), Arc::new(Fixed(2)) as Arc<dyn Backend>),
-            ],
-            &ServeConfig::default(),
-        );
-        let client = router.client();
+        let reg = fleet_of(&[("a", 1), ("b", 2)], &ServeConfig::default());
+        let client = reg.client();
+        assert_eq!(client.models(), vec!["a".to_string(), "b".to_string()]);
         for _ in 0..20 {
             assert_eq!(client.infer("a", vec![0.0]).unwrap().class, 1);
             assert_eq!(client.infer("b", vec![0.0]).unwrap().class, 2);
         }
-        let snaps = router.shutdown();
-        assert_eq!(snaps["a"].completed, 20);
-        assert_eq!(snaps["b"].completed, 20);
+        let fleet = reg.shutdown();
+        assert_eq!(fleet.models["a"].stats.completed, 20);
+        assert_eq!(fleet.models["b"].stats.completed, 20);
     }
 
     #[test]
     fn unknown_model_is_a_clean_error() {
-        let router = Router::start(
-            vec![("only".to_string(), Arc::new(Fixed(0)) as Arc<dyn Backend>)],
-            &ServeConfig::default(),
-        );
-        let client = router.client();
+        let reg = fleet_of(&[("only", 0)], &ServeConfig::default());
+        let client = reg.client();
         match client.infer("nope", vec![0.0]) {
             Err(RouteError::UnknownModel(m)) => assert_eq!(m, "nope"),
             other => panic!("expected UnknownModel, got {other:?}"),
         }
-        router.shutdown();
+        reg.shutdown();
     }
 
     #[test]
@@ -155,7 +139,7 @@ mod tests {
         // saturating model 'slow' must not stall model 'fast'
         struct Slow;
         impl Backend for Slow {
-            fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<super::super::InferOutput> {
+            fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
                 std::thread::sleep(std::time::Duration::from_millis(20));
                 Fixed(9).infer_batch(images)
             }
@@ -163,14 +147,11 @@ mod tests {
                 "slow"
             }
         }
-        let router = Router::start(
-            vec![
-                ("slow".to_string(), Arc::new(Slow) as Arc<dyn Backend>),
-                ("fast".to_string(), Arc::new(Fixed(3)) as Arc<dyn Backend>),
-            ],
-            &ServeConfig { max_batch: 1, max_wait_us: 10, workers: 1, queue_cap: 4 },
-        );
-        let client = router.client();
+        let cfg = ServeConfig { max_batch: 1, max_wait_us: 10, workers: 1, queue_cap: 4 };
+        let reg = ModelRegistry::new();
+        reg.register("slow", std::sync::Arc::new(Slow), &cfg).unwrap();
+        reg.register("fast", std::sync::Arc::new(Fixed(3)), &cfg).unwrap();
+        let client = reg.client();
         // occupy the slow pipeline
         let slow_client = client.clone();
         let h = std::thread::spawn(move || {
@@ -188,6 +169,43 @@ mod tests {
             "fast pipeline was blocked by the slow one"
         );
         h.join().unwrap();
-        router.shutdown();
+        reg.shutdown();
+    }
+
+    #[test]
+    fn backpressure_surfaces_as_submit_error() {
+        struct Stall;
+        impl Backend for Stall {
+            fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                Fixed(0).infer_batch(images)
+            }
+            fn name(&self) -> &'static str {
+                "stall"
+            }
+        }
+        let reg = ModelRegistry::new();
+        reg.register(
+            "m",
+            std::sync::Arc::new(Stall),
+            &ServeConfig { max_batch: 1, max_wait_us: 10, workers: 1, queue_cap: 2 },
+        )
+        .unwrap();
+        let client = reg.client();
+        let mut rejected = 0;
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let c = client.clone();
+            joins.push(std::thread::spawn(move || {
+                matches!(c.try_infer("m", vec![0.0]), Err(RouteError::Submit(_)))
+            }));
+        }
+        for j in joins {
+            if j.join().unwrap() {
+                rejected += 1;
+            }
+        }
+        assert!(rejected > 0, "expected some rejections under saturation");
+        reg.shutdown();
     }
 }

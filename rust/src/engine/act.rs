@@ -72,6 +72,23 @@ impl ActBuf {
         self.repr = Repr::F32;
     }
 
+    /// Stage a batch of per-request rows (one `Vec<f32>` per sample) as
+    /// the pipeline input. This is the rows-direct serving entry: the
+    /// coordinator's request payloads land here with exactly one copy,
+    /// instead of being flattened into an intermediate staging buffer
+    /// first (the former `scratch.input` double copy).
+    pub fn load_rows(&mut self, rows: &[Vec<f32>]) {
+        assert!(!rows.is_empty(), "batch must be >= 1");
+        let features = rows[0].len();
+        self.f32s.clear();
+        for row in rows {
+            assert_eq!(row.len(), features, "rows must share one feature width");
+            self.f32s.extend_from_slice(row);
+        }
+        self.batch = rows.len();
+        self.repr = Repr::F32;
+    }
+
     /// Samples in the buffer.
     pub fn batch(&self) -> usize {
         self.batch
@@ -188,6 +205,26 @@ mod tests {
     fn acc_frac_rejects_wrong_repr() {
         let a = ActBuf::new();
         let _ = a.acc_frac();
+    }
+
+    #[test]
+    fn load_rows_matches_flat_load() {
+        let rows = vec![vec![0.1f32, 0.2], vec![0.3, 0.4], vec![0.5, 0.6]];
+        let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+        let mut a = ActBuf::new();
+        a.load_rows(&rows);
+        assert_eq!(a.batch(), 3);
+        assert_eq!(a.repr(), Repr::F32);
+        let mut b = ActBuf::new();
+        b.load_f32(&flat, 3);
+        assert_eq!(a.f32s, b.f32s);
+    }
+
+    #[test]
+    #[should_panic(expected = "share one feature width")]
+    fn load_rows_rejects_ragged_rows() {
+        let mut a = ActBuf::new();
+        a.load_rows(&[vec![0.0f32, 1.0], vec![0.5]]);
     }
 
     #[test]

@@ -67,8 +67,17 @@ pub fn to_bytes(model: &LutModel) -> Vec<u8> {
     out
 }
 
-/// Parse a `.ltm` byte buffer back into a compiled model.
-pub fn from_bytes(bytes: &[u8]) -> Result<LutModel> {
+/// The parsed container header + stage table of a `.ltm` buffer:
+/// checksum-verified, payloads still undecoded. This is the ONE
+/// header-read path — [`from_bytes`] (registry / `serve` loads) and
+/// [`inspect_bytes`] (`tablenet inspect`) both start here.
+struct Container<'a> {
+    plan_json: &'a str,
+    plan: crate::engine::plan::EnginePlan,
+    stages: Vec<(StageKind, &'a [u8])>,
+}
+
+fn parse_container(bytes: &[u8]) -> Result<Container<'_>> {
     if bytes.len() < MAGIC.len() + 4 + 4 + 4 + 8 {
         bail!("artifact too short ({} bytes) to be a .ltm file", bytes.len());
     }
@@ -91,16 +100,16 @@ pub fn from_bytes(bytes: &[u8]) -> Result<LutModel> {
         .len_capped_u32(1 << 20, "plan JSON")
         .map_err(wire_err)?;
     let plan_bytes = r.take(plan_len).map_err(wire_err)?;
-    let plan_text =
+    let plan_json =
         std::str::from_utf8(plan_bytes).context("artifact plan JSON is not utf-8")?;
-    let plan_json = crate::config::json::Json::parse(plan_text)
+    let parsed = crate::config::json::Json::parse(plan_json)
         .map_err(|e| anyhow!("artifact plan JSON: {e}"))?;
-    let plan = crate::config::plan_from_json(&plan_json)?;
+    let plan = crate::config::plan_from_json(&parsed)?;
     let n_stages = r.u32().map_err(wire_err)? as usize;
     if n_stages > 4096 {
         bail!("artifact claims {n_stages} stages — refusing");
     }
-    let mut stages: Vec<Box<dyn Stage>> = Vec::with_capacity(n_stages);
+    let mut stages = Vec::with_capacity(n_stages);
     for i in 0..n_stages {
         let tag = r.u16().map_err(wire_err)?;
         let kind = StageKind::from_tag(tag)
@@ -110,8 +119,23 @@ pub fn from_bytes(bytes: &[u8]) -> Result<LutModel> {
             .take(len)
             .map_err(wire_err)
             .with_context(|| format!("stage {i} ({}) payload", kind.name()))?;
+        stages.push((kind, payload));
+    }
+    if !r.is_empty() {
+        bail!("artifact has {} trailing bytes after the stage table", r.remaining());
+    }
+    Ok(Container { plan_json, plan, stages })
+}
+
+/// Decode every stage payload of a parsed container, enforcing the
+/// per-stage trailing-bytes rule. Shared by [`from_bytes`] and
+/// [`inspect_bytes`] so an artifact inspect accepts is exactly one a
+/// serve load accepts.
+fn decode_stages(records: &[(StageKind, &[u8])]) -> Result<Vec<Box<dyn Stage>>> {
+    let mut stages: Vec<Box<dyn Stage>> = Vec::with_capacity(records.len());
+    for (i, (kind, payload)) in records.iter().enumerate() {
         let mut pr = Reader::new(payload);
-        let stage = read_stage(kind, &mut pr)
+        let stage = read_stage(*kind, &mut pr)
             .map_err(wire_err)
             .with_context(|| format!("decoding stage {i} ({})", kind.name()))?;
         if !pr.is_empty() {
@@ -123,16 +147,17 @@ pub fn from_bytes(bytes: &[u8]) -> Result<LutModel> {
         }
         stages.push(stage);
     }
-    if !r.is_empty() {
-        bail!("artifact has {} trailing bytes after the stage table", r.remaining());
-    }
-    // pipeline-level sanity: each payload validated its own shape above,
-    // but a crafted (checksum-recomputed) artifact could still describe
-    // an unservable pipeline. Reject the cheap-to-check global
-    // invariants here; per-stage input contracts (representation tags,
-    // code widths) are additionally hard-asserted by the stages on
-    // first use, so an inconsistent pipeline fails loudly, never with
-    // out-of-bounds indexing.
+    Ok(stages)
+}
+
+/// Pipeline-level sanity: each payload validated its own shape during
+/// decode, but a crafted (checksum-recomputed) artifact could still
+/// describe an unservable pipeline. Reject the cheap-to-check global
+/// invariants here; per-stage input contracts (representation tags,
+/// code widths) are additionally hard-asserted by the stages on first
+/// use, so an inconsistent pipeline fails loudly, never with
+/// out-of-bounds indexing.
+fn validate_pipeline(stages: &[Box<dyn Stage>]) -> Result<()> {
     if stages.is_empty() {
         bail!("artifact describes an empty pipeline");
     }
@@ -161,7 +186,15 @@ pub fn from_bytes(bytes: &[u8]) -> Result<LutModel> {
             stages.last().unwrap().kind().name()
         );
     }
-    Ok(LutModel::from_parts(stages, plan))
+    Ok(())
+}
+
+/// Parse a `.ltm` byte buffer back into a compiled model.
+pub fn from_bytes(bytes: &[u8]) -> Result<LutModel> {
+    let c = parse_container(bytes)?;
+    let stages = decode_stages(&c.stages)?;
+    validate_pipeline(&stages)?;
+    Ok(LutModel::from_parts(stages, c.plan))
 }
 
 fn wire_err(e: wire::WireError) -> anyhow::Error {
@@ -177,6 +210,11 @@ pub fn save(model: &LutModel, path: &Path) -> Result<()> {
 
 /// Load a compiled model from `path`.
 pub fn load(path: &Path) -> Result<LutModel> {
+    let bytes = read_capped(path)?;
+    from_bytes(&bytes).with_context(|| format!("parsing artifact {}", path.display()))
+}
+
+fn read_capped(path: &Path) -> Result<Vec<u8>> {
     let meta = std::fs::metadata(path)
         .with_context(|| format!("reading artifact {}", path.display()))?;
     if meta.len() > MAX_ARTIFACT_BYTES {
@@ -187,9 +225,74 @@ pub fn load(path: &Path) -> Result<LutModel> {
             MAX_ARTIFACT_BYTES
         );
     }
-    let bytes = std::fs::read(path)
-        .with_context(|| format!("reading artifact {}", path.display()))?;
-    from_bytes(&bytes).with_context(|| format!("parsing artifact {}", path.display()))
+    std::fs::read(path).with_context(|| format!("reading artifact {}", path.display()))
+}
+
+/// What `tablenet inspect` reports about one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    /// Container format version.
+    pub version: u32,
+    /// The embedded engine plan, verbatim JSON.
+    pub plan_json: String,
+    /// Per-stage kind + payload/table accounting, in pipeline order.
+    pub stages: Vec<StageInfo>,
+    /// Input features of the pipeline (first bank's geometry).
+    pub input_features: Option<usize>,
+    /// Total file size in bytes.
+    pub total_bytes: u64,
+    /// Total LUT storage in bits at the plan's accounting width.
+    pub size_bits: u64,
+}
+
+/// One stage row of an [`ArtifactInfo`].
+#[derive(Debug, Clone)]
+pub struct StageInfo {
+    pub kind: StageKind,
+    /// On-disk payload bytes (tables + metadata).
+    pub payload_bytes: u64,
+    /// Table storage in bits at the plan's accounting width.
+    pub size_bits: u64,
+}
+
+/// Inspect a `.ltm` buffer: checksum, header, stage table and per-stage
+/// table sizes — the same parse + decode + validate path the serving
+/// registry loads through, so inspect-clean means serve-loadable
+/// (trailing payload bytes and unservable pipelines fail inspect too).
+pub fn inspect_bytes(bytes: &[u8]) -> Result<ArtifactInfo> {
+    let c = parse_container(bytes)?;
+    let decoded = decode_stages(&c.stages)?;
+    validate_pipeline(&decoded)?;
+    let r_o = c.plan.r_o;
+    let mut stages = Vec::with_capacity(decoded.len());
+    let mut size_bits = 0u64;
+    let mut input_features = None;
+    for (stage, (kind, payload)) in decoded.iter().zip(&c.stages) {
+        let bits = stage.size_bits(r_o);
+        size_bits += bits;
+        if input_features.is_none() {
+            input_features = stage.in_elems();
+        }
+        stages.push(StageInfo {
+            kind: *kind,
+            payload_bytes: payload.len() as u64,
+            size_bits: bits,
+        });
+    }
+    Ok(ArtifactInfo {
+        version: VERSION,
+        plan_json: c.plan_json.to_string(),
+        stages,
+        input_features,
+        total_bytes: bytes.len() as u64,
+        size_bits,
+    })
+}
+
+/// [`inspect_bytes`] over a file.
+pub fn inspect(path: &Path) -> Result<ArtifactInfo> {
+    let bytes = read_capped(path)?;
+    inspect_bytes(&bytes).with_context(|| format!("inspecting artifact {}", path.display()))
 }
 
 #[cfg(test)]
@@ -202,6 +305,40 @@ mod tests {
         assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
         assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn inspect_agrees_with_loaded_model() {
+        use crate::engine::plan::EnginePlan;
+        use crate::engine::Compiler;
+        use crate::nn::Model;
+        use crate::tensor::Tensor;
+        use crate::util::Rng;
+        let mut rng = Rng::new(90);
+        let model = Model::linear(
+            Tensor::randn(&[10, 784], 0.05, &mut rng),
+            Tensor::randn(&[10], 0.02, &mut rng),
+        );
+        let lut = Compiler::new(&model)
+            .plan(&EnginePlan::linear_default())
+            .build()
+            .unwrap();
+        let bytes = to_bytes(&lut);
+        let info = inspect_bytes(&bytes).unwrap();
+        assert_eq!(info.version, VERSION);
+        assert_eq!(info.total_bytes, bytes.len() as u64);
+        assert_eq!(info.stages.len(), lut.num_stages());
+        assert_eq!(info.size_bits, lut.size_bits());
+        assert_eq!(info.input_features, Some(784));
+        assert_eq!(
+            info.plan_json,
+            crate::config::plan_to_json(lut.plan()).to_string()
+        );
+        // inspect goes through the same checksum gate as load
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x10;
+        assert!(inspect_bytes(&bad).is_err());
     }
 
     #[test]

@@ -150,6 +150,14 @@ impl LutModel {
         out
     }
 
+    /// Number of input features (flattened elements per sample) the
+    /// pipeline consumes, read off the first stage whose geometry pins
+    /// one (a LUT bank). `None` only for pipelines made entirely of
+    /// width-agnostic stages, which the artifact loader rejects.
+    pub fn input_features(&self) -> Option<usize> {
+        self.stages.iter().find_map(|s| s.in_elems())
+    }
+
     /// Batched inference into a reusable output struct. This is the
     /// serving hot path: stages execute *batch-at-a-time* over the
     /// contiguous table arenas (chunk-outer, sample-inner inside each
@@ -165,13 +173,33 @@ impl LutModel {
     ) {
         assert!(batch > 0, "batch must be >= 1");
         assert_eq!(images.len() % batch, 0, "images not divisible into batch rows");
+        scratch.act.load_f32(images, batch);
+        self.run_loaded(batch, scratch, out);
+    }
+
+    /// Rows-direct batched inference: per-request rows (the
+    /// coordinator's `Vec<f32>` payloads) land in the activation buffer
+    /// with exactly one copy — no intermediate flattened staging. Same
+    /// hot-path guarantees as [`LutModel::infer_batch_into`].
+    pub fn infer_batch_rows_into(
+        &self,
+        rows: &[Vec<f32>],
+        scratch: &mut Scratch,
+        out: &mut BatchInference,
+    ) {
+        scratch.act.load_rows(rows);
+        self.run_loaded(rows.len(), scratch, out);
+    }
+
+    /// Run the stage pipeline over the batch already staged in
+    /// `scratch.act` (the shared tail of both batched entry points).
+    fn run_loaded(&self, batch: usize, scratch: &mut Scratch, out: &mut BatchInference) {
         // split the activation and counter rows out of the scratch so
         // stages can borrow the remaining buffers (pad, acc2) mutably
         let mut act = std::mem::take(&mut scratch.act);
         let mut ctrs = std::mem::take(&mut scratch.sample_counters);
         ctrs.clear();
         ctrs.resize(batch, Counters::default());
-        act.load_f32(images, batch);
         for stage in &self.stages {
             stage.eval_batch(&mut act, scratch, &mut ctrs);
         }
@@ -549,6 +577,47 @@ mod tests {
             r_o: 16,
         };
         assert_batch_matches_single(&model, &plan, 135);
+    }
+
+    #[test]
+    fn infer_batch_rows_matches_flat_entry() {
+        // the rows-direct serving entry must be bit-exact with the
+        // flat-slice entry: same classes, logits and per-sample counters
+        let model = mlp_model(60);
+        let plan = EnginePlan {
+            affine: vec![
+                AffineMode::WholeFixed { bits: 8, m: 1, range_exp: 0 },
+                AffineMode::Float { planes: 11, m: 1 },
+                AffineMode::Float { planes: 11, m: 1 },
+            ],
+            fallback: AffineMode::Float { planes: 11, m: 1 },
+            r_o: 16,
+        };
+        let lut = compile(&model, &plan);
+        let mut rng = Rng::new(61);
+        let batch = 5;
+        let rows: Vec<Vec<f32>> =
+            (0..batch).map(|_| (0..784).map(|_| rng.f32()).collect()).collect();
+        let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+        let mut scratch = scratch::Scratch::new();
+        let mut flat_out = BatchInference::default();
+        lut.infer_batch_into(&flat, batch, &mut scratch, &mut flat_out);
+        let mut rows_out = BatchInference::default();
+        lut.infer_batch_rows_into(&rows, &mut scratch, &mut rows_out);
+        assert_eq!(rows_out.classes, flat_out.classes);
+        assert_eq!(rows_out.logits, flat_out.logits);
+        assert_eq!(rows_out.per_sample, flat_out.per_sample);
+        assert_eq!(rows_out.counters, flat_out.counters);
+    }
+
+    #[test]
+    fn input_features_reads_first_bank_geometry() {
+        let model = linear_model(62);
+        let lut = compile(&model, &EnginePlan::linear_default());
+        assert_eq!(lut.input_features(), Some(784));
+        let mlp = mlp_model(63);
+        let lut = compile(&mlp, &EnginePlan::mlp_fixed_input());
+        assert_eq!(lut.input_features(), Some(784));
     }
 
     #[test]

@@ -3,8 +3,10 @@
 //! [`Scratch`] owns everything the stage pipeline needs besides the
 //! model itself: the [`ActBuf`] activation flowing between stages, the
 //! max-pool ping-pong accumulator, the conv banks' padded accumulator
-//! images, the per-sample counter rows, and a flattened input staging
-//! area for the coordinator. Buffers are `clear()` + `resize()`d per
+//! images, and the per-sample counter rows. Request rows enter the
+//! pipeline through [`ActBuf::load_rows`] directly (one copy — the
+//! former flattened `input` staging area is gone). Buffers are
+//! `clear()` + `resize()`d per
 //! stage: after one warm-up batch every buffer has reached its
 //! high-water capacity and steady-state inference performs **zero heap
 //! allocations** (asserted by `rust/tests/alloc_discipline.rs` with a
@@ -21,9 +23,6 @@ use crate::engine::counters::Counters;
 /// benches borrow individual buffers directly.
 #[derive(Default)]
 pub struct Scratch {
-    /// Flattened f32 input staging (coordinator: rows copied from the
-    /// per-request `Vec<f32>` payloads).
-    pub input: Vec<f32>,
     /// The activation buffer threaded through the stage pipeline.
     pub act: ActBuf,
     /// Secondary accumulators (max-pool ping-pong).
@@ -41,8 +40,7 @@ impl Scratch {
 
     /// Sum of buffer capacities in bytes (diagnostics).
     pub fn resident_bytes(&self) -> usize {
-        self.input.capacity() * 4
-            + self.act.resident_bytes()
+        self.act.resident_bytes()
             + self.acc2.capacity() * 8
             + self.pad.capacity() * 8
             + self.sample_counters.capacity() * std::mem::size_of::<Counters>()

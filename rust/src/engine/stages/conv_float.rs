@@ -41,6 +41,10 @@ impl Stage for ConvFloatStage {
         self.lut.size_bits(r_o)
     }
 
+    fn in_elems(&self) -> Option<usize> {
+        Some(self.lut.h * self.lut.w * self.lut.cin)
+    }
+
     fn write_payload(&self, out: &mut Vec<u8>) {
         self.lut.write_wire(out);
     }

@@ -40,6 +40,10 @@ impl Stage for DenseWholeStage {
         self.lut.size_bits(r_o)
     }
 
+    fn in_elems(&self) -> Option<usize> {
+        Some(self.lut.partition.q)
+    }
+
     fn write_payload(&self, out: &mut Vec<u8>) {
         self.lut.write_wire(out);
     }

@@ -78,6 +78,15 @@ pub trait Stage: Send + Sync {
     /// table-free stages).
     fn size_bits(&self, r_o: u32) -> u64;
 
+    /// Input elements (features) this stage consumes per sample, when
+    /// its geometry pins one (the LUT banks). `None` for element-wise /
+    /// width-agnostic stages. The engine reads the pipeline's input
+    /// width off the first `Some` — what lets a deployment serve raw
+    /// request rows from the artifact alone.
+    fn in_elems(&self) -> Option<usize> {
+        None
+    }
+
     /// Serialize this stage's payload (tables + metadata) for the
     /// `.ltm` artifact. Must round-trip bit-exactly through the decoder
     /// registered in [`read_stage`].

@@ -6,9 +6,10 @@
 //!
 //! The crate is organised as a three-layer stack:
 //!
-//! * **Layer 3 (this crate)** — the Rust coordinator: LUT construction,
-//!   the multiplier-less inference engine, the partition planner / cost
-//!   model, a serving coordinator (router + dynamic batcher), and the
+//! * **Layer 3 (this crate)** — the Rust serving runtime: LUT
+//!   construction, the multiplier-less inference engine, the partition
+//!   planner / cost model, a hot-swappable multi-model registry (per-
+//!   model dynamic batching pipelines behind one router), and the
 //!   experiment harness that regenerates every figure of the paper.
 //! * **Layer 2 (`python/compile/model.py`)** — JAX model definitions
 //!   (linear / MLP / LeNet CNN) with quantization-aware training; lowered

@@ -4,11 +4,14 @@
 //!   gen-data          generate + cache the synthetic corpora (IDX files)
 //!   train             in-Rust SGD training (linear / mlp)
 //!   compile           compile weights + plan into a .ltm artifact
+//!   inspect           dump a .ltm artifact (plan, stages, table sizes)
 //!   eval              accuracy: LUT engine vs reference, with op counters
 //!   sweep-bits        Fig 4 / Fig 6 accuracy-vs-input-bits sweep
 //!   sweep-partitions  Fig 5 / 7 / 8 size-vs-ops tradeoff tables
 //!   plan              planner tables + paper in-text config check
-//!   serve             run the serving coordinator under synthetic load
+//!   serve             multi-model registry serving (artifact-first,
+//!                     pure-push; optional dataset-driven load + mid-run
+//!                     hot swaps)
 //!   ref-check         PJRT reference artifact vs in-Rust forward
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -45,6 +48,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "gen-data" => gen_data(args),
         "train" => train(args),
         "compile" => compile(args),
+        "inspect" => inspect(args),
         "eval" => eval(args),
         "sweep-bits" => sweep_bits(args),
         "sweep-partitions" => sweep_partitions(args),
@@ -70,11 +74,14 @@ fn print_help() {
          \x20 gen-data         --dir data/synth --train 4000 --test 1000 --seed 7\n\
          \x20 train            --arch linear|mlp --dataset mnist|fashion --steps N --out w.bin\n\
          \x20 compile          --arch A --weights w.bin [--plan plan.json] --out model.ltm\n\
+         \x20 inspect          model.ltm\n\
          \x20 eval             --arch A --weights w.bin --dataset D [--plan plan.json] [--artifact model.ltm] [--n 500]\n\
          \x20 sweep-bits       --arch linear --weights w.bin --dataset D [--csv-out f.csv]\n\
          \x20 sweep-partitions --arch linear|mlp|cnn [--weights w.bin --dataset D]\n\
          \x20 plan             [--arch A]\n\
-         \x20 serve            --arch A --weights w.bin [--artifact model.ltm] --requests 2000 [--max-batch 32]\n\
+         \x20 serve            --artifact name=model.ltm [--artifact n2=m2.ltm ...] [--fleet fleet.json]\n\
+         \x20                  [--swap name=new.ltm] --requests 2000 [--clients 4] [--max-batch 32]\n\
+         \x20                  [--dir data/synth]  (pure-push from artifacts alone when --dir is omitted)\n\
          \x20 ref-check        --arch A --weights w.bin --hlo artifacts/linear_ref_b1.hlo.txt"
     );
 }
@@ -348,61 +355,246 @@ fn plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One model's request pool for the load generator: rows to submit,
+/// labels when the load is dataset-driven (None in pure-push mode).
+struct RequestPool {
+    rows: Vec<Vec<f32>>,
+    labels: Option<Vec<usize>>,
+}
+
 fn serve(args: &Args) -> Result<()> {
-    let lut = engine_from_args(args, None)?;
-    let cfg = ServeConfig::default().override_with(args);
-    cfg.validate()?;
-    let ds = dataset(args)?;
+    use tablenet::coordinator::registry::ModelRegistry;
+    use tablenet::util::Rng;
+
+    let fleet = tablenet::config::FleetConfig::from_args(args)?;
+    fleet.validate()?;
     let n_requests = args.get_usize("requests", 2000);
     let clients = args.get_usize("clients", 4).max(1);
+
+    // dataset-driven load only when asked for; the default is
+    // pure-push — raw request rows synthesized from the artifact's own
+    // input geometry, no --dir, no weights
+    let data = if args.has("dir") { Some(dataset(args)?) } else { None };
+
+    let registry = ModelRegistry::new();
+    let mut pools: std::collections::BTreeMap<String, Arc<RequestPool>> =
+        std::collections::BTreeMap::new();
+    let mut rng = Rng::new(args.get_u64("seed", 0x5E17E));
+    // dataset rows are identical for every model: build the pool once
+    // and share it (pure-push pools stay per-model — each follows its
+    // own artifact's input geometry)
+    let data_pool: Option<Arc<RequestPool>> = data.as_ref().map(|ds| {
+        Arc::new(RequestPool {
+            rows: (0..ds.test.len()).map(|i| ds.test.image(i).to_vec()).collect(),
+            labels: Some(ds.test.labels.clone()),
+        })
+    });
+    let add_model = |name: &str,
+                         lut: tablenet::engine::LutModel,
+                         cfg: &ServeConfig,
+                         pools: &mut std::collections::BTreeMap<String, Arc<RequestPool>>,
+                         rng: &mut Rng|
+     -> Result<()> {
+        println!(
+            "[{name}] {} stages, {} of tables, batching {:?}",
+            lut.num_stages(),
+            fmt_bits(lut.size_bits()),
+            cfg
+        );
+        let pool = match &data_pool {
+            Some(p) => {
+                // a width-mismatched artifact must fail HERE with a
+                // clear error, not assert inside a worker mid-batch
+                let row_w = p.rows.first().map(Vec::len).unwrap_or(0);
+                if let Some(f) = lut.input_features() {
+                    if f != row_w {
+                        bail!(
+                            "model '{name}' expects {f} input features but \
+                             --dir rows have {row_w}"
+                        );
+                    }
+                }
+                p.clone()
+            }
+            None => {
+                let features = lut
+                    .input_features()
+                    .or_else(|| Some(args.get_usize("features", 0)).filter(|&f| f > 0))
+                    .ok_or_else(|| {
+                        anyhow!("[{name}] input width unknown; pass --features N")
+                    })?;
+                Arc::new(RequestPool {
+                    rows: (0..256)
+                        .map(|_| (0..features).map(|_| rng.f32()).collect())
+                        .collect(),
+                    labels: None,
+                })
+            }
+        };
+        pools.insert(name.to_string(), pool);
+        registry
+            .register(name, Arc::new(lut), cfg)
+            .map_err(|e| anyhow!("registering '{name}': {e}"))
+    };
+
+    if fleet.models.is_empty() {
+        // legacy path: no artifacts — compile weights under the plan
+        let name = arch(args)?.name().to_string();
+        let lut = engine_from_args(args, None)?;
+        add_model(&name, lut, &fleet.defaults, &mut pools, &mut rng)?;
+    } else {
+        for (name, spec) in &fleet.models {
+            let lut = tablenet::engine::LutModel::load(&spec.artifact)
+                .with_context(|| format!("model '{name}'"))?;
+            println!("loaded artifact {} as '{name}'", spec.artifact.display());
+            add_model(name, lut, &fleet.effective(name), &mut pools, &mut rng)?;
+        }
+    }
+    let names: Vec<String> = pools.keys().cloned().collect();
+    let pools = Arc::new(pools);
     println!(
-        "serving the LUT engine ({}, {} stages) with {:?}",
-        fmt_bits(lut.size_bits()),
-        lut.num_stages(),
-        cfg
+        "serving {} model(s) {:?} | {n_requests} requests, {clients} clients{}",
+        names.len(),
+        names,
+        if data.is_some() { " (dataset-driven)" } else { " (pure-push)" }
     );
 
-    let coord = tablenet::coordinator::Coordinator::start(Arc::new(lut), &cfg);
-    let test = Arc::new(ds.test);
+    // mid-run rolling deployments: --swap name=path installs a new
+    // version once half the load has been served. Resolve every spec
+    // UP FRONT — a typo'd name, unreadable artifact or mismatched
+    // input width must fail before any traffic is served, not panic a
+    // worker (and hang the load) halfway through the run.
+    let mut swaps: Vec<(String, std::path::PathBuf, Arc<tablenet::engine::LutModel>)> =
+        Vec::new();
+    for spec in args.get_all("swap") {
+        let (name, path) = tablenet::config::parse_artifact_spec(spec)?;
+        let pool = pools
+            .get(&name)
+            .ok_or_else(|| anyhow!("--swap target '{name}' is not a registered model"))?;
+        let lut = tablenet::engine::LutModel::load(&path)
+            .with_context(|| format!("swap target for '{name}'"))?;
+        let row_w = pool.rows.first().map(Vec::len).unwrap_or(0);
+        if let Some(f) = lut.input_features() {
+            if f != row_w {
+                bail!(
+                    "swap for '{name}': artifact expects {f} input features but \
+                     this run's request rows have {row_w}"
+                );
+            }
+        }
+        swaps.push((name, path, Arc::new(lut)));
+    }
+
     let start = std::time::Instant::now();
+    let names_arc = Arc::new(names);
     let mut joins = Vec::new();
     for c in 0..clients {
-        let client = coord.client();
-        let test = test.clone();
+        let client = registry.client();
+        let pools = pools.clone();
+        let names = names_arc.clone();
         let per_client = n_requests / clients;
         joins.push(std::thread::spawn(move || {
-            let mut correct = 0usize;
             let mut served = 0usize;
+            let mut correct = 0usize;
+            let mut labeled = 0usize;
             for i in 0..per_client {
-                let idx = (c * per_client + i) % test.len();
-                match client.infer_blocking(test.image(idx).to_vec()) {
+                let k = c * per_client + i;
+                let name = &names[k % names.len()];
+                let pool = &pools[name];
+                let idx = k % pool.rows.len();
+                match client.infer(name, pool.rows[idx].clone()) {
                     Ok(resp) => {
                         served += 1;
-                        if resp.class == test.labels[idx] {
-                            correct += 1;
+                        if let Some(labels) = &pool.labels {
+                            labeled += 1;
+                            if resp.class == labels[idx] {
+                                correct += 1;
+                            }
                         }
                     }
                     Err(_) => break,
                 }
             }
-            (served, correct)
+            (served, correct, labeled)
         }));
     }
-    let mut served = 0;
-    let mut correct = 0;
+
+    if !swaps.is_empty() {
+        // wait until roughly half the load has been served, then roll
+        let planned = (n_requests / clients) * clients;
+        while registry.fleet_completed() < (planned / 2) as u64 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        for (name, path, lut) in &swaps {
+            let v = registry
+                .swap(name, lut.clone())
+                .map_err(|e| anyhow!("swapping '{name}': {e}"))?;
+            println!("hot-swapped '{name}' -> version {v} ({})", path.display());
+        }
+    }
+
+    let (mut served, mut correct, mut labeled) = (0usize, 0usize, 0usize);
     for j in joins {
-        let (s, c) = j.join().unwrap();
+        let (s, c, l) = j.join().unwrap();
         served += s;
         correct += c;
+        labeled += l;
     }
     let elapsed = start.elapsed().as_secs_f64();
-    let snap = coord.shutdown();
-    println!("{snap}");
-    println!(
-        "served {served} requests in {elapsed:.2}s ({:.1} req/s), accuracy {:.2}%",
-        served as f64 / elapsed,
-        100.0 * correct as f64 / served.max(1) as f64
+    let fleet_snap = registry.shutdown();
+    println!("{fleet_snap}");
+    print!(
+        "served {served} requests in {elapsed:.2}s ({:.1} req/s)",
+        served as f64 / elapsed
     );
+    if labeled > 0 {
+        print!(", accuracy {:.2}%", 100.0 * correct as f64 / labeled as f64);
+    }
+    println!();
+    fleet_snap.assert_multiplier_less();
+    Ok(())
+}
+
+/// Dump a `.ltm` artifact: container version, embedded plan, stage
+/// kinds, per-stage table sizes and total bytes — through the same
+/// parse path the serving registry loads with.
+fn inspect(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .or_else(|| args.get("artifact"))
+        .ok_or_else(|| anyhow!("usage: tablenet inspect model.ltm"))?;
+    let info = tablenet::engine::artifact::inspect(Path::new(path))?;
+    println!("artifact {path}");
+    println!("  container version : {}", info.version);
+    println!("  total bytes       : {}", info.total_bytes);
+    println!(
+        "  tables            : {} ({} bits)",
+        fmt_bits(info.size_bits),
+        info.size_bits
+    );
+    println!(
+        "  input features    : {}",
+        info.input_features
+            .map(|f| f.to_string())
+            .unwrap_or_else(|| "unknown".to_string())
+    );
+    println!("  stages            : {}", info.stages.len());
+    for (i, s) in info.stages.iter().enumerate() {
+        println!(
+            "    [{i:2}] {:<16} payload {:>12} B   tables {}",
+            s.kind.name(),
+            s.payload_bytes,
+            fmt_bits(s.size_bits)
+        );
+    }
+    let plan = tablenet::config::json::Json::parse(&info.plan_json)
+        .map_err(|e| anyhow!("embedded plan: {e}"))?;
+    println!("  plan:");
+    for line in plan.to_string_pretty().lines() {
+        println!("    {line}");
+    }
     Ok(())
 }
 

@@ -20,12 +20,20 @@ fn help_lists_commands() {
     let out = bin().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in
-        ["gen-data", "train", "compile", "eval", "sweep-bits", "sweep-partitions", "serve"]
-    {
+    for cmd in [
+        "gen-data",
+        "train",
+        "compile",
+        "inspect",
+        "eval",
+        "sweep-bits",
+        "sweep-partitions",
+        "serve",
+    ] {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
     assert!(text.contains("--artifact"), "help missing --artifact flag");
+    assert!(text.contains("--swap"), "help missing --swap flag");
 }
 
 #[test]
@@ -138,7 +146,7 @@ fn compile_then_eval_artifact_is_bit_identical_to_weights() {
     assert!(from_weights.contains("mults=0"), "{from_weights}");
 
     // serve can start from the artifact alone (no --weights) and the
-    // whole run stays multiplier-less
+    // whole run stays multiplier-less; dataset-driven load via --dir
     let out = bin()
         .args(["serve", "--artifact"])
         .arg(&ltm)
@@ -151,6 +159,38 @@ fn compile_then_eval_artifact_is_bit_identical_to_weights() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("loaded artifact"), "{text}");
     assert!(text.contains("mults=0"), "serve run must report zero multiplies: {text}");
+    assert!(text.contains("accuracy"), "dataset-driven serve must report accuracy: {text}");
+
+    // pure-push: TWO named models from artifacts alone — no --dir, no
+    // weights, request rows synthesized from the artifact's own input
+    // geometry — with a mid-run hot swap
+    let spec_a = format!("a={}", ltm.display());
+    let spec_b = format!("b={}", ltm.display());
+    let swap_a = format!("a={}", ltm.display());
+    let out = bin()
+        .args(["serve", "--artifact", &spec_a, "--artifact", &spec_b])
+        .args(["--swap", &swap_a])
+        .args(["--requests", "60", "--clients", "2", "--max-batch", "8"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("pure-push"), "{text}");
+    assert!(text.contains("[a v2"), "swap must bump 'a' to v2: {text}");
+    assert!(text.contains("[b v1"), "'b' must stay at v1: {text}");
+    assert!(text.contains("fleet: 2 models"), "{text}");
+    assert!(text.contains("mults=0"), "pure-push serve must be multiplier-less: {text}");
+    assert!(!text.contains("accuracy"), "pure-push has no labels: {text}");
+
+    // inspect dumps the artifact through the same parse path serve
+    // loads with
+    let out = bin().arg("inspect").arg(&ltm).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("container version : 1"), "{text}");
+    assert!(text.contains("dense-bitplane"), "{text}");
+    assert!(text.contains("input features    : 784"), "{text}");
+    assert!(text.contains("bitplane_fixed"), "plan JSON missing: {text}");
 
     // corrupted artifact must be rejected, not served
     let mut bytes = std::fs::read(&ltm).unwrap();
@@ -168,6 +208,14 @@ fn compile_then_eval_artifact_is_bit_identical_to_weights() {
         .output()
         .unwrap();
     assert!(!out.status.success(), "corrupted artifact was accepted");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("checksum"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // inspect goes through the same checksum gate
+    let out = bin().arg("inspect").arg(&bad).output().unwrap();
+    assert!(!out.status.success(), "inspect accepted a corrupted artifact");
     assert!(
         String::from_utf8_lossy(&out.stderr).contains("checksum"),
         "{}",

@@ -1,16 +1,19 @@
 //! Coordinator integration: the serving stack over the real LUT engine,
-//! including load, backpressure, failure injection and the end-to-end
-//! multiplier-less invariant.
+//! including load, backpressure, failure injection, multi-model
+//! registry serving with mid-load hot-swaps, and the end-to-end
+//! per-model multiplier-less invariant.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use tablenet::config::ServeConfig;
+use tablenet::coordinator::registry::{ModelRegistry, RegistryError};
 use tablenet::coordinator::{Backend, Coordinator, InferOutput, SubmitError};
 use tablenet::data::synth::Kind;
 use tablenet::data::Split;
 use tablenet::engine::counters::Counters;
-use tablenet::engine::plan::EnginePlan;
+use tablenet::engine::plan::{AffineMode, EnginePlan};
 use tablenet::engine::{Compiler, LutModel};
+use tablenet::nn::Model;
 use tablenet::train::{train_dense, TrainConfig};
 
 fn toy_split(n: usize, seed: u64) -> Split {
@@ -21,14 +24,18 @@ fn toy_split(n: usize, seed: u64) -> Split {
     }
 }
 
+fn toy_model(train: &Split) -> Model {
+    train_dense(
+        train,
+        &[784, 10],
+        &TrainConfig { steps: 400, lr: 0.25, ..Default::default() },
+    )
+}
+
 fn trained_engine() -> (LutModel, Split) {
     let train = toy_split(800, 21);
     let test = toy_split(200, 22);
-    let model = train_dense(
-        &train,
-        &[784, 10],
-        &TrainConfig { steps: 400, lr: 0.25, ..Default::default() },
-    );
+    let model = toy_model(&train);
     (
         Compiler::new(&model).plan(&EnginePlan::linear_default()).build().unwrap(),
         test,
@@ -126,6 +133,146 @@ fn requests_after_shutdown_fail_cleanly() {
         Err(SubmitError::ShutDown) => {}
         other => panic!("expected ShutDown, got {other:?}"),
     }
+}
+
+/// The ISSUE acceptance scenario: a running registry serves two named
+/// `.ltm` models concurrently and survives a mid-load hot-swap with
+/// zero lost requests, zero mixed-version batches (version-exact
+/// responses) and exact per-model op counters — zero multiplies in
+/// every model's snapshot, artifacts only, no weights on the serve
+/// path.
+#[test]
+fn registry_serves_two_ltm_models_and_survives_midload_swap() {
+    let dir = std::env::temp_dir().join("tablenet_registry_swap");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let train = toy_split(600, 31);
+    let test = Arc::new(toy_split(120, 32));
+    let model = toy_model(&train);
+    let plan_bits = |bits: u32| EnginePlan {
+        affine: vec![AffineMode::BitplaneFixed { bits, m: 14, range_exp: 0 }],
+        fallback: AffineMode::Float { planes: 11, m: 1 },
+        r_o: 16,
+    };
+    // two named artifacts on disk; the registry loads them back — the
+    // serve path never touches weights
+    let save = |bits: u32, name: &str| -> LutModel {
+        let lut = Compiler::new(&model).plan(&plan_bits(bits)).build().unwrap();
+        let path = dir.join(name);
+        lut.save(&path).unwrap();
+        LutModel::load(&path).unwrap()
+    };
+    let reg = ModelRegistry::new();
+    reg.register(
+        "alpha",
+        Arc::new(save(3, "alpha.ltm")),
+        &ServeConfig { max_batch: 16, max_wait_us: 200, workers: 2, queue_cap: 512 },
+    )
+    .unwrap();
+    reg.register(
+        "beta",
+        Arc::new(save(2, "beta.ltm")),
+        &ServeConfig { max_batch: 4, max_wait_us: 50, workers: 1, queue_cap: 512 },
+    )
+    .unwrap();
+
+    // per-inference op profile of each version, for exact attribution
+    let probe = |lut: &LutModel| lut.infer(&test.images[..784]).counters;
+    let alpha_v1_ops = probe(&save(3, "alpha_probe.ltm"));
+    let alpha_v2_ops = probe(&save(4, "alpha_v2_probe.ltm"));
+
+    let mut joins = Vec::new();
+    for t in 0..4usize {
+        let client = reg.client();
+        let test = test.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut alpha = Vec::new();
+            let mut beta = 0usize;
+            for i in 0..60 {
+                let idx = (t * 60 + i) % test.len();
+                let row = test.images[idx * 784..(idx + 1) * 784].to_vec();
+                let name = if i % 2 == 0 { "alpha" } else { "beta" };
+                let r = client.infer(name, row).unwrap();
+                if name == "alpha" {
+                    alpha.push(r.version);
+                } else {
+                    assert_eq!(r.version, 1, "beta was never swapped");
+                    beta += 1;
+                }
+            }
+            (alpha, beta)
+        }));
+    }
+
+    // hot-swap alpha to v2 (sharper input bits) while the load runs
+    let v2 = Arc::new(save(4, "alpha_v2.ltm"));
+    std::thread::sleep(std::time::Duration::from_millis(3));
+    assert_eq!(reg.swap("alpha", v2).unwrap(), 2);
+
+    let mut alpha_versions = Vec::new();
+    let mut beta_served = 0usize;
+    for j in joins {
+        let (a, b) = j.join().unwrap();
+        alpha_versions.extend(a);
+        beta_served += b;
+    }
+    // zero lost requests on both tenants
+    assert_eq!(alpha_versions.len(), 120);
+    assert_eq!(beta_served, 120);
+    assert!(alpha_versions.iter().all(|&v| v == 1 || v == 2));
+
+    let fleet = reg.shutdown();
+    assert_eq!(fleet.models["alpha"].stats.completed, 120);
+    assert_eq!(fleet.models["beta"].stats.completed, 120);
+    assert_eq!(fleet.models["alpha"].version, 2);
+    assert_eq!(fleet.models["beta"].version, 1);
+    assert_eq!(fleet.models["alpha"].stats.swaps, 1);
+    // exact per-model counters: alpha's total is the exact mix of v1-
+    // and v2-served requests (every row identical per version for a
+    // linear plan), beta's is 120x its per-inference profile
+    let v1_count = alpha_versions.iter().filter(|&&v| v == 1).count() as u64;
+    let v2_count = 120 - v1_count;
+    assert_eq!(
+        fleet.models["alpha"].stats.ops.lut_evals,
+        v1_count * alpha_v1_ops.lut_evals + v2_count * alpha_v2_ops.lut_evals
+    );
+    let beta_ops = probe(&save(2, "beta_probe.ltm"));
+    assert_eq!(fleet.models["beta"].stats.ops.lut_evals, 120 * beta_ops.lut_evals);
+    // zero multiplies per model snapshot, not just in aggregate
+    fleet.assert_multiplier_less();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn retire_drains_and_isolates_remaining_models() {
+    let (engine, test) = trained_engine();
+    let model2 = toy_model(&toy_split(600, 41));
+    let engine2 =
+        Compiler::new(&model2).plan(&EnginePlan::linear_default()).build().unwrap();
+    let reg = ModelRegistry::new();
+    let cfg = ServeConfig { max_batch: 8, max_wait_us: 100, workers: 1, queue_cap: 256 };
+    reg.register("keep", Arc::new(engine), &cfg).unwrap();
+    reg.register("drop", Arc::new(engine2), &cfg).unwrap();
+    let client = reg.client();
+    let row = || test.images[..784].to_vec();
+    for _ in 0..10 {
+        client.infer("keep", row()).unwrap();
+        client.infer("drop", row()).unwrap();
+    }
+    let snap = reg.retire("drop").unwrap();
+    assert_eq!(snap.completed, 10);
+    snap.ops.assert_multiplier_less();
+    // retired name routes to a clean error; the survivor still serves
+    assert!(client.infer("drop", row()).is_err());
+    assert!(matches!(reg.retire("drop"), Err(RegistryError::UnknownModel(_))));
+    for _ in 0..5 {
+        client.infer("keep", row()).unwrap();
+    }
+    let fleet = reg.shutdown();
+    assert_eq!(fleet.models.len(), 1);
+    assert_eq!(fleet.models["keep"].stats.completed, 15);
+    fleet.assert_multiplier_less();
 }
 
 #[test]

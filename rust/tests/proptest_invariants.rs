@@ -267,6 +267,97 @@ fn prop_engine_infer_batch_matches_per_sample() {
 }
 
 #[test]
+fn prop_hot_swap_exactly_once_version_attributed() {
+    // Hot-swap under sustained concurrent load, across random batching
+    // policies: every submitted request gets exactly ONE response, each
+    // response is attributable to exactly one model version (the
+    // backend stamps its version into `class`, and the coordinator
+    // reports the version the batch executed on — they must agree, so
+    // no batch can mix versions), and once the pipeline quiesces after
+    // the final swap, responses come from the final version.
+    use std::sync::Arc;
+    use tablenet::config::ServeConfig;
+    use tablenet::coordinator::{Backend, Coordinator, InferOutput};
+
+    /// Version-stamped echo: class == the version this backend was
+    /// installed as.
+    struct VersionEcho(usize);
+
+    impl Backend for VersionEcho {
+        fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+            images
+                .iter()
+                .map(|_| InferOutput {
+                    class: self.0,
+                    logits: vec![self.0 as f32],
+                    counters: Counters { lut_evals: 1, ..Default::default() },
+                })
+                .collect()
+        }
+
+        fn name(&self) -> &'static str {
+            "version-echo"
+        }
+    }
+
+    forall("hot-swap-exactly-once", 6, |rng| {
+        let cfg = ServeConfig {
+            max_batch: 1 + rng.below(16),
+            max_wait_us: 50 + rng.below(300) as u64,
+            workers: 1 + rng.below(3),
+            queue_cap: 256,
+        };
+        let n_threads = 3usize;
+        let per_thread = 50usize;
+        let n_swaps = 1 + rng.below(3);
+        let coord = Coordinator::start(Arc::new(VersionEcho(1)), &cfg);
+        let mut joins = Vec::new();
+        for _ in 0..n_threads {
+            let client = coord.client();
+            joins.push(std::thread::spawn(move || {
+                let mut seen = Vec::with_capacity(per_thread);
+                for _ in 0..per_thread {
+                    let r = client.infer_blocking(vec![0.5]).unwrap();
+                    seen.push((r.class, r.version, r.logits[0]));
+                }
+                seen
+            }));
+        }
+        for v in 0..n_swaps {
+            std::thread::sleep(std::time::Duration::from_micros(500));
+            let installed = coord.swap(Arc::new(VersionEcho(2 + v)));
+            assert_eq!(installed as usize, 2 + v);
+        }
+        let final_version = (1 + n_swaps) as u64;
+        let mut responses = Vec::new();
+        for j in joins {
+            responses.extend(j.join().unwrap());
+        }
+        // exactly one response per submitted request
+        assert_eq!(responses.len(), n_threads * per_thread);
+        for (class, version, logit0) in &responses {
+            // exact version attribution: the stamped payload agrees
+            // with the version the coordinator says served the batch
+            assert_eq!(*class as u64, *version, "response attributed to wrong version");
+            assert_eq!(*logit0, *class as f32);
+            assert!(
+                (1..=final_version).contains(version),
+                "impossible version {version}"
+            );
+        }
+        // quiesced pipeline: post-swap requests run the final version
+        let client = coord.client();
+        let r = client.infer_blocking(vec![0.5]).unwrap();
+        assert_eq!(r.version, final_version, "post-swap response from stale version");
+        assert_eq!(r.class as u64, final_version);
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed as usize, n_threads * per_thread + 1);
+        assert_eq!(snap.swaps as usize, n_swaps);
+        assert_eq!(snap.ops.lut_evals as usize, n_threads * per_thread + 1);
+    });
+}
+
+#[test]
 fn prop_f16_roundtrip_monotone_and_exact() {
     forall("f16-codec", 200, |rng| {
         // exactness on decode->encode
