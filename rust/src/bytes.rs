@@ -1,0 +1,234 @@
+//! Read-only byte buffers behind the `.ltm` artifact loader: either an
+//! owned heap buffer or a memory-mapped file.
+//!
+//! The v2 artifact format 64-byte-aligns every table-arena entry block
+//! in the file, so a mapped artifact can be served *in place*: the
+//! arenas borrow their entries straight out of the mapping instead of
+//! copying them onto the heap (see [`crate::lut::arena`]). Table
+//! payloads thus never touch the heap on load — zero copies, zero
+//! allocations proportional to bank size. The load still *reads* the
+//! file once (the per-stage checksums are verified sequentially, at
+//! page-cache/disk streaming bandwidth), so a rolling deploy swap
+//! costs one sequential scan instead of scan + decode + allocate +
+//! memcpy; after that, requests hit the tables in place.
+//!
+//! The vendored crate set has no `memmap2`, so the mapping is a ~40
+//! line `mmap`/`munmap` FFI against the libc the binary already links.
+//! Platforms without it (non-unix) transparently fall back to the
+//! owned-read path — everything still works, just with the copy.
+
+use std::io::Read;
+use std::path::Path;
+
+/// A read-only mapped file region. Pages are faulted in on demand;
+/// the mapping is unmapped on drop.
+#[cfg(unix)]
+pub struct MappedFile {
+    ptr: *const u8,
+    len: usize,
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+    pub type CInt = i32;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: CInt,
+            flags: CInt,
+            fd: CInt,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> CInt;
+    }
+    pub const PROT_READ: CInt = 1;
+    pub const MAP_PRIVATE: CInt = 2;
+}
+
+#[cfg(unix)]
+impl MappedFile {
+    /// Map `file` read-only in its entirety (`len` must be the file's
+    /// current size, > 0).
+    pub fn map(file: &std::fs::File, len: usize) -> std::io::Result<MappedFile> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "cannot map an empty file",
+            ));
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 || ptr.is_null() {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(MappedFile { ptr: ptr as *const u8, len })
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: the mapping is PROT_READ/MAP_PRIVATE over `len` bytes
+        // and stays valid until drop. A concurrent truncate of the
+        // backing file could SIGBUS any file-mapping reader; deploys
+        // write artifacts atomically (write + rename or whole-file
+        // overwrite), matching every mmap-serving system's contract.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for MappedFile {
+    fn drop(&mut self) {
+        unsafe {
+            sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+        }
+    }
+}
+
+// SAFETY: the region is immutable (PROT_READ) and owned by this handle.
+#[cfg(unix)]
+unsafe impl Send for MappedFile {}
+#[cfg(unix)]
+unsafe impl Sync for MappedFile {}
+
+/// Backing bytes of a loaded artifact: a plain heap buffer, or a file
+/// mapping that arenas may borrow from zero-copy. `Deref`s to `[u8]`
+/// either way, so parsing code never branches on the variant.
+pub enum ArtifactBytes {
+    Owned(Vec<u8>),
+    #[cfg(unix)]
+    Mapped(MappedFile),
+}
+
+impl ArtifactBytes {
+    /// Open `path`, preferring a read-only mapping; falls back to an
+    /// owned read when mapping is unavailable (non-unix, empty file,
+    /// or an `mmap` failure). Rejects files larger than `cap` before
+    /// touching their contents.
+    pub fn open(path: &Path, cap: u64) -> std::io::Result<ArtifactBytes> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        if len > cap {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("file is {len} bytes — larger than the {cap} byte cap"),
+            ));
+        }
+        #[cfg(unix)]
+        if len > 0 {
+            if let Ok(m) = MappedFile::map(&file, len as usize) {
+                return Ok(ArtifactBytes::Mapped(m));
+            }
+        }
+        let mut buf = Vec::with_capacity(len as usize);
+        let mut file = file;
+        file.read_to_end(&mut buf)?;
+        Ok(ArtifactBytes::Owned(buf))
+    }
+
+    /// True when the bytes are a live file mapping (the zero-copy
+    /// borrow substrate).
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            ArtifactBytes::Owned(_) => false,
+            #[cfg(unix)]
+            ArtifactBytes::Mapped(_) => true,
+        }
+    }
+
+    /// True when `slice` lies entirely within this buffer — the guard
+    /// the arena loader checks before borrowing a sub-slice against
+    /// this owner's lifetime.
+    pub fn contains(&self, slice: &[u8]) -> bool {
+        let base = self.as_ref().as_ptr() as usize;
+        let end = base + self.as_ref().len();
+        let s = slice.as_ptr() as usize;
+        s >= base && s + slice.len() <= end
+    }
+}
+
+impl AsRef<[u8]> for ArtifactBytes {
+    fn as_ref(&self) -> &[u8] {
+        match self {
+            ArtifactBytes::Owned(v) => v,
+            #[cfg(unix)]
+            ArtifactBytes::Mapped(m) => m.as_slice(),
+        }
+    }
+}
+
+impl std::ops::Deref for ArtifactBytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, contents: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("tablenet_bytes_{name}"));
+        std::fs::write(&p, contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn open_maps_and_reads_back_exactly() {
+        let data: Vec<u8> = (0..8192u32).map(|i| (i * 7) as u8).collect();
+        let p = tmp("roundtrip", &data);
+        let b = ArtifactBytes::open(&p, 1 << 20).unwrap();
+        assert_eq!(&b[..], &data[..]);
+        #[cfg(unix)]
+        assert!(b.is_mapped(), "unix open should map");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_falls_back_to_owned() {
+        let p = tmp("empty", b"");
+        let b = ArtifactBytes::open(&p, 1 << 20).unwrap();
+        assert!(!b.is_mapped());
+        assert!(b.is_empty());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn cap_is_enforced_before_reading() {
+        let p = tmp("cap", &[0u8; 100]);
+        assert!(ArtifactBytes::open(&p, 99).is_err());
+        assert!(ArtifactBytes::open(&p, 100).is_ok());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn contains_checks_pointer_range() {
+        let b = ArtifactBytes::Owned(vec![1u8; 64]);
+        assert!(b.contains(&b[10..20]));
+        assert!(b.contains(&b[..]));
+        let other = [0u8; 16];
+        assert!(!b.contains(&other));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapping_survives_file_unlink() {
+        // a deployed model must keep serving after its artifact file is
+        // replaced/unlinked (standard rolling-deploy pattern)
+        let data = vec![0xABu8; 4096];
+        let p = tmp("unlink", &data);
+        let b = ArtifactBytes::open(&p, 1 << 20).unwrap();
+        std::fs::remove_file(&p).unwrap();
+        assert_eq!(&b[..], &data[..]);
+    }
+}

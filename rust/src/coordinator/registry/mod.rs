@@ -19,6 +19,8 @@
 //! live table, so registrations, swaps and retirements are visible
 //! without re-handing out clients.
 
+pub mod watcher;
+
 use super::metrics::{FleetSnapshot, ModelSnapshot, Snapshot};
 use super::router::FleetClient;
 use super::{Backend, Coordinator};
@@ -83,6 +85,15 @@ pub struct ModelRegistry {
 impl Default for ModelRegistry {
     fn default() -> Self {
         ModelRegistry::new()
+    }
+}
+
+impl Clone for ModelRegistry {
+    /// Another handle onto the SAME fleet (the model table is shared,
+    /// not copied) — this is how the deploy watcher thread holds the
+    /// registry while the serving thread keeps its own handle.
+    fn clone(&self) -> Self {
+        ModelRegistry { shared: self.shared.clone() }
     }
 }
 

@@ -1,0 +1,519 @@
+//! Deploy watcher: config-free rolling deploys from a directory of
+//! `.ltm` artifacts.
+//!
+//! Point a [`DirWatcher`] at a directory and the fleet follows the
+//! filesystem: a new `model.ltm` is auto-registered under its stem
+//! (`model`), and overwriting a file whose *content* changed hot-swaps
+//! that model through the registry's atomic
+//! [`Coordinator::swap`](crate::coordinator::Coordinator::swap) — the
+//! same versioned `BackendSlot` path `--swap` uses, so in-flight
+//! batches finish on the old version, later batches take the new one,
+//! and no request is lost. Combined with the mmap-borrowing v2 artifact
+//! loader, dropping a large bank into the watch dir deploys it at disk
+//! streaming speed: the load verifies checksums in one sequential scan
+//! and borrows every arena in place — no decode, no allocation, no
+//! memcpy of table payloads.
+//!
+//! Change detection is two-tier and never re-reads table payloads:
+//! `(mtime, len)` gates a cheap re-check, and the artifact's own stored
+//! checksum ([`artifact::content_fingerprint`], O(header)) decides
+//! whether content actually changed — a bare `touch` does not redeploy.
+//! A file that fails to parse is reported once ([`WatchEvent::Failed`])
+//! and retried only after it changes again, so a half-copied artifact
+//! heals on the next poll after the copy completes.
+//!
+//! **Replacing a live model must be an atomic rename** (copy to a temp
+//! name — anything not `*.ltm` is ignored — then `mv` over the stem):
+//! the previous version serves zero-copy from a mapping of the OLD
+//! inode, and an in-place overwrite would truncate/mutate the file
+//! under that mapping (SIGBUS / torn tables on request threads).
+//! Rename swaps the directory entry without touching the serving
+//! inode. Deleting a file likewise does NOT retire its model: the
+//! mapped artifact keeps serving (the mapping outlives the directory
+//! entry), matching the standard rolling-deploy contract; retire
+//! explicitly via [`ModelRegistry::retire`].
+
+use super::{ModelRegistry, RegistryError};
+use crate::config::ServeConfig;
+use crate::coordinator::Backend;
+use crate::engine::{artifact, LutModel};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, SystemTime};
+
+/// One observed deploy action (or failure) from a directory scan.
+#[derive(Debug, Clone)]
+pub enum WatchEvent {
+    /// A new stem appeared and is now served under `name`.
+    Registered {
+        name: String,
+        path: PathBuf,
+        /// Input features of the deployed pipeline (for request
+        /// synthesis / admission checks).
+        features: Option<usize>,
+        /// Every table bank borrows its arena from the mapped artifact
+        /// (the v2 zero-copy fast path); false = at least one owned
+        /// copy (v1 artifact, non-unix, or misaligned block).
+        zero_copy: bool,
+    },
+    /// An existing model's file content changed; the registry installed
+    /// the new backend as `version`.
+    Swapped { name: String, path: PathBuf, version: u64, features: Option<usize>, zero_copy: bool },
+    /// A file could not be fingerprinted, parsed, or deployed. Reported
+    /// once per content state; the file is retried after it changes.
+    Failed { path: PathBuf, error: String },
+}
+
+impl std::fmt::Display for WatchEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WatchEvent::Registered { name, path, zero_copy, .. } => write!(
+                f,
+                "registered model '{name}' from {} ({})",
+                path.display(),
+                if *zero_copy { "zero-copy" } else { "copied" }
+            ),
+            WatchEvent::Swapped { name, path, version, zero_copy, .. } => write!(
+                f,
+                "swapped model '{name}' -> v{version} from {} ({})",
+                path.display(),
+                if *zero_copy { "zero-copy" } else { "copied" }
+            ),
+            WatchEvent::Failed { path, error } => {
+                write!(f, "watch: {} rejected: {error}", path.display())
+            }
+        }
+    }
+}
+
+/// Watcher configuration.
+#[derive(Debug, Clone)]
+pub struct WatcherOptions {
+    /// Batching/worker config for models the watcher registers (swaps
+    /// keep the target model's existing pipeline config).
+    pub serve_cfg: ServeConfig,
+    /// Directory poll interval.
+    pub poll: Duration,
+}
+
+impl Default for WatcherOptions {
+    fn default() -> Self {
+        WatcherOptions { serve_cfg: ServeConfig::default(), poll: Duration::from_millis(200) }
+    }
+}
+
+/// Last deployed (or rejected) state of one watched stem.
+struct FileState {
+    mtime: Option<SystemTime>,
+    len: u64,
+    /// Content fingerprint of the deployed artifact; `None` while the
+    /// current file content is known-bad (parse/deploy failure).
+    fingerprint: Option<u64>,
+}
+
+/// The synchronous scan engine behind [`DirWatcher`]: one call = one
+/// directory pass. Split out so deploy logic is testable without
+/// threads and embeddable in other control loops.
+pub struct DirScanner {
+    dir: PathBuf,
+    cfg: ServeConfig,
+    seen: BTreeMap<String, FileState>,
+    /// Last directory-level read error, reported once (not once per
+    /// poll) until the directory becomes readable again.
+    dir_error: Option<String>,
+}
+
+impl DirScanner {
+    pub fn new(dir: impl Into<PathBuf>, cfg: ServeConfig) -> DirScanner {
+        DirScanner { dir: dir.into(), cfg, seen: BTreeMap::new(), dir_error: None }
+    }
+
+    /// One directory pass: register new `.ltm` stems, swap changed
+    /// ones, report failures. Returns the events of this pass (empty =
+    /// nothing changed).
+    pub fn scan(&mut self, registry: &ModelRegistry) -> Vec<WatchEvent> {
+        let mut events = Vec::new();
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => {
+                self.dir_error = None;
+                e
+            }
+            Err(e) => {
+                let error = format!("reading watch dir: {e}");
+                if self.dir_error.as_ref() != Some(&error) {
+                    self.dir_error = Some(error.clone());
+                    events.push(WatchEvent::Failed { path: self.dir.clone(), error });
+                }
+                return events;
+            }
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("ltm") {
+                continue;
+            }
+            let Some(name) = path.file_stem().and_then(|s| s.to_str()).map(str::to_string)
+            else {
+                continue;
+            };
+            let meta = match entry.metadata() {
+                Ok(m) if m.is_file() => m,
+                _ => continue,
+            };
+            let mtime = meta.modified().ok();
+            let len = meta.len();
+            if let Some(st) = self.seen.get(&name) {
+                if st.mtime == mtime && st.len == len {
+                    continue; // untouched since last look
+                }
+            }
+            // stat changed (or new stem): decide via the artifact's own
+            // stored checksum — O(header), no table bytes re-read
+            let fp = match artifact::content_fingerprint(&path) {
+                Ok(fp) => fp,
+                Err(e) => {
+                    self.seen.insert(name, FileState { mtime, len, fingerprint: None });
+                    events.push(WatchEvent::Failed { path, error: format!("{e:#}") });
+                    continue;
+                }
+            };
+            if self.seen.get(&name).and_then(|s| s.fingerprint) == Some(fp) {
+                // bare touch: mtime moved, content identical — no deploy
+                self.seen.insert(name, FileState { mtime, len, fingerprint: Some(fp) });
+                continue;
+            }
+            match deploy(registry, &name, &path, &self.cfg) {
+                Ok(ev) => {
+                    self.seen.insert(name, FileState { mtime, len, fingerprint: Some(fp) });
+                    events.push(ev);
+                }
+                Err(error) => {
+                    self.seen.insert(name, FileState { mtime, len, fingerprint: None });
+                    events.push(WatchEvent::Failed { path, error });
+                }
+            }
+        }
+        events
+    }
+}
+
+/// Load `path` and install it under `name`: register a new stem, or
+/// hot-swap when the name is already serving (including names
+/// registered outside the watcher, e.g. `--artifact`).
+fn deploy(
+    registry: &ModelRegistry,
+    name: &str,
+    path: &Path,
+    cfg: &ServeConfig,
+) -> Result<WatchEvent, String> {
+    let lut = LutModel::load(path).map_err(|e| format!("{e:#}"))?;
+    let features = lut.input_features();
+    let storage = lut.storage_summary();
+    let zero_copy = storage.banks > 0 && storage.borrowed == storage.banks;
+    let backend: Arc<dyn Backend> = Arc::new(lut);
+    match registry.register(name, backend.clone(), cfg) {
+        Ok(()) => Ok(WatchEvent::Registered {
+            name: name.to_string(),
+            path: path.to_path_buf(),
+            features,
+            zero_copy,
+        }),
+        Err(RegistryError::DuplicateModel(_)) => {
+            let version = registry.swap(name, backend).map_err(|e| e.to_string())?;
+            Ok(WatchEvent::Swapped {
+                name: name.to_string(),
+                path: path.to_path_buf(),
+                version,
+                features,
+                zero_copy,
+            })
+        }
+        Err(e) => Err(e.to_string()),
+    }
+}
+
+#[derive(Default)]
+struct StatsCells {
+    scans: AtomicU64,
+    registered: AtomicU64,
+    swapped: AtomicU64,
+    failed: AtomicU64,
+}
+
+/// Cumulative watcher counters (cheap atomic reads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WatcherStats {
+    /// Completed directory passes.
+    pub scans: u64,
+    /// Models auto-registered.
+    pub registered: u64,
+    /// Rolling deploys (content-change hot-swaps).
+    pub swapped: u64,
+    /// Files rejected (parse/deploy failures).
+    pub failed: u64,
+}
+
+/// A background thread polling one directory and deploying into a
+/// [`ModelRegistry`]. Stops (and joins) on [`DirWatcher::stop`] or
+/// drop.
+pub struct DirWatcher {
+    stop: Arc<AtomicBool>,
+    stats: Arc<StatsCells>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DirWatcher {
+    /// Start watching `dir`, deploying into `registry` (a shared handle
+    /// onto the caller's fleet). `on_event` fires on the watcher thread
+    /// for every deploy/failure — keep it quick (logging, pool
+    /// bookkeeping).
+    pub fn start(
+        registry: ModelRegistry,
+        dir: impl Into<PathBuf>,
+        opts: WatcherOptions,
+        on_event: impl Fn(&WatchEvent) + Send + 'static,
+    ) -> DirWatcher {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(StatsCells::default());
+        let (stop_t, stats_t) = (stop.clone(), stats.clone());
+        let dir = dir.into();
+        let handle = std::thread::Builder::new()
+            .name("ltm-watcher".into())
+            .spawn(move || {
+                let mut scanner = DirScanner::new(dir, opts.serve_cfg.clone());
+                while !stop_t.load(Ordering::Relaxed) {
+                    for ev in scanner.scan(&registry) {
+                        match &ev {
+                            WatchEvent::Registered { .. } => &stats_t.registered,
+                            WatchEvent::Swapped { .. } => &stats_t.swapped,
+                            WatchEvent::Failed { .. } => &stats_t.failed,
+                        }
+                        .fetch_add(1, Ordering::Relaxed);
+                        on_event(&ev);
+                    }
+                    stats_t.scans.fetch_add(1, Ordering::Relaxed);
+                    // sleep in short slices so stop() returns promptly
+                    // even under long poll intervals
+                    let mut left = opts.poll;
+                    while left > Duration::ZERO && !stop_t.load(Ordering::Relaxed) {
+                        let step = left.min(Duration::from_millis(25));
+                        std::thread::sleep(step);
+                        left = left.saturating_sub(step);
+                    }
+                }
+            })
+            .expect("spawning the watcher thread");
+        DirWatcher { stop, stats, handle: Some(handle) }
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> WatcherStats {
+        WatcherStats {
+            scans: self.stats.scans.load(Ordering::Relaxed),
+            registered: self.stats.registered.load(Ordering::Relaxed),
+            swapped: self.stats.swapped.load(Ordering::Relaxed),
+            failed: self.stats.failed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop polling, join the thread, return the final counters. The
+    /// registry and its models keep serving — the watcher only adds.
+    pub fn stop(mut self) -> WatcherStats {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for DirWatcher {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::plan::EnginePlan;
+    use crate::engine::Compiler;
+    use crate::nn::Model;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn sandbox(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tablenet_watch_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn small_artifact_bytes(seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        let model = Model::linear(
+            Tensor::randn(&[10, 784], 0.05, &mut rng),
+            Tensor::randn(&[10], 0.02, &mut rng),
+        );
+        let lut = Compiler::new(&model)
+            .plan(&EnginePlan::linear_default())
+            .build()
+            .unwrap();
+        artifact::to_bytes(&lut)
+    }
+
+    #[test]
+    fn scanner_registers_swaps_and_ignores_noise() {
+        let dir = sandbox("scanner");
+        let registry = ModelRegistry::new();
+        let mut scanner = DirScanner::new(&dir, ServeConfig::default());
+
+        // empty dir, non-artifact files, and a directory named *.ltm
+        // produce nothing
+        assert!(scanner.scan(&registry).is_empty());
+        std::fs::write(dir.join("README.txt"), b"not a model").unwrap();
+        std::fs::create_dir(dir.join("not_a_file.ltm")).unwrap();
+        assert!(scanner.scan(&registry).is_empty());
+
+        // a dropped artifact registers under its stem and serves
+        let v1_bytes = small_artifact_bytes(1);
+        std::fs::write(dir.join("digits.ltm"), &v1_bytes).unwrap();
+        let evs = scanner.scan(&registry);
+        assert_eq!(evs.len(), 1, "{evs:?}");
+        let features = match &evs[0] {
+            WatchEvent::Registered { name, features, .. } => {
+                assert_eq!(name, "digits");
+                features.unwrap()
+            }
+            other => panic!("expected Registered, got {other:?}"),
+        };
+        assert_eq!(features, 784);
+        let client = registry.client();
+        client.infer("digits", vec![0.3; features]).unwrap();
+
+        // steady state: no stat change -> no events, no fingerprints
+        assert!(scanner.scan(&registry).is_empty());
+
+        // rewriting IDENTICAL content is not a deploy (fingerprint
+        // equality catches the mtime bump)
+        std::thread::sleep(Duration::from_millis(15));
+        std::fs::write(dir.join("digits.ltm"), &v1_bytes).unwrap();
+        let evs = scanner.scan(&registry);
+        assert!(evs.is_empty(), "bare touch must not redeploy: {evs:?}");
+        assert_eq!(client.infer("digits", vec![0.3; features]).unwrap().version, 1);
+
+        // overwriting with DIFFERENT content hot-swaps to v2
+        std::thread::sleep(Duration::from_millis(15));
+        std::fs::write(dir.join("digits.ltm"), small_artifact_bytes(2)).unwrap();
+        let evs = scanner.scan(&registry);
+        assert_eq!(evs.len(), 1, "{evs:?}");
+        match &evs[0] {
+            WatchEvent::Swapped { name, version, .. } => {
+                assert_eq!((name.as_str(), *version), ("digits", 2));
+            }
+            other => panic!("expected Swapped, got {other:?}"),
+        }
+        assert_eq!(client.infer("digits", vec![0.3; features]).unwrap().version, 2);
+
+        // a corrupt artifact is reported ONCE and never deployed...
+        std::fs::write(dir.join("broken.ltm"), b"LTM1 garbage").unwrap();
+        let evs = scanner.scan(&registry);
+        assert_eq!(evs.len(), 1);
+        assert!(matches!(&evs[0], WatchEvent::Failed { .. }), "{evs:?}");
+        assert_eq!(registry.models().len(), 1);
+        assert!(scanner.scan(&registry).is_empty(), "failure must not re-report");
+
+        // ...and heals once the file is rewritten valid
+        std::thread::sleep(Duration::from_millis(15));
+        std::fs::write(dir.join("broken.ltm"), small_artifact_bytes(3)).unwrap();
+        let evs = scanner.scan(&registry);
+        assert_eq!(evs.len(), 1);
+        assert!(
+            matches!(&evs[0], WatchEvent::Registered { name, .. } if name == "broken"),
+            "{evs:?}"
+        );
+        assert_eq!(registry.models().len(), 2);
+
+        registry.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scanner_swaps_models_registered_outside_the_watcher() {
+        // a watch-dir file whose stem matches a statically-registered
+        // model becomes a rolling deploy of that model
+        let dir = sandbox("static");
+        let registry = ModelRegistry::new();
+        let lut = artifact::from_bytes(&small_artifact_bytes(4)).unwrap();
+        registry.register("m", Arc::new(lut), &ServeConfig::default()).unwrap();
+        let mut scanner = DirScanner::new(&dir, ServeConfig::default());
+        std::fs::write(dir.join("m.ltm"), small_artifact_bytes(5)).unwrap();
+        let evs = scanner.scan(&registry);
+        assert!(
+            matches!(&evs[0], WatchEvent::Swapped { name, version: 2, .. } if name == "m"),
+            "{evs:?}"
+        );
+        registry.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Write + rename: the atomic deploy pattern the watcher contract
+    /// requires for REPLACING a live model (the old version serves from
+    /// a mapping of the old inode; rename never lets a scan — or a
+    /// serving thread — see a half-written file).
+    fn deploy_atomic(dir: &Path, name: &str, bytes: &[u8]) {
+        let tmp = dir.join(format!("{name}.tmp"));
+        std::fs::write(&tmp, bytes).unwrap();
+        std::fs::rename(&tmp, dir.join(name)).unwrap();
+    }
+
+    #[test]
+    fn watcher_thread_deploys_end_to_end() {
+        let dir = sandbox("thread");
+        let registry = ModelRegistry::new();
+        let watcher = DirWatcher::start(
+            registry.clone(),
+            &dir,
+            WatcherOptions { poll: Duration::from_millis(20), ..Default::default() },
+            |_| {},
+        );
+
+        let wait_until = |pred: &dyn Fn() -> bool, what: &str| {
+            let t0 = std::time::Instant::now();
+            while !pred() {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(10),
+                    "timed out waiting for {what}"
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        };
+
+        // drop a model in (atomically — the poll races plain writes):
+        // it appears in the fleet without any call on the registry from
+        // this thread
+        deploy_atomic(&dir, "live.ltm", &small_artifact_bytes(6));
+        wait_until(&|| !registry.models().is_empty(), "auto-registration");
+        let client = registry.client();
+        assert_eq!(client.infer("live", vec![0.1; 784]).unwrap().version, 1);
+
+        // replace with new content: version bumps with zero downtime
+        deploy_atomic(&dir, "live.ltm", &small_artifact_bytes(7));
+        wait_until(
+            &|| registry.models().first().is_some_and(|m| m.version == 2),
+            "rolling deploy",
+        );
+        assert_eq!(client.infer("live", vec![0.1; 784]).unwrap().version, 2);
+
+        let stats = watcher.stop();
+        assert!(stats.scans >= 2, "{stats:?}");
+        assert_eq!((stats.registered, stats.swapped, stats.failed), (1, 1, 0));
+        registry.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -5,12 +5,37 @@
 //! bit-exact (same classes, same logits, same zero-multiply counters;
 //! asserted by `rust/tests/artifact_roundtrip.rs`).
 //!
-//! Layout (all integers little-endian):
+//! Two container versions are readable; v2 is written (all integers
+//! little-endian):
+//!
+//! **v2 — zero-copy layout** (written by [`to_bytes`]):
+//!
+//! ```text
+//! magic   b"LTM1"
+//! u32     container version (2)
+//! u32     plan JSON length | plan JSON (the EnginePlan, via config)
+//! u32     stage count
+//! stage*  u16 kind tag | u64 payload offset | u64 payload length
+//!         | u64 payload FNV-1a 64
+//! u64     FNV-1a 64 of every preceding byte (the header checksum)
+//! stage payloads, back to back (offsets above are file-absolute;
+//! every table-arena entry block inside them is padded to a 64-byte
+//! file offset)
+//! ```
+//!
+//! The per-stage checksums localise corruption ("stage 3 checksum
+//! mismatch at offset 0x…"), and the 64-byte alignment lets
+//! [`load`] memory-map the file and hand each bank its entry block
+//! *in place* — zero table-payload copies and zero table-sized heap
+//! allocations; the load's cost is the one sequential checksum scan
+//! over the mapping (see [`crate::bytes`] and [`crate::lut::arena`]).
+//!
+//! **v1 — legacy packed layout** (still loaded, via the copying path):
 //!
 //! ```text
 //! magic   b"LTM1"
 //! u32     container version (1)
-//! u32     plan JSON length | plan JSON (the EnginePlan, via config)
+//! u32     plan JSON length | plan JSON
 //! u32     stage count
 //! stage*  u16 kind tag | u64 payload length | payload bytes
 //! u64     FNV-1a 64 checksum of every preceding byte
@@ -18,21 +43,29 @@
 //!
 //! Stage payloads are owned by the stage modules (`Stage::write_payload`
 //! / `read_stage`), so new stage kinds serialize without touching this
-//! container. The trailing checksum rejects truncation and bit rot
-//! before any payload is parsed.
+//! container.
 
+use crate::bytes::ArtifactBytes;
 use crate::engine::stages::{read_stage, Stage, StageKind};
 use crate::engine::LutModel;
-use crate::lut::wire::{self, Reader};
+use crate::lut::arena::ArenaResidency;
+use crate::lut::wire::{self, Reader, WireCtx};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 pub const MAGIC: &[u8; 4] = b"LTM1";
-pub const VERSION: u32 = 1;
+/// Container version written by [`to_bytes`] / [`save`].
+pub const VERSION: u32 = 2;
+/// Legacy packed container version (read-only compatibility).
+pub const VERSION_V1: u32 = 1;
 
 /// Largest artifact the loader will accept (matches the engine's
 /// table materialisation cap with headroom for metadata).
 const MAX_ARTIFACT_BYTES: u64 = 8 << 30;
+
+/// Bytes of one v2 stage-index record: kind + offset + length + fnv.
+const V2_INDEX_RECORD: usize = 2 + 8 + 8 + 8;
 
 /// FNV-1a 64 (vendored crate set has no hash crates; collision
 /// resistance is not a goal — this is an integrity check, not MAC).
@@ -45,7 +78,8 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Serialize a compiled model to the `.ltm` byte format.
+/// Serialize a compiled model to the current (v2) `.ltm` byte format:
+/// indexed, per-stage-checksummed, arena entry blocks 64-byte-aligned.
 pub fn to_bytes(model: &LutModel) -> Vec<u8> {
     let mut out = Vec::new();
     out.extend_from_slice(MAGIC);
@@ -53,11 +87,51 @@ pub fn to_bytes(model: &LutModel) -> Vec<u8> {
     let plan_json = crate::config::plan_to_json(model.plan()).to_string();
     wire::put_u32(&mut out, plan_json.len() as u32);
     out.extend_from_slice(plan_json.as_bytes());
+    let n = model.stages().len();
+    wire::put_u32(&mut out, n as u32);
+    // reserve the index + header checksum, backpatched once payload
+    // offsets are known
+    let idx_pos = out.len();
+    out.resize(out.len() + n * V2_INDEX_RECORD + 8, 0);
+    // payloads go straight into the container buffer: `out.len()` IS
+    // the file offset, which is what lets the arenas place their entry
+    // blocks on 64-byte file boundaries
+    let mut index = Vec::with_capacity(n);
+    for stage in model.stages() {
+        let start = out.len();
+        stage.write_payload(&mut out, true);
+        let sum = fnv1a(&out[start..]);
+        index.push((stage.kind().tag(), start as u64, (out.len() - start) as u64, sum));
+    }
+    let mut idx_bytes = Vec::with_capacity(n * V2_INDEX_RECORD);
+    for (tag, off, len, sum) in index {
+        wire::put_u16(&mut idx_bytes, tag);
+        wire::put_u64(&mut idx_bytes, off);
+        wire::put_u64(&mut idx_bytes, len);
+        wire::put_u64(&mut idx_bytes, sum);
+    }
+    out[idx_pos..idx_pos + idx_bytes.len()].copy_from_slice(&idx_bytes);
+    let fnv_pos = idx_pos + idx_bytes.len();
+    let header_sum = fnv1a(&out[..fnv_pos]);
+    out[fnv_pos..fnv_pos + 8].copy_from_slice(&header_sum.to_le_bytes());
+    out
+}
+
+/// Serialize to the legacy v1 packed format. Kept for the
+/// compatibility matrix (old readers, and tests proving v1 files still
+/// load bit-exact); new artifacts should use [`to_bytes`].
+pub fn to_bytes_v1(model: &LutModel) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    wire::put_u32(&mut out, VERSION_V1);
+    let plan_json = crate::config::plan_to_json(model.plan()).to_string();
+    wire::put_u32(&mut out, plan_json.len() as u32);
+    out.extend_from_slice(plan_json.as_bytes());
     wire::put_u32(&mut out, model.stages().len() as u32);
     let mut payload = Vec::new();
     for stage in model.stages() {
         payload.clear();
-        stage.write_payload(&mut payload);
+        stage.write_payload(&mut payload, false);
         wire::put_u16(&mut out, stage.kind().tag());
         wire::put_u64(&mut out, payload.len() as u64);
         out.extend_from_slice(&payload);
@@ -67,20 +141,63 @@ pub fn to_bytes(model: &LutModel) -> Vec<u8> {
     out
 }
 
+/// One stage record of a parsed container: checksum-verified, payload
+/// still undecoded.
+struct StageRecord<'a> {
+    kind: StageKind,
+    payload: &'a [u8],
+    /// File offset of the payload (v2; v1 records the in-body offset).
+    offset: u64,
+    /// Stored per-stage checksum (v2 only).
+    checksum: Option<u64>,
+}
+
 /// The parsed container header + stage table of a `.ltm` buffer:
 /// checksum-verified, payloads still undecoded. This is the ONE
-/// header-read path — [`from_bytes`] (registry / `serve` loads) and
-/// [`inspect_bytes`] (`tablenet inspect`) both start here.
+/// header-read path — [`from_bytes`] / [`load`] (registry / `serve`
+/// loads) and [`inspect_bytes`] (`tablenet inspect`) all start here.
 struct Container<'a> {
+    version: u32,
     plan_json: &'a str,
     plan: crate::engine::plan::EnginePlan,
-    stages: Vec<(StageKind, &'a [u8])>,
+    stages: Vec<StageRecord<'a>>,
 }
 
 fn parse_container(bytes: &[u8]) -> Result<Container<'_>> {
     if bytes.len() < MAGIC.len() + 4 + 4 + 4 + 8 {
         bail!("artifact too short ({} bytes) to be a .ltm file", bytes.len());
     }
+    let mut r = Reader::new(bytes);
+    let magic = r.take(4).map_err(wire_err)?;
+    if magic != MAGIC {
+        bail!("bad artifact magic {magic:?}, expected {MAGIC:?}");
+    }
+    let version = r.u32().map_err(wire_err)?;
+    match version {
+        VERSION_V1 => parse_container_v1(bytes),
+        VERSION => parse_container_v2(bytes, r),
+        other => {
+            bail!("unsupported .ltm version {other} (this build reads {VERSION_V1} and {VERSION})")
+        }
+    }
+}
+
+/// Shared plan-JSON decode (both container versions embed it the same
+/// way: u32 length + verbatim JSON).
+fn parse_plan<'a>(
+    r: &mut Reader<'a>,
+) -> Result<(&'a str, crate::engine::plan::EnginePlan)> {
+    let plan_len = r.len_capped_u32(1 << 20, "plan JSON").map_err(wire_err)?;
+    let plan_bytes = r.take(plan_len).map_err(wire_err)?;
+    let plan_json = std::str::from_utf8(plan_bytes).context("artifact plan JSON is not utf-8")?;
+    let parsed = crate::config::json::Json::parse(plan_json)
+        .map_err(|e| anyhow!("artifact plan JSON: {e}"))?;
+    let plan = crate::config::plan_from_json(&parsed)?;
+    Ok((plan_json, plan))
+}
+
+/// v1: whole-file trailing checksum, packed inline payloads.
+fn parse_container_v1(bytes: &[u8]) -> Result<Container<'_>> {
     let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
     let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
     let computed = fnv1a(body);
@@ -88,23 +205,9 @@ fn parse_container(bytes: &[u8]) -> Result<Container<'_>> {
         bail!("artifact checksum mismatch (stored {stored:#018x}, computed {computed:#018x}) — file is corrupted or truncated");
     }
     let mut r = Reader::new(body);
-    let magic = r.take(4).map_err(wire_err)?;
-    if magic != MAGIC {
-        bail!("bad artifact magic {magic:?}, expected {MAGIC:?}");
-    }
-    let version = r.u32().map_err(wire_err)?;
-    if version != VERSION {
-        bail!("unsupported .ltm version {version} (this build reads {VERSION})");
-    }
-    let plan_len = r
-        .len_capped_u32(1 << 20, "plan JSON")
-        .map_err(wire_err)?;
-    let plan_bytes = r.take(plan_len).map_err(wire_err)?;
-    let plan_json =
-        std::str::from_utf8(plan_bytes).context("artifact plan JSON is not utf-8")?;
-    let parsed = crate::config::json::Json::parse(plan_json)
-        .map_err(|e| anyhow!("artifact plan JSON: {e}"))?;
-    let plan = crate::config::plan_from_json(&parsed)?;
+    r.take(4).map_err(wire_err)?; // magic, already validated
+    r.u32().map_err(wire_err)?; // version, already validated
+    let (plan_json, plan) = parse_plan(&mut r)?;
     let n_stages = r.u32().map_err(wire_err)? as usize;
     if n_stages > 4096 {
         bail!("artifact claims {n_stages} stages — refusing");
@@ -115,33 +218,122 @@ fn parse_container(bytes: &[u8]) -> Result<Container<'_>> {
         let kind = StageKind::from_tag(tag)
             .ok_or_else(|| anyhow!("stage {i}: unknown kind tag {tag}"))?;
         let len = r.u64().map_err(wire_err)? as usize;
+        let offset = (body.len() - r.remaining()) as u64;
         let payload = r
             .take(len)
             .map_err(wire_err)
             .with_context(|| format!("stage {i} ({}) payload", kind.name()))?;
-        stages.push((kind, payload));
+        stages.push(StageRecord { kind, payload, offset, checksum: None });
     }
     if !r.is_empty() {
         bail!("artifact has {} trailing bytes after the stage table", r.remaining());
     }
-    Ok(Container { plan_json, plan, stages })
+    Ok(Container { version: VERSION_V1, plan_json, plan, stages })
+}
+
+/// v2: checksummed header with an absolute-offset stage index, then
+/// back-to-back payloads, each covered by its own checksum. Every byte
+/// of the file is covered by exactly one checksum, so corruption is
+/// always caught AND localised to a stage + offset.
+///
+/// Order matters: the header is walked with bounds-checked,
+/// length-capped reads ONLY until its checksum verifies; the plan JSON
+/// is not handed to the parser (and no payload is decoded) before
+/// that — corrupted bytes fail as "checksum mismatch", never as a
+/// confusing downstream parse error (the invariant v1's whole-file
+/// checksum provided).
+fn parse_container_v2<'a>(bytes: &'a [u8], mut r: Reader<'a>) -> Result<Container<'a>> {
+    let plan_len = r.len_capped_u32(1 << 20, "plan JSON").map_err(wire_err)?;
+    let plan_bytes = r.take(plan_len).map_err(wire_err)?;
+    let n_stages = r.u32().map_err(wire_err)? as usize;
+    if n_stages > 4096 {
+        bail!("artifact claims {n_stages} stages — refusing");
+    }
+    let mut index = Vec::with_capacity(n_stages);
+    for i in 0..n_stages {
+        let tag = r.u16().map_err(wire_err)?;
+        let off = r.u64().map_err(wire_err)?;
+        let len = r.u64().map_err(wire_err)?;
+        let sum = r.u64().map_err(wire_err)?;
+        index.push((i, tag, off, len, sum));
+    }
+    let fnv_pos = bytes.len() - r.remaining();
+    let stored = r.u64().map_err(wire_err)?;
+    let computed = fnv1a(&bytes[..fnv_pos]);
+    if stored != computed {
+        bail!("artifact header checksum mismatch (stored {stored:#018x}, computed {computed:#018x}) — file is corrupted or truncated");
+    }
+    // the header is now trusted: decode the plan and resolve kind tags
+    let plan_json =
+        std::str::from_utf8(plan_bytes).context("artifact plan JSON is not utf-8")?;
+    let parsed = crate::config::json::Json::parse(plan_json)
+        .map_err(|e| anyhow!("artifact plan JSON: {e}"))?;
+    let plan = crate::config::plan_from_json(&parsed)?;
+    let index: Vec<(StageKind, u64, u64, u64)> = index
+        .into_iter()
+        .map(|(i, tag, off, len, sum)| {
+            StageKind::from_tag(tag)
+                .map(|kind| (kind, off, len, sum))
+                .ok_or_else(|| anyhow!("stage {i}: unknown kind tag {tag}"))
+        })
+        .collect::<Result<_>>()?;
+    // the index is now trusted (header checksum): payloads must tile
+    // the rest of the file exactly, so no byte escapes a checksum
+    let payload_base = (fnv_pos + 8) as u64;
+    let mut expect = payload_base;
+    let mut stages = Vec::with_capacity(n_stages);
+    for (i, &(kind, off, len, sum)) in index.iter().enumerate() {
+        if off != expect {
+            bail!(
+                "stage {i} ({}) payload offset {off:#x} does not follow the previous stage (expected {expect:#x})",
+                kind.name()
+            );
+        }
+        let end = off
+            .checked_add(len)
+            .filter(|&e| e <= bytes.len() as u64)
+            .ok_or_else(|| {
+                anyhow!(
+                    "stage {i} ({}) payload at offset {off:#x} (+{len} bytes) runs past the end of the {}-byte file — truncated?",
+                    kind.name(),
+                    bytes.len()
+                )
+            })?;
+        let payload = &bytes[off as usize..end as usize];
+        let computed = fnv1a(payload);
+        if computed != sum {
+            bail!(
+                "stage {i} ({}) checksum mismatch at offset {off:#x} (stored {sum:#018x}, computed {computed:#018x}) — file is corrupted",
+                kind.name()
+            );
+        }
+        stages.push(StageRecord { kind, payload, offset: off, checksum: Some(sum) });
+        expect = end;
+    }
+    if expect != bytes.len() as u64 {
+        bail!(
+            "artifact has {} trailing bytes after the last stage payload",
+            bytes.len() as u64 - expect
+        );
+    }
+    Ok(Container { version: VERSION, plan_json, plan, stages })
 }
 
 /// Decode every stage payload of a parsed container, enforcing the
 /// per-stage trailing-bytes rule. Shared by [`from_bytes`] and
 /// [`inspect_bytes`] so an artifact inspect accepts is exactly one a
 /// serve load accepts.
-fn decode_stages(records: &[(StageKind, &[u8])]) -> Result<Vec<Box<dyn Stage>>> {
+fn decode_stages(records: &[StageRecord], ctx: &WireCtx) -> Result<Vec<Box<dyn Stage>>> {
     let mut stages: Vec<Box<dyn Stage>> = Vec::with_capacity(records.len());
-    for (i, (kind, payload)) in records.iter().enumerate() {
-        let mut pr = Reader::new(payload);
-        let stage = read_stage(*kind, &mut pr)
+    for (i, rec) in records.iter().enumerate() {
+        let mut pr = Reader::new(rec.payload);
+        let stage = read_stage(rec.kind, &mut pr, ctx)
             .map_err(wire_err)
-            .with_context(|| format!("decoding stage {i} ({})", kind.name()))?;
+            .with_context(|| format!("decoding stage {i} ({})", rec.kind.name()))?;
         if !pr.is_empty() {
             bail!(
                 "stage {i} ({}) payload has {} trailing bytes",
-                kind.name(),
+                rec.kind.name(),
                 pr.remaining()
             );
         }
@@ -189,10 +381,25 @@ fn validate_pipeline(stages: &[Box<dyn Stage>]) -> Result<()> {
     Ok(())
 }
 
-/// Parse a `.ltm` byte buffer back into a compiled model.
+/// Parse a `.ltm` byte buffer back into a compiled model. Transient
+/// buffer: arenas are always copied onto the heap. The serving path
+/// ([`load`]) maps the file instead and borrows v2 arenas zero-copy.
 pub fn from_bytes(bytes: &[u8]) -> Result<LutModel> {
     let c = parse_container(bytes)?;
-    let stages = decode_stages(&c.stages)?;
+    let ctx = WireCtx { aligned: c.version >= VERSION, backing: None };
+    let stages = decode_stages(&c.stages, &ctx)?;
+    validate_pipeline(&stages)?;
+    Ok(LutModel::from_parts(stages, c.plan))
+}
+
+/// Parse an [`ArtifactBytes`] buffer into a compiled model, borrowing
+/// v2 table arenas from the buffer zero-copy (the `Arc` keeps the
+/// mapping alive for the model's lifetime). v1 containers — and any
+/// misaligned block — decode through the copying path, bit-exact.
+pub fn from_artifact_bytes(owner: &Arc<ArtifactBytes>) -> Result<LutModel> {
+    let c = parse_container(owner)?;
+    let ctx = WireCtx { aligned: c.version >= VERSION, backing: Some(owner) };
+    let stages = decode_stages(&c.stages, &ctx)?;
     validate_pipeline(&stages)?;
     Ok(LutModel::from_parts(stages, c.plan))
 }
@@ -201,37 +408,67 @@ fn wire_err(e: wire::WireError) -> anyhow::Error {
     anyhow!("{e}")
 }
 
-/// Write a compiled model to `path`.
+/// Write a compiled model to `path` (v2 format).
 pub fn save(model: &LutModel, path: &Path) -> Result<()> {
     let bytes = to_bytes(model);
     std::fs::write(path, bytes)
         .with_context(|| format!("writing artifact {}", path.display()))
 }
 
-/// Load a compiled model from `path`.
+/// Load a compiled model from `path`. The file is memory-mapped when
+/// the platform allows; a v2 artifact is then served *in place* — zero
+/// table-payload copies and no table-sized allocations. The load's
+/// cost is one sequential checksum scan over the mapping (integrity
+/// is always verified before serving).
 pub fn load(path: &Path) -> Result<LutModel> {
-    let bytes = read_capped(path)?;
-    from_bytes(&bytes).with_context(|| format!("parsing artifact {}", path.display()))
+    let owner = Arc::new(open_bytes(path)?);
+    from_artifact_bytes(&owner).with_context(|| format!("parsing artifact {}", path.display()))
 }
 
-fn read_capped(path: &Path) -> Result<Vec<u8>> {
-    let meta = std::fs::metadata(path)
-        .with_context(|| format!("reading artifact {}", path.display()))?;
-    if meta.len() > MAX_ARTIFACT_BYTES {
-        bail!(
-            "artifact {} is {} bytes — larger than the {} byte cap",
-            path.display(),
-            meta.len(),
-            MAX_ARTIFACT_BYTES
-        );
+fn open_bytes(path: &Path) -> Result<ArtifactBytes> {
+    ArtifactBytes::open(path, MAX_ARTIFACT_BYTES)
+        .with_context(|| format!("reading artifact {}", path.display()))
+}
+
+/// Content fingerprint of an artifact file, read from its own
+/// checksums in O(header) time: the v2 header checksum covers the
+/// whole stage index *including every per-stage payload checksum*, so
+/// it identifies the full contents; v1 stores a whole-file trailing
+/// checksum. Used by the deploy watcher to distinguish a real content
+/// change from a bare mtime touch without re-reading gigabyte banks.
+pub fn content_fingerprint(path: &Path) -> Result<u64> {
+    let bytes = open_bytes(path)?;
+    if bytes.len() < MAGIC.len() + 4 + 4 + 4 + 8 {
+        bail!("artifact too short ({} bytes) to be a .ltm file", bytes.len());
     }
-    std::fs::read(path).with_context(|| format!("reading artifact {}", path.display()))
+    let mut r = Reader::new(&bytes);
+    let magic = r.take(4).map_err(wire_err)?;
+    if magic != MAGIC {
+        bail!("bad artifact magic {magic:?}, expected {MAGIC:?}");
+    }
+    match r.u32().map_err(wire_err)? {
+        VERSION_V1 => {
+            let tail = &bytes[bytes.len() - 8..];
+            Ok(u64::from_le_bytes(tail.try_into().unwrap()))
+        }
+        VERSION => {
+            let plan_len = r.len_capped_u32(1 << 20, "plan JSON").map_err(wire_err)?;
+            r.take(plan_len).map_err(wire_err)?;
+            let n = r.u32().map_err(wire_err)? as usize;
+            if n > 4096 {
+                bail!("artifact claims {n} stages — refusing");
+            }
+            r.take(n * V2_INDEX_RECORD).map_err(wire_err)?;
+            r.u64().map_err(wire_err)
+        }
+        other => bail!("unsupported .ltm version {other}"),
+    }
 }
 
 /// What `tablenet inspect` reports about one artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactInfo {
-    /// Container format version.
+    /// Container format version (1 = packed/copying, 2 = zero-copy).
     pub version: u32,
     /// The embedded engine plan, verbatim JSON.
     pub plan_json: String,
@@ -243,6 +480,9 @@ pub struct ArtifactInfo {
     pub total_bytes: u64,
     /// Total LUT storage in bits at the plan's accounting width.
     pub size_bits: u64,
+    /// True when the inspected bytes were memory-mapped (the borrowed
+    /// residencies below then reflect exactly what a serve load does).
+    pub mapped: bool,
 }
 
 /// One stage row of an [`ArtifactInfo`].
@@ -253,46 +493,65 @@ pub struct StageInfo {
     pub payload_bytes: u64,
     /// Table storage in bits at the plan's accounting width.
     pub size_bits: u64,
+    /// File offset of the payload.
+    pub offset: u64,
+    /// Stored per-stage checksum (v2 containers only).
+    pub checksum: Option<u64>,
+    /// Decoded table residency: bytes / narrowing / borrowed-vs-owned
+    /// (`None` for table-free stages).
+    pub storage: Option<ArenaResidency>,
 }
 
-/// Inspect a `.ltm` buffer: checksum, header, stage table and per-stage
-/// table sizes — the same parse + decode + validate path the serving
-/// registry loads through, so inspect-clean means serve-loadable
-/// (trailing payload bytes and unservable pipelines fail inspect too).
-pub fn inspect_bytes(bytes: &[u8]) -> Result<ArtifactInfo> {
+fn inspect_container(bytes: &[u8], ctx_backing: Option<&Arc<ArtifactBytes>>) -> Result<ArtifactInfo> {
     let c = parse_container(bytes)?;
-    let decoded = decode_stages(&c.stages)?;
+    let ctx = WireCtx { aligned: c.version >= VERSION, backing: ctx_backing };
+    let decoded = decode_stages(&c.stages, &ctx)?;
     validate_pipeline(&decoded)?;
     let r_o = c.plan.r_o;
     let mut stages = Vec::with_capacity(decoded.len());
     let mut size_bits = 0u64;
     let mut input_features = None;
-    for (stage, (kind, payload)) in decoded.iter().zip(&c.stages) {
+    for (stage, rec) in decoded.iter().zip(&c.stages) {
         let bits = stage.size_bits(r_o);
         size_bits += bits;
         if input_features.is_none() {
             input_features = stage.in_elems();
         }
         stages.push(StageInfo {
-            kind: *kind,
-            payload_bytes: payload.len() as u64,
+            kind: rec.kind,
+            payload_bytes: rec.payload.len() as u64,
             size_bits: bits,
+            offset: rec.offset,
+            checksum: rec.checksum,
+            storage: stage.storage(),
         });
     }
     Ok(ArtifactInfo {
-        version: VERSION,
+        version: c.version,
         plan_json: c.plan_json.to_string(),
         stages,
         input_features,
         total_bytes: bytes.len() as u64,
         size_bits,
+        mapped: ctx_backing.map(|o| o.is_mapped()).unwrap_or(false),
     })
 }
 
-/// [`inspect_bytes`] over a file.
+/// Inspect a `.ltm` buffer: checksums, header, stage table and
+/// per-stage table sizes — the same parse + decode + validate path the
+/// serving registry loads through, so inspect-clean means
+/// serve-loadable (trailing payload bytes and unservable pipelines
+/// fail inspect too).
+pub fn inspect_bytes(bytes: &[u8]) -> Result<ArtifactInfo> {
+    inspect_container(bytes, None)
+}
+
+/// [`inspect_bytes`] over a file, memory-mapped like a serve load so
+/// the reported borrowed-vs-owned residency is the serving truth.
 pub fn inspect(path: &Path) -> Result<ArtifactInfo> {
-    let bytes = read_capped(path)?;
-    inspect_bytes(&bytes).with_context(|| format!("inspecting artifact {}", path.display()))
+    let owner = Arc::new(open_bytes(path)?);
+    inspect_container(&owner[..], Some(&owner))
+        .with_context(|| format!("inspecting artifact {}", path.display()))
 }
 
 #[cfg(test)]
@@ -307,8 +566,7 @@ mod tests {
         assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
     }
 
-    #[test]
-    fn inspect_agrees_with_loaded_model() {
+    fn small_model() -> LutModel {
         use crate::engine::plan::EnginePlan;
         use crate::engine::Compiler;
         use crate::nn::Model;
@@ -319,10 +577,15 @@ mod tests {
             Tensor::randn(&[10, 784], 0.05, &mut rng),
             Tensor::randn(&[10], 0.02, &mut rng),
         );
-        let lut = Compiler::new(&model)
+        Compiler::new(&model)
             .plan(&EnginePlan::linear_default())
             .build()
-            .unwrap();
+            .unwrap()
+    }
+
+    #[test]
+    fn inspect_agrees_with_loaded_model() {
+        let lut = small_model();
         let bytes = to_bytes(&lut);
         let info = inspect_bytes(&bytes).unwrap();
         assert_eq!(info.version, VERSION);
@@ -334,11 +597,68 @@ mod tests {
             info.plan_json,
             crate::config::plan_to_json(lut.plan()).to_string()
         );
-        // inspect goes through the same checksum gate as load
+        // v2 carries a checksum and an offset per stage
+        for s in &info.stages {
+            assert!(s.checksum.is_some());
+            assert!(s.offset > 0);
+        }
+        // inspect goes through the same checksum gates as load
         let mut bad = bytes.clone();
         let mid = bad.len() / 2;
         bad[mid] ^= 0x10;
         assert!(inspect_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn v2_stage_corruption_is_localised() {
+        let lut = small_model();
+        let bytes = to_bytes(&lut);
+        let info = inspect_bytes(&bytes).unwrap();
+        // flip one byte inside the LAST stage's payload: the error must
+        // name that stage and its offset, not just "bad file"
+        let last = info.stages.last().unwrap();
+        let i = info.stages.len() - 1;
+        let mut bad = bytes.clone();
+        bad[last.offset as usize + last.payload_bytes as usize / 2] ^= 0x01;
+        let err = format!("{:#}", from_bytes(&bad).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains(&format!("stage {i}")), "{err}");
+        assert!(err.contains(&format!("{:#x}", last.offset)), "{err}");
+    }
+
+    #[test]
+    fn v1_writer_roundtrips_through_the_same_loader() {
+        let lut = small_model();
+        let v1 = to_bytes_v1(&lut);
+        let back = from_bytes(&v1).unwrap();
+        assert_eq!(back.num_stages(), lut.num_stages());
+        assert_eq!(back.size_bits(), lut.size_bits());
+        let info = inspect_bytes(&v1).unwrap();
+        assert_eq!(info.version, VERSION_V1);
+        assert!(info.stages.iter().all(|s| s.checksum.is_none()));
+    }
+
+    #[test]
+    fn content_fingerprint_tracks_content_not_encoding_noise() {
+        let lut = small_model();
+        let dir = std::env::temp_dir().join("tablenet_fp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("a.ltm");
+        let p2 = dir.join("b.ltm");
+        std::fs::write(&p1, to_bytes(&lut)).unwrap();
+        std::fs::write(&p2, to_bytes(&lut)).unwrap();
+        // identical content, distinct files/mtimes -> same fingerprint
+        assert_eq!(
+            content_fingerprint(&p1).unwrap(),
+            content_fingerprint(&p2).unwrap()
+        );
+        // v1 encoding of the same model is a different artifact
+        std::fs::write(&p2, to_bytes_v1(&lut)).unwrap();
+        assert_ne!(
+            content_fingerprint(&p1).unwrap(),
+            content_fingerprint(&p2).unwrap()
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -349,5 +669,12 @@ mod tests {
         fake.extend_from_slice(b"LTM1");
         fake.extend_from_slice(&[0u8; 32]);
         assert!(from_bytes(&fake).is_err(), "checksumless bytes must fail");
+        // future container version: clean error, not a misparse
+        let mut vnext = Vec::new();
+        vnext.extend_from_slice(b"LTM1");
+        wire::put_u32(&mut vnext, 99);
+        vnext.extend_from_slice(&[0u8; 32]);
+        let err = format!("{:#}", from_bytes(&vnext).unwrap_err());
+        assert!(err.contains("unsupported .ltm version 99"), "{err}");
     }
 }

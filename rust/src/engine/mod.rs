@@ -43,6 +43,19 @@ pub struct LutModel {
     plan: EnginePlan,
 }
 
+/// Table-storage rollup of a compiled model (see
+/// [`LutModel::storage_summary`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StorageSummary {
+    /// Stages that own table storage.
+    pub banks: usize,
+    /// Of those, stages whose arena is borrowed zero-copy from a
+    /// mapped artifact.
+    pub borrowed: usize,
+    /// Total table bytes across all banks (mapped or heap-resident).
+    pub bytes: usize,
+}
+
 /// Result of one inference.
 #[derive(Debug, Clone)]
 pub struct Inference {
@@ -156,6 +169,26 @@ impl LutModel {
     /// width-agnostic stages, which the artifact loader rejects.
     pub fn input_features(&self) -> Option<usize> {
         self.stages.iter().find_map(|s| s.in_elems())
+    }
+
+    /// Rollup of every arena-backed stage's storage residency: how
+    /// many such banks there are, how many borrow their arena
+    /// zero-copy from a mapped artifact, and total arena bytes.
+    /// `borrowed == banks` (with `banks > 0`) means every table arena
+    /// is served in place out of the `.ltm` mapping — the v2 fast path
+    /// the serve banner and `tablenet inspect` report. (The scalar
+    /// sigmoid LUT is heap-only by design and not counted here; its
+    /// size shows through [`LutModel::size_bits`].)
+    pub fn storage_summary(&self) -> StorageSummary {
+        let mut s = StorageSummary::default();
+        for r in self.stages.iter().filter_map(|st| st.storage()) {
+            s.banks += 1;
+            s.bytes += r.bytes;
+            if r.borrowed {
+                s.borrowed += 1;
+            }
+        }
+        s
     }
 
     /// Batched inference into a reusable output struct. This is the

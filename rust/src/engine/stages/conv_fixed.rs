@@ -17,8 +17,11 @@ impl ConvFixedStage {
         ConvFixedStage { lut }
     }
 
-    pub fn read_payload(r: &mut wire::Reader) -> wire::Result<ConvFixedStage> {
-        Ok(ConvFixedStage { lut: ConvLut::read_wire(r)? })
+    pub fn read_payload(
+        r: &mut wire::Reader,
+        ctx: &wire::WireCtx,
+    ) -> wire::Result<ConvFixedStage> {
+        Ok(ConvFixedStage { lut: ConvLut::read_wire(r, ctx)? })
     }
 }
 
@@ -45,8 +48,12 @@ impl Stage for ConvFixedStage {
         Some(self.lut.h * self.lut.w * self.lut.cin)
     }
 
-    fn write_payload(&self, out: &mut Vec<u8>) {
-        self.lut.write_wire(out);
+    fn write_payload(&self, out: &mut Vec<u8>, aligned: bool) {
+        self.lut.write_wire(out, aligned);
+    }
+
+    fn storage(&self) -> Option<crate::lut::arena::ArenaResidency> {
+        Some(self.lut.arena().residency())
     }
 }
 

@@ -16,8 +16,11 @@ impl DenseBitplaneStage {
         DenseBitplaneStage { lut }
     }
 
-    pub fn read_payload(r: &mut wire::Reader) -> wire::Result<DenseBitplaneStage> {
-        Ok(DenseBitplaneStage { lut: DenseBitplaneLut::read_wire(r)? })
+    pub fn read_payload(
+        r: &mut wire::Reader,
+        ctx: &wire::WireCtx,
+    ) -> wire::Result<DenseBitplaneStage> {
+        Ok(DenseBitplaneStage { lut: DenseBitplaneLut::read_wire(r, ctx)? })
     }
 }
 
@@ -42,8 +45,12 @@ impl Stage for DenseBitplaneStage {
         Some(self.lut.partition.q)
     }
 
-    fn write_payload(&self, out: &mut Vec<u8>) {
-        self.lut.write_wire(out);
+    fn write_payload(&self, out: &mut Vec<u8>, aligned: bool) {
+        self.lut.write_wire(out, aligned);
+    }
+
+    fn storage(&self) -> Option<crate::lut::arena::ArenaResidency> {
+        Some(self.lut.arena().residency())
     }
 }
 

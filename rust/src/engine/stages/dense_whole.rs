@@ -18,8 +18,11 @@ impl DenseWholeStage {
         DenseWholeStage { lut }
     }
 
-    pub fn read_payload(r: &mut wire::Reader) -> wire::Result<DenseWholeStage> {
-        Ok(DenseWholeStage { lut: DenseWholeLut::read_wire(r)? })
+    pub fn read_payload(
+        r: &mut wire::Reader,
+        ctx: &wire::WireCtx,
+    ) -> wire::Result<DenseWholeStage> {
+        Ok(DenseWholeStage { lut: DenseWholeLut::read_wire(r, ctx)? })
     }
 }
 
@@ -44,8 +47,12 @@ impl Stage for DenseWholeStage {
         Some(self.lut.partition.q)
     }
 
-    fn write_payload(&self, out: &mut Vec<u8>) {
-        self.lut.write_wire(out);
+    fn write_payload(&self, out: &mut Vec<u8>, aligned: bool) {
+        self.lut.write_wire(out, aligned);
+    }
+
+    fn storage(&self) -> Option<crate::lut::arena::ArenaResidency> {
+        Some(self.lut.arena().residency())
     }
 }
 

@@ -64,7 +64,7 @@ impl Stage for MaxPool2IntStage {
         0
     }
 
-    fn write_payload(&self, out: &mut Vec<u8>) {
+    fn write_payload(&self, out: &mut Vec<u8>, _aligned: bool) {
         wire::put_u64(out, self.h as u64);
         wire::put_u64(out, self.w as u64);
         wire::put_u64(out, self.c as u64);
@@ -94,7 +94,7 @@ mod tests {
     fn payload_roundtrip() {
         let stage = MaxPool2IntStage { h: 8, w: 6, c: 3 };
         let mut buf = Vec::new();
-        stage.write_payload(&mut buf);
+        stage.write_payload(&mut buf, false);
         let back = MaxPool2IntStage::read_payload(&mut wire::Reader::new(&buf)).unwrap();
         assert_eq!((back.h, back.w, back.c), (8, 6, 3));
     }

@@ -53,7 +53,9 @@ pub use tohalf::ToHalfStage;
 use crate::engine::act::ActBuf;
 use crate::engine::counters::Counters;
 use crate::engine::scratch::Scratch;
+use crate::lut::arena::ArenaResidency;
 use crate::lut::wire;
+use crate::lut::wire::WireCtx;
 
 /// One executable stage of a compiled pipeline.
 ///
@@ -89,8 +91,21 @@ pub trait Stage: Send + Sync {
 
     /// Serialize this stage's payload (tables + metadata) for the
     /// `.ltm` artifact. Must round-trip bit-exactly through the decoder
-    /// registered in [`read_stage`].
-    fn write_payload(&self, out: &mut Vec<u8>);
+    /// registered in [`read_stage`]. With `aligned` (container v2) the
+    /// stage writes *directly into the container buffer*, padding each
+    /// table-arena entry block to a 64-byte boundary of `out` so a
+    /// mapped load can borrow it in place; table-free stages ignore the
+    /// flag.
+    fn write_payload(&self, out: &mut Vec<u8>, aligned: bool);
+
+    /// Residency of this stage's [`TableArena`](crate::lut::arena::TableArena)
+    /// storage (bytes, i32-narrowing, owned-vs-borrowed) for `tablenet
+    /// inspect` and the serve banner. `None` for stages without an
+    /// arena — table-free stages AND the scalar sigmoid LUT (heap-only
+    /// by design); the default covers them.
+    fn storage(&self) -> Option<ArenaResidency> {
+        None
+    }
 }
 
 /// Stable stage identifiers. The `u16` tags are the on-disk artifact
@@ -161,14 +176,20 @@ impl StageKind {
 }
 
 /// Decode one stage payload by kind — the artifact loader's dispatch
-/// table. New stage kinds register here.
-pub fn read_stage(kind: StageKind, r: &mut wire::Reader) -> wire::Result<Box<dyn Stage>> {
+/// table. New stage kinds register here. `ctx` carries the container
+/// format and (for mapped v2 artifacts) the backing the LUT banks
+/// borrow their arenas from zero-copy.
+pub fn read_stage(
+    kind: StageKind,
+    r: &mut wire::Reader,
+    ctx: &WireCtx,
+) -> wire::Result<Box<dyn Stage>> {
     Ok(match kind {
-        StageKind::DenseWhole => Box::new(DenseWholeStage::read_payload(r)?),
-        StageKind::DenseBitplane => Box::new(DenseBitplaneStage::read_payload(r)?),
-        StageKind::DenseFloat => Box::new(DenseFloatStage::read_payload(r)?),
-        StageKind::ConvFixed => Box::new(ConvFixedStage::read_payload(r)?),
-        StageKind::ConvFloat => Box::new(ConvFloatStage::read_payload(r)?),
+        StageKind::DenseWhole => Box::new(DenseWholeStage::read_payload(r, ctx)?),
+        StageKind::DenseBitplane => Box::new(DenseBitplaneStage::read_payload(r, ctx)?),
+        StageKind::DenseFloat => Box::new(DenseFloatStage::read_payload(r, ctx)?),
+        StageKind::ConvFixed => Box::new(ConvFixedStage::read_payload(r, ctx)?),
+        StageKind::ConvFloat => Box::new(ConvFloatStage::read_payload(r, ctx)?),
         StageKind::ReluInt => Box::new(ReluIntStage::read_payload(r)?),
         StageKind::SigmoidLut => Box::new(SigmoidLutStage::read_payload(r)?),
         StageKind::MaxPool2Int => Box::new(MaxPool2IntStage::read_payload(r)?),

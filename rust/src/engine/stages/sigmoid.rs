@@ -58,7 +58,12 @@ impl Stage for SigmoidLutStage {
         self.lut.size_bits()
     }
 
-    fn write_payload(&self, out: &mut Vec<u8>) {
+    fn write_payload(&self, out: &mut Vec<u8>, _aligned: bool) {
+        // the 128 KiB scalar table is u16-coded and always decoded onto
+        // the heap — alignment applies to the arena-backed bank stages,
+        // and `Stage::storage` stays `None` here for the same reason
+        // (no `TableArena`, nothing that could ever be mmap-borrowed;
+        // its size still shows up through `size_bits`/payload bytes)
         self.lut.write_wire(out);
     }
 }

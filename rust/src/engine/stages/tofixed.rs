@@ -71,7 +71,7 @@ impl Stage for ToFixedStage {
         0
     }
 
-    fn write_payload(&self, out: &mut Vec<u8>) {
+    fn write_payload(&self, out: &mut Vec<u8>, _aligned: bool) {
         wire::put_u32(out, self.bits);
         wire::put_i32(out, self.range_exp);
     }
@@ -101,7 +101,7 @@ mod tests {
     fn payload_roundtrip() {
         let stage = ToFixedStage { bits: 8, range_exp: 3 };
         let mut buf = Vec::new();
-        stage.write_payload(&mut buf);
+        stage.write_payload(&mut buf, false);
         let back = ToFixedStage::read_payload(&mut wire::Reader::new(&buf)).unwrap();
         assert_eq!(back.bits, 8);
         assert_eq!(back.range_exp, 3);

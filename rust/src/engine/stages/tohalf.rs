@@ -44,7 +44,7 @@ impl Stage for ToHalfStage {
         0
     }
 
-    fn write_payload(&self, _out: &mut Vec<u8>) {}
+    fn write_payload(&self, _out: &mut Vec<u8>, _aligned: bool) {}
 }
 
 #[cfg(test)]

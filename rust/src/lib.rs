@@ -20,6 +20,7 @@
 //! Python never runs on the request path: `make artifacts` exports HLO
 //! text + trained weights, and the Rust binary is self-contained after.
 
+pub mod bytes;
 pub mod tensor;
 pub mod quant;
 pub mod lut;

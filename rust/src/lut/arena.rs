@@ -14,14 +14,90 @@
 //! overflow check is the narrowing itself, performed once at build
 //! time; evaluation is generic over the entry width and bit-exact in
 //! both (entries are widened to `i64` before accumulation).
+//!
+//! Storage is owned-or-borrowed ([`Entries`]): a freshly built or
+//! v1-loaded arena owns a `Vec`, while an arena decoded from a mapped
+//! v2 artifact *borrows* its entry block straight out of the mapping
+//! (the v2 wire format 64-byte-aligns each entry block in the file
+//! precisely so this reinterpretation is valid). Evaluation code never
+//! sees the difference — both deref to the same `&[E]`.
 
-use super::wire;
+use super::wire::{self, WireCtx};
+use crate::bytes::ArtifactBytes;
+use std::sync::Arc;
+
+/// File alignment of v2 arena entry blocks: one cache line, which also
+/// satisfies `align_of` for both entry widths.
+pub const ENTRY_ALIGN: usize = 64;
+
+/// An arena's entry block: owned on the heap, or borrowed zero-copy
+/// from a mapped artifact kept alive by the `Arc`.
+pub enum Entries<E> {
+    Owned(Vec<E>),
+    Borrowed {
+        ptr: *const E,
+        len: usize,
+        _owner: Arc<ArtifactBytes>,
+    },
+}
+
+// SAFETY: the borrowed region is an immutable PROT_READ mapping owned
+// (transitively) by the Arc, so shared references from any thread are
+// sound exactly as they are for the owned Vec.
+unsafe impl<E: Send + Sync> Send for Entries<E> {}
+unsafe impl<E: Send + Sync> Sync for Entries<E> {}
+
+impl<E> std::ops::Deref for Entries<E> {
+    type Target = [E];
+    #[inline]
+    fn deref(&self) -> &[E] {
+        match self {
+            Entries::Owned(v) => v,
+            // SAFETY: constructed only by `read_entries` from a
+            // bounds-checked, alignment-checked sub-slice of `_owner`,
+            // which the Arc keeps alive for the life of `self`.
+            Entries::Borrowed { ptr, len, .. } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+        }
+    }
+}
+
+impl<E> std::fmt::Debug for Entries<E> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Entries::Owned(v) => write!(f, "Entries::Owned({} entries)", v.len()),
+            Entries::Borrowed { len, .. } => {
+                write!(f, "Entries::Borrowed({len} entries)")
+            }
+        }
+    }
+}
+
+impl<E> Entries<E> {
+    /// True when the entries are borrowed from a mapped artifact.
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self, Entries::Borrowed { .. })
+    }
+}
 
 /// Backing storage: narrowed (`i32`) when every entry fits, else `i64`.
 #[derive(Debug)]
 pub enum ArenaStore {
-    I32(Vec<i32>),
-    I64(Vec<i64>),
+    I32(Entries<i32>),
+    I64(Entries<i64>),
+}
+
+/// Diagnostics card of one arena's storage (surfaced per stage by
+/// `tablenet inspect` and the serve banner).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaResidency {
+    /// Entry-block bytes (heap-resident when owned, mapped when borrowed).
+    pub bytes: usize,
+    /// Entries narrowed to `i32`.
+    pub narrow: bool,
+    /// Borrowed zero-copy from a mapped artifact (false = owned copy).
+    pub borrowed: bool,
 }
 
 /// One flat allocation holding every chunk's table back to back.
@@ -56,13 +132,13 @@ impl TableArena {
             for t in tables {
                 flat.extend(t.iter().map(|&v| v as i32));
             }
-            ArenaStore::I32(flat)
+            ArenaStore::I32(Entries::Owned(flat))
         } else {
             let mut flat = Vec::with_capacity(total);
             for t in tables {
                 flat.extend_from_slice(t);
             }
-            ArenaStore::I64(flat)
+            ArenaStore::I64(Entries::Owned(flat))
         };
         TableArena { store, offsets, row_len }
     }
@@ -74,6 +150,24 @@ impl TableArena {
     /// True when entries are stored narrowed to `i32`.
     pub fn is_narrow(&self) -> bool {
         matches!(self.store, ArenaStore::I32(_))
+    }
+
+    /// True when the entry block is borrowed from a mapped artifact
+    /// rather than owned on the heap.
+    pub fn is_borrowed(&self) -> bool {
+        match &self.store {
+            ArenaStore::I32(e) => e.is_borrowed(),
+            ArenaStore::I64(e) => e.is_borrowed(),
+        }
+    }
+
+    /// Storage diagnostics: bytes, width, owned-vs-borrowed.
+    pub fn residency(&self) -> ArenaResidency {
+        ArenaResidency {
+            bytes: self.resident_bytes(),
+            narrow: self.is_narrow(),
+            borrowed: self.is_borrowed(),
+        }
     }
 
     pub fn num_chunks(&self) -> usize {
@@ -106,7 +200,8 @@ impl TableArena {
         &E::entries(&self.store)[self.offsets[c]..self.offsets[c + 1]]
     }
 
-    /// Resident bytes of the arena (diagnostics / DESIGN accounting).
+    /// Entry-block bytes of the arena (diagnostics / DESIGN
+    /// accounting). Heap-resident when owned; mapped when borrowed.
     pub fn resident_bytes(&self) -> usize {
         match &self.store {
             ArenaStore::I32(v) => v.len() * 4,
@@ -124,7 +219,13 @@ impl TableArena {
 
     /// Serialize the arena (store width preserved — the round-trip is
     /// bit-exact, including the i32-vs-i64 narrowing decision).
-    pub fn write_wire(&self, out: &mut Vec<u8>) {
+    ///
+    /// With `aligned` (artifact v2), an explicit pad (one length byte +
+    /// zeros) precedes the entry block so it starts on an
+    /// [`ENTRY_ALIGN`]-byte boundary of `out` — callers write payloads
+    /// directly into the container buffer, so offsets in `out` ARE file
+    /// offsets and a mapped load can borrow the block in place.
+    pub fn write_wire(&self, out: &mut Vec<u8>, aligned: bool) {
         wire::put_u64(out, self.row_len as u64);
         wire::put_u64(out, self.offsets.len() as u64);
         for &o in &self.offsets {
@@ -134,22 +235,31 @@ impl TableArena {
             ArenaStore::I32(v) => {
                 wire::put_u8(out, 0);
                 wire::put_u64(out, v.len() as u64);
-                for &e in v {
+                if aligned {
+                    write_align_gap(out);
+                }
+                for &e in v.iter() {
                     wire::put_i32(out, e);
                 }
             }
             ArenaStore::I64(v) => {
                 wire::put_u8(out, 1);
                 wire::put_u64(out, v.len() as u64);
-                for &e in v {
+                if aligned {
+                    write_align_gap(out);
+                }
+                for &e in v.iter() {
                     wire::put_i64(out, e);
                 }
             }
         }
     }
 
-    /// Deserialize an arena written by [`TableArena::write_wire`].
-    pub fn read_wire(r: &mut wire::Reader) -> wire::Result<TableArena> {
+    /// Deserialize an arena written by [`TableArena::write_wire`]. With
+    /// `ctx.backing` set (a mapped v2 artifact), the entry block is
+    /// borrowed zero-copy when its alignment permits; otherwise it is
+    /// copied onto the heap — bit-exact either way.
+    pub fn read_wire(r: &mut wire::Reader, ctx: &WireCtx) -> wire::Result<TableArena> {
         // cap: entries bounded by the materialisation limit (i32 floor)
         let entry_cap = super::MAX_TABLE_BYTES / 4;
         let row_len = r.len_capped(entry_cap, "arena row_len")?;
@@ -176,38 +286,74 @@ impl TableArena {
         if total % row_len != 0 {
             return wire::err("arena entries not divisible by row_len");
         }
-        // bulk decode: one bounds check for the whole entry block, then
-        // chunked conversion — arenas dominate artifact size, and the
-        // deployment start-up path loads hundreds of MiB through here
         let store = match tag {
-            0 => {
-                let bytes = r.take(total * 4)?;
-                let mut v = Vec::with_capacity(total);
-                v.extend(
-                    bytes
-                        .chunks_exact(4)
-                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])),
-                );
-                ArenaStore::I32(v)
-            }
-            1 => {
-                let bytes = r.take(total * 8)?;
-                let mut v = Vec::with_capacity(total);
-                v.extend(bytes.chunks_exact(8).map(|c| {
-                    i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
-                }));
-                ArenaStore::I64(v)
-            }
+            0 => ArenaStore::I32(read_entries::<i32>(r, total, ctx)?),
+            1 => ArenaStore::I64(read_entries::<i64>(r, total, ctx)?),
             other => return wire::err(format!("unknown arena store tag {other}")),
         };
         Ok(TableArena { store, offsets, row_len })
     }
 }
 
+/// Write the v2 alignment gap: one pad-length byte followed by that
+/// many zeros, sized so the next byte of `out` lands on an
+/// [`ENTRY_ALIGN`] boundary.
+fn write_align_gap(out: &mut Vec<u8>) {
+    let pad = (ENTRY_ALIGN - (out.len() + 1) % ENTRY_ALIGN) % ENTRY_ALIGN;
+    wire::put_u8(out, pad as u8);
+    out.resize(out.len() + pad, 0);
+}
+
+/// Decode `total` entries: skip the v2 alignment gap when present, then
+/// either borrow the block from the mapped backing (zero-copy — the
+/// fast path every serving load takes) or bulk-copy it onto the heap.
+fn read_entries<E: ArenaEntry>(
+    r: &mut wire::Reader,
+    total: usize,
+    ctx: &WireCtx,
+) -> wire::Result<Entries<E>> {
+    if ctx.aligned {
+        let pad = r.u8()? as usize;
+        if pad >= ENTRY_ALIGN {
+            return wire::err(format!("arena alignment gap {pad} out of range"));
+        }
+        r.take(pad)?;
+    }
+    let bytes = r.take(total * std::mem::size_of::<E>())?;
+    if let Some(owner) = ctx.backing {
+        // entries are little-endian on disk: in-place reinterpretation
+        // is valid only on LE targets with a properly aligned block.
+        // `ctx.aligned` gates the borrow to v2 payloads — a v1 block
+        // could be fortuitously aligned, but the v1 contract is "always
+        // copies" (asserted by the compatibility matrix), and only v2
+        // GUARANTEES the alignment rather than inheriting it by luck.
+        if ctx.aligned
+            && cfg!(target_endian = "little")
+            && (bytes.as_ptr() as usize) % std::mem::align_of::<E>() == 0
+            && owner.contains(bytes)
+        {
+            return Ok(Entries::Borrowed {
+                ptr: bytes.as_ptr() as *const E,
+                len: total,
+                _owner: Arc::clone(owner),
+            });
+        }
+    }
+    // bulk decode: one bounds check for the whole entry block, then
+    // chunked conversion — arenas dominate artifact size, and the
+    // copying start-up path loads hundreds of MiB through here
+    let mut v = Vec::with_capacity(total);
+    v.extend(bytes.chunks_exact(std::mem::size_of::<E>()).map(E::from_le));
+    Ok(Entries::Owned(v))
+}
+
 /// Entry width the evaluation loops are generic over.
-pub trait ArenaEntry: Copy + 'static {
+pub trait ArenaEntry: Copy + Send + Sync + 'static {
     fn widen(self) -> i64;
     fn entries(store: &ArenaStore) -> &[Self];
+    /// Decode one entry from its little-endian wire bytes
+    /// (`size_of::<Self>()` of them).
+    fn from_le(bytes: &[u8]) -> Self;
 }
 
 impl ArenaEntry for i32 {
@@ -222,6 +368,10 @@ impl ArenaEntry for i32 {
             ArenaStore::I64(_) => unreachable!("arena width mismatch: want i32"),
         }
     }
+    #[inline]
+    fn from_le(b: &[u8]) -> i32 {
+        i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
 }
 
 impl ArenaEntry for i64 {
@@ -235,6 +385,10 @@ impl ArenaEntry for i64 {
             ArenaStore::I64(v) => v,
             ArenaStore::I32(_) => unreachable!("arena width mismatch: want i64"),
         }
+    }
+    #[inline]
+    fn from_le(b: &[u8]) -> i64 {
+        i64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
     }
 }
 
@@ -265,6 +419,7 @@ mod tests {
         let tables = vec![vec![1i64, -2, 3, 4], vec![5, 6]];
         let a = TableArena::from_tables(&tables, 2);
         assert!(a.is_narrow());
+        assert!(!a.is_borrowed());
         assert_eq!(a.num_chunks(), 2);
         assert_eq!(a.total_entries(), 6);
         assert_eq!(a.chunk_rows(0), 2);
@@ -272,6 +427,10 @@ mod tests {
         assert_eq!(a.chunk_slice::<i32>(1), &[5, 6]);
         assert_eq!(a.entry(1), -2);
         assert_eq!(a.resident_bytes(), 24);
+        assert_eq!(
+            a.residency(),
+            ArenaResidency { bytes: 24, narrow: true, borrowed: false }
+        );
     }
 
     #[test]
@@ -301,31 +460,90 @@ mod tests {
 
     #[test]
     fn wire_roundtrip_preserves_store_width() {
-        for tables in [
-            vec![vec![1i64, -2, 3, 4], vec![5, 6]],
-            vec![vec![0i64, i64::from(i32::MAX) + 1]],
-        ] {
-            let row_len = tables[0].len().min(2);
-            let a = TableArena::from_tables(&tables, row_len);
-            let mut buf = Vec::new();
-            a.write_wire(&mut buf);
-            let back = TableArena::read_wire(&mut wire::Reader::new(&buf)).unwrap();
-            assert_eq!(back.is_narrow(), a.is_narrow());
-            assert_eq!(back.row_len(), a.row_len());
-            assert_eq!(back.num_chunks(), a.num_chunks());
-            for i in 0..a.total_entries() {
-                assert_eq!(back.entry(i), a.entry(i));
+        for aligned in [false, true] {
+            for tables in [
+                vec![vec![1i64, -2, 3, 4], vec![5, 6]],
+                vec![vec![0i64, i64::from(i32::MAX) + 1]],
+            ] {
+                let row_len = tables[0].len().min(2);
+                let a = TableArena::from_tables(&tables, row_len);
+                let mut buf = Vec::new();
+                a.write_wire(&mut buf, aligned);
+                let ctx = if aligned { WireCtx::v2_copying() } else { WireCtx::v1() };
+                let back =
+                    TableArena::read_wire(&mut wire::Reader::new(&buf), &ctx).unwrap();
+                assert_eq!(back.is_narrow(), a.is_narrow());
+                assert_eq!(back.row_len(), a.row_len());
+                assert_eq!(back.num_chunks(), a.num_chunks());
+                for i in 0..a.total_entries() {
+                    assert_eq!(back.entry(i), a.entry(i));
+                }
             }
         }
     }
 
     #[test]
+    fn aligned_write_lands_entries_on_boundary() {
+        // whatever prefix length the container has written, the entry
+        // block must start at a multiple of ENTRY_ALIGN of the buffer
+        let a = TableArena::from_tables(&[vec![7i64; 32]], 4);
+        for prefix in [0usize, 1, 7, 63, 64, 100] {
+            let mut buf = vec![0xEEu8; prefix];
+            a.write_wire(&mut buf, true);
+            // entry block is the last 32*4 bytes (i32-narrowed)
+            let start = buf.len() - 32 * 4;
+            assert_eq!(start % ENTRY_ALIGN, 0, "prefix {prefix}: start {start}");
+            // and it still decodes (reader consumes the explicit gap)
+            let mut r = wire::Reader::new(&buf[prefix..]);
+            let back = TableArena::read_wire(&mut r, &WireCtx::v2_copying()).unwrap();
+            assert_eq!(back.total_entries(), 32);
+            assert_eq!(back.entry(13), 7);
+        }
+    }
+
+    #[test]
+    fn mapped_backing_is_borrowed_zero_copy() {
+        let tables = vec![vec![11i64, -22, 33, -44], vec![55, 66]];
+        let a = TableArena::from_tables(&tables, 2);
+        let mut buf = Vec::new();
+        a.write_wire(&mut buf, true);
+        // stand in for a mapped file: an Arc-owned buffer the decoder
+        // is told it may borrow from (alignment decides eligibility)
+        let owner = Arc::new(ArtifactBytes::Owned(buf));
+        let bytes: &[u8] = &owner;
+        // borrow requires the entry block aligned within this buffer;
+        // Vec<u8> gives no alignment guarantee, so accept either
+        // outcome but demand bit-exactness, and demand BORROWED when
+        // the block alignment cooperates
+        let ctx = WireCtx { aligned: true, backing: Some(&owner) };
+        let back = TableArena::read_wire(&mut wire::Reader::new(bytes), &ctx).unwrap();
+        for i in 0..a.total_entries() {
+            assert_eq!(back.entry(i), a.entry(i));
+        }
+        let block_ptr = bytes[bytes.len() - 24..].as_ptr() as usize;
+        if cfg!(target_endian = "little") && block_ptr % 4 == 0 {
+            assert!(back.is_borrowed(), "aligned mapped block must be borrowed");
+        }
+        // without backing, the same bytes decode through the copy path
+        let copied = TableArena::read_wire(
+            &mut wire::Reader::new(bytes),
+            &WireCtx::v2_copying(),
+        )
+        .unwrap();
+        assert!(!copied.is_borrowed());
+        assert_eq!(copied.entry(3), -44);
+    }
+
+    #[test]
     fn wire_rejects_truncation() {
         let a = TableArena::from_tables(&[vec![1i64, 2, 3, 4]], 2);
-        let mut buf = Vec::new();
-        a.write_wire(&mut buf);
-        buf.truncate(buf.len() - 3);
-        assert!(TableArena::read_wire(&mut wire::Reader::new(&buf)).is_err());
+        for aligned in [false, true] {
+            let mut buf = Vec::new();
+            a.write_wire(&mut buf, aligned);
+            buf.truncate(buf.len() - 3);
+            let ctx = if aligned { WireCtx::v2_copying() } else { WireCtx::v1() };
+            assert!(TableArena::read_wire(&mut wire::Reader::new(&buf), &ctx).is_err());
+        }
     }
 
     #[test]

@@ -253,17 +253,21 @@ impl DenseBitplaneLut {
     }
 
     /// Serialize for the `.ltm` artifact. The packed-plane spread table
-    /// is derived state and is rebuilt on load.
-    pub fn write_wire(&self, out: &mut Vec<u8>) {
+    /// is derived state and is rebuilt on load. `aligned` selects the
+    /// v2 layout (64-byte-aligned entry block).
+    pub fn write_wire(&self, out: &mut Vec<u8>, aligned: bool) {
         self.partition.write_wire(out);
         wire::put_u32(out, self.fmt.bits);
         wire::put_u64(out, self.p as u64);
-        self.arena.write_wire(out);
+        self.arena.write_wire(out, aligned);
         wire::put_i64_seq(out, &self.bias_acc);
     }
 
     /// Deserialize a bank written by [`DenseBitplaneLut::write_wire`].
-    pub fn read_wire(r: &mut wire::Reader) -> wire::Result<DenseBitplaneLut> {
+    pub fn read_wire(
+        r: &mut wire::Reader,
+        ctx: &wire::WireCtx,
+    ) -> wire::Result<DenseBitplaneLut> {
         let partition = Partition::read_wire(r)?;
         let bits = r.u32()?;
         if !(1..=16).contains(&bits) {
@@ -271,7 +275,7 @@ impl DenseBitplaneLut {
         }
         let fmt = FixedFormat::new(bits);
         let p = r.len_capped(1 << 24, "bitplane p")?;
-        let arena = TableArena::read_wire(r)?;
+        let arena = TableArena::read_wire(r, ctx)?;
         let bias_acc = r.i64_seq(1 << 24, "bitplane bias")?;
         if arena.row_len() != p || arena.num_chunks() != partition.k() || bias_acc.len() != p {
             return wire::err("bitplane: arena/bias shape disagrees with partition");
@@ -450,10 +454,12 @@ mod tests {
                 DenseBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, m), fmt)
                     .unwrap();
             let mut buf = Vec::new();
-            lut.write_wire(&mut buf);
-            let back =
-                DenseBitplaneLut::read_wire(&mut crate::lut::wire::Reader::new(&buf))
-                    .unwrap();
+            lut.write_wire(&mut buf, false);
+            let back = DenseBitplaneLut::read_wire(
+                &mut crate::lut::wire::Reader::new(&buf),
+                &crate::lut::wire::WireCtx::v1(),
+            )
+            .unwrap();
             assert_eq!(back.spread.is_some(), lut.spread.is_some(), "m={m} bits={bits}");
             assert_eq!(back.stride, lut.stride);
             assert_eq!(back.bias_acc, lut.bias_acc);

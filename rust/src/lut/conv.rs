@@ -229,18 +229,19 @@ impl ConvLut {
         self.arena.total_entries() as u64 * r_o as u64
     }
 
-    /// Serialize for the `.ltm` artifact.
-    pub fn write_wire(&self, out: &mut Vec<u8>) {
+    /// Serialize for the `.ltm` artifact. `aligned` selects the v2
+    /// layout (64-byte-aligned entry block).
+    pub fn write_wire(&self, out: &mut Vec<u8>, aligned: bool) {
         for v in [self.h, self.w, self.cin, self.cout, self.r, self.m] {
             wire::put_u64(out, v as u64);
         }
         wire::put_u32(out, self.fmt.bits);
-        self.arena.write_wire(out);
+        self.arena.write_wire(out, aligned);
         wire::put_i64_seq(out, &self.bias_acc);
     }
 
     /// Deserialize a bank written by [`ConvLut::write_wire`].
-    pub fn read_wire(r: &mut wire::Reader) -> wire::Result<ConvLut> {
+    pub fn read_wire(r: &mut wire::Reader, ctx: &wire::WireCtx) -> wire::Result<ConvLut> {
         const DIM_CAP: usize = 1 << 20;
         let h = r.len_capped(DIM_CAP, "conv h")?;
         let w = r.len_capped(DIM_CAP, "conv w")?;
@@ -256,7 +257,7 @@ impl ConvLut {
             return wire::err("conv: block does not tile the image");
         }
         let fmt = FixedFormat::new(bits);
-        let arena = TableArena::read_wire(r)?;
+        let arena = TableArena::read_wire(r, ctx)?;
         let bias_acc = r.i64_seq(DIM_CAP, "conv bias")?;
         let pe = m + 2 * rr;
         if arena.num_chunks() != cin
@@ -401,8 +402,12 @@ mod tests {
         let fmt = FixedFormat::new(bits);
         let lut = ConvLut::build(&filter, &bias, h, w, cin, cout, r, m, fmt).unwrap();
         let mut buf = Vec::new();
-        lut.write_wire(&mut buf);
-        let back = ConvLut::read_wire(&mut crate::lut::wire::Reader::new(&buf)).unwrap();
+        lut.write_wire(&mut buf, false);
+        let back = ConvLut::read_wire(
+            &mut crate::lut::wire::Reader::new(&buf),
+            &crate::lut::wire::WireCtx::v1(),
+        )
+        .unwrap();
         let codes: Vec<u32> =
             (0..h * w * cin).map(|_| rng.below(1 << bits) as u32).collect();
         let mut c1 = Counters::default();

@@ -206,18 +206,19 @@ impl ConvFloatLut {
         self.arena.total_entries() as u64 * r_o as u64
     }
 
-    /// Serialize for the `.ltm` artifact.
-    pub fn write_wire(&self, out: &mut Vec<u8>) {
+    /// Serialize for the `.ltm` artifact. `aligned` selects the v2
+    /// layout (64-byte-aligned entry block).
+    pub fn write_wire(&self, out: &mut Vec<u8>, aligned: bool) {
         for v in [self.h, self.w, self.cin, self.cout, self.r] {
             wire::put_u64(out, v as u64);
         }
         wire::put_u32(out, self.planes);
-        self.arena.write_wire(out);
+        self.arena.write_wire(out, aligned);
         wire::put_i64_seq(out, &self.bias_acc);
     }
 
     /// Deserialize a bank written by [`ConvFloatLut::write_wire`].
-    pub fn read_wire(r: &mut wire::Reader) -> wire::Result<ConvFloatLut> {
+    pub fn read_wire(r: &mut wire::Reader, ctx: &wire::WireCtx) -> wire::Result<ConvFloatLut> {
         const DIM_CAP: usize = 1 << 20;
         let h = r.len_capped(DIM_CAP, "convfloat h")?;
         let w = r.len_capped(DIM_CAP, "convfloat w")?;
@@ -228,7 +229,7 @@ impl ConvFloatLut {
         if planes == 0 || planes > SIG_BITS {
             return wire::err(format!("convfloat: bad plane count {planes}"));
         }
-        let arena = TableArena::read_wire(r)?;
+        let arena = TableArena::read_wire(r, ctx)?;
         let bias_acc = r.i64_seq(DIM_CAP, "convfloat bias")?;
         let pe = 2 * rr + 1;
         if arena.num_chunks() != cin
@@ -346,9 +347,12 @@ mod tests {
         let lut =
             ConvFloatLut::build(&filter, &bias, h, w, cin, cout, r, SIG_BITS).unwrap();
         let mut buf = Vec::new();
-        lut.write_wire(&mut buf);
-        let back =
-            ConvFloatLut::read_wire(&mut crate::lut::wire::Reader::new(&buf)).unwrap();
+        lut.write_wire(&mut buf, false);
+        let back = ConvFloatLut::read_wire(
+            &mut crate::lut::wire::Reader::new(&buf),
+            &crate::lut::wire::WireCtx::v1(),
+        )
+        .unwrap();
         let x: Vec<F16> =
             (0..h * w * cin).map(|_| F16::from_f32(rng.f32() * 4.0)).collect();
         let mut c1 = Counters::default();

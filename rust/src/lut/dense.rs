@@ -158,15 +158,16 @@ impl DenseWholeLut {
     }
 
     /// Serialize for the `.ltm` artifact (partition, format, arena).
-    pub fn write_wire(&self, out: &mut Vec<u8>) {
+    /// `aligned` selects the v2 layout (64-byte-aligned entry block).
+    pub fn write_wire(&self, out: &mut Vec<u8>, aligned: bool) {
         self.partition.write_wire(out);
         wire::put_u32(out, self.fmt.bits);
         wire::put_u64(out, self.p as u64);
-        self.arena.write_wire(out);
+        self.arena.write_wire(out, aligned);
     }
 
     /// Deserialize a bank written by [`DenseWholeLut::write_wire`].
-    pub fn read_wire(r: &mut wire::Reader) -> wire::Result<DenseWholeLut> {
+    pub fn read_wire(r: &mut wire::Reader, ctx: &wire::WireCtx) -> wire::Result<DenseWholeLut> {
         let partition = Partition::read_wire(r)?;
         let bits = r.u32()?;
         if !(1..=16).contains(&bits) {
@@ -174,7 +175,7 @@ impl DenseWholeLut {
         }
         let fmt = FixedFormat::new(bits);
         let p = r.len_capped(1 << 24, "dense whole p")?;
-        let arena = TableArena::read_wire(r)?;
+        let arena = TableArena::read_wire(r, ctx)?;
         if arena.row_len() != p || arena.num_chunks() != partition.k() {
             return wire::err("dense whole: arena shape disagrees with partition");
         }
@@ -325,9 +326,12 @@ mod tests {
         let lut =
             DenseWholeLut::build(&w, &b, p, q, Partition::contiguous(q, 2), fmt).unwrap();
         let mut buf = Vec::new();
-        lut.write_wire(&mut buf);
-        let back =
-            DenseWholeLut::read_wire(&mut crate::lut::wire::Reader::new(&buf)).unwrap();
+        lut.write_wire(&mut buf, false);
+        let back = DenseWholeLut::read_wire(
+            &mut crate::lut::wire::Reader::new(&buf),
+            &crate::lut::wire::WireCtx::v1(),
+        )
+        .unwrap();
         assert_eq!(back.partition, lut.partition);
         assert_eq!(back.fmt, lut.fmt);
         let mut rng = Rng::new(30);

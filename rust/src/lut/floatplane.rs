@@ -249,24 +249,25 @@ impl DenseFloatLut {
         self.arena.total_entries() as u64 * r_o as u64
     }
 
-    /// Serialize for the `.ltm` artifact.
-    pub fn write_wire(&self, out: &mut Vec<u8>) {
+    /// Serialize for the `.ltm` artifact. `aligned` selects the v2
+    /// layout (64-byte-aligned entry block).
+    pub fn write_wire(&self, out: &mut Vec<u8>, aligned: bool) {
         self.partition.write_wire(out);
         wire::put_u64(out, self.p as u64);
         wire::put_u32(out, self.cfg.planes);
-        self.arena.write_wire(out);
+        self.arena.write_wire(out, aligned);
         wire::put_i64_seq(out, &self.bias_acc);
     }
 
     /// Deserialize a bank written by [`DenseFloatLut::write_wire`].
-    pub fn read_wire(r: &mut wire::Reader) -> wire::Result<DenseFloatLut> {
+    pub fn read_wire(r: &mut wire::Reader, ctx: &wire::WireCtx) -> wire::Result<DenseFloatLut> {
         let partition = Partition::read_wire(r)?;
         let p = r.len_capped(1 << 24, "float dense p")?;
         let planes = r.u32()?;
         if planes == 0 || planes > SIG_BITS {
             return wire::err(format!("float dense: bad plane count {planes}"));
         }
-        let arena = TableArena::read_wire(r)?;
+        let arena = TableArena::read_wire(r, ctx)?;
         let bias_acc = r.i64_seq(1 << 24, "float dense bias")?;
         if arena.row_len() != p || arena.num_chunks() != partition.k() || bias_acc.len() != p {
             return wire::err("float dense: arena/bias shape disagrees with partition");
@@ -424,9 +425,12 @@ mod tests {
         )
         .unwrap();
         let mut buf = Vec::new();
-        lut.write_wire(&mut buf);
-        let back =
-            DenseFloatLut::read_wire(&mut crate::lut::wire::Reader::new(&buf)).unwrap();
+        lut.write_wire(&mut buf, false);
+        let back = DenseFloatLut::read_wire(
+            &mut crate::lut::wire::Reader::new(&buf),
+            &crate::lut::wire::WireCtx::v1(),
+        )
+        .unwrap();
         assert_eq!(back.cfg, lut.cfg);
         assert_eq!(back.bias_acc, lut.bias_acc);
         let mut c1 = Counters::default();

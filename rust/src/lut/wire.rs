@@ -27,6 +27,34 @@ pub(crate) fn err<T>(msg: impl Into<String>) -> Result<T> {
     Err(WireError(msg.into()))
 }
 
+/// Decode context threaded from the artifact container down to the
+/// banks: which payload format the bytes were written under, and —
+/// when the reader's buffer is a stable file mapping — the owner the
+/// arenas may borrow their entry blocks from instead of copying.
+#[derive(Clone, Copy, Default)]
+pub struct WireCtx<'a> {
+    /// v2 payloads carry an explicit alignment gap before each arena's
+    /// entry block (64-byte-aligned in the file); v1 payloads are
+    /// packed and always decode through the copying path.
+    pub aligned: bool,
+    /// Backing buffer of the reader when it outlives the decoded model
+    /// (an `Arc`-held artifact mapping). `None` forces owned decoding.
+    pub backing: Option<&'a std::sync::Arc<crate::bytes::ArtifactBytes>>,
+}
+
+impl WireCtx<'static> {
+    /// Context for v1 payloads (packed, copying).
+    pub fn v1() -> WireCtx<'static> {
+        WireCtx { aligned: false, backing: None }
+    }
+
+    /// Context for v2 payloads decoded from a transient buffer
+    /// (aligned layout, but nothing to borrow from).
+    pub fn v2_copying() -> WireCtx<'static> {
+        WireCtx { aligned: true, backing: None }
+    }
+}
+
 // -- writers ------------------------------------------------------------
 
 pub fn put_u8(out: &mut Vec<u8>, v: u8) {

@@ -82,6 +82,9 @@ fn print_help() {
          \x20 serve            --artifact name=model.ltm [--artifact n2=m2.ltm ...] [--fleet fleet.json]\n\
          \x20                  [--swap name=new.ltm] --requests 2000 [--clients 4] [--max-batch 32]\n\
          \x20                  [--dir data/synth]  (pure-push from artifacts alone when --dir is omitted)\n\
+         \x20                  [--watch-dir deploy/] [--watch-interval-ms 200] [--client-delay-ms 0]\n\
+         \x20                  (--watch-dir: auto-register new .ltm files by stem and hot-swap\n\
+         \x20                   models whose file content changes — config-free rolling deploys)\n\
          \x20 ref-check        --arch A --weights w.bin --hlo artifacts/linear_ref_b1.hlo.txt"
     );
 }
@@ -227,9 +230,10 @@ fn engine_from_args(args: &Args, model: Option<&Model>) -> Result<LutModel> {
     if let Some(path) = args.get("artifact") {
         let lut = LutModel::load(Path::new(path))?;
         println!(
-            "loaded artifact {path} ({} stages, {})",
+            "loaded artifact {path} ({} stages, {}, {})",
             lut.num_stages(),
-            fmt_bits(lut.size_bits())
+            fmt_bits(lut.size_bits()),
+            storage_note(&lut)
         );
         return Ok(lut);
     }
@@ -362,14 +366,46 @@ struct RequestPool {
     labels: Option<Vec<usize>>,
 }
 
+/// Deterministic per-model request rows for pure-push load.
+fn synth_rows(features: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = tablenet::util::Rng::new(seed);
+    (0..256).map(|_| (0..features).map(|_| rng.f32()).collect()).collect()
+}
+
+/// FNV-1a of a model name — folded into the request-pool seed so every
+/// model gets distinct but reproducible rows.
+fn name_seed(name: &str) -> u64 {
+    name.bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3))
+}
+
+/// Storage banner fragment: how a model's tables are resident.
+fn storage_note(lut: &tablenet::engine::LutModel) -> &'static str {
+    let s = lut.storage_summary();
+    if s.banks > 0 && s.borrowed == s.banks {
+        "zero-copy mmap"
+    } else if s.borrowed > 0 {
+        "partly mmap-borrowed"
+    } else {
+        "owned copy"
+    }
+}
+
 fn serve(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+    use std::sync::RwLock;
+    use std::time::Duration;
+    use tablenet::coordinator::registry::watcher::{DirWatcher, WatchEvent, WatcherOptions};
     use tablenet::coordinator::registry::ModelRegistry;
-    use tablenet::util::Rng;
 
     let fleet = tablenet::config::FleetConfig::from_args(args)?;
     fleet.validate()?;
     let n_requests = args.get_usize("requests", 2000);
     let clients = args.get_usize("clients", 4).max(1);
+    let client_delay = Duration::from_millis(args.get_u64("client-delay-ms", 0));
+    let watch_dir = args.get("watch-dir").map(PathBuf::from);
+    let seed = args.get_u64("seed", 0x5E17E);
+    let features_flag = Some(args.get_usize("features", 0)).filter(|&f| f > 0);
 
     // dataset-driven load only when asked for; the default is
     // pure-push — raw request rows synthesized from the artifact's own
@@ -377,9 +413,15 @@ fn serve(args: &Args) -> Result<()> {
     let data = if args.has("dir") { Some(dataset(args)?) } else { None };
 
     let registry = ModelRegistry::new();
-    let mut pools: std::collections::BTreeMap<String, Arc<RequestPool>> =
-        std::collections::BTreeMap::new();
-    let mut rng = Rng::new(args.get_u64("seed", 0x5E17E));
+    // the load generator's request pools; RwLock because --watch-dir
+    // deploys add models (and pools) while clients are running. The
+    // version counter bumps on every pool change so client threads can
+    // serve from a local lock-free snapshot and re-read the map only
+    // when a deploy actually changed it (one relaxed atomic load per
+    // request on the steady-state path, no lock, no clone).
+    let pools: Arc<RwLock<BTreeMap<String, Arc<RequestPool>>>> =
+        Arc::new(RwLock::new(BTreeMap::new()));
+    let pools_version = Arc::new(std::sync::atomic::AtomicU64::new(1));
     // dataset rows are identical for every model: build the pool once
     // and share it (pure-push pools stay per-model — each follows its
     // own artifact's input geometry)
@@ -389,24 +431,13 @@ fn serve(args: &Args) -> Result<()> {
             labels: Some(ds.test.labels.clone()),
         })
     });
-    let add_model = |name: &str,
-                         lut: tablenet::engine::LutModel,
-                         cfg: &ServeConfig,
-                         pools: &mut std::collections::BTreeMap<String, Arc<RequestPool>>,
-                         rng: &mut Rng|
-     -> Result<()> {
-        println!(
-            "[{name}] {} stages, {} of tables, batching {:?}",
-            lut.num_stages(),
-            fmt_bits(lut.size_bits()),
-            cfg
-        );
-        let pool = match &data_pool {
+    let make_pool = |name: &str, features: Option<usize>| -> Result<Arc<RequestPool>> {
+        match &data_pool {
             Some(p) => {
                 // a width-mismatched artifact must fail HERE with a
                 // clear error, not assert inside a worker mid-batch
                 let row_w = p.rows.first().map(Vec::len).unwrap_or(0);
-                if let Some(f) = lut.input_features() {
+                if let Some(f) = features {
                     if f != row_w {
                         bail!(
                             "model '{name}' expects {f} input features but \
@@ -414,44 +445,49 @@ fn serve(args: &Args) -> Result<()> {
                         );
                     }
                 }
-                p.clone()
+                Ok(p.clone())
             }
             None => {
-                let features = lut
-                    .input_features()
-                    .or_else(|| Some(args.get_usize("features", 0)).filter(|&f| f > 0))
-                    .ok_or_else(|| {
-                        anyhow!("[{name}] input width unknown; pass --features N")
-                    })?;
-                Arc::new(RequestPool {
-                    rows: (0..256)
-                        .map(|_| (0..features).map(|_| rng.f32()).collect())
-                        .collect(),
+                let features = features.or(features_flag).ok_or_else(|| {
+                    anyhow!("[{name}] input width unknown; pass --features N")
+                })?;
+                Ok(Arc::new(RequestPool {
+                    rows: synth_rows(features, seed ^ name_seed(name)),
                     labels: None,
-                })
+                }))
             }
-        };
-        pools.insert(name.to_string(), pool);
-        registry
-            .register(name, Arc::new(lut), cfg)
-            .map_err(|e| anyhow!("registering '{name}': {e}"))
+        }
     };
+    let add_model =
+        |name: &str, lut: tablenet::engine::LutModel, cfg: &ServeConfig| -> Result<()> {
+            println!(
+                "[{name}] {} stages, {} of tables ({}), batching {cfg:?}",
+                lut.num_stages(),
+                fmt_bits(lut.size_bits()),
+                storage_note(&lut),
+            );
+            let pool = make_pool(name, lut.input_features())?;
+            pools.write().unwrap().insert(name.to_string(), pool);
+            pools_version.fetch_add(1, std::sync::atomic::Ordering::Release);
+            registry
+                .register(name, Arc::new(lut), cfg)
+                .map_err(|e| anyhow!("registering '{name}': {e}"))
+        };
 
-    if fleet.models.is_empty() {
+    if fleet.models.is_empty() && watch_dir.is_none() {
         // legacy path: no artifacts — compile weights under the plan
         let name = arch(args)?.name().to_string();
         let lut = engine_from_args(args, None)?;
-        add_model(&name, lut, &fleet.defaults, &mut pools, &mut rng)?;
+        add_model(&name, lut, &fleet.defaults)?;
     } else {
         for (name, spec) in &fleet.models {
             let lut = tablenet::engine::LutModel::load(&spec.artifact)
                 .with_context(|| format!("model '{name}'"))?;
             println!("loaded artifact {} as '{name}'", spec.artifact.display());
-            add_model(name, lut, &fleet.effective(name), &mut pools, &mut rng)?;
+            add_model(name, lut, &fleet.effective(name))?;
         }
     }
-    let names: Vec<String> = pools.keys().cloned().collect();
-    let pools = Arc::new(pools);
+    let names: Vec<String> = pools.read().unwrap().keys().cloned().collect();
     println!(
         "serving {} model(s) {:?} | {n_requests} requests, {clients} clients{}",
         names.len(),
@@ -469,7 +505,10 @@ fn serve(args: &Args) -> Result<()> {
     for spec in args.get_all("swap") {
         let (name, path) = tablenet::config::parse_artifact_spec(spec)?;
         let pool = pools
+            .read()
+            .unwrap()
             .get(&name)
+            .cloned()
             .ok_or_else(|| anyhow!("--swap target '{name}' is not a registered model"))?;
         let lut = tablenet::engine::LutModel::load(&path)
             .with_context(|| format!("swap target for '{name}'"))?;
@@ -485,22 +524,136 @@ fn serve(args: &Args) -> Result<()> {
         swaps.push((name, path, Arc::new(lut)));
     }
 
+    // the deploy watcher starts AFTER static registration and swap
+    // resolution: watch-dir deploys ride on top of the static fleet.
+    // Its event hook prints each action and gives newly-registered
+    // models a request pool so the load generator drives them too.
+    let watcher = match &watch_dir {
+        None => None,
+        Some(dir) => {
+            // fail fast on a typo'd path: an empty-but-valid dir is a
+            // legitimate "wait for the first deploy" state, but a dir
+            // that does not exist would hang the load loop forever
+            if !dir.is_dir() {
+                bail!("--watch-dir {} is not a directory", dir.display());
+            }
+            let interval = args.get_u64("watch-interval-ms", 200).max(10);
+            println!(
+                "watching {} for .ltm deploys (poll every {interval}ms)",
+                dir.display()
+            );
+            let pools_w = pools.clone();
+            let pools_version_w = pools_version.clone();
+            let data_pool_w = data_pool.clone();
+            Some(DirWatcher::start(
+                registry.clone(),
+                dir.clone(),
+                WatcherOptions {
+                    serve_cfg: fleet.defaults.clone(),
+                    poll: Duration::from_millis(interval),
+                },
+                move |ev| {
+                    println!("[watch] {ev}");
+                    let (name, features) = match ev {
+                        WatchEvent::Registered { name, features, .. } => (name, *features),
+                        WatchEvent::Swapped { name, features, .. } => (name, *features),
+                        WatchEvent::Failed { .. } => return,
+                    };
+                    let mut pools = pools_w.write().unwrap();
+                    if let Some(existing) = pools.get(name) {
+                        // swap of a model already under load: keep the
+                        // pool only while its row width still fits the
+                        // new backend — stale-width rows would assert
+                        // inside a worker mid-batch (the static --swap
+                        // path rejects this at resolve time)
+                        let row_w = existing.rows.first().map(Vec::len).unwrap_or(0);
+                        match features {
+                            Some(f) if f != row_w => {
+                                pools.remove(name);
+                                pools_version_w
+                                    .fetch_add(1, std::sync::atomic::Ordering::Release);
+                                println!(
+                                    "[watch] '{name}' now expects {f} features (pool \
+                                     rows have {row_w}); rebuilding its request pool"
+                                );
+                                // fall through: rebuild below (pure-push)
+                                // or stop driving it (dataset rows can't
+                                // be resized)
+                            }
+                            _ => return,
+                        }
+                    }
+                    let pool = match &data_pool_w {
+                        Some(p) => {
+                            let row_w = p.rows.first().map(Vec::len).unwrap_or(0);
+                            match features {
+                                Some(f) if f != row_w => {
+                                    println!(
+                                        "[watch] '{name}' expects {f} features but --dir \
+                                         rows have {row_w}; serving it without load"
+                                    );
+                                    return;
+                                }
+                                _ => p.clone(),
+                            }
+                        }
+                        None => match features.or(features_flag) {
+                            Some(f) => Arc::new(RequestPool {
+                                rows: synth_rows(f, seed ^ name_seed(name)),
+                                labels: None,
+                            }),
+                            None => {
+                                println!(
+                                    "[watch] '{name}' input width unknown; serving it \
+                                     without load (pass --features N)"
+                                );
+                                return;
+                            }
+                        },
+                    };
+                    pools.insert(name.clone(), pool);
+                    pools_version_w.fetch_add(1, std::sync::atomic::Ordering::Release);
+                },
+            ))
+        }
+    };
+
     let start = std::time::Instant::now();
-    let names_arc = Arc::new(names);
     let mut joins = Vec::new();
     for c in 0..clients {
         let client = registry.client();
         let pools = pools.clone();
-        let names = names_arc.clone();
+        let pools_version = pools_version.clone();
         let per_client = n_requests / clients;
         joins.push(std::thread::spawn(move || {
             let mut served = 0usize;
             let mut correct = 0usize;
             let mut labeled = 0usize;
-            for i in 0..per_client {
+            let mut i = 0usize;
+            // local lock-free snapshot of the pools, re-read only when
+            // a deploy bumped the version — the steady-state request
+            // path costs one relaxed atomic load, no lock, no clones
+            let mut local: Vec<(String, Arc<RequestPool>)> = Vec::new();
+            let mut seen_version = 0u64;
+            while i < per_client {
+                let version = pools_version.load(std::sync::atomic::Ordering::Acquire);
+                if version != seen_version {
+                    local = pools
+                        .read()
+                        .unwrap()
+                        .iter()
+                        .map(|(n, p)| (n.clone(), p.clone()))
+                        .collect();
+                    seen_version = version;
+                }
+                if local.is_empty() {
+                    // with --watch-dir the fleet may start empty — wait
+                    // for the first deploy instead of exiting unloaded
+                    std::thread::sleep(Duration::from_millis(2));
+                    continue;
+                }
                 let k = c * per_client + i;
-                let name = &names[k % names.len()];
-                let pool = &pools[name];
+                let (name, pool) = &local[k % local.len()];
                 let idx = k % pool.rows.len();
                 match client.infer(name, pool.rows[idx].clone()) {
                     Ok(resp) => {
@@ -514,6 +667,10 @@ fn serve(args: &Args) -> Result<()> {
                     }
                     Err(_) => break,
                 }
+                if !client_delay.is_zero() {
+                    std::thread::sleep(client_delay);
+                }
+                i += 1;
             }
             (served, correct, labeled)
         }));
@@ -541,6 +698,13 @@ fn serve(args: &Args) -> Result<()> {
         labeled += l;
     }
     let elapsed = start.elapsed().as_secs_f64();
+    if let Some(w) = watcher {
+        let stats = w.stop();
+        println!(
+            "watcher: {} scans, {} registered, {} swapped, {} rejected",
+            stats.scans, stats.registered, stats.swapped, stats.failed
+        );
+    }
     let fleet_snap = registry.shutdown();
     println!("{fleet_snap}");
     print!(
@@ -567,7 +731,19 @@ fn inspect(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("usage: tablenet inspect model.ltm"))?;
     let info = tablenet::engine::artifact::inspect(Path::new(path))?;
     println!("artifact {path}");
-    println!("  container version : {}", info.version);
+    println!(
+        "  container version : {} ({})",
+        info.version,
+        if info.version >= 2 {
+            "zero-copy layout: 64B-aligned arenas, per-stage checksums"
+        } else {
+            "legacy packed layout, loads via the copying path"
+        }
+    );
+    println!(
+        "  mapped            : {}",
+        if info.mapped { "yes (arenas may borrow in place)" } else { "no" }
+    );
     println!("  total bytes       : {}", info.total_bytes);
     println!(
         "  tables            : {} ({} bits)",
@@ -580,13 +756,37 @@ fn inspect(args: &Args) -> Result<()> {
             .map(|f| f.to_string())
             .unwrap_or_else(|| "unknown".to_string())
     );
+    let (banks, borrowed): (usize, usize) = info.stages.iter().fold((0, 0), |(b, z), s| {
+        match s.storage {
+            Some(r) => (b + 1, z + r.borrowed as usize),
+            None => (b, z),
+        }
+    });
+    println!(
+        "  storage           : {borrowed}/{banks} table banks borrowed zero-copy{}",
+        if banks > 0 && borrowed == banks { " (served in place from the mapping)" } else { "" }
+    );
     println!("  stages            : {}", info.stages.len());
     for (i, s) in info.stages.iter().enumerate() {
+        let checksum = s
+            .checksum
+            .map(|c| format!("{c:#018x}"))
+            .unwrap_or_else(|| "-".to_string());
+        let storage = match s.storage {
+            Some(r) => format!(
+                "{} {}",
+                if r.narrow { "i32" } else { "i64" },
+                if r.borrowed { "borrowed(mmap)" } else { "owned" }
+            ),
+            None => "-".to_string(),
+        };
         println!(
-            "    [{i:2}] {:<16} payload {:>12} B   tables {}",
+            "    [{i:2}] {:<16} payload {:>12} B @ {:#010x}  fnv {checksum}  \
+             tables {:<12} {storage}",
             s.kind.name(),
             s.payload_bytes,
-            fmt_bits(s.size_bits)
+            s.offset,
+            fmt_bits(s.size_bits),
         );
     }
     let plan = tablenet::config::json::Json::parse(&info.plan_json)

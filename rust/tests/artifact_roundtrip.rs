@@ -159,6 +159,102 @@ fn file_roundtrip_through_save_and_load() {
     std::fs::remove_file(&path).ok();
 }
 
+/// v1 -> v2 compatibility matrix over every stage kind the compiler
+/// emits: the same loader entry point must serve BOTH container
+/// versions bit-exactly — v2 borrowing its arenas zero-copy from the
+/// mapping, v1 copying onto the heap — and the two loads must agree
+/// with the in-memory compiled model and with each other.
+#[test]
+fn prop_v1_v2_compatibility_matrix() {
+    let mut rng = Rng::new(0x51AB);
+    let dir = std::env::temp_dir().join("tablenet_compat_matrix");
+    std::fs::create_dir_all(&dir).unwrap();
+    for (case, (model, plan)) in cases(&mut rng).into_iter().enumerate() {
+        let lut = Compiler::new(&model).plan(&plan).build().unwrap();
+        let p_v2 = dir.join(format!("case{case}_v2.ltm"));
+        let p_v1 = dir.join(format!("case{case}_v1.ltm"));
+        lut.save(&p_v2).unwrap();
+        std::fs::write(&p_v1, artifact::to_bytes_v1(&lut)).unwrap();
+
+        let v2 = LutModel::load(&p_v2).unwrap();
+        let v1 = LutModel::load(&p_v1).unwrap();
+
+        // residency: v1 owns everything; mapped v2 borrows every arena
+        let s1 = v1.storage_summary();
+        assert_eq!(s1.borrowed, 0, "case {case}: v1 must load via the copy path");
+        #[cfg(unix)]
+        {
+            let s2 = v2.storage_summary();
+            assert_eq!(
+                s2.borrowed, s2.banks,
+                "case {case}: mapped v2 arenas must be borrowed ({s2:?})"
+            );
+        }
+
+        // inspect agrees on the version split and checksum presence
+        let i2 = artifact::inspect(&p_v2).unwrap();
+        let i1 = artifact::inspect(&p_v1).unwrap();
+        assert_eq!((i2.version, i1.version), (2, 1), "case {case}");
+        assert!(i2.stages.iter().all(|s| s.checksum.is_some()), "case {case}");
+        assert!(i1.stages.iter().all(|s| s.checksum.is_none()), "case {case}");
+
+        // bit-exact three ways: in-memory vs v2-mapped vs v1-copied
+        let features: usize = model.input_shape.iter().product();
+        let batch = 3;
+        let images: Vec<f32> = (0..batch * features).map(|_| rng.f32()).collect();
+        let mut s = Scratch::new();
+        let want = lut.infer_batch(&images, batch, &mut s);
+        for (tag, loaded) in [("v2", &v2), ("v1", &v1)] {
+            let mut s = Scratch::new();
+            let got = loaded.infer_batch(&images, batch, &mut s);
+            assert_eq!(got.classes, want.classes, "case {case} {tag}: classes");
+            assert_eq!(got.logits, want.logits, "case {case} {tag}: logits");
+            assert_eq!(got.per_sample, want.per_sample, "case {case} {tag}: counters");
+            got.counters.assert_multiplier_less();
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// v2 per-stage checksums LOCALISE corruption: a flipped byte inside a
+/// stage payload is reported with that stage's index, kind and file
+/// offset; truncation inside the payload region names the stage whose
+/// record no longer fits.
+#[test]
+fn v2_corruption_is_rejected_with_stage_and_offset() {
+    let mut rng = Rng::new(0x10CA);
+    let model = mlp_model(&mut rng);
+    let lut = Compiler::new(&model).plan(&EnginePlan::mlp_fixed_input()).build().unwrap();
+    let bytes = artifact::to_bytes(&lut);
+    let info = artifact::inspect_bytes(&bytes).unwrap();
+    assert!(info.stages.len() >= 3, "want a multi-stage pipeline");
+
+    // flip one byte in the middle of EVERY stage payload in turn: the
+    // error must name that stage and its offset
+    for (i, st) in info.stages.iter().enumerate() {
+        if st.payload_bytes == 0 {
+            continue;
+        }
+        let mut bad = bytes.clone();
+        bad[(st.offset + st.payload_bytes / 2) as usize] ^= 0x04;
+        let err = format!("{:#}", artifact::from_bytes(&bad).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "stage {i}: {err}");
+        assert!(err.contains(&format!("stage {i}")), "stage {i}: {err}");
+        assert!(err.contains(&format!("{:#x}", st.offset)), "stage {i}: {err}");
+    }
+
+    // truncation inside the payload region names the first stage whose
+    // payload no longer fits
+    let last = info.stages.last().unwrap();
+    let cut = (last.offset + last.payload_bytes / 2) as usize;
+    let err = format!("{:#}", artifact::from_bytes(&bytes[..cut]).unwrap_err());
+    let i = info.stages.len() - 1;
+    assert!(
+        err.contains(&format!("stage {i}")) && err.contains("truncated"),
+        "truncation error must name stage {i}: {err}"
+    );
+}
+
 #[test]
 fn prop_corrupted_artifacts_are_rejected() {
     let mut rng = Rng::new(0xBADF);

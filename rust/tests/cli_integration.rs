@@ -34,6 +34,7 @@ fn help_lists_commands() {
     }
     assert!(text.contains("--artifact"), "help missing --artifact flag");
     assert!(text.contains("--swap"), "help missing --swap flag");
+    assert!(text.contains("--watch-dir"), "help missing --watch-dir flag");
 }
 
 #[test]
@@ -183,14 +184,21 @@ fn compile_then_eval_artifact_is_bit_identical_to_weights() {
     assert!(!text.contains("accuracy"), "pure-push has no labels: {text}");
 
     // inspect dumps the artifact through the same parse path serve
-    // loads with
+    // loads with: v2 container, per-stage fnv checksums, storage
+    // residency
     let out = bin().arg("inspect").arg(&ltm).output().unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
-    assert!(text.contains("container version : 1"), "{text}");
+    assert!(text.contains("container version : 2"), "{text}");
     assert!(text.contains("dense-bitplane"), "{text}");
     assert!(text.contains("input features    : 784"), "{text}");
+    assert!(text.contains("fnv 0x"), "per-stage checksums missing: {text}");
     assert!(text.contains("bitplane_fixed"), "plan JSON missing: {text}");
+    #[cfg(unix)]
+    assert!(
+        text.contains("borrowed(mmap)"),
+        "mapped inspect must report borrowed arenas: {text}"
+    );
 
     // corrupted artifact must be rejected, not served
     let mut bytes = std::fs::read(&ltm).unwrap();
@@ -221,6 +229,118 @@ fn compile_then_eval_artifact_is_bit_identical_to_weights() {
         "{}",
         String::from_utf8_lossy(&out.stderr)
     );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Train a quick linear model and compile it to `<tag>.ltm` inside
+/// `dir` (synthetic data cached under `dir/synth`). `seed` varies the
+/// weights so two calls produce artifacts with different content.
+fn train_and_compile(dir: &std::path::Path, tag: &str, seed: u64) -> PathBuf {
+    let weights = dir.join(format!("{tag}.bin"));
+    let seed = seed.to_string();
+    let out = bin()
+        .args(["train", "--arch", "linear", "--steps", "250", "--dir"])
+        .arg(dir.join("synth"))
+        .args(["--train", "400", "--test", "100", "--seed", seed.as_str(), "--out"])
+        .arg(&weights)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let ltm = dir.join(format!("{tag}.ltm"));
+    let out = bin()
+        .args(["compile", "--arch", "linear", "--weights"])
+        .arg(&weights)
+        .args(["--out"])
+        .arg(&ltm)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    ltm
+}
+
+#[test]
+fn inspect_corrupted_artifact_exits_nonzero_naming_stage_and_offset() {
+    let dir = sandbox("inspectbad");
+    let ltm = train_and_compile(&dir, "model", 11);
+
+    // flip one byte near the end of the file: with the v2 layout that
+    // is inside the LAST stage's payload, and the failure must name
+    // the stage and its file offset — not a bare parse error
+    let mut bytes = std::fs::read(&ltm).unwrap();
+    let n = bytes.len();
+    bytes[n - 2] ^= 0x08;
+    let bad = dir.join("bad.ltm");
+    std::fs::write(&bad, &bytes).unwrap();
+
+    let out = bin().arg("inspect").arg(&bad).output().unwrap();
+    assert!(!out.status.success(), "inspect accepted a corrupted v2 artifact");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("checksum mismatch"), "{err}");
+    assert!(err.contains("stage "), "error must name the failing stage: {err}");
+    assert!(err.contains("offset 0x"), "error must give the file offset: {err}");
+
+    // truncation is equally localised
+    let cut = dir.join("cut.ltm");
+    std::fs::write(&cut, &std::fs::read(&ltm).unwrap()[..n - 16]).unwrap();
+    let out = bin().arg("inspect").arg(&cut).output().unwrap();
+    assert!(!out.status.success(), "inspect accepted a truncated artifact");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("stage "), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_watch_dir_rolls_deploys_without_restart() {
+    let dir = sandbox("watchdir");
+    let m1 = train_and_compile(&dir, "gen1", 21);
+    let m2 = train_and_compile(&dir, "gen2", 22);
+    assert_ne!(
+        std::fs::read(&m1).unwrap(),
+        std::fs::read(&m2).unwrap(),
+        "need two distinct artifacts for the rolling deploy"
+    );
+    let watch = dir.join("deploy");
+    std::fs::create_dir_all(&watch).unwrap();
+
+    // start serving an EMPTY watch dir: no --artifact, no weights, no
+    // restart ever — the fleet is whatever the directory says.
+    // --client-delay-ms paces the load so the run outlives both deploys.
+    let mut child = bin()
+        .args(["serve", "--watch-dir"])
+        .arg(&watch)
+        .args(["--watch-interval-ms", "50", "--requests", "600", "--clients", "2"])
+        .args(["--client-delay-ms", "5", "--max-batch", "8"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+
+    // deploy generation 1, then replace it with generation 2 mid-load —
+    // that is the whole deploy interface. Copy-to-temp + rename is the
+    // atomic pattern replacing a LIVE model requires: the old version
+    // keeps serving from a mapping of the old inode, so the watch-dir
+    // entry must never be a half-written (or in-place-truncated) file.
+    let deploy = |src: &PathBuf| {
+        let tmp = watch.join("live.ltm.tmp");
+        std::fs::copy(src, &tmp).unwrap();
+        std::fs::rename(&tmp, watch.join("live.ltm")).unwrap();
+    };
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    deploy(&m1);
+    std::thread::sleep(std::time::Duration::from_millis(700));
+    deploy(&m2);
+
+    let out = child.wait_with_output().unwrap();
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "serve --watch-dir failed: {err}\n{text}");
+    assert!(text.contains("registered model 'live'"), "{text}");
+    assert!(
+        text.contains("swapped model 'live' -> v2"),
+        "rolling deploy not observed: {text}"
+    );
+    assert!(text.contains("served 600 requests"), "{text}");
+    assert!(text.contains("mults=0"), "watch-dir serve must stay multiplier-less: {text}");
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -1,0 +1,124 @@
+//! Zero-copy load discipline of the v2 artifact: `LutModel::load` of a
+//! memory-mapped v2 `.ltm` must perform ZERO table-payload copies —
+//! the arenas borrow their entry blocks straight out of the mapping,
+//! so heap traffic during load is bounded by metadata (plan JSON,
+//! offsets, biases), not by bank size. A v1 artifact of the same model
+//! must still load — through the copying path — bit-exact.
+//!
+//! Enforced for real with a byte-counting global allocator: this test
+//! file is its own crate, so the `#[global_allocator]` below only
+//! governs this binary, and exactly one test lives here so the counter
+//! observes only the code under test.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use tablenet::engine::plan::{AffineMode, EnginePlan};
+use tablenet::engine::{artifact, Compiler, LutModel};
+use tablenet::nn::Model;
+use tablenet::tensor::Tensor;
+use tablenet::util::Rng;
+
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn alloc_bytes_during(f: impl FnOnce() -> LutModel) -> (LutModel, u64) {
+    let before = ALLOC_BYTES.load(Ordering::SeqCst);
+    let model = f();
+    let after = ALLOC_BYTES.load(Ordering::SeqCst);
+    (model, after - before)
+}
+
+#[test]
+fn v2_mmap_load_copies_no_table_payloads() {
+    // ~1 MB of i32 arena: 784/8 = 98 chunks x 2^8 rows x 10 outputs
+    let mut rng = Rng::new(0x2E80);
+    let model = Model::linear(
+        Tensor::randn(&[10, 784], 0.05, &mut rng),
+        Tensor::randn(&[10], 0.02, &mut rng),
+    );
+    let plan = EnginePlan {
+        affine: vec![AffineMode::BitplaneFixed { bits: 3, m: 8, range_exp: 0 }],
+        fallback: AffineMode::Float { planes: 11, m: 1 },
+        r_o: 16,
+    };
+    let lut = Compiler::new(&model).plan(&plan).build().unwrap();
+    let table_bytes = lut.storage_summary().bytes as u64;
+    assert!(table_bytes > 500_000, "arena too small to measure: {table_bytes}");
+
+    let dir = std::env::temp_dir().join("tablenet_zero_copy_load");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p_v2 = dir.join("model_v2.ltm");
+    let p_v1 = dir.join("model_v1.ltm");
+    lut.save(&p_v2).unwrap();
+    std::fs::write(&p_v1, artifact::to_bytes_v1(&lut)).unwrap();
+
+    // v2 serving load: the file maps, the arenas borrow — table bytes
+    // never touch the heap. Metadata (plan JSON, offsets, biases) is
+    // all that allocates, far below the arena size.
+    let (v2, v2_alloc) = alloc_bytes_during(|| LutModel::load(&p_v2).unwrap());
+    #[cfg(unix)]
+    {
+        let s = v2.storage_summary();
+        assert!(s.banks > 0);
+        assert_eq!(
+            s.borrowed, s.banks,
+            "every arena of a mapped v2 artifact must be borrowed: {s:?}"
+        );
+        assert!(
+            v2_alloc < table_bytes / 4,
+            "v2 mmap load allocated {v2_alloc} bytes — table payloads \
+             ({table_bytes} bytes) were copied"
+        );
+    }
+
+    // v1 legacy load: same loader entry point, copying path — the heap
+    // receives (at least) the full arena
+    let (v1, v1_alloc) = alloc_bytes_during(|| LutModel::load(&p_v1).unwrap());
+    let s = v1.storage_summary();
+    assert_eq!(s.borrowed, 0, "v1 artifacts have nothing to borrow from: {s:?}");
+    assert!(
+        v1_alloc >= table_bytes,
+        "v1 copying load allocated only {v1_alloc} bytes for {table_bytes} of tables"
+    );
+
+    // both paths are bit-exact with the in-memory compiled model
+    let x: Vec<f32> = (0..784).map(|_| rng.f32()).collect();
+    let want = lut.infer(&x);
+    for (tag, loaded) in [("v2", &v2), ("v1", &v1)] {
+        let got = loaded.infer(&x);
+        assert_eq!(got.class, want.class, "{tag} class diverged");
+        assert_eq!(got.logits, want.logits, "{tag} logits diverged");
+        assert_eq!(got.counters, want.counters, "{tag} counters diverged");
+    }
+
+    // the mapped model keeps serving after its file is replaced — the
+    // deploy watcher relies on this (standard rolling-deploy contract)
+    std::fs::remove_file(&p_v2).unwrap();
+    let again = v2.infer(&x);
+    assert_eq!(again.class, want.class);
+
+    std::fs::remove_dir_all(&dir).ok();
+}

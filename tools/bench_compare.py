@@ -1,0 +1,224 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: diff fresh BENCH_*.json against the committed
+baseline and fail on throughput regressions.
+
+The benches emit machine-readable JSON (`BENCH_hotpath.json` from
+`cargo bench --bench engine_hotpath`, `BENCH_serve.json` from
+`cargo bench --bench serve_throughput`). This script extracts every
+higher-is-better throughput metric from them, compares each against
+`BENCH_baseline.json`, writes a markdown diff (appended to
+`$GITHUB_STEP_SUMMARY` when set, always written to `BENCH_diff.md`),
+and exits non-zero when any metric regressed by more than the
+threshold (default 15%).
+
+Usage:
+  tools/bench_compare.py BENCH_baseline.json BENCH_hotpath.json BENCH_serve.json
+  tools/bench_compare.py --threshold 0.15 baseline.json fresh1.json [fresh2.json ...]
+  tools/bench_compare.py --write-baseline BENCH_baseline.json BENCH_hotpath.json BENCH_serve.json
+  tools/bench_compare.py --self-test
+
+Baseline schema (BENCH_baseline.json):
+  {
+    "note":    "free text — provenance of the numbers",
+    "metrics": { "<metric name>": <throughput float>, ... }
+  }
+
+Metrics present only in the fresh run are reported as NEW (pass);
+metrics present only in the baseline are reported as MISSING (fail —
+a silently dropped bench case must not pass the gate).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_THRESHOLD = 0.15
+
+
+def extract_metrics(doc):
+    """Throughput metrics (higher = better) from one BENCH_*.json."""
+    bench = doc.get("bench", "unknown")
+    out = {}
+    if bench == "engine_hotpath":
+        for case in doc.get("cases", []):
+            sps = case.get("samples_per_sec")
+            if sps is not None:
+                out[f"hotpath/{case['name']}/samples_per_sec"] = float(sps)
+        rps = doc.get("coordinator_throughput_rps")
+        if rps is not None:
+            out["hotpath/coordinator_throughput_rps"] = float(rps)
+    elif bench == "serve_throughput":
+        total = doc.get("total_rps")
+        if total is not None:
+            out["serve/total_rps"] = float(total)
+        for m in doc.get("models", []):
+            rps = m.get("rps")
+            if rps is not None:
+                out[f"serve/{m['name']}/rps"] = float(rps)
+    else:
+        raise SystemExit(f"unrecognised bench document: bench={bench!r}")
+    return out
+
+
+def load_fresh(paths):
+    metrics = {}
+    for p in paths:
+        with open(p, encoding="utf-8") as f:
+            doc = json.load(f)
+        for name, value in extract_metrics(doc).items():
+            if name in metrics:
+                raise SystemExit(f"duplicate metric {name!r} across inputs")
+            metrics[name] = value
+    return metrics
+
+
+def compare(baseline, fresh, threshold):
+    """-> (rows, regressions). rows: (name, base, new, delta_str, status)."""
+    rows, regressions = [], []
+    for name in sorted(set(baseline) | set(fresh)):
+        base, new = baseline.get(name), fresh.get(name)
+        if base is None:
+            rows.append((name, None, new, "—", "NEW"))
+        elif new is None:
+            rows.append((name, base, None, "—", "MISSING"))
+            regressions.append(f"{name}: present in baseline but not in the fresh run")
+        else:
+            delta = (new - base) / base if base > 0 else 0.0
+            status = "OK"
+            if delta < -threshold:
+                status = "REGRESSED"
+                regressions.append(
+                    f"{name}: {base:.1f} -> {new:.1f} ({delta:+.1%}, "
+                    f"allowed -{threshold:.0%})"
+                )
+            rows.append((name, base, new, f"{delta:+.1%}", status))
+    return rows, regressions
+
+
+def fmt(v):
+    return "—" if v is None else f"{v:,.1f}"
+
+
+def markdown(rows, regressions, threshold, note):
+    lines = ["## Bench regression gate", ""]
+    if note:
+        lines += [f"_baseline: {note}_", ""]
+    lines += [
+        f"Threshold: fail below **-{threshold:.0%}** vs baseline (throughput, higher is better).",
+        "",
+        "| metric | baseline | fresh | delta | status |",
+        "|---|---:|---:|---:|---|",
+    ]
+    for name, base, new, delta, status in rows:
+        badge = {"OK": "✅", "NEW": "🆕", "MISSING": "❌", "REGRESSED": "❌"}[status]
+        lines.append(f"| `{name}` | {fmt(base)} | {fmt(new)} | {delta} | {badge} {status} |")
+    lines.append("")
+    if regressions:
+        lines.append(f"**{len(regressions)} gate failure(s):**")
+        lines += [f"- {r}" for r in regressions]
+    else:
+        lines.append("**Gate passed.**")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def self_test():
+    doc_hot = {
+        "bench": "engine_hotpath",
+        "cases": [
+            {"name": "a", "samples_per_sec": 100.0},
+            {"name": "b", "samples_per_sec": 50.0},
+        ],
+        "coordinator_throughput_rps": 1000.0,
+    }
+    doc_serve = {
+        "bench": "serve_throughput",
+        "total_rps": 500.0,
+        "models": [{"name": "m0", "rps": 250.0}],
+    }
+    fresh = {}
+    for d in (doc_hot, doc_serve):
+        fresh.update(extract_metrics(d))
+    assert fresh["hotpath/a/samples_per_sec"] == 100.0
+    assert fresh["serve/total_rps"] == 500.0
+    assert len(fresh) == 5, fresh
+
+    # within threshold: pass (13% down on one metric)
+    base = dict(fresh)
+    base["hotpath/a/samples_per_sec"] = 115.0
+    rows, reg = compare(base, fresh, 0.15)
+    assert not reg, reg
+    assert [r for r in rows if r[4] == "OK"], rows
+
+    # beyond threshold: fail
+    base["hotpath/a/samples_per_sec"] = 200.0
+    _, reg = compare(base, fresh, 0.15)
+    assert len(reg) == 1 and "hotpath/a" in reg[0], reg
+
+    # improvements and new metrics pass; dropped metrics fail
+    base = {"hotpath/a/samples_per_sec": 10.0, "gone/metric": 1.0}
+    rows, reg = compare(base, fresh, 0.15)
+    assert len(reg) == 1 and "gone/metric" in reg[0], reg
+    statuses = {r[0]: r[4] for r in rows}
+    assert statuses["hotpath/a/samples_per_sec"] == "OK"
+    assert statuses["serve/total_rps"] == "NEW"
+    assert statuses["gone/metric"] == "MISSING"
+
+    # markdown renders every row
+    md = markdown(rows, reg, 0.15, "self-test")
+    assert "REGRESSED" in md or "MISSING" in md
+    print("self-test passed")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", nargs="?", help="BENCH_baseline.json")
+    ap.add_argument("fresh", nargs="*", help="fresh BENCH_*.json files")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="max allowed fractional regression (default 0.15)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write BASELINE from the fresh files instead of comparing")
+    ap.add_argument("--out", default="BENCH_diff.md", help="markdown diff output path")
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+
+    if args.self_test:
+        self_test()
+        return 0
+    if not args.baseline or not args.fresh:
+        ap.error("need a baseline and at least one fresh BENCH_*.json")
+
+    fresh = load_fresh(args.fresh)
+    if args.write_baseline:
+        doc = {
+            "note": "generated by tools/bench_compare.py --write-baseline",
+            "metrics": fresh,
+        }
+        with open(args.baseline, "w", encoding="utf-8") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.baseline} ({len(fresh)} metrics)")
+        return 0
+
+    with open(args.baseline, encoding="utf-8") as f:
+        base_doc = json.load(f)
+    rows, regressions = compare(base_doc.get("metrics", {}), fresh, args.threshold)
+    md = markdown(rows, regressions, args.threshold, base_doc.get("note", ""))
+
+    with open(args.out, "w", encoding="utf-8") as f:
+        f.write(md)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a", encoding="utf-8") as f:
+            f.write(md)
+    print(md)
+    if regressions:
+        print(f"FAIL: {len(regressions)} bench metric(s) regressed beyond "
+              f"{args.threshold:.0%}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
