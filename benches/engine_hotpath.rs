@@ -288,7 +288,13 @@ fn main() {
 
     let coord = Coordinator::start(
         Arc::new(Compiler::new(&model).plan(&EnginePlan::linear_default()).build().unwrap()),
-        &ServeConfig { max_batch: 1, max_wait_us: 1, workers: 1, queue_cap: 64 },
+        &ServeConfig {
+            max_batch: 1,
+            max_wait_us: 1,
+            workers: 1,
+            queue_cap: 64,
+            ..ServeConfig::default()
+        },
     );
     let client = coord.client();
     track("coordinator round-trip (batch=1)", 1, &mut case_samples);
@@ -303,7 +309,13 @@ fn main() {
     let n_requests = 2000usize;
     let coord = Coordinator::start(
         Arc::new(Compiler::new(&model).plan(&EnginePlan::linear_default()).build().unwrap()),
-        &ServeConfig { max_batch: 32, max_wait_us: 200, workers: 1, queue_cap: 1024 },
+        &ServeConfig {
+            max_batch: 32,
+            max_wait_us: 200,
+            workers: 1,
+            queue_cap: 1024,
+            ..ServeConfig::default()
+        },
     );
     let test = Arc::new(ds.test);
     let t0 = Instant::now();

@@ -35,6 +35,7 @@ fn main() {
         max_wait_us: args.get_u64("max-wait-us", 200),
         workers: args.get_usize("workers", 1),
         queue_cap: args.get_usize("queue-cap", 1024),
+        ..ServeConfig::default()
     };
 
     let (model, ds) = common::linear_model(Kind::Digits);
@@ -98,6 +99,69 @@ fn main() {
 
     let served: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
     let wall = t0.elapsed().as_secs_f64();
+
+    // ---- overload phase: shed-rate + p99 past capacity ----------------
+    // One deliberately under-provisioned pipeline (1 worker, small
+    // batches, tight queue, per-request deadline) hammered by 4x the
+    // clients: requests that cannot make their deadline MUST shed with
+    // a typed error, and the ones that are served report an honest p99.
+    // The pipeline is retired before the fleet snapshot so the gated
+    // per-model metrics above stay comparable across runs.
+    let over_cfg = ServeConfig {
+        max_batch: 4,
+        max_wait_us: 100,
+        workers: 1,
+        queue_cap: 8,
+        deadline_us: 1_500,
+        degrade_after: 0,
+    };
+    let over_engine =
+        Compiler::new(&model).plan(&plan_bits(4)).build().expect("overload engine");
+    registry.register("overload", Arc::new(over_engine), &over_cfg).expect("unique name");
+    let over_requests = (n_requests / 2).max(400);
+    let over_clients = (n_clients * 4).max(8);
+    let t1 = std::time::Instant::now();
+    let mut ojoins = Vec::new();
+    for c in 0..over_clients {
+        let client = client_handle.clone();
+        let test = test.clone();
+        let per = (over_requests / over_clients).max(1);
+        ojoins.push(std::thread::spawn(move || {
+            let (mut ok, mut shed) = (0usize, 0usize);
+            for i in 0..per {
+                let idx = (c * per + i) % test.len();
+                match client.try_infer("overload", test.image(idx).to_vec()) {
+                    Ok(_) => ok += 1,
+                    Err(_) => shed += 1,
+                }
+            }
+            (ok, shed)
+        }));
+    }
+    let (mut over_ok, mut over_shed) = (0usize, 0usize);
+    for j in ojoins {
+        let (o, s) = j.join().unwrap();
+        over_ok += o;
+        over_shed += s;
+    }
+    let over_wall = t1.elapsed().as_secs_f64();
+    let over_snap = registry.retire("overload").expect("retire overload pipeline");
+    assert_eq!(over_snap.completed as usize, over_ok, "request lost under overload");
+    assert_eq!(
+        (over_snap.rejected + over_snap.deadline_shed) as usize,
+        over_shed,
+        "overload sheds must be typed and counted, never dropped"
+    );
+    let over_attempted = (over_ok + over_shed).max(1);
+    let shed_rate = over_shed as f64 / over_attempted as f64;
+    println!(
+        "overload: {over_ok} ok, {over_shed} shed ({:.1}% of {over_attempted}) | \
+         p99 {:.0}µs | {:.2}s",
+        100.0 * shed_rate,
+        over_snap.latency_p99_us,
+        over_wall
+    );
+
     let fleet = registry.shutdown();
     assert_eq!(fleet.completed() as usize, served, "request lost under bench load");
     fleet.assert_multiplier_less();
@@ -139,6 +203,12 @@ fn main() {
         .collect();
     json.push_str(&entries.join(",\n"));
     json.push_str("\n  ],\n");
+    json.push_str(&format!(
+        "  \"overload\": {{\"requests\": {over_attempted}, \"ok\": {over_ok}, \
+         \"shed\": {over_shed}, \"shed_rate\": {shed_rate:.4}, \
+         \"p99_us\": {:.1}, \"wall_s\": {over_wall:.3}}},\n",
+        over_snap.latency_p99_us
+    ));
     json.push_str(&format!("  \"total_rps\": {total_rps:.1},\n"));
     json.push_str(&format!("  \"wall_s\": {wall:.3},\n"));
     json.push_str(&format!("  \"swapped_model_version\": {swapped_version}\n"));

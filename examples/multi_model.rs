@@ -66,12 +66,24 @@ fn main() -> anyhow::Result<()> {
     registry.register(
         "digits",
         Arc::new(compile_artifact(&digits_model, &plan, "artifacts/model_digits.ltm")?),
-        &ServeConfig { max_batch: 32, max_wait_us: 200, workers: 1, queue_cap: 512 },
+        &ServeConfig {
+            max_batch: 32,
+            max_wait_us: 200,
+            workers: 1,
+            queue_cap: 512,
+            ..ServeConfig::default()
+        },
     )?;
     registry.register(
         "fashion",
         Arc::new(compile_artifact(&fashion_model, &plan, "artifacts/model_fashion.ltm")?),
-        &ServeConfig { max_batch: 8, max_wait_us: 50, workers: 1, queue_cap: 512 },
+        &ServeConfig {
+            max_batch: 8,
+            max_wait_us: 50,
+            workers: 1,
+            queue_cap: 512,
+            ..ServeConfig::default()
+        },
     )?;
     for info in registry.models() {
         println!("serving '{}' v{} ({}, {} workers)", info.name, info.version, info.backend, info.workers);

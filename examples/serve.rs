@@ -64,6 +64,7 @@ fn main() -> anyhow::Result<()> {
         max_wait_us: args.get_u64("max-wait-us", 500),
         workers: args.get_usize("workers", 1),
         queue_cap: args.get_usize("queue-cap", 1024),
+        ..ServeConfig::default()
     };
     let n_requests = args.get_usize("requests", 2000);
     let n_clients = args.get_usize("clients", 4).max(1);

@@ -21,11 +21,30 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Bounded request queue capacity (backpressure limit).
     pub queue_cap: usize,
+    /// Per-request deadline in µs (0 = no deadline). A request that is
+    /// still waiting when its deadline passes is shed with a typed
+    /// `DeadlineExceeded` — it never blocks its caller forever and is
+    /// never silently dropped. Checked at batch formation and again
+    /// right before execution; time spent inside the backend is not
+    /// preempted.
+    pub deadline_us: u64,
+    /// Mark the model Degraded after this many CONSECUTIVE worker
+    /// panics (0 = never auto-degrade). A successful batch resets the
+    /// streak; installing a new backend (swap) clears the Degraded
+    /// state.
+    pub degrade_after: u32,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 32, max_wait_us: 500, workers: 1, queue_cap: 1024 }
+        ServeConfig {
+            max_batch: 32,
+            max_wait_us: 500,
+            workers: 1,
+            queue_cap: 1024,
+            deadline_us: 0,
+            degrade_after: 3,
+        }
     }
 }
 
@@ -36,6 +55,8 @@ impl ServeConfig {
             ("max_wait_us", Json::num(self.max_wait_us as f64)),
             ("workers", Json::num(self.workers as f64)),
             ("queue_cap", Json::num(self.queue_cap as f64)),
+            ("deadline_us", Json::num(self.deadline_us as f64)),
+            ("degrade_after", Json::num(self.degrade_after as f64)),
         ])
     }
 
@@ -47,12 +68,18 @@ impl ServeConfig {
     /// fleet file's per-model override inherits the fleet defaults for
     /// the keys it does not mention, not the global built-ins.
     pub fn from_json_over(j: &Json, base: &ServeConfig) -> Result<ServeConfig> {
-        reject_unknown_keys(j, "serve config", &["max_batch", "max_wait_us", "workers", "queue_cap"])?;
+        reject_unknown_keys(
+            j,
+            "serve config",
+            &["max_batch", "max_wait_us", "workers", "queue_cap", "deadline_us", "degrade_after"],
+        )?;
         Ok(ServeConfig {
             max_batch: get_usize(j, "max_batch", base.max_batch)?,
             max_wait_us: get_u64(j, "max_wait_us", base.max_wait_us)?,
             workers: get_usize(j, "workers", base.workers)?,
             queue_cap: get_usize(j, "queue_cap", base.queue_cap)?,
+            deadline_us: get_u64(j, "deadline_us", base.deadline_us)?,
+            degrade_after: get_u64(j, "degrade_after", base.degrade_after as u64)? as u32,
         })
     }
 
@@ -62,6 +89,8 @@ impl ServeConfig {
         self.max_wait_us = args.get_u64("max-wait-us", self.max_wait_us);
         self.workers = args.get_usize("workers", self.workers);
         self.queue_cap = args.get_usize("queue-cap", self.queue_cap);
+        self.deadline_us = args.get_u64("deadline-us", self.deadline_us);
+        self.degrade_after = args.get_u32("degrade-after", self.degrade_after);
         self
     }
 
@@ -74,6 +103,14 @@ impl ServeConfig {
         }
         if self.queue_cap < self.max_batch {
             bail!("queue_cap ({}) < max_batch ({})", self.queue_cap, self.max_batch);
+        }
+        if self.deadline_us > 0 && self.deadline_us <= self.max_wait_us {
+            bail!(
+                "deadline_us ({}) <= max_wait_us ({}): every request would expire \
+                 while waiting for batch-mates",
+                self.deadline_us,
+                self.max_wait_us
+            );
         }
         Ok(())
     }
@@ -446,7 +483,14 @@ mod tests {
 
     #[test]
     fn serve_config_roundtrip() {
-        let c = ServeConfig { max_batch: 8, max_wait_us: 100, workers: 2, queue_cap: 64 };
+        let c = ServeConfig {
+            max_batch: 8,
+            max_wait_us: 100,
+            workers: 2,
+            queue_cap: 64,
+            deadline_us: 20_000,
+            degrade_after: 5,
+        };
         let j = c.to_json();
         assert_eq!(ServeConfig::from_json(&j).unwrap(), c);
     }
@@ -459,6 +503,26 @@ mod tests {
         assert!(c.validate().is_err());
         c = ServeConfig { queue_cap: 1, max_batch: 8, ..ServeConfig::default() };
         assert!(c.validate().is_err());
+        // a deadline tighter than the batching wait sheds everything
+        c = ServeConfig { max_wait_us: 500, deadline_us: 400, ..ServeConfig::default() };
+        assert!(c.validate().is_err());
+        c = ServeConfig { max_wait_us: 500, deadline_us: 5_000, ..ServeConfig::default() };
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn serve_config_new_knobs_cli_and_json() {
+        let args = cli::Args::parse(
+            ["--deadline-us", "30000", "--degrade-after", "2"].iter().map(|s| s.to_string()),
+        );
+        let c = ServeConfig::default().override_with(&args);
+        assert_eq!(c.deadline_us, 30_000);
+        assert_eq!(c.degrade_after, 2);
+        // unspecified keys inherit the base (here: the default 0 / 3)
+        let j = Json::parse(r#"{"deadline_us": 1000}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.deadline_us, 1000);
+        assert_eq!(c.degrade_after, ServeConfig::default().degrade_after);
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! Deterministic fault injection for the serving runtime.
+//!
+//! A seeded [`FaultPlan`] describes which faults to inject and how
+//! often; a [`FaultInjector`] turns it into reproducible per-batch
+//! decisions (a counter-indexed splitmix64 stream, so two runs with the
+//! same seed inject the exact same fault sequence regardless of thread
+//! timing of everything else). Faults supported:
+//!
+//! * **latency** — a batch sleeps `latency_us` before executing,
+//!   exercising deadline shedding and, under sustained load, queue
+//!   pressure (the bounded request queue fills and admission control
+//!   sheds with `QueueFull`);
+//! * **worker panics** — a batch panics inside the worker's
+//!   `catch_unwind` perimeter, exercising panic isolation, the
+//!   deterministic `WorkerPanicked` fail path and Degraded marking;
+//! * **artifact corruption** — [`FaultInjector::corrupt`] flips a
+//!   deterministic payload byte in an artifact image so swap / watch-dir
+//!   paths can rehearse checksum rejection and rollback.
+//!
+//! The hook is zero-cost when disabled: the coordinator holds an
+//! `Option<Arc<FaultInjector>>` and the hot path pays one `None` check.
+//! Injected panics carry the [`InjectedPanic`] marker payload;
+//! [`silence_injected_panics`] keeps them out of stderr while leaving
+//! every real panic's report intact.
+
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Panic payload marker for injected worker panics, so panic hooks and
+/// tests can tell rehearsed faults from real bugs.
+pub struct InjectedPanic;
+
+/// What to inject, how often, and under which seed. Probabilities are
+/// per batch execution in `[0, 1]`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Probability a batch sleeps before executing.
+    pub latency_prob: f64,
+    /// Injected sleep length (µs).
+    pub latency_us: u64,
+    /// Probability a batch panics inside the worker.
+    pub panic_prob: f64,
+}
+
+impl FaultPlan {
+    /// Parse a `key=value,key=value` spec, e.g.
+    /// `seed=7,latency_prob=0.05,latency_us=2000,panic_prob=0.02`.
+    /// Unknown keys and out-of-range probabilities are errors, not
+    /// silently ignored knobs.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((k, v)) = part.split_once('=') else {
+                bail!("bad fault-plan entry '{part}' (want key=value)");
+            };
+            let prob = |v: &str| -> Result<f64> {
+                let p: f64 = v.parse().map_err(|_| {
+                    anyhow::anyhow!("fault-plan '{k}' must be a number, got '{v}'")
+                })?;
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("fault-plan '{k}' must be in [0, 1], got {p}");
+                }
+                Ok(p)
+            };
+            match k {
+                "seed" => plan.seed = v.parse()?,
+                "latency_prob" => plan.latency_prob = prob(v)?,
+                "latency_us" => plan.latency_us = v.parse()?,
+                "panic_prob" => plan.panic_prob = prob(v)?,
+                other => bail!(
+                    "unknown fault-plan key '{other}' \
+                     (allowed: seed, latency_prob, latency_us, panic_prob)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_noop(&self) -> bool {
+        self.latency_prob == 0.0 && self.panic_prob == 0.0
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "seed={} latency {:.1}% x {}µs, panic {:.1}%",
+            self.seed,
+            self.latency_prob * 100.0,
+            self.latency_us,
+            self.panic_prob * 100.0
+        )
+    }
+}
+
+/// Shared, thread-safe decision stream over a [`FaultPlan`]. One
+/// injector serves every pipeline of a registry; each decision consumes
+/// one counter slot, so the full fault sequence is a pure function of
+/// `(seed, decision index)`.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    calls: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector { plan, calls: AtomicU64::new(0) }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Decisions drawn so far (each batch consumes up to two).
+    pub fn decisions(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Next uniform draw in `[0, 1)` — splitmix64 over the seed and a
+    /// global decision counter.
+    fn roll(&self) -> f64 {
+        let n = self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut z = self
+            .plan
+            .seed
+            .wrapping_add(n.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Per-batch hook, called by a worker INSIDE its `catch_unwind`
+    /// perimeter: maybe sleep (latency fault), maybe panic (isolation
+    /// fault). The panic carries [`InjectedPanic`] so hooks can tell it
+    /// apart from real bugs.
+    pub fn perturb_batch(&self) {
+        if self.plan.latency_prob > 0.0 && self.roll() < self.plan.latency_prob {
+            std::thread::sleep(Duration::from_micros(self.plan.latency_us));
+        }
+        if self.plan.panic_prob > 0.0 && self.roll() < self.plan.panic_prob {
+            std::panic::panic_any(InjectedPanic);
+        }
+    }
+
+    /// Deterministically corrupt one artifact payload byte (never the
+    /// first 64 header bytes, so the file still parses far enough to
+    /// reach per-stage checksum validation — the failure mode a torn
+    /// deploy produces).
+    pub fn corrupt(bytes: &mut [u8], seed: u64) {
+        if bytes.len() <= 64 {
+            if let Some(b) = bytes.last_mut() {
+                *b ^= 0xA5;
+            }
+            return;
+        }
+        let span = bytes.len() - 64;
+        let idx = 64 + (seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) % span as u64) as usize;
+        bytes[idx] ^= 0xA5;
+    }
+}
+
+/// Install a panic hook that swallows [`InjectedPanic`] reports (the
+/// rehearsed faults are caught and accounted by the workers; their
+/// default-hook stack traces would drown real diagnostics) while
+/// forwarding every other panic to the previous hook. Idempotent enough
+/// for tests: chaining twice still forwards real panics.
+pub fn silence_injected_panics() {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        if info.payload().is::<InjectedPanic>() {
+            return;
+        }
+        prev(info);
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec_and_defaults() {
+        let p = FaultPlan::parse("seed=7,latency_prob=0.25,latency_us=2000,panic_prob=0.5")
+            .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.latency_us, 2000);
+        assert!((p.latency_prob - 0.25).abs() < 1e-12);
+        assert!(!p.is_noop());
+        // empty spec = noop plan
+        let p = FaultPlan::parse("").unwrap();
+        assert!(p.is_noop());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultPlan::parse("latency_prob=1.5").is_err());
+        assert!(FaultPlan::parse("panic_prob=-0.1").is_err());
+        assert!(FaultPlan::parse("panci_prob=0.1").is_err());
+        assert!(FaultPlan::parse("seed").is_err());
+        assert!(FaultPlan::parse("latency_prob=x").is_err());
+    }
+
+    #[test]
+    fn decision_stream_is_deterministic_and_uniformish() {
+        let a = FaultInjector::new(FaultPlan { seed: 42, ..Default::default() });
+        let b = FaultInjector::new(FaultPlan { seed: 42, ..Default::default() });
+        let xs: Vec<f64> = (0..64).map(|_| a.roll()).collect();
+        let ys: Vec<f64> = (0..64).map(|_| b.roll()).collect();
+        assert_eq!(xs, ys, "same seed must replay the same stream");
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((0.3..0.7).contains(&mean), "suspicious draw stream, mean {mean}");
+        let c = FaultInjector::new(FaultPlan { seed: 43, ..Default::default() });
+        assert_ne!(xs[0], c.roll(), "different seeds must diverge");
+    }
+
+    #[test]
+    fn injected_panic_is_catchable_and_typed() {
+        let inj =
+            FaultInjector::new(FaultPlan { panic_prob: 1.0, seed: 1, ..Default::default() });
+        let err = std::panic::catch_unwind(|| inj.perturb_batch())
+            .expect_err("panic_prob=1 must panic");
+        assert!(err.is::<InjectedPanic>());
+        assert_eq!(inj.decisions(), 1);
+    }
+
+    #[test]
+    fn corrupt_flips_exactly_one_byte_past_the_header() {
+        let clean: Vec<u8> = (0..4096u32).map(|i| (i % 251) as u8).collect();
+        let mut dirty = clean.clone();
+        FaultInjector::corrupt(&mut dirty, 9);
+        let diffs: Vec<usize> =
+            (0..clean.len()).filter(|&i| clean[i] != dirty[i]).collect();
+        assert_eq!(diffs.len(), 1);
+        assert!(diffs[0] >= 64, "header bytes must stay intact");
+        // deterministic: the same seed flips the same byte
+        let mut again = clean.clone();
+        FaultInjector::corrupt(&mut again, 9);
+        assert_eq!(dirty, again);
+    }
+}

@@ -18,6 +18,12 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     pub batches: AtomicU64,
     pub swaps: AtomicU64,
+    /// Requests shed with `DeadlineExceeded`.
+    pub deadline_shed: AtomicU64,
+    /// Requests failed with `WorkerPanicked`.
+    pub panicked: AtomicU64,
+    /// Worker threads restarted by the panic supervisor.
+    pub worker_restarts: AtomicU64,
     batch_items: AtomicU64,
     ops: Mutex<Counters>,
     /// total latency in µs, and per-request samples for percentiles
@@ -33,6 +39,12 @@ pub struct Snapshot {
     pub batches: u64,
     /// Hot-swaps installed over the pipeline's lifetime.
     pub swaps: u64,
+    /// Requests shed with a typed `DeadlineExceeded`.
+    pub deadline_shed: u64,
+    /// Requests failed with a typed `WorkerPanicked`.
+    pub panicked: u64,
+    /// Worker threads restarted by the panic supervisor.
+    pub worker_restarts: u64,
     pub mean_batch: f64,
     pub elapsed_s: f64,
     pub throughput_rps: f64,
@@ -51,6 +63,9 @@ impl Default for Metrics {
             rejected: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             swaps: AtomicU64::new(0),
+            deadline_shed: AtomicU64::new(0),
+            panicked: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
             batch_items: AtomicU64::new(0),
             ops: Mutex::new(Counters::default()),
             latency_us: Mutex::new(Vec::new()),
@@ -92,6 +107,18 @@ impl Metrics {
         self.swaps.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_deadline_shed(&self) {
+        self.deadline_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_panicked(&self, requests: u64) {
+        self.panicked.fetch_add(requests, Ordering::Relaxed);
+    }
+
+    pub fn record_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
@@ -104,6 +131,9 @@ impl Metrics {
             rejected: self.rejected.load(Ordering::Relaxed),
             batches,
             swaps: self.swaps.load(Ordering::Relaxed),
+            deadline_shed: self.deadline_shed.load(Ordering::Relaxed),
+            panicked: self.panicked.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
             mean_batch: if batches > 0 { items as f64 / batches as f64 } else { 0.0 },
             elapsed_s: elapsed,
             throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
@@ -125,6 +155,9 @@ pub struct ModelSnapshot {
     pub version: u64,
     /// `Backend::name` of the installed backend.
     pub backend: String,
+    /// Degraded = the panic supervisor latched `degrade_after`
+    /// consecutive worker panics (cleared by the next swap).
+    pub degraded: bool,
     pub stats: Snapshot,
 }
 
@@ -146,6 +179,23 @@ impl FleetSnapshot {
 
     pub fn swaps(&self) -> u64 {
         self.models.values().map(|m| m.stats.swaps).sum()
+    }
+
+    pub fn deadline_shed(&self) -> u64 {
+        self.models.values().map(|m| m.stats.deadline_shed).sum()
+    }
+
+    pub fn panicked(&self) -> u64 {
+        self.models.values().map(|m| m.stats.panicked).sum()
+    }
+
+    /// Names of models currently marked Degraded, name-sorted.
+    pub fn degraded(&self) -> Vec<&str> {
+        self.models
+            .iter()
+            .filter(|(_, m)| m.degraded)
+            .map(|(n, _)| n.as_str())
+            .collect()
     }
 
     /// Aggregate op mix across every model.
@@ -170,7 +220,13 @@ impl FleetSnapshot {
 impl std::fmt::Display for FleetSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         for (name, m) in &self.models {
-            writeln!(f, "[{name} v{} · {}]", m.version, m.backend)?;
+            writeln!(
+                f,
+                "[{name} v{} · {}{}]",
+                m.version,
+                m.backend,
+                if m.degraded { " · DEGRADED" } else { "" }
+            )?;
             writeln!(f, "{}", m.stats)?;
         }
         write!(
@@ -181,7 +237,12 @@ impl std::fmt::Display for FleetSnapshot {
             self.rejected(),
             self.swaps(),
             self.ops()
-        )
+        )?;
+        let degraded = self.degraded();
+        if !degraded.is_empty() {
+            write!(f, "\nfleet: DEGRADED models: {degraded:?}")?;
+        }
+        Ok(())
     }
 }
 
@@ -192,6 +253,13 @@ impl std::fmt::Display for Snapshot {
             "requests: {} ok, {} rejected | batches: {} (mean {:.1})",
             self.completed, self.rejected, self.batches, self.mean_batch
         )?;
+        if self.deadline_shed > 0 || self.panicked > 0 || self.worker_restarts > 0 {
+            writeln!(
+                f,
+                "faults: {} deadline-shed, {} panic-failed | {} worker restarts",
+                self.deadline_shed, self.panicked, self.worker_restarts
+            )?;
+        }
         writeln!(
             f,
             "latency µs: p50 {:.0}  p95 {:.0}  p99 {:.0} | queue p95 {:.0}",
@@ -253,7 +321,12 @@ mod tests {
                 m.record_request(1.0, 2.0, Counters { lut_evals: 3, ..Default::default() });
             }
             m.record_swap();
-            ModelSnapshot { version: 2, backend: "echo".into(), stats: m.snapshot() }
+            ModelSnapshot {
+                version: 2,
+                backend: "echo".into(),
+                degraded: false,
+                stats: m.snapshot(),
+            }
         };
         let mut fleet = FleetSnapshot::default();
         fleet.models.insert("a".into(), mk(4));
@@ -275,8 +348,42 @@ mod tests {
         let mut fleet = FleetSnapshot::default();
         fleet.models.insert(
             "dirty".into(),
-            ModelSnapshot { version: 1, backend: "x".into(), stats: m.snapshot() },
+            ModelSnapshot {
+                version: 1,
+                backend: "x".into(),
+                degraded: false,
+                stats: m.snapshot(),
+            },
         );
         fleet.assert_multiplier_less();
+    }
+
+    #[test]
+    fn fault_counters_and_degraded_banner_surface() {
+        let m = Metrics::default();
+        m.record_request(1.0, 2.0, Counters::default());
+        // healthy pipeline: no fault line in the snapshot display
+        assert!(!format!("{}", m.snapshot()).contains("faults:"));
+        m.record_deadline_shed();
+        m.record_deadline_shed();
+        m.record_panicked(3);
+        m.record_worker_restart();
+        let s = m.snapshot();
+        assert_eq!((s.deadline_shed, s.panicked, s.worker_restarts), (2, 3, 1));
+        let text = format!("{s}");
+        assert!(text.contains("2 deadline-shed"), "{text}");
+        assert!(text.contains("3 panic-failed"), "{text}");
+
+        let mut fleet = FleetSnapshot::default();
+        fleet.models.insert(
+            "sick".into(),
+            ModelSnapshot { version: 1, backend: "x".into(), degraded: true, stats: s },
+        );
+        assert_eq!(fleet.deadline_shed(), 2);
+        assert_eq!(fleet.panicked(), 3);
+        assert_eq!(fleet.degraded(), vec!["sick"]);
+        let text = format!("{fleet}");
+        assert!(text.contains("[sick v1 · x · DEGRADED]"), "{text}");
+        assert!(text.contains("DEGRADED models: [\"sick\"]"), "{text}");
     }
 }

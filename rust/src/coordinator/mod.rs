@@ -22,8 +22,9 @@
 //!
 //! Invariants (tested, incl. property tests in `rust/tests/`):
 //! * no request is lost or duplicated — every submitted request gets
-//!   exactly one response (or an explicit rejection at submit time),
-//!   including across [`Coordinator::swap`] hot-swaps;
+//!   exactly one response (success or a typed [`ServeError`]),
+//!   including across [`Coordinator::swap`] hot-swaps, worker panics
+//!   and deadline sheds;
 //! * a batch executes entirely on ONE backend version: workers take the
 //!   `(version, backend)` pair once per batch, so a swap installs the
 //!   new version for subsequent batches while in-flight batches finish
@@ -33,8 +34,26 @@
 //!   preserves it end-to-end);
 //! * the engine op counters aggregated in metrics show zero multiplies,
 //!   per model, not just in aggregate.
+//!
+//! Failure semantics (the self-healing layer):
+//! * a request past its [`deadline`](crate::config::ServeConfig::deadline_us)
+//!   is shed with [`ServeError::DeadlineExceeded`] at batch formation or
+//!   right before execution — it never blocks its caller forever;
+//! * a worker panic (backend bug or injected fault) is caught at the
+//!   batch perimeter: every request of the panicked batch fails
+//!   deterministically with [`ServeError::WorkerPanicked`] (failed, not
+//!   re-queued — re-execution could duplicate externally visible work),
+//!   the worker survives with a fresh [`Scratch`], and a supervisor
+//!   restarts the whole loop if bookkeeping itself ever panics;
+//! * after `degrade_after` CONSECUTIVE panics the model is marked
+//!   [`HealthState::Degraded`] (latched until a swap installs a new
+//!   backend; a successful batch resets the streak but not the latch);
+//! * [`Coordinator::swap_checked`] quarantines a candidate backend on a
+//!   golden batch before the version bump and rejects it — incumbent
+//!   untouched — on panic, output-arity mismatch or non-finite logits.
 
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod registry;
 pub mod router;
@@ -43,11 +62,22 @@ use crate::engine::counters::Counters;
 use crate::engine::scratch::Scratch;
 use crate::engine::{BatchInference, LutModel};
 use batcher::{next_batch, BatchPolicy};
+use faults::FaultInjector;
 use metrics::Metrics;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Lock that survives a poisoned mutex: a worker panic between lock and
+/// unlock must not take down every other worker with `PoisonError`
+/// unwraps — the guarded state (channel receiver, slot pair) stays
+/// consistent because all writes to it are single assignments.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Inference backend abstraction: the LUT engine, the PJRT reference
 /// model, or a test double.
@@ -65,6 +95,13 @@ pub trait Backend: Send + Sync + 'static {
     ) -> Vec<InferOutput> {
         let _ = scratch;
         self.infer_batch(images)
+    }
+
+    /// Input row width this backend expects, when known. Used for
+    /// admission checks and golden-batch synthesis in quarantined
+    /// swaps; `None` = unknown/any (the swap self-check is skipped).
+    fn input_features(&self) -> Option<usize> {
+        None
     }
 
     fn name(&self) -> &'static str;
@@ -129,17 +166,27 @@ impl Backend for LutModel {
             .collect()
     }
 
+    fn input_features(&self) -> Option<usize> {
+        LutModel::input_features(self)
+    }
+
     fn name(&self) -> &'static str {
         "lut-engine"
     }
 }
+
+/// What a request's response channel carries: a served [`Response`] or
+/// the typed reason it was not served.
+type Verdict = Result<Response, ServeError>;
 
 /// A queued request (or the shutdown sentinel).
 enum Request {
     Infer {
         image: Vec<f32>,
         enqueued: Instant,
-        resp: SyncSender<Response>,
+        /// Absolute expiry; `None` = no deadline.
+        deadline: Option<Instant>,
+        resp: SyncSender<Verdict>,
     },
     /// Drains the queue up to this point, then stops the pipeline.
     Shutdown,
@@ -176,73 +223,179 @@ impl BackendSlot {
     }
 
     fn get(&self) -> (u64, Arc<dyn Backend>) {
-        let g = self.current.lock().unwrap();
+        let g = lock_unpoisoned(&self.current);
         (g.0, g.1.clone())
     }
 
     fn swap(&self, backend: Arc<dyn Backend>) -> u64 {
-        let mut g = self.current.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.current);
         g.0 += 1;
         g.1 = backend;
         g.0
     }
 }
 
-/// Submission error: the queue is full (backpressure) or the
-/// coordinator has shut down.
-#[derive(Debug, PartialEq, Eq)]
-pub enum SubmitError {
+/// Typed serving error: every way a submitted request can fail to be
+/// served. Nothing here blocks forever and nothing is silently dropped
+/// — each variant is counted in the pipeline's metrics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Shed at admission: the bounded request queue is full
+    /// (backpressure / load-shedding).
     QueueFull,
+    /// Shed in flight: the request's deadline expired after `waited_us`
+    /// µs — at batch formation or right before execution.
+    DeadlineExceeded { waited_us: u64 },
+    /// The worker executing this request's batch panicked; the whole
+    /// batch was failed deterministically (never re-queued — a retry
+    /// could duplicate externally visible work).
+    WorkerPanicked,
+    /// The coordinator has shut down.
     ShutDown,
 }
 
-impl std::fmt::Display for SubmitError {
+/// Pre-fault-tolerance name for [`ServeError`], kept so existing
+/// `SubmitError::{QueueFull, ShutDown}` call sites keep compiling.
+pub type SubmitError = ServeError;
+
+impl std::fmt::Display for ServeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SubmitError::QueueFull => write!(f, "request queue full"),
-            SubmitError::ShutDown => write!(f, "coordinator shut down"),
+            ServeError::QueueFull => write!(f, "request queue full"),
+            ServeError::DeadlineExceeded { waited_us } => {
+                write!(f, "deadline exceeded after {waited_us}µs")
+            }
+            ServeError::WorkerPanicked => write!(f, "worker panicked executing the batch"),
+            ServeError::ShutDown => write!(f, "coordinator shut down"),
         }
     }
 }
 
-impl std::error::Error for SubmitError {}
+impl std::error::Error for ServeError {}
+
+/// Liveness of one model's pipeline as seen by its panic supervisor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    Healthy,
+    /// `degrade_after` consecutive worker panics were observed; latched
+    /// until a swap installs a new backend.
+    Degraded,
+}
+
+/// Consecutive-panic tracker behind [`Coordinator::health`].
+struct Health {
+    consecutive: AtomicU32,
+    degraded: AtomicBool,
+    /// 0 = never auto-degrade.
+    degrade_after: u32,
+}
+
+impl Health {
+    fn new(degrade_after: u32) -> Health {
+        Health {
+            consecutive: AtomicU32::new(0),
+            degraded: AtomicBool::new(false),
+            degrade_after,
+        }
+    }
+
+    /// A batch executed cleanly: the streak resets, but a latched
+    /// Degraded state stays until a new backend is installed (a model
+    /// that panics every Nth request must not flap back to Healthy).
+    fn on_success(&self) {
+        self.consecutive.store(0, Ordering::Relaxed);
+    }
+
+    fn on_panic(&self) {
+        let streak = self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.degrade_after > 0 && streak >= self.degrade_after {
+            self.degraded.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// A swap installed a fresh backend: clean slate.
+    fn reset(&self) {
+        self.consecutive.store(0, Ordering::Relaxed);
+        self.degraded.store(false, Ordering::Relaxed);
+    }
+
+    fn state(&self) -> HealthState {
+        if self.degraded.load(Ordering::Relaxed) {
+            HealthState::Degraded
+        } else {
+            HealthState::Healthy
+        }
+    }
+}
 
 /// Cloneable client handle.
 #[derive(Clone)]
 pub struct Client {
     tx: SyncSender<Request>,
     metrics: Arc<Metrics>,
+    /// Per-request deadline from the pipeline's config; `None` = off.
+    deadline: Option<Duration>,
 }
 
 impl Client {
-    /// Submit and wait for the response. Applies backpressure: fails
-    /// fast with `QueueFull` instead of blocking when saturated.
-    pub fn infer(&self, image: Vec<f32>) -> Result<Response, SubmitError> {
+    fn request(&self, image: Vec<f32>) -> (Request, Receiver<Verdict>) {
         let (rtx, rrx) = sync_channel(1);
-        let req = Request::Infer { image, enqueued: Instant::now(), resp: rtx };
+        let enqueued = Instant::now();
+        let deadline = self.deadline.map(|d| enqueued + d);
+        (Request::Infer { image, enqueued, deadline, resp: rtx }, rrx)
+    }
+
+    fn await_verdict(rrx: Receiver<Verdict>) -> Result<Response, ServeError> {
+        match rrx.recv() {
+            Ok(verdict) => verdict,
+            // pipeline dropped the responder without answering: only
+            // possible on teardown
+            Err(_) => Err(ServeError::ShutDown),
+        }
+    }
+
+    /// Submit and wait for the response. Applies backpressure: fails
+    /// fast with `QueueFull` instead of blocking when saturated; a
+    /// configured deadline bounds the wait with `DeadlineExceeded`.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Response, ServeError> {
+        let (req, rrx) = self.request(image);
         match self.tx.try_send(req) {
             Ok(()) => {}
             Err(TrySendError::Full(_)) => {
                 self.metrics.record_rejection();
-                return Err(SubmitError::QueueFull);
+                return Err(ServeError::QueueFull);
             }
-            Err(TrySendError::Disconnected(_)) => return Err(SubmitError::ShutDown),
+            Err(TrySendError::Disconnected(_)) => return Err(ServeError::ShutDown),
         }
-        rrx.recv().map_err(|_| SubmitError::ShutDown)
+        Self::await_verdict(rrx)
     }
 
     /// Blocking submit (no fail-fast), still bounded by the queue.
-    pub fn infer_blocking(&self, image: Vec<f32>) -> Result<Response, SubmitError> {
-        let (rtx, rrx) = sync_channel(1);
-        let req = Request::Infer { image, enqueued: Instant::now(), resp: rtx };
-        self.tx.send(req).map_err(|_| SubmitError::ShutDown)?;
-        rrx.recv().map_err(|_| SubmitError::ShutDown)
+    pub fn infer_blocking(&self, image: Vec<f32>) -> Result<Response, ServeError> {
+        let (req, rrx) = self.request(image);
+        self.tx.send(req).map_err(|_| ServeError::ShutDown)?;
+        Self::await_verdict(rrx)
     }
 
     pub fn metrics(&self) -> metrics::Snapshot {
         self.metrics.snapshot()
     }
 }
+
+/// A rejected quarantined swap: why the candidate backend was not
+/// installed. The incumbent version is untouched and keeps serving.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SwapRejection {
+    pub reason: String,
+}
+
+impl std::fmt::Display for SwapRejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "swap rejected: {}", self.reason)
+    }
+}
+
+impl std::error::Error for SwapRejection {}
 
 /// The running coordinator: one model's batching pipeline around a
 /// hot-swappable [`BackendSlot`]. Call [`Coordinator::shutdown`] to
@@ -251,15 +404,28 @@ impl Client {
 pub struct Coordinator {
     client: Client,
     slot: Arc<BackendSlot>,
+    health: Arc<Health>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl Coordinator {
     /// Start with the given backend (installed as version 1) and
-    /// serving config.
+    /// serving config. No fault injection.
     pub fn start(backend: Arc<dyn Backend>, cfg: &crate::config::ServeConfig) -> Coordinator {
+        Coordinator::start_with_faults(backend, cfg, None)
+    }
+
+    /// Start with an optional deterministic [`FaultInjector`] hooked
+    /// into the workers (chaos testing). `None` costs the hot path one
+    /// branch.
+    pub fn start_with_faults(
+        backend: Arc<dyn Backend>,
+        cfg: &crate::config::ServeConfig,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Coordinator {
         let metrics = Arc::new(Metrics::default());
         let slot = Arc::new(BackendSlot::new(backend));
+        let health = Arc::new(Health::new(cfg.degrade_after));
         let (req_tx, req_rx) = sync_channel::<Request>(cfg.queue_cap);
         let (batch_tx, batch_rx) =
             sync_channel::<Vec<WorkItem>>(cfg.workers * 2);
@@ -274,17 +440,26 @@ impl Coordinator {
                 batcher_loop(req_rx, batch_tx, policy, metrics);
             }));
         }
-        // worker pool
+        // worker pool, each under a restart supervisor
         for _ in 0..cfg.workers {
             let slot = slot.clone();
             let metrics = metrics.clone();
             let batch_rx = batch_rx.clone();
+            let health = health.clone();
+            let faults = faults.clone();
             handles.push(std::thread::spawn(move || {
-                worker_loop(batch_rx, slot, metrics);
+                supervised_worker(batch_rx, slot, metrics, health, faults);
             }));
         }
 
-        Coordinator { client: Client { tx: req_tx, metrics }, slot, handles }
+        let deadline =
+            (cfg.deadline_us > 0).then(|| Duration::from_micros(cfg.deadline_us));
+        Coordinator {
+            client: Client { tx: req_tx, metrics, deadline },
+            slot,
+            health,
+            handles,
+        }
     }
 
     pub fn client(&self) -> Client {
@@ -295,10 +470,74 @@ impl Coordinator {
     /// version. All batches taken after this call execute on the new
     /// backend; batches already in flight finish on the old one (their
     /// workers hold its Arc). No request is lost — the queue and the
-    /// pipeline threads are untouched. Returns the new version number.
+    /// pipeline threads are untouched. Clears a Degraded state (the
+    /// panicking backend is gone). Returns the new version number.
     pub fn swap(&self, backend: Arc<dyn Backend>) -> u64 {
         self.client.metrics.record_swap();
-        self.slot.swap(backend)
+        let v = self.slot.swap(backend);
+        self.health.reset();
+        v
+    }
+
+    /// Quarantined hot-swap: run the candidate on `golden` rows BEFORE
+    /// the version bump and reject it — incumbent untouched, still
+    /// serving — if it panics, returns the wrong number of outputs,
+    /// produces non-finite logits, or changes the logit arity the
+    /// incumbent established. An empty `golden` skips the self-check
+    /// (callers without known input geometry fall back to a raw swap).
+    ///
+    /// The self-check runs inline on the caller (control-plane) thread,
+    /// never on the serving workers.
+    pub fn swap_checked(
+        &self,
+        backend: Arc<dyn Backend>,
+        golden: &[Vec<f32>],
+    ) -> Result<u64, SwapRejection> {
+        if !golden.is_empty() {
+            let candidate = backend.clone();
+            let outputs = catch_unwind(AssertUnwindSafe(|| candidate.infer_batch(golden)))
+                .map_err(|_| SwapRejection {
+                    reason: "candidate panicked on the golden batch".to_string(),
+                })?;
+            let reject = |reason: String| Err(SwapRejection { reason });
+            if outputs.len() != golden.len() {
+                return reject(format!(
+                    "candidate returned {} outputs for {} golden rows",
+                    outputs.len(),
+                    golden.len()
+                ));
+            }
+            for (i, out) in outputs.iter().enumerate() {
+                if out.logits.is_empty() {
+                    return reject(format!("candidate produced no logits on golden row {i}"));
+                }
+                if out.logits.iter().any(|v| !v.is_finite()) {
+                    return reject(format!(
+                        "candidate produced non-finite logits on golden row {i}"
+                    ));
+                }
+            }
+            // arity check against the incumbent: clients already consume
+            // its logit shape. Logit VALUES are allowed to differ — a
+            // new version legitimately changes them. A panicking
+            // incumbent (why we're swapping) skips the comparison.
+            let (_, incumbent) = self.slot.get();
+            if let Ok(reference) =
+                catch_unwind(AssertUnwindSafe(|| incumbent.infer_batch(golden)))
+            {
+                for (i, (cand, inc)) in outputs.iter().zip(&reference).enumerate() {
+                    if cand.logits.len() != inc.logits.len() {
+                        return reject(format!(
+                            "logit arity changed on golden row {i}: incumbent {} vs \
+                             candidate {}",
+                            inc.logits.len(),
+                            cand.logits.len()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(self.swap(backend))
     }
 
     /// Currently installed backend version (1 = initial).
@@ -318,6 +557,17 @@ impl Coordinator {
         self.slot.get().1.name()
     }
 
+    /// `Backend::input_features` of the currently installed backend.
+    pub fn input_features(&self) -> Option<usize> {
+        self.slot.get().1.input_features()
+    }
+
+    /// Supervisor's view of the pipeline: Healthy, or Degraded after
+    /// `degrade_after` consecutive worker panics (latched until a swap).
+    pub fn health(&self) -> HealthState {
+        self.health.state()
+    }
+
     /// Graceful shutdown: requests queued before this call are served,
     /// then the pipeline stops and all threads are joined.
     pub fn shutdown(mut self) -> metrics::Snapshot {
@@ -328,6 +578,19 @@ impl Coordinator {
             let _ = h.join();
         }
         metrics.snapshot()
+    }
+}
+
+/// Shed `item` with a typed deadline error if it has expired.
+fn shed_if_expired(item: WorkItem, metrics: &Metrics) -> Option<WorkItem> {
+    match item.deadline {
+        Some(d) if Instant::now() >= d => {
+            metrics.record_deadline_shed();
+            let waited_us = item.enqueued.elapsed().as_micros() as u64;
+            let _ = item.resp.send(Err(ServeError::DeadlineExceeded { waited_us }));
+            None
+        }
+        _ => Some(item),
     }
 }
 
@@ -342,8 +605,14 @@ fn batcher_loop(
         let mut stop = false;
         for req in batch {
             match req {
-                Request::Infer { image, enqueued, resp } => {
-                    items.push((image, enqueued, resp))
+                Request::Infer { image, enqueued, deadline, resp } => {
+                    // deadline gate #1: a request that expired while
+                    // queued is shed here instead of wasting a batch
+                    // slot (typed response, counted, caller unblocked)
+                    let item = WorkItem { image, enqueued, deadline, resp };
+                    if let Some(live) = shed_if_expired(item, &metrics) {
+                        items.push(live);
+                    }
                 }
                 Request::Shutdown => {
                     stop = true;
@@ -364,12 +633,41 @@ fn batcher_loop(
     // tx drops here; workers drain remaining batches and exit
 }
 
-type WorkItem = (Vec<f32>, Instant, SyncSender<Response>);
+struct WorkItem {
+    image: Vec<f32>,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    resp: SyncSender<Verdict>,
+}
 
-fn worker_loop(
+/// Worker under a restart supervisor: a panic that escapes the
+/// per-batch `catch_unwind` (bookkeeping bug, poisoned lock recovery
+/// path) restarts the loop with fresh state instead of silently
+/// shrinking the worker pool. Returns when the batch channel closes.
+fn supervised_worker(
     rx: Arc<Mutex<Receiver<Vec<WorkItem>>>>,
     slot: Arc<BackendSlot>,
     metrics: Arc<Metrics>,
+    health: Arc<Health>,
+    faults: Option<Arc<FaultInjector>>,
+) {
+    loop {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            worker_loop(&rx, &slot, &metrics, &health, faults.as_deref())
+        }));
+        match run {
+            Ok(()) => break, // clean exit: pipeline shut down
+            Err(_) => metrics.record_worker_restart(),
+        }
+    }
+}
+
+fn worker_loop(
+    rx: &Mutex<Receiver<Vec<WorkItem>>>,
+    slot: &BackendSlot,
+    metrics: &Metrics,
+    health: &Health,
+    faults: Option<&FaultInjector>,
 ) {
     // worker-owned scratch: all batched-engine intermediates live here
     // and are reused for the lifetime of the worker — across hot-swaps
@@ -377,34 +675,77 @@ fn worker_loop(
     let mut scratch = Scratch::new();
     loop {
         let batch = {
-            let guard = rx.lock().unwrap();
+            let guard = lock_unpoisoned(rx);
             guard.recv()
         };
         let Ok(batch) = batch else { break };
         let start = Instant::now();
-        // split payloads from bookkeeping without copying image data
+        // deadline gate #2: shed items that expired while the batch sat
+        // in the batch queue, then split payloads from bookkeeping
+        // without copying image data
         let mut images = Vec::with_capacity(batch.len());
         let mut meta = Vec::with_capacity(batch.len());
-        for (img, enqueued, resp) in batch {
-            images.push(img);
-            meta.push((enqueued, resp));
+        for item in batch {
+            if let Some(live) = shed_if_expired(item, metrics) {
+                images.push(live.image);
+                meta.push((live.enqueued, live.resp));
+            }
+        }
+        if images.is_empty() {
+            continue;
         }
         // ONE (version, backend) pair for the whole batch: a concurrent
         // swap changes later batches, never splits this one
         let (version, backend) = slot.get();
-        let outputs = backend.infer_batch_scratch(&images, &mut scratch);
-        debug_assert_eq!(outputs.len(), meta.len());
-        for ((enqueued, resp), out) in meta.into_iter().zip(outputs) {
-            let queue_us = (start - enqueued).as_micros() as u64;
-            let total_us = enqueued.elapsed().as_micros() as u64;
-            metrics.record_request(queue_us as f64, total_us as f64, out.counters);
-            let _ = resp.send(Response {
-                class: out.class,
-                logits: out.logits,
-                version,
-                queue_us,
-                total_us,
-            });
+        // panic perimeter: a backend bug (or injected fault) must cost
+        // exactly this batch, deterministically, not the worker thread
+        let executed = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(f) = faults {
+                f.perturb_batch();
+            }
+            backend.infer_batch_scratch(&images, &mut scratch)
+        }));
+        let outputs = match executed {
+            Ok(outputs) => outputs,
+            Err(payload) => {
+                // fail the whole batch with a typed error — never
+                // re-queue (a retry could duplicate externally visible
+                // work), never leave a caller blocked
+                health.on_panic();
+                metrics.record_panicked(meta.len() as u64);
+                for (_, resp) in meta {
+                    let _ = resp.send(Err(ServeError::WorkerPanicked));
+                }
+                // the panic may have left half-written intermediates
+                scratch = Scratch::new();
+                drop(payload);
+                continue;
+            }
+        };
+        health.on_success();
+        let mut outs = outputs.into_iter();
+        for (enqueued, resp) in meta {
+            match outs.next() {
+                Some(out) => {
+                    let queue_us = (start - enqueued).as_micros() as u64;
+                    let total_us = enqueued.elapsed().as_micros() as u64;
+                    metrics.record_request(queue_us as f64, total_us as f64, out.counters);
+                    let _ = resp.send(Ok(Response {
+                        class: out.class,
+                        logits: out.logits,
+                        version,
+                        queue_us,
+                        total_us,
+                    }));
+                }
+                // a misbehaving backend returned too few outputs: the
+                // unmatched callers still get exactly one (typed)
+                // response instead of hanging on a dropped channel
+                None => {
+                    metrics.record_panicked(1);
+                    let _ = resp.send(Err(ServeError::WorkerPanicked));
+                }
+            }
         }
     }
 }
@@ -463,7 +804,13 @@ mod tests {
     fn serves_many_requests_from_many_threads() {
         let coord = Coordinator::start(
             Arc::new(Echo),
-            &ServeConfig { max_batch: 8, max_wait_us: 200, workers: 2, queue_cap: 256 },
+            &ServeConfig {
+                max_batch: 8,
+                max_wait_us: 200,
+                workers: 2,
+                queue_cap: 256,
+                ..ServeConfig::default()
+            },
         );
         let mut joins = Vec::new();
         for t in 0..4 {
@@ -493,7 +840,13 @@ mod tests {
     fn backpressure_rejects_when_saturated() {
         let coord = Coordinator::start(
             Arc::new(Slow),
-            &ServeConfig { max_batch: 1, max_wait_us: 10, workers: 1, queue_cap: 2 },
+            &ServeConfig {
+                max_batch: 1,
+                max_wait_us: 10,
+                workers: 1,
+                queue_cap: 2,
+                ..ServeConfig::default()
+            },
         );
         let client = coord.client();
         let mut rejected = 0;
@@ -595,7 +948,13 @@ mod tests {
     fn swap_loses_no_requests_under_load() {
         let coord = Coordinator::start(
             Arc::new(VersionEcho(1)),
-            &ServeConfig { max_batch: 8, max_wait_us: 100, workers: 2, queue_cap: 512 },
+            &ServeConfig {
+                max_batch: 8,
+                max_wait_us: 100,
+                workers: 2,
+                queue_cap: 512,
+                ..ServeConfig::default()
+            },
         );
         let mut joins = Vec::new();
         for _ in 0..4 {
@@ -639,7 +998,13 @@ mod tests {
         // interleave many distinct values; every caller must get its own
         let coord = Coordinator::start(
             Arc::new(Echo),
-            &ServeConfig { max_batch: 16, max_wait_us: 500, workers: 1, queue_cap: 64 },
+            &ServeConfig {
+                max_batch: 16,
+                max_wait_us: 500,
+                workers: 1,
+                queue_cap: 64,
+                ..ServeConfig::default()
+            },
         );
         let client = coord.client();
         let results: Vec<(usize, usize)> = (0..32)
@@ -652,5 +1017,144 @@ mod tests {
             assert_eq!(want, got);
         }
         coord.shutdown();
+    }
+
+    #[test]
+    fn expired_requests_are_shed_with_a_typed_error() {
+        // one Slow worker: request A occupies it for ~30ms; request B
+        // (10ms deadline) expires in the batch queue and must come back
+        // as DeadlineExceeded instead of blocking its caller
+        let coord = Coordinator::start(
+            Arc::new(Slow),
+            &ServeConfig {
+                max_batch: 1,
+                max_wait_us: 100,
+                workers: 1,
+                queue_cap: 16,
+                deadline_us: 10_000,
+                degrade_after: 0,
+            },
+        );
+        let client = coord.client();
+        let c = client.clone();
+        let first = std::thread::spawn(move || c.infer_blocking(vec![1.0]));
+        std::thread::sleep(Duration::from_millis(5));
+        match client.infer_blocking(vec![2.0]) {
+            Err(ServeError::DeadlineExceeded { waited_us }) => {
+                assert!(waited_us >= 10_000, "shed before its deadline: {waited_us}µs")
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        let first = first.join().unwrap();
+        let snap = coord.shutdown();
+        // exactly one verdict each, nothing lost: A served (or itself
+        // shed on a pathologically slow machine), B shed
+        assert!(snap.deadline_shed >= 1, "{snap:?}");
+        assert_eq!(snap.completed + snap.deadline_shed, 2);
+        assert_eq!(first.is_ok(), snap.completed == 1);
+    }
+
+    /// Panics (with the typed marker) when image[0] < 0, else echoes.
+    struct Grenade;
+
+    impl Backend for Grenade {
+        fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+            if images.iter().any(|img| img[0] < 0.0) {
+                std::panic::panic_any(faults::InjectedPanic);
+            }
+            Echo.infer_batch(images)
+        }
+
+        fn name(&self) -> &'static str {
+            "grenade"
+        }
+    }
+
+    #[test]
+    fn worker_panics_fail_the_batch_and_latch_degraded() {
+        faults::silence_injected_panics();
+        let coord = Coordinator::start(
+            Arc::new(Grenade),
+            &ServeConfig {
+                max_batch: 1,
+                max_wait_us: 100,
+                workers: 1,
+                queue_cap: 16,
+                deadline_us: 0,
+                degrade_after: 2,
+            },
+        );
+        let client = coord.client();
+        // a panicked batch fails deterministically; the worker survives
+        assert_eq!(client.infer_blocking(vec![3.0]).unwrap().class, 3);
+        assert_eq!(client.infer_blocking(vec![-1.0]).unwrap_err(), ServeError::WorkerPanicked);
+        assert_eq!(coord.health(), HealthState::Healthy, "one panic is not a streak");
+        // a clean batch resets the streak...
+        assert_eq!(client.infer_blocking(vec![4.0]).unwrap().class, 4);
+        assert_eq!(client.infer_blocking(vec![-1.0]).unwrap_err(), ServeError::WorkerPanicked);
+        assert_eq!(coord.health(), HealthState::Healthy);
+        // ...but two CONSECUTIVE panics latch Degraded
+        assert_eq!(client.infer_blocking(vec![-1.0]).unwrap_err(), ServeError::WorkerPanicked);
+        assert_eq!(coord.health(), HealthState::Degraded);
+        // latched: a later success still serves but does not clear it
+        assert_eq!(client.infer_blocking(vec![5.0]).unwrap().class, 5);
+        assert_eq!(coord.health(), HealthState::Degraded);
+        // a swap installs a new backend and clears the latch
+        coord.swap(Arc::new(Echo));
+        assert_eq!(coord.health(), HealthState::Healthy);
+        assert_eq!(client.infer_blocking(vec![6.0]).unwrap().class, 6);
+
+        let snap = coord.shutdown();
+        assert_eq!(snap.panicked, 3);
+        assert_eq!(snap.completed, 4);
+        assert_eq!(snap.completed + snap.panicked, 7, "a verdict went missing");
+    }
+
+    /// Candidate producing a fixed logit arity.
+    struct Arity(usize);
+
+    impl Backend for Arity {
+        fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+            images
+                .iter()
+                .map(|_| InferOutput {
+                    class: 0,
+                    logits: vec![0.5; self.0],
+                    counters: Counters::default(),
+                })
+                .collect()
+        }
+
+        fn name(&self) -> &'static str {
+            "arity"
+        }
+    }
+
+    #[test]
+    fn quarantined_swap_rejects_bad_candidates_and_keeps_incumbent() {
+        faults::silence_injected_panics();
+        let coord = Coordinator::start(Arc::new(Arity(1)), &ServeConfig::default());
+        let client = coord.client();
+        let golden = vec![vec![0.1], vec![0.9]];
+
+        // panicking candidate: rejected, incumbent untouched
+        let err = coord.swap_checked(Arc::new(Grenade), &[vec![-1.0]]).unwrap_err();
+        assert!(err.reason.contains("panicked"), "{err}");
+        assert_eq!(coord.version(), 1);
+        assert!(client.infer_blocking(vec![0.2]).is_ok());
+
+        // arity change: clients consume the incumbent's logit shape
+        let err = coord.swap_checked(Arc::new(Arity(3)), &golden).unwrap_err();
+        assert!(err.reason.contains("arity"), "{err}");
+        assert_eq!(coord.version(), 1);
+
+        // well-behaved candidate passes quarantine
+        assert_eq!(coord.swap_checked(Arc::new(Arity(1)), &golden).unwrap(), 2);
+        assert_eq!(client.infer_blocking(vec![0.2]).unwrap().version, 2);
+
+        // empty golden batch = explicit raw-swap fallback
+        assert_eq!(coord.swap_checked(Arc::new(Arity(7)), &[]).unwrap(), 3);
+        let snap = coord.shutdown();
+        assert_eq!(snap.swaps, 2);
     }
 }

@@ -21,9 +21,10 @@
 
 pub mod watcher;
 
+use super::faults::FaultInjector;
 use super::metrics::{FleetSnapshot, ModelSnapshot, Snapshot};
 use super::router::FleetClient;
-use super::{Backend, Coordinator};
+use super::{Backend, Coordinator, HealthState};
 use crate::config::ServeConfig;
 use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
@@ -35,6 +36,9 @@ pub enum RegistryError {
     DuplicateModel(String),
     UnknownModel(String),
     InvalidConfig(String),
+    /// A quarantined swap failed its golden-batch self-check; the
+    /// incumbent version is untouched and keeps serving.
+    SwapRejected { model: String, reason: String },
 }
 
 impl std::fmt::Display for RegistryError {
@@ -45,11 +49,23 @@ impl std::fmt::Display for RegistryError {
             }
             RegistryError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
             RegistryError::InvalidConfig(e) => write!(f, "invalid serve config: {e}"),
+            RegistryError::SwapRejected { model, reason } => {
+                write!(f, "swap of '{model}' rejected (incumbent keeps serving): {reason}")
+            }
         }
     }
 }
 
 impl std::error::Error for RegistryError {}
+
+/// Deterministic golden rows for quarantined swaps: the candidate must
+/// survive these before it replaces the incumbent. Empty when the input
+/// width is unknown (no basis to synthesize rows).
+fn golden_rows(features: Option<usize>) -> Vec<Vec<f32>> {
+    let Some(f) = features else { return Vec::new() };
+    let mut rng = crate::util::Rng::new(0x601D_BA7C);
+    (0..4).map(|_| (0..f).map(|_| rng.f32()).collect()).collect()
+}
 
 /// One registered model: its running pipeline plus the config it was
 /// started with.
@@ -62,6 +78,9 @@ pub(super) struct ModelEntry {
 /// [`FleetClient`].
 pub(super) struct RegistryShared {
     pub(super) models: RwLock<BTreeMap<String, ModelEntry>>,
+    /// Fault-injection hook handed to every pipeline started through
+    /// this registry; `None` in production (zero cost on the hot path).
+    pub(super) faults: Option<Arc<FaultInjector>>,
 }
 
 /// Identity card of a registered model at listing time.
@@ -101,7 +120,23 @@ impl ModelRegistry {
     /// An empty fleet; add models with [`ModelRegistry::register`].
     pub fn new() -> ModelRegistry {
         ModelRegistry {
-            shared: Arc::new(RegistryShared { models: RwLock::new(BTreeMap::new()) }),
+            shared: Arc::new(RegistryShared {
+                models: RwLock::new(BTreeMap::new()),
+                faults: None,
+            }),
+        }
+    }
+
+    /// An empty fleet whose pipelines all run under `faults` — the
+    /// chaos-testing entry point. Fault decisions come from one shared
+    /// injector, so the full fault sequence across the fleet is
+    /// reproducible from the plan's seed.
+    pub fn with_faults(faults: Arc<FaultInjector>) -> ModelRegistry {
+        ModelRegistry {
+            shared: Arc::new(RegistryShared {
+                models: RwLock::new(BTreeMap::new()),
+                faults: Some(faults),
+            }),
         }
     }
 
@@ -122,7 +157,14 @@ impl ModelRegistry {
         }
         models.insert(
             name.to_string(),
-            ModelEntry { coord: Coordinator::start(backend, cfg), cfg: cfg.clone() },
+            ModelEntry {
+                coord: Coordinator::start_with_faults(
+                    backend,
+                    cfg,
+                    self.shared.faults.clone(),
+                ),
+                cfg: cfg.clone(),
+            },
         );
         Ok(())
     }
@@ -136,6 +178,30 @@ impl ModelRegistry {
             .get(name)
             .ok_or_else(|| RegistryError::UnknownModel(name.to_string()))?;
         Ok(entry.coord.swap(backend))
+    }
+
+    /// Quarantined hot-swap: before the version bump, the candidate
+    /// backend must run a deterministic golden batch without panicking
+    /// and produce well-formed outputs (see
+    /// [`Coordinator::swap_checked`]). On rejection the incumbent keeps
+    /// serving at its current version and the error names the reason.
+    /// A successful swap also clears a `Degraded` health latch.
+    pub fn swap_quarantined(
+        &self,
+        name: &str,
+        backend: Arc<dyn Backend>,
+    ) -> Result<u64, RegistryError> {
+        let models = self.shared.models.read().unwrap();
+        let entry = models
+            .get(name)
+            .ok_or_else(|| RegistryError::UnknownModel(name.to_string()))?;
+        // Prefer the candidate's own declared input width; fall back to
+        // the incumbent's so opaque probe backends still get screened.
+        let features = backend.input_features().or_else(|| entry.coord.input_features());
+        let golden = golden_rows(features);
+        entry.coord.swap_checked(backend, &golden).map_err(|e| {
+            RegistryError::SwapRejected { model: name.to_string(), reason: e.to_string() }
+        })
     }
 
     /// Drain `name`'s pipeline (every accepted request is served) and
@@ -198,6 +264,7 @@ impl ModelRegistry {
                 ModelSnapshot {
                     version: e.coord.version(),
                     backend: e.coord.backend_name().to_string(),
+                    degraded: e.coord.health() == HealthState::Degraded,
                     stats: e.coord.client().metrics(),
                 },
             );
@@ -212,9 +279,10 @@ impl ModelRegistry {
         for (name, e) in std::mem::take(&mut *models) {
             let version = e.coord.version();
             let backend = e.coord.backend_name().to_string();
+            let degraded = e.coord.health() == HealthState::Degraded;
             fleet.models.insert(
                 name,
-                ModelSnapshot { version, backend, stats: e.coord.shutdown() },
+                ModelSnapshot { version, backend, degraded, stats: e.coord.shutdown() },
             );
         }
         fleet
@@ -327,5 +395,64 @@ mod tests {
         assert_eq!(fleet.models["b"].stats.ops.lut_evals, 1);
         assert_eq!(fleet.completed(), 4);
         reg.shutdown();
+    }
+
+    /// Backend that panics on every batch — a broken candidate build.
+    struct Exploding;
+
+    impl Backend for Exploding {
+        fn infer_batch(&self, _images: &[Vec<f32>]) -> Vec<InferOutput> {
+            panic!("candidate build is broken");
+        }
+
+        fn name(&self) -> &'static str {
+            "exploding"
+        }
+
+        fn input_features(&self) -> Option<usize> {
+            Some(1)
+        }
+    }
+
+    #[test]
+    fn quarantined_swap_rejects_broken_candidate_and_keeps_incumbent() {
+        super::super::faults::silence_injected_panics();
+        let reg = ModelRegistry::new();
+        reg.register("m", Arc::new(Fixed(3)), &ServeConfig::default()).unwrap();
+        let client = reg.client();
+        assert_eq!(client.infer("m", vec![0.0]).unwrap().class, 3);
+
+        let err = reg.swap_quarantined("m", Arc::new(Exploding)).unwrap_err();
+        match &err {
+            RegistryError::SwapRejected { model, reason } => {
+                assert_eq!(model, "m");
+                assert!(reason.contains("panicked"), "reason: {reason}");
+            }
+            other => panic!("expected SwapRejected, got {other:?}"),
+        }
+        // incumbent untouched: same version, still serving
+        let r = client.infer("m", vec![0.0]).unwrap();
+        assert_eq!((r.class, r.version), (3, 1));
+
+        // a healthy candidate passes quarantine and bumps the version
+        assert_eq!(reg.swap_quarantined("m", Arc::new(Fixed(8))).unwrap(), 2);
+        let r = client.infer("m", vec![0.0]).unwrap();
+        assert_eq!((r.class, r.version), (8, 2));
+
+        assert!(matches!(
+            reg.swap_quarantined("nope", Arc::new(Fixed(0))),
+            Err(RegistryError::UnknownModel(_))
+        ));
+        reg.shutdown();
+    }
+
+    #[test]
+    fn golden_rows_are_deterministic_and_sized() {
+        assert!(golden_rows(None).is_empty());
+        let a = golden_rows(Some(5));
+        let b = golden_rows(Some(5));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        assert!(a.iter().all(|row| row.len() == 5));
     }
 }

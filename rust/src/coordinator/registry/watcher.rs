@@ -19,8 +19,18 @@
 //! checksum ([`artifact::content_fingerprint`], O(header)) decides
 //! whether content actually changed — a bare `touch` does not redeploy.
 //! A file that fails to parse is reported once ([`WatchEvent::Failed`])
-//! and retried only after it changes again, so a half-copied artifact
-//! heals on the next poll after the copy completes.
+//! and retried with **capped exponential backoff** (see
+//! [`WatcherOptions::retry_base`]): the first retry after ~500ms, then
+//! doubling up to a 30s cap, so a permanently-bad artifact costs a few
+//! load attempts per minute instead of one per poll, while an artifact
+//! healed in place (same stat, fixed bytes) deploys on the next retry
+//! without waiting for an mtime change. Repeat failures with the SAME
+//! error stay silent; the error is re-reported when it changes.
+//!
+//! Watcher-driven swaps are **quarantined**
+//! ([`ModelRegistry::swap_quarantined`]): the candidate must survive a
+//! golden batch before the version bump, and a rejected candidate
+//! leaves the incumbent serving.
 //!
 //! **Replacing a live model must be an atomic rename** (copy to a temp
 //! name — anything not `*.ltm` is ignored — then `mv` over the stem):
@@ -41,7 +51,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, SystemTime};
+use std::time::{Duration, Instant, SystemTime};
 
 /// One observed deploy action (or failure) from a directory scan.
 #[derive(Debug, Clone)]
@@ -96,11 +106,21 @@ pub struct WatcherOptions {
     pub serve_cfg: ServeConfig,
     /// Directory poll interval.
     pub poll: Duration,
+    /// First retry delay after a file fails to deploy; each consecutive
+    /// failure doubles it.
+    pub retry_base: Duration,
+    /// Ceiling for the doubled retry delay.
+    pub retry_cap: Duration,
 }
 
 impl Default for WatcherOptions {
     fn default() -> Self {
-        WatcherOptions { serve_cfg: ServeConfig::default(), poll: Duration::from_millis(200) }
+        WatcherOptions {
+            serve_cfg: ServeConfig::default(),
+            poll: Duration::from_millis(200),
+            retry_base: Duration::from_millis(500),
+            retry_cap: Duration::from_secs(30),
+        }
     }
 }
 
@@ -111,6 +131,27 @@ struct FileState {
     /// Content fingerprint of the deployed artifact; `None` while the
     /// current file content is known-bad (parse/deploy failure).
     fingerprint: Option<u64>,
+    /// Consecutive deploy failures of this stem (0 once deployed).
+    failures: u32,
+    /// Next retry of a known-bad file (capped exponential backoff);
+    /// `None` once deployed.
+    retry_at: Option<Instant>,
+    /// Error of the last failed attempt; repeat failures with the same
+    /// error are retried silently, a changed error is re-reported.
+    last_error: Option<String>,
+}
+
+impl FileState {
+    fn deployed(mtime: Option<SystemTime>, len: u64, fingerprint: u64) -> FileState {
+        FileState {
+            mtime,
+            len,
+            fingerprint: Some(fingerprint),
+            failures: 0,
+            retry_at: None,
+            last_error: None,
+        }
+    }
 }
 
 /// The synchronous scan engine behind [`DirWatcher`]: one call = one
@@ -123,11 +164,40 @@ pub struct DirScanner {
     /// Last directory-level read error, reported once (not once per
     /// poll) until the directory becomes readable again.
     dir_error: Option<String>,
+    retry_base: Duration,
+    retry_cap: Duration,
+    retries: u64,
 }
 
 impl DirScanner {
     pub fn new(dir: impl Into<PathBuf>, cfg: ServeConfig) -> DirScanner {
-        DirScanner { dir: dir.into(), cfg, seen: BTreeMap::new(), dir_error: None }
+        DirScanner {
+            dir: dir.into(),
+            cfg,
+            seen: BTreeMap::new(),
+            dir_error: None,
+            retry_base: Duration::from_millis(500),
+            retry_cap: Duration::from_secs(30),
+            retries: 0,
+        }
+    }
+
+    /// Override the failure-retry backoff (first delay `base`, doubling
+    /// per consecutive failure up to `cap`).
+    pub fn with_backoff(mut self, base: Duration, cap: Duration) -> DirScanner {
+        self.retry_base = base;
+        self.retry_cap = cap;
+        self
+    }
+
+    /// Backoff-driven re-attempts of known-bad files so far.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    fn backoff(&self, failures: u32) -> Duration {
+        let exp = failures.saturating_sub(1).min(16);
+        (self.retry_base * 2u32.pow(exp)).min(self.retry_cap)
     }
 
     /// One directory pass: register new `.ltm` stems, swap changed
@@ -164,34 +234,65 @@ impl DirScanner {
             };
             let mtime = meta.modified().ok();
             let len = meta.len();
-            if let Some(st) = self.seen.get(&name) {
-                if st.mtime == mtime && st.len == len {
-                    continue; // untouched since last look
+            let now = Instant::now();
+            let (prev_failures, prev_error) = match self.seen.get(&name) {
+                Some(st) => {
+                    if st.mtime == mtime && st.len == len {
+                        // untouched since last look: deployed files are
+                        // done; known-bad files are re-attempted once
+                        // their backoff window expires, so a file fixed
+                        // in place (same stat, healed bytes) deploys
+                        // without waiting for an mtime change
+                        match st.retry_at {
+                            Some(t) if now >= t => self.retries += 1,
+                            _ => continue,
+                        }
+                    }
+                    (st.failures, st.last_error.clone())
                 }
-            }
-            // stat changed (or new stem): decide via the artifact's own
-            // stored checksum — O(header), no table bytes re-read
+                None => (0, None),
+            };
+            let backoff = self.backoff(prev_failures + 1);
+            let fail = |error: String, events: &mut Vec<WatchEvent>| {
+                if prev_error.as_ref() != Some(&error) {
+                    events.push(WatchEvent::Failed {
+                        path: path.clone(),
+                        error: error.clone(),
+                    });
+                }
+                FileState {
+                    mtime,
+                    len,
+                    fingerprint: None,
+                    failures: prev_failures + 1,
+                    retry_at: Some(now + backoff),
+                    last_error: Some(error),
+                }
+            };
+            // stat changed (or new stem, or retry due): decide via the
+            // artifact's own stored checksum — O(header), no table
+            // bytes re-read
             let fp = match artifact::content_fingerprint(&path) {
                 Ok(fp) => fp,
                 Err(e) => {
-                    self.seen.insert(name, FileState { mtime, len, fingerprint: None });
-                    events.push(WatchEvent::Failed { path, error: format!("{e:#}") });
+                    let st = fail(format!("{e:#}"), &mut events);
+                    self.seen.insert(name, st);
                     continue;
                 }
             };
             if self.seen.get(&name).and_then(|s| s.fingerprint) == Some(fp) {
                 // bare touch: mtime moved, content identical — no deploy
-                self.seen.insert(name, FileState { mtime, len, fingerprint: Some(fp) });
+                self.seen.insert(name, FileState::deployed(mtime, len, fp));
                 continue;
             }
             match deploy(registry, &name, &path, &self.cfg) {
                 Ok(ev) => {
-                    self.seen.insert(name, FileState { mtime, len, fingerprint: Some(fp) });
+                    self.seen.insert(name, FileState::deployed(mtime, len, fp));
                     events.push(ev);
                 }
                 Err(error) => {
-                    self.seen.insert(name, FileState { mtime, len, fingerprint: None });
-                    events.push(WatchEvent::Failed { path, error });
+                    let st = fail(error, &mut events);
+                    self.seen.insert(name, st);
                 }
             }
         }
@@ -221,7 +322,11 @@ fn deploy(
             zero_copy,
         }),
         Err(RegistryError::DuplicateModel(_)) => {
-            let version = registry.swap(name, backend).map_err(|e| e.to_string())?;
+            // rolling deploy of a live model: quarantined — the
+            // candidate must survive a golden batch, a rejection leaves
+            // the incumbent serving and surfaces as WatchEvent::Failed
+            let version =
+                registry.swap_quarantined(name, backend).map_err(|e| e.to_string())?;
             Ok(WatchEvent::Swapped {
                 name: name.to_string(),
                 path: path.to_path_buf(),
@@ -240,6 +345,7 @@ struct StatsCells {
     registered: AtomicU64,
     swapped: AtomicU64,
     failed: AtomicU64,
+    retries: AtomicU64,
 }
 
 /// Cumulative watcher counters (cheap atomic reads).
@@ -253,6 +359,8 @@ pub struct WatcherStats {
     pub swapped: u64,
     /// Files rejected (parse/deploy failures).
     pub failed: u64,
+    /// Backoff-driven re-attempts of known-bad files.
+    pub retries: u64,
 }
 
 /// A background thread polling one directory and deploying into a
@@ -282,7 +390,8 @@ impl DirWatcher {
         let handle = std::thread::Builder::new()
             .name("ltm-watcher".into())
             .spawn(move || {
-                let mut scanner = DirScanner::new(dir, opts.serve_cfg.clone());
+                let mut scanner = DirScanner::new(dir, opts.serve_cfg.clone())
+                    .with_backoff(opts.retry_base, opts.retry_cap);
                 while !stop_t.load(Ordering::Relaxed) {
                     for ev in scanner.scan(&registry) {
                         match &ev {
@@ -294,6 +403,7 @@ impl DirWatcher {
                         on_event(&ev);
                     }
                     stats_t.scans.fetch_add(1, Ordering::Relaxed);
+                    stats_t.retries.store(scanner.retries(), Ordering::Relaxed);
                     // sleep in short slices so stop() returns promptly
                     // even under long poll intervals
                     let mut left = opts.poll;
@@ -315,6 +425,7 @@ impl DirWatcher {
             registered: self.stats.registered.load(Ordering::Relaxed),
             swapped: self.stats.swapped.load(Ordering::Relaxed),
             failed: self.stats.failed.load(Ordering::Relaxed),
+            retries: self.stats.retries.load(Ordering::Relaxed),
         }
     }
 
@@ -513,6 +624,57 @@ mod tests {
         let stats = watcher.stop();
         assert!(stats.scans >= 2, "{stats:?}");
         assert_eq!((stats.registered, stats.swapped, stats.failed), (1, 1, 0));
+        registry.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn known_bad_files_retry_with_backoff_and_heal_in_place() {
+        let dir = sandbox("backoff");
+        let registry = ModelRegistry::new();
+        let mut scanner = DirScanner::new(&dir, ServeConfig::default())
+            .with_backoff(Duration::from_millis(100), Duration::from_secs(1));
+
+        // a good artifact with one payload byte flipped: every byte
+        // past the header is covered by some checksum, so the load must
+        // reject it
+        let good = small_artifact_bytes(8);
+        let mut bad = good.clone();
+        crate::coordinator::faults::FaultInjector::corrupt(&mut bad, 1);
+        let path = dir.join("healme.ltm");
+        std::fs::write(&path, &bad).unwrap();
+
+        let evs = scanner.scan(&registry);
+        assert_eq!(evs.len(), 1);
+        assert!(matches!(&evs[0], WatchEvent::Failed { .. }), "{evs:?}");
+        assert!(registry.models().is_empty());
+
+        // inside the backoff window: no retry, no event
+        assert!(scanner.scan(&registry).is_empty());
+        assert_eq!(scanner.retries(), 0);
+
+        // past the window: retried; the SAME error stays silent
+        std::thread::sleep(Duration::from_millis(120));
+        assert!(scanner.scan(&registry).is_empty(), "unchanged error must not re-report");
+        assert_eq!(scanner.retries(), 1);
+
+        // heal IN PLACE: same byte count, mtime pinned back — the stat
+        // gate cannot explain the recovery, only the backoff retry can
+        let mtime = std::fs::metadata(&path).unwrap().modified().unwrap();
+        std::fs::write(&path, &good).unwrap();
+        let f = std::fs::File::options().write(true).open(&path).unwrap();
+        f.set_modified(mtime).unwrap();
+        drop(f);
+
+        // second backoff step doubled to 200ms
+        std::thread::sleep(Duration::from_millis(250));
+        let evs = scanner.scan(&registry);
+        assert_eq!(scanner.retries(), 2);
+        assert!(
+            matches!(&evs[0], WatchEvent::Registered { name, .. } if name == "healme"),
+            "{evs:?}"
+        );
+        assert_eq!(registry.models().len(), 1);
         registry.shutdown();
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -147,7 +147,13 @@ mod tests {
                 "slow"
             }
         }
-        let cfg = ServeConfig { max_batch: 1, max_wait_us: 10, workers: 1, queue_cap: 4 };
+        let cfg = ServeConfig {
+            max_batch: 1,
+            max_wait_us: 10,
+            workers: 1,
+            queue_cap: 4,
+            ..ServeConfig::default()
+        };
         let reg = ModelRegistry::new();
         reg.register("slow", std::sync::Arc::new(Slow), &cfg).unwrap();
         reg.register("fast", std::sync::Arc::new(Fixed(3)), &cfg).unwrap();
@@ -188,7 +194,13 @@ mod tests {
         reg.register(
             "m",
             std::sync::Arc::new(Stall),
-            &ServeConfig { max_batch: 1, max_wait_us: 10, workers: 1, queue_cap: 2 },
+            &ServeConfig {
+                max_batch: 1,
+                max_wait_us: 10,
+                workers: 1,
+                queue_cap: 2,
+                ..ServeConfig::default()
+            },
         )
         .unwrap();
         let client = reg.client();

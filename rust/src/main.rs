@@ -83,8 +83,13 @@ fn print_help() {
          \x20                  [--swap name=new.ltm] --requests 2000 [--clients 4] [--max-batch 32]\n\
          \x20                  [--dir data/synth]  (pure-push from artifacts alone when --dir is omitted)\n\
          \x20                  [--watch-dir deploy/] [--watch-interval-ms 200] [--client-delay-ms 0]\n\
+         \x20                  [--deadline-us 0] [--degrade-after 3] [--fault-plan seed=7,panic_prob=0.02]\n\
          \x20                  (--watch-dir: auto-register new .ltm files by stem and hot-swap\n\
-         \x20                   models whose file content changes — config-free rolling deploys)\n\
+         \x20                   models whose file content changes — config-free rolling deploys;\n\
+         \x20                   failed deploys retry with capped exponential backoff)\n\
+         \x20                  (--deadline-us: shed requests older than the deadline; --degrade-after:\n\
+         \x20                   mark a model Degraded after N consecutive worker panics; --fault-plan:\n\
+         \x20                   deterministic chaos — injected latency / worker panics, see faults.rs)\n\
          \x20 ref-check        --arch A --weights w.bin --hlo artifacts/linear_ref_b1.hlo.txt"
     );
 }
@@ -412,7 +417,26 @@ fn serve(args: &Args) -> Result<()> {
     // input geometry, no --dir, no weights
     let data = if args.has("dir") { Some(dataset(args)?) } else { None };
 
-    let registry = ModelRegistry::new();
+    // deterministic chaos: --fault-plan arms every model's worker with
+    // the same seeded injector (latency, panics). Injected panics are
+    // rehearsals, not bugs — silence their default stderr report so a
+    // chaos run's output stays readable.
+    let registry = match args.get("fault-plan") {
+        None => ModelRegistry::new(),
+        Some(spec) => {
+            let plan = tablenet::coordinator::faults::FaultPlan::parse(spec)
+                .map_err(|e| anyhow!("--fault-plan: {e}"))?;
+            if plan.is_noop() {
+                ModelRegistry::new()
+            } else {
+                println!("fault injection ON: {plan}");
+                tablenet::coordinator::faults::silence_injected_panics();
+                ModelRegistry::with_faults(Arc::new(
+                    tablenet::coordinator::faults::FaultInjector::new(plan),
+                ))
+            }
+        }
+    };
     // the load generator's request pools; RwLock because --watch-dir
     // deploys add models (and pools) while clients are running. The
     // version counter bumps on every pool change so client threads can
@@ -496,32 +520,20 @@ fn serve(args: &Args) -> Result<()> {
     );
 
     // mid-run rolling deployments: --swap name=path installs a new
-    // version once half the load has been served. Resolve every spec
-    // UP FRONT — a typo'd name, unreadable artifact or mismatched
-    // input width must fail before any traffic is served, not panic a
-    // worker (and hang the load) halfway through the run.
-    let mut swaps: Vec<(String, std::path::PathBuf, Arc<tablenet::engine::LutModel>)> =
-        Vec::new();
+    // version once half the load has been attempted. The NAME is
+    // validated up front — a typo must fail before any traffic is
+    // served — but the artifact itself is loaded AT SWAP TIME and
+    // quarantined: a corrupt file, a width mismatch or a candidate
+    // that fails the golden-batch self-check is rejected, the
+    // incumbent version keeps serving the rest of the run, and the
+    // process exits non-zero naming the failure once the load drains.
+    let mut swaps: Vec<(String, std::path::PathBuf)> = Vec::new();
     for spec in args.get_all("swap") {
         let (name, path) = tablenet::config::parse_artifact_spec(spec)?;
-        let pool = pools
-            .read()
-            .unwrap()
-            .get(&name)
-            .cloned()
-            .ok_or_else(|| anyhow!("--swap target '{name}' is not a registered model"))?;
-        let lut = tablenet::engine::LutModel::load(&path)
-            .with_context(|| format!("swap target for '{name}'"))?;
-        let row_w = pool.rows.first().map(Vec::len).unwrap_or(0);
-        if let Some(f) = lut.input_features() {
-            if f != row_w {
-                bail!(
-                    "swap for '{name}': artifact expects {f} input features but \
-                     this run's request rows have {row_w}"
-                );
-            }
+        if !pools.read().unwrap().contains_key(&name) {
+            bail!("--swap target '{name}' is not a registered model");
         }
-        swaps.push((name, path, Arc::new(lut)));
+        swaps.push((name, path));
     }
 
     // the deploy watcher starts AFTER static registration and swap
@@ -551,6 +563,7 @@ fn serve(args: &Args) -> Result<()> {
                 WatcherOptions {
                     serve_cfg: fleet.defaults.clone(),
                     poll: Duration::from_millis(interval),
+                    ..WatcherOptions::default()
                 },
                 move |ev| {
                     println!("[watch] {ev}");
@@ -619,14 +632,22 @@ fn serve(args: &Args) -> Result<()> {
     };
 
     let start = std::time::Instant::now();
+    // attempts counts every request a client has ISSUED (served or
+    // shed) — the --swap trigger keys off it, so rolling deploys still
+    // fire at mid-load even when faults shed part of the traffic
+    let attempts = Arc::new(std::sync::atomic::AtomicU64::new(0));
     let mut joins = Vec::new();
     for c in 0..clients {
         let client = registry.client();
         let pools = pools.clone();
         let pools_version = pools_version.clone();
+        let attempts = attempts.clone();
         let per_client = n_requests / clients;
         joins.push(std::thread::spawn(move || {
+            use tablenet::coordinator::router::RouteError;
+            use tablenet::coordinator::ServeError;
             let mut served = 0usize;
+            let mut shed = 0usize;
             let mut correct = 0usize;
             let mut labeled = 0usize;
             let mut i = 0usize;
@@ -655,6 +676,7 @@ fn serve(args: &Args) -> Result<()> {
                 let k = c * per_client + i;
                 let (name, pool) = &local[k % local.len()];
                 let idx = k % pool.rows.len();
+                attempts.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 match client.infer(name, pool.rows[idx].clone()) {
                     Ok(resp) => {
                         served += 1;
@@ -665,35 +687,68 @@ fn serve(args: &Args) -> Result<()> {
                             }
                         }
                     }
-                    Err(_) => break,
+                    // shed / failed requests surface as typed errors
+                    // and the client MOVES ON — degraded service, not
+                    // an aborted load run. Only a shut-down fleet ends
+                    // the loop early.
+                    Err(RouteError::Submit(ServeError::ShutDown)) => break,
+                    Err(_) => shed += 1,
                 }
                 if !client_delay.is_zero() {
                     std::thread::sleep(client_delay);
                 }
                 i += 1;
             }
-            (served, correct, labeled)
+            (served, shed, correct, labeled)
         }));
     }
 
+    let mut swap_failures: Vec<String> = Vec::new();
     if !swaps.is_empty() {
-        // wait until roughly half the load has been served, then roll
+        // wait until roughly half the load has been attempted, then roll
         let planned = (n_requests / clients) * clients;
-        while registry.fleet_completed() < (planned / 2) as u64 {
+        while attempts.load(std::sync::atomic::Ordering::Relaxed) < (planned / 2) as u64 {
             std::thread::sleep(std::time::Duration::from_millis(1));
         }
-        for (name, path, lut) in &swaps {
-            let v = registry
-                .swap(name, lut.clone())
-                .map_err(|e| anyhow!("swapping '{name}': {e}"))?;
-            println!("hot-swapped '{name}' -> version {v} ({})", path.display());
+        for (name, path) in &swaps {
+            let outcome = tablenet::engine::LutModel::load(path)
+                .with_context(|| format!("swap target for '{name}'"))
+                .and_then(|lut| {
+                    let row_w = pools
+                        .read()
+                        .unwrap()
+                        .get(name)
+                        .and_then(|p| p.rows.first().map(Vec::len))
+                        .unwrap_or(0);
+                    if let Some(f) = lut.input_features() {
+                        if f != row_w {
+                            bail!(
+                                "swap for '{name}': artifact expects {f} input features \
+                                 but this run's request rows have {row_w}"
+                            );
+                        }
+                    }
+                    registry
+                        .swap_quarantined(name, Arc::new(lut))
+                        .map_err(|e| anyhow!("{e}"))
+                });
+            match outcome {
+                Ok(v) => {
+                    println!("hot-swapped '{name}' -> version {v} ({})", path.display());
+                }
+                Err(e) => {
+                    eprintln!("[swap] {e:#} — incumbent '{name}' keeps serving");
+                    swap_failures.push(format!("{e:#}"));
+                }
+            }
         }
     }
 
-    let (mut served, mut correct, mut labeled) = (0usize, 0usize, 0usize);
+    let (mut served, mut shed, mut correct, mut labeled) = (0usize, 0usize, 0usize, 0usize);
     for j in joins {
-        let (s, c, l) = j.join().unwrap();
+        let (s, sh, c, l) = j.join().unwrap();
         served += s;
+        shed += sh;
         correct += c;
         labeled += l;
     }
@@ -701,8 +756,8 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(w) = watcher {
         let stats = w.stop();
         println!(
-            "watcher: {} scans, {} registered, {} swapped, {} rejected",
-            stats.scans, stats.registered, stats.swapped, stats.failed
+            "watcher: {} scans, {} registered, {} swapped, {} rejected, {} retries",
+            stats.scans, stats.registered, stats.swapped, stats.failed, stats.retries
         );
     }
     let fleet_snap = registry.shutdown();
@@ -711,11 +766,24 @@ fn serve(args: &Args) -> Result<()> {
         "served {served} requests in {elapsed:.2}s ({:.1} req/s)",
         served as f64 / elapsed
     );
+    if shed > 0 {
+        print!(", {shed} shed");
+    }
     if labeled > 0 {
         print!(", accuracy {:.2}%", 100.0 * correct as f64 / labeled as f64);
     }
     println!();
     fleet_snap.assert_multiplier_less();
+    // a rejected mid-run swap is a deploy failure the operator must
+    // see in the exit code — but only AFTER the load has drained and
+    // the incumbent-serving evidence (snapshot above) is printed
+    if !swap_failures.is_empty() {
+        bail!(
+            "{} mid-run swap(s) rejected (incumbent versions kept serving): {}",
+            swap_failures.len(),
+            swap_failures.join(" | ")
+        );
+    }
     Ok(())
 }
 

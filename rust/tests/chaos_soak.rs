@@ -1,0 +1,281 @@
+//! Chaos soak: the serving runtime under deterministic fault injection.
+//!
+//! A seeded [`FaultPlan`] injects worker panics and latency into live
+//! pipelines while concurrent clients drive load and the control plane
+//! performs quarantined swaps mid-soak. The invariants under test are
+//! the runtime's whole fault-tolerance contract:
+//!
+//! * **zero lost requests** — every submitted request gets exactly one
+//!   verdict (a response or a typed [`ServeError`]); nothing hangs,
+//!   nothing is silently dropped;
+//! * **zero duplicated requests** — server-side counters match the
+//!   client-side tallies class for class: `completed` == Ok verdicts,
+//!   `rejected` == `QueueFull`, `deadline_shed` == `DeadlineExceeded`,
+//!   `panicked` == `WorkerPanicked`;
+//! * **panic isolation** — an injected panic costs exactly its batch
+//!   (typed failure, no worker-thread death, no process abort);
+//! * **quarantined swaps** — a broken candidate is rejected while the
+//!   incumbent keeps serving; a good one bumps the version, and every
+//!   response carries a valid, per-thread-monotonic version.
+
+use std::sync::{Arc, Barrier};
+use tablenet::config::ServeConfig;
+use tablenet::coordinator::faults::{
+    silence_injected_panics, FaultInjector, FaultPlan, InjectedPanic,
+};
+use tablenet::coordinator::registry::ModelRegistry;
+use tablenet::coordinator::router::RouteError;
+use tablenet::coordinator::{Backend, InferOutput, ServeError};
+use tablenet::engine::counters::Counters;
+
+/// Instant echo backend: class = image[0] as usize.
+struct Echo;
+
+impl Backend for Echo {
+    fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+        images
+            .iter()
+            .map(|img| InferOutput {
+                class: img[0] as usize,
+                logits: vec![img[0], -img[0]],
+                counters: Counters { lut_evals: 1, ..Default::default() },
+            })
+            .collect()
+    }
+
+    fn input_features(&self) -> Option<usize> {
+        Some(1)
+    }
+
+    fn name(&self) -> &'static str {
+        "echo"
+    }
+}
+
+/// A candidate build that panics on every batch — must never survive
+/// quarantine.
+struct Exploding;
+
+impl Backend for Exploding {
+    fn infer_batch(&self, _images: &[Vec<f32>]) -> Vec<InferOutput> {
+        std::panic::panic_any(InjectedPanic)
+    }
+
+    fn input_features(&self) -> Option<usize> {
+        Some(1)
+    }
+
+    fn name(&self) -> &'static str {
+        "exploding"
+    }
+}
+
+#[derive(Default)]
+struct Tally {
+    ok: u64,
+    queue_full: u64,
+    deadline: u64,
+    panicked: u64,
+}
+
+#[test]
+fn chaos_soak_loses_nothing_and_duplicates_nothing() {
+    silence_injected_panics();
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 250;
+    const MODELS: [&str; 2] = ["a", "b"];
+
+    let plan = FaultPlan::parse("seed=42,latency_prob=0.15,latency_us=500,panic_prob=0.08")
+        .unwrap();
+    let reg = ModelRegistry::with_faults(Arc::new(FaultInjector::new(plan)));
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_wait_us: 200,
+        workers: 2,
+        queue_cap: 16,
+        deadline_us: 3_000,
+        degrade_after: 0,
+    };
+    reg.register("a", Arc::new(Echo), &cfg).unwrap();
+    reg.register("b", Arc::new(Echo), &cfg).unwrap();
+
+    // clients rendezvous at half-load so the swaps land mid-soak
+    let barrier = Arc::new(Barrier::new(CLIENTS + 1));
+    let mut joins = Vec::new();
+    for _ in 0..CLIENTS {
+        let client = reg.client();
+        let barrier = barrier.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut tally = Tally::default();
+            // versions seen per model: a pipeline's version is
+            // monotonic, and each blocking request completes before the
+            // next is submitted, so a thread must never observe a
+            // version going backwards
+            let mut last_version = [0u64; 2];
+            for i in 0..PER_CLIENT {
+                if i == PER_CLIENT / 2 {
+                    barrier.wait();
+                }
+                let m = i % 2;
+                let row = vec![(i % 7) as f32];
+                let result = if i % 3 == 0 {
+                    client.try_infer(MODELS[m], row) // fail-fast path
+                } else {
+                    client.infer(MODELS[m], row) // blocking path
+                };
+                match result {
+                    Ok(resp) => {
+                        tally.ok += 1;
+                        assert!(
+                            resp.version >= last_version[m],
+                            "model '{}' version went backwards: {} after {}",
+                            MODELS[m],
+                            resp.version,
+                            last_version[m]
+                        );
+                        last_version[m] = resp.version;
+                    }
+                    Err(RouteError::Submit(ServeError::QueueFull)) => tally.queue_full += 1,
+                    Err(RouteError::Submit(ServeError::DeadlineExceeded { .. })) => {
+                        tally.deadline += 1;
+                    }
+                    Err(RouteError::Submit(ServeError::WorkerPanicked)) => {
+                        tally.panicked += 1;
+                    }
+                    Err(other) => panic!("untyped verdict escaped the soak: {other}"),
+                }
+            }
+            (tally, last_version)
+        }));
+    }
+
+    // mid-soak control-plane activity: a healthy quarantined swap of
+    // 'a' (installs v2) and a broken candidate for 'b' (rejected, the
+    // incumbent keeps serving at v1)
+    barrier.wait();
+    assert_eq!(reg.swap_quarantined("a", Arc::new(Echo)).unwrap(), 2);
+    assert!(reg.swap_quarantined("b", Arc::new(Exploding)).is_err());
+
+    let mut total = Tally::default();
+    for j in joins {
+        let (t, last_version) = j.join().unwrap();
+        total.ok += t.ok;
+        total.queue_full += t.queue_full;
+        total.deadline += t.deadline;
+        total.panicked += t.panicked;
+        assert!(last_version[0] <= 2, "model 'a' never had a version past 2");
+        assert!(last_version[1] <= 1, "model 'b' must stay at v1");
+    }
+
+    // zero lost: every request produced exactly one verdict
+    let submitted = (CLIENTS * PER_CLIENT) as u64;
+    assert_eq!(
+        total.ok + total.queue_full + total.deadline + total.panicked,
+        submitted,
+        "verdicts do not account for every submitted request"
+    );
+    // the fault plan actually fired: injected panics surfaced as typed
+    // WorkerPanicked verdicts (>=250 batches at panic_prob 0.08)
+    assert!(total.panicked > 0, "no injected panic surfaced in {submitted} requests");
+
+    let infos = reg.models();
+    assert_eq!((infos[0].name.as_str(), infos[0].version), ("a", 2));
+    assert_eq!((infos[1].name.as_str(), infos[1].version), ("b", 1));
+
+    // zero duplicated: the server counted each request exactly once, in
+    // exactly the class the client observed
+    let fleet = reg.shutdown();
+    assert_eq!(fleet.completed(), total.ok, "completed != Ok verdicts");
+    assert_eq!(fleet.rejected(), total.queue_full, "rejected != QueueFull verdicts");
+    assert_eq!(fleet.deadline_shed(), total.deadline, "shed != DeadlineExceeded verdicts");
+    assert_eq!(fleet.panicked(), total.panicked, "panicked != WorkerPanicked verdicts");
+    assert_eq!(fleet.swaps(), 1, "only the quarantine-passing swap may install");
+    fleet.assert_multiplier_less();
+}
+
+#[test]
+fn injected_panics_latch_degraded_and_a_swap_clears_it() {
+    silence_injected_panics();
+    let plan = FaultPlan::parse("seed=9,panic_prob=1").unwrap();
+    let reg = ModelRegistry::with_faults(Arc::new(FaultInjector::new(plan)));
+    let cfg = ServeConfig {
+        max_batch: 1,
+        max_wait_us: 50,
+        workers: 1,
+        queue_cap: 8,
+        deadline_us: 0,
+        degrade_after: 2,
+    };
+    reg.register("m", Arc::new(Echo), &cfg).unwrap();
+    let client = reg.client();
+    for _ in 0..3 {
+        match client.infer("m", vec![1.0]) {
+            Err(RouteError::Submit(ServeError::WorkerPanicked)) => {}
+            other => panic!("expected WorkerPanicked, got {other:?}"),
+        }
+    }
+    let fleet = reg.fleet();
+    assert_eq!(fleet.degraded(), vec!["m"], "2 consecutive panics must latch Degraded");
+    assert_eq!(fleet.models["m"].stats.panicked, 3);
+    // the panic perimeter is per batch: the worker thread never died
+    assert_eq!(fleet.models["m"].stats.worker_restarts, 0);
+
+    // a quarantined swap installs a fresh backend and clears the latch
+    // (the golden self-check runs on the control plane, outside the
+    // fault injector's reach)
+    assert_eq!(reg.swap_quarantined("m", Arc::new(Echo)).unwrap(), 2);
+    assert!(reg.fleet().degraded().is_empty(), "a swap must clear the Degraded latch");
+    reg.shutdown();
+}
+
+#[test]
+fn saturation_with_deadlines_sheds_cleanly_not_silently() {
+    silence_injected_panics();
+    // every batch sleeps 4ms; requests carry a 2ms deadline — under 40
+    // queued requests on one worker, most of the queue MUST shed, and
+    // each shed must be a typed DeadlineExceeded that waited at least
+    // the full deadline
+    let plan = FaultPlan::parse("seed=3,latency_prob=1,latency_us=4000").unwrap();
+    let reg = ModelRegistry::with_faults(Arc::new(FaultInjector::new(plan)));
+    let cfg = ServeConfig {
+        max_batch: 1,
+        max_wait_us: 100,
+        workers: 1,
+        queue_cap: 2,
+        deadline_us: 2_000,
+        degrade_after: 0,
+    };
+    reg.register("m", Arc::new(Echo), &cfg).unwrap();
+    let n_threads = 4u64;
+    let per = 10u64;
+    let mut joins = Vec::new();
+    for _ in 0..n_threads {
+        let client = reg.client();
+        joins.push(std::thread::spawn(move || {
+            let (mut ok, mut shed) = (0u64, 0u64);
+            for i in 0..per {
+                match client.infer("m", vec![i as f32]) {
+                    Ok(_) => ok += 1,
+                    Err(RouteError::Submit(ServeError::DeadlineExceeded { waited_us })) => {
+                        assert!(waited_us >= 2_000, "shed before its deadline: {waited_us}µs");
+                        shed += 1;
+                    }
+                    other => panic!("untyped/unexpected verdict: {other:?}"),
+                }
+            }
+            (ok, shed)
+        }));
+    }
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for j in joins {
+        let (o, s) = j.join().unwrap();
+        ok += o;
+        shed += s;
+    }
+    assert_eq!(ok + shed, n_threads * per);
+    assert!(shed > 0, "a 4ms-per-batch pipeline cannot serve 40 requests inside 2ms each");
+    let fleet = reg.shutdown();
+    assert_eq!(fleet.completed(), ok);
+    assert_eq!(fleet.deadline_shed(), shed);
+    fleet.assert_multiplier_less();
+}

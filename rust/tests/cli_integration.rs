@@ -290,6 +290,41 @@ fn inspect_corrupted_artifact_exits_nonzero_naming_stage_and_offset() {
 }
 
 #[test]
+fn serve_rejects_corrupt_mid_run_swap_keeps_incumbent_and_exits_nonzero() {
+    let dir = sandbox("swapbad");
+    let ltm = train_and_compile(&dir, "model", 31);
+    // flip one payload byte: the header still parses, the per-stage
+    // checksum fails at load time — exactly what a half-written deploy
+    // handed to --swap looks like
+    let mut bytes = std::fs::read(&ltm).unwrap();
+    let n = bytes.len();
+    bytes[n - 2] ^= 0x08;
+    let bad = dir.join("bad.ltm");
+    std::fs::write(&bad, &bytes).unwrap();
+
+    let spec = format!("m={}", ltm.display());
+    let swap = format!("m={}", bad.display());
+    let out = bin()
+        .args(["serve", "--artifact", &spec, "--swap", &swap])
+        .args(["--requests", "60", "--clients", "2", "--max-batch", "8"])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    let err = String::from_utf8_lossy(&out.stderr);
+    // the full load is served by the incumbent at v1 — a bad candidate
+    // must degrade the DEPLOY, never the serving...
+    assert!(text.contains("served 60 requests"), "{text}\n{err}");
+    assert!(text.contains("[m v1"), "incumbent must keep serving at v1: {text}");
+    assert!(text.contains("mults=0"), "{text}");
+    // ...and the run still exits non-zero, naming the failing stage
+    // (not a panic, not a silent success)
+    assert!(!out.status.success(), "corrupt mid-run swap must fail the run: {text}");
+    assert!(err.contains("checksum mismatch"), "{err}");
+    assert!(err.contains("stage "), "error must name the failing stage: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn serve_watch_dir_rolls_deploys_without_restart() {
     let dir = sandbox("watchdir");
     let m1 = train_and_compile(&dir, "gen1", 21);

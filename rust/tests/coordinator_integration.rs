@@ -50,7 +50,13 @@ fn serve_run_preserves_accuracy_and_multiplier_less_invariant() {
 
     let coord = Coordinator::start(
         Arc::new(engine),
-        &ServeConfig { max_batch: 16, max_wait_us: 300, workers: 2, queue_cap: 512 },
+        &ServeConfig {
+            max_batch: 16,
+            max_wait_us: 300,
+            workers: 2,
+            queue_cap: 512,
+            ..ServeConfig::default()
+        },
     );
     let test = Arc::new(test);
     let mut joins = Vec::new();
@@ -105,7 +111,13 @@ fn saturation_rejects_but_never_loses_accepted_requests() {
     let backend = Arc::new(Slow(AtomicUsize::new(0)));
     let coord = Coordinator::start(
         backend.clone(),
-        &ServeConfig { max_batch: 4, max_wait_us: 100, workers: 1, queue_cap: 8 },
+        &ServeConfig {
+            max_batch: 4,
+            max_wait_us: 100,
+            workers: 1,
+            queue_cap: 8,
+            ..ServeConfig::default()
+        },
     );
     let mut joins = Vec::new();
     for _ in 0..64 {
@@ -167,13 +179,25 @@ fn registry_serves_two_ltm_models_and_survives_midload_swap() {
     reg.register(
         "alpha",
         Arc::new(save(3, "alpha.ltm")),
-        &ServeConfig { max_batch: 16, max_wait_us: 200, workers: 2, queue_cap: 512 },
+        &ServeConfig {
+            max_batch: 16,
+            max_wait_us: 200,
+            workers: 2,
+            queue_cap: 512,
+            ..ServeConfig::default()
+        },
     )
     .unwrap();
     reg.register(
         "beta",
         Arc::new(save(2, "beta.ltm")),
-        &ServeConfig { max_batch: 4, max_wait_us: 50, workers: 1, queue_cap: 512 },
+        &ServeConfig {
+            max_batch: 4,
+            max_wait_us: 50,
+            workers: 1,
+            queue_cap: 512,
+            ..ServeConfig::default()
+        },
     )
     .unwrap();
 
@@ -251,7 +275,13 @@ fn retire_drains_and_isolates_remaining_models() {
     let engine2 =
         Compiler::new(&model2).plan(&EnginePlan::linear_default()).build().unwrap();
     let reg = ModelRegistry::new();
-    let cfg = ServeConfig { max_batch: 8, max_wait_us: 100, workers: 1, queue_cap: 256 };
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_wait_us: 100,
+        workers: 1,
+        queue_cap: 256,
+        ..ServeConfig::default()
+    };
     reg.register("keep", Arc::new(engine), &cfg).unwrap();
     reg.register("drop", Arc::new(engine2), &cfg).unwrap();
     let client = reg.client();
@@ -300,7 +330,13 @@ fn batching_amortizes_throughput() {
     for max_batch in [1usize, 16] {
         let coord = Coordinator::start(
             Arc::new(Counting),
-            &ServeConfig { max_batch, max_wait_us: 2000, workers: 1, queue_cap: 256 },
+            &ServeConfig {
+                max_batch,
+                max_wait_us: 2000,
+                workers: 1,
+                queue_cap: 256,
+                ..ServeConfig::default()
+            },
         );
         let mut joins = Vec::new();
         for _ in 0..8 {

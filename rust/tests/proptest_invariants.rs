@@ -306,6 +306,7 @@ fn prop_hot_swap_exactly_once_version_attributed() {
             max_wait_us: 50 + rng.below(300) as u64,
             workers: 1 + rng.below(3),
             queue_cap: 256,
+            ..ServeConfig::default()
         };
         let n_threads = 3usize;
         let per_thread = 50usize;
@@ -354,6 +355,160 @@ fn prop_hot_swap_exactly_once_version_attributed() {
         assert_eq!(snap.completed as usize, n_threads * per_thread + 1);
         assert_eq!(snap.swaps as usize, n_swaps);
         assert_eq!(snap.ops.lut_evals as usize, n_threads * per_thread + 1);
+    });
+}
+
+#[test]
+fn prop_fleet_chaos_exactly_one_verdict_with_valid_versions() {
+    // Concurrent register / quarantined-swap / retire / infer under an
+    // injected FaultPlan, across random batching policies and fault
+    // rates: every request gets exactly ONE verdict (response or typed
+    // error), every response's stamped payload agrees with the version
+    // the coordinator attributes it to, and versions never go
+    // backwards on a pipeline's lifetime (a retired-then-re-registered
+    // model is a NEW pipeline and exempt).
+    use std::sync::Arc;
+    use tablenet::config::ServeConfig;
+    use tablenet::coordinator::faults::{
+        silence_injected_panics, FaultInjector, FaultPlan, InjectedPanic,
+    };
+    use tablenet::coordinator::registry::ModelRegistry;
+    use tablenet::coordinator::router::RouteError;
+    use tablenet::coordinator::{Backend, InferOutput, ServeError};
+
+    /// Version-stamped echo: class == the version this backend is
+    /// installed as.
+    struct VersionEcho(usize);
+
+    impl Backend for VersionEcho {
+        fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+            images
+                .iter()
+                .map(|_| InferOutput {
+                    class: self.0,
+                    logits: vec![self.0 as f32],
+                    counters: Counters { lut_evals: 1, ..Default::default() },
+                })
+                .collect()
+        }
+
+        fn input_features(&self) -> Option<usize> {
+            Some(1)
+        }
+
+        fn name(&self) -> &'static str {
+            "version-echo"
+        }
+    }
+
+    /// Broken candidate: must never survive swap quarantine.
+    struct Exploding;
+
+    impl Backend for Exploding {
+        fn infer_batch(&self, _images: &[Vec<f32>]) -> Vec<InferOutput> {
+            std::panic::panic_any(InjectedPanic)
+        }
+
+        fn input_features(&self) -> Option<usize> {
+            Some(1)
+        }
+
+        fn name(&self) -> &'static str {
+            "exploding"
+        }
+    }
+
+    silence_injected_panics();
+    forall("fleet-chaos-exactly-once", 5, |rng| {
+        let plan = FaultPlan {
+            seed: rng.next_u64(),
+            latency_prob: (rng.f32() * 0.2) as f64,
+            latency_us: 200 + rng.below(400) as u64,
+            panic_prob: (rng.f32() * 0.1) as f64,
+        };
+        let reg = ModelRegistry::with_faults(Arc::new(FaultInjector::new(plan)));
+        let cfg = ServeConfig {
+            max_batch: 1 + rng.below(8),
+            max_wait_us: 50 + rng.below(200) as u64,
+            workers: 1 + rng.below(2),
+            queue_cap: 64,
+            deadline_us: 0,
+            degrade_after: 3,
+        };
+        reg.register("stable", Arc::new(VersionEcho(1)), &cfg).unwrap();
+        reg.register("churn", Arc::new(VersionEcho(1)), &cfg).unwrap();
+        reg.register("ephemeral", Arc::new(VersionEcho(1)), &cfg).unwrap();
+
+        let n_threads = 3usize;
+        let per_thread = 60usize;
+        let mut joins = Vec::new();
+        for t in 0..n_threads {
+            let client = reg.client();
+            joins.push(std::thread::spawn(move || {
+                let mut verdicts = 0usize;
+                // per-model high-water versions; index 2 ("ephemeral")
+                // is retired/re-registered mid-run so only the first
+                // two assert monotonicity
+                let mut last = [0u64; 3];
+                for i in 0..per_thread {
+                    let m = (t + i) % 3;
+                    let name = ["stable", "churn", "ephemeral"][m];
+                    match client.infer(name, vec![0.5]) {
+                        Ok(r) => {
+                            verdicts += 1;
+                            assert_eq!(
+                                r.class as u64, r.version,
+                                "'{name}': payload disagrees with attributed version"
+                            );
+                            if m < 2 {
+                                assert!(
+                                    r.version >= last[m],
+                                    "'{name}' version went backwards: {} after {}",
+                                    r.version,
+                                    last[m]
+                                );
+                            }
+                            last[m] = r.version;
+                        }
+                        Err(RouteError::Submit(
+                            ServeError::WorkerPanicked
+                            | ServeError::QueueFull
+                            | ServeError::DeadlineExceeded { .. },
+                        )) => verdicts += 1,
+                        // retired mid-run: a typed routing error, not a hang
+                        Err(RouteError::UnknownModel(_)) => verdicts += 1,
+                        Err(other) => panic!("unexpected verdict: {other}"),
+                    }
+                }
+                verdicts
+            }));
+        }
+
+        // control-plane churn concurrent with the load above
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert_eq!(reg.swap_quarantined("churn", Arc::new(VersionEcho(2))).unwrap(), 2);
+        assert!(
+            reg.swap_quarantined("churn", Arc::new(Exploding)).is_err(),
+            "broken candidate must not survive quarantine"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        reg.retire("ephemeral").unwrap();
+        reg.register("ephemeral", Arc::new(VersionEcho(1)), &cfg).unwrap();
+        assert_eq!(reg.swap_quarantined("churn", Arc::new(VersionEcho(3))).unwrap(), 3);
+
+        let mut verdicts = 0usize;
+        for j in joins {
+            verdicts += j.join().unwrap();
+        }
+        assert_eq!(
+            verdicts,
+            n_threads * per_thread,
+            "every request must produce exactly one verdict"
+        );
+        let fleet = reg.shutdown();
+        assert_eq!(fleet.models["churn"].version, 3);
+        assert_eq!(fleet.models["stable"].version, 1);
+        fleet.assert_multiplier_less();
     });
 }
 
