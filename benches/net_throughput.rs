@@ -1,0 +1,255 @@
+//! Socket-tier soak bench (the Layer-4 perf instrument): a real LUT
+//! model served by [`NetServer`] over loopback TCP, driven by blocking
+//! wire clients at several connection counts, with a mid-soak
+//! quarantined swap and deterministic fault injection. Emits
+//! machine-readable `BENCH_net.json` (per-phase rows/s and frame-RTT
+//! p50/p99) so the network-path trajectory is tracked from PR to PR
+//! alongside `BENCH_serve.json`.
+//!
+//!     cargo bench --bench net_throughput -- [--requests 1000000] \
+//!         [--rows-per-frame 16] [--net-threads 0] [--admission-budget 0]
+//!
+//! `TABLENET_BENCH_REQUESTS` overrides the row count (CI smoke). The
+//! bench asserts the full wire accounting invariant: every row sent is
+//! answered exactly once (served or typed-shed), and the server-side
+//! ledger balances to zero.
+
+mod common;
+
+#[cfg(not(unix))]
+fn main() {
+    println!("net_throughput: the socket tier is unix-only (epoll/kqueue); skipping");
+}
+
+#[cfg(unix)]
+fn main() {
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+    use tablenet::config::cli::Args;
+    use tablenet::config::ServeConfig;
+    use tablenet::coordinator::faults::{silence_injected_panics, FaultInjector, FaultPlan};
+    use tablenet::coordinator::registry::ModelRegistry;
+    use tablenet::data::synth::Kind;
+    use tablenet::engine::plan::{AffineMode, EnginePlan};
+    use tablenet::engine::Compiler;
+    use tablenet::net::{
+        AdmissionController, Frame, NetClient, NetServer, NetServerOptions, Status,
+    };
+    use tablenet::util::percentile;
+
+    silence_injected_panics();
+    let args = Args::parse(std::env::args().skip(1));
+    let n_rows = std::env::var("TABLENET_BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| args.get_usize("requests", 1_000_000));
+    let rows_per_frame = args.get_usize("rows-per-frame", 16).clamp(1, 4096);
+    let net_threads = args.get_usize("net-threads", 0);
+    let budget = args.get_u64("admission-budget", 0);
+    const FEATURES: u32 = 784;
+    // two connection counts so BENCH_net.json tracks scaling, not just
+    // a single operating point
+    let phase_conns = [2usize, 8usize];
+
+    // deterministic chaos: rare injected panics and latency spikes keep
+    // the soak honest — sheds must surface as typed verdicts, never as
+    // lost rows
+    let plan = FaultPlan::parse("seed=7,latency_prob=0.02,latency_us=200,panic_prob=0.01")
+        .expect("fault plan parses");
+    let registry = ModelRegistry::with_faults(Arc::new(FaultInjector::new(plan)));
+    let cfg = ServeConfig {
+        max_batch: 32,
+        max_wait_us: 200,
+        workers: 2,
+        queue_cap: 1024,
+        ..ServeConfig::default()
+    };
+    let plan_bits = |bits: u32| EnginePlan {
+        affine: vec![AffineMode::BitplaneFixed { bits, m: 14, range_exp: 0 }],
+        fallback: AffineMode::Float { planes: 11, m: 1 },
+        r_o: 16,
+    };
+    let (model, ds) = common::linear_model(Kind::Digits);
+    let engine =
+        Compiler::new(&model).plan(&plan_bits(3)).build().expect("plan materialises");
+    registry.register("digits", Arc::new(engine), &cfg).expect("unique name");
+
+    let admission = Arc::new(AdmissionController::new(budget));
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        registry.client(),
+        admission,
+        NetServerOptions { threads: net_threads, ..NetServerOptions::default() },
+    )
+    .expect("server binds loopback");
+    let addr = server.local_addr().to_string();
+    println!(
+        "net_throughput: {n_rows} rows, frames of {rows_per_frame}, {} net threads, \
+         phases at {phase_conns:?} connections",
+        server.threads()
+    );
+
+    let test = Arc::new(ds.test);
+    struct Phase {
+        connections: usize,
+        rows: u64,
+        ok: u64,
+        shed: u64,
+        rps: f64,
+        p50_us: f64,
+        p99_us: f64,
+        wall_s: f64,
+    }
+    let mut phases: Vec<Phase> = Vec::new();
+    let mut swapped_version = 0u64;
+
+    for (pi, &conns) in phase_conns.iter().enumerate() {
+        let phase_rows = n_rows / phase_conns.len();
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..conns {
+            let share = phase_rows / conns + usize::from(c < phase_rows % conns);
+            let addr = addr.clone();
+            let test = test.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut cl = NetClient::connect_retry(&addr, 5_000).expect("connect");
+                cl.set_read_timeout(Some(Duration::from_secs(120))).expect("timeout");
+                let (mut ok, mut shed) = (0u64, 0u64);
+                let mut rtts: Vec<f64> = Vec::new();
+                let mut data: Vec<f32> =
+                    Vec::with_capacity(rows_per_frame * FEATURES as usize);
+                let mut left = share;
+                let mut k = c;
+                while left > 0 {
+                    let n = left.min(rows_per_frame);
+                    data.clear();
+                    for r in 0..n {
+                        data.extend_from_slice(test.image((k + r) % test.len()));
+                    }
+                    k = (k + n) % test.len();
+                    let t = Instant::now();
+                    match cl.infer("digits", FEATURES, &data).expect("frame answered") {
+                        Frame::Reply(rep) => {
+                            assert_eq!(rep.rows.len(), n, "row lost on the wire");
+                            for row in &rep.rows {
+                                if row.status == Status::Ok {
+                                    ok += 1;
+                                } else {
+                                    shed += 1;
+                                }
+                            }
+                        }
+                        Frame::Error(e) => {
+                            assert!(
+                                e.status.is_queue_full_class(),
+                                "unexpected frame-level error: {e:?}"
+                            );
+                            shed += n as u64;
+                        }
+                        other => panic!("unexpected frame: {other:?}"),
+                    }
+                    rtts.push(t.elapsed().as_secs_f64() * 1e6);
+                    left -= n;
+                }
+                (ok, shed, rtts)
+            }));
+        }
+
+        // quarantined swap at roughly half of the first phase, under
+        // full socket load — the soak doubles as a rolling-deploy smoke
+        if pi == 0 {
+            let target = (phase_rows / 2) as u64;
+            let t = Instant::now();
+            while server.rows_done() < target {
+                assert!(
+                    t.elapsed() < Duration::from_secs(600),
+                    "soak stalled before the mid-run swap"
+                );
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let v2 =
+                Compiler::new(&model).plan(&plan_bits(4)).build().expect("v2 materialises");
+            swapped_version =
+                registry.swap_quarantined("digits", Arc::new(v2)).expect("swap under load");
+        }
+
+        let (mut ok, mut shed) = (0u64, 0u64);
+        let mut rtts: Vec<f64> = Vec::new();
+        for j in joins {
+            let (o, s, r) = j.join().expect("client thread");
+            ok += o;
+            shed += s;
+            rtts.extend(r);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            ok + shed,
+            phase_rows as u64,
+            "phase {pi}: rows sent != rows answered (zero-lost violated)"
+        );
+        let rps = phase_rows as f64 / wall.max(1e-9);
+        let (p50, p99) = (percentile(&rtts, 50.0), percentile(&rtts, 99.0));
+        println!(
+            "phase {pi}: {conns} connections | {phase_rows} rows in {wall:.2}s -> \
+             {rps:.0} rows/s | frame RTT p50 {p50:.0}µs p99 {p99:.0}µs | {ok} ok, {shed} shed"
+        );
+        phases.push(Phase {
+            connections: conns,
+            rows: phase_rows as u64,
+            ok,
+            shed,
+            rps,
+            p50_us: p50,
+            p99_us: p99,
+            wall_s: wall,
+        });
+    }
+
+    // the server-side ledger must balance to zero and agree with the
+    // client-side totals exactly
+    let reactor_threads = server.threads();
+    let snap = server.shutdown();
+    snap.assert_accounted();
+    let total_rows: u64 = phases.iter().map(|p| p.rows).sum();
+    let total_ok: u64 = phases.iter().map(|p| p.ok).sum();
+    assert_eq!(snap.rows_done, total_rows, "wire ledger disagrees with rows sent");
+    assert_eq!(snap.rows_ok(), total_ok, "wire ledger disagrees with Ok verdicts");
+    assert_eq!(snap.admission.in_flight, 0, "admission tokens leaked");
+    let fleet = registry.shutdown();
+    fleet.assert_multiplier_less();
+
+    let total_wall: f64 = phases.iter().map(|p| p.wall_s).sum();
+    let total_rps = total_rows as f64 / total_wall.max(1e-9);
+    println!(
+        "total: {total_rows} rows in {total_wall:.2}s -> {total_rps:.0} rows/s | \
+         swapped 'digits' to v{swapped_version} mid-soak | accounting exact"
+    );
+
+    // ---- machine-readable output: BENCH_net.json ----------------------
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"net_throughput\",\n");
+    json.push_str(&format!(
+        "  \"config\": {{\"requests\": {n_rows}, \"rows_per_frame\": {rows_per_frame}, \
+         \"net_threads\": {reactor_threads}, \"features\": {FEATURES}, \
+         \"admission_budget\": {budget}}},\n"
+    ));
+    json.push_str("  \"phases\": [\n");
+    let entries: Vec<String> = phases
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"connections\": {}, \"rows\": {}, \"ok\": {}, \"shed\": {}, \
+                 \"rps\": {:.1}, \"p50_us\": {:.1}, \"p99_us\": {:.1}, \"wall_s\": {:.3}}}",
+                p.connections, p.rows, p.ok, p.shed, p.rps, p.p50_us, p.p99_us, p.wall_s
+            )
+        })
+        .collect();
+    json.push_str(&entries.join(",\n"));
+    json.push_str("\n  ],\n");
+    json.push_str(&format!("  \"total_rows\": {total_rows},\n"));
+    json.push_str(&format!("  \"total_rps\": {total_rps:.1},\n"));
+    json.push_str(&format!("  \"swapped_model_version\": {swapped_version}\n"));
+    json.push_str("}\n");
+    std::fs::write("BENCH_net.json", &json).expect("write BENCH_net.json");
+    println!("wrote BENCH_net.json");
+}

@@ -114,6 +114,7 @@ fn main() {
         queue_cap: 8,
         deadline_us: 1_500,
         degrade_after: 0,
+        ..ServeConfig::default()
     };
     let over_engine =
         Compiler::new(&model).plan(&plan_bits(4)).build().expect("overload engine");

@@ -33,6 +33,11 @@ pub struct ServeConfig {
     /// streak; installing a new backend (swap) clears the Degraded
     /// state.
     pub degrade_after: u32,
+    /// Relative queue weight in the shared cross-model admission
+    /// controller (`serve --admission-budget`): under contention a
+    /// weight-3 model is allotted 3x the in-flight rows of a weight-1
+    /// model. Ignored when no admission budget is set. Must be >= 1.
+    pub admission_weight: u32,
 }
 
 impl Default for ServeConfig {
@@ -44,6 +49,7 @@ impl Default for ServeConfig {
             queue_cap: 1024,
             deadline_us: 0,
             degrade_after: 3,
+            admission_weight: 1,
         }
     }
 }
@@ -57,6 +63,7 @@ impl ServeConfig {
             ("queue_cap", Json::num(self.queue_cap as f64)),
             ("deadline_us", Json::num(self.deadline_us as f64)),
             ("degrade_after", Json::num(self.degrade_after as f64)),
+            ("admission_weight", Json::num(self.admission_weight as f64)),
         ])
     }
 
@@ -71,7 +78,15 @@ impl ServeConfig {
         reject_unknown_keys(
             j,
             "serve config",
-            &["max_batch", "max_wait_us", "workers", "queue_cap", "deadline_us", "degrade_after"],
+            &[
+                "max_batch",
+                "max_wait_us",
+                "workers",
+                "queue_cap",
+                "deadline_us",
+                "degrade_after",
+                "admission_weight",
+            ],
         )?;
         Ok(ServeConfig {
             max_batch: get_usize(j, "max_batch", base.max_batch)?,
@@ -80,6 +95,8 @@ impl ServeConfig {
             queue_cap: get_usize(j, "queue_cap", base.queue_cap)?,
             deadline_us: get_u64(j, "deadline_us", base.deadline_us)?,
             degrade_after: get_u64(j, "degrade_after", base.degrade_after as u64)? as u32,
+            admission_weight: get_u64(j, "admission_weight", base.admission_weight as u64)?
+                as u32,
         })
     }
 
@@ -91,6 +108,7 @@ impl ServeConfig {
         self.queue_cap = args.get_usize("queue-cap", self.queue_cap);
         self.deadline_us = args.get_u64("deadline-us", self.deadline_us);
         self.degrade_after = args.get_u32("degrade-after", self.degrade_after);
+        self.admission_weight = args.get_u32("admission-weight", self.admission_weight);
         self
     }
 
@@ -111,6 +129,9 @@ impl ServeConfig {
                 self.deadline_us,
                 self.max_wait_us
             );
+        }
+        if self.admission_weight == 0 {
+            bail!("admission_weight must be >= 1 (a zero-weight model could never serve)");
         }
         Ok(())
     }
@@ -490,6 +511,7 @@ mod tests {
             queue_cap: 64,
             deadline_us: 20_000,
             degrade_after: 5,
+            admission_weight: 2,
         };
         let j = c.to_json();
         assert_eq!(ServeConfig::from_json(&j).unwrap(), c);

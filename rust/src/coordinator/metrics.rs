@@ -166,6 +166,9 @@ pub struct ModelSnapshot {
 #[derive(Debug, Clone, Default)]
 pub struct FleetSnapshot {
     pub models: BTreeMap<String, ModelSnapshot>,
+    /// Socket-ingress accounting, present only when a network serving
+    /// tier (`serve --listen`) fronted the registry for this run.
+    pub net: Option<crate::net::NetSnapshot>,
 }
 
 impl FleetSnapshot {
@@ -241,6 +244,9 @@ impl std::fmt::Display for FleetSnapshot {
         let degraded = self.degraded();
         if !degraded.is_empty() {
             write!(f, "\nfleet: DEGRADED models: {degraded:?}")?;
+        }
+        if let Some(net) = &self.net {
+            write!(f, "\n{net}")?;
         }
         Ok(())
     }
@@ -338,6 +344,21 @@ mod tests {
         let text = format!("{fleet}");
         assert!(text.contains("[a v2 · echo]"), "{text}");
         assert!(text.contains("fleet: 2 models"), "{text}");
+    }
+
+    #[test]
+    fn fleet_display_folds_in_net_snapshot_when_present() {
+        let mut fleet = FleetSnapshot::default();
+        assert!(!format!("{fleet}").contains("net:"), "no net tier, no net section");
+        fleet.net = Some(crate::net::NetSnapshot {
+            connections_accepted: 3,
+            frames_in: 12,
+            frames_out: 12,
+            ..Default::default()
+        });
+        let text = format!("{fleet}");
+        assert!(text.contains("net: 3 conns"), "{text}");
+        assert!(text.contains("admission:"), "{text}");
     }
 
     #[test]

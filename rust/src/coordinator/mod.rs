@@ -354,31 +354,60 @@ impl Client {
         }
     }
 
+    /// Enqueue without waiting: fails fast with `QueueFull` when
+    /// saturated, otherwise returns a [`Pending`] to redeem for the
+    /// verdict. This is the decoupled half of [`Client::infer`], used
+    /// by callers (the net tier's dispatchers) that submit a whole
+    /// batch of rows before collecting any verdict.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Pending, ServeError> {
+        let (req, rrx) = self.request(image);
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(Pending { rrx }),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.record_rejection();
+                Err(ServeError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(ServeError::ShutDown),
+        }
+    }
+
+    /// Enqueue without waiting, blocking (no fail-fast) when the queue
+    /// is full.
+    pub fn submit_blocking(&self, image: Vec<f32>) -> Result<Pending, ServeError> {
+        let (req, rrx) = self.request(image);
+        self.tx.send(req).map_err(|_| ServeError::ShutDown)?;
+        Ok(Pending { rrx })
+    }
+
     /// Submit and wait for the response. Applies backpressure: fails
     /// fast with `QueueFull` instead of blocking when saturated; a
     /// configured deadline bounds the wait with `DeadlineExceeded`.
     pub fn infer(&self, image: Vec<f32>) -> Result<Response, ServeError> {
-        let (req, rrx) = self.request(image);
-        match self.tx.try_send(req) {
-            Ok(()) => {}
-            Err(TrySendError::Full(_)) => {
-                self.metrics.record_rejection();
-                return Err(ServeError::QueueFull);
-            }
-            Err(TrySendError::Disconnected(_)) => return Err(ServeError::ShutDown),
-        }
-        Self::await_verdict(rrx)
+        self.submit(image)?.wait()
     }
 
     /// Blocking submit (no fail-fast), still bounded by the queue.
     pub fn infer_blocking(&self, image: Vec<f32>) -> Result<Response, ServeError> {
-        let (req, rrx) = self.request(image);
-        self.tx.send(req).map_err(|_| ServeError::ShutDown)?;
-        Self::await_verdict(rrx)
+        self.submit_blocking(image)?.wait()
     }
 
     pub fn metrics(&self) -> metrics::Snapshot {
         self.metrics.snapshot()
+    }
+}
+
+/// A submitted, not-yet-redeemed request (from [`Client::submit`]).
+/// Dropping it without [`wait`](Pending::wait)ing is safe: the
+/// pipeline still executes and accounts the request, the verdict is
+/// simply discarded.
+pub struct Pending {
+    rrx: Receiver<Verdict>,
+}
+
+impl Pending {
+    /// Block for the pipeline's verdict on this request.
+    pub fn wait(self) -> Result<Response, ServeError> {
+        Client::await_verdict(self.rrx)
     }
 }
 
@@ -1033,6 +1062,7 @@ mod tests {
                 queue_cap: 16,
                 deadline_us: 10_000,
                 degrade_after: 0,
+                ..crate::config::ServeConfig::default()
             },
         );
         let client = coord.client();
@@ -1082,6 +1112,7 @@ mod tests {
                 queue_cap: 16,
                 deadline_us: 0,
                 degrade_after: 2,
+                ..crate::config::ServeConfig::default()
             },
         );
         let client = coord.client();

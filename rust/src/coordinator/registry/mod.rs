@@ -241,6 +241,13 @@ impl ModelRegistry {
             .collect()
     }
 
+    /// The [`ServeConfig`] `name`'s pipeline is currently running
+    /// under (as registered; a live pipeline's batching policy never
+    /// changes in place). `None` if the model is not registered.
+    pub fn serve_config(&self, name: &str) -> Option<ServeConfig> {
+        self.shared.models.read().unwrap().get(name).map(|e| e.cfg.clone())
+    }
+
     /// Total requests served across the fleet — cheap atomic reads,
     /// safe to poll in a tight loop (unlike [`ModelRegistry::fleet`],
     /// which clones and sorts every model's latency samples).

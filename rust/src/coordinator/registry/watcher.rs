@@ -32,6 +32,18 @@
 //! golden batch before the version bump, and a rejected candidate
 //! leaves the incumbent serving.
 //!
+//! **Manifest sidecars:** a `model.ltm.json` file next to `model.ltm`
+//! pins that stem's [`ServeConfig`] (batch policy, deadline, degrade
+//! threshold, admission weight), strictly decoded over the watcher's
+//! base config — a typo'd key, malformed JSON or invalid combination
+//! is a [`WatchEvent::Failed`] and the pair **fails closed**: nothing
+//! deploys under default config by accident, and an incumbent keeps
+//! serving its existing config. A sidecar-only change re-registers the
+//! model under the new config ([`WatchEvent::Reconfigured`]) — batch
+//! policy cannot change under a live coordinator, so this is the one
+//! watcher path with a brief routing gap (retire + register) rather
+//! than an atomic swap.
+//!
 //! **Replacing a live model must be an atomic rename** (copy to a temp
 //! name — anything not `*.ltm` is ignored — then `mv` over the stem):
 //! the previous version serves zero-copy from a mapping of the OLD
@@ -44,6 +56,7 @@
 //! explicitly via [`ModelRegistry::retire`].
 
 use super::{ModelRegistry, RegistryError};
+use crate::config::json::Json;
 use crate::config::ServeConfig;
 use crate::coordinator::Backend;
 use crate::engine::{artifact, LutModel};
@@ -71,6 +84,11 @@ pub enum WatchEvent {
     /// An existing model's file content changed; the registry installed
     /// the new backend as `version`.
     Swapped { name: String, path: PathBuf, version: u64, features: Option<usize>, zero_copy: bool },
+    /// The stem's `.ltm.json` sidecar pinned a different
+    /// [`ServeConfig`]: the model was re-registered under it (retire +
+    /// register — a brief routing gap, since batch policy cannot change
+    /// under a live coordinator; the version counter restarts at 1).
+    Reconfigured { name: String, path: PathBuf },
     /// A file could not be fingerprinted, parsed, or deployed. Reported
     /// once per content state; the file is retried after it changes.
     Failed { path: PathBuf, error: String },
@@ -91,6 +109,9 @@ impl std::fmt::Display for WatchEvent {
                 path.display(),
                 if *zero_copy { "zero-copy" } else { "copied" }
             ),
+            WatchEvent::Reconfigured { name, path } => {
+                write!(f, "reconfigured model '{name}' per {}.json", path.display())
+            }
             WatchEvent::Failed { path, error } => {
                 write!(f, "watch: {} rejected: {error}", path.display())
             }
@@ -128,6 +149,10 @@ impl Default for WatcherOptions {
 struct FileState {
     mtime: Option<SystemTime>,
     len: u64,
+    /// `(mtime, len)` of the `.ltm.json` sidecar; `None` = no sidecar.
+    /// A sidecar appearing, vanishing, or changing stat re-checks the
+    /// pair just like an artifact stat change does.
+    sidecar: Option<(Option<SystemTime>, u64)>,
     /// Content fingerprint of the deployed artifact; `None` while the
     /// current file content is known-bad (parse/deploy failure).
     fingerprint: Option<u64>,
@@ -142,16 +167,44 @@ struct FileState {
 }
 
 impl FileState {
-    fn deployed(mtime: Option<SystemTime>, len: u64, fingerprint: u64) -> FileState {
+    fn deployed(
+        mtime: Option<SystemTime>,
+        len: u64,
+        sidecar: Option<(Option<SystemTime>, u64)>,
+        fingerprint: u64,
+    ) -> FileState {
         FileState {
             mtime,
             len,
+            sidecar,
             fingerprint: Some(fingerprint),
             failures: 0,
             retry_at: None,
             last_error: None,
         }
     }
+}
+
+/// `model.ltm` -> `model.ltm.json`: appended, not substituted, so the
+/// sidecar never collides with another stem's artifact and sorts next
+/// to its model in listings.
+fn sidecar_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".json");
+    PathBuf::from(os)
+}
+
+/// Strictly decode a `.ltm.json` sidecar over the watcher's base
+/// config. Any unknown key, malformed JSON, or invalid combination is
+/// an error — never a silent fall-back to defaults.
+fn read_sidecar(path: &Path, base: &ServeConfig) -> Result<ServeConfig, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("sidecar {}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| format!("sidecar {}: {e}", path.display()))?;
+    let cfg = ServeConfig::from_json_over(&j, base)
+        .map_err(|e| format!("sidecar {}: {e:#}", path.display()))?;
+    cfg.validate().map_err(|e| format!("sidecar {}: {e:#}", path.display()))?;
+    Ok(cfg)
 }
 
 /// The synchronous scan engine behind [`DirWatcher`]: one call = one
@@ -234,10 +287,15 @@ impl DirScanner {
             };
             let mtime = meta.modified().ok();
             let len = meta.len();
+            let spath = sidecar_path(&path);
+            let sidecar = std::fs::metadata(&spath)
+                .ok()
+                .filter(|m| m.is_file())
+                .map(|m| (m.modified().ok(), m.len()));
             let now = Instant::now();
             let (prev_failures, prev_error) = match self.seen.get(&name) {
                 Some(st) => {
-                    if st.mtime == mtime && st.len == len {
+                    if st.mtime == mtime && st.len == len && st.sidecar == sidecar {
                         // untouched since last look: deployed files are
                         // done; known-bad files are re-attempted once
                         // their backoff window expires, so a file fixed
@@ -263,6 +321,7 @@ impl DirScanner {
                 FileState {
                     mtime,
                     len,
+                    sidecar,
                     fingerprint: None,
                     failures: prev_failures + 1,
                     retry_at: Some(now + backoff),
@@ -280,14 +339,38 @@ impl DirScanner {
                     continue;
                 }
             };
-            if self.seen.get(&name).and_then(|s| s.fingerprint) == Some(fp) {
-                // bare touch: mtime moved, content identical — no deploy
-                self.seen.insert(name, FileState::deployed(mtime, len, fp));
+            // resolve the sidecar (if any) BEFORE deciding to deploy: a
+            // bad sidecar fails the PAIR closed — nothing deploys under
+            // defaults by accident, an incumbent keeps its config
+            let sidecar_cfg = match sidecar {
+                None => None,
+                Some(_) => match read_sidecar(&spath, &self.cfg) {
+                    Ok(cfg) => Some(cfg),
+                    Err(error) => {
+                        let st = fail(error, &mut events);
+                        self.seen.insert(name, st);
+                        continue;
+                    }
+                },
+            };
+            let artifact_changed =
+                self.seen.get(&name).and_then(|s| s.fingerprint) != Some(fp);
+            // only a sidecar pins config; without one, config never
+            // forces a deploy (swaps keep the incumbent's pipeline
+            // config, as before)
+            let cfg_changed = sidecar_cfg
+                .as_ref()
+                .is_some_and(|want| registry.serve_config(&name).as_ref() != Some(want));
+            if !artifact_changed && !cfg_changed {
+                // bare touch of artifact or sidecar: content and config
+                // both match what is already serving — no deploy
+                self.seen.insert(name, FileState::deployed(mtime, len, sidecar, fp));
                 continue;
             }
-            match deploy(registry, &name, &path, &self.cfg) {
+            let cfg = sidecar_cfg.as_ref().unwrap_or(&self.cfg);
+            match deploy(registry, &name, &path, cfg, cfg_changed) {
                 Ok(ev) => {
-                    self.seen.insert(name, FileState::deployed(mtime, len, fp));
+                    self.seen.insert(name, FileState::deployed(mtime, len, sidecar, fp));
                     events.push(ev);
                 }
                 Err(error) => {
@@ -300,14 +383,17 @@ impl DirScanner {
     }
 }
 
-/// Load `path` and install it under `name`: register a new stem, or
+/// Load `path` and install it under `name`: register a new stem,
 /// hot-swap when the name is already serving (including names
-/// registered outside the watcher, e.g. `--artifact`).
+/// registered outside the watcher, e.g. `--artifact`), or — when a
+/// sidecar pinned a different config (`reconfigure`) — re-register
+/// under the new [`ServeConfig`].
 fn deploy(
     registry: &ModelRegistry,
     name: &str,
     path: &Path,
     cfg: &ServeConfig,
+    reconfigure: bool,
 ) -> Result<WatchEvent, String> {
     let lut = LutModel::load(path).map_err(|e| format!("{e:#}"))?;
     let features = lut.input_features();
@@ -321,6 +407,15 @@ fn deploy(
             features,
             zero_copy,
         }),
+        Err(RegistryError::DuplicateModel(_)) if reconfigure => {
+            // the sidecar pinned a different pipeline config: batching
+            // policy cannot change under a live coordinator, so retire
+            // and re-register (the one watcher path with a brief
+            // routing gap; the version counter restarts at 1)
+            registry.retire(name).map_err(|e| e.to_string())?;
+            registry.register(name, backend, cfg).map_err(|e| e.to_string())?;
+            Ok(WatchEvent::Reconfigured { name: name.to_string(), path: path.to_path_buf() })
+        }
         Err(RegistryError::DuplicateModel(_)) => {
             // rolling deploy of a live model: quarantined — the
             // candidate must survive a golden batch, a rejection leaves
@@ -344,6 +439,7 @@ struct StatsCells {
     scans: AtomicU64,
     registered: AtomicU64,
     swapped: AtomicU64,
+    reconfigured: AtomicU64,
     failed: AtomicU64,
     retries: AtomicU64,
 }
@@ -357,6 +453,8 @@ pub struct WatcherStats {
     pub registered: u64,
     /// Rolling deploys (content-change hot-swaps).
     pub swapped: u64,
+    /// Sidecar-driven config re-registrations.
+    pub reconfigured: u64,
     /// Files rejected (parse/deploy failures).
     pub failed: u64,
     /// Backoff-driven re-attempts of known-bad files.
@@ -397,6 +495,7 @@ impl DirWatcher {
                         match &ev {
                             WatchEvent::Registered { .. } => &stats_t.registered,
                             WatchEvent::Swapped { .. } => &stats_t.swapped,
+                            WatchEvent::Reconfigured { .. } => &stats_t.reconfigured,
                             WatchEvent::Failed { .. } => &stats_t.failed,
                         }
                         .fetch_add(1, Ordering::Relaxed);
@@ -424,6 +523,7 @@ impl DirWatcher {
             scans: self.stats.scans.load(Ordering::Relaxed),
             registered: self.stats.registered.load(Ordering::Relaxed),
             swapped: self.stats.swapped.load(Ordering::Relaxed),
+            reconfigured: self.stats.reconfigured.load(Ordering::Relaxed),
             failed: self.stats.failed.load(Ordering::Relaxed),
             retries: self.stats.retries.load(Ordering::Relaxed),
         }
@@ -675,6 +775,118 @@ mod tests {
             "{evs:?}"
         );
         assert_eq!(registry.models().len(), 1);
+        registry.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sidecars_pin_config_and_fail_closed() {
+        let dir = sandbox("sidecar");
+        let registry = ModelRegistry::new();
+        let mut scanner = DirScanner::new(&dir, ServeConfig::default());
+
+        // sidecar present at first sight: registered under the pinned
+        // config, unspecified keys inherited from the watcher's base
+        std::fs::write(dir.join("digits.ltm"), small_artifact_bytes(21)).unwrap();
+        std::fs::write(
+            dir.join("digits.ltm.json"),
+            r#"{"max_batch": 4, "admission_weight": 3}"#,
+        )
+        .unwrap();
+        let evs = scanner.scan(&registry);
+        assert!(
+            matches!(&evs[0], WatchEvent::Registered { name, .. } if name == "digits"),
+            "{evs:?}"
+        );
+        let cfg = registry.serve_config("digits").unwrap();
+        assert_eq!((cfg.max_batch, cfg.admission_weight), (4, 3));
+        assert_eq!(cfg.queue_cap, ServeConfig::default().queue_cap);
+        let client = registry.client();
+        client.infer("digits", vec![0.2; 784]).unwrap();
+
+        // steady state: neither file changed -> nothing happens
+        assert!(scanner.scan(&registry).is_empty());
+
+        // sidecar-only change: re-registered under the new config (the
+        // artifact content did not change; version restarts at 1)
+        std::thread::sleep(Duration::from_millis(15));
+        std::fs::write(dir.join("digits.ltm.json"), r#"{"max_batch": 8}"#).unwrap();
+        let evs = scanner.scan(&registry);
+        assert!(
+            matches!(&evs[0], WatchEvent::Reconfigured { name, .. } if name == "digits"),
+            "{evs:?}"
+        );
+        let cfg = registry.serve_config("digits").unwrap();
+        assert_eq!((cfg.max_batch, cfg.admission_weight), (8, 1));
+        client.infer("digits", vec![0.2; 784]).unwrap();
+        assert!(scanner.scan(&registry).is_empty(), "reconfigure must settle");
+
+        // a typo'd key fails CLOSED: one Failed event, the incumbent
+        // keeps serving its existing config
+        std::thread::sleep(Duration::from_millis(15));
+        std::fs::write(dir.join("digits.ltm.json"), r#"{"max_batc": 16}"#).unwrap();
+        let evs = scanner.scan(&registry);
+        assert!(matches!(&evs[0], WatchEvent::Failed { .. }), "{evs:?}");
+        assert_eq!(
+            registry.serve_config("digits").unwrap().max_batch,
+            8,
+            "incumbent config must survive a bad sidecar"
+        );
+        client.infer("digits", vec![0.2; 784]).unwrap();
+
+        // an invalid combination is rejected by validate(), same path
+        std::thread::sleep(Duration::from_millis(15));
+        std::fs::write(dir.join("digits.ltm.json"), r#"{"admission_weight": 0}"#).unwrap();
+        let evs = scanner.scan(&registry);
+        assert!(matches!(&evs[0], WatchEvent::Failed { .. }), "{evs:?}");
+        client.infer("digits", vec![0.2; 784]).unwrap();
+
+        // healing the sidecar redeploys (the failure dropped the
+        // fingerprint, so this lands as a quarantined swap)
+        std::thread::sleep(Duration::from_millis(15));
+        std::fs::write(dir.join("digits.ltm.json"), r#"{"max_batch": 8}"#).unwrap();
+        let evs = scanner.scan(&registry);
+        assert_eq!(evs.len(), 1, "{evs:?}");
+        assert_eq!(registry.serve_config("digits").unwrap().max_batch, 8);
+
+        // artifact content change with an unchanged sidecar: a normal
+        // quarantined hot-swap that keeps the pinned config
+        std::thread::sleep(Duration::from_millis(15));
+        std::fs::write(dir.join("digits.ltm"), small_artifact_bytes(22)).unwrap();
+        let evs = scanner.scan(&registry);
+        assert!(matches!(&evs[0], WatchEvent::Swapped { name, .. } if name == "digits"), "{evs:?}");
+        assert_eq!(registry.serve_config("digits").unwrap().max_batch, 8);
+
+        registry.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sidecar_appearing_next_to_a_live_model_reconfigures_it() {
+        let dir = sandbox("sidecar_live");
+        let registry = ModelRegistry::new();
+        let mut scanner = DirScanner::new(&dir, ServeConfig::default());
+
+        // no sidecar: registered under the watcher's base config
+        std::fs::write(dir.join("m.ltm"), small_artifact_bytes(23)).unwrap();
+        let evs = scanner.scan(&registry);
+        assert!(matches!(&evs[0], WatchEvent::Registered { .. }), "{evs:?}");
+
+        // dropping a sidecar in afterwards re-registers under it
+        std::fs::write(dir.join("m.ltm.json"), r#"{"deadline_us": 900000}"#).unwrap();
+        let evs = scanner.scan(&registry);
+        assert!(matches!(&evs[0], WatchEvent::Reconfigured { name, .. } if name == "m"), "{evs:?}");
+        assert_eq!(registry.serve_config("m").unwrap().deadline_us, 900_000);
+
+        // removing the sidecar UNPINS but does not revert: without one,
+        // config never forces a deploy, so the incumbent keeps the last
+        // pinned config until its content changes or a sidecar returns
+        std::fs::remove_file(dir.join("m.ltm.json")).unwrap();
+        let evs = scanner.scan(&registry);
+        assert!(evs.is_empty(), "removing a sidecar must not force a deploy: {evs:?}");
+        assert!(scanner.scan(&registry).is_empty());
+        assert_eq!(registry.serve_config("m").unwrap().deadline_us, 900_000);
+
         registry.shutdown();
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -12,7 +12,7 @@
 //! so one saturated tenant cannot stall another.
 
 use super::registry::RegistryShared;
-use super::{Client, Response, SubmitError};
+use super::{Client, Pending, Response, SubmitError};
 use std::sync::Arc;
 
 /// Cloneable multi-model dispatch handle over the live registry.
@@ -55,6 +55,26 @@ impl FleetClient {
             .get(model)
             .map(|e| e.coord.client())
             .ok_or_else(|| RouteError::UnknownModel(model.to_string()))
+    }
+
+    /// Resolve `model` once and hand back its pipeline [`Client`].
+    /// Useful when a caller routes many rows to one model (the net
+    /// tier's dispatchers): one registry lookup instead of one per
+    /// row. The handle pins resolution time, not the model — a swap
+    /// is observed (same pipeline), a retire surfaces as `ShutDown`.
+    pub fn client(&self, model: &str) -> Result<Client, RouteError> {
+        self.resolve(model)
+    }
+
+    /// Fail-fast submit without waiting: returns a
+    /// [`Pending`] to redeem later.
+    pub fn submit(&self, model: &str, image: Vec<f32>) -> Result<Pending, RouteError> {
+        self.resolve(model)?.submit(image).map_err(RouteError::Submit)
+    }
+
+    /// Blocking submit without waiting (no fail-fast).
+    pub fn submit_blocking(&self, model: &str, image: Vec<f32>) -> Result<Pending, RouteError> {
+        self.resolve(model)?.submit_blocking(image).map_err(RouteError::Submit)
     }
 
     /// Route an inference to a named model (blocking).
@@ -121,6 +141,25 @@ mod tests {
         let fleet = reg.shutdown();
         assert_eq!(fleet.models["a"].stats.completed, 20);
         assert_eq!(fleet.models["b"].stats.completed, 20);
+    }
+
+    #[test]
+    fn submit_then_wait_matches_infer() {
+        let reg = fleet_of(&[("a", 1), ("b", 2)], &ServeConfig::default());
+        let client = reg.client();
+        // submit a whole batch before redeeming any verdict — the
+        // decoupled path the net tier's dispatchers use
+        let pendings: Vec<_> =
+            (0..10).map(|i| client.submit(if i % 2 == 0 { "a" } else { "b" }, vec![0.0])).collect();
+        for (i, p) in pendings.into_iter().enumerate() {
+            let resp = p.unwrap().wait().unwrap();
+            assert_eq!(resp.class, 1 + i % 2);
+        }
+        let resolved = client.client("a").unwrap();
+        assert_eq!(resolved.infer(vec![0.0]).unwrap().class, 1);
+        assert!(matches!(client.submit("ghost", vec![0.0]), Err(RouteError::UnknownModel(_))));
+        let fleet = reg.shutdown();
+        assert_eq!(fleet.completed(), 11);
     }
 
     #[test]

@@ -32,5 +32,6 @@ pub mod train;
 pub mod coordinator;
 pub mod runtime;
 pub mod harness;
+pub mod net;
 pub mod config;
 pub mod util;

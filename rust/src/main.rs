@@ -11,7 +11,8 @@
 //!   plan              planner tables + paper in-text config check
 //!   serve             multi-model registry serving (artifact-first,
 //!                     pure-push; optional dataset-driven load + mid-run
-//!                     hot swaps)
+//!                     hot swaps; --listen adds the socket serving tier)
+//!   client            wire-protocol load generator for `serve --listen`
 //!   ref-check         PJRT reference artifact vs in-Rust forward
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -54,6 +55,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "sweep-partitions" => sweep_partitions(args),
         "plan" => plan(args),
         "serve" => serve(args),
+        "client" => client_cmd(args),
         "ref-check" => ref_check(args),
         "" | "help" => {
             print_help();
@@ -90,6 +92,16 @@ fn print_help() {
          \x20                  (--deadline-us: shed requests older than the deadline; --degrade-after:\n\
          \x20                   mark a model Degraded after N consecutive worker panics; --fault-plan:\n\
          \x20                   deterministic chaos — injected latency / worker panics, see faults.rs)\n\
+         \x20                  [--listen ADDR] [--net-threads N] [--admission-budget ROWS]\n\
+         \x20                  [--admission-weight W]\n\
+         \x20                  (--listen: also serve the LTN1 wire protocol on ADDR with a\n\
+         \x20                   thread-per-core reactor tier; --requests then counts rows answered\n\
+         \x20                   over the wire; --admission-budget caps aggregate in-flight rows\n\
+         \x20                   across all models, split by per-model --admission-weight)\n\
+         \x20 client           --addr HOST:PORT --model NAME [--requests 1000] [--connections 2]\n\
+         \x20                  [--rows-per-frame 16] [--features 784]\n\
+         \x20                  (load-generate against a serve --listen tier; sheds are typed and\n\
+         \x20                   tolerated, any LOST row exits non-zero)\n\
          \x20 ref-check        --arch A --weights w.bin --hlo artifacts/linear_ref_b1.hlo.txt"
     );
 }
@@ -411,6 +423,17 @@ fn serve(args: &Args) -> Result<()> {
     let watch_dir = args.get("watch-dir").map(PathBuf::from);
     let seed = args.get_u64("seed", 0x5E17E);
     let features_flag = Some(args.get_usize("features", 0)).filter(|&f| f > 0);
+    // --listen switches serve into network mode: no in-process push
+    // clients, requests arrive as wire frames, and --requests counts
+    // rows answered over the wire before the drain
+    let listen = args.get("listen").map(str::to_string);
+    let net_mode = listen.is_some();
+    // the shared cross-model admission controller exists in both modes
+    // (push mode never consults it, so its pure-push behavior is
+    // untouched); budget 0 = meter but never reject
+    let admission = Arc::new(tablenet::net::AdmissionController::new(
+        args.get_u64("admission-budget", 0),
+    ));
 
     // dataset-driven load only when asked for; the default is
     // pure-push — raw request rows synthesized from the artifact's own
@@ -490,9 +513,16 @@ fn serve(args: &Args) -> Result<()> {
                 fmt_bits(lut.size_bits()),
                 storage_note(&lut),
             );
-            let pool = make_pool(name, lut.input_features())?;
-            pools.write().unwrap().insert(name.to_string(), pool);
-            pools_version.fetch_add(1, std::sync::atomic::Ordering::Release);
+            if net_mode {
+                // socket traffic needs no request pool; what it needs
+                // is the model's lane weight in the shared admission
+                // controller
+                admission.set_weight(name, cfg.admission_weight as u64);
+            } else {
+                let pool = make_pool(name, lut.input_features())?;
+                pools.write().unwrap().insert(name.to_string(), pool);
+                pools_version.fetch_add(1, std::sync::atomic::Ordering::Release);
+            }
             registry
                 .register(name, Arc::new(lut), cfg)
                 .map_err(|e| anyhow!("registering '{name}': {e}"))
@@ -511,13 +541,21 @@ fn serve(args: &Args) -> Result<()> {
             add_model(name, lut, &fleet.effective(name))?;
         }
     }
-    let names: Vec<String> = pools.read().unwrap().keys().cloned().collect();
-    println!(
-        "serving {} model(s) {:?} | {n_requests} requests, {clients} clients{}",
-        names.len(),
-        names,
-        if data.is_some() { " (dataset-driven)" } else { " (pure-push)" }
-    );
+    let names: Vec<String> = registry.client().models();
+    if net_mode {
+        println!(
+            "serving {} model(s) {:?} | network mode, draining after {n_requests} rows",
+            names.len(),
+            names,
+        );
+    } else {
+        println!(
+            "serving {} model(s) {:?} | {n_requests} requests, {clients} clients{}",
+            names.len(),
+            names,
+            if data.is_some() { " (dataset-driven)" } else { " (pure-push)" }
+        );
+    }
 
     // mid-run rolling deployments: --swap name=path installs a new
     // version once half the load has been attempted. The NAME is
@@ -530,7 +568,7 @@ fn serve(args: &Args) -> Result<()> {
     let mut swaps: Vec<(String, std::path::PathBuf)> = Vec::new();
     for spec in args.get_all("swap") {
         let (name, path) = tablenet::config::parse_artifact_spec(spec)?;
-        if !pools.read().unwrap().contains_key(&name) {
+        if registry.serve_config(&name).is_none() {
             bail!("--swap target '{name}' is not a registered model");
         }
         swaps.push((name, path));
@@ -557,6 +595,8 @@ fn serve(args: &Args) -> Result<()> {
             let pools_w = pools.clone();
             let pools_version_w = pools_version.clone();
             let data_pool_w = data_pool.clone();
+            let registry_w = registry.clone();
+            let admission_w = admission.clone();
             Some(DirWatcher::start(
                 registry.clone(),
                 dir.clone(),
@@ -570,8 +610,23 @@ fn serve(args: &Args) -> Result<()> {
                     let (name, features) = match ev {
                         WatchEvent::Registered { name, features, .. } => (name, *features),
                         WatchEvent::Swapped { name, features, .. } => (name, *features),
+                        WatchEvent::Reconfigured { name, .. } => (name, None),
                         WatchEvent::Failed { .. } => return,
                     };
+                    if net_mode {
+                        // no request pools to maintain for socket
+                        // traffic — pick up the deployed stem's
+                        // (possibly sidecar-pinned) admission weight
+                        if let Some(cfg) = registry_w.serve_config(name) {
+                            admission_w.set_weight(name, cfg.admission_weight as u64);
+                        }
+                        return;
+                    }
+                    if matches!(ev, WatchEvent::Reconfigured { .. }) {
+                        // same artifact content, new pipeline config:
+                        // existing request pools stay valid as-is
+                        return;
+                    }
                     let mut pools = pools_w.write().unwrap();
                     if let Some(existing) = pools.get(name) {
                         // swap of a model already under load: keep the
@@ -631,7 +686,131 @@ fn serve(args: &Args) -> Result<()> {
         }
     };
 
+    // mid-run swap executor shared by both modes. The width guard only
+    // applies when this run drives the model from a request pool (push
+    // mode); network rows carry their own width and are validated by
+    // the pipeline itself.
+    let run_swaps = |swap_failures: &mut Vec<String>| {
+        for (name, path) in &swaps {
+            let outcome = tablenet::engine::LutModel::load(path)
+                .with_context(|| format!("swap target for '{name}'"))
+                .and_then(|lut| {
+                    let row_w = pools
+                        .read()
+                        .unwrap()
+                        .get(name)
+                        .and_then(|p| p.rows.first().map(Vec::len))
+                        .unwrap_or(0);
+                    if let Some(f) = lut.input_features() {
+                        if row_w > 0 && f != row_w {
+                            bail!(
+                                "swap for '{name}': artifact expects {f} input features \
+                                 but this run's request rows have {row_w}"
+                            );
+                        }
+                    }
+                    registry
+                        .swap_quarantined(name, Arc::new(lut))
+                        .map_err(|e| anyhow!("{e}"))
+                });
+            match outcome {
+                Ok(v) => {
+                    println!("hot-swapped '{name}' -> version {v} ({})", path.display());
+                }
+                Err(e) => {
+                    eprintln!("[swap] {e:#} — incumbent '{name}' keeps serving");
+                    swap_failures.push(format!("{e:#}"));
+                }
+            }
+        }
+    };
+
     let start = std::time::Instant::now();
+
+    if let Some(addr) = listen.as_deref() {
+        #[cfg(not(unix))]
+        {
+            let _ = addr;
+            bail!("--listen requires a unix platform (epoll/kqueue serving tier)");
+        }
+        #[cfg(unix)]
+        {
+            use tablenet::net::{NetServer, NetServerOptions};
+            let server = NetServer::start(
+                addr,
+                registry.client(),
+                admission.clone(),
+                NetServerOptions {
+                    threads: args.get_usize("net-threads", 0),
+                    ..NetServerOptions::default()
+                },
+            )
+            .map_err(|e| anyhow!("--listen {addr}: {e}"))?;
+            let budget = admission.budget();
+            println!(
+                "listening on {} | {} net threads | admission budget {}",
+                server.local_addr(),
+                server.threads(),
+                if budget == 0 { "unlimited".to_string() } else { format!("{budget} rows") },
+            );
+            // rows_done counts every row answered over the wire —
+            // served, shed or refused — so the drain threshold is
+            // reached even under pure overload
+            let mut swap_failures: Vec<String> = Vec::new();
+            let mut swaps_left = !swaps.is_empty();
+            while server.rows_done() < n_requests as u64 {
+                if swaps_left && server.rows_done() >= (n_requests / 2) as u64 {
+                    run_swaps(&mut swap_failures);
+                    swaps_left = false;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            if swaps_left {
+                run_swaps(&mut swap_failures);
+            }
+            let elapsed = start.elapsed().as_secs_f64();
+            let net_snap = server.shutdown();
+            if let Some(w) = watcher {
+                let stats = w.stop();
+                println!(
+                    "watcher: {} scans, {} registered, {} swapped, {} reconfigured, \
+                     {} rejected, {} retries",
+                    stats.scans,
+                    stats.registered,
+                    stats.swapped,
+                    stats.reconfigured,
+                    stats.failed,
+                    stats.retries
+                );
+            }
+            let mut fleet_snap = registry.shutdown();
+            net_snap.assert_accounted();
+            println!(
+                "net accounting: exact ({} rows answered over the wire: {} ok, \
+                 {} admission-rejected; every admitted row has exactly one verdict)",
+                net_snap.rows_done,
+                net_snap.rows_ok(),
+                net_snap.rows_admission_rejected(),
+            );
+            let rows_done = net_snap.rows_done;
+            fleet_snap.net = Some(net_snap);
+            println!("{fleet_snap}");
+            println!(
+                "served {rows_done} rows over the wire in {elapsed:.2}s ({:.1} rows/s)",
+                rows_done as f64 / elapsed
+            );
+            fleet_snap.assert_multiplier_less();
+            if !swap_failures.is_empty() {
+                bail!(
+                    "{} mid-run swap(s) rejected (incumbent versions kept serving): {}",
+                    swap_failures.len(),
+                    swap_failures.join(" | ")
+                );
+            }
+            return Ok(());
+        }
+    }
+
     // attempts counts every request a client has ISSUED (served or
     // shed) — the --swap trigger keys off it, so rolling deploys still
     // fire at mid-load even when faults shed part of the traffic
@@ -710,38 +889,7 @@ fn serve(args: &Args) -> Result<()> {
         while attempts.load(std::sync::atomic::Ordering::Relaxed) < (planned / 2) as u64 {
             std::thread::sleep(std::time::Duration::from_millis(1));
         }
-        for (name, path) in &swaps {
-            let outcome = tablenet::engine::LutModel::load(path)
-                .with_context(|| format!("swap target for '{name}'"))
-                .and_then(|lut| {
-                    let row_w = pools
-                        .read()
-                        .unwrap()
-                        .get(name)
-                        .and_then(|p| p.rows.first().map(Vec::len))
-                        .unwrap_or(0);
-                    if let Some(f) = lut.input_features() {
-                        if f != row_w {
-                            bail!(
-                                "swap for '{name}': artifact expects {f} input features \
-                                 but this run's request rows have {row_w}"
-                            );
-                        }
-                    }
-                    registry
-                        .swap_quarantined(name, Arc::new(lut))
-                        .map_err(|e| anyhow!("{e}"))
-                });
-            match outcome {
-                Ok(v) => {
-                    println!("hot-swapped '{name}' -> version {v} ({})", path.display());
-                }
-                Err(e) => {
-                    eprintln!("[swap] {e:#} — incumbent '{name}' keeps serving");
-                    swap_failures.push(format!("{e:#}"));
-                }
-            }
-        }
+        run_swaps(&mut swap_failures);
     }
 
     let (mut served, mut shed, mut correct, mut labeled) = (0usize, 0usize, 0usize, 0usize);
@@ -756,8 +904,14 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(w) = watcher {
         let stats = w.stop();
         println!(
-            "watcher: {} scans, {} registered, {} swapped, {} rejected, {} retries",
-            stats.scans, stats.registered, stats.swapped, stats.failed, stats.retries
+            "watcher: {} scans, {} registered, {} swapped, {} reconfigured, {} rejected, \
+             {} retries",
+            stats.scans,
+            stats.registered,
+            stats.swapped,
+            stats.reconfigured,
+            stats.failed,
+            stats.retries
         );
     }
     let fleet_snap = registry.shutdown();
@@ -783,6 +937,131 @@ fn serve(args: &Args) -> Result<()> {
             swap_failures.len(),
             swap_failures.join(" | ")
         );
+    }
+    Ok(())
+}
+
+/// Wire-protocol load generator: drive a `serve --listen` tier over C
+/// concurrent connections and tally every row's typed outcome. Shed
+/// rows (queue-full, deadline, admission-rejected) are degraded
+/// service, not failures; a LOST row — sent but never answered — is a
+/// protocol violation and exits non-zero.
+fn client_cmd(args: &Args) -> Result<()> {
+    use std::time::Instant;
+    use tablenet::net::{Frame, NetClient, Status};
+
+    let addr = args.get("addr").map(str::to_string).ok_or_else(|| {
+        anyhow!(
+            "usage: tablenet client --addr HOST:PORT --model NAME [--requests ROWS] \
+             [--connections C] [--rows-per-frame R] [--features F]"
+        )
+    })?;
+    let model = args.get_or("model", "digits").to_string();
+    let total_rows = args.get_usize("requests", 1000).max(1);
+    let conns = args.get_usize("connections", 2).max(1);
+    let rows_per_frame = args.get_usize("rows-per-frame", 16).clamp(1, 4096);
+    let features = args.get_usize("features", 784).max(1);
+    let seed = args.get_u64("seed", 0xC11E);
+
+    println!(
+        "client: {total_rows} rows -> '{model}' @ {addr} | {conns} connection(s), \
+         {rows_per_frame} rows/frame, {features} features"
+    );
+    let start = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..conns {
+        // spread the total across connections, remainder to the first
+        let share = total_rows / conns + usize::from(c < total_rows % conns);
+        let addr = addr.clone();
+        let model = model.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut counts = [0u64; 8];
+            let mut rtts: Vec<f64> = Vec::new();
+            let mut rng = tablenet::util::Rng::new(seed ^ (c as u64 + 1));
+            let mut cl = match NetClient::connect_retry(&addr, 2_000) {
+                Ok(cl) => cl,
+                Err(e) => {
+                    eprintln!("[conn {c}] connect {addr}: {e}");
+                    return (counts, rtts, share as u64);
+                }
+            };
+            let mut left = share;
+            let mut lost = 0u64;
+            while left > 0 {
+                let rows = left.min(rows_per_frame);
+                let data: Vec<f32> = (0..rows * features).map(|_| rng.f32()).collect();
+                let t0 = Instant::now();
+                match cl.infer(&model, features as u32, &data) {
+                    Ok(Frame::Reply(reply)) => {
+                        rtts.push(t0.elapsed().as_secs_f64() * 1e6);
+                        for row in &reply.rows {
+                            counts[row.status as usize] += 1;
+                        }
+                        // a short reply would drop rows on the floor —
+                        // count the shortfall as lost, never silently
+                        lost += rows.saturating_sub(reply.rows.len()) as u64;
+                        left -= rows;
+                    }
+                    Ok(Frame::Error(err)) => {
+                        rtts.push(t0.elapsed().as_secs_f64() * 1e6);
+                        counts[err.status as usize] += rows as u64;
+                        left -= rows;
+                    }
+                    Ok(Frame::Request(_)) => {
+                        eprintln!("[conn {c}] protocol violation: server sent a request");
+                        return (counts, rtts, lost + left as u64);
+                    }
+                    Err(e) => {
+                        // io failure mid-stream: everything not yet
+                        // answered on this connection is lost
+                        eprintln!("[conn {c}] {e}");
+                        return (counts, rtts, lost + left as u64);
+                    }
+                }
+            }
+            (counts, rtts, lost)
+        }));
+    }
+
+    let mut counts = [0u64; 8];
+    let mut rtts: Vec<f64> = Vec::new();
+    let mut lost = 0u64;
+    for j in joins {
+        let (c, r, l) = j.join().unwrap();
+        for (total, part) in counts.iter_mut().zip(c) {
+            *total += part;
+        }
+        rtts.extend(r);
+        lost += l;
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let answered: u64 = counts.iter().sum();
+    print!(
+        "client: {answered} rows answered in {elapsed:.2}s ({:.0} rows/s)",
+        answered as f64 / elapsed.max(1e-9)
+    );
+    if !rtts.is_empty() {
+        print!(
+            " | frame RTT p50 {:.0}us p99 {:.0}us",
+            tablenet::util::percentile(&rtts, 50.0),
+            tablenet::util::percentile(&rtts, 99.0)
+        );
+    }
+    println!();
+    println!(
+        "  ok {} | queue-full {} | deadline-shed {} | panicked {} | shut-down {} | \
+         unknown-model {} | admission-rejected {} | malformed {} | lost {lost}",
+        counts[Status::Ok as usize],
+        counts[Status::QueueFull as usize],
+        counts[Status::DeadlineExceeded as usize],
+        counts[Status::WorkerPanicked as usize],
+        counts[Status::ShutDown as usize],
+        counts[Status::UnknownModel as usize],
+        counts[Status::AdmissionRejected as usize],
+        counts[Status::Malformed as usize],
+    );
+    if lost > 0 {
+        bail!("{lost} row(s) lost: sent but never answered");
     }
     Ok(())
 }

@@ -1,0 +1,110 @@
+//! Blocking wire client: one TCP connection speaking the `LTN1`
+//! protocol, used by `tablenet client` for load generation and by the
+//! integration tests/benches. Pure `std` — works on every platform
+//! even where the server's poll backend does not.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use super::proto::{
+    decode_payload, encode_frame, Deframer, Frame, InferRequest, MAX_FRAME_BYTES,
+};
+
+/// A blocking protocol client over one TCP connection.
+pub struct NetClient {
+    stream: TcpStream,
+    deframer: Deframer,
+    buf: Vec<u8>,
+}
+
+impl NetClient {
+    /// Connect (blocking) with `TCP_NODELAY` set.
+    pub fn connect(addr: &str) -> std::io::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(NetClient {
+            stream,
+            deframer: Deframer::new(MAX_FRAME_BYTES),
+            buf: vec![0u8; 16 * 1024],
+        })
+    }
+
+    /// Connect, retrying on refusal for up to `for_ms` — covers the
+    /// race where the server process is still binding its listener.
+    pub fn connect_retry(addr: &str, for_ms: u64) -> std::io::Result<NetClient> {
+        let deadline = Instant::now() + Duration::from_millis(for_ms);
+        loop {
+            match NetClient::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        }
+    }
+
+    /// Send one request frame (`rows * features` values, row-major)
+    /// without waiting for the reply — supports pipelining.
+    pub fn send(&mut self, model: &str, features: u32, data: &[f32]) -> std::io::Result<()> {
+        let mut wire = Vec::with_capacity(16 + data.len() * 4);
+        encode_frame(
+            &Frame::Request(InferRequest {
+                model: model.to_string(),
+                features,
+                data: data.to_vec(),
+            }),
+            &mut wire,
+        );
+        self.stream.write_all(&wire)
+    }
+
+    /// Block until the next complete frame arrives and decode it.
+    pub fn read_frame(&mut self) -> std::io::Result<Frame> {
+        loop {
+            match self.deframer.next_payload() {
+                Ok(Some(payload)) => {
+                    return decode_payload(&payload).map_err(|e| {
+                        std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+                    });
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        e.to_string(),
+                    ));
+                }
+            }
+            let n = self.stream.read(&mut self.buf)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "server closed the connection mid-frame",
+                ));
+            }
+            self.deframer.extend(&self.buf[..n]);
+        }
+    }
+
+    /// Send one frame and block for its reply (request-response mode).
+    pub fn infer(&mut self, model: &str, features: u32, data: &[f32]) -> std::io::Result<Frame> {
+        self.send(model, features, data)?;
+        self.read_frame()
+    }
+
+    /// Read timeout for [`read_frame`](Self::read_frame) (None = block
+    /// forever).
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> std::io::Result<()> {
+        self.stream.set_read_timeout(timeout)
+    }
+
+    /// Half-close the write side so the server sees EOF after the last
+    /// in-flight reply.
+    pub fn finish_writes(&self) -> std::io::Result<()> {
+        self.stream.shutdown(std::net::Shutdown::Write)
+    }
+}

@@ -1,0 +1,396 @@
+//! Ingress metrics for the network serving tier: per-connection and
+//! per-model row accounting, folded into
+//! [`FleetSnapshot`](crate::coordinator::FleetSnapshot) when a socket
+//! listener fronted the registry.
+//!
+//! The net tier extends the pipeline's exact accounting invariant to
+//! the wire: every row that arrives in a well-formed request frame is
+//! answered exactly once, either with a per-row verdict (ok / queue-
+//! full / deadline / panicked / shutdown) or covered by a frame-level
+//! typed error (unknown model, admission rejected). Per model,
+//!
+//! ```text
+//! rows_admitted == rows_ok + rows_queue_full + rows_deadline_shed
+//!                + rows_panicked + rows_shutdown
+//! ```
+//!
+//! and admission-rejected rows are counted separately (they never
+//! entered a pipeline). [`NetSnapshot::assert_accounted`] checks the
+//! invariant for every model.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::admission::AdmissionSnapshot;
+use super::proto::Status;
+
+/// Per-connection counters reported after the connection closes.
+/// Bounded: only the first [`MAX_CONNS_TRACKED`] closed connections
+/// keep their individual entry (totals always cover everything).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ConnIngress {
+    /// Server-assigned connection id (monotonic per reactor set).
+    pub id: u64,
+    /// Peer address at accept time.
+    pub peer: String,
+    /// Request frames received.
+    pub frames_in: u64,
+    /// Rows received in well-formed request frames.
+    pub rows_in: u64,
+    /// Raw bytes read.
+    pub bytes_in: u64,
+    /// Raw bytes written.
+    pub bytes_out: u64,
+    /// True if the connection was failed closed on a protocol error.
+    pub protocol_error: bool,
+}
+
+/// Cap on individually-retained closed-connection entries.
+pub const MAX_CONNS_TRACKED: usize = 256;
+
+/// Per-model row outcome counters at the wire boundary.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ModelIngress {
+    /// Rows that passed admission and were submitted to the pipeline.
+    pub rows_admitted: u64,
+    /// Rows answered with logits.
+    pub rows_ok: u64,
+    /// Rows shed by the per-model queue (pipeline backpressure).
+    pub rows_queue_full: u64,
+    /// Rows shed by the pipeline deadline.
+    pub rows_deadline_shed: u64,
+    /// Rows failed by a worker panic.
+    pub rows_panicked: u64,
+    /// Rows refused because the pipeline was draining.
+    pub rows_shutdown: u64,
+    /// Rows refused by the shared admission budget (never submitted).
+    pub rows_admission_rejected: u64,
+}
+
+impl ModelIngress {
+    /// True iff every admitted row has exactly one recorded verdict.
+    pub fn accounted(&self) -> bool {
+        self.rows_admitted
+            == self.rows_ok
+                + self.rows_queue_full
+                + self.rows_deadline_shed
+                + self.rows_panicked
+                + self.rows_shutdown
+    }
+
+    /// All rows this model saw at the wire, shed or served.
+    pub fn rows_total(&self) -> u64 {
+        self.rows_admitted + self.rows_admission_rejected
+    }
+}
+
+#[derive(Debug, Default)]
+struct ModelCells {
+    admitted: AtomicU64,
+    ok: AtomicU64,
+    queue_full: AtomicU64,
+    deadline_shed: AtomicU64,
+    panicked: AtomicU64,
+    shutdown: AtomicU64,
+    admission_rejected: AtomicU64,
+}
+
+/// Live counters shared by every reactor and dispatcher thread.
+#[derive(Debug, Default)]
+pub struct NetMetrics {
+    accepted: AtomicU64,
+    closed: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+    protocol_errors: AtomicU64,
+    unknown_model_frames: AtomicU64,
+    rows_done: AtomicU64,
+    models: Mutex<BTreeMap<String, Arc<ModelCells>>>,
+    conns: Mutex<Vec<ConnIngress>>,
+}
+
+impl NetMetrics {
+    /// Fresh zeroed metrics.
+    pub fn new() -> Arc<NetMetrics> {
+        Arc::new(NetMetrics::default())
+    }
+
+    fn model(&self, name: &str) -> Arc<ModelCells> {
+        let mut models = self.models.lock().unwrap_or_else(|e| e.into_inner());
+        models.entry(name.to_string()).or_default().clone()
+    }
+
+    /// A connection was accepted.
+    pub fn record_accept(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A connection closed; retain its counters (bounded).
+    pub fn record_close(&self, conn: ConnIngress) {
+        self.closed.fetch_add(1, Ordering::Relaxed);
+        let mut conns = self.conns.lock().unwrap_or_else(|e| e.into_inner());
+        if conns.len() < MAX_CONNS_TRACKED {
+            conns.push(conn);
+        }
+    }
+
+    /// Raw bytes read off a socket.
+    pub fn record_bytes_in(&self, n: u64) {
+        self.bytes_in.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raw bytes written to a socket.
+    pub fn record_bytes_out(&self, n: u64) {
+        self.bytes_out.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A well-formed request frame arrived.
+    pub fn record_frame_in(&self) {
+        self.frames_in.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A reply or error frame was queued for write.
+    pub fn record_frame_out(&self) {
+        self.frames_out.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A frame violated the protocol (connection fails closed).
+    pub fn record_protocol_error(&self) {
+        self.protocol_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request frame named an unregistered model (`rows` covered by
+    /// the error frame).
+    pub fn record_unknown_model(&self, rows: u64) {
+        self.unknown_model_frames.fetch_add(1, Ordering::Relaxed);
+        self.rows_done.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// A request frame arrived while the server was draining and was
+    /// answered with a `ShuttingDown` error frame.
+    pub fn record_drain_refused(&self, rows: u64) {
+        self.rows_done.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// A frame was refused by the shared admission budget.
+    pub fn record_admission_rejected(&self, model: &str, rows: u64) {
+        self.model(model).admission_rejected.fetch_add(rows, Ordering::Relaxed);
+        self.rows_done.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// `rows` rows were submitted into `model`'s pipeline.
+    pub fn record_admitted(&self, model: &str, rows: u64) {
+        self.model(model).admitted.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// One row's pipeline verdict came back.
+    pub fn record_row_verdict(&self, model: &str, status: Status) {
+        let cells = self.model(model);
+        let cell = match status {
+            Status::Ok => &cells.ok,
+            Status::QueueFull => &cells.queue_full,
+            Status::DeadlineExceeded => &cells.deadline_shed,
+            Status::WorkerPanicked => &cells.panicked,
+            // anything else the dispatcher maps onto a row is a drain
+            Status::ShutDown
+            | Status::UnknownModel
+            | Status::AdmissionRejected
+            | Status::Malformed => &cells.shutdown,
+        };
+        cell.fetch_add(1, Ordering::Relaxed);
+        self.rows_done.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total rows answered over the wire (verdicts + frame-level
+    /// errors). This is the serve loop's progress/termination counter.
+    pub fn rows_done(&self) -> u64 {
+        self.rows_done.load(Ordering::Relaxed)
+    }
+
+    /// Freeze every counter. `admission` is attached verbatim.
+    pub fn snapshot(&self, admission: AdmissionSnapshot) -> NetSnapshot {
+        let models = self.models.lock().unwrap_or_else(|e| e.into_inner());
+        let conns = self.conns.lock().unwrap_or_else(|e| e.into_inner());
+        NetSnapshot {
+            connections_accepted: self.accepted.load(Ordering::Relaxed),
+            connections_closed: self.closed.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            unknown_model_frames: self.unknown_model_frames.load(Ordering::Relaxed),
+            rows_done: self.rows_done.load(Ordering::Relaxed),
+            models: models
+                .iter()
+                .map(|(name, c)| {
+                    (
+                        name.clone(),
+                        ModelIngress {
+                            rows_admitted: c.admitted.load(Ordering::Relaxed),
+                            rows_ok: c.ok.load(Ordering::Relaxed),
+                            rows_queue_full: c.queue_full.load(Ordering::Relaxed),
+                            rows_deadline_shed: c.deadline_shed.load(Ordering::Relaxed),
+                            rows_panicked: c.panicked.load(Ordering::Relaxed),
+                            rows_shutdown: c.shutdown.load(Ordering::Relaxed),
+                            rows_admission_rejected: c
+                                .admission_rejected
+                                .load(Ordering::Relaxed),
+                        },
+                    )
+                })
+                .collect(),
+            connections: conns.clone(),
+            admission,
+        }
+    }
+}
+
+/// Frozen ingress state of the whole net tier.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NetSnapshot {
+    /// Connections accepted over the run.
+    pub connections_accepted: u64,
+    /// Connections closed over the run.
+    pub connections_closed: u64,
+    /// Raw bytes read.
+    pub bytes_in: u64,
+    /// Raw bytes written.
+    pub bytes_out: u64,
+    /// Well-formed request frames received.
+    pub frames_in: u64,
+    /// Reply/error frames sent.
+    pub frames_out: u64,
+    /// Frames that violated the protocol (each fails a connection).
+    pub protocol_errors: u64,
+    /// Request frames naming an unregistered model.
+    pub unknown_model_frames: u64,
+    /// Total rows answered over the wire.
+    pub rows_done: u64,
+    /// Per-model wire-boundary row accounting.
+    pub models: BTreeMap<String, ModelIngress>,
+    /// Individually-retained closed connections (bounded by
+    /// [`MAX_CONNS_TRACKED`]).
+    pub connections: Vec<ConnIngress>,
+    /// Shared admission-controller state.
+    pub admission: AdmissionSnapshot,
+}
+
+impl NetSnapshot {
+    /// Panic if any model's wire accounting does not balance exactly.
+    pub fn assert_accounted(&self) {
+        for (name, m) in &self.models {
+            assert!(
+                m.accounted(),
+                "net ingress accounting broken for '{name}': {m:?}"
+            );
+        }
+    }
+
+    /// Rows served with logits, across models.
+    pub fn rows_ok(&self) -> u64 {
+        self.models.values().map(|m| m.rows_ok).sum()
+    }
+
+    /// Rows refused by the shared admission budget, across models.
+    pub fn rows_admission_rejected(&self) -> u64 {
+        self.models.values().map(|m| m.rows_admission_rejected).sum()
+    }
+}
+
+impl std::fmt::Display for NetSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "net: {} conns ({} closed) | frames {} in / {} out | {} B in / {} B out | \
+             {} protocol errors, {} unknown-model frames",
+            self.connections_accepted,
+            self.connections_closed,
+            self.frames_in,
+            self.frames_out,
+            self.bytes_in,
+            self.bytes_out,
+            self.protocol_errors,
+            self.unknown_model_frames,
+        )?;
+        for (name, m) in &self.models {
+            writeln!(
+                f,
+                "net[{name}]: {} admitted = {} ok + {} queue-full + {} deadline + \
+                 {} panicked + {} shutdown | {} admission-rejected",
+                m.rows_admitted,
+                m.rows_ok,
+                m.rows_queue_full,
+                m.rows_deadline_shed,
+                m.rows_panicked,
+                m.rows_shutdown,
+                m.rows_admission_rejected,
+            )?;
+        }
+        write!(f, "{}", self.admission)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_invariant_checks_per_model() {
+        let m = NetMetrics::new();
+        m.record_admitted("a", 10);
+        for _ in 0..7 {
+            m.record_row_verdict("a", Status::Ok);
+        }
+        m.record_row_verdict("a", Status::QueueFull);
+        m.record_row_verdict("a", Status::DeadlineExceeded);
+        let snap = m.snapshot(AdmissionSnapshot::default());
+        assert!(!snap.models["a"].accounted(), "one row still unaccounted");
+        m.record_row_verdict("a", Status::WorkerPanicked);
+        let snap = m.snapshot(AdmissionSnapshot::default());
+        snap.assert_accounted();
+        assert_eq!(snap.rows_done, 10);
+        assert_eq!(snap.rows_ok(), 7);
+    }
+
+    #[test]
+    fn frame_level_errors_count_toward_rows_done_not_admitted() {
+        let m = NetMetrics::new();
+        m.record_unknown_model(16);
+        m.record_admission_rejected("a", 32);
+        let snap = m.snapshot(AdmissionSnapshot::default());
+        snap.assert_accounted();
+        assert_eq!(snap.rows_done, 48);
+        assert_eq!(snap.unknown_model_frames, 1);
+        assert_eq!(snap.models["a"].rows_admission_rejected, 32);
+        assert_eq!(snap.rows_admission_rejected(), 32);
+    }
+
+    #[test]
+    fn closed_connection_entries_are_bounded() {
+        let m = NetMetrics::new();
+        for id in 0..(MAX_CONNS_TRACKED as u64 + 50) {
+            m.record_accept();
+            m.record_close(ConnIngress { id, ..ConnIngress::default() });
+        }
+        let snap = m.snapshot(AdmissionSnapshot::default());
+        assert_eq!(snap.connections_closed, MAX_CONNS_TRACKED as u64 + 50);
+        assert_eq!(snap.connections.len(), MAX_CONNS_TRACKED);
+    }
+
+    #[test]
+    fn display_is_single_pass_and_total() {
+        let m = NetMetrics::new();
+        m.record_admitted("digits", 4);
+        for _ in 0..4 {
+            m.record_row_verdict("digits", Status::Ok);
+        }
+        let snap = m.snapshot(AdmissionSnapshot::default());
+        let text = format!("{snap}");
+        assert!(text.contains("net[digits]: 4 admitted = 4 ok"));
+        assert!(text.contains("admission: unlimited"));
+    }
+}

@@ -1,0 +1,42 @@
+//! Layer 4 — the network serving tier: a dependency-free socket front
+//! for the model registry, so multiplier-less inference is reachable
+//! from outside the process.
+//!
+//! ```text
+//!   clients ──TCP──▶ reactors (thread-per-core, epoll/kqueue)
+//!                        │  parse LTN1 frames, shared admission budget
+//!                        ▼
+//!                 dispatchers ──▶ FleetClient ──▶ per-model pipelines
+//!                                 (registry)      (batcher + workers)
+//! ```
+//!
+//! * [`proto`] — the `LTN1` length-prefixed binary protocol: frame
+//!   codec, typed wire status codes, incremental deframer.
+//! * [`poll`] — epoll/kqueue readiness polling behind a tiny FFI shim
+//!   (no tokio/mio), unix only.
+//! * [`admission`] — shared cross-model token budget with per-model
+//!   queue weights, metering aggregate in-flight rows.
+//! * [`metrics`] — per-connection and per-model ingress accounting,
+//!   folded into [`FleetSnapshot`](crate::coordinator::FleetSnapshot).
+//! * [`server`] — thread-per-core acceptor/reactor tier (unix only).
+//! * [`client`] — blocking load-generation client (`tablenet client`).
+//!
+//! Everything downstream of the dispatcher is the exact same code path
+//! in-process push clients use, so swaps, deadlines, panic isolation
+//! and the accounting invariant are identical for socket traffic.
+
+pub mod admission;
+pub mod client;
+pub mod metrics;
+#[cfg(unix)]
+pub mod poll;
+pub mod proto;
+#[cfg(unix)]
+pub mod server;
+
+pub use admission::{AdmissionController, AdmissionSnapshot, LaneSnapshot};
+pub use client::NetClient;
+pub use metrics::{ConnIngress, ModelIngress, NetMetrics, NetSnapshot};
+pub use proto::{ErrorReply, Frame, InferReply, InferRequest, RowReply, Status, WireError};
+#[cfg(unix)]
+pub use server::{NetServer, NetServerOptions};

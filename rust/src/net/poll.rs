@@ -1,0 +1,464 @@
+//! Readiness polling over a minimal raw-syscall FFI shim — epoll on
+//! Linux, kqueue on macOS — in the same spirit as the `mmap` shim in
+//! `bytes.rs`: no `libc`/`mio`/`tokio`, just the two or three syscalls
+//! the reactor actually needs, declared `extern "C"` and wrapped in a
+//! safe [`Poller`] handle.
+//!
+//! The poller is level-triggered: an fd with buffered input keeps
+//! reporting readable until drained, which keeps reactor logic simple
+//! (no starvation bookkeeping on short reads). On unix platforms
+//! without a backend here, [`Poller::new`] returns `Unsupported` and
+//! the serving tier refuses to start — the rest of the crate is
+//! unaffected.
+
+use std::io;
+use std::os::unix::io::RawFd;
+
+/// One readiness event delivered by [`Poller::wait`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Caller-chosen token registered with the fd.
+    pub token: u64,
+    /// Reading will not block (data buffered, or EOF/err pending).
+    pub readable: bool,
+    /// Writing will not block.
+    pub writable: bool,
+    /// Peer hung up or the fd is in an error state.
+    pub closed: bool,
+}
+
+/// A readiness-poll instance (one per reactor thread).
+#[derive(Debug)]
+pub struct Poller {
+    imp: imp::Poller,
+}
+
+impl Poller {
+    /// A fresh poll instance, or `Unsupported` where no backend exists.
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller { imp: imp::Poller::new()? })
+    }
+
+    /// Register `fd` under `token` with the given interest set.
+    pub fn add(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.imp.ctl(imp::Op::Add, fd, token, readable, writable)
+    }
+
+    /// Replace the interest set of an already-registered `fd`.
+    pub fn modify(
+        &self,
+        fd: RawFd,
+        token: u64,
+        readable: bool,
+        writable: bool,
+    ) -> io::Result<()> {
+        self.imp.ctl(imp::Op::Modify, fd, token, readable, writable)
+    }
+
+    /// Deregister `fd`.
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        self.imp.ctl(imp::Op::Delete, fd, 0, false, false)
+    }
+
+    /// Block up to `timeout_ms` (-1 = forever) and append ready events
+    /// to `out`. Returns the number of events appended; `0` on timeout.
+    pub fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<usize> {
+        self.imp.wait(out, timeout_ms)
+    }
+}
+
+#[cfg(any(target_os = "linux", target_os = "android"))]
+mod imp {
+    use super::Event;
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    // mirror of the kernel's struct epoll_event; packed on x86-64 only,
+    // matching the kernel ABI
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    #[derive(Debug)]
+    pub(super) struct Poller {
+        epfd: RawFd,
+    }
+
+    pub(super) enum Op {
+        Add,
+        Modify,
+        Delete,
+    }
+
+    impl Poller {
+        pub(super) fn new() -> io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd })
+        }
+
+        pub(super) fn ctl(
+            &self,
+            op: Op,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> io::Result<()> {
+            let mut events = EPOLLRDHUP;
+            if readable {
+                events |= EPOLLIN;
+            }
+            if writable {
+                events |= EPOLLOUT;
+            }
+            let mut ev = EpollEvent { events, data: token };
+            let op = match op {
+                Op::Add => EPOLL_CTL_ADD,
+                Op::Modify => EPOLL_CTL_MOD,
+                Op::Delete => EPOLL_CTL_DEL,
+            };
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub(super) fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<usize> {
+            let mut raw = [EpollEvent { events: 0, data: 0 }; 128];
+            let n = loop {
+                let n = unsafe {
+                    epoll_wait(self.epfd, raw.as_mut_ptr(), raw.len() as i32, timeout_ms)
+                };
+                if n >= 0 {
+                    break n as usize;
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() != io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+            };
+            for ev in &raw[..n] {
+                let bits = ev.events;
+                out.push(Event {
+                    token: ev.data,
+                    readable: bits & (EPOLLIN | EPOLLHUP | EPOLLRDHUP | EPOLLERR) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    closed: bits & (EPOLLHUP | EPOLLRDHUP | EPOLLERR) != 0,
+                });
+            }
+            Ok(n)
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+#[cfg(any(target_os = "macos", target_os = "ios"))]
+mod imp {
+    use super::Event;
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    #[repr(C)]
+    struct Kevent {
+        ident: usize,
+        filter: i16,
+        flags: u16,
+        fflags: u32,
+        data: isize,
+        udata: *mut std::ffi::c_void,
+    }
+
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: isize,
+        tv_nsec: isize,
+    }
+
+    extern "C" {
+        fn kqueue() -> i32;
+        fn kevent(
+            kq: i32,
+            changelist: *const Kevent,
+            nchanges: i32,
+            eventlist: *mut Kevent,
+            nevents: i32,
+            timeout: *const Timespec,
+        ) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    const EVFILT_READ: i16 = -1;
+    const EVFILT_WRITE: i16 = -2;
+    const EV_ADD: u16 = 0x0001;
+    const EV_DELETE: u16 = 0x0002;
+    const EV_ENABLE: u16 = 0x0004;
+    const EV_DISABLE: u16 = 0x0008;
+    const EV_EOF: u16 = 0x8000;
+    const EV_ERROR: u16 = 0x4000;
+
+    #[derive(Debug)]
+    pub(super) struct Poller {
+        kq: RawFd,
+    }
+
+    pub(super) enum Op {
+        Add,
+        Modify,
+        Delete,
+    }
+
+    impl Poller {
+        pub(super) fn new() -> io::Result<Poller> {
+            let kq = unsafe { kqueue() };
+            if kq < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { kq })
+        }
+
+        fn apply(&self, changes: &[Kevent]) -> io::Result<()> {
+            let rc = unsafe {
+                kevent(
+                    self.kq,
+                    changes.as_ptr(),
+                    changes.len() as i32,
+                    std::ptr::null_mut(),
+                    0,
+                    std::ptr::null(),
+                )
+            };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub(super) fn ctl(
+            &self,
+            op: Op,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> io::Result<()> {
+            let ev = |filter: i16, flags: u16| Kevent {
+                ident: fd as usize,
+                filter,
+                flags,
+                fflags: 0,
+                data: 0,
+                udata: token as *mut std::ffi::c_void,
+            };
+            match op {
+                Op::Add | Op::Modify => {
+                    // both filters are always registered; interest is
+                    // toggled via enable/disable so Modify never races
+                    // a missing filter
+                    let rd = if readable { EV_ENABLE } else { EV_DISABLE };
+                    let wr = if writable { EV_ENABLE } else { EV_DISABLE };
+                    self.apply(&[
+                        ev(EVFILT_READ, EV_ADD | rd),
+                        ev(EVFILT_WRITE, EV_ADD | wr),
+                    ])
+                }
+                Op::Delete => {
+                    // a filter may not exist (never enabled): ignore
+                    // per-change errors by deleting one at a time
+                    let _ = self.apply(&[ev(EVFILT_READ, EV_DELETE)]);
+                    let _ = self.apply(&[ev(EVFILT_WRITE, EV_DELETE)]);
+                    Ok(())
+                }
+            }
+        }
+
+        pub(super) fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<usize> {
+            let ts;
+            let ts_ptr = if timeout_ms < 0 {
+                std::ptr::null()
+            } else {
+                ts = Timespec {
+                    tv_sec: (timeout_ms / 1000) as isize,
+                    tv_nsec: ((timeout_ms % 1000) * 1_000_000) as isize,
+                };
+                &ts as *const Timespec
+            };
+            let mut raw: Vec<Kevent> = Vec::with_capacity(128);
+            let n = loop {
+                let n = unsafe {
+                    kevent(self.kq, std::ptr::null(), 0, raw.as_mut_ptr(), 128, ts_ptr)
+                };
+                if n >= 0 {
+                    break n as usize;
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() != io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+            };
+            unsafe { raw.set_len(n) };
+            for ev in &raw {
+                let closed = ev.flags & (EV_EOF | EV_ERROR) != 0;
+                out.push(Event {
+                    token: ev.udata as u64,
+                    readable: ev.filter == EVFILT_READ || closed,
+                    writable: ev.filter == EVFILT_WRITE,
+                    closed,
+                });
+            }
+            Ok(n)
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.kq);
+            }
+        }
+    }
+}
+
+#[cfg(not(any(
+    target_os = "linux",
+    target_os = "android",
+    target_os = "macos",
+    target_os = "ios"
+)))]
+mod imp {
+    use super::Event;
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    #[derive(Debug)]
+    pub(super) struct Poller {
+        _never: std::convert::Infallible,
+    }
+
+    pub(super) enum Op {
+        Add,
+        Modify,
+        Delete,
+    }
+
+    impl Poller {
+        pub(super) fn new() -> io::Result<Poller> {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "no readiness-poll backend on this platform (epoll/kqueue only)",
+            ))
+        }
+
+        pub(super) fn ctl(
+            &self,
+            _op: Op,
+            _fd: RawFd,
+            _token: u64,
+            _readable: bool,
+            _writable: bool,
+        ) -> io::Result<()> {
+            match self._never {}
+        }
+
+        pub(super) fn wait(&self, _out: &mut Vec<Event>, _timeout_ms: i32) -> io::Result<usize> {
+            match self._never {}
+        }
+    }
+}
+
+#[cfg(all(test, any(target_os = "linux", target_os = "android", target_os = "macos")))]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn readable_event_fires_with_token() {
+        let (mut a, b) = UnixStream::pair().unwrap();
+        b.set_nonblocking(true).unwrap();
+        let poller = Poller::new().unwrap();
+        poller.add(b.as_raw_fd(), 42, true, false).unwrap();
+
+        let mut events = Vec::new();
+        assert_eq!(poller.wait(&mut events, 0).unwrap(), 0, "idle fd: no events");
+
+        a.write_all(b"ping").unwrap();
+        let n = poller.wait(&mut events, 2000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(events[0].token, 42);
+        assert!(events[0].readable);
+
+        // level-triggered: still readable until drained
+        events.clear();
+        assert_eq!(poller.wait(&mut events, 0).unwrap(), 1);
+        let mut buf = [0u8; 16];
+        let mut b2 = &b;
+        let _ = b2.read(&mut buf).unwrap();
+        events.clear();
+        assert_eq!(poller.wait(&mut events, 0).unwrap(), 0, "drained: quiet again");
+    }
+
+    #[test]
+    fn write_interest_toggles_via_modify() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        let poller = Poller::new().unwrap();
+        poller.add(a.as_raw_fd(), 7, true, false).unwrap();
+        let mut events = Vec::new();
+        assert_eq!(poller.wait(&mut events, 0).unwrap(), 0, "no write interest yet");
+
+        poller.modify(a.as_raw_fd(), 7, true, true).unwrap();
+        let n = poller.wait(&mut events, 2000).unwrap();
+        assert!(n >= 1);
+        assert!(events.iter().any(|e| e.token == 7 && e.writable));
+
+        poller.modify(a.as_raw_fd(), 7, true, false).unwrap();
+        events.clear();
+        assert_eq!(poller.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn hangup_reports_closed() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let poller = Poller::new().unwrap();
+        poller.add(b.as_raw_fd(), 9, true, false).unwrap();
+        drop(a);
+        let mut events = Vec::new();
+        let n = poller.wait(&mut events, 2000).unwrap();
+        assert!(n >= 1);
+        assert!(events[0].readable, "EOF surfaces as readable (read returns 0)");
+        poller.delete(b.as_raw_fd()).unwrap();
+    }
+}

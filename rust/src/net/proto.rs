@@ -1,0 +1,702 @@
+//! Length-prefixed binary wire protocol for the network serving tier.
+//!
+//! Every frame on the wire is a `u32` little-endian length prefix (the
+//! payload size in bytes, excluding the prefix itself) followed by the
+//! payload. A payload starts with a fixed header — the 4-byte magic
+//! `b"LTN1"`, a `u8` protocol version (currently [`VERSION`]) and a
+//! `u8` frame kind — and continues with the kind-specific body:
+//!
+//! ```text
+//! frame    := len:u32le payload[len]
+//! payload  := magic[4]="LTN1" version:u8 kind:u8 body
+//! request  := model_len:u16le model[model_len] rows:u16le features:u32le
+//!             data: rows*features * f32le                     (kind 0x01)
+//! reply    := rows:u16le row*rows                             (kind 0x02)
+//! row      := status:u8 class:u16le version:u64le nlogits:u16le
+//!             logits: nlogits * f32le          (nlogits = 0 on error rows)
+//! error    := status:u8 msg_len:u16le msg[msg_len]            (kind 0x03)
+//! ```
+//!
+//! Versioning rules: a magic mismatch or a version other than
+//! [`VERSION`] is a protocol error — the server answers with a typed
+//! [`Status::Malformed`] error frame and closes the connection (fails
+//! closed). Unknown frame kinds and any limit violation
+//! ([`MAX_FRAME_BYTES`], [`MAX_ROWS_PER_FRAME`], [`MAX_MODEL_NAME`],
+//! [`MAX_FEATURES`]) are treated the same way. Additions within a
+//! version must be purely appended frame kinds; anything that changes
+//! the layout of an existing kind bumps the version byte.
+//!
+//! Error frames carry failures that void a whole request frame (unknown
+//! model, admission rejection, malformed input, shutdown); per-row
+//! pipeline verdicts (queue-full, deadline, panic) ride inside a normal
+//! reply frame as per-row status bytes, so one frame can mix served and
+//! shed rows.
+
+use crate::coordinator::ServeError;
+
+/// Frame magic: the first four payload bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"LTN1";
+/// Current protocol version (the fifth payload byte).
+pub const VERSION: u8 = 1;
+
+/// Hard cap on a single frame payload (16 MiB). A length prefix above
+/// this is rejected before any allocation happens.
+pub const MAX_FRAME_BYTES: usize = 1 << 24;
+/// Hard cap on rows per request frame.
+pub const MAX_ROWS_PER_FRAME: usize = 4096;
+/// Hard cap on the model-name field.
+pub const MAX_MODEL_NAME: usize = 256;
+/// Hard cap on the per-row feature count.
+pub const MAX_FEATURES: usize = 1 << 20;
+
+const KIND_REQUEST: u8 = 0x01;
+const KIND_REPLY: u8 = 0x02;
+const KIND_ERROR: u8 = 0x03;
+
+/// Wire status codes: `0` is success, everything else is a typed
+/// failure mapping [`ServeError`] (and the net tier's own rejection
+/// modes) onto one byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Status {
+    /// Row served; logits follow.
+    Ok = 0,
+    /// Pipeline ingress queue full (per-model backpressure).
+    QueueFull = 1,
+    /// Deadline exceeded before or during batching.
+    DeadlineExceeded = 2,
+    /// The worker executing the batch panicked; row shed, not lost.
+    WorkerPanicked = 3,
+    /// Pipeline (or the whole server) is draining.
+    ShutDown = 4,
+    /// No model under the requested name.
+    UnknownModel = 5,
+    /// The shared cross-model admission budget rejected the frame.
+    AdmissionRejected = 6,
+    /// The frame violated the protocol; the connection is closed.
+    Malformed = 7,
+}
+
+impl Status {
+    /// Decode a wire status byte.
+    pub fn from_u8(v: u8) -> Option<Status> {
+        Some(match v {
+            0 => Status::Ok,
+            1 => Status::QueueFull,
+            2 => Status::DeadlineExceeded,
+            3 => Status::WorkerPanicked,
+            4 => Status::ShutDown,
+            5 => Status::UnknownModel,
+            6 => Status::AdmissionRejected,
+            7 => Status::Malformed,
+            _ => return None,
+        })
+    }
+
+    /// True for the backpressure family: the request was refused to
+    /// protect capacity (retry later), as opposed to being wrong.
+    /// Covers both per-model queue rejection and the shared admission
+    /// budget.
+    pub fn is_queue_full_class(self) -> bool {
+        matches!(self, Status::QueueFull | Status::AdmissionRejected)
+    }
+
+    /// Map a pipeline [`ServeError`] onto its wire status.
+    pub fn from_serve_error(e: &ServeError) -> Status {
+        match e {
+            ServeError::QueueFull => Status::QueueFull,
+            ServeError::DeadlineExceeded { .. } => Status::DeadlineExceeded,
+            ServeError::WorkerPanicked => Status::WorkerPanicked,
+            ServeError::ShutDown => Status::ShutDown,
+        }
+    }
+}
+
+impl std::fmt::Display for Status {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Status::Ok => "ok",
+            Status::QueueFull => "queue-full",
+            Status::DeadlineExceeded => "deadline-exceeded",
+            Status::WorkerPanicked => "worker-panicked",
+            Status::ShutDown => "shutting-down",
+            Status::UnknownModel => "unknown-model",
+            Status::AdmissionRejected => "admission-rejected",
+            Status::Malformed => "malformed",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A client request: `rows` feature vectors for one model, flattened
+/// row-major into `data` (`data.len() == rows * features`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferRequest {
+    /// Registry name of the target model.
+    pub model: String,
+    /// Per-row feature count.
+    pub features: u32,
+    /// Row-major feature data, `rows * features` values.
+    pub data: Vec<f32>,
+}
+
+impl InferRequest {
+    /// Number of rows carried by this request.
+    pub fn rows(&self) -> usize {
+        if self.features == 0 { 0 } else { self.data.len() / self.features as usize }
+    }
+}
+
+/// One row's verdict inside a reply frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowReply {
+    /// Row outcome; logits are empty unless `Ok`.
+    pub status: Status,
+    /// Argmax class (0 on error rows).
+    pub class: u16,
+    /// Backend version that served the row (0 on error rows).
+    pub version: u64,
+    /// Raw logits (empty on error rows).
+    pub logits: Vec<f32>,
+}
+
+impl RowReply {
+    /// A shed/error row carrying only its status.
+    pub fn error(status: Status) -> RowReply {
+        RowReply { status, class: 0, version: 0, logits: Vec::new() }
+    }
+}
+
+/// A reply frame: per-row verdicts, in request row order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferReply {
+    /// One entry per request row, in order.
+    pub rows: Vec<RowReply>,
+}
+
+/// A frame-level typed error: the whole request frame was refused.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorReply {
+    /// Why the frame was refused.
+    pub status: Status,
+    /// Human-readable detail.
+    pub message: String,
+}
+
+/// Any decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server inference request.
+    Request(InferRequest),
+    /// Server → client per-row verdicts.
+    Reply(InferReply),
+    /// Server → client frame-level typed error.
+    Error(ErrorReply),
+}
+
+/// Protocol decode failure. `Truncated` only occurs when decoding a
+/// supposedly complete payload (the deframer never hands out partial
+/// frames), so it always means a corrupt length prefix or body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireError {
+    /// First four payload bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Version byte other than [`VERSION`].
+    UnsupportedVersion(u8),
+    /// Unknown frame kind byte.
+    UnknownKind(u8),
+    /// Payload ended before the structure it declared.
+    Truncated {
+        /// Bytes the structure needed.
+        need: usize,
+        /// Bytes actually present.
+        have: usize,
+    },
+    /// Frame or field exceeded a protocol limit.
+    Oversized {
+        /// What was oversized.
+        what: &'static str,
+        /// Declared size.
+        len: usize,
+        /// Protocol cap.
+        cap: usize,
+    },
+    /// Structurally invalid field contents.
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            WireError::UnsupportedVersion(v) => {
+                write!(f, "unsupported protocol version {v} (speak v{VERSION})")
+            }
+            WireError::UnknownKind(k) => write!(f, "unknown frame kind {k:#04x}"),
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::Oversized { what, len, cap } => {
+                write!(f, "oversized {what}: {len} > cap {cap}")
+            }
+            WireError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+// ---- encoding -------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn begin_payload(out: &mut Vec<u8>, kind: u8) -> usize {
+    let at = out.len();
+    put_u32(out, 0); // length prefix, patched by finish_payload
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    at
+}
+
+fn finish_payload(out: &mut Vec<u8>, at: usize) {
+    let len = (out.len() - at - 4) as u32;
+    out[at..at + 4].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Append `frame` to `out` as a complete length-prefixed wire frame.
+pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
+    match frame {
+        Frame::Request(req) => {
+            let at = begin_payload(out, KIND_REQUEST);
+            put_u16(out, req.model.len() as u16);
+            out.extend_from_slice(req.model.as_bytes());
+            put_u16(out, req.rows() as u16);
+            put_u32(out, req.features);
+            for v in &req.data {
+                put_u32(out, v.to_bits());
+            }
+            finish_payload(out, at);
+        }
+        Frame::Reply(rep) => {
+            let at = begin_payload(out, KIND_REPLY);
+            put_u16(out, rep.rows.len() as u16);
+            for row in &rep.rows {
+                out.push(row.status as u8);
+                put_u16(out, row.class);
+                put_u64(out, row.version);
+                put_u16(out, row.logits.len() as u16);
+                for v in &row.logits {
+                    put_u32(out, v.to_bits());
+                }
+            }
+            finish_payload(out, at);
+        }
+        Frame::Error(err) => {
+            let at = begin_payload(out, KIND_ERROR);
+            out.push(err.status as u8);
+            let msg = err.message.as_bytes();
+            let take = msg.len().min(u16::MAX as usize);
+            put_u16(out, take as u16);
+            out.extend_from_slice(&msg[..take]);
+            finish_payload(out, at);
+        }
+    }
+}
+
+// ---- decoding -------------------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Truncated {
+                need: self.pos + n,
+                have: self.buf.len(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+        let b = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in b.chunks_exact(4) {
+            out.push(f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])));
+        }
+        Ok(out)
+    }
+}
+
+/// Decode one complete frame payload (everything after the length
+/// prefix). Enforces magic, version, kind and all protocol limits.
+pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
+    let mut c = Cursor { buf: payload, pos: 0 };
+    let magic = c.take(4)?;
+    if magic != MAGIC {
+        return Err(WireError::BadMagic([magic[0], magic[1], magic[2], magic[3]]));
+    }
+    let version = c.u8()?;
+    if version != VERSION {
+        return Err(WireError::UnsupportedVersion(version));
+    }
+    match c.u8()? {
+        KIND_REQUEST => {
+            let model_len = c.u16()? as usize;
+            if model_len > MAX_MODEL_NAME {
+                return Err(WireError::Oversized {
+                    what: "model name",
+                    len: model_len,
+                    cap: MAX_MODEL_NAME,
+                });
+            }
+            let model = std::str::from_utf8(c.take(model_len)?)
+                .map_err(|_| WireError::Malformed("model name is not utf-8".into()))?
+                .to_string();
+            let rows = c.u16()? as usize;
+            if rows > MAX_ROWS_PER_FRAME {
+                return Err(WireError::Oversized {
+                    what: "row count",
+                    len: rows,
+                    cap: MAX_ROWS_PER_FRAME,
+                });
+            }
+            if rows == 0 {
+                return Err(WireError::Malformed("request carries zero rows".into()));
+            }
+            let features = c.u32()?;
+            if features as usize > MAX_FEATURES {
+                return Err(WireError::Oversized {
+                    what: "feature count",
+                    len: features as usize,
+                    cap: MAX_FEATURES,
+                });
+            }
+            if features == 0 {
+                return Err(WireError::Malformed("request declares zero features".into()));
+            }
+            let data = c.f32s(rows * features as usize)?;
+            expect_end(&c)?;
+            Ok(Frame::Request(InferRequest { model, features, data }))
+        }
+        KIND_REPLY => {
+            let rows = c.u16()? as usize;
+            if rows > MAX_ROWS_PER_FRAME {
+                return Err(WireError::Oversized {
+                    what: "row count",
+                    len: rows,
+                    cap: MAX_ROWS_PER_FRAME,
+                });
+            }
+            let mut out = Vec::with_capacity(rows);
+            for _ in 0..rows {
+                let status = decode_status(c.u8()?)?;
+                let class = c.u16()?;
+                let version = c.u64()?;
+                let nlogits = c.u16()? as usize;
+                let logits = c.f32s(nlogits)?;
+                out.push(RowReply { status, class, version, logits });
+            }
+            expect_end(&c)?;
+            Ok(Frame::Reply(InferReply { rows: out }))
+        }
+        KIND_ERROR => {
+            let status = decode_status(c.u8()?)?;
+            let msg_len = c.u16()? as usize;
+            let message = String::from_utf8_lossy(c.take(msg_len)?).into_owned();
+            expect_end(&c)?;
+            Ok(Frame::Error(ErrorReply { status, message }))
+        }
+        k => Err(WireError::UnknownKind(k)),
+    }
+}
+
+fn decode_status(v: u8) -> Result<Status, WireError> {
+    Status::from_u8(v).ok_or_else(|| WireError::Malformed(format!("unknown status byte {v}")))
+}
+
+fn expect_end(c: &Cursor<'_>) -> Result<(), WireError> {
+    if c.pos != c.buf.len() {
+        return Err(WireError::Malformed(format!(
+            "{} trailing bytes after frame body",
+            c.buf.len() - c.pos
+        )));
+    }
+    Ok(())
+}
+
+// ---- incremental deframing ------------------------------------------------
+
+/// Incremental deframer over a byte stream: feed arbitrary chunks with
+/// [`Deframer::extend`], pull complete payloads with
+/// [`Deframer::next_payload`]. An oversized length prefix is reported
+/// before any payload allocation.
+#[derive(Debug)]
+pub struct Deframer {
+    buf: Vec<u8>,
+    max_frame: usize,
+}
+
+impl Default for Deframer {
+    fn default() -> Self {
+        Deframer::new(MAX_FRAME_BYTES)
+    }
+}
+
+impl Deframer {
+    /// A deframer enforcing `max_frame` as the payload-size cap.
+    pub fn new(max_frame: usize) -> Deframer {
+        Deframer { buf: Vec::new(), max_frame }
+    }
+
+    /// Feed raw bytes read off the stream.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes currently buffered (incomplete frame tail).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Pop the next complete payload, if one is buffered. `Ok(None)`
+    /// means "need more bytes"; `Err` means the stream is poisoned and
+    /// the connection must be failed closed.
+    pub fn next_payload(&mut self) -> Result<Option<Vec<u8>>, WireError> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len =
+            u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        if len > self.max_frame {
+            return Err(WireError::Oversized {
+                what: "frame payload",
+                len,
+                cap: self.max_frame,
+            });
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let payload = self.buf[4..4 + len].to_vec();
+        self.buf.drain(..4 + len);
+        Ok(Some(payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut wire = Vec::new();
+        encode_frame(frame, &mut wire);
+        let mut d = Deframer::default();
+        d.extend(&wire);
+        let payload = d.next_payload().expect("clean stream").expect("complete frame");
+        assert_eq!(d.buffered(), 0, "no leftover bytes after one frame");
+        decode_payload(&payload).expect("decodes")
+    }
+
+    fn arb_request(rng: &mut Rng) -> Frame {
+        let rows = 1 + rng.below(5);
+        let features = 1 + rng.below(16) as u32;
+        let name_len = 1 + rng.below(12);
+        let model: String =
+            (0..name_len).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+        let data: Vec<f32> =
+            (0..rows * features as usize).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        Frame::Request(InferRequest { model, features, data })
+    }
+
+    fn arb_reply(rng: &mut Rng) -> Frame {
+        let rows = (0..rng.below(6))
+            .map(|_| {
+                let status = Status::from_u8(rng.below(8) as u8).unwrap();
+                if status == Status::Ok {
+                    let n = rng.below(12);
+                    RowReply {
+                        status,
+                        class: rng.below(1000) as u16,
+                        version: rng.next_u64() % 1_000_000,
+                        logits: (0..n).map(|_| rng.f32() * 10.0 - 5.0).collect(),
+                    }
+                } else {
+                    RowReply::error(status)
+                }
+            })
+            .collect();
+        Frame::Reply(InferReply { rows })
+    }
+
+    #[test]
+    fn request_roundtrip_property() {
+        let mut rng = Rng::new(0x1a51);
+        for case in 0..300 {
+            let frame = arb_request(&mut rng);
+            assert_eq!(roundtrip(&frame), frame, "case {case}");
+        }
+    }
+
+    #[test]
+    fn reply_and_error_roundtrip_property() {
+        let mut rng = Rng::new(0x2b52);
+        for case in 0..300 {
+            let frame = arb_reply(&mut rng);
+            assert_eq!(roundtrip(&frame), frame, "case {case}");
+            let err = Frame::Error(ErrorReply {
+                status: Status::from_u8(1 + rng.below(7) as u8).unwrap(),
+                message: format!("case {case} detail"),
+            });
+            assert_eq!(roundtrip(&err), err);
+        }
+    }
+
+    #[test]
+    fn deframer_handles_byte_at_a_time_delivery() {
+        let frame = Frame::Request(InferRequest {
+            model: "m".into(),
+            features: 2,
+            data: vec![1.0, 2.0, 3.0, 4.0],
+        });
+        let mut wire = Vec::new();
+        encode_frame(&frame, &mut wire);
+        encode_frame(&frame, &mut wire);
+        let mut d = Deframer::default();
+        let mut seen = 0;
+        for b in &wire {
+            d.extend(std::slice::from_ref(b));
+            while let Some(p) = d.next_payload().unwrap() {
+                assert_eq!(decode_payload(&p).unwrap(), frame);
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, 2);
+    }
+
+    #[test]
+    fn bad_magic_version_and_kind_rejected() {
+        let frame = Frame::Request(InferRequest {
+            model: "m".into(),
+            features: 1,
+            data: vec![0.5],
+        });
+        let mut wire = Vec::new();
+        encode_frame(&frame, &mut wire);
+        let payload = wire[4..].to_vec();
+
+        let mut bad = payload.clone();
+        bad[0] = b'X';
+        assert!(matches!(decode_payload(&bad), Err(WireError::BadMagic(_))));
+
+        let mut bad = payload.clone();
+        bad[4] = 9;
+        assert!(matches!(decode_payload(&bad), Err(WireError::UnsupportedVersion(9))));
+
+        let mut bad = payload.clone();
+        bad[5] = 0x7f;
+        assert!(matches!(decode_payload(&bad), Err(WireError::UnknownKind(0x7f))));
+    }
+
+    #[test]
+    fn truncated_and_trailing_bytes_rejected() {
+        let frame = Frame::Request(InferRequest {
+            model: "digits".into(),
+            features: 4,
+            data: vec![0.0; 8],
+        });
+        let mut wire = Vec::new();
+        encode_frame(&frame, &mut wire);
+        let payload = &wire[4..];
+        for cut in 6..payload.len() {
+            let got = decode_payload(&payload[..cut]);
+            assert!(got.is_err(), "truncation at {cut} must not decode");
+        }
+        let mut padded = payload.to_vec();
+        padded.push(0);
+        assert!(matches!(decode_payload(&padded), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_without_buffering() {
+        let mut d = Deframer::default();
+        let huge = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes();
+        d.extend(&huge);
+        assert!(matches!(d.next_payload(), Err(WireError::Oversized { .. })));
+    }
+
+    #[test]
+    fn limit_violations_rejected() {
+        // row count over cap
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&MAGIC);
+        payload.push(VERSION);
+        payload.push(KIND_REQUEST);
+        payload.extend_from_slice(&1u16.to_le_bytes());
+        payload.push(b'm');
+        payload.extend_from_slice(&(MAX_ROWS_PER_FRAME as u16 + 1).to_le_bytes());
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        assert!(matches!(decode_payload(&payload), Err(WireError::Oversized { .. })));
+
+        // zero rows is structurally meaningless
+        let req = InferRequest { model: "m".into(), features: 3, data: Vec::new() };
+        let mut wire = Vec::new();
+        encode_frame(&Frame::Request(req), &mut wire);
+        assert!(matches!(decode_payload(&wire[4..]), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn status_wire_codes_are_stable() {
+        for v in 0..8u8 {
+            assert_eq!(Status::from_u8(v).unwrap() as u8, v);
+        }
+        assert!(Status::from_u8(8).is_none());
+        assert!(Status::QueueFull.is_queue_full_class());
+        assert!(Status::AdmissionRejected.is_queue_full_class());
+        assert!(!Status::DeadlineExceeded.is_queue_full_class());
+        assert_eq!(Status::from_serve_error(&ServeError::QueueFull), Status::QueueFull);
+        assert_eq!(
+            Status::from_serve_error(&ServeError::DeadlineExceeded { waited_us: 5 }),
+            Status::DeadlineExceeded
+        );
+        assert_eq!(
+            Status::from_serve_error(&ServeError::WorkerPanicked),
+            Status::WorkerPanicked
+        );
+        assert_eq!(Status::from_serve_error(&ServeError::ShutDown), Status::ShutDown);
+    }
+}

@@ -1,0 +1,651 @@
+//! Thread-per-core socket serving: nonblocking accept + readiness
+//! polling ([`Poller`]) on N reactor threads, each owning its accepted
+//! connections end-to-end. A reactor parses frames, runs admission,
+//! and hands whole request frames to its paired dispatcher thread,
+//! which submits every row into the existing
+//! [`FleetClient`](crate::coordinator::registry::FleetClient) path —
+//! so hot swaps, deadlines, load shedding, panic isolation and the
+//! exact accounting invariant all hold unchanged for socket traffic.
+//!
+//! ```text
+//!                 ┌───────────────┐  frames   ┌──────────────────┐
+//!  conns ──────▶  │ net-reactor-k │ ────────▶ │ net-dispatch-k   │
+//!  (epoll/kqueue) │ parse+admit   │ ◀──────── │ submit rows into │
+//!                 └───────────────┘  replies  │ FleetClient      │
+//!                                             └──────────────────┘
+//! ```
+//!
+//! Ordering contract: replies on one connection come back in request
+//! order (one dispatcher per reactor, frames processed FIFO, rows
+//! inside a frame kept in submit order). A dispatcher blocking on one
+//! slow frame delays other frames of the *same reactor* only; scale
+//! `--net-threads` to isolate tenants.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::registry::FleetClient;
+use crate::coordinator::Client;
+
+use super::admission::AdmissionController;
+use super::metrics::{ConnIngress, NetMetrics, NetSnapshot};
+use super::poll::Poller;
+use super::proto::{
+    decode_payload, encode_frame, Deframer, ErrorReply, Frame, InferReply, InferRequest,
+    RowReply, Status, MAX_FRAME_BYTES,
+};
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKE: u64 = 1;
+const TOKEN_BASE: u64 = 2;
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Tuning knobs for [`NetServer::start`].
+#[derive(Debug, Clone)]
+pub struct NetServerOptions {
+    /// Reactor thread count; `0` = one per available core.
+    pub threads: usize,
+    /// Per-frame payload cap (default [`MAX_FRAME_BYTES`]).
+    pub max_frame_bytes: usize,
+    /// Set `TCP_NODELAY` on accepted connections.
+    pub nodelay: bool,
+}
+
+impl Default for NetServerOptions {
+    fn default() -> Self {
+        NetServerOptions { threads: 0, max_frame_bytes: MAX_FRAME_BYTES, nodelay: true }
+    }
+}
+
+/// Wakes a reactor out of `Poller::wait` (self-pipe).
+struct Waker {
+    pipe: UnixStream,
+}
+
+impl Waker {
+    fn wake(&self) {
+        // a full pipe already guarantees a pending wakeup
+        let _ = (&self.pipe).write(&[1u8]);
+    }
+}
+
+/// One frame handed from a reactor to its dispatcher.
+struct Dispatch {
+    token: u64,
+    model: String,
+    features: usize,
+    data: Vec<f32>,
+    client: Client,
+}
+
+/// One encoded reply travelling back from a dispatcher to its reactor.
+struct Completion {
+    token: u64,
+    bytes: Vec<u8>,
+}
+
+struct ReactorHandle {
+    waker: Arc<Waker>,
+    join: std::thread::JoinHandle<()>,
+}
+
+/// A running socket serving tier. Dropping it (or calling
+/// [`shutdown`](NetServer::shutdown)) drains in-flight requests,
+/// answers anything newly arrived with a typed `ShuttingDown` error,
+/// flushes and joins every thread.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    threads: usize,
+    shutdown: Arc<AtomicBool>,
+    reactors: Vec<ReactorHandle>,
+    metrics: Arc<NetMetrics>,
+    admission: Arc<AdmissionController>,
+}
+
+impl NetServer {
+    /// Bind `addr` and start serving `fleet` behind `admission`.
+    pub fn start(
+        addr: &str,
+        fleet: FleetClient,
+        admission: Arc<AdmissionController>,
+        opts: NetServerOptions,
+    ) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        // fail at start, not inside a thread, where no poll backend exists
+        drop(Poller::new()?);
+
+        let threads = if opts.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            opts.threads
+        }
+        .clamp(1, 64);
+
+        let metrics = NetMetrics::new();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut reactors = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let (wake_tx, wake_rx) = UnixStream::pair()?;
+            wake_tx.set_nonblocking(true)?;
+            wake_rx.set_nonblocking(true)?;
+            let waker = Arc::new(Waker { pipe: wake_tx });
+            let completions: Arc<Mutex<Vec<Completion>>> = Arc::new(Mutex::new(Vec::new()));
+            let (dispatch_tx, dispatch_rx) = std::sync::mpsc::channel::<Dispatch>();
+
+            let dispatcher = {
+                let admission = admission.clone();
+                let metrics = metrics.clone();
+                let completions = completions.clone();
+                let waker = waker.clone();
+                std::thread::Builder::new()
+                    .name(format!("net-dispatch-{i}"))
+                    .spawn(move || {
+                        dispatcher_loop(dispatch_rx, admission, metrics, completions, waker)
+                    })?
+            };
+
+            let reactor = Reactor {
+                listener: listener.try_clone()?,
+                wake_rx,
+                dispatch_tx: Some(dispatch_tx),
+                dispatcher: Some(dispatcher),
+                completions,
+                shutdown: shutdown.clone(),
+                metrics: metrics.clone(),
+                admission: admission.clone(),
+                fleet: fleet.clone(),
+                opts: opts.clone(),
+            };
+            let join = std::thread::Builder::new()
+                .name(format!("net-reactor-{i}"))
+                .spawn(move || reactor.run())?;
+            reactors.push(ReactorHandle { waker, join });
+        }
+
+        Ok(NetServer { local_addr, threads, shutdown, reactors, metrics, admission })
+    }
+
+    /// The bound address (resolves `:0` to the chosen port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Reactor thread count actually running.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Live ingress counters (shared with the reactors).
+    pub fn metrics(&self) -> &Arc<NetMetrics> {
+        &self.metrics
+    }
+
+    /// Total rows answered over the wire so far.
+    pub fn rows_done(&self) -> u64 {
+        self.metrics.rows_done()
+    }
+
+    /// Point-in-time ingress snapshot without stopping the server.
+    pub fn snapshot(&self) -> NetSnapshot {
+        self.metrics.snapshot(self.admission.snapshot())
+    }
+
+    fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for r in &self.reactors {
+            r.waker.wake();
+        }
+        for r in self.reactors.drain(..) {
+            let _ = r.join.join();
+        }
+    }
+
+    /// Drain, stop every thread and return the final ingress snapshot.
+    pub fn shutdown(mut self) -> NetSnapshot {
+        self.stop();
+        self.metrics.snapshot(self.admission.snapshot())
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+// ---- dispatcher -----------------------------------------------------------
+
+fn dispatcher_loop(
+    rx: Receiver<Dispatch>,
+    admission: Arc<AdmissionController>,
+    metrics: Arc<NetMetrics>,
+    completions: Arc<Mutex<Vec<Completion>>>,
+    waker: Arc<Waker>,
+) {
+    while let Ok(d) = rx.recv() {
+        let rows = d.data.len() / d.features.max(1);
+        // submit every row before waiting on any: rows of one frame
+        // land in the ingress queue together and batch together
+        let mut pendings = Vec::with_capacity(rows);
+        for row in d.data.chunks_exact(d.features) {
+            pendings.push(d.client.submit(row.to_vec()));
+        }
+        let mut out_rows = Vec::with_capacity(rows);
+        for p in pendings {
+            let verdict = match p {
+                Ok(pending) => pending.wait(),
+                Err(e) => Err(e),
+            };
+            let row = match verdict {
+                Ok(resp) => RowReply {
+                    status: Status::Ok,
+                    class: resp.class.min(u16::MAX as usize) as u16,
+                    version: resp.version,
+                    logits: resp.logits,
+                },
+                Err(e) => RowReply::error(Status::from_serve_error(&e)),
+            };
+            metrics.record_row_verdict(&d.model, row.status);
+            out_rows.push(row);
+        }
+        admission.release(&d.model, rows as u64);
+
+        let mut bytes = Vec::new();
+        encode_frame(&Frame::Reply(InferReply { rows: out_rows }), &mut bytes);
+        metrics.record_frame_out();
+        completions.lock().unwrap_or_else(|e| e.into_inner()).push(Completion {
+            token: d.token,
+            bytes,
+        });
+        waker.wake();
+    }
+}
+
+// ---- reactor --------------------------------------------------------------
+
+struct Conn {
+    stream: TcpStream,
+    token: u64,
+    deframer: Deframer,
+    out: Vec<u8>,
+    out_pos: usize,
+    want_write: bool,
+    want_read: bool,
+    in_flight: usize,
+    closing: bool,
+    peer_eof: bool,
+    dead: bool,
+    stats: ConnIngress,
+}
+
+impl Conn {
+    fn flushed(&self) -> bool {
+        self.out_pos >= self.out.len()
+    }
+
+    fn finished(&self, draining: bool) -> bool {
+        if self.dead {
+            return true;
+        }
+        if !self.flushed() {
+            return false;
+        }
+        if self.closing {
+            return true;
+        }
+        (self.peer_eof || draining) && self.in_flight == 0
+    }
+}
+
+struct Reactor {
+    listener: TcpListener,
+    wake_rx: UnixStream,
+    dispatch_tx: Option<Sender<Dispatch>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    completions: Arc<Mutex<Vec<Completion>>>,
+    shutdown: Arc<AtomicBool>,
+    metrics: Arc<NetMetrics>,
+    admission: Arc<AdmissionController>,
+    fleet: FleetClient,
+    opts: NetServerOptions,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let poller = match Poller::new() {
+            Ok(p) => p,
+            Err(_) => return, // probed at start; cannot happen here
+        };
+        if poller.add(self.listener.as_raw_fd(), TOKEN_LISTENER, true, false).is_err() {
+            return;
+        }
+        if poller.add(self.wake_rx.as_raw_fd(), TOKEN_WAKE, true, false).is_err() {
+            return;
+        }
+
+        let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
+        let mut next_token = TOKEN_BASE;
+        let mut events = Vec::with_capacity(128);
+        let mut listener_armed = true;
+
+        loop {
+            let draining = self.shutdown.load(Ordering::SeqCst);
+            if draining && listener_armed {
+                let _ = poller.delete(self.listener.as_raw_fd());
+                listener_armed = false;
+            }
+            if draining && conns.is_empty() {
+                break;
+            }
+
+            events.clear();
+            // the waker covers completions and shutdown; the timeout is
+            // a belt-and-braces bound so a lost wakeup can only stall,
+            // never hang, the drain
+            if poller.wait(&mut events, 100).is_err() {
+                break;
+            }
+
+            self.drain_wake();
+            self.apply_completions(&poller, &mut conns);
+
+            for k in 0..events.len() {
+                let ev = events[k];
+                match ev.token {
+                    TOKEN_LISTENER => {
+                        if !draining {
+                            self.accept_all(&poller, &mut conns, &mut next_token);
+                        }
+                    }
+                    TOKEN_WAKE => self.drain_wake(),
+                    token => {
+                        if let Some(conn) = conns.get_mut(&token) {
+                            if ev.readable {
+                                self.handle_readable(conn, draining);
+                            }
+                            if ev.writable {
+                                Self::flush(&self.metrics, conn);
+                            }
+                            Self::update_interest(&poller, conn);
+                        }
+                    }
+                }
+            }
+
+            let done: Vec<u64> =
+                conns.values().filter(|c| c.finished(draining)).map(|c| c.token).collect();
+            for token in done {
+                if let Some(conn) = conns.remove(&token) {
+                    let _ = poller.delete(conn.stream.as_raw_fd());
+                    self.metrics.record_close(conn.stats);
+                }
+            }
+        }
+
+        for (_, conn) in conns {
+            let _ = poller.delete(conn.stream.as_raw_fd());
+            self.metrics.record_close(conn.stats);
+        }
+        // closing the dispatch channel ends the dispatcher
+        drop(self.dispatch_tx.take());
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+
+    fn drain_wake(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match (&self.wake_rx).read(&mut buf) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn apply_completions(&self, poller: &Poller, conns: &mut BTreeMap<u64, Conn>) {
+        let done: Vec<Completion> = {
+            let mut q = self.completions.lock().unwrap_or_else(|e| e.into_inner());
+            q.drain(..).collect()
+        };
+        for c in done {
+            // the conn may have died while its rows were in flight; the
+            // verdicts are already accounted, only the bytes are dropped
+            if let Some(conn) = conns.get_mut(&c.token) {
+                conn.in_flight -= 1;
+                conn.out.extend_from_slice(&c.bytes);
+                Self::flush(&self.metrics, conn);
+                Self::update_interest(poller, conn);
+            }
+        }
+    }
+
+    fn accept_all(
+        &self,
+        poller: &Poller,
+        conns: &mut BTreeMap<u64, Conn>,
+        next_token: &mut u64,
+    ) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    if self.opts.nodelay {
+                        let _ = stream.set_nodelay(true);
+                    }
+                    let token = *next_token;
+                    *next_token += 1;
+                    if poller.add(stream.as_raw_fd(), token, true, false).is_err() {
+                        continue;
+                    }
+                    self.metrics.record_accept();
+                    conns.insert(
+                        token,
+                        Conn {
+                            stream,
+                            token,
+                            deframer: Deframer::new(self.opts.max_frame_bytes),
+                            out: Vec::new(),
+                            out_pos: 0,
+                            want_write: false,
+                            want_read: true,
+                            in_flight: 0,
+                            closing: false,
+                            peer_eof: false,
+                            dead: false,
+                            stats: ConnIngress {
+                                id: token,
+                                peer: peer.to_string(),
+                                ..ConnIngress::default()
+                            },
+                        },
+                    );
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn handle_readable(&self, conn: &mut Conn, draining: bool) {
+        if conn.closing || conn.peer_eof {
+            return;
+        }
+        let mut buf = [0u8; READ_CHUNK];
+        loop {
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    conn.peer_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.metrics.record_bytes_in(n as u64);
+                    conn.stats.bytes_in += n as u64;
+                    conn.deframer.extend(&buf[..n]);
+                    self.process_frames(conn, draining);
+                    if conn.closing {
+                        break;
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    fn process_frames(&self, conn: &mut Conn, draining: bool) {
+        loop {
+            let payload = match conn.deframer.next_payload() {
+                Ok(Some(p)) => p,
+                Ok(None) => break,
+                Err(e) => {
+                    self.protocol_error(conn, &e.to_string());
+                    break;
+                }
+            };
+            match decode_payload(&payload) {
+                Ok(Frame::Request(req)) => self.handle_request(conn, req, draining),
+                Ok(_) => {
+                    self.protocol_error(conn, "only request frames flow client -> server");
+                }
+                Err(e) => self.protocol_error(conn, &e.to_string()),
+            }
+            if conn.closing {
+                break;
+            }
+        }
+    }
+
+    fn handle_request(&self, conn: &mut Conn, req: InferRequest, draining: bool) {
+        let rows = req.rows() as u64;
+        self.metrics.record_frame_in();
+        conn.stats.frames_in += 1;
+        conn.stats.rows_in += rows;
+
+        if draining {
+            self.metrics.record_drain_refused(rows);
+            Self::queue_error(&self.metrics, conn, Status::ShutDown, "server is draining");
+            return;
+        }
+        let client = match self.fleet.client(&req.model) {
+            Ok(c) => c,
+            Err(_) => {
+                self.metrics.record_unknown_model(rows);
+                Self::queue_error(
+                    &self.metrics,
+                    conn,
+                    Status::UnknownModel,
+                    &format!("no model '{}' is registered", req.model),
+                );
+                return;
+            }
+        };
+        if !self.admission.try_admit(&req.model, rows) {
+            self.metrics.record_admission_rejected(&req.model, rows);
+            Self::queue_error(
+                &self.metrics,
+                conn,
+                Status::AdmissionRejected,
+                "shared admission budget exhausted; retry later",
+            );
+            return;
+        }
+        self.metrics.record_admitted(&req.model, rows);
+        conn.in_flight += 1;
+        let dispatch = Dispatch {
+            token: conn.token,
+            model: req.model,
+            features: req.features as usize,
+            data: req.data,
+            client,
+        };
+        let lost = match &self.dispatch_tx {
+            Some(tx) => match tx.send(dispatch) {
+                Ok(()) => return,
+                Err(std::sync::mpsc::SendError(d)) => d,
+            },
+            None => dispatch,
+        };
+        // dispatcher gone (only during teardown): undo the admit and
+        // answer every admitted row with a ShutDown verdict so the
+        // wire accounting still balances exactly
+        conn.in_flight -= 1;
+        self.admission.release(&lost.model, rows);
+        let mut out_rows = Vec::with_capacity(rows as usize);
+        for _ in 0..rows {
+            self.metrics.record_row_verdict(&lost.model, Status::ShutDown);
+            out_rows.push(RowReply::error(Status::ShutDown));
+        }
+        encode_frame(&Frame::Reply(InferReply { rows: out_rows }), &mut conn.out);
+        self.metrics.record_frame_out();
+        Self::flush(&self.metrics, conn);
+    }
+
+    fn protocol_error(&self, conn: &mut Conn, detail: &str) {
+        self.metrics.record_protocol_error();
+        conn.stats.protocol_error = true;
+        Self::queue_error(&self.metrics, conn, Status::Malformed, detail);
+        conn.closing = true; // fail closed once the error frame flushes
+    }
+
+    fn queue_error(metrics: &NetMetrics, conn: &mut Conn, status: Status, message: &str) {
+        let frame = Frame::Error(ErrorReply { status, message: message.to_string() });
+        encode_frame(&frame, &mut conn.out);
+        metrics.record_frame_out();
+        Self::flush(metrics, conn);
+    }
+
+    fn flush(metrics: &NetMetrics, conn: &mut Conn) {
+        while conn.out_pos < conn.out.len() {
+            match conn.stream.write(&conn.out[conn.out_pos..]) {
+                Ok(0) => {
+                    conn.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.out_pos += n;
+                    metrics.record_bytes_out(n as u64);
+                    conn.stats.bytes_out += n as u64;
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+        if conn.flushed() {
+            conn.out.clear();
+            conn.out_pos = 0;
+        }
+    }
+
+    fn update_interest(poller: &Poller, conn: &mut Conn) {
+        let want_read = !(conn.peer_eof || conn.closing || conn.dead);
+        let want_write = !conn.flushed() && !conn.dead;
+        if want_read != conn.want_read || want_write != conn.want_write {
+            let _ =
+                poller.modify(conn.stream.as_raw_fd(), conn.token, want_read, want_write);
+            conn.want_read = want_read;
+            conn.want_write = want_write;
+        }
+    }
+}

@@ -95,6 +95,7 @@ fn chaos_soak_loses_nothing_and_duplicates_nothing() {
         queue_cap: 16,
         deadline_us: 3_000,
         degrade_after: 0,
+        ..ServeConfig::default()
     };
     reg.register("a", Arc::new(Echo), &cfg).unwrap();
     reg.register("b", Arc::new(Echo), &cfg).unwrap();
@@ -205,6 +206,7 @@ fn injected_panics_latch_degraded_and_a_swap_clears_it() {
         queue_cap: 8,
         deadline_us: 0,
         degrade_after: 2,
+        ..ServeConfig::default()
     };
     reg.register("m", Arc::new(Echo), &cfg).unwrap();
     let client = reg.client();
@@ -244,6 +246,7 @@ fn saturation_with_deadlines_sheds_cleanly_not_silently() {
         queue_cap: 2,
         deadline_us: 2_000,
         degrade_after: 0,
+        ..ServeConfig::default()
     };
     reg.register("m", Arc::new(Echo), &cfg).unwrap();
     let n_threads = 4u64;

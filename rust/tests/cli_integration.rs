@@ -29,12 +29,15 @@ fn help_lists_commands() {
         "sweep-bits",
         "sweep-partitions",
         "serve",
+        "client",
     ] {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
     assert!(text.contains("--artifact"), "help missing --artifact flag");
     assert!(text.contains("--swap"), "help missing --swap flag");
     assert!(text.contains("--watch-dir"), "help missing --watch-dir flag");
+    assert!(text.contains("--listen"), "help missing --listen flag");
+    assert!(text.contains("--admission-budget"), "help missing --admission-budget flag");
 }
 
 #[test]
@@ -376,6 +379,81 @@ fn serve_watch_dir_rolls_deploys_without_restart() {
     );
     assert!(text.contains("served 600 requests"), "{text}");
     assert!(text.contains("mults=0"), "watch-dir serve must stay multiplier-less: {text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_without_listen_is_pure_push_unchanged() {
+    // backward-compat: --listen is strictly additive. Without it serve
+    // must never open a socket and the push-mode output is unchanged —
+    // no listen banner, no wire ledger, same served-N summary line.
+    let dir = sandbox("nolisten");
+    let ltm = train_and_compile(&dir, "model", 41);
+    let spec = format!("m={}", ltm.display());
+    let out = bin()
+        .args(["serve", "--artifact", &spec])
+        .args(["--requests", "40", "--clients", "2", "--max-batch", "8"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("pure-push"), "{text}");
+    assert!(text.contains("served 40 requests"), "{text}");
+    assert!(text.contains("mults=0"), "{text}");
+    assert!(!text.contains("listening on"), "no socket without --listen: {text}");
+    assert!(!text.contains("over the wire"), "no wire ledger without --listen: {text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[cfg(unix)]
+#[test]
+fn serve_listen_end_to_end_with_wire_client() {
+    use std::io::{BufRead, Read};
+
+    let dir = sandbox("listen");
+    let ltm = train_and_compile(&dir, "model", 42);
+    let spec = format!("live={}", ltm.display());
+    // --listen 127.0.0.1:0 binds an ephemeral port; the server prints
+    // the resolved address in its banner, so scrape it from stdout
+    let mut child = bin()
+        .args(["serve", "--artifact", &spec])
+        .args(["--listen", "127.0.0.1:0", "--net-threads", "1", "--requests", "96"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let mut stdout = std::io::BufReader::new(child.stdout.take().unwrap());
+    let mut banner = String::new();
+    let addr = loop {
+        let mut line = String::new();
+        if stdout.read_line(&mut line).unwrap() == 0 {
+            let _ = child.kill();
+            panic!("serve exited before the listen banner:\n{banner}");
+        }
+        banner.push_str(&line);
+        if let Some(rest) = line.strip_prefix("listening on ") {
+            break rest.split(' ').next().unwrap().trim().to_string();
+        }
+    };
+
+    let out = bin()
+        .args(["client", "--addr", &addr, "--model", "live"])
+        .args(["--requests", "96", "--connections", "2", "--rows-per-frame", "8"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let ctext = String::from_utf8_lossy(&out.stdout);
+    assert!(ctext.contains("lost 0"), "client lost rows: {ctext}");
+
+    // the 96 rows the client sent are exactly the drain threshold: the
+    // server exits zero with the wire ledger balanced
+    let mut rest = String::new();
+    stdout.read_to_string(&mut rest).unwrap();
+    let status = child.wait().unwrap();
+    assert!(status.success(), "serve --listen failed:\n{banner}{rest}");
+    assert!(rest.contains("net accounting: exact"), "{rest}");
+    assert!(rest.contains("served 96 rows over the wire"), "{rest}");
+    assert!(rest.contains("mults=0"), "{rest}");
     std::fs::remove_dir_all(&dir).ok();
 }
 

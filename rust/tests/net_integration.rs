@@ -1,0 +1,413 @@
+//! Socket-level integration tests for the network serving tier.
+//!
+//! Everything here drives a real [`NetServer`] over loopback TCP and
+//! asserts the wire contract end to end:
+//!
+//! * **typed failure, fail closed** — malformed, truncated and
+//!   oversized frames are answered with a [`Status::Malformed`] error
+//!   frame and the connection closes; the server (and its accounting)
+//!   survives;
+//! * **zero lost / zero duplicated** — a multi-connection soak with a
+//!   mid-run quarantined swap and injected faults accounts for every
+//!   row exactly once, and the wire-boundary counters match both the
+//!   client tallies and the pipeline's own fleet snapshot class for
+//!   class;
+//! * **admission backpressure** — when the shared budget is exhausted,
+//!   whole frames are refused with a typed queue-full-class error
+//!   ([`Status::AdmissionRejected`]) and nothing leaks in flight.
+#![cfg(unix)]
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+use tablenet::config::ServeConfig;
+use tablenet::coordinator::faults::{
+    silence_injected_panics, FaultInjector, FaultPlan, InjectedPanic,
+};
+use tablenet::coordinator::registry::ModelRegistry;
+use tablenet::coordinator::{Backend, InferOutput};
+use tablenet::engine::counters::Counters;
+use tablenet::net::proto::{decode_payload, encode_frame};
+use tablenet::net::{
+    AdmissionController, Frame, NetClient, NetServer, NetServerOptions, Status,
+};
+
+const FEATURES: u32 = 4;
+
+/// Instant echo backend: class = row[0] as usize.
+struct Echo;
+
+impl Backend for Echo {
+    fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+        images
+            .iter()
+            .map(|img| InferOutput {
+                class: img[0] as usize,
+                logits: vec![img[0], -img[0]],
+                counters: Counters { lut_evals: 1, ..Default::default() },
+            })
+            .collect()
+    }
+
+    fn input_features(&self) -> Option<usize> {
+        Some(FEATURES as usize)
+    }
+
+    fn name(&self) -> &'static str {
+        "echo"
+    }
+}
+
+/// Echo that also sleeps per batch, to hold admission tokens in flight.
+struct SlowEcho(Duration);
+
+impl Backend for SlowEcho {
+    fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+        std::thread::sleep(self.0);
+        Echo.infer_batch(images)
+    }
+
+    fn input_features(&self) -> Option<usize> {
+        Some(FEATURES as usize)
+    }
+
+    fn name(&self) -> &'static str {
+        "slow-echo"
+    }
+}
+
+/// A candidate build that panics on every batch — must never survive
+/// quarantine.
+struct Exploding;
+
+impl Backend for Exploding {
+    fn infer_batch(&self, _images: &[Vec<f32>]) -> Vec<InferOutput> {
+        std::panic::panic_any(InjectedPanic)
+    }
+
+    fn input_features(&self) -> Option<usize> {
+        Some(FEATURES as usize)
+    }
+
+    fn name(&self) -> &'static str {
+        "exploding"
+    }
+}
+
+/// Write one raw length-prefixed frame (payload supplied verbatim).
+fn write_raw(stream: &mut TcpStream, payload: &[u8]) {
+    let mut buf = Vec::with_capacity(4 + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    stream.write_all(&buf).unwrap();
+}
+
+/// Read one frame off a raw stream; `None` on clean EOF.
+fn read_raw(stream: &mut TcpStream) -> Option<Frame> {
+    let mut len = [0u8; 4];
+    if stream.read_exact(&mut len).is_err() {
+        return None;
+    }
+    let mut payload = vec![0u8; u32::from_le_bytes(len) as usize];
+    stream.read_exact(&mut payload).unwrap();
+    Some(decode_payload(&payload).unwrap())
+}
+
+/// A well-formed request payload (length prefix stripped) for slicing
+/// into truncated variants.
+fn request_payload(model: &str, rows: usize) -> Vec<u8> {
+    let req = tablenet::net::InferRequest {
+        model: model.to_string(),
+        features: FEATURES,
+        data: vec![0.5; rows * FEATURES as usize],
+    };
+    let mut framed = Vec::new();
+    encode_frame(&Frame::Request(req), &mut framed);
+    framed.split_off(4)
+}
+
+fn expect_error(frame: Option<Frame>, status: Status) {
+    match frame {
+        Some(Frame::Error(e)) => assert_eq!(e.status, status, "{e:?}"),
+        other => panic!("expected a typed {status} error frame, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_frames_get_typed_errors_and_fail_closed() {
+    let reg = ModelRegistry::new();
+    reg.register("m", Arc::new(Echo), &ServeConfig::default()).unwrap();
+    let admission = Arc::new(AdmissionController::new(0));
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        reg.client(),
+        admission,
+        NetServerOptions { threads: 2, ..NetServerOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let connect = || {
+        let s = TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s
+    };
+
+    // bad magic: typed Malformed error, then the connection closes
+    let mut s = connect();
+    write_raw(&mut s, b"XXXX\x01\x01");
+    expect_error(read_raw(&mut s), Status::Malformed);
+    assert!(read_raw(&mut s).is_none(), "a protocol error must close the connection");
+
+    // truncated body (length prefix consistent, structure short)
+    let mut s = connect();
+    let payload = request_payload("m", 2);
+    write_raw(&mut s, &payload[..payload.len() - 3]);
+    expect_error(read_raw(&mut s), Status::Malformed);
+    assert!(read_raw(&mut s).is_none());
+
+    // oversized length prefix: refused without buffering the body
+    let mut s = connect();
+    s.write_all(&(((1u32 << 24) + 1).to_le_bytes())).unwrap();
+    expect_error(read_raw(&mut s), Status::Malformed);
+    assert!(read_raw(&mut s).is_none());
+
+    // a reply frame in the client->server direction is also a violation
+    let mut s = connect();
+    let mut framed = Vec::new();
+    encode_frame(&Frame::Reply(tablenet::net::InferReply { rows: Vec::new() }), &mut framed);
+    s.write_all(&framed).unwrap();
+    expect_error(read_raw(&mut s), Status::Malformed);
+    assert!(read_raw(&mut s).is_none());
+
+    // an unknown model is a typed error but NOT a protocol violation:
+    // the connection stays usable
+    let mut cl = NetClient::connect(&addr).unwrap();
+    cl.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    match cl.infer("ghost", FEATURES, &[0.5; 4]).unwrap() {
+        Frame::Error(e) => assert_eq!(e.status, Status::UnknownModel, "{e:?}"),
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    match cl.infer("m", FEATURES, &[3.0, 0.0, 0.0, 0.0]).unwrap() {
+        Frame::Reply(r) => {
+            assert_eq!(r.rows.len(), 1);
+            assert_eq!((r.rows[0].status, r.rows[0].class), (Status::Ok, 3));
+        }
+        other => panic!("expected a reply, got {other:?}"),
+    }
+
+    let snap = server.shutdown();
+    snap.assert_accounted();
+    assert_eq!(snap.protocol_errors, 4, "{snap:?}");
+    assert_eq!(snap.unknown_model_frames, 1);
+    assert_eq!(snap.rows_ok(), 1);
+    // frame-level rejections still count as answered rows — nothing
+    // vanished from the wire ledger
+    assert_eq!(snap.rows_done, 2, "{snap:?}");
+    reg.shutdown().assert_multiplier_less();
+}
+
+#[derive(Default)]
+struct Tally {
+    ok: u64,
+    queue_full: u64,
+    deadline: u64,
+    panicked: u64,
+}
+
+#[test]
+fn socket_soak_with_midrun_swap_and_faults_loses_nothing() {
+    silence_injected_panics();
+    const CLIENTS: usize = 4;
+    const FRAMES_PER_CLIENT: usize = 60;
+    const ROWS_PER_FRAME: usize = 5;
+    const TOTAL_ROWS: u64 = (CLIENTS * FRAMES_PER_CLIENT * ROWS_PER_FRAME) as u64;
+
+    let plan = FaultPlan::parse("seed=42,latency_prob=0.15,latency_us=500,panic_prob=0.08")
+        .unwrap();
+    let reg = ModelRegistry::with_faults(Arc::new(FaultInjector::new(plan)));
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_wait_us: 200,
+        workers: 2,
+        queue_cap: 64,
+        deadline_us: 50_000,
+        degrade_after: 0,
+        ..ServeConfig::default()
+    };
+    reg.register("a", Arc::new(Echo), &cfg).unwrap();
+    reg.register("b", Arc::new(Echo), &cfg).unwrap();
+
+    let admission = Arc::new(AdmissionController::new(0));
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        reg.client(),
+        admission,
+        NetServerOptions { threads: 2, ..NetServerOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut joins = Vec::new();
+    for c in 0..CLIENTS {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut cl = NetClient::connect_retry(&addr, 5_000).unwrap();
+            cl.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            let mut tally = Tally::default();
+            let mut last_version = [0u64; 2];
+            for i in 0..FRAMES_PER_CLIENT {
+                let m = (c + i) % 2;
+                let model = ["a", "b"][m];
+                let class = (i % 7) as f32;
+                let mut data = vec![0.0f32; ROWS_PER_FRAME * FEATURES as usize];
+                for r in 0..ROWS_PER_FRAME {
+                    data[r * FEATURES as usize] = class;
+                }
+                let reply = match cl.infer(model, FEATURES, &data).unwrap() {
+                    Frame::Reply(r) => r,
+                    other => panic!("unexpected frame mid-soak: {other:?}"),
+                };
+                assert_eq!(reply.rows.len(), ROWS_PER_FRAME, "no row may go unanswered");
+                for row in reply.rows {
+                    match row.status {
+                        Status::Ok => {
+                            tally.ok += 1;
+                            assert_eq!(row.class, class as u16, "echo must round-trip");
+                            assert_eq!(row.logits.len(), 2);
+                            assert!(
+                                row.version >= last_version[m],
+                                "model '{model}' version went backwards: {} after {}",
+                                row.version,
+                                last_version[m]
+                            );
+                            last_version[m] = row.version;
+                        }
+                        Status::QueueFull => tally.queue_full += 1,
+                        Status::DeadlineExceeded => tally.deadline += 1,
+                        Status::WorkerPanicked => tally.panicked += 1,
+                        other => panic!("untyped verdict escaped the soak: {other}"),
+                    }
+                }
+            }
+            (tally, last_version)
+        }));
+    }
+
+    // mid-soak control plane: a healthy quarantined swap of 'a' and a
+    // broken candidate for 'b' (rejected; the incumbent keeps serving)
+    let t0 = std::time::Instant::now();
+    while server.rows_done() < TOTAL_ROWS / 2 {
+        assert!(t0.elapsed() < Duration::from_secs(60), "soak stalled before half-load");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(reg.swap_quarantined("a", Arc::new(Echo)).unwrap(), 2);
+    assert!(reg.swap_quarantined("b", Arc::new(Exploding)).is_err());
+
+    let mut total = Tally::default();
+    for j in joins {
+        let (t, last_version) = j.join().unwrap();
+        total.ok += t.ok;
+        total.queue_full += t.queue_full;
+        total.deadline += t.deadline;
+        total.panicked += t.panicked;
+        assert!(last_version[0] <= 2, "model 'a' never had a version past 2");
+        assert!(last_version[1] <= 1, "model 'b' must stay at v1");
+    }
+
+    // zero lost, zero duplicated — client side
+    assert_eq!(
+        total.ok + total.queue_full + total.deadline + total.panicked,
+        TOTAL_ROWS,
+        "client verdicts do not account for every row sent"
+    );
+    assert!(total.panicked > 0, "no injected panic surfaced in {TOTAL_ROWS} rows");
+
+    // wire boundary: every admitted row has exactly one verdict, and the
+    // totals match the client tallies class for class
+    let snap = server.shutdown();
+    snap.assert_accounted();
+    assert_eq!(snap.rows_done, TOTAL_ROWS);
+    assert_eq!(snap.rows_ok(), total.ok);
+    let by = |f: fn(&tablenet::net::ModelIngress) -> u64| -> u64 {
+        snap.models.values().map(f).sum()
+    };
+    assert_eq!(by(|m| m.rows_queue_full), total.queue_full);
+    assert_eq!(by(|m| m.rows_deadline_shed), total.deadline);
+    assert_eq!(by(|m| m.rows_panicked), total.panicked);
+    assert_eq!(by(|m| m.rows_admitted), TOTAL_ROWS, "unlimited budget admits everything");
+    assert_eq!(snap.admission.in_flight, 0, "admission tokens leaked: {:?}", snap.admission);
+    assert_eq!(snap.connections_accepted, CLIENTS as u64);
+    assert_eq!(snap.connections_closed, CLIENTS as u64);
+
+    // pipeline boundary: the registry's own counters agree too, so the
+    // socket tier introduced no second source of truth
+    let fleet = reg.shutdown();
+    assert_eq!(fleet.completed(), total.ok);
+    assert_eq!(fleet.rejected(), total.queue_full);
+    assert_eq!(fleet.deadline_shed(), total.deadline);
+    assert_eq!(fleet.panicked(), total.panicked);
+    assert_eq!(fleet.swaps(), 1, "only the quarantine-passing swap may install");
+    fleet.assert_multiplier_less();
+}
+
+#[test]
+fn exhausted_admission_budget_rejects_whole_frames_typed() {
+    // budget of 4 rows; the backend holds each batch for 50ms, so the
+    // first 4-row frame owns the whole budget while two more arrive
+    let reg = ModelRegistry::new();
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_wait_us: 100,
+        workers: 1,
+        queue_cap: 64,
+        deadline_us: 0,
+        degrade_after: 0,
+        ..ServeConfig::default()
+    };
+    reg.register("m", Arc::new(SlowEcho(Duration::from_millis(50))), &cfg).unwrap();
+    let admission = Arc::new(AdmissionController::new(4));
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        reg.client(),
+        admission,
+        NetServerOptions { threads: 1, ..NetServerOptions::default() },
+    )
+    .unwrap();
+
+    let mut cl = NetClient::connect(&server.local_addr().to_string()).unwrap();
+    cl.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let data = vec![1.0f32; 4 * FEATURES as usize];
+    // pipeline three 4-row frames without reading: the reactor decodes
+    // them back-to-back while the budget is pinned by frame one
+    for _ in 0..3 {
+        cl.send("m", FEATURES, &data).unwrap();
+    }
+    cl.finish_writes().unwrap();
+
+    let (mut ok_rows, mut rejected_rows) = (0u64, 0u64);
+    for _ in 0..3 {
+        match cl.read_frame().unwrap() {
+            Frame::Reply(r) => {
+                assert_eq!(r.rows.len(), 4);
+                assert!(r.rows.iter().all(|row| row.status == Status::Ok), "{r:?}");
+                ok_rows += r.rows.len() as u64;
+            }
+            Frame::Error(e) => {
+                assert_eq!(e.status, Status::AdmissionRejected, "{e:?}");
+                assert!(e.status.is_queue_full_class(), "rejects must be retryable");
+                rejected_rows += 4;
+            }
+            other => panic!("unexpected frame: {other:?}"),
+        }
+    }
+    assert_eq!((ok_rows, rejected_rows), (4, 8), "exactly one frame fits the budget");
+
+    let snap = server.shutdown();
+    snap.assert_accounted();
+    assert_eq!(snap.rows_done, 12, "rejected rows are still answered rows");
+    assert_eq!(snap.models["m"].rows_admitted, 4);
+    assert_eq!(snap.models["m"].rows_admission_rejected, 8);
+    assert_eq!(snap.admission.in_flight, 0, "admission tokens leaked: {:?}", snap.admission);
+    reg.shutdown().assert_multiplier_less();
+}

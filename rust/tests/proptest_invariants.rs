@@ -434,6 +434,7 @@ fn prop_fleet_chaos_exactly_one_verdict_with_valid_versions() {
             queue_cap: 64,
             deadline_us: 0,
             degrade_after: 3,
+            ..ServeConfig::default()
         };
         reg.register("stable", Arc::new(VersionEcho(1)), &cfg).unwrap();
         reg.register("churn", Arc::new(VersionEcho(1)), &cfg).unwrap();

@@ -4,12 +4,18 @@ baseline and fail on throughput regressions.
 
 The benches emit machine-readable JSON (`BENCH_hotpath.json` from
 `cargo bench --bench engine_hotpath`, `BENCH_serve.json` from
-`cargo bench --bench serve_throughput`). This script extracts every
+`cargo bench --bench serve_throughput`, `BENCH_net.json` from
+`cargo bench --bench net_throughput`). This script extracts every
 higher-is-better throughput metric from them, compares each against
 `BENCH_baseline.json`, writes a markdown diff (appended to
 `$GITHUB_STEP_SUMMARY` when set, always written to `BENCH_diff.md`),
 and exits non-zero when any metric regressed by more than the
 threshold (default 15%).
+
+Metrics under the `net/` prefix (the socket-tier soak) are **tracked,
+not gated**: loopback TCP throughput on shared CI runners is too noisy
+to fail a build on, so their deltas are reported in the table but never
+produce a gate failure (including when they go missing).
 
 Usage:
   tools/bench_compare.py BENCH_baseline.json BENCH_hotpath.json BENCH_serve.json
@@ -36,6 +42,11 @@ import sys
 DEFAULT_THRESHOLD = 0.15
 
 
+def is_tracked_only(name):
+    """Metrics reported for trend visibility but never gated."""
+    return name.startswith("net/")
+
+
 def extract_metrics(doc):
     """Throughput metrics (higher = better) from one BENCH_*.json."""
     bench = doc.get("bench", "unknown")
@@ -56,6 +67,14 @@ def extract_metrics(doc):
             rps = m.get("rps")
             if rps is not None:
                 out[f"serve/{m['name']}/rps"] = float(rps)
+    elif bench == "net_throughput":
+        total = doc.get("total_rps")
+        if total is not None:
+            out["net/total_rps"] = float(total)
+        for ph in doc.get("phases", []):
+            rps = ph.get("rps")
+            if rps is not None:
+                out[f"net/c{ph['connections']}/rps"] = float(rps)
     else:
         raise SystemExit(f"unrecognised bench document: bench={bench!r}")
     return out
@@ -78,15 +97,21 @@ def compare(baseline, fresh, threshold):
     rows, regressions = [], []
     for name in sorted(set(baseline) | set(fresh)):
         base, new = baseline.get(name), fresh.get(name)
+        tracked = is_tracked_only(name)
         if base is None:
-            rows.append((name, None, new, "—", "NEW"))
+            rows.append((name, None, new, "—", "TRACKED" if tracked else "NEW"))
         elif new is None:
-            rows.append((name, base, None, "—", "MISSING"))
-            regressions.append(f"{name}: present in baseline but not in the fresh run")
+            if tracked:
+                rows.append((name, base, None, "—", "TRACKED"))
+            else:
+                rows.append((name, base, None, "—", "MISSING"))
+                regressions.append(
+                    f"{name}: present in baseline but not in the fresh run"
+                )
         else:
             delta = (new - base) / base if base > 0 else 0.0
-            status = "OK"
-            if delta < -threshold:
+            status = "TRACKED" if tracked else "OK"
+            if delta < -threshold and not tracked:
                 status = "REGRESSED"
                 regressions.append(
                     f"{name}: {base:.1f} -> {new:.1f} ({delta:+.1%}, "
@@ -111,7 +136,13 @@ def markdown(rows, regressions, threshold, note):
         "|---|---:|---:|---:|---|",
     ]
     for name, base, new, delta, status in rows:
-        badge = {"OK": "✅", "NEW": "🆕", "MISSING": "❌", "REGRESSED": "❌"}[status]
+        badge = {
+            "OK": "✅",
+            "NEW": "🆕",
+            "MISSING": "❌",
+            "REGRESSED": "❌",
+            "TRACKED": "📈",
+        }[status]
         lines.append(f"| `{name}` | {fmt(base)} | {fmt(new)} | {delta} | {badge} {status} |")
     lines.append("")
     if regressions:
@@ -137,12 +168,32 @@ def self_test():
         "total_rps": 500.0,
         "models": [{"name": "m0", "rps": 250.0}],
     }
+    doc_net = {
+        "bench": "net_throughput",
+        "total_rps": 900.0,
+        "phases": [
+            {"connections": 2, "rps": 400.0},
+            {"connections": 8, "rps": 500.0},
+        ],
+    }
     fresh = {}
-    for d in (doc_hot, doc_serve):
+    for d in (doc_hot, doc_serve, doc_net):
         fresh.update(extract_metrics(d))
     assert fresh["hotpath/a/samples_per_sec"] == 100.0
     assert fresh["serve/total_rps"] == 500.0
-    assert len(fresh) == 5, fresh
+    assert fresh["net/c2/rps"] == 400.0
+    assert len(fresh) == 8, fresh
+
+    # net/ metrics are tracked, never gated: a 90% collapse and an
+    # outright disappearance both pass
+    base = dict(fresh)
+    base["net/total_rps"] = 9000.0
+    base["net/gone/rps"] = 123.0
+    rows, reg = compare(base, fresh, 0.15)
+    assert not reg, reg
+    statuses = {r[0]: r[4] for r in rows}
+    assert statuses["net/total_rps"] == "TRACKED", statuses
+    assert statuses["net/gone/rps"] == "TRACKED", statuses
 
     # within threshold: pass (13% down on one metric)
     base = dict(fresh)
