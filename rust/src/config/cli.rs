@@ -56,8 +56,18 @@ impl Args {
     }
 
     /// Boolean switch names used across the `tablenet` CLI.
-    pub const SWITCHES: &'static [&'static str] =
-        &["verbose", "dry-run", "help", "version", "no-ref", "csv", "quiet"];
+    pub const SWITCHES: &'static [&'static str] = &[
+        "verbose",
+        "dry-run",
+        "help",
+        "version",
+        "no-ref",
+        "csv",
+        "quiet",
+        "drain",
+        "insecure-no-auth",
+        "watch-retire-on-delete",
+    ];
 
     /// Parse from the process environment, skipping argv[0].
     pub fn from_env() -> Args {

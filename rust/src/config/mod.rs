@@ -284,6 +284,104 @@ impl FleetConfig {
     }
 }
 
+/// Network-edge configuration for `serve --listen`: socket knobs plus
+/// the connection-hardening surface (auth, rate limits, drain grace).
+/// Parsed from CLI flags; [`NetEdgeConfig::validate`] enforces the
+/// auth posture before the listener binds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetEdgeConfig {
+    /// `--listen ADDR` (None = no socket tier).
+    pub listen: Option<String>,
+    /// `--net-threads N` reactor threads (0 = one per core).
+    pub net_threads: usize,
+    /// `--admission-budget ROWS` shared in-flight row cap (0 = meter
+    /// only).
+    pub admission_budget: u64,
+    /// `--auth-token SECRET`: require this shared secret in a `Hello`
+    /// frame before a connection's first request.
+    pub auth_token: Option<String>,
+    /// `--insecure-no-auth`: explicit opt-out of the non-loopback auth
+    /// requirement.
+    pub insecure_no_auth: bool,
+    /// `--max-conns N` concurrently open connections (0 = no cap).
+    pub max_conns: usize,
+    /// `--frame-rate-limit N` request frames/second per connection
+    /// (0 = off).
+    pub frame_rate_limit: u64,
+    /// `--row-rate-limit N` rows/second per connection (0 = off).
+    pub row_rate_limit: u64,
+    /// `--drain-grace-ms MS` advertised in `GoAway` and enforced on
+    /// drain.
+    pub drain_grace_ms: u32,
+}
+
+impl Default for NetEdgeConfig {
+    fn default() -> Self {
+        NetEdgeConfig {
+            listen: None,
+            net_threads: 0,
+            admission_budget: 0,
+            auth_token: None,
+            insecure_no_auth: false,
+            max_conns: 0,
+            frame_rate_limit: 0,
+            row_rate_limit: 0,
+            drain_grace_ms: 5_000,
+        }
+    }
+}
+
+/// Whether a `--listen` address is reachable beyond the loopback
+/// interface. Unresolvable hostnames count as exposed — the safe
+/// default for the auth requirement.
+pub fn listen_is_exposed(addr: &str) -> bool {
+    let host = addr.rsplit_once(':').map(|(h, _)| h).unwrap_or(addr);
+    let host = host.trim_start_matches('[').trim_end_matches(']');
+    if host.eq_ignore_ascii_case("localhost") {
+        return false;
+    }
+    match host.parse::<std::net::IpAddr>() {
+        Ok(ip) => !ip.is_loopback(),
+        Err(_) => true,
+    }
+}
+
+impl NetEdgeConfig {
+    /// Parse the net-edge flags from CLI args.
+    pub fn from_args(args: &cli::Args) -> NetEdgeConfig {
+        let d = NetEdgeConfig::default();
+        NetEdgeConfig {
+            listen: args.get("listen").map(str::to_string),
+            net_threads: args.get_usize("net-threads", d.net_threads),
+            admission_budget: args.get_u64("admission-budget", d.admission_budget),
+            auth_token: args.get("auth-token").map(str::to_string),
+            insecure_no_auth: args.switch("insecure-no-auth"),
+            max_conns: args.get_usize("max-conns", d.max_conns),
+            frame_rate_limit: args.get_u64("frame-rate-limit", d.frame_rate_limit),
+            row_rate_limit: args.get_u64("row-rate-limit", d.row_rate_limit),
+            drain_grace_ms: args.get_u32("drain-grace-ms", d.drain_grace_ms),
+        }
+    }
+
+    /// A non-loopback bind without an auth token is a config error
+    /// unless `--insecure-no-auth` acknowledges the exposure. An empty
+    /// `--auth-token` is always an error (it would accept any Hello).
+    pub fn validate(&self) -> Result<()> {
+        if matches!(self.auth_token.as_deref(), Some("")) {
+            bail!("--auth-token must not be empty");
+        }
+        if let Some(listen) = &self.listen {
+            if listen_is_exposed(listen) && self.auth_token.is_none() && !self.insecure_no_auth {
+                bail!(
+                    "--listen {listen} is reachable beyond loopback; pass --auth-token SECRET \
+                     (or --insecure-no-auth to serve unauthenticated anyway)"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Top-level run configuration (paths + arch + plan).
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -670,6 +768,65 @@ mod tests {
         );
         assert!(parse_artifact_spec("=x").is_err());
         assert!(parse_artifact_spec("a=").is_err());
+    }
+
+    #[test]
+    fn net_edge_auth_posture_is_enforced() {
+        let parse = |s: &str| {
+            cli::Args::parse_with_switches(
+                s.split_whitespace().map(String::from),
+                cli::Args::SWITCHES,
+            )
+        };
+        // loopback binds never require auth
+        for addr in ["127.0.0.1:0", "localhost:9000", "[::1]:9000"] {
+            let c = NetEdgeConfig::from_args(&parse(&format!("--listen {addr}")));
+            c.validate().unwrap();
+            assert!(!listen_is_exposed(addr), "{addr}");
+        }
+        // exposed binds require a token…
+        for addr in ["0.0.0.0:9000", "10.1.2.3:9000", "myhost:9000", "[::]:9000"] {
+            assert!(listen_is_exposed(addr), "{addr}");
+            let c = NetEdgeConfig::from_args(&parse(&format!("--listen {addr}")));
+            let e = c.validate().unwrap_err();
+            assert!(format!("{e}").contains("auth-token"), "{e}");
+            // …which a token satisfies
+            let c = NetEdgeConfig::from_args(&parse(&format!("--listen {addr} --auth-token s3")));
+            c.validate().unwrap();
+            // …as does the explicit insecure opt-out
+            let c = NetEdgeConfig::from_args(&parse(&format!("--listen {addr} --insecure-no-auth")));
+            assert!(c.insecure_no_auth);
+            c.validate().unwrap();
+        }
+        // an empty token would match any Hello: rejected everywhere
+        let c = NetEdgeConfig {
+            auth_token: Some(String::new()),
+            ..NetEdgeConfig::default()
+        };
+        assert!(c.validate().is_err());
+        // no --listen: nothing to police
+        NetEdgeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn net_edge_flags_parse() {
+        let args = cli::Args::parse_with_switches(
+            "--listen 127.0.0.1:0 --net-threads 2 --admission-budget 64 --auth-token hunter2 \
+             --max-conns 8 --frame-rate-limit 100 --row-rate-limit 4000 --drain-grace-ms 250"
+                .split_whitespace()
+                .map(String::from),
+            cli::Args::SWITCHES,
+        );
+        let c = NetEdgeConfig::from_args(&args);
+        assert_eq!(c.listen.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(c.net_threads, 2);
+        assert_eq!(c.admission_budget, 64);
+        assert_eq!(c.auth_token.as_deref(), Some("hunter2"));
+        assert_eq!(c.max_conns, 8);
+        assert_eq!(c.frame_rate_limit, 100);
+        assert_eq!(c.row_rate_limit, 4000);
+        assert_eq!(c.drain_grace_ms, 250);
+        c.validate().unwrap();
     }
 
     #[test]

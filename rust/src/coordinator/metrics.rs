@@ -29,6 +29,27 @@ pub struct Metrics {
     /// total latency in µs, and per-request samples for percentiles
     latency_us: Mutex<Vec<f64>>,
     queue_us: Mutex<Vec<f64>>,
+    /// Per-artifact-version latency sub-histograms, so a hot-swap's
+    /// before/after distributions stay separable in one run.
+    versions: Mutex<BTreeMap<u64, VersionAgg>>,
+}
+
+/// Accumulator behind one artifact version's sub-histogram.
+#[derive(Debug, Default)]
+struct VersionAgg {
+    requests: u64,
+    lat_us: Vec<f64>,
+}
+
+/// Point-in-time latency summary for one artifact version of a model.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct VersionLatency {
+    /// Requests completed while this version was installed.
+    pub requests: u64,
+    /// Median end-to-end latency in µs for this version's requests.
+    pub p50_us: f64,
+    /// 99th-percentile end-to-end latency in µs for this version.
+    pub p99_us: f64,
 }
 
 /// A point-in-time summary.
@@ -53,6 +74,10 @@ pub struct Snapshot {
     pub latency_p99_us: f64,
     pub queue_p95_us: f64,
     pub ops: Counters,
+    /// Latency sub-histograms keyed by the artifact version that served
+    /// each request — distinct pre-/post-swap distributions survive a
+    /// hot-swap instead of blurring into one histogram.
+    pub versions: BTreeMap<u64, VersionLatency>,
 }
 
 impl Default for Metrics {
@@ -70,19 +95,23 @@ impl Default for Metrics {
             ops: Mutex::new(Counters::default()),
             latency_us: Mutex::new(Vec::new()),
             queue_us: Mutex::new(Vec::new()),
+            versions: Mutex::new(BTreeMap::new()),
         }
     }
 }
 
 impl Metrics {
     const MAX_SAMPLES: usize = 100_000;
+    /// Per-version sample cap — bounded even if one version serves the
+    /// whole run.
+    const MAX_VERSION_SAMPLES: usize = 50_000;
 
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_items.fetch_add(size as u64, Ordering::Relaxed);
     }
 
-    pub fn record_request(&self, queue_us: f64, total_us: f64, ops: Counters) {
+    pub fn record_request(&self, queue_us: f64, total_us: f64, version: u64, ops: Counters) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         {
             let mut l = self.latency_us.lock().unwrap();
@@ -94,6 +123,14 @@ impl Metrics {
             let mut q = self.queue_us.lock().unwrap();
             if q.len() < Self::MAX_SAMPLES {
                 q.push(queue_us);
+            }
+        }
+        {
+            let mut v = self.versions.lock().unwrap();
+            let agg = v.entry(version).or_default();
+            agg.requests += 1;
+            if agg.lat_us.len() < Self::MAX_VERSION_SAMPLES {
+                agg.lat_us.push(total_us);
             }
         }
         *self.ops.lock().unwrap() += ops;
@@ -125,6 +162,21 @@ impl Metrics {
         let items = self.batch_items.load(Ordering::Relaxed);
         let lat = self.latency_us.lock().unwrap().clone();
         let q = self.queue_us.lock().unwrap().clone();
+        let versions = {
+            let v = self.versions.lock().unwrap();
+            v.iter()
+                .map(|(ver, agg)| {
+                    (
+                        *ver,
+                        VersionLatency {
+                            requests: agg.requests,
+                            p50_us: percentile(&agg.lat_us, 50.0),
+                            p99_us: percentile(&agg.lat_us, 99.0),
+                        },
+                    )
+                })
+                .collect()
+        };
         let elapsed = self.started.elapsed().as_secs_f64();
         Snapshot {
             completed,
@@ -142,6 +194,7 @@ impl Metrics {
             latency_p99_us: percentile(&lat, 99.0),
             queue_p95_us: percentile(&q, 95.0),
             ops: *self.ops.lock().unwrap(),
+            versions,
         }
     }
 }
@@ -271,6 +324,17 @@ impl std::fmt::Display for Snapshot {
             "latency µs: p50 {:.0}  p95 {:.0}  p99 {:.0} | queue p95 {:.0}",
             self.latency_p50_us, self.latency_p95_us, self.latency_p99_us, self.queue_p95_us
         )?;
+        // one sub-histogram line per artifact version once a swap has
+        // split traffic across versions
+        if self.versions.len() > 1 {
+            for (ver, v) in &self.versions {
+                writeln!(
+                    f,
+                    "  v{ver}: {} reqs | p50 {:.0}µs p99 {:.0}µs",
+                    v.requests, v.p50_us, v.p99_us
+                )?;
+            }
+        }
         writeln!(f, "throughput: {:.1} req/s", self.throughput_rps)?;
         write!(f, "engine ops: {}", self.ops)
     }
@@ -289,6 +353,7 @@ mod tests {
             m.record_request(
                 10.0,
                 100.0 + i as f64,
+                1,
                 Counters { lut_evals: 5, ..Default::default() },
             );
         }
@@ -313,10 +378,37 @@ mod tests {
     #[test]
     fn display_contains_key_fields() {
         let m = Metrics::default();
-        m.record_request(1.0, 2.0, Counters::default());
+        m.record_request(1.0, 2.0, 1, Counters::default());
         let text = format!("{}", m.snapshot());
         assert!(text.contains("mults=0"));
         assert!(text.contains("throughput"));
+    }
+
+    #[test]
+    fn per_version_sub_histograms_stay_distinct_across_a_swap() {
+        let m = Metrics::default();
+        // v1 serves slow requests, then a swap installs a faster v2
+        for _ in 0..8 {
+            m.record_request(1.0, 900.0, 1, Counters::default());
+        }
+        m.record_swap();
+        for _ in 0..8 {
+            m.record_request(1.0, 40.0, 2, Counters::default());
+        }
+        let s = m.snapshot();
+        assert_eq!(s.versions.len(), 2);
+        assert_eq!(s.versions[&1].requests, 8);
+        assert_eq!(s.versions[&2].requests, 8);
+        assert!(s.versions[&1].p50_us > s.versions[&2].p50_us * 10.0, "{:?}", s.versions);
+        let text = format!("{s}");
+        assert!(text.contains("v1: 8 reqs"), "{text}");
+        assert!(text.contains("v2: 8 reqs"), "{text}");
+
+        // a single-version run keeps the display free of per-version noise
+        let single = Metrics::default();
+        single.record_request(1.0, 2.0, 1, Counters::default());
+        let text = format!("{}", single.snapshot());
+        assert!(!text.contains("v1:"), "{text}");
     }
 
     #[test]
@@ -324,7 +416,7 @@ mod tests {
         let mk = |n: u64| {
             let m = Metrics::default();
             for _ in 0..n {
-                m.record_request(1.0, 2.0, Counters { lut_evals: 3, ..Default::default() });
+                m.record_request(1.0, 2.0, 2, Counters { lut_evals: 3, ..Default::default() });
             }
             m.record_swap();
             ModelSnapshot {
@@ -365,7 +457,7 @@ mod tests {
     #[should_panic(expected = "recorded multiplies")]
     fn fleet_multiplier_invariant_is_per_model() {
         let m = Metrics::default();
-        m.record_request(1.0, 2.0, Counters { mults: 1, ..Default::default() });
+        m.record_request(1.0, 2.0, 1, Counters { mults: 1, ..Default::default() });
         let mut fleet = FleetSnapshot::default();
         fleet.models.insert(
             "dirty".into(),
@@ -382,7 +474,7 @@ mod tests {
     #[test]
     fn fault_counters_and_degraded_banner_surface() {
         let m = Metrics::default();
-        m.record_request(1.0, 2.0, Counters::default());
+        m.record_request(1.0, 2.0, 1, Counters::default());
         // healthy pipeline: no fault line in the snapshot display
         assert!(!format!("{}", m.snapshot()).contains("faults:"));
         m.record_deadline_shed();

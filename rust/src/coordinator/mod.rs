@@ -758,7 +758,7 @@ fn worker_loop(
                 Some(out) => {
                     let queue_us = (start - enqueued).as_micros() as u64;
                     let total_us = enqueued.elapsed().as_micros() as u64;
-                    metrics.record_request(queue_us as f64, total_us as f64, out.counters);
+                    metrics.record_request(queue_us as f64, total_us as f64, version, out.counters);
                     let _ = resp.send(Ok(Response {
                         class: out.class,
                         logits: out.logits,

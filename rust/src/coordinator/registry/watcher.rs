@@ -50,10 +50,14 @@
 //! inode, and an in-place overwrite would truncate/mutate the file
 //! under that mapping (SIGBUS / torn tables on request threads).
 //! Rename swaps the directory entry without touching the serving
-//! inode. Deleting a file likewise does NOT retire its model: the
+//! inode. By default deleting a file does NOT retire its model: the
 //! mapped artifact keeps serving (the mapping outlives the directory
 //! entry), matching the standard rolling-deploy contract; retire
-//! explicitly via [`ModelRegistry::retire`].
+//! explicitly via [`ModelRegistry::retire`]. Opt in to delete-driven
+//! retirement with [`WatcherOptions::retire_on_delete`]
+//! (`--watch-retire-on-delete`): a watched stem whose file vanishes is
+//! retired ([`WatchEvent::Retired`]), and re-adding the file later
+//! re-registers it fresh (version restarts at 1).
 
 use super::{ModelRegistry, RegistryError};
 use crate::config::json::Json;
@@ -92,6 +96,10 @@ pub enum WatchEvent {
     /// A file could not be fingerprinted, parsed, or deployed. Reported
     /// once per content state; the file is retried after it changes.
     Failed { path: PathBuf, error: String },
+    /// A watched stem's file was deleted and
+    /// [`WatcherOptions::retire_on_delete`] is on: the model was
+    /// retired from the registry.
+    Retired { name: String },
 }
 
 impl std::fmt::Display for WatchEvent {
@@ -115,6 +123,9 @@ impl std::fmt::Display for WatchEvent {
             WatchEvent::Failed { path, error } => {
                 write!(f, "watch: {} rejected: {error}", path.display())
             }
+            WatchEvent::Retired { name } => {
+                write!(f, "retired model '{name}' (watched file deleted)")
+            }
         }
     }
 }
@@ -132,6 +143,10 @@ pub struct WatcherOptions {
     pub retry_base: Duration,
     /// Ceiling for the doubled retry delay.
     pub retry_cap: Duration,
+    /// Retire a model when its watched `.ltm` file is deleted (off by
+    /// default: the standard rolling-deploy contract keeps a mapped
+    /// artifact serving after its directory entry vanishes).
+    pub retire_on_delete: bool,
 }
 
 impl Default for WatcherOptions {
@@ -141,6 +156,7 @@ impl Default for WatcherOptions {
             poll: Duration::from_millis(200),
             retry_base: Duration::from_millis(500),
             retry_cap: Duration::from_secs(30),
+            retire_on_delete: false,
         }
     }
 }
@@ -220,6 +236,7 @@ pub struct DirScanner {
     retry_base: Duration,
     retry_cap: Duration,
     retries: u64,
+    retire_on_delete: bool,
 }
 
 impl DirScanner {
@@ -232,6 +249,7 @@ impl DirScanner {
             retry_base: Duration::from_millis(500),
             retry_cap: Duration::from_secs(30),
             retries: 0,
+            retire_on_delete: false,
         }
     }
 
@@ -240,6 +258,13 @@ impl DirScanner {
     pub fn with_backoff(mut self, base: Duration, cap: Duration) -> DirScanner {
         self.retry_base = base;
         self.retry_cap = cap;
+        self
+    }
+
+    /// Retire a model when its watched file vanishes (see
+    /// [`WatcherOptions::retire_on_delete`]).
+    pub fn with_retire_on_delete(mut self, on: bool) -> DirScanner {
+        self.retire_on_delete = on;
         self
     }
 
@@ -272,6 +297,7 @@ impl DirScanner {
                 return events;
             }
         };
+        let mut present: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
         for entry in entries.flatten() {
             let path = entry.path();
             if path.extension().and_then(|e| e.to_str()) != Some("ltm") {
@@ -285,6 +311,7 @@ impl DirScanner {
                 Ok(m) if m.is_file() => m,
                 _ => continue,
             };
+            present.insert(name.clone());
             let mtime = meta.modified().ok();
             let len = meta.len();
             let spath = sidecar_path(&path);
@@ -379,6 +406,32 @@ impl DirScanner {
                 }
             }
         }
+        if self.retire_on_delete {
+            // a watched stem whose file vanished: retire the model (only
+            // stems that actually deployed — a known-bad file that gets
+            // deleted is just forgotten). Re-adding the file later
+            // re-registers it fresh.
+            let vanished: Vec<String> = self
+                .seen
+                .keys()
+                .filter(|n| !present.contains(n.as_str()))
+                .cloned()
+                .collect();
+            for name in vanished {
+                let was_deployed =
+                    self.seen.remove(&name).is_some_and(|st| st.fingerprint.is_some());
+                if !was_deployed {
+                    continue;
+                }
+                match registry.retire(&name) {
+                    Ok(_final_snapshot) => events.push(WatchEvent::Retired { name }),
+                    Err(e) => events.push(WatchEvent::Failed {
+                        path: self.dir.join(format!("{name}.ltm")),
+                        error: format!("retire on delete: {e}"),
+                    }),
+                }
+            }
+        }
         events
     }
 }
@@ -442,6 +495,7 @@ struct StatsCells {
     reconfigured: AtomicU64,
     failed: AtomicU64,
     retries: AtomicU64,
+    retired: AtomicU64,
 }
 
 /// Cumulative watcher counters (cheap atomic reads).
@@ -459,6 +513,9 @@ pub struct WatcherStats {
     pub failed: u64,
     /// Backoff-driven re-attempts of known-bad files.
     pub retries: u64,
+    /// Models retired because their watched file was deleted
+    /// ([`WatcherOptions::retire_on_delete`]).
+    pub retired: u64,
 }
 
 /// A background thread polling one directory and deploying into a
@@ -489,7 +546,8 @@ impl DirWatcher {
             .name("ltm-watcher".into())
             .spawn(move || {
                 let mut scanner = DirScanner::new(dir, opts.serve_cfg.clone())
-                    .with_backoff(opts.retry_base, opts.retry_cap);
+                    .with_backoff(opts.retry_base, opts.retry_cap)
+                    .with_retire_on_delete(opts.retire_on_delete);
                 while !stop_t.load(Ordering::Relaxed) {
                     for ev in scanner.scan(&registry) {
                         match &ev {
@@ -497,6 +555,7 @@ impl DirWatcher {
                             WatchEvent::Swapped { .. } => &stats_t.swapped,
                             WatchEvent::Reconfigured { .. } => &stats_t.reconfigured,
                             WatchEvent::Failed { .. } => &stats_t.failed,
+                            WatchEvent::Retired { .. } => &stats_t.retired,
                         }
                         .fetch_add(1, Ordering::Relaxed);
                         on_event(&ev);
@@ -526,6 +585,7 @@ impl DirWatcher {
             reconfigured: self.stats.reconfigured.load(Ordering::Relaxed),
             failed: self.stats.failed.load(Ordering::Relaxed),
             retries: self.stats.retries.load(Ordering::Relaxed),
+            retired: self.stats.retired.load(Ordering::Relaxed),
         }
     }
 
@@ -886,6 +946,76 @@ mod tests {
         assert!(evs.is_empty(), "removing a sidecar must not force a deploy: {evs:?}");
         assert!(scanner.scan(&registry).is_empty());
         assert_eq!(registry.serve_config("m").unwrap().deadline_us, 900_000);
+
+        registry.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retire_on_delete_retires_and_readd_redeploys() {
+        let dir = sandbox("retire");
+        let registry = ModelRegistry::new();
+        let mut scanner =
+            DirScanner::new(&dir, ServeConfig::default()).with_retire_on_delete(true);
+
+        std::fs::write(dir.join("digits.ltm"), small_artifact_bytes(31)).unwrap();
+        let evs = scanner.scan(&registry);
+        assert!(matches!(&evs[0], WatchEvent::Registered { .. }), "{evs:?}");
+        let client = registry.client();
+        client.infer("digits", vec![0.2; 784]).unwrap();
+
+        // deleting the watched file retires the model
+        std::fs::remove_file(dir.join("digits.ltm")).unwrap();
+        let evs = scanner.scan(&registry);
+        assert_eq!(evs.len(), 1, "{evs:?}");
+        assert!(
+            matches!(&evs[0], WatchEvent::Retired { name } if name == "digits"),
+            "{evs:?}"
+        );
+        assert!(registry.models().is_empty());
+        assert!(client.infer("digits", vec![0.2; 784]).is_err());
+        // retirement settles: no repeat events for the same deletion
+        assert!(scanner.scan(&registry).is_empty());
+
+        // re-adding the file re-registers from scratch at version 1
+        std::thread::sleep(Duration::from_millis(15));
+        deploy_atomic(&dir, "digits.ltm", &small_artifact_bytes(32));
+        let evs = scanner.scan(&registry);
+        assert!(
+            matches!(&evs[0], WatchEvent::Registered { name, .. } if name == "digits"),
+            "{evs:?}"
+        );
+        assert_eq!(client.infer("digits", vec![0.2; 784]).unwrap().version, 1);
+
+        // a never-deployed (known-bad) file that vanishes is simply
+        // forgotten — nothing to retire
+        std::fs::write(dir.join("broken.ltm"), b"LTM1 garbage").unwrap();
+        let evs = scanner.scan(&registry);
+        assert!(matches!(&evs[0], WatchEvent::Failed { .. }), "{evs:?}");
+        std::fs::remove_file(dir.join("broken.ltm")).unwrap();
+        assert!(scanner.scan(&registry).is_empty(), "known-bad delete must be silent");
+        assert_eq!(registry.models().len(), 1);
+
+        registry.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn delete_without_retire_on_delete_keeps_serving() {
+        let dir = sandbox("no_retire");
+        let registry = ModelRegistry::new();
+        let mut scanner = DirScanner::new(&dir, ServeConfig::default());
+
+        std::fs::write(dir.join("m.ltm"), small_artifact_bytes(33)).unwrap();
+        let evs = scanner.scan(&registry);
+        assert!(matches!(&evs[0], WatchEvent::Registered { .. }), "{evs:?}");
+
+        // default posture: deletion is NOT a deploy signal; the
+        // incumbent keeps serving from memory
+        std::fs::remove_file(dir.join("m.ltm")).unwrap();
+        assert!(scanner.scan(&registry).is_empty());
+        assert_eq!(registry.models().len(), 1);
+        registry.client().infer("m", vec![0.2; 784]).unwrap();
 
         registry.shutdown();
         std::fs::remove_dir_all(&dir).ok();

@@ -93,15 +93,27 @@ fn print_help() {
          \x20                   mark a model Degraded after N consecutive worker panics; --fault-plan:\n\
          \x20                   deterministic chaos — injected latency / worker panics, see faults.rs)\n\
          \x20                  [--listen ADDR] [--net-threads N] [--admission-budget ROWS]\n\
-         \x20                  [--admission-weight W]\n\
+         \x20                  [--admission-weight W] [--auth-token SECRET | --insecure-no-auth]\n\
+         \x20                  [--max-conns N] [--frame-rate-limit F/S] [--row-rate-limit R/S]\n\
+         \x20                  [--drain-grace-ms 5000] [--drain] [--watch-retire-on-delete]\n\
          \x20                  (--listen: also serve the LTN1 wire protocol on ADDR with a\n\
          \x20                   thread-per-core reactor tier; --requests then counts rows answered\n\
-         \x20                   over the wire; --admission-budget caps aggregate in-flight rows\n\
-         \x20                   across all models, split by per-model --admission-weight)\n\
+         \x20                   over the wire, 0 = serve until SIGTERM/SIGINT; --admission-budget\n\
+         \x20                   caps aggregate in-flight rows across all models, split by\n\
+         \x20                   per-model --admission-weight)\n\
+         \x20                  (exposed binds require --auth-token unless --insecure-no-auth;\n\
+         \x20                   every exit is a graceful drain: GoAway on each connection,\n\
+         \x20                   in-flight rows finish within --drain-grace-ms, ledger balanced;\n\
+         \x20                   --drain drains immediately — a deterministic stand-in for SIGTERM;\n\
+         \x20                   --watch-retire-on-delete retires a model when its watched .ltm\n\
+         \x20                   file is deleted)\n\
          \x20 client           --addr HOST:PORT --model NAME [--requests 1000] [--connections 2]\n\
-         \x20                  [--rows-per-frame 16] [--features 784]\n\
+         \x20                  [--rows-per-frame 16] [--features 784] [--retry-budget N]\n\
+         \x20                  [--auth-token SECRET] [--client-id ID]\n\
          \x20                  (load-generate against a serve --listen tier; sheds are typed and\n\
-         \x20                   tolerated, any LOST row exits non-zero)\n\
+         \x20                   tolerated, any LOST or DUPLICATE row exits non-zero;\n\
+         \x20                   --retry-budget: reconnect across drops/restarts/drains with\n\
+         \x20                   idempotency-keyed requests — acknowledged rows stay exactly-once)\n\
          \x20 ref-check        --arch A --weights w.bin --hlo artifacts/linear_ref_b1.hlo.txt"
     );
 }
@@ -425,15 +437,17 @@ fn serve(args: &Args) -> Result<()> {
     let features_flag = Some(args.get_usize("features", 0)).filter(|&f| f > 0);
     // --listen switches serve into network mode: no in-process push
     // clients, requests arrive as wire frames, and --requests counts
-    // rows answered over the wire before the drain
-    let listen = args.get("listen").map(str::to_string);
-    let net_mode = listen.is_some();
+    // rows answered over the wire before the drain (0 = serve until a
+    // drain signal). The auth posture is validated before anything
+    // binds: an exposed listener needs --auth-token or an explicit
+    // --insecure-no-auth.
+    let edge = tablenet::config::NetEdgeConfig::from_args(args);
+    edge.validate()?;
+    let net_mode = edge.listen.is_some();
     // the shared cross-model admission controller exists in both modes
     // (push mode never consults it, so its pure-push behavior is
     // untouched); budget 0 = meter but never reject
-    let admission = Arc::new(tablenet::net::AdmissionController::new(
-        args.get_u64("admission-budget", 0),
-    ));
+    let admission = Arc::new(tablenet::net::AdmissionController::new(edge.admission_budget));
 
     // dataset-driven load only when asked for; the default is
     // pure-push — raw request rows synthesized from the artifact's own
@@ -544,9 +558,14 @@ fn serve(args: &Args) -> Result<()> {
     let names: Vec<String> = registry.client().models();
     if net_mode {
         println!(
-            "serving {} model(s) {:?} | network mode, draining after {n_requests} rows",
+            "serving {} model(s) {:?} | network mode, {}",
             names.len(),
             names,
+            if n_requests == 0 {
+                "draining on SIGTERM/SIGINT".to_string()
+            } else {
+                format!("draining after {n_requests} rows")
+            },
         );
     } else {
         println!(
@@ -603,6 +622,7 @@ fn serve(args: &Args) -> Result<()> {
                 WatcherOptions {
                     serve_cfg: fleet.defaults.clone(),
                     poll: Duration::from_millis(interval),
+                    retire_on_delete: args.switch("watch-retire-on-delete"),
                     ..WatcherOptions::default()
                 },
                 move |ev| {
@@ -612,6 +632,18 @@ fn serve(args: &Args) -> Result<()> {
                         WatchEvent::Swapped { name, features, .. } => (name, *features),
                         WatchEvent::Reconfigured { name, .. } => (name, None),
                         WatchEvent::Failed { .. } => return,
+                        WatchEvent::Retired { name } => {
+                            // stop driving a retired model; the
+                            // registry entry is already gone
+                            if !net_mode {
+                                let mut pools = pools_w.write().unwrap();
+                                if pools.remove(name).is_some() {
+                                    pools_version_w
+                                        .fetch_add(1, std::sync::atomic::Ordering::Release);
+                                }
+                            }
+                            return;
+                        }
                     };
                     if net_mode {
                         // no request pools to maintain for socket
@@ -727,7 +759,7 @@ fn serve(args: &Args) -> Result<()> {
 
     let start = std::time::Instant::now();
 
-    if let Some(addr) = listen.as_deref() {
+    if let Some(addr) = edge.listen.as_deref() {
         #[cfg(not(unix))]
         {
             let _ = addr;
@@ -735,52 +767,82 @@ fn serve(args: &Args) -> Result<()> {
         }
         #[cfg(unix)]
         {
-            use tablenet::net::{NetServer, NetServerOptions};
+            use tablenet::net::{
+                drain_signal_received, install_drain_signal_handler, NetServer, NetServerOptions,
+            };
+            // latch SIGTERM/SIGINT into a drain flag BEFORE the
+            // listener binds, so a kill during startup still drains
+            install_drain_signal_handler();
             let server = NetServer::start(
                 addr,
                 registry.client(),
                 admission.clone(),
                 NetServerOptions {
-                    threads: args.get_usize("net-threads", 0),
+                    threads: edge.net_threads,
+                    auth_token: edge.auth_token.clone(),
+                    max_conns: edge.max_conns,
+                    frame_rate_limit: edge.frame_rate_limit,
+                    row_rate_limit: edge.row_rate_limit,
+                    drain_grace_ms: edge.drain_grace_ms,
                     ..NetServerOptions::default()
                 },
             )
             .map_err(|e| anyhow!("--listen {addr}: {e}"))?;
             let budget = admission.budget();
             println!(
-                "listening on {} | {} net threads | admission budget {}",
+                "listening on {} | {} net threads | admission budget {} | auth {}",
                 server.local_addr(),
                 server.threads(),
                 if budget == 0 { "unlimited".to_string() } else { format!("{budget} rows") },
+                if edge.auth_token.is_some() { "required" } else { "off" },
             );
             // rows_done counts every row answered over the wire —
             // served, shed or refused — so the drain threshold is
-            // reached even under pure overload
+            // reached even under pure overload. Every exit path goes
+            // through the same graceful GoAway drain.
             let mut swap_failures: Vec<String> = Vec::new();
             let mut swaps_left = !swaps.is_empty();
-            while server.rows_done() < n_requests as u64 {
-                if swaps_left && server.rows_done() >= (n_requests / 2) as u64 {
-                    run_swaps(&mut swap_failures);
-                    swaps_left = false;
+            let drain_cause = if args.switch("drain") {
+                "drain requested on the command line".to_string()
+            } else {
+                loop {
+                    if drain_signal_received() {
+                        break "drain signal (SIGTERM/SIGINT)".to_string();
+                    }
+                    let done = server.rows_done();
+                    if n_requests > 0 && done >= n_requests as u64 {
+                        break format!("row target {n_requests} reached");
+                    }
+                    if swaps_left && n_requests > 0 && done >= (n_requests / 2) as u64 {
+                        run_swaps(&mut swap_failures);
+                        swaps_left = false;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
                 }
-                std::thread::sleep(Duration::from_millis(5));
-            }
+            };
             if swaps_left {
                 run_swaps(&mut swap_failures);
             }
+            println!(
+                "draining: {drain_cause} ({} connection(s) open, grace {}ms)",
+                server.active_connections(),
+                edge.drain_grace_ms
+            );
+            server.begin_drain(&drain_cause);
             let elapsed = start.elapsed().as_secs_f64();
             let net_snap = server.shutdown();
             if let Some(w) = watcher {
                 let stats = w.stop();
                 println!(
                     "watcher: {} scans, {} registered, {} swapped, {} reconfigured, \
-                     {} rejected, {} retries",
+                     {} rejected, {} retries, {} retired",
                     stats.scans,
                     stats.registered,
                     stats.swapped,
                     stats.reconfigured,
                     stats.failed,
-                    stats.retries
+                    stats.retries,
+                    stats.retired
                 );
             }
             let mut fleet_snap = registry.shutdown();
@@ -905,13 +967,14 @@ fn serve(args: &Args) -> Result<()> {
         let stats = w.stop();
         println!(
             "watcher: {} scans, {} registered, {} swapped, {} reconfigured, {} rejected, \
-             {} retries",
+             {} retries, {} retired",
             stats.scans,
             stats.registered,
             stats.swapped,
             stats.reconfigured,
             stats.failed,
-            stats.retries
+            stats.retries,
+            stats.retired
         );
     }
     let fleet_snap = registry.shutdown();
@@ -943,17 +1006,24 @@ fn serve(args: &Args) -> Result<()> {
 
 /// Wire-protocol load generator: drive a `serve --listen` tier over C
 /// concurrent connections and tally every row's typed outcome. Shed
-/// rows (queue-full, deadline, admission-rejected) are degraded
-/// service, not failures; a LOST row — sent but never answered — is a
-/// protocol violation and exits non-zero.
+/// rows (queue-full, deadline, admission-rejected, rate-limited) are
+/// degraded service, not failures; a LOST row — sent but never
+/// answered — or a DUPLICATE acknowledgement is a protocol violation
+/// and exits non-zero.
+///
+/// With `--retry-budget` (or `--auth-token`) the load runs through the
+/// idempotency-keyed [`ReconnectingClient`]: dropped connections,
+/// server restarts and GoAway drains are survived by retrying under
+/// the same key, so acknowledged rows stay exactly-once end to end.
 fn client_cmd(args: &Args) -> Result<()> {
     use std::time::Instant;
-    use tablenet::net::{Frame, NetClient, Status};
+    use tablenet::net::{Frame, NetClient, ReconnectingClient, RetryPolicy, RetryStats, Status};
 
     let addr = args.get("addr").map(str::to_string).ok_or_else(|| {
         anyhow!(
             "usage: tablenet client --addr HOST:PORT --model NAME [--requests ROWS] \
-             [--connections C] [--rows-per-frame R] [--features F]"
+             [--connections C] [--rows-per-frame R] [--features F] [--retry-budget N] \
+             [--auth-token SECRET] [--client-id ID]"
         )
     })?;
     let model = args.get_or("model", "digits").to_string();
@@ -962,10 +1032,21 @@ fn client_cmd(args: &Args) -> Result<()> {
     let rows_per_frame = args.get_usize("rows-per-frame", 16).clamp(1, 4096);
     let features = args.get_usize("features", 784).max(1);
     let seed = args.get_u64("seed", 0xC11E);
+    // resilient mode is opt-in via either flag; auth implies it because
+    // only the reconnecting client sends the Hello handshake
+    let resilient = args.get("retry-budget").is_some() || args.get("auth-token").is_some();
+    let retry_budget = args.get_u64("retry-budget", 8);
+    let token = args.get_or("auth-token", "").to_string();
+    let client_id = args.get_u64("client-id", seed | 1);
 
     println!(
         "client: {total_rows} rows -> '{model}' @ {addr} | {conns} connection(s), \
-         {rows_per_frame} rows/frame, {features} features"
+         {rows_per_frame} rows/frame, {features} features{}",
+        if resilient {
+            format!(" | reconnecting, retry budget {retry_budget}")
+        } else {
+            String::new()
+        }
     );
     let start = Instant::now();
     let mut joins = Vec::new();
@@ -974,65 +1055,128 @@ fn client_cmd(args: &Args) -> Result<()> {
         let share = total_rows / conns + usize::from(c < total_rows % conns);
         let addr = addr.clone();
         let model = model.clone();
+        let token = token.clone();
         joins.push(std::thread::spawn(move || {
-            let mut counts = [0u64; 8];
+            let mut counts = [0u64; Status::COUNT];
             let mut rtts: Vec<f64> = Vec::new();
             let mut rng = tablenet::util::Rng::new(seed ^ (c as u64 + 1));
-            let mut cl = match NetClient::connect_retry(&addr, 2_000) {
-                Ok(cl) => cl,
-                Err(e) => {
-                    eprintln!("[conn {c}] connect {addr}: {e}");
-                    return (counts, rtts, share as u64);
-                }
-            };
-            let mut left = share;
             let mut lost = 0u64;
-            while left > 0 {
-                let rows = left.min(rows_per_frame);
-                let data: Vec<f32> = (0..rows * features).map(|_| rng.f32()).collect();
-                let t0 = Instant::now();
-                match cl.infer(&model, features as u32, &data) {
-                    Ok(Frame::Reply(reply)) => {
-                        rtts.push(t0.elapsed().as_secs_f64() * 1e6);
-                        for row in &reply.rows {
-                            counts[row.status as usize] += 1;
+            let mut dups = 0u64;
+            let mut left = share;
+            if resilient {
+                let policy = RetryPolicy {
+                    budget: retry_budget,
+                    seed: seed ^ (c as u64).wrapping_mul(0x9e37_79b9),
+                    ..RetryPolicy::default()
+                };
+                // distinct per-connection client id: each connection is
+                // its own idempotency-key namespace in the replay cache
+                let mut cl =
+                    ReconnectingClient::new(&addr, client_id.wrapping_add(c as u64), &token, policy);
+                while left > 0 {
+                    let rows = left.min(rows_per_frame);
+                    let data: Vec<f32> = (0..rows * features).map(|_| rng.f32()).collect();
+                    let t0 = Instant::now();
+                    match cl.infer(&model, features as u32, &data) {
+                        Ok(reply) => {
+                            rtts.push(t0.elapsed().as_secs_f64() * 1e6);
+                            for row in reply.rows.iter().take(rows) {
+                                counts[row.status as usize] += 1;
+                            }
+                            // a short reply drops rows on the floor; an
+                            // over-long one double-acknowledges — both
+                            // are violations, neither passes silently
+                            lost += rows.saturating_sub(reply.rows.len()) as u64;
+                            dups += reply.rows.len().saturating_sub(rows) as u64;
+                            left -= rows;
                         }
-                        // a short reply would drop rows on the floor —
-                        // count the shortfall as lost, never silently
-                        lost += rows.saturating_sub(reply.rows.len()) as u64;
-                        left -= rows;
-                    }
-                    Ok(Frame::Error(err)) => {
-                        rtts.push(t0.elapsed().as_secs_f64() * 1e6);
-                        counts[err.status as usize] += rows as u64;
-                        left -= rows;
-                    }
-                    Ok(Frame::Request(_)) => {
-                        eprintln!("[conn {c}] protocol violation: server sent a request");
-                        return (counts, rtts, lost + left as u64);
-                    }
-                    Err(e) => {
-                        // io failure mid-stream: everything not yet
-                        // answered on this connection is lost
-                        eprintln!("[conn {c}] {e}");
-                        return (counts, rtts, lost + left as u64);
+                        Err(e) => {
+                            // budget exhausted: everything unanswered
+                            // on this connection is lost
+                            eprintln!("[conn {c}] {e}");
+                            let st = cl.stats();
+                            return (counts, rtts, lost + left as u64, dups, st);
+                        }
                     }
                 }
+                (counts, rtts, lost, dups, cl.stats())
+            } else {
+                let mut cl = match NetClient::connect_retry(&addr, 2_000) {
+                    Ok(cl) => cl,
+                    Err(e) => {
+                        eprintln!("[conn {c}] connect {addr}: {e}");
+                        return (counts, rtts, share as u64, 0, RetryStats::default());
+                    }
+                };
+                while left > 0 {
+                    let rows = left.min(rows_per_frame);
+                    let data: Vec<f32> = (0..rows * features).map(|_| rng.f32()).collect();
+                    let t0 = Instant::now();
+                    // a GoAway can interleave ahead of the reply during
+                    // a drain: note it and keep reading — re-sending
+                    // here would double-submit (no idempotency key)
+                    let exchange = (|| -> std::io::Result<Frame> {
+                        cl.send(&model, features as u32, &data)?;
+                        loop {
+                            match cl.read_frame()? {
+                                Frame::GoAway(ga) => eprintln!(
+                                    "[conn {c}] server draining ({}, grace {}ms); \
+                                     re-run with --retry-budget to ride through",
+                                    ga.reason, ga.grace_ms
+                                ),
+                                f => return Ok(f),
+                            }
+                        }
+                    })();
+                    match exchange {
+                        Ok(Frame::Reply(reply)) => {
+                            rtts.push(t0.elapsed().as_secs_f64() * 1e6);
+                            for row in reply.rows.iter().take(rows) {
+                                counts[row.status as usize] += 1;
+                            }
+                            lost += rows.saturating_sub(reply.rows.len()) as u64;
+                            dups += reply.rows.len().saturating_sub(rows) as u64;
+                            left -= rows;
+                        }
+                        Ok(Frame::Error(err)) => {
+                            rtts.push(t0.elapsed().as_secs_f64() * 1e6);
+                            counts[err.status as usize] += rows as u64;
+                            left -= rows;
+                        }
+                        Ok(_) => {
+                            eprintln!("[conn {c}] protocol violation: unexpected frame kind");
+                            return (counts, rtts, lost + left as u64, dups, RetryStats::default());
+                        }
+                        Err(e) => {
+                            // io failure mid-stream: everything not yet
+                            // answered on this connection is lost
+                            eprintln!("[conn {c}] {e}");
+                            return (counts, rtts, lost + left as u64, dups, RetryStats::default());
+                        }
+                    }
+                }
+                (counts, rtts, lost, dups, RetryStats::default())
             }
-            (counts, rtts, lost)
         }));
     }
 
-    let mut counts = [0u64; 8];
+    let mut counts = [0u64; Status::COUNT];
     let mut rtts: Vec<f64> = Vec::new();
     let mut lost = 0u64;
+    let mut dups = 0u64;
+    let mut retry = RetryStats::default();
     for j in joins {
-        let (c, r, l) = j.join().unwrap();
+        let (c, r, l, d, st) = j.join().unwrap();
         for (total, part) in counts.iter_mut().zip(c) {
             *total += part;
         }
         rtts.extend(r);
         lost += l;
+        dups += d;
+        retry.connects += st.connects;
+        retry.retries += st.retries;
+        retry.budget_denied += st.budget_denied;
+        retry.goaways_seen += st.goaways_seen;
     }
     let elapsed = start.elapsed().as_secs_f64();
     let answered: u64 = counts.iter().sum();
@@ -1050,7 +1194,8 @@ fn client_cmd(args: &Args) -> Result<()> {
     println!();
     println!(
         "  ok {} | queue-full {} | deadline-shed {} | panicked {} | shut-down {} | \
-         unknown-model {} | admission-rejected {} | malformed {} | lost {lost}",
+         unknown-model {} | admission-rejected {} | malformed {} | auth-failed {} | \
+         rate-limited {} | too-many-conns {} | lost {lost} | duplicates {dups}",
         counts[Status::Ok as usize],
         counts[Status::QueueFull as usize],
         counts[Status::DeadlineExceeded as usize],
@@ -1059,9 +1204,21 @@ fn client_cmd(args: &Args) -> Result<()> {
         counts[Status::UnknownModel as usize],
         counts[Status::AdmissionRejected as usize],
         counts[Status::Malformed as usize],
+        counts[Status::AuthFailed as usize],
+        counts[Status::RateLimited as usize],
+        counts[Status::TooManyConnections as usize],
     );
+    if resilient {
+        println!(
+            "  retry: {} connect(s), {} retried, {} budget-denied, {} goaway(s) seen",
+            retry.connects, retry.retries, retry.budget_denied, retry.goaways_seen
+        );
+    }
     if lost > 0 {
         bail!("{lost} row(s) lost: sent but never answered");
+    }
+    if dups > 0 {
+        bail!("{dups} duplicate row acknowledgement(s): exactly-once violated");
     }
     Ok(())
 }

@@ -158,6 +158,70 @@ impl AdmissionController {
     }
 }
 
+/// A token bucket: `capacity` tokens that refill continuously at
+/// `refill_per_sec`, consumed in whole-token units. This is the one
+/// rate/budget primitive the net tier layers *in front of* the row
+/// [`AdmissionController`]: the server arms one bucket per connection
+/// for frames and one for rows (burst = one second of the configured
+/// rate), and the reconnecting client uses a bucket as its retry
+/// budget (reconnect attempts spend tokens; an empty bucket turns a
+/// flaky link into a typed terminal failure instead of an infinite
+/// retry loop).
+///
+/// Time is supplied by the caller through [`TokenBucket::take`]'s
+/// `elapsed` argument, which keeps the bucket deterministic under
+/// test and free of hidden clock reads; [`TokenBucket::take_now`] is
+/// the wall-clock convenience used by serving code.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    capacity: f64,
+    tokens: f64,
+    refill_per_sec: f64,
+    last: std::time::Instant,
+}
+
+impl TokenBucket {
+    /// A bucket starting full at `capacity`, refilling at
+    /// `refill_per_sec` (0 = a pure budget that never refills).
+    pub fn new(capacity: u64, refill_per_sec: f64) -> TokenBucket {
+        TokenBucket {
+            capacity: capacity as f64,
+            tokens: capacity as f64,
+            refill_per_sec: refill_per_sec.max(0.0),
+            last: std::time::Instant::now(),
+        }
+    }
+
+    /// Credit `elapsed` seconds of refill, then try to spend `n`
+    /// tokens. Returns `true` when the bucket held them; on `false`
+    /// nothing is spent (all-or-nothing, so one oversized frame cannot
+    /// starve the bucket to a permanently negative balance).
+    pub fn take(&mut self, n: u64, elapsed: std::time::Duration) -> bool {
+        self.tokens =
+            (self.tokens + elapsed.as_secs_f64() * self.refill_per_sec).min(self.capacity);
+        if self.tokens >= n as f64 {
+            self.tokens -= n as f64;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// [`take`](Self::take) against the wall clock since the previous
+    /// call.
+    pub fn take_now(&mut self, n: u64) -> bool {
+        let now = std::time::Instant::now();
+        let elapsed = now.duration_since(self.last);
+        self.last = now;
+        self.take(n, elapsed)
+    }
+
+    /// Whole tokens currently available (no refill applied).
+    pub fn available(&self) -> u64 {
+        self.tokens as u64
+    }
+}
+
 /// Frozen view of one lane's counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct LaneSnapshot {
@@ -284,6 +348,28 @@ mod tests {
         let ac = AdmissionController::new(10);
         assert!(ac.try_admit("implicit", 10));
         assert_eq!(ac.snapshot().lanes["implicit"].weight, 1);
+    }
+
+    #[test]
+    fn token_bucket_budget_and_refill_are_deterministic() {
+        use std::time::Duration;
+        // pure budget: no refill, 5 tokens, all-or-nothing spend
+        let mut b = TokenBucket::new(5, 0.0);
+        assert!(b.take(3, Duration::ZERO));
+        assert!(!b.take(3, Duration::ZERO), "only 2 left; nothing spent");
+        assert_eq!(b.available(), 2);
+        assert!(b.take(2, Duration::ZERO));
+        assert!(!b.take(1, Duration::from_secs(3600)), "rate 0 never refills");
+
+        // refilling bucket: 10/s, capacity 10 (one-second burst)
+        let mut b = TokenBucket::new(10, 10.0);
+        assert!(b.take(10, Duration::ZERO), "full burst goes through");
+        assert!(!b.take(1, Duration::ZERO));
+        assert!(b.take(5, Duration::from_millis(500)), "half a second buys 5");
+        assert!(!b.take(1, Duration::ZERO));
+        // refill clamps at capacity: a long idle gap is not a mega-burst
+        assert!(b.take(10, Duration::from_secs(100)));
+        assert!(!b.take(1, Duration::ZERO));
     }
 
     #[test]

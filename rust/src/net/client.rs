@@ -1,14 +1,30 @@
-//! Blocking wire client: one TCP connection speaking the `LTN1`
-//! protocol, used by `tablenet client` for load generation and by the
-//! integration tests/benches. Pure `std` — works on every platform
-//! even where the server's poll backend does not.
+//! Wire clients: the blocking single-connection [`NetClient`] used by
+//! tests/benches, and the [`ReconnectingClient`] used by
+//! `tablenet client` — which survives server restarts by retrying
+//! idempotency-keyed requests under an explicit token-bucket retry
+//! budget with a deterministic capped-jittered backoff schedule.
+//! Pure `std` — works on every platform even where the server's poll
+//! backend does not.
+//!
+//! # Exactly-once across reconnects
+//!
+//! Every request carries a per-client idempotency key (stamped from a
+//! monotonic counter, never 0) and the client announces a stable
+//! `client_id` in its `Hello`. The server's replay cache answers a
+//! retried `(client_id, key)` with the original verdicts instead of
+//! re-submitting rows, so a reply lost to a dropped connection is
+//! retried safely: the rows are acknowledged at most once.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
+use crate::util::Rng;
+
+use super::admission::TokenBucket;
 use super::proto::{
-    decode_payload, encode_frame, Deframer, Frame, InferRequest, MAX_FRAME_BYTES,
+    decode_payload, encode_frame, Deframer, Frame, Hello, InferReply, InferRequest, RowReply,
+    Status, MAX_FRAME_BYTES,
 };
 
 /// A blocking protocol client over one TCP connection.
@@ -47,12 +63,38 @@ impl NetClient {
         }
     }
 
+    /// Announce this client (and present the shared-secret token, if
+    /// the server demands one). No reply is sent on success; a wrong
+    /// token comes back as a typed `AuthFailed` error frame.
+    pub fn hello(&mut self, client_id: u64, token: &str) -> std::io::Result<()> {
+        let mut wire = Vec::new();
+        encode_frame(
+            &Frame::Hello(Hello { client_id, token: token.to_string() }),
+            &mut wire,
+        );
+        self.stream.write_all(&wire)
+    }
+
     /// Send one request frame (`rows * features` values, row-major)
-    /// without waiting for the reply — supports pipelining.
+    /// without waiting for the reply — supports pipelining. Unkeyed
+    /// (`key` 0): the reply is never replay-cached.
     pub fn send(&mut self, model: &str, features: u32, data: &[f32]) -> std::io::Result<()> {
-        let mut wire = Vec::with_capacity(16 + data.len() * 4);
+        self.send_keyed(0, model, features, data)
+    }
+
+    /// [`send`](Self::send) stamped with an idempotency key (echoed in
+    /// the reply; `0` means unkeyed).
+    pub fn send_keyed(
+        &mut self,
+        key: u64,
+        model: &str,
+        features: u32,
+        data: &[f32],
+    ) -> std::io::Result<()> {
+        let mut wire = Vec::with_capacity(24 + data.len() * 4);
         encode_frame(
             &Frame::Request(InferRequest {
+                key,
                 model: model.to_string(),
                 features,
                 data: data.to_vec(),
@@ -106,5 +148,302 @@ impl NetClient {
     /// in-flight reply.
     pub fn finish_writes(&self) -> std::io::Result<()> {
         self.stream.shutdown(std::net::Shutdown::Write)
+    }
+}
+
+// ---- retry policy ---------------------------------------------------------
+
+/// Retry governance for [`ReconnectingClient`]: an explicit token
+/// budget (every retry — reconnect or re-send — spends one token) and
+/// a deterministic capped-jittered backoff schedule.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Retry tokens available at burst (the bucket capacity).
+    pub budget: u64,
+    /// Token refill rate per second (`0.0` = a fixed, non-renewing
+    /// budget).
+    pub refill_per_sec: f64,
+    /// First backoff step; doubles per consecutive retry.
+    pub base: Duration,
+    /// Backoff ceiling.
+    pub cap: Duration,
+    /// Jitter seed: the whole backoff schedule is a pure function of
+    /// `(seed, attempt)`, so a fixed seed reproduces the exact sleeps.
+    pub seed: u64,
+    /// Socket read timeout while waiting for a reply; a timeout is a
+    /// transport error and follows the retry path (safe: the request
+    /// is idempotency-keyed). `None` blocks forever.
+    pub read_timeout: Option<Duration>,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            budget: 8,
+            refill_per_sec: 0.5,
+            base: Duration::from_millis(50),
+            cap: Duration::from_secs(2),
+            seed: 0x7ab1e,
+            read_timeout: Some(Duration::from_secs(10)),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The backoff before retry number `attempt` (0-based): capped
+    /// doubling from [`base`](Self::base), scaled by a jitter factor
+    /// in `[0.5, 1.0)` drawn deterministically from
+    /// `(seed, attempt)`.
+    pub fn backoff_schedule(&self, attempt: u32) -> Duration {
+        let exp = attempt.min(16);
+        let ceiling = self.base.saturating_mul(1u32 << exp).min(self.cap);
+        let mut rng = Rng::new(
+            self.seed
+                ^ u64::from(attempt)
+                    .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                    .wrapping_add(0x5851_f42d_4c95_7f2d),
+        );
+        let jitter = 0.5 + 0.5 * rng.f64();
+        Duration::from_secs_f64(ceiling.as_secs_f64() * jitter)
+    }
+}
+
+// ---- reconnecting client --------------------------------------------------
+
+/// Counters describing how hard a [`ReconnectingClient`] had to work.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RetryStats {
+    /// Connections established (including the first).
+    pub connects: u64,
+    /// Retries spent from the budget (reconnects + re-sends).
+    pub retries: u64,
+    /// Retries refused because the budget was empty.
+    pub budget_denied: u64,
+    /// `GoAway` drain notices observed.
+    pub goaways_seen: u64,
+}
+
+/// What one exchange on the wire produced, before retry logic.
+enum Exchange {
+    /// The reply for our key.
+    Reply(InferReply),
+    /// A frame-level typed error.
+    Refused(Status),
+}
+
+/// A wire client that survives dropped connections and server
+/// restarts: requests are idempotency-keyed, replies are matched by
+/// key, and every retry (reconnect or re-send) spends a token from the
+/// [`RetryPolicy`] budget with deterministic capped-jittered backoff
+/// between attempts. Terminal statuses (`Malformed`, `UnknownModel`,
+/// `AuthFailed`) are never retried — they come back as typed per-row
+/// error verdicts.
+pub struct ReconnectingClient {
+    addr: String,
+    client_id: u64,
+    token: String,
+    policy: RetryPolicy,
+    budget: TokenBucket,
+    inner: Option<NetClient>,
+    next_key: u64,
+    draining: bool,
+    stats: RetryStats,
+}
+
+impl ReconnectingClient {
+    /// Create a client for `addr`. `client_id` must be nonzero and
+    /// stable for the client's lifetime (it namespaces the server-side
+    /// replay cache); `token` is the shared auth secret (empty when
+    /// the server runs without auth). Connects lazily on first use.
+    pub fn new(addr: &str, client_id: u64, token: &str, policy: RetryPolicy) -> ReconnectingClient {
+        let budget = TokenBucket::new(policy.budget, policy.refill_per_sec);
+        ReconnectingClient {
+            addr: addr.to_string(),
+            client_id: client_id.max(1),
+            token: token.to_string(),
+            policy,
+            budget,
+            inner: None,
+            next_key: 1,
+            draining: false,
+            stats: RetryStats::default(),
+        }
+    }
+
+    /// Retry counters so far.
+    pub fn stats(&self) -> RetryStats {
+        self.stats
+    }
+
+    /// The key the next request will be stamped with.
+    pub fn next_key(&self) -> u64 {
+        self.next_key
+    }
+
+    /// Send one request and block until it is definitively resolved:
+    /// `Ok` with the reply (possibly all-error rows for a terminal
+    /// refusal), or `Err` when the transport failed and the retry
+    /// budget is exhausted. Rows acknowledged `Ok` are acknowledged
+    /// exactly once across any number of reconnects (see module docs).
+    pub fn infer(
+        &mut self,
+        model: &str,
+        features: u32,
+        data: &[f32],
+    ) -> std::io::Result<InferReply> {
+        let key = self.next_key;
+        self.next_key += 1;
+        let rows = if features == 0 { 0 } else { data.len() / features as usize };
+        let mut attempt: u32 = 0;
+        loop {
+            if self.inner.is_none() {
+                let connected = NetClient::connect_retry(&self.addr, 1_000).and_then(|mut c| {
+                    c.set_read_timeout(self.policy.read_timeout)?;
+                    c.hello(self.client_id, &self.token)?;
+                    Ok(c)
+                });
+                match connected {
+                    Ok(c) => {
+                        self.inner = Some(c);
+                        self.draining = false;
+                        self.stats.connects += 1;
+                    }
+                    Err(e) => {
+                        if !self.spend(&mut attempt) {
+                            return Err(budget_exhausted(e.to_string()));
+                        }
+                        continue;
+                    }
+                }
+            }
+            let outcome = self.exchange(key, model, features, data);
+            if self.draining {
+                // the server said GoAway: finish this exchange, then
+                // abandon the connection so the next attempt lands on
+                // a live (possibly restarted) listener
+                self.inner = None;
+                self.draining = false;
+            }
+            match outcome {
+                Ok(Exchange::Reply(r)) => return Ok(r),
+                Ok(Exchange::Refused(status)) => {
+                    if !status.is_retryable() {
+                        return Ok(refused_reply(key, rows, status));
+                    }
+                    if matches!(status, Status::ShutDown | Status::TooManyConnections) {
+                        // this server is going away (or full): retry on
+                        // a fresh connection after backoff
+                        self.inner = None;
+                    }
+                    if !self.spend(&mut attempt) {
+                        return Ok(refused_reply(key, rows, status));
+                    }
+                }
+                Err(e) => {
+                    self.inner = None;
+                    if !self.spend(&mut attempt) {
+                        return Err(budget_exhausted(e.to_string()));
+                    }
+                }
+            }
+        }
+    }
+
+    /// One send + matching read on the current connection.
+    fn exchange(
+        &mut self,
+        key: u64,
+        model: &str,
+        features: u32,
+        data: &[f32],
+    ) -> std::io::Result<Exchange> {
+        let conn = self.inner.as_mut().expect("exchange requires a connection");
+        conn.send_keyed(key, model, features, data)?;
+        loop {
+            match conn.read_frame()? {
+                Frame::Reply(r) if r.key == key => return Ok(Exchange::Reply(r)),
+                // a stale reply for an abandoned exchange: skip it
+                Frame::Reply(_) => continue,
+                Frame::Error(e) => return Ok(Exchange::Refused(e.status)),
+                Frame::GoAway(_) => {
+                    self.stats.goaways_seen += 1;
+                    self.draining = true;
+                    // the server still answers in-flight requests
+                    continue;
+                }
+                _ => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        "unexpected frame kind from server",
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Spend one retry token and sleep the deterministic backoff.
+    /// `false` means the budget is empty.
+    fn spend(&mut self, attempt: &mut u32) -> bool {
+        if !self.budget.take_now(1) {
+            self.stats.budget_denied += 1;
+            return false;
+        }
+        self.stats.retries += 1;
+        let pause = self.policy.backoff_schedule(*attempt);
+        *attempt += 1;
+        std::thread::sleep(pause);
+        true
+    }
+}
+
+/// The reply handed back for a terminal (or budget-final) frame-level
+/// refusal: every row carries the typed error verdict.
+fn refused_reply(key: u64, rows: usize, status: Status) -> InferReply {
+    InferReply { key, rows: (0..rows).map(|_| RowReply::error(status)).collect() }
+}
+
+fn budget_exhausted(last: String) -> std::io::Error {
+    std::io::Error::other(format!("retry budget exhausted (last error: {last})"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedule_is_deterministic_capped_and_jittered() {
+        let p = RetryPolicy {
+            budget: 4,
+            refill_per_sec: 0.0,
+            base: Duration::from_millis(50),
+            cap: Duration::from_secs(2),
+            seed: 0xfeed,
+            read_timeout: None,
+        };
+        let a: Vec<Duration> = (0..20).map(|i| p.backoff_schedule(i)).collect();
+        let b: Vec<Duration> = (0..20).map(|i| p.backoff_schedule(i)).collect();
+        assert_eq!(a, b, "fixed seed must reproduce the exact schedule");
+
+        for (i, d) in a.iter().enumerate() {
+            let ceiling = p.base.saturating_mul(1u32 << (i as u32).min(16)).min(p.cap);
+            assert!(*d <= ceiling, "attempt {i}: {d:?} over ceiling {ceiling:?}");
+            assert!(
+                *d >= ceiling.mul_f64(0.499),
+                "attempt {i}: {d:?} under half-ceiling {ceiling:?}"
+            );
+        }
+        // deep attempts saturate at the cap, never overflow past it
+        assert!(a[19] <= p.cap);
+
+        let q = RetryPolicy { seed: 0xbeef, ..p.clone() };
+        let c: Vec<Duration> = (0..20).map(|i| q.backoff_schedule(i)).collect();
+        assert_ne!(a, c, "different seeds must jitter differently");
+    }
+
+    #[test]
+    fn keys_start_at_one_and_climb() {
+        let c = ReconnectingClient::new("127.0.0.1:1", 7, "", RetryPolicy::default());
+        assert_eq!(c.next_key(), 1, "key 0 is reserved for unkeyed requests");
+        assert_eq!(c.stats(), RetryStats::default());
     }
 }

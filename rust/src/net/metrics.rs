@@ -1,6 +1,6 @@
 //! Ingress metrics for the network serving tier: per-connection and
 //! per-model row accounting, folded into
-//! [`FleetSnapshot`](crate::coordinator::FleetSnapshot) when a socket
+//! [`FleetSnapshot`](crate::coordinator::metrics::FleetSnapshot) when a socket
 //! listener fronted the registry.
 //!
 //! The net tier extends the pipeline's exact accounting invariant to
@@ -14,9 +14,16 @@
 //!                + rows_panicked + rows_shutdown
 //! ```
 //!
-//! and admission-rejected rows are counted separately (they never
-//! entered a pipeline). [`NetSnapshot::assert_accounted`] checks the
-//! invariant for every model.
+//! and admission-rejected / rate-limited rows are counted separately
+//! (they never entered a pipeline). [`NetSnapshot::assert_accounted`]
+//! checks the invariant for every model.
+//!
+//! **Swap-aware latency.** Wire latency is additionally recorded per
+//! `(model, artifact version)` — the version each row's verdict came
+//! back stamped with — so a canary that passes its quarantine batch
+//! but serves slow is visible as a distinct sub-histogram next to the
+//! incumbent's within one swap interval, instead of being averaged
+//! into the model's aggregate.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -24,6 +31,11 @@ use std::sync::{Arc, Mutex};
 
 use super::admission::AdmissionSnapshot;
 use super::proto::Status;
+use crate::util::percentile;
+
+/// Cap on retained per-(model, version) latency samples; recording
+/// stops at the cap (percentiles then describe the first N rows).
+const MAX_VERSION_SAMPLES: usize = 50_000;
 
 /// Per-connection counters reported after the connection closes.
 /// Bounded: only the first [`MAX_CONNS_TRACKED`] closed connections
@@ -36,6 +48,8 @@ pub struct ConnIngress {
     pub peer: String,
     /// Request frames received.
     pub frames_in: u64,
+    /// Reply/error/goaway frames written to this connection.
+    pub frames_out: u64,
     /// Rows received in well-formed request frames.
     pub rows_in: u64,
     /// Raw bytes read.
@@ -66,6 +80,8 @@ pub struct ModelIngress {
     pub rows_shutdown: u64,
     /// Rows refused by the shared admission budget (never submitted).
     pub rows_admission_rejected: u64,
+    /// Rows refused by a per-connection rate limit (never submitted).
+    pub rows_rate_limited: u64,
 }
 
 impl ModelIngress {
@@ -81,8 +97,25 @@ impl ModelIngress {
 
     /// All rows this model saw at the wire, shed or served.
     pub fn rows_total(&self) -> u64 {
-        self.rows_admitted + self.rows_admission_rejected
+        self.rows_admitted + self.rows_admission_rejected + self.rows_rate_limited
     }
+}
+
+/// Wire-latency distribution of one `(model, artifact version)` pair.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WireVersionStats {
+    /// Ok rows served by this version.
+    pub rows: u64,
+    /// Median wire latency (request frame in → reply queued), µs.
+    pub p50_us: f64,
+    /// p99 wire latency, µs.
+    pub p99_us: f64,
+}
+
+#[derive(Debug, Default)]
+struct VersionAgg {
+    rows: u64,
+    lat_us: Vec<f64>,
 }
 
 #[derive(Debug, Default)]
@@ -94,6 +127,8 @@ struct ModelCells {
     panicked: AtomicU64,
     shutdown: AtomicU64,
     admission_rejected: AtomicU64,
+    rate_limited: AtomicU64,
+    versions: Mutex<BTreeMap<u64, VersionAgg>>,
 }
 
 /// Live counters shared by every reactor and dispatcher thread.
@@ -107,6 +142,11 @@ pub struct NetMetrics {
     frames_out: AtomicU64,
     protocol_errors: AtomicU64,
     unknown_model_frames: AtomicU64,
+    auth_failures: AtomicU64,
+    connections_refused: AtomicU64,
+    goaways_sent: AtomicU64,
+    frames_replayed: AtomicU64,
+    rows_replayed: AtomicU64,
     rows_done: AtomicU64,
     models: Mutex<BTreeMap<String, Arc<ModelCells>>>,
     conns: Mutex<Vec<ConnIngress>>,
@@ -181,6 +221,49 @@ impl NetMetrics {
         self.rows_done.fetch_add(rows, Ordering::Relaxed);
     }
 
+    /// A frame was refused by a per-connection frame/row rate limit.
+    pub fn record_rate_limited(&self, model: &str, rows: u64) {
+        self.model(model).rate_limited.fetch_add(rows, Ordering::Relaxed);
+        self.rows_done.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// A connection failed authentication (missing/wrong token before
+    /// the first request); it is failed closed.
+    pub fn record_auth_failure(&self) {
+        self.auth_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A connection was refused by the max-connections cap.
+    pub fn record_conn_refused(&self) {
+        self.connections_refused.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A `GoAway` drain notice was queued on a connection.
+    pub fn record_goaway(&self) {
+        self.goaways_sent.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A keyed request was answered from the replay cache instead of
+    /// being re-submitted (`rows` rows covered by the cached reply).
+    /// Replays are deliberately NOT part of `rows_done`: they answer a
+    /// row the ledger already counted once.
+    pub fn record_replay(&self, rows: u64) {
+        self.frames_replayed.fetch_add(1, Ordering::Relaxed);
+        self.rows_replayed.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// One Ok row's wire latency, attributed to the artifact version
+    /// that served it.
+    pub fn record_version_latency(&self, model: &str, version: u64, us: f64) {
+        let cells = self.model(model);
+        let mut versions = cells.versions.lock().unwrap_or_else(|e| e.into_inner());
+        let agg = versions.entry(version).or_default();
+        agg.rows += 1;
+        if agg.lat_us.len() < MAX_VERSION_SAMPLES {
+            agg.lat_us.push(us);
+        }
+    }
+
     /// `rows` rows were submitted into `model`'s pipeline.
     pub fn record_admitted(&self, model: &str, rows: u64) {
         self.model(model).admitted.fetch_add(rows, Ordering::Relaxed);
@@ -198,7 +281,10 @@ impl NetMetrics {
             Status::ShutDown
             | Status::UnknownModel
             | Status::AdmissionRejected
-            | Status::Malformed => &cells.shutdown,
+            | Status::Malformed
+            | Status::AuthFailed
+            | Status::RateLimited
+            | Status::TooManyConnections => &cells.shutdown,
         };
         cell.fetch_add(1, Ordering::Relaxed);
         self.rows_done.fetch_add(1, Ordering::Relaxed);
@@ -223,6 +309,11 @@ impl NetMetrics {
             frames_out: self.frames_out.load(Ordering::Relaxed),
             protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
             unknown_model_frames: self.unknown_model_frames.load(Ordering::Relaxed),
+            auth_failures: self.auth_failures.load(Ordering::Relaxed),
+            connections_refused: self.connections_refused.load(Ordering::Relaxed),
+            goaways_sent: self.goaways_sent.load(Ordering::Relaxed),
+            frames_replayed: self.frames_replayed.load(Ordering::Relaxed),
+            rows_replayed: self.rows_replayed.load(Ordering::Relaxed),
             rows_done: self.rows_done.load(Ordering::Relaxed),
             models: models
                 .iter()
@@ -239,7 +330,30 @@ impl NetMetrics {
                             rows_admission_rejected: c
                                 .admission_rejected
                                 .load(Ordering::Relaxed),
+                            rows_rate_limited: c.rate_limited.load(Ordering::Relaxed),
                         },
+                    )
+                })
+                .collect(),
+            versions: models
+                .iter()
+                .map(|(name, c)| {
+                    let versions = c.versions.lock().unwrap_or_else(|e| e.into_inner());
+                    (
+                        name.clone(),
+                        versions
+                            .iter()
+                            .map(|(v, agg)| {
+                                (
+                                    *v,
+                                    WireVersionStats {
+                                        rows: agg.rows,
+                                        p50_us: percentile(&agg.lat_us, 50.0),
+                                        p99_us: percentile(&agg.lat_us, 99.0),
+                                    },
+                                )
+                            })
+                            .collect(),
                     )
                 })
                 .collect(),
@@ -268,10 +382,23 @@ pub struct NetSnapshot {
     pub protocol_errors: u64,
     /// Request frames naming an unregistered model.
     pub unknown_model_frames: u64,
+    /// Connections failed closed on a missing/wrong auth token.
+    pub auth_failures: u64,
+    /// Connections refused by the max-connections cap.
+    pub connections_refused: u64,
+    /// `GoAway` drain notices sent.
+    pub goaways_sent: u64,
+    /// Keyed request frames answered from the replay cache.
+    pub frames_replayed: u64,
+    /// Rows covered by replayed reply frames (not in `rows_done`).
+    pub rows_replayed: u64,
     /// Total rows answered over the wire.
     pub rows_done: u64,
     /// Per-model wire-boundary row accounting.
     pub models: BTreeMap<String, ModelIngress>,
+    /// Per-model, per-artifact-version wire latency sub-histograms
+    /// (Ok rows only).
+    pub versions: BTreeMap<String, BTreeMap<u64, WireVersionStats>>,
     /// Individually-retained closed connections (bounded by
     /// [`MAX_CONNS_TRACKED`]).
     pub connections: Vec<ConnIngress>,
@@ -305,22 +432,27 @@ impl std::fmt::Display for NetSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "net: {} conns ({} closed) | frames {} in / {} out | {} B in / {} B out | \
-             {} protocol errors, {} unknown-model frames",
+            "net: {} conns ({} closed, {} refused) | frames {} in / {} out \
+             ({} replayed) | {} B in / {} B out | {} protocol errors, \
+             {} unknown-model frames, {} auth failures, {} goaways",
             self.connections_accepted,
             self.connections_closed,
+            self.connections_refused,
             self.frames_in,
             self.frames_out,
+            self.frames_replayed,
             self.bytes_in,
             self.bytes_out,
             self.protocol_errors,
             self.unknown_model_frames,
+            self.auth_failures,
+            self.goaways_sent,
         )?;
         for (name, m) in &self.models {
             writeln!(
                 f,
                 "net[{name}]: {} admitted = {} ok + {} queue-full + {} deadline + \
-                 {} panicked + {} shutdown | {} admission-rejected",
+                 {} panicked + {} shutdown | {} admission-rejected, {} rate-limited",
                 m.rows_admitted,
                 m.rows_ok,
                 m.rows_queue_full,
@@ -328,7 +460,17 @@ impl std::fmt::Display for NetSnapshot {
                 m.rows_panicked,
                 m.rows_shutdown,
                 m.rows_admission_rejected,
+                m.rows_rate_limited,
             )?;
+            if let Some(versions) = self.versions.get(name) {
+                for (v, stats) in versions {
+                    writeln!(
+                        f,
+                        "net[{name}] v{v}: {} ok rows, wire p50 {:.0}µs p99 {:.0}µs",
+                        stats.rows, stats.p50_us, stats.p99_us
+                    )?;
+                }
+            }
         }
         write!(f, "{}", self.admission)
     }
@@ -367,6 +509,47 @@ mod tests {
         assert_eq!(snap.unknown_model_frames, 1);
         assert_eq!(snap.models["a"].rows_admission_rejected, 32);
         assert_eq!(snap.rows_admission_rejected(), 32);
+    }
+
+    #[test]
+    fn hardening_rejections_are_typed_counted_and_ledger_safe() {
+        let m = NetMetrics::new();
+        m.record_rate_limited("a", 8);
+        m.record_auth_failure();
+        m.record_conn_refused();
+        m.record_goaway();
+        m.record_replay(5);
+        let snap = m.snapshot(AdmissionSnapshot::default());
+        snap.assert_accounted();
+        assert_eq!(snap.models["a"].rows_rate_limited, 8);
+        assert_eq!(snap.models["a"].rows_total(), 8);
+        assert_eq!(snap.rows_done, 8, "rate-limited rows are still answered rows");
+        assert_eq!(snap.auth_failures, 1);
+        assert_eq!(snap.connections_refused, 1);
+        assert_eq!(snap.goaways_sent, 1);
+        assert_eq!((snap.frames_replayed, snap.rows_replayed), (1, 5));
+        assert_eq!(snap.rows_done, 8, "replays never double-count the ledger");
+    }
+
+    #[test]
+    fn per_version_latency_histograms_stay_distinct() {
+        let m = NetMetrics::new();
+        // v1 serves fast, v2 (the slow canary) 10x slower; the split
+        // must survive into the snapshot instead of averaging away
+        for _ in 0..100 {
+            m.record_version_latency("digits", 1, 100.0);
+            m.record_version_latency("digits", 2, 1000.0);
+        }
+        let snap = m.snapshot(AdmissionSnapshot::default());
+        let v = &snap.versions["digits"];
+        assert_eq!(v[&1].rows, 100);
+        assert_eq!(v[&2].rows, 100);
+        assert_eq!(v[&1].p50_us, 100.0);
+        assert_eq!(v[&2].p50_us, 1000.0);
+        assert!(v[&2].p99_us >= 10.0 * v[&1].p99_us * 0.99);
+        let text = format!("{snap}");
+        assert!(text.contains("net[digits] v1:"), "{text}");
+        assert!(text.contains("net[digits] v2:"), "{text}");
     }
 
     #[test]

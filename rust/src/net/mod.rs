@@ -17,9 +17,12 @@
 //! * [`admission`] — shared cross-model token budget with per-model
 //!   queue weights, metering aggregate in-flight rows.
 //! * [`metrics`] — per-connection and per-model ingress accounting,
-//!   folded into [`FleetSnapshot`](crate::coordinator::FleetSnapshot).
-//! * [`server`] — thread-per-core acceptor/reactor tier (unix only).
-//! * [`client`] — blocking load-generation client (`tablenet client`).
+//!   folded into [`FleetSnapshot`](crate::coordinator::metrics::FleetSnapshot).
+//! * [`server`] — thread-per-core acceptor/reactor tier (unix only):
+//!   Hello auth, per-connection rate limits, GoAway graceful drain,
+//!   cross-connection replay cache for idempotency keys.
+//! * [`client`] — blocking [`NetClient`] plus the budgeted
+//!   [`ReconnectingClient`] behind `tablenet client`.
 //!
 //! Everything downstream of the dispatcher is the exact same code path
 //! in-process push clients use, so swaps, deadlines, panic isolation
@@ -34,9 +37,13 @@ pub mod proto;
 #[cfg(unix)]
 pub mod server;
 
-pub use admission::{AdmissionController, AdmissionSnapshot, LaneSnapshot};
-pub use client::NetClient;
-pub use metrics::{ConnIngress, ModelIngress, NetMetrics, NetSnapshot};
-pub use proto::{ErrorReply, Frame, InferReply, InferRequest, RowReply, Status, WireError};
+pub use admission::{AdmissionController, AdmissionSnapshot, LaneSnapshot, TokenBucket};
+pub use client::{NetClient, ReconnectingClient, RetryPolicy, RetryStats};
+pub use metrics::{ConnIngress, ModelIngress, NetMetrics, NetSnapshot, WireVersionStats};
+pub use proto::{
+    ErrorReply, Frame, GoAway, Hello, InferReply, InferRequest, RowReply, Status, WireError,
+};
 #[cfg(unix)]
-pub use server::{NetServer, NetServerOptions};
+pub use server::{
+    drain_signal_received, install_drain_signal_handler, NetServer, NetServerOptions,
+};

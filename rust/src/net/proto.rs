@@ -9,35 +9,58 @@
 //! ```text
 //! frame    := len:u32le payload[len]
 //! payload  := magic[4]="LTN1" version:u8 kind:u8 body
-//! request  := model_len:u16le model[model_len] rows:u16le features:u32le
-//!             data: rows*features * f32le                     (kind 0x01)
-//! reply    := rows:u16le row*rows                             (kind 0x02)
+//! request  := key:u64le model_len:u16le model[model_len] rows:u16le
+//!             features:u32le data: rows*features * f32le   (kind 0x01)
+//!             (v1 layout: identical but WITHOUT the leading key field)
+//! reply    := key:u64le rows:u16le row*rows                (kind 0x02)
+//!             (v1 layout: identical but WITHOUT the leading key field)
 //! row      := status:u8 class:u16le version:u64le nlogits:u16le
 //!             logits: nlogits * f32le          (nlogits = 0 on error rows)
-//! error    := status:u8 msg_len:u16le msg[msg_len]            (kind 0x03)
+//! error    := status:u8 msg_len:u16le msg[msg_len]         (kind 0x03)
+//! hello    := client_id:u64le token_len:u16le token[token_len]
+//!                                                     (kind 0x04, v2+)
+//! goaway   := grace_ms:u32le reason_len:u16le reason[reason_len]
+//!                                                     (kind 0x05, v2+)
 //! ```
 //!
-//! Versioning rules: a magic mismatch or a version other than
-//! [`VERSION`] is a protocol error — the server answers with a typed
-//! [`Status::Malformed`] error frame and closes the connection (fails
-//! closed). Unknown frame kinds and any limit violation
+//! Versioning rules: a magic mismatch or a version outside
+//! `1..=`[`VERSION`] is a protocol error — the server answers with a
+//! typed [`Status::Malformed`] error frame and closes the connection
+//! (fails closed). Unknown frame kinds and any limit violation
 //! ([`MAX_FRAME_BYTES`], [`MAX_ROWS_PER_FRAME`], [`MAX_MODEL_NAME`],
-//! [`MAX_FEATURES`]) are treated the same way. Additions within a
-//! version must be purely appended frame kinds; anything that changes
-//! the layout of an existing kind bumps the version byte.
+//! [`MAX_FEATURES`], [`MAX_TOKEN_LEN`]) are treated the same way.
+//! Within a version, additions must be purely appended frame kinds;
+//! anything that changes the layout of an existing kind bumps the
+//! version byte and the decoder keeps accepting every older layout
+//! (v2 decodes v1 frames; v1 request/reply bodies simply carry an
+//! implicit idempotency key of 0). [`Hello`]/[`GoAway`] exist only
+//! from v2 on — a v1 payload with those kinds is an unknown kind.
 //!
 //! Error frames carry failures that void a whole request frame (unknown
-//! model, admission rejection, malformed input, shutdown); per-row
-//! pipeline verdicts (queue-full, deadline, panic) ride inside a normal
-//! reply frame as per-row status bytes, so one frame can mix served and
-//! shed rows.
+//! model, admission rejection, auth/rate-limit refusals, malformed
+//! input, shutdown); per-row pipeline verdicts (queue-full, deadline,
+//! panic) ride inside a normal reply frame as per-row status bytes, so
+//! one frame can mix served and shed rows.
+//!
+//! **Idempotency keys.** A v2 client stamps every request with a
+//! `(client_id, key)` pair (`client_id` from its [`Hello`], `key` from
+//! the request) and the server echoes `key` in the reply. A reply lost
+//! to a dropped connection can therefore be re-requested under the same
+//! key after reconnecting: the server answers duplicates from a bounded
+//! replay cache instead of re-submitting rows to the pipeline, so a
+//! retried frame is acknowledged exactly once end to end. Key 0 means
+//! "unkeyed" and is never cached.
 
 use crate::coordinator::ServeError;
 
 /// Frame magic: the first four payload bytes of every frame.
 pub const MAGIC: [u8; 4] = *b"LTN1";
-/// Current protocol version (the fifth payload byte).
-pub const VERSION: u8 = 1;
+/// Current protocol version (the fifth payload byte). v2 added
+/// [`Hello`]/[`GoAway`] frames and the request/reply idempotency key;
+/// v1 payloads still decode (see the module docs).
+pub const VERSION: u8 = 2;
+/// Oldest protocol version the decoder accepts.
+pub const MIN_VERSION: u8 = 1;
 
 /// Hard cap on a single frame payload (16 MiB). A length prefix above
 /// this is rejected before any allocation happens.
@@ -48,10 +71,14 @@ pub const MAX_ROWS_PER_FRAME: usize = 4096;
 pub const MAX_MODEL_NAME: usize = 256;
 /// Hard cap on the per-row feature count.
 pub const MAX_FEATURES: usize = 1 << 20;
+/// Hard cap on the [`Hello`] auth token and [`GoAway`] reason fields.
+pub const MAX_TOKEN_LEN: usize = 256;
 
 const KIND_REQUEST: u8 = 0x01;
 const KIND_REPLY: u8 = 0x02;
 const KIND_ERROR: u8 = 0x03;
+const KIND_HELLO: u8 = 0x04;
+const KIND_GOAWAY: u8 = 0x05;
 
 /// Wire status codes: `0` is success, everything else is a typed
 /// failure mapping [`ServeError`] (and the net tier's own rejection
@@ -75,9 +102,18 @@ pub enum Status {
     AdmissionRejected = 6,
     /// The frame violated the protocol; the connection is closed.
     Malformed = 7,
+    /// Missing or wrong auth token; the connection is closed.
+    AuthFailed = 8,
+    /// The per-connection frame/row rate limit refused the frame.
+    RateLimited = 9,
+    /// The server's connection cap refused this connection.
+    TooManyConnections = 10,
 }
 
 impl Status {
+    /// Number of distinct wire status codes (codes are `0..COUNT`).
+    pub const COUNT: usize = 11;
+
     /// Decode a wire status byte.
     pub fn from_u8(v: u8) -> Option<Status> {
         Some(match v {
@@ -89,16 +125,30 @@ impl Status {
             5 => Status::UnknownModel,
             6 => Status::AdmissionRejected,
             7 => Status::Malformed,
+            8 => Status::AuthFailed,
+            9 => Status::RateLimited,
+            10 => Status::TooManyConnections,
             _ => return None,
         })
     }
 
     /// True for the backpressure family: the request was refused to
     /// protect capacity (retry later), as opposed to being wrong.
-    /// Covers both per-model queue rejection and the shared admission
-    /// budget.
+    /// Covers per-model queue rejection, the shared admission budget
+    /// and per-connection rate limits.
     pub fn is_queue_full_class(self) -> bool {
-        matches!(self, Status::QueueFull | Status::AdmissionRejected)
+        matches!(self, Status::QueueFull | Status::AdmissionRejected | Status::RateLimited)
+    }
+
+    /// True when a frame-level refusal with this status is worth
+    /// retrying (possibly after a reconnect): the server was
+    /// protecting capacity or going away, not telling the client it
+    /// is wrong. Terminal statuses ([`Status::Malformed`],
+    /// [`Status::UnknownModel`], [`Status::AuthFailed`]) mean a retry
+    /// of the same bytes can never succeed.
+    pub fn is_retryable(self) -> bool {
+        self.is_queue_full_class()
+            || matches!(self, Status::ShutDown | Status::TooManyConnections)
     }
 
     /// Map a pipeline [`ServeError`] onto its wire status.
@@ -123,6 +173,9 @@ impl std::fmt::Display for Status {
             Status::UnknownModel => "unknown-model",
             Status::AdmissionRejected => "admission-rejected",
             Status::Malformed => "malformed",
+            Status::AuthFailed => "auth-failed",
+            Status::RateLimited => "rate-limited",
+            Status::TooManyConnections => "too-many-connections",
         };
         f.write_str(s)
     }
@@ -132,6 +185,9 @@ impl std::fmt::Display for Status {
 /// row-major into `data` (`data.len() == rows * features`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct InferRequest {
+    /// Idempotency key, echoed verbatim in the reply (0 = unkeyed;
+    /// decoding a v1 payload always yields 0).
+    pub key: u64,
     /// Registry name of the target model.
     pub model: String,
     /// Per-row feature count.
@@ -170,6 +226,8 @@ impl RowReply {
 /// A reply frame: per-row verdicts, in request row order.
 #[derive(Debug, Clone, PartialEq)]
 pub struct InferReply {
+    /// The request's idempotency key, echoed (0 = unkeyed / v1 peer).
+    pub key: u64,
     /// One entry per request row, in order.
     pub rows: Vec<RowReply>,
 }
@@ -183,6 +241,31 @@ pub struct ErrorReply {
     pub message: String,
 }
 
+/// Connection preamble (client → server, v2+): carries the shared
+/// auth token (empty = none) and the client's session id used to
+/// namespace idempotency keys across connections. Must be the first
+/// frame on a connection when the server requires auth.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hello {
+    /// Client session id namespacing this connection's idempotency
+    /// keys (0 = anonymous, disables reply replay).
+    pub client_id: u64,
+    /// Shared secret (empty when the server runs without auth).
+    pub token: String,
+}
+
+/// Drain notice (server → client, v2+): the server stops accepting
+/// new requests, will answer everything already in flight within
+/// `grace_ms`, and then close. Clients should reconnect elsewhere (or
+/// later) instead of treating the close as a failure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GoAway {
+    /// How long the server will keep flushing in-flight replies.
+    pub grace_ms: u32,
+    /// Human-readable drain reason.
+    pub reason: String,
+}
+
 /// Any decoded frame.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
@@ -192,6 +275,10 @@ pub enum Frame {
     Reply(InferReply),
     /// Server → client frame-level typed error.
     Error(ErrorReply),
+    /// Client → server connection preamble (auth + session id).
+    Hello(Hello),
+    /// Server → client graceful-drain notice.
+    GoAway(GoAway),
 }
 
 /// Protocol decode failure. `Truncated` only occurs when decoding a
@@ -201,9 +288,9 @@ pub enum Frame {
 pub enum WireError {
     /// First four payload bytes were not [`MAGIC`].
     BadMagic([u8; 4]),
-    /// Version byte other than [`VERSION`].
+    /// Version byte outside `MIN_VERSION..=VERSION`.
     UnsupportedVersion(u8),
-    /// Unknown frame kind byte.
+    /// Unknown frame kind byte (for the payload's version).
     UnknownKind(u8),
     /// Payload ended before the structure it declared.
     Truncated {
@@ -230,7 +317,7 @@ impl std::fmt::Display for WireError {
         match self {
             WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
             WireError::UnsupportedVersion(v) => {
-                write!(f, "unsupported protocol version {v} (speak v{VERSION})")
+                write!(f, "unsupported protocol version {v} (speak v{MIN_VERSION}..v{VERSION})")
             }
             WireError::UnknownKind(k) => write!(f, "unknown frame kind {k:#04x}"),
             WireError::Truncated { need, have } => {
@@ -258,11 +345,11 @@ fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn begin_payload(out: &mut Vec<u8>, kind: u8) -> usize {
+fn begin_payload(out: &mut Vec<u8>, version: u8, kind: u8) -> usize {
     let at = out.len();
     put_u32(out, 0); // length prefix, patched by finish_payload
     out.extend_from_slice(&MAGIC);
-    out.push(VERSION);
+    out.push(version);
     out.push(kind);
     at
 }
@@ -272,11 +359,26 @@ fn finish_payload(out: &mut Vec<u8>, at: usize) {
     out[at..at + 4].copy_from_slice(&len.to_le_bytes());
 }
 
-/// Append `frame` to `out` as a complete length-prefixed wire frame.
+/// Append `frame` to `out` as a complete length-prefixed wire frame at
+/// the current protocol version ([`VERSION`]).
 pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
+    encode_frame_at(frame, VERSION, out);
+}
+
+/// Append `frame` to `out` encoded at a specific protocol `version`
+/// (used by the server to answer a v1 peer in the layout it speaks).
+/// v1 request/reply layouts drop the idempotency key. [`Frame::Hello`]
+/// and [`Frame::GoAway`] only exist from v2 on; callers must not send
+/// them to v1 peers (debug-asserted; release builds encode them at v2).
+pub fn encode_frame_at(frame: &Frame, version: u8, out: &mut Vec<u8>) {
+    debug_assert!((MIN_VERSION..=VERSION).contains(&version));
+    let keyed = version >= 2;
     match frame {
         Frame::Request(req) => {
-            let at = begin_payload(out, KIND_REQUEST);
+            let at = begin_payload(out, version, KIND_REQUEST);
+            if keyed {
+                put_u64(out, req.key);
+            }
             put_u16(out, req.model.len() as u16);
             out.extend_from_slice(req.model.as_bytes());
             put_u16(out, req.rows() as u16);
@@ -287,7 +389,10 @@ pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
             finish_payload(out, at);
         }
         Frame::Reply(rep) => {
-            let at = begin_payload(out, KIND_REPLY);
+            let at = begin_payload(out, version, KIND_REPLY);
+            if keyed {
+                put_u64(out, rep.key);
+            }
             put_u16(out, rep.rows.len() as u16);
             for row in &rep.rows {
                 out.push(row.status as u8);
@@ -301,12 +406,30 @@ pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
             finish_payload(out, at);
         }
         Frame::Error(err) => {
-            let at = begin_payload(out, KIND_ERROR);
+            let at = begin_payload(out, version, KIND_ERROR);
             out.push(err.status as u8);
             let msg = err.message.as_bytes();
             let take = msg.len().min(u16::MAX as usize);
             put_u16(out, take as u16);
             out.extend_from_slice(&msg[..take]);
+            finish_payload(out, at);
+        }
+        Frame::Hello(h) => {
+            debug_assert!(keyed, "Hello frames require protocol v2+");
+            let at = begin_payload(out, version.max(2), KIND_HELLO);
+            put_u64(out, h.client_id);
+            put_u16(out, h.token.len() as u16);
+            out.extend_from_slice(h.token.as_bytes());
+            finish_payload(out, at);
+        }
+        Frame::GoAway(g) => {
+            debug_assert!(keyed, "GoAway frames require protocol v2+");
+            let at = begin_payload(out, version.max(2), KIND_GOAWAY);
+            put_u32(out, g.grace_ms);
+            let reason = g.reason.as_bytes();
+            let take = reason.len().min(MAX_TOKEN_LEN);
+            put_u16(out, take as u16);
+            out.extend_from_slice(&reason[..take]);
             finish_payload(out, at);
         }
     }
@@ -359,33 +482,42 @@ impl<'a> Cursor<'a> {
         }
         Ok(out)
     }
+
+    fn short_str(&mut self, what: &'static str, cap: usize) -> Result<String, WireError> {
+        let len = self.u16()? as usize;
+        if len > cap {
+            return Err(WireError::Oversized { what, len, cap });
+        }
+        std::str::from_utf8(self.take(len)?)
+            .map_err(|_| WireError::Malformed(format!("{what} is not utf-8")))
+            .map(str::to_string)
+    }
 }
 
 /// Decode one complete frame payload (everything after the length
 /// prefix). Enforces magic, version, kind and all protocol limits.
 pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
+    decode_payload_versioned(payload).map(|(_, f)| f)
+}
+
+/// Like [`decode_payload`], but also returns the payload's protocol
+/// version byte so a server can mirror the peer's version when
+/// replying (a v1 client must receive v1 replies).
+pub fn decode_payload_versioned(payload: &[u8]) -> Result<(u8, Frame), WireError> {
     let mut c = Cursor { buf: payload, pos: 0 };
     let magic = c.take(4)?;
     if magic != MAGIC {
         return Err(WireError::BadMagic([magic[0], magic[1], magic[2], magic[3]]));
     }
     let version = c.u8()?;
-    if version != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&version) {
         return Err(WireError::UnsupportedVersion(version));
     }
-    match c.u8()? {
+    let keyed = version >= 2;
+    let frame = match c.u8()? {
         KIND_REQUEST => {
-            let model_len = c.u16()? as usize;
-            if model_len > MAX_MODEL_NAME {
-                return Err(WireError::Oversized {
-                    what: "model name",
-                    len: model_len,
-                    cap: MAX_MODEL_NAME,
-                });
-            }
-            let model = std::str::from_utf8(c.take(model_len)?)
-                .map_err(|_| WireError::Malformed("model name is not utf-8".into()))?
-                .to_string();
+            let key = if keyed { c.u64()? } else { 0 };
+            let model = c.short_str("model name", MAX_MODEL_NAME)?;
             let rows = c.u16()? as usize;
             if rows > MAX_ROWS_PER_FRAME {
                 return Err(WireError::Oversized {
@@ -410,9 +542,10 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
             }
             let data = c.f32s(rows * features as usize)?;
             expect_end(&c)?;
-            Ok(Frame::Request(InferRequest { model, features, data }))
+            Frame::Request(InferRequest { key, model, features, data })
         }
         KIND_REPLY => {
+            let key = if keyed { c.u64()? } else { 0 };
             let rows = c.u16()? as usize;
             if rows > MAX_ROWS_PER_FRAME {
                 return Err(WireError::Oversized {
@@ -431,17 +564,30 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
                 out.push(RowReply { status, class, version, logits });
             }
             expect_end(&c)?;
-            Ok(Frame::Reply(InferReply { rows: out }))
+            Frame::Reply(InferReply { key, rows: out })
         }
         KIND_ERROR => {
             let status = decode_status(c.u8()?)?;
             let msg_len = c.u16()? as usize;
             let message = String::from_utf8_lossy(c.take(msg_len)?).into_owned();
             expect_end(&c)?;
-            Ok(Frame::Error(ErrorReply { status, message }))
+            Frame::Error(ErrorReply { status, message })
         }
-        k => Err(WireError::UnknownKind(k)),
-    }
+        KIND_HELLO if keyed => {
+            let client_id = c.u64()?;
+            let token = c.short_str("auth token", MAX_TOKEN_LEN)?;
+            expect_end(&c)?;
+            Frame::Hello(Hello { client_id, token })
+        }
+        KIND_GOAWAY if keyed => {
+            let grace_ms = c.u32()?;
+            let reason = c.short_str("goaway reason", MAX_TOKEN_LEN)?;
+            expect_end(&c)?;
+            Frame::GoAway(GoAway { grace_ms, reason })
+        }
+        k => return Err(WireError::UnknownKind(k)),
+    };
+    Ok((version, frame))
 }
 
 fn decode_status(v: u8) -> Result<Status, WireError> {
@@ -463,10 +609,17 @@ fn expect_end(c: &Cursor<'_>) -> Result<(), WireError> {
 /// Incremental deframer over a byte stream: feed arbitrary chunks with
 /// [`Deframer::extend`], pull complete payloads with
 /// [`Deframer::next_payload`]. An oversized length prefix is reported
-/// before any payload allocation.
+/// before any payload allocation. Consumed bytes are tracked with a
+/// read offset and reclaimed in bulk, so a burst of `n` buffered
+/// frames costs O(bytes) total instead of the O(n·bytes) a
+/// drain-per-frame scheme pays, and a length prefix split across
+/// arbitrarily small reads (down to 1 byte) never sheds or duplicates
+/// a boundary byte.
 #[derive(Debug)]
 pub struct Deframer {
     buf: Vec<u8>,
+    /// Start of the unconsumed region in `buf`.
+    pos: usize,
     max_frame: usize,
 }
 
@@ -479,28 +632,48 @@ impl Default for Deframer {
 impl Deframer {
     /// A deframer enforcing `max_frame` as the payload-size cap.
     pub fn new(max_frame: usize) -> Deframer {
-        Deframer { buf: Vec::new(), max_frame }
+        Deframer { buf: Vec::new(), pos: 0, max_frame }
     }
 
     /// Feed raw bytes read off the stream.
     pub fn extend(&mut self, bytes: &[u8]) {
+        self.compact();
         self.buf.extend_from_slice(bytes);
     }
 
     /// Bytes currently buffered (incomplete frame tail).
     pub fn buffered(&self) -> usize {
-        self.buf.len()
+        self.buf.len() - self.pos
+    }
+
+    /// Reclaim consumed prefix space when it dominates the buffer, so
+    /// the buffer never grows without bound across frames while each
+    /// individual frame is still copied out at most once.
+    fn compact(&mut self) {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > 4096 && self.pos * 2 >= self.buf.len() {
+            self.buf.copy_within(self.pos.., 0);
+            self.buf.truncate(self.buf.len() - self.pos);
+            self.pos = 0;
+        }
     }
 
     /// Pop the next complete payload, if one is buffered. `Ok(None)`
     /// means "need more bytes"; `Err` means the stream is poisoned and
     /// the connection must be failed closed.
     pub fn next_payload(&mut self) -> Result<Option<Vec<u8>>, WireError> {
-        if self.buf.len() < 4 {
+        if self.buffered() < 4 {
             return Ok(None);
         }
-        let len =
-            u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        let p = self.pos;
+        let len = u32::from_le_bytes([
+            self.buf[p],
+            self.buf[p + 1],
+            self.buf[p + 2],
+            self.buf[p + 3],
+        ]) as usize;
         if len > self.max_frame {
             return Err(WireError::Oversized {
                 what: "frame payload",
@@ -508,11 +681,12 @@ impl Deframer {
                 cap: self.max_frame,
             });
         }
-        if self.buf.len() < 4 + len {
+        if self.buffered() < 4 + len {
             return Ok(None);
         }
-        let payload = self.buf[4..4 + len].to_vec();
-        self.buf.drain(..4 + len);
+        let payload = self.buf[p + 4..p + 4 + len].to_vec();
+        self.pos += 4 + len;
+        self.compact();
         Ok(Some(payload))
     }
 }
@@ -540,13 +714,13 @@ mod tests {
             (0..name_len).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
         let data: Vec<f32> =
             (0..rows * features as usize).map(|_| rng.f32() * 4.0 - 2.0).collect();
-        Frame::Request(InferRequest { model, features, data })
+        Frame::Request(InferRequest { key: rng.next_u64(), model, features, data })
     }
 
     fn arb_reply(rng: &mut Rng) -> Frame {
         let rows = (0..rng.below(6))
             .map(|_| {
-                let status = Status::from_u8(rng.below(8) as u8).unwrap();
+                let status = Status::from_u8(rng.below(Status::COUNT) as u8).unwrap();
                 if status == Status::Ok {
                     let n = rng.below(12);
                     RowReply {
@@ -560,7 +734,7 @@ mod tests {
                 }
             })
             .collect();
-        Frame::Reply(InferReply { rows })
+        Frame::Reply(InferReply { key: rng.next_u64(), rows })
     }
 
     #[test]
@@ -579,7 +753,7 @@ mod tests {
             let frame = arb_reply(&mut rng);
             assert_eq!(roundtrip(&frame), frame, "case {case}");
             let err = Frame::Error(ErrorReply {
-                status: Status::from_u8(1 + rng.below(7) as u8).unwrap(),
+                status: Status::from_u8(1 + rng.below(Status::COUNT - 1) as u8).unwrap(),
                 message: format!("case {case} detail"),
             });
             assert_eq!(roundtrip(&err), err);
@@ -587,8 +761,109 @@ mod tests {
     }
 
     #[test]
+    fn hello_and_goaway_roundtrip_property() {
+        let mut rng = Rng::new(0x3c53);
+        for case in 0..300 {
+            let token: String =
+                (0..rng.below(40)).map(|_| (b'A' + rng.below(26) as u8) as char).collect();
+            let hello = Frame::Hello(Hello { client_id: rng.next_u64(), token });
+            assert_eq!(roundtrip(&hello), hello, "case {case}");
+            let reason: String =
+                (0..rng.below(40)).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+            let goaway =
+                Frame::GoAway(GoAway { grace_ms: rng.below(60_000) as u32, reason });
+            assert_eq!(roundtrip(&goaway), goaway, "case {case}");
+        }
+    }
+
+    #[test]
+    fn hello_and_goaway_truncation_and_oversize_rejected() {
+        let frame = Frame::Hello(Hello { client_id: 7, token: "secret".into() });
+        let mut wire = Vec::new();
+        encode_frame(&frame, &mut wire);
+        let payload = &wire[4..];
+        for cut in 6..payload.len() {
+            assert!(decode_payload(&payload[..cut]).is_err(), "cut {cut} must not decode");
+        }
+        let mut padded = payload.to_vec();
+        padded.push(0);
+        assert!(matches!(decode_payload(&padded), Err(WireError::Malformed(_))));
+
+        let frame = Frame::GoAway(GoAway { grace_ms: 250, reason: "restart".into() });
+        let mut wire = Vec::new();
+        encode_frame(&frame, &mut wire);
+        let payload = &wire[4..];
+        for cut in 6..payload.len() {
+            assert!(decode_payload(&payload[..cut]).is_err(), "cut {cut} must not decode");
+        }
+
+        // token over MAX_TOKEN_LEN: hand-rolled, since encode caps it
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&MAGIC);
+        payload.push(VERSION);
+        payload.push(KIND_HELLO);
+        payload.extend_from_slice(&7u64.to_le_bytes());
+        payload.extend_from_slice(&((MAX_TOKEN_LEN as u16) + 1).to_le_bytes());
+        payload.extend_from_slice(&[b'x'; MAX_TOKEN_LEN + 1]);
+        assert!(matches!(decode_payload(&payload), Err(WireError::Oversized { .. })));
+    }
+
+    #[test]
+    fn v1_payloads_still_decode_and_v1_replies_are_keyless() {
+        // a v1 peer's request (no key field) decodes with key == 0
+        let req = InferRequest {
+            key: 0xdead_beef,
+            model: "digits".into(),
+            features: 2,
+            data: vec![0.25, 0.5, 0.75, 1.0],
+        };
+        let mut wire = Vec::new();
+        encode_frame_at(&Frame::Request(req.clone()), 1, &mut wire);
+        let (version, frame) = decode_payload_versioned(&wire[4..]).unwrap();
+        assert_eq!(version, 1);
+        match frame {
+            Frame::Request(got) => {
+                assert_eq!(got.key, 0, "v1 layout has no key field");
+                assert_eq!((got.model.as_str(), got.features), ("digits", 2));
+                assert_eq!(got.data, req.data);
+            }
+            other => panic!("expected a request, got {other:?}"),
+        }
+        // a v1-encoded reply round-trips minus the key, and is smaller
+        // than its v2 encoding by exactly the 8 key bytes
+        let rep = InferReply {
+            key: 42,
+            rows: vec![RowReply {
+                status: Status::Ok,
+                class: 3,
+                version: 9,
+                logits: vec![1.5, -0.5],
+            }],
+        };
+        let (mut v1, mut v2) = (Vec::new(), Vec::new());
+        encode_frame_at(&Frame::Reply(rep.clone()), 1, &mut v1);
+        encode_frame_at(&Frame::Reply(rep.clone()), 2, &mut v2);
+        assert_eq!(v2.len(), v1.len() + 8);
+        match decode_payload(&v1[4..]).unwrap() {
+            Frame::Reply(got) => {
+                assert_eq!(got.key, 0);
+                assert_eq!(got.rows, rep.rows);
+            }
+            other => panic!("expected a reply, got {other:?}"),
+        }
+        // Hello/GoAway kinds do not exist in v1: a v1 payload carrying
+        // the kind byte is an unknown kind, not a truncated v2 frame
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&MAGIC);
+        payload.push(1);
+        payload.push(KIND_HELLO);
+        assert!(matches!(decode_payload(&payload), Err(WireError::UnknownKind(k)) if k == KIND_HELLO));
+    }
+
+    #[test]
     fn deframer_handles_byte_at_a_time_delivery() {
         let frame = Frame::Request(InferRequest {
+            key: 1,
             model: "m".into(),
             features: 2,
             data: vec![1.0, 2.0, 3.0, 4.0],
@@ -609,8 +884,50 @@ mod tests {
     }
 
     #[test]
+    fn deframer_incremental_feed_property() {
+        // A long multi-frame stream delivered in adversarial chunk
+        // sizes (biased toward 1–3 bytes, so length prefixes and frame
+        // boundaries are split constantly) must yield exactly the
+        // original frame sequence — nothing lost, duplicated or
+        // reordered — regardless of how reads tear the stream.
+        let mut rng = Rng::new(0x4d54);
+        for case in 0..40 {
+            let frames: Vec<Frame> = (0..1 + rng.below(12))
+                .map(|i| match i % 3 {
+                    0 => arb_request(&mut rng),
+                    1 => arb_reply(&mut rng),
+                    _ => Frame::GoAway(GoAway {
+                        grace_ms: rng.below(10_000) as u32,
+                        reason: "drain".into(),
+                    }),
+                })
+                .collect();
+            let mut wire = Vec::new();
+            for f in &frames {
+                encode_frame(f, &mut wire);
+            }
+            let mut d = Deframer::default();
+            let mut got = Vec::new();
+            let mut off = 0usize;
+            while off < wire.len() {
+                // mostly tiny reads, occasionally a big gulp
+                let chunk = if rng.below(4) == 0 { 1 + rng.below(64) } else { 1 + rng.below(3) };
+                let end = (off + chunk).min(wire.len());
+                d.extend(&wire[off..end]);
+                off = end;
+                while let Some(p) = d.next_payload().unwrap() {
+                    got.push(decode_payload(&p).unwrap());
+                }
+            }
+            assert_eq!(d.buffered(), 0, "case {case}: trailing bytes left buffered");
+            assert_eq!(got, frames, "case {case}");
+        }
+    }
+
+    #[test]
     fn bad_magic_version_and_kind_rejected() {
         let frame = Frame::Request(InferRequest {
+            key: 0,
             model: "m".into(),
             features: 1,
             data: vec![0.5],
@@ -626,6 +943,8 @@ mod tests {
         let mut bad = payload.clone();
         bad[4] = 9;
         assert!(matches!(decode_payload(&bad), Err(WireError::UnsupportedVersion(9))));
+        bad[4] = 0;
+        assert!(matches!(decode_payload(&bad), Err(WireError::UnsupportedVersion(0))));
 
         let mut bad = payload.clone();
         bad[5] = 0x7f;
@@ -635,6 +954,7 @@ mod tests {
     #[test]
     fn truncated_and_trailing_bytes_rejected() {
         let frame = Frame::Request(InferRequest {
+            key: 77,
             model: "digits".into(),
             features: 4,
             data: vec![0.0; 8],
@@ -666,6 +986,7 @@ mod tests {
         payload.extend_from_slice(&MAGIC);
         payload.push(VERSION);
         payload.push(KIND_REQUEST);
+        payload.extend_from_slice(&0u64.to_le_bytes());
         payload.extend_from_slice(&1u16.to_le_bytes());
         payload.push(b'm');
         payload.extend_from_slice(&(MAX_ROWS_PER_FRAME as u16 + 1).to_le_bytes());
@@ -673,7 +994,7 @@ mod tests {
         assert!(matches!(decode_payload(&payload), Err(WireError::Oversized { .. })));
 
         // zero rows is structurally meaningless
-        let req = InferRequest { model: "m".into(), features: 3, data: Vec::new() };
+        let req = InferRequest { key: 0, model: "m".into(), features: 3, data: Vec::new() };
         let mut wire = Vec::new();
         encode_frame(&Frame::Request(req), &mut wire);
         assert!(matches!(decode_payload(&wire[4..]), Err(WireError::Malformed(_))));
@@ -681,13 +1002,28 @@ mod tests {
 
     #[test]
     fn status_wire_codes_are_stable() {
-        for v in 0..8u8 {
+        for v in 0..Status::COUNT as u8 {
             assert_eq!(Status::from_u8(v).unwrap() as u8, v);
         }
-        assert!(Status::from_u8(8).is_none());
+        assert!(Status::from_u8(Status::COUNT as u8).is_none());
         assert!(Status::QueueFull.is_queue_full_class());
         assert!(Status::AdmissionRejected.is_queue_full_class());
+        assert!(Status::RateLimited.is_queue_full_class());
         assert!(!Status::DeadlineExceeded.is_queue_full_class());
+        // retryable-vs-terminal classification for the reconnecting
+        // client: backpressure and drain retry, wrongness never does
+        for s in [
+            Status::QueueFull,
+            Status::AdmissionRejected,
+            Status::RateLimited,
+            Status::ShutDown,
+            Status::TooManyConnections,
+        ] {
+            assert!(s.is_retryable(), "{s} must be retryable");
+        }
+        for s in [Status::Malformed, Status::UnknownModel, Status::AuthFailed] {
+            assert!(!s.is_retryable(), "{s} must be terminal");
+        }
         assert_eq!(Status::from_serve_error(&ServeError::QueueFull), Status::QueueFull);
         assert_eq!(
             Status::from_serve_error(&ServeError::DeadlineExceeded { waited_us: 5 }),

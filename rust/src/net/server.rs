@@ -1,8 +1,9 @@
 //! Thread-per-core socket serving: nonblocking accept + readiness
 //! polling ([`Poller`]) on N reactor threads, each owning its accepted
-//! connections end-to-end. A reactor parses frames, runs admission,
-//! and hands whole request frames to its paired dispatcher thread,
-//! which submits every row into the existing
+//! connections end-to-end. A reactor parses frames, runs the hardening
+//! gates (auth, per-connection rate limits, connection cap) and
+//! admission, and hands whole request frames to its paired dispatcher
+//! thread, which submits every row into the existing
 //! [`FleetClient`](crate::coordinator::registry::FleetClient) path —
 //! so hot swaps, deadlines, load shedding, panic isolation and the
 //! exact accounting invariant all hold unchanged for socket traffic.
@@ -20,31 +21,61 @@
 //! inside a frame kept in submit order). A dispatcher blocking on one
 //! slow frame delays other frames of the *same reactor* only; scale
 //! `--net-threads` to isolate tenants.
+//!
+//! # Request gauntlet
+//!
+//! Each request frame passes, in order: drain refusal (`ShutDown`),
+//! auth (`AuthFailed`, fails the connection closed), per-connection
+//! frame/row token buckets (`RateLimited`, connection stays open),
+//! replay-cache lookup (cached replies for already-answered
+//! idempotency keys are re-sent without re-submitting a single row),
+//! model resolution (`UnknownModel`), then the shared row-budget
+//! [`AdmissionController`] (`AdmissionRejected`). Every rejection is a
+//! typed error frame and a dedicated counter — nothing is silently
+//! dropped.
+//!
+//! # Drain lifecycle
+//!
+//! [`NetServer::begin_drain`] (or [`shutdown`](NetServer::shutdown) /
+//! drop) flips the shared drain flag. Each reactor then deletes its
+//! listener registration (no new connections), sends one
+//! `GoAway{reason, grace_ms}` frame to every live v2 connection,
+//! finishes in-flight rows and answers newly arriving requests with
+//! typed `ShutDown` errors. Connections that have not gone idle after
+//! `grace_ms` are force-closed so a peer that never reads cannot hang
+//! the drain; rows still in flight at that point are completed and
+//! accounted by the dispatcher, only their reply bytes are dropped —
+//! the client retries them under the same idempotency key.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::os::unix::net::UnixStream;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::registry::FleetClient;
 use crate::coordinator::Client;
 
-use super::admission::AdmissionController;
+use super::admission::{AdmissionController, TokenBucket};
 use super::metrics::{ConnIngress, NetMetrics, NetSnapshot};
 use super::poll::Poller;
 use super::proto::{
-    decode_payload, encode_frame, Deframer, ErrorReply, Frame, InferReply, InferRequest,
-    RowReply, Status, MAX_FRAME_BYTES,
+    decode_payload_versioned, encode_frame, encode_frame_at, Deframer, ErrorReply, Frame,
+    GoAway, InferReply, InferRequest, RowReply, Status, MAX_FRAME_BYTES,
 };
 
 const TOKEN_LISTENER: u64 = 0;
 const TOKEN_WAKE: u64 = 1;
 const TOKEN_BASE: u64 = 2;
 const READ_CHUNK: usize = 16 * 1024;
+/// Cross-connection replay-cache capacity: completed keyed replies
+/// retained so a client retrying after a dropped connection gets the
+/// original verdicts back instead of a double submission.
+const REPLAY_CACHE_ENTRIES: usize = 4096;
 
 /// Tuning knobs for [`NetServer::start`].
 #[derive(Debug, Clone)]
@@ -55,13 +86,256 @@ pub struct NetServerOptions {
     pub max_frame_bytes: usize,
     /// Set `TCP_NODELAY` on accepted connections.
     pub nodelay: bool,
+    /// Shared-secret auth token. When set, a connection must present
+    /// it in a `Hello` frame before its first request; a missing or
+    /// wrong token fails the connection closed with `AuthFailed`.
+    pub auth_token: Option<String>,
+    /// Server-wide cap on concurrently open connections (`0` = no
+    /// cap). Connections over the cap are answered with a typed
+    /// `TooManyConnections` error and closed.
+    pub max_conns: usize,
+    /// Per-connection request-frame rate limit in frames/second
+    /// (`0` = off). Burst capacity is one second's worth.
+    pub frame_rate_limit: u64,
+    /// Per-connection row rate limit in rows/second (`0` = off). A
+    /// frame carrying more rows than one second's budget can never be
+    /// admitted on that connection — size the limit above the largest
+    /// legitimate frame.
+    pub row_rate_limit: u64,
+    /// Grace period advertised in `GoAway` and enforced on drain:
+    /// connections still unfinished this long after the drain began
+    /// are force-closed (their in-flight rows complete and are
+    /// accounted; only the reply bytes are dropped).
+    pub drain_grace_ms: u32,
 }
 
 impl Default for NetServerOptions {
     fn default() -> Self {
-        NetServerOptions { threads: 0, max_frame_bytes: MAX_FRAME_BYTES, nodelay: true }
+        NetServerOptions {
+            threads: 0,
+            max_frame_bytes: MAX_FRAME_BYTES,
+            nodelay: true,
+            auth_token: None,
+            max_conns: 0,
+            frame_rate_limit: 0,
+            row_rate_limit: 0,
+            drain_grace_ms: 5_000,
+        }
     }
 }
+
+// ---- drain signal ---------------------------------------------------------
+
+static DRAIN_SIGNAL: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_drain_signal(_sig: i32) {
+    // async-signal-safe: a single atomic store, nothing else
+    DRAIN_SIGNAL.store(true, Ordering::Relaxed);
+}
+
+/// Install a `SIGTERM`/`SIGINT` handler that latches a process-wide
+/// drain flag (readable via [`drain_signal_received`]) instead of
+/// killing the process, so `tablenet serve` can GoAway-drain and exit
+/// with the wire ledger balanced. Idempotent.
+pub fn install_drain_signal_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_drain_signal);
+        signal(SIGINT, on_drain_signal);
+    }
+}
+
+/// Whether a drain signal has been received since
+/// [`install_drain_signal_handler`] was called.
+pub fn drain_signal_received() -> bool {
+    DRAIN_SIGNAL.load(Ordering::Relaxed)
+}
+
+// ---- listener binding -----------------------------------------------------
+
+/// Bind a listener with `SO_REUSEADDR`, so a restarted server can
+/// rebind the port its predecessor's drained connections still hold in
+/// `TIME_WAIT` (the server is the active closer on drain). IPv4 only —
+/// other address families fall back to a plain `std` bind.
+fn bind_reuseaddr(addr: &str) -> std::io::Result<TcpListener> {
+    use std::net::ToSocketAddrs;
+    let sa = addr.to_socket_addrs()?.next().ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::InvalidInput, "address resolved to nothing")
+    })?;
+    match sa {
+        SocketAddr::V4(v4) => bind_reuseaddr_v4(v4).or_else(|_| TcpListener::bind(sa)),
+        SocketAddr::V6(_) => TcpListener::bind(sa),
+    }
+}
+
+fn bind_reuseaddr_v4(sa: std::net::SocketAddrV4) -> std::io::Result<TcpListener> {
+    use std::os::unix::io::FromRawFd;
+
+    // the kernel's struct sockaddr_in, network byte order in place
+    #[repr(C)]
+    struct SockAddrIn {
+        #[cfg(any(target_os = "macos", target_os = "ios"))]
+        sin_len: u8,
+        #[cfg(any(target_os = "macos", target_os = "ios"))]
+        sin_family: u8,
+        #[cfg(not(any(target_os = "macos", target_os = "ios")))]
+        sin_family: u16,
+        sin_port: u16,
+        sin_addr: u32,
+        sin_zero: [u8; 8],
+    }
+    extern "C" {
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn setsockopt(
+            fd: i32,
+            level: i32,
+            name: i32,
+            value: *const std::ffi::c_void,
+            len: u32,
+        ) -> i32;
+        fn bind(fd: i32, addr: *const std::ffi::c_void, len: u32) -> i32;
+        fn listen(fd: i32, backlog: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+    const AF_INET: i32 = 2;
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    const SOCK_STREAM: i32 = 1 | 0o2000000; // | SOCK_CLOEXEC
+    #[cfg(not(any(target_os = "linux", target_os = "android")))]
+    const SOCK_STREAM: i32 = 1;
+    #[cfg(any(target_os = "macos", target_os = "ios"))]
+    const SOL_SOCKET: i32 = 0xffff;
+    #[cfg(not(any(target_os = "macos", target_os = "ios")))]
+    const SOL_SOCKET: i32 = 1;
+    #[cfg(any(target_os = "macos", target_os = "ios"))]
+    const SO_REUSEADDR: i32 = 0x0004;
+    #[cfg(not(any(target_os = "macos", target_os = "ios")))]
+    const SO_REUSEADDR: i32 = 2;
+
+    unsafe {
+        let fd = socket(AF_INET, SOCK_STREAM, 0);
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        let fail = |fd: i32| {
+            let e = std::io::Error::last_os_error();
+            close(fd);
+            Err(e)
+        };
+        let one: i32 = 1;
+        if setsockopt(
+            fd,
+            SOL_SOCKET,
+            SO_REUSEADDR,
+            &one as *const i32 as *const std::ffi::c_void,
+            std::mem::size_of::<i32>() as u32,
+        ) < 0
+        {
+            return fail(fd);
+        }
+        let sin = SockAddrIn {
+            #[cfg(any(target_os = "macos", target_os = "ios"))]
+            sin_len: std::mem::size_of::<SockAddrIn>() as u8,
+            #[cfg(any(target_os = "macos", target_os = "ios"))]
+            sin_family: AF_INET as u8,
+            #[cfg(not(any(target_os = "macos", target_os = "ios")))]
+            sin_family: AF_INET as u16,
+            sin_port: sa.port().to_be(),
+            sin_addr: u32::from_ne_bytes(sa.ip().octets()),
+            sin_zero: [0u8; 8],
+        };
+        if bind(
+            fd,
+            &sin as *const SockAddrIn as *const std::ffi::c_void,
+            std::mem::size_of::<SockAddrIn>() as u32,
+        ) < 0
+        {
+            return fail(fd);
+        }
+        if listen(fd, 1024) < 0 {
+            return fail(fd);
+        }
+        Ok(TcpListener::from_raw_fd(fd))
+    }
+}
+
+// ---- replay cache ---------------------------------------------------------
+
+/// What the replay cache knows about a `(client_id, key)` pair.
+enum ReplayState {
+    /// Already answered: the encoded reply frame and its row count.
+    Done(Vec<u8>, u64),
+    /// Submitted but not yet completed by a dispatcher.
+    Pending,
+    /// Never seen.
+    New,
+}
+
+/// Bounded cross-connection cache of completed keyed replies, shared
+/// by every reactor and dispatcher so a retry after reconnect lands on
+/// the cached verdicts regardless of which reactor owns the new
+/// connection.
+struct ReplayCache {
+    cap: usize,
+    done: HashMap<(u64, u64), (Vec<u8>, u64)>,
+    order: VecDeque<(u64, u64)>,
+    pending: HashSet<(u64, u64)>,
+}
+
+impl ReplayCache {
+    fn new(cap: usize) -> ReplayCache {
+        ReplayCache {
+            cap,
+            done: HashMap::new(),
+            order: VecDeque::new(),
+            pending: HashSet::new(),
+        }
+    }
+
+    fn state(&self, id: (u64, u64)) -> ReplayState {
+        if let Some((bytes, rows)) = self.done.get(&id) {
+            return ReplayState::Done(bytes.clone(), *rows);
+        }
+        if self.pending.contains(&id) {
+            return ReplayState::Pending;
+        }
+        ReplayState::New
+    }
+
+    fn begin(&mut self, id: (u64, u64)) {
+        self.pending.insert(id);
+    }
+
+    fn abort(&mut self, id: (u64, u64)) {
+        self.pending.remove(&id);
+    }
+
+    fn complete(&mut self, id: (u64, u64), bytes: Vec<u8>, rows: u64) {
+        self.pending.remove(&id);
+        if self.done.insert(id, (bytes, rows)).is_none() {
+            self.order.push_back(id);
+        }
+        while self.done.len() > self.cap {
+            match self.order.pop_front() {
+                Some(old) => {
+                    self.done.remove(&old);
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+type SharedReplay = Arc<Mutex<ReplayCache>>;
+
+fn lock_replay(replay: &SharedReplay) -> std::sync::MutexGuard<'_, ReplayCache> {
+    replay.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---- plumbing -------------------------------------------------------------
 
 /// Wakes a reactor out of `Poller::wait` (self-pipe).
 struct Waker {
@@ -78,10 +352,14 @@ impl Waker {
 /// One frame handed from a reactor to its dispatcher.
 struct Dispatch {
     token: u64,
+    key: u64,
+    client_id: u64,
+    peer_version: u8,
     model: String,
     features: usize,
     data: Vec<f32>,
     client: Client,
+    t0: Instant,
 }
 
 /// One encoded reply travelling back from a dispatcher to its reactor.
@@ -98,25 +376,31 @@ struct ReactorHandle {
 /// A running socket serving tier. Dropping it (or calling
 /// [`shutdown`](NetServer::shutdown)) drains in-flight requests,
 /// answers anything newly arrived with a typed `ShuttingDown` error,
-/// flushes and joins every thread.
+/// flushes and joins every thread; [`begin_drain`](NetServer::begin_drain)
+/// starts the same drain without blocking, broadcasting `GoAway` with
+/// a caller-chosen reason first.
 pub struct NetServer {
     local_addr: SocketAddr,
     threads: usize,
     shutdown: Arc<AtomicBool>,
+    drain_reason: Arc<Mutex<String>>,
+    live_conns: Arc<AtomicUsize>,
     reactors: Vec<ReactorHandle>,
     metrics: Arc<NetMetrics>,
     admission: Arc<AdmissionController>,
 }
 
 impl NetServer {
-    /// Bind `addr` and start serving `fleet` behind `admission`.
+    /// Bind `addr` (with `SO_REUSEADDR`, so restarts can rebind
+    /// through `TIME_WAIT`) and start serving `fleet` behind
+    /// `admission`.
     pub fn start(
         addr: &str,
         fleet: FleetClient,
         admission: Arc<AdmissionController>,
         opts: NetServerOptions,
     ) -> std::io::Result<NetServer> {
-        let listener = TcpListener::bind(addr)?;
+        let listener = bind_reuseaddr(addr)?;
         listener.set_nonblocking(true)?;
         let local_addr = listener.local_addr()?;
         // fail at start, not inside a thread, where no poll backend exists
@@ -131,6 +415,9 @@ impl NetServer {
 
         let metrics = NetMetrics::new();
         let shutdown = Arc::new(AtomicBool::new(false));
+        let drain_reason = Arc::new(Mutex::new(String::from("server shutting down")));
+        let live_conns = Arc::new(AtomicUsize::new(0));
+        let replay: SharedReplay = Arc::new(Mutex::new(ReplayCache::new(REPLAY_CACHE_ENTRIES)));
         let mut reactors = Vec::with_capacity(threads);
         for i in 0..threads {
             let (wake_tx, wake_rx) = UnixStream::pair()?;
@@ -145,10 +432,11 @@ impl NetServer {
                 let metrics = metrics.clone();
                 let completions = completions.clone();
                 let waker = waker.clone();
+                let replay = replay.clone();
                 std::thread::Builder::new()
                     .name(format!("net-dispatch-{i}"))
                     .spawn(move || {
-                        dispatcher_loop(dispatch_rx, admission, metrics, completions, waker)
+                        dispatcher_loop(dispatch_rx, admission, metrics, completions, waker, replay)
                     })?
             };
 
@@ -159,6 +447,9 @@ impl NetServer {
                 dispatcher: Some(dispatcher),
                 completions,
                 shutdown: shutdown.clone(),
+                drain_reason: drain_reason.clone(),
+                live_conns: live_conns.clone(),
+                replay: replay.clone(),
                 metrics: metrics.clone(),
                 admission: admission.clone(),
                 fleet: fleet.clone(),
@@ -170,7 +461,16 @@ impl NetServer {
             reactors.push(ReactorHandle { waker, join });
         }
 
-        Ok(NetServer { local_addr, threads, shutdown, reactors, metrics, admission })
+        Ok(NetServer {
+            local_addr,
+            threads,
+            shutdown,
+            drain_reason,
+            live_conns,
+            reactors,
+            metrics,
+            admission,
+        })
     }
 
     /// The bound address (resolves `:0` to the chosen port).
@@ -193,9 +493,32 @@ impl NetServer {
         self.metrics.rows_done()
     }
 
+    /// Connections currently open.
+    pub fn active_connections(&self) -> usize {
+        self.live_conns.load(Ordering::SeqCst)
+    }
+
     /// Point-in-time ingress snapshot without stopping the server.
     pub fn snapshot(&self) -> NetSnapshot {
         self.metrics.snapshot(self.admission.snapshot())
+    }
+
+    /// Start a graceful drain without blocking: stop accepting, send
+    /// `GoAway{reason, grace_ms}` on every v2 connection, finish
+    /// in-flight rows, answer new requests with `ShutDown`. Call
+    /// [`shutdown`](NetServer::shutdown) afterwards to join the
+    /// threads and collect the final snapshot.
+    pub fn begin_drain(&self, reason: &str) {
+        *self.drain_reason.lock().unwrap_or_else(|e| e.into_inner()) = reason.to_string();
+        self.shutdown.store(true, Ordering::SeqCst);
+        for r in &self.reactors {
+            r.waker.wake();
+        }
+    }
+
+    /// Whether a drain has started.
+    pub fn draining(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
     }
 
     fn stop(&mut self) {
@@ -229,6 +552,7 @@ fn dispatcher_loop(
     metrics: Arc<NetMetrics>,
     completions: Arc<Mutex<Vec<Completion>>>,
     waker: Arc<Waker>,
+    replay: SharedReplay,
 ) {
     while let Ok(d) = rx.recv() {
         let rows = d.data.len() / d.features.max(1);
@@ -254,13 +578,29 @@ fn dispatcher_loop(
                 Err(e) => RowReply::error(Status::from_serve_error(&e)),
             };
             metrics.record_row_verdict(&d.model, row.status);
+            if row.status == Status::Ok {
+                // swap-aware: latency attributed to the artifact
+                // version that actually served the row
+                metrics.record_version_latency(
+                    &d.model,
+                    row.version,
+                    d.t0.elapsed().as_micros() as f64,
+                );
+            }
             out_rows.push(row);
         }
         admission.release(&d.model, rows as u64);
 
         let mut bytes = Vec::new();
-        encode_frame(&Frame::Reply(InferReply { rows: out_rows }), &mut bytes);
+        encode_frame_at(
+            &Frame::Reply(InferReply { key: d.key, rows: out_rows }),
+            d.peer_version,
+            &mut bytes,
+        );
         metrics.record_frame_out();
+        if d.key != 0 && d.client_id != 0 {
+            lock_replay(&replay).complete((d.client_id, d.key), bytes.clone(), rows as u64);
+        }
         completions.lock().unwrap_or_else(|e| e.into_inner()).push(Completion {
             token: d.token,
             bytes,
@@ -283,6 +623,16 @@ struct Conn {
     closing: bool,
     peer_eof: bool,
     dead: bool,
+    /// Highest protocol version seen on this connection; replies are
+    /// encoded at this version so v1 peers keep decoding.
+    peer_version: u8,
+    /// Client-chosen id from `Hello` (0 = none): the replay-cache
+    /// namespace for this connection's idempotency keys.
+    client_id: u64,
+    /// Passed the auth gate (always true when no token is required).
+    authed: bool,
+    frame_bucket: Option<TokenBucket>,
+    row_bucket: Option<TokenBucket>,
     stats: ConnIngress,
 }
 
@@ -312,6 +662,9 @@ struct Reactor {
     dispatcher: Option<std::thread::JoinHandle<()>>,
     completions: Arc<Mutex<Vec<Completion>>>,
     shutdown: Arc<AtomicBool>,
+    drain_reason: Arc<Mutex<String>>,
+    live_conns: Arc<AtomicUsize>,
+    replay: SharedReplay,
     metrics: Arc<NetMetrics>,
     admission: Arc<AdmissionController>,
     fleet: FleetClient,
@@ -335,12 +688,27 @@ impl Reactor {
         let mut next_token = TOKEN_BASE;
         let mut events = Vec::with_capacity(128);
         let mut listener_armed = true;
+        let mut drain_started: Option<Instant> = None;
 
         loop {
             let draining = self.shutdown.load(Ordering::SeqCst);
             if draining && listener_armed {
                 let _ = poller.delete(self.listener.as_raw_fd());
                 listener_armed = false;
+            }
+            if draining && drain_started.is_none() {
+                self.broadcast_goaway(&poller, &mut conns);
+                drain_started = Some(Instant::now());
+            }
+            if let Some(t0) = drain_started {
+                if t0.elapsed() >= Duration::from_millis(u64::from(self.opts.drain_grace_ms)) {
+                    // grace expired: a peer that never reads (or never
+                    // closes) must not hang the drain; in-flight rows
+                    // still complete and are accounted downstream
+                    for conn in conns.values_mut() {
+                        conn.dead = true;
+                    }
+                }
             }
             if draining && conns.is_empty() {
                 break;
@@ -385,6 +753,7 @@ impl Reactor {
             for token in done {
                 if let Some(conn) = conns.remove(&token) {
                     let _ = poller.delete(conn.stream.as_raw_fd());
+                    self.live_conns.fetch_sub(1, Ordering::SeqCst);
                     self.metrics.record_close(conn.stats);
                 }
             }
@@ -392,12 +761,39 @@ impl Reactor {
 
         for (_, conn) in conns {
             let _ = poller.delete(conn.stream.as_raw_fd());
+            self.live_conns.fetch_sub(1, Ordering::SeqCst);
             self.metrics.record_close(conn.stats);
         }
         // closing the dispatch channel ends the dispatcher
         drop(self.dispatch_tx.take());
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
+        }
+    }
+
+    /// One `GoAway{reason, grace_ms}` per live v2 connection, sent the
+    /// moment this reactor observes the drain flag. v1 peers have no
+    /// GoAway in their grammar — they see `ShutDown` errors on their
+    /// next request instead.
+    fn broadcast_goaway(&self, poller: &Poller, conns: &mut BTreeMap<u64, Conn>) {
+        let reason =
+            self.drain_reason.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        for conn in conns.values_mut() {
+            if conn.dead || conn.closing || conn.peer_version < 2 {
+                continue;
+            }
+            encode_frame(
+                &Frame::GoAway(GoAway {
+                    grace_ms: self.opts.drain_grace_ms,
+                    reason: reason.clone(),
+                }),
+                &mut conn.out,
+            );
+            self.metrics.record_frame_out();
+            self.metrics.record_goaway();
+            conn.stats.frames_out += 1;
+            Self::flush(&self.metrics, conn);
+            Self::update_interest(poller, conn);
         }
     }
 
@@ -424,6 +820,7 @@ impl Reactor {
             if let Some(conn) = conns.get_mut(&c.token) {
                 conn.in_flight -= 1;
                 conn.out.extend_from_slice(&c.bytes);
+                conn.stats.frames_out += 1;
                 Self::flush(&self.metrics, conn);
                 Self::update_interest(poller, conn);
             }
@@ -451,27 +848,45 @@ impl Reactor {
                         continue;
                     }
                     self.metrics.record_accept();
-                    conns.insert(
+                    let prev = self.live_conns.fetch_add(1, Ordering::SeqCst);
+                    let over_cap = self.opts.max_conns > 0 && prev >= self.opts.max_conns;
+                    let mk_bucket = |rate: u64| {
+                        (rate > 0).then(|| TokenBucket::new(rate.max(1), rate as f64))
+                    };
+                    let mut conn = Conn {
+                        stream,
                         token,
-                        Conn {
-                            stream,
-                            token,
-                            deframer: Deframer::new(self.opts.max_frame_bytes),
-                            out: Vec::new(),
-                            out_pos: 0,
-                            want_write: false,
-                            want_read: true,
-                            in_flight: 0,
-                            closing: false,
-                            peer_eof: false,
-                            dead: false,
-                            stats: ConnIngress {
-                                id: token,
-                                peer: peer.to_string(),
-                                ..ConnIngress::default()
-                            },
+                        deframer: Deframer::new(self.opts.max_frame_bytes),
+                        out: Vec::new(),
+                        out_pos: 0,
+                        want_write: false,
+                        want_read: true,
+                        in_flight: 0,
+                        closing: false,
+                        peer_eof: false,
+                        dead: false,
+                        peer_version: 1,
+                        client_id: 0,
+                        authed: self.opts.auth_token.is_none(),
+                        frame_bucket: mk_bucket(self.opts.frame_rate_limit),
+                        row_bucket: mk_bucket(self.opts.row_rate_limit),
+                        stats: ConnIngress {
+                            id: token,
+                            peer: peer.to_string(),
+                            ..ConnIngress::default()
                         },
-                    );
+                    };
+                    if over_cap {
+                        self.metrics.record_conn_refused();
+                        Self::queue_error(
+                            &self.metrics,
+                            &mut conn,
+                            Status::TooManyConnections,
+                            "connection cap reached; retry against another replica",
+                        );
+                        conn.closing = true;
+                    }
+                    conns.insert(token, conn);
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                 Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
@@ -520,16 +935,48 @@ impl Reactor {
                     break;
                 }
             };
-            match decode_payload(&payload) {
-                Ok(Frame::Request(req)) => self.handle_request(conn, req, draining),
-                Ok(_) => {
-                    self.protocol_error(conn, "only request frames flow client -> server");
+            match decode_payload_versioned(&payload) {
+                Ok((version, frame)) => {
+                    conn.peer_version = conn.peer_version.max(version);
+                    match frame {
+                        Frame::Request(req) => self.handle_request(conn, req, draining),
+                        Frame::Hello(h) => self.handle_hello(conn, h),
+                        _ => {
+                            self.protocol_error(
+                                conn,
+                                "only request and hello frames flow client -> server",
+                            );
+                        }
+                    }
                 }
                 Err(e) => self.protocol_error(conn, &e.to_string()),
             }
             if conn.closing {
                 break;
             }
+        }
+    }
+
+    /// The auth gate: a `Hello` carries the client's id (replay-cache
+    /// namespace) and, when the server demands one, the shared-secret
+    /// token. A wrong token fails the connection closed; without a
+    /// configured token every `Hello` is accepted silently.
+    fn handle_hello(&self, conn: &mut Conn, hello: super::proto::Hello) {
+        self.metrics.record_frame_in();
+        conn.stats.frames_in += 1;
+        conn.client_id = hello.client_id;
+        match &self.opts.auth_token {
+            Some(expected) if hello.token != *expected => {
+                self.metrics.record_auth_failure();
+                Self::queue_error(
+                    &self.metrics,
+                    conn,
+                    Status::AuthFailed,
+                    "auth token rejected",
+                );
+                conn.closing = true;
+            }
+            _ => conn.authed = true,
         }
     }
 
@@ -543,6 +990,65 @@ impl Reactor {
             self.metrics.record_drain_refused(rows);
             Self::queue_error(&self.metrics, conn, Status::ShutDown, "server is draining");
             return;
+        }
+        if !conn.authed {
+            self.metrics.record_auth_failure();
+            Self::queue_error(
+                &self.metrics,
+                conn,
+                Status::AuthFailed,
+                "auth required: send a hello frame with the shared token first",
+            );
+            conn.closing = true;
+            return;
+        }
+        let mut limited = false;
+        if let Some(b) = conn.frame_bucket.as_mut() {
+            limited |= !b.take_now(1);
+        }
+        if !limited {
+            if let Some(b) = conn.row_bucket.as_mut() {
+                limited |= !b.take_now(rows);
+            }
+        }
+        if limited {
+            self.metrics.record_rate_limited(&req.model, rows);
+            Self::queue_error(
+                &self.metrics,
+                conn,
+                Status::RateLimited,
+                "per-connection rate limit exceeded; retry later",
+            );
+            return;
+        }
+        let keyed = req.key != 0 && conn.client_id != 0;
+        if keyed {
+            let id = (conn.client_id, req.key);
+            match lock_replay(&self.replay).state(id) {
+                ReplayState::Done(bytes, cached_rows) => {
+                    // the original verdicts, replayed byte-for-byte:
+                    // nothing is re-submitted, nothing double-counts
+                    self.metrics.record_replay(cached_rows);
+                    self.metrics.record_frame_out();
+                    conn.out.extend_from_slice(&bytes);
+                    conn.stats.frames_out += 1;
+                    Self::flush(&self.metrics, conn);
+                    return;
+                }
+                ReplayState::Pending => {
+                    // the first submission of this key is still in
+                    // flight; admitting a second would double-submit
+                    self.metrics.record_admission_rejected(&req.model, rows);
+                    Self::queue_error(
+                        &self.metrics,
+                        conn,
+                        Status::AdmissionRejected,
+                        "idempotency key still in flight; retry shortly",
+                    );
+                    return;
+                }
+                ReplayState::New => {}
+            }
         }
         let client = match self.fleet.client(&req.model) {
             Ok(c) => c,
@@ -568,13 +1074,20 @@ impl Reactor {
             return;
         }
         self.metrics.record_admitted(&req.model, rows);
+        if keyed {
+            lock_replay(&self.replay).begin((conn.client_id, req.key));
+        }
         conn.in_flight += 1;
         let dispatch = Dispatch {
             token: conn.token,
+            key: req.key,
+            client_id: conn.client_id,
+            peer_version: conn.peer_version,
             model: req.model,
             features: req.features as usize,
             data: req.data,
             client,
+            t0: Instant::now(),
         };
         let lost = match &self.dispatch_tx {
             Some(tx) => match tx.send(dispatch) {
@@ -587,14 +1100,22 @@ impl Reactor {
         // answer every admitted row with a ShutDown verdict so the
         // wire accounting still balances exactly
         conn.in_flight -= 1;
+        if lost.key != 0 && lost.client_id != 0 {
+            lock_replay(&self.replay).abort((lost.client_id, lost.key));
+        }
         self.admission.release(&lost.model, rows);
         let mut out_rows = Vec::with_capacity(rows as usize);
         for _ in 0..rows {
             self.metrics.record_row_verdict(&lost.model, Status::ShutDown);
             out_rows.push(RowReply::error(Status::ShutDown));
         }
-        encode_frame(&Frame::Reply(InferReply { rows: out_rows }), &mut conn.out);
+        encode_frame_at(
+            &Frame::Reply(InferReply { key: lost.key, rows: out_rows }),
+            conn.peer_version,
+            &mut conn.out,
+        );
         self.metrics.record_frame_out();
+        conn.stats.frames_out += 1;
         Self::flush(&self.metrics, conn);
     }
 
@@ -607,8 +1128,10 @@ impl Reactor {
 
     fn queue_error(metrics: &NetMetrics, conn: &mut Conn, status: Status, message: &str) {
         let frame = Frame::Error(ErrorReply { status, message: message.to_string() });
-        encode_frame(&frame, &mut conn.out);
+        // mirror the peer's version so v1 clients keep decoding
+        encode_frame_at(&frame, conn.peer_version, &mut conn.out);
         metrics.record_frame_out();
+        conn.stats.frames_out += 1;
         Self::flush(metrics, conn);
     }
 

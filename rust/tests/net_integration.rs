@@ -118,6 +118,7 @@ fn read_raw(stream: &mut TcpStream) -> Option<Frame> {
 /// into truncated variants.
 fn request_payload(model: &str, rows: usize) -> Vec<u8> {
     let req = tablenet::net::InferRequest {
+        key: 0,
         model: model.to_string(),
         features: FEATURES,
         data: vec![0.5; rows * FEATURES as usize],
@@ -175,7 +176,10 @@ fn malformed_frames_get_typed_errors_and_fail_closed() {
     // a reply frame in the client->server direction is also a violation
     let mut s = connect();
     let mut framed = Vec::new();
-    encode_frame(&Frame::Reply(tablenet::net::InferReply { rows: Vec::new() }), &mut framed);
+    encode_frame(
+        &Frame::Reply(tablenet::net::InferReply { key: 0, rows: Vec::new() }),
+        &mut framed,
+    );
     s.write_all(&framed).unwrap();
     expect_error(read_raw(&mut s), Status::Malformed);
     assert!(read_raw(&mut s).is_none());

@@ -1,0 +1,483 @@
+//! Resilience tests for the wire edge: graceful drain, idempotency-key
+//! replay, auth + per-connection limits, and the kill-and-restart soak.
+//!
+//! The headline test restarts the server **on the same port, mid-load,
+//! with faults injected and a quarantined swap in flight**, while
+//! [`ReconnectingClient`]s ride through on their retry budgets. The
+//! exactly-once contract under test:
+//!
+//! * zero lost rows — every row a client sent gets exactly one verdict;
+//! * zero duplicate acknowledgements — a reply lost to a drop is
+//!   re-fetched under the same idempotency key, never re-acked;
+//! * the wire ledger balances on both server incarnations;
+//! * per-(model, version) latency sub-histograms stay distinct across
+//!   the mid-run swap.
+#![cfg(unix)]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tablenet::config::ServeConfig;
+use tablenet::coordinator::faults::{silence_injected_panics, FaultInjector, FaultPlan};
+use tablenet::coordinator::registry::ModelRegistry;
+use tablenet::coordinator::{Backend, InferOutput};
+use tablenet::engine::counters::Counters;
+use tablenet::net::{
+    AdmissionController, Frame, NetClient, NetServer, NetServerOptions, ReconnectingClient,
+    RetryPolicy, Status,
+};
+
+const FEATURES: u32 = 4;
+
+/// Instant echo backend: class = row[0] as usize.
+struct Echo;
+
+impl Backend for Echo {
+    fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+        images
+            .iter()
+            .map(|img| InferOutput {
+                class: img[0] as usize,
+                logits: vec![img[0], -img[0]],
+                counters: Counters { lut_evals: 1, ..Default::default() },
+            })
+            .collect()
+    }
+
+    fn input_features(&self) -> Option<usize> {
+        Some(FEATURES as usize)
+    }
+
+    fn name(&self) -> &'static str {
+        "echo"
+    }
+}
+
+fn serve_one(opts: NetServerOptions) -> (ModelRegistry, Arc<AdmissionController>, NetServer) {
+    let reg = ModelRegistry::new();
+    reg.register("m", Arc::new(Echo), &ServeConfig::default()).unwrap();
+    let admission = Arc::new(AdmissionController::new(0));
+    let server = NetServer::start("127.0.0.1:0", reg.client(), admission.clone(), opts).unwrap();
+    (reg, admission, server)
+}
+
+#[test]
+fn idempotency_keys_echo_and_replay_from_cache() {
+    let (reg, _admission, server) =
+        serve_one(NetServerOptions { threads: 1, ..NetServerOptions::default() });
+    let addr = server.local_addr().to_string();
+
+    let mut cl = NetClient::connect(&addr).unwrap();
+    cl.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    cl.hello(9, "").unwrap();
+    let data = vec![2.0f32; 3 * FEATURES as usize];
+    cl.send_keyed(5, "m", FEATURES, &data).unwrap();
+    let first = match cl.read_frame().unwrap() {
+        Frame::Reply(r) => r,
+        other => panic!("expected a reply, got {other:?}"),
+    };
+    assert_eq!(first.key, 5, "the idempotency key must echo in the reply");
+    assert_eq!(first.rows.len(), 3);
+    assert!(first.rows.iter().all(|r| r.status == Status::Ok), "{first:?}");
+
+    // the same (client_id, key) again: answered from the replay cache,
+    // byte-for-byte, without re-submitting a single row
+    cl.send_keyed(5, "m", FEATURES, &data).unwrap();
+    let replayed = match cl.read_frame().unwrap() {
+        Frame::Reply(r) => r,
+        other => panic!("expected the replayed reply, got {other:?}"),
+    };
+    assert_eq!(replayed, first, "replay must return the original verdicts");
+
+    // an UNKEYED repeat is a fresh submission (key 0 is never cached)
+    cl.send("m", FEATURES, &data).unwrap();
+    match cl.read_frame().unwrap() {
+        Frame::Reply(r) => assert_eq!(r.key, 0),
+        other => panic!("expected a reply, got {other:?}"),
+    }
+
+    let snap = server.shutdown();
+    snap.assert_accounted();
+    assert_eq!((snap.frames_replayed, snap.rows_replayed), (1, 3), "{snap:?}");
+    assert_eq!(snap.models["m"].rows_admitted, 6, "replays never re-submit");
+    assert_eq!(snap.rows_done, 6, "replayed rows must not double-count the ledger");
+    reg.shutdown();
+}
+
+#[test]
+fn auth_gate_admits_the_token_and_fails_everything_else_closed() {
+    let (reg, _admission, server) = serve_one(NetServerOptions {
+        threads: 1,
+        auth_token: Some("sesame".to_string()),
+        ..NetServerOptions::default()
+    });
+    let addr = server.local_addr().to_string();
+    let data = vec![1.0f32; FEATURES as usize];
+
+    // no hello at all: the first request is refused and the connection
+    // fails closed
+    let mut cl = NetClient::connect(&addr).unwrap();
+    cl.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    cl.send("m", FEATURES, &data).unwrap();
+    match cl.read_frame().unwrap() {
+        Frame::Error(e) => assert_eq!(e.status, Status::AuthFailed, "{e:?}"),
+        other => panic!("expected AuthFailed, got {other:?}"),
+    }
+    assert!(cl.read_frame().is_err(), "an unauthed connection must close");
+
+    // wrong token: same typed refusal
+    let mut cl = NetClient::connect(&addr).unwrap();
+    cl.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    cl.hello(1, "open says me").unwrap();
+    match cl.read_frame().unwrap() {
+        Frame::Error(e) => assert_eq!(e.status, Status::AuthFailed, "{e:?}"),
+        other => panic!("expected AuthFailed, got {other:?}"),
+    }
+
+    // the right token serves
+    let mut cl = NetClient::connect(&addr).unwrap();
+    cl.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    cl.hello(1, "sesame").unwrap();
+    match cl.infer("m", FEATURES, &data).unwrap() {
+        Frame::Reply(r) => assert_eq!(r.rows[0].status, Status::Ok, "{r:?}"),
+        other => panic!("expected a reply, got {other:?}"),
+    }
+
+    let snap = server.shutdown();
+    snap.assert_accounted();
+    assert_eq!(snap.auth_failures, 2, "{snap:?}");
+    assert_eq!(snap.rows_ok(), 1);
+    reg.shutdown();
+}
+
+#[test]
+fn per_connection_rate_limit_rejects_typed_and_keeps_the_connection() {
+    let (reg, _admission, server) = serve_one(NetServerOptions {
+        threads: 1,
+        frame_rate_limit: 2,
+        ..NetServerOptions::default()
+    });
+    let addr = server.local_addr().to_string();
+
+    let mut cl = NetClient::connect(&addr).unwrap();
+    cl.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let data = vec![1.0f32; 2 * FEATURES as usize];
+    const FRAMES: usize = 6;
+    for _ in 0..FRAMES {
+        cl.send("m", FEATURES, &data).unwrap();
+    }
+    let (mut ok_frames, mut limited_frames) = (0u64, 0u64);
+    for _ in 0..FRAMES {
+        match cl.read_frame().unwrap() {
+            Frame::Reply(r) => {
+                assert!(r.rows.iter().all(|row| row.status == Status::Ok), "{r:?}");
+                ok_frames += 1;
+            }
+            Frame::Error(e) => {
+                assert_eq!(e.status, Status::RateLimited, "{e:?}");
+                assert!(e.status.is_retryable(), "rate limits must be retryable");
+                limited_frames += 1;
+            }
+            other => panic!("unexpected frame: {other:?}"),
+        }
+    }
+    // burst capacity is one second's worth (2 frames); everything past
+    // it inside the same instant is limited. A slow machine may refill
+    // a token mid-test, so bound rather than pin the split.
+    assert!(ok_frames >= 2, "burst capacity must admit 2 frames, got {ok_frames}");
+    assert!(limited_frames >= 1, "the limiter never fired over {FRAMES} instant frames");
+    assert_eq!(ok_frames + limited_frames, FRAMES as u64);
+    // the connection survived every rejection
+    match cl.infer("ghost", FEATURES, &data) {
+        Ok(Frame::Error(e)) => {
+            assert!(matches!(e.status, Status::UnknownModel | Status::RateLimited), "{e:?}");
+        }
+        other => panic!("connection must stay open after RateLimited, got {other:?}"),
+    }
+
+    let snap = server.shutdown();
+    snap.assert_accounted();
+    assert_eq!(snap.models["m"].rows_rate_limited, limited_frames * 2, "{snap:?}");
+    assert_eq!(snap.models["m"].rows_ok, ok_frames * 2);
+    reg.shutdown();
+}
+
+#[test]
+fn connection_cap_refuses_typed_and_recovers_when_slots_free() {
+    let (reg, _admission, server) =
+        serve_one(NetServerOptions { threads: 1, max_conns: 1, ..NetServerOptions::default() });
+    let addr = server.local_addr().to_string();
+    let data = vec![1.0f32; FEATURES as usize];
+
+    let mut first = NetClient::connect(&addr).unwrap();
+    first.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    match first.infer("m", FEATURES, &data).unwrap() {
+        Frame::Reply(r) => assert_eq!(r.rows[0].status, Status::Ok, "{r:?}"),
+        other => panic!("expected a reply, got {other:?}"),
+    }
+
+    // a second connection is over the cap: typed refusal, then closed,
+    // without the client sending a byte
+    let mut second = NetClient::connect(&addr).unwrap();
+    second.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    match second.read_frame().unwrap() {
+        Frame::Error(e) => {
+            assert_eq!(e.status, Status::TooManyConnections, "{e:?}");
+            assert!(e.status.is_retryable(), "cap refusals must be retryable");
+        }
+        other => panic!("expected TooManyConnections, got {other:?}"),
+    }
+    assert!(second.read_frame().is_err(), "an over-cap connection must close");
+
+    // freeing the slot admits a new connection
+    drop(first);
+    let t0 = Instant::now();
+    while server.active_connections() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "slot never freed");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let mut third = NetClient::connect(&addr).unwrap();
+    third.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    match third.infer("m", FEATURES, &data).unwrap() {
+        Frame::Reply(r) => assert_eq!(r.rows[0].status, Status::Ok, "{r:?}"),
+        other => panic!("expected a reply, got {other:?}"),
+    }
+
+    let snap = server.shutdown();
+    snap.assert_accounted();
+    assert_eq!(snap.connections_refused, 1, "{snap:?}");
+    reg.shutdown();
+}
+
+#[test]
+fn drain_sends_goaway_finishes_inflight_and_refuses_new_typed() {
+    let (reg, _admission, server) = serve_one(NetServerOptions {
+        threads: 1,
+        drain_grace_ms: 5_000,
+        ..NetServerOptions::default()
+    });
+    let addr = server.local_addr().to_string();
+    let data = vec![1.0f32; FEATURES as usize];
+
+    let mut cl = NetClient::connect(&addr).unwrap();
+    cl.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // the hello upgrades this connection to protocol v2, so it is owed
+    // a GoAway when the drain starts
+    cl.hello(3, "").unwrap();
+    match cl.infer("m", FEATURES, &data).unwrap() {
+        Frame::Reply(r) => assert_eq!(r.rows[0].status, Status::Ok, "{r:?}"),
+        other => panic!("expected a reply, got {other:?}"),
+    }
+
+    server.begin_drain("maintenance window");
+    assert!(server.draining());
+    match cl.read_frame().unwrap() {
+        Frame::GoAway(ga) => {
+            assert_eq!(ga.reason, "maintenance window");
+            assert_eq!(ga.grace_ms, 5_000);
+        }
+        other => panic!("expected GoAway, got {other:?}"),
+    }
+    // requests after the drain notice get a typed retryable refusal
+    match cl.infer("m", FEATURES, &data).unwrap() {
+        Frame::Error(e) => {
+            assert_eq!(e.status, Status::ShutDown, "{e:?}");
+            assert!(e.status.is_retryable());
+        }
+        other => panic!("expected ShutDown, got {other:?}"),
+    }
+
+    let snap = server.shutdown();
+    snap.assert_accounted();
+    assert_eq!(snap.goaways_sent, 1, "{snap:?}");
+    assert_eq!(snap.rows_ok(), 1);
+    assert_eq!(snap.rows_done, 2, "the drain-refused row is still an answered row");
+    reg.shutdown();
+}
+
+#[test]
+fn drain_signal_handler_latches_sigterm() {
+    extern "C" {
+        fn raise(sig: i32) -> i32;
+    }
+    tablenet::net::install_drain_signal_handler();
+    assert_eq!(unsafe { raise(15) }, 0); // SIGTERM
+    assert!(tablenet::net::drain_signal_received(), "SIGTERM must latch, not kill");
+}
+
+#[derive(Default)]
+struct Tally {
+    ok: u64,
+    queue_full: u64,
+    deadline: u64,
+    panicked: u64,
+    shutdown: u64,
+    lost: u64,
+    dups: u64,
+}
+
+/// The headline soak: kill the server mid-load (graceful drain on the
+/// same port a restarted incarnation rebinds through `SO_REUSEADDR`),
+/// with injected faults and a quarantined swap in flight, while
+/// reconnecting clients ride through on their retry budgets.
+#[test]
+fn kill_and_restart_soak_loses_nothing_and_keeps_versions_distinct() {
+    silence_injected_panics();
+    const CLIENTS: usize = 3;
+    const FRAMES_PER_CLIENT: usize = 30;
+    const ROWS_PER_FRAME: usize = 4;
+    const TOTAL_ROWS: u64 = (CLIENTS * FRAMES_PER_CLIENT * ROWS_PER_FRAME) as u64;
+
+    let plan =
+        FaultPlan::parse("seed=7,latency_prob=0.2,latency_us=400,panic_prob=0.05").unwrap();
+    let reg = ModelRegistry::with_faults(Arc::new(FaultInjector::new(plan)));
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_wait_us: 200,
+        workers: 2,
+        queue_cap: 64,
+        deadline_us: 100_000,
+        degrade_after: 0,
+        ..ServeConfig::default()
+    };
+    reg.register("m", Arc::new(Echo), &cfg).unwrap();
+    let admission = Arc::new(AdmissionController::new(0));
+    let opts = NetServerOptions {
+        threads: 2,
+        drain_grace_ms: 2_000,
+        ..NetServerOptions::default()
+    };
+
+    let server1 =
+        NetServer::start("127.0.0.1:0", reg.client(), admission.clone(), opts.clone()).unwrap();
+    let addr = server1.local_addr().to_string();
+
+    let mut joins = Vec::new();
+    for c in 0..CLIENTS {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let policy = RetryPolicy {
+                budget: 256,
+                refill_per_sec: 32.0,
+                base: Duration::from_millis(5),
+                cap: Duration::from_millis(100),
+                seed: 0xd1ce ^ (c as u64),
+                read_timeout: Some(Duration::from_secs(10)),
+            };
+            let mut cl = ReconnectingClient::new(&addr, 100 + c as u64, "", policy);
+            let mut tally = Tally::default();
+            for i in 0..FRAMES_PER_CLIENT {
+                let class = (i % 7) as f32;
+                let mut data = vec![0.0f32; ROWS_PER_FRAME * FEATURES as usize];
+                for r in 0..ROWS_PER_FRAME {
+                    data[r * FEATURES as usize] = class;
+                }
+                let reply = cl
+                    .infer("m", FEATURES, &data)
+                    .unwrap_or_else(|e| panic!("[conn {c}] frame {i} unresolved: {e}"));
+                tally.lost +=
+                    (ROWS_PER_FRAME.saturating_sub(reply.rows.len())) as u64;
+                tally.dups +=
+                    (reply.rows.len().saturating_sub(ROWS_PER_FRAME)) as u64;
+                for row in reply.rows.iter().take(ROWS_PER_FRAME) {
+                    match row.status {
+                        Status::Ok => {
+                            tally.ok += 1;
+                            assert_eq!(row.class, class as u16, "echo must round-trip");
+                            assert!(
+                                (1..=2).contains(&row.version),
+                                "impossible version {}",
+                                row.version
+                            );
+                        }
+                        Status::QueueFull => tally.queue_full += 1,
+                        Status::DeadlineExceeded => tally.deadline += 1,
+                        Status::WorkerPanicked => tally.panicked += 1,
+                        Status::ShutDown => tally.shutdown += 1,
+                        other => panic!("untyped verdict escaped the soak: {other}"),
+                    }
+                }
+            }
+            (tally, cl.stats())
+        }));
+    }
+
+    // phase 1: at quarter-load, hot-swap the model (v2 installs after
+    // its quarantine batch passes)
+    let wait_rows = |server: &NetServer, target: u64, what: &str| {
+        let t0 = Instant::now();
+        while server.rows_done() < target {
+            assert!(t0.elapsed() < Duration::from_secs(60), "soak stalled before {what}");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    };
+    wait_rows(&server1, TOTAL_ROWS / 4, "the mid-run swap");
+    assert_eq!(reg.swap_quarantined("m", Arc::new(Echo)).unwrap(), 2);
+
+    // phase 2: at half-load, gracefully drain incarnation one and
+    // restart on the SAME port — SO_REUSEADDR must carry the rebind
+    // through the drained connections' TIME_WAIT
+    wait_rows(&server1, TOTAL_ROWS / 2, "the restart");
+    server1.begin_drain("rolling restart");
+    let snap1 = server1.shutdown();
+    snap1.assert_accounted();
+    let server2 = NetServer::start(&addr, reg.client(), admission.clone(), opts).unwrap();
+
+    let mut total = Tally::default();
+    let mut connects = 0u64;
+    let mut retries = 0u64;
+    let mut goaways = 0u64;
+    for j in joins {
+        let (t, stats) = j.join().unwrap();
+        total.ok += t.ok;
+        total.queue_full += t.queue_full;
+        total.deadline += t.deadline;
+        total.panicked += t.panicked;
+        total.shutdown += t.shutdown;
+        total.lost += t.lost;
+        total.dups += t.dups;
+        connects += stats.connects;
+        retries += stats.retries;
+        goaways += stats.goaways_seen;
+    }
+
+    // the exactly-once contract, client side
+    assert_eq!(total.lost, 0, "rows lost: sent but never answered");
+    assert_eq!(total.dups, 0, "duplicate row acknowledgements: exactly-once violated");
+    assert_eq!(
+        total.ok + total.queue_full + total.deadline + total.panicked + total.shutdown,
+        TOTAL_ROWS,
+        "client verdicts do not account for every row sent"
+    );
+    assert!(connects >= CLIENTS as u64 + 1, "nobody reconnected across the restart");
+    assert!(retries >= 1, "the restart must have cost at least one retry token");
+    assert!(goaways >= 1, "no client observed the GoAway drain notice");
+
+    // both incarnations balance their wire ledgers independently
+    let snap2 = server2.shutdown();
+    snap2.assert_accounted();
+    assert!(snap1.goaways_sent >= 1, "{snap1:?}");
+    assert!(
+        snap2.models.get("m").is_some_and(|m| m.rows_admitted > 0),
+        "the restarted server saw no traffic: {snap2:?}"
+    );
+    assert_eq!(snap2.admission.in_flight, 0, "admission tokens leaked: {:?}", snap2.admission);
+    // server-side Ok acks can exceed the client's (a reply dropped at
+    // the drain boundary is re-executed by the fresh incarnation) but
+    // can never undercount an acknowledged row
+    assert!(snap1.rows_ok() + snap2.rows_ok() >= total.ok);
+
+    // swap-aware histograms: v1 and v2 kept distinct sub-histograms
+    // instead of averaging into one aggregate
+    let rows_at = |snap: &tablenet::net::NetSnapshot, v: u64| -> u64 {
+        snap.versions.get("m").and_then(|m| m.get(&v)).map_or(0, |s| s.rows)
+    };
+    assert!(rows_at(&snap1, 1) > 0, "no v1 rows recorded before the swap: {snap1:?}");
+    assert!(
+        rows_at(&snap1, 2) + rows_at(&snap2, 2) > 0,
+        "no v2 rows recorded after the swap"
+    );
+
+    let fleet = reg.shutdown();
+    assert_eq!(fleet.swaps(), 1);
+    fleet.assert_multiplier_less();
+}
