@@ -25,6 +25,7 @@ use tablenet::harness::bench::{Bench, BenchResult};
 use tablenet::lut::bitplane::DenseBitplaneLut;
 use tablenet::lut::dense::DenseWholeLut;
 use tablenet::lut::floatplane::{DenseFloatLut, FloatLutConfig};
+use tablenet::lut::kernel;
 use tablenet::lut::{Partition, ACC_FRAC};
 use tablenet::quant::f16::F16;
 use tablenet::quant::FixedFormat;
@@ -259,6 +260,54 @@ fn main() {
         out[0]
     });
 
+    // ---- forced-kernel A/B: the same banks under each kernel ----------
+    // (kernel:* cases are tracked-not-gated by tools/bench_compare.py —
+    // the per-host speedup is informative, not a regression gate)
+    Bench::header("kernel dispatch A/B: forced scalar vs avx2 (batch=32)");
+    let kernels: &[kernel::Kernel] = if kernel::avx2_available() {
+        &[kernel::Kernel::Scalar, kernel::Kernel::Avx2]
+    } else {
+        println!("cpu lacks AVX2 — recording scalar-only kernel cases");
+        &[kernel::Kernel::Scalar]
+    };
+    for &kern in kernels {
+        let guard = kernel::force(kern);
+        let name = format!("kernel:{} bitplane eval_batch batch=32", kern.name());
+        track(&name, 32, &mut case_samples);
+        bench.run(&name, || {
+            plane14.eval_batch(
+                &codes_all[..32 * q],
+                32,
+                &mut out[..32 * p],
+                &mut batch_ctrs[..32],
+            );
+            out[0]
+        });
+        let name = format!("kernel:{} whole-code eval_batch batch=32", kern.name());
+        track(&name, 32, &mut case_samples);
+        bench.run(&name, || {
+            whole2.eval_batch(
+                &codes_all[..32 * q],
+                32,
+                &mut out[..32 * p],
+                &mut batch_ctrs[..32],
+            );
+            out[0]
+        });
+        let name = format!("kernel:{} float16-plane eval_batch batch=32", kern.name());
+        track(&name, 32, &mut case_samples);
+        bench.run(&name, || {
+            fl.eval_batch_f16(
+                &halves[..32 * q],
+                32,
+                &mut out[..32 * p],
+                &mut batch_ctrs[..32],
+            );
+            out[0]
+        });
+        drop(guard);
+    }
+
     Bench::header("layer-boundary encode");
     let accs: Vec<i64> = (0..1024).map(|_| (rng.next_u64() >> 20) as i64).collect();
     track("acc -> f16 encode x1024", 1, &mut case_samples);
@@ -366,10 +415,64 @@ fn main() {
         _ => None,
     };
 
+    // ---- per-bank tables/sec + kernel A/B speedups --------------------
+    // tables-per-sample is measured from the bank's own counters (one
+    // batch=1 eval), not hand-derived, so the rate stays honest if a
+    // bank's lookup accounting ever changes
+    let tables_per_sample = {
+        let one = |f: &mut dyn FnMut(&mut Counters)| {
+            let mut c = Counters::default();
+            f(&mut c);
+            c.lut_evals as f64
+        };
+        [
+            ("bitplane_m14", "bitplane eval_batch batch=32", one(&mut |c| {
+                plane14.eval_batch(&codes_all[..q], 1, &mut out[..p], std::slice::from_mut(c));
+            })),
+            ("whole_m2", "whole-code eval_batch batch=32", one(&mut |c| {
+                whole2.eval_batch(&codes_all[..q], 1, &mut out[..p], std::slice::from_mut(c));
+            })),
+            ("float_m1", "float16-plane eval_batch batch=32", one(&mut |c| {
+                fl.eval_batch_f16(&halves[..q], 1, &mut out[..p], std::slice::from_mut(c));
+            })),
+        ]
+    };
+    let bank_rates: Vec<(&str, f64)> = tables_per_sample
+        .iter()
+        .map(|&(bank, case, tps)| {
+            let rate = find(case).map(|r| samples_per_sec(r, 32) * tps).unwrap_or(0.0);
+            (bank, rate)
+        })
+        .collect();
+    println!("\nper-bank table-lookup throughput (kernel: {}):", kernel::active().name());
+    for (bank, rate) in &bank_rates {
+        println!("  {bank:<14} {:.0} tables/sec", rate);
+    }
+
+    let kernel_pair = |case: &str| -> Option<f64> {
+        let s = find(&format!("kernel:scalar {case}"))?;
+        let v = find(&format!("kernel:avx2 {case}"))?;
+        Some(samples_per_sec(v, 32) / samples_per_sec(s, 32).max(1e-9))
+    };
+    let kernel_speedups: Vec<(&str, Option<f64>)> = vec![
+        ("bitplane", kernel_pair("bitplane eval_batch batch=32")),
+        ("whole", kernel_pair("whole-code eval_batch batch=32")),
+        ("float", kernel_pair("float16-plane eval_batch batch=32")),
+    ];
+    if kernel_speedups.iter().any(|(_, s)| s.is_some()) {
+        let line = kernel_speedups
+            .iter()
+            .filter_map(|(b, s)| s.map(|s| format!("{b} {s:.2}x")))
+            .collect::<Vec<_>>()
+            .join(", ");
+        println!("kernel speedup (avx2 vs scalar, batch=32): {line}");
+    }
+
     // ---- machine-readable output: BENCH_hotpath.json ------------------
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"engine_hotpath\",\n");
     json.push_str("  \"config\": {\"p\": 10, \"q\": 784, \"m\": 14, \"bits\": 3},\n");
+    json.push_str(&format!("  \"kernel\": \"{}\",\n", kernel::active().name()));
     json.push_str("  \"cases\": [\n");
     let results = bench.results();
     for (i, r) in results.iter().enumerate() {
@@ -394,6 +497,23 @@ fn main() {
     json.push_str(&format!(
         "  \"coordinator_throughput_rps\": {coord_rps:.1},\n"
     ));
+    json.push_str("  \"bank_tables_per_sec\": {");
+    for (i, (bank, rate)) in bank_rates.iter().enumerate() {
+        json.push_str(&format!(
+            "\"{bank}\": {rate:.1}{}",
+            if i + 1 == bank_rates.len() { "" } else { ", " }
+        ));
+    }
+    json.push_str("},\n");
+    json.push_str("  \"kernel_speedup\": {");
+    for (i, (bank, s)) in kernel_speedups.iter().enumerate() {
+        json.push_str(&format!(
+            "\"{bank}\": {}{}",
+            s.map(|s| format!("{s:.2}")).unwrap_or_else(|| "null".to_string()),
+            if i + 1 == kernel_speedups.len() { "" } else { ", " }
+        ));
+    }
+    json.push_str("},\n");
     json.push_str(&format!(
         "  \"speedup_batch32_vs_batch1_path\": {}\n",
         speedup.map(|s| format!("{s:.2}")).unwrap_or_else(|| "null".to_string())

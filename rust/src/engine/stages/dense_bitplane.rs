@@ -87,4 +87,32 @@ mod tests {
         assert_eq!(act.acc, want);
         assert_eq!(ctrs, want_ctrs);
     }
+
+    #[test]
+    fn stage_output_is_kernel_independent() {
+        use crate::lut::kernel;
+        let (p, q, batch) = (4, 12, 5);
+        let mut rng = Rng::new(17);
+        let w: Vec<f32> = (0..p * q).map(|_| rng.normal() * 0.4).collect();
+        let b: Vec<f32> = (0..p).map(|_| rng.normal() * 0.1).collect();
+        let fmt = FixedFormat::new(3);
+        let lut =
+            DenseBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, 4), fmt)
+                .unwrap();
+        let stage = DenseBitplaneStage::new(lut);
+        let xs: Vec<f32> = (0..batch * q).map(|_| rng.f32()).collect();
+        let run = |k: kernel::Kernel| {
+            let _g = kernel::force(k);
+            let mut act = ActBuf::new();
+            let mut scratch = Scratch::new();
+            let mut ctrs = vec![Counters::default(); batch];
+            act.load_f32(&xs, batch);
+            stage.eval_batch(&mut act, &mut scratch, &mut ctrs);
+            (act.acc.clone(), ctrs)
+        };
+        let (o_s, c_s) = run(kernel::Kernel::Scalar);
+        let (o_v, c_v) = run(kernel::Kernel::Avx2);
+        assert_eq!(o_s, o_v);
+        assert_eq!(c_s, c_v);
+    }
 }

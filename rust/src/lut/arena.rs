@@ -200,6 +200,18 @@ impl TableArena {
         &E::entries(&self.store)[self.offsets[c]..self.offsets[c + 1]]
     }
 
+    /// Chunk `c`'s table as a row-addressable view — the lane-friendly
+    /// accessor the SIMD and scalar hot loops share: one bounds-checked
+    /// slice per chunk up front, then `row(idx)` per gathered index
+    /// instead of re-slicing the arena each time.
+    #[inline]
+    pub fn chunk_table<E: ArenaEntry>(&self, c: usize) -> ChunkTable<'_, E> {
+        ChunkTable {
+            entries: self.chunk_slice::<E>(c),
+            row_len: self.row_len,
+        }
+    }
+
     /// Entry-block bytes of the arena (diagnostics / DESIGN
     /// accounting). Heap-resident when owned; mapped when borrowed.
     pub fn resident_bytes(&self) -> usize {
@@ -345,6 +357,36 @@ fn read_entries<E: ArenaEntry>(
     let mut v = Vec::with_capacity(total);
     v.extend(bytes.chunks_exact(std::mem::size_of::<E>()).map(E::from_le));
     Ok(Entries::Owned(v))
+}
+
+/// Row-addressable view of one chunk's table, shared by the scalar and
+/// SIMD hot loops (see [`TableArena::chunk_table`]). Indexing does one
+/// slice per row; the entry block itself was bounds-checked once when
+/// the view was built.
+#[derive(Clone, Copy)]
+pub struct ChunkTable<'a, E> {
+    pub(crate) entries: &'a [E],
+    pub(crate) row_len: usize,
+}
+
+impl<'a, E: ArenaEntry> ChunkTable<'a, E> {
+    /// Row `idx` of the table (`row_len` entries).
+    #[inline(always)]
+    pub fn row(&self, idx: usize) -> &'a [E] {
+        &self.entries[idx * self.row_len..(idx + 1) * self.row_len]
+    }
+
+    /// The whole entry block, row-major.
+    #[inline]
+    pub fn entries(&self) -> &'a [E] {
+        self.entries
+    }
+
+    /// Number of rows in this chunk's table.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.entries.len() / self.row_len
+    }
 }
 
 /// Entry width the evaluation loops are generic over.

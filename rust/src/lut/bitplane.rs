@@ -152,8 +152,30 @@ impl DenseBitplaneLut {
     }
 
     /// Records the data-dependent shift-adds (rows actually gathered
-    /// × p) on the owning sample's counter row.
-    fn eval_batch_impl<E: ArenaEntry>(
+    /// × p) on the owning sample's counter row. Dispatches between the
+    /// scalar reference loops and the AVX2 lane kernel (see
+    /// [`crate::lut::kernel`]): both perform the identical per-sample
+    /// multiset of shifted row adds, so outputs and counters are
+    /// bit-identical.
+    fn eval_batch_impl<E: super::kernel::LaneRow>(
+        &self,
+        codes: &[u32],
+        batch: usize,
+        out: &mut [i64],
+        ctrs: &mut [Counters],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if crate::lut::kernel::active() == crate::lut::kernel::Kernel::Avx2 {
+                // SAFETY: active() returns Avx2 only on CPUs with AVX2.
+                unsafe { self.eval_batch_avx2::<E>(codes, batch, out, ctrs) };
+                return;
+            }
+        }
+        self.eval_batch_scalar::<E>(codes, batch, out, ctrs);
+    }
+
+    fn eval_batch_scalar<E: ArenaEntry>(
         &self,
         codes: &[u32],
         batch: usize,
@@ -235,6 +257,127 @@ impl DenseBitplaneLut {
                     for (a, r) in acc.iter_mut().zip(row) {
                         *a += r.widen() << j;
                     }
+                    ctrs[s].shift_adds += p as u64;
+                }
+            }
+        }
+    }
+
+    /// AVX2 twin of [`Self::eval_batch_scalar`]: the packed-plane path
+    /// builds four samples' packed indices per step — one `vpgatherdd`
+    /// per chunk element pulls the four samples' codes, one
+    /// `vpgatherqq` pulls their spread words — and every row
+    /// accumulation runs 4×i64 lanes per step. The per-sample multiset
+    /// of `(row, shift)` adds is identical to the scalar path, so
+    /// outputs and counters match bit-for-bit.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn eval_batch_avx2<E: super::kernel::LaneRow>(
+        &self,
+        codes: &[u32],
+        batch: usize,
+        out: &mut [i64],
+        ctrs: &mut [Counters],
+    ) {
+        use std::arch::x86_64::*;
+        let q = self.partition.q;
+        let p = self.p;
+        let n = self.fmt.bits as usize;
+        let stride = self.stride;
+        let mask = if stride >= 64 { u64::MAX } else { (1u64 << stride) - 1 };
+        for (c, chunk) in self.partition.chunks.iter().enumerate() {
+            let table = self.arena.chunk_table::<E>(c);
+            if let [col] = chunk.as_slice() {
+                let row = table.row(1);
+                for s in 0..batch {
+                    let mut code = codes[s * q + col] as usize;
+                    let acc = &mut out[s * p..(s + 1) * p];
+                    while code != 0 {
+                        let j = code.trailing_zeros();
+                        E::shift_add_row_avx2(acc, row, j);
+                        ctrs[s].shift_adds += p as u64;
+                        code &= code - 1;
+                    }
+                }
+                continue;
+            }
+            if let Some(spread) = &self.spread {
+                let code_mask = spread.len() - 1;
+                debug_assert!(3 * q <= i32::MAX as usize);
+                let lane_off = _mm_setr_epi32(0, q as i32, (2 * q) as i32, (3 * q) as i32);
+                let mask_v = _mm_set1_epi32(code_mask as i32);
+                let mut s0 = 0usize;
+                while s0 + 4 <= batch {
+                    let mut packed4 = _mm256_setzero_si256();
+                    for (e, &col) in chunk.iter().enumerate() {
+                        // SAFETY: gathered element offsets are
+                        // (s0 + l)·q + col with l < 4 and s0 + 3 < batch,
+                        // all below codes.len() = batch·q.
+                        let base = codes.as_ptr().add(s0 * q + col) as *const i32;
+                        let cv =
+                            _mm_and_si128(_mm_i32gather_epi32::<4>(base, lane_off), mask_v);
+                        // SAFETY: indices are masked below spread.len()
+                        // (a power of two, ≤ 256).
+                        let sv = _mm256_i32gather_epi64::<8>(spread.as_ptr() as *const i64, cv);
+                        packed4 = _mm256_or_si256(
+                            packed4,
+                            _mm256_sll_epi64(sv, _mm_cvtsi32_si128(e as i32)),
+                        );
+                    }
+                    let mut packed = [0u64; 4];
+                    _mm256_storeu_si256(packed.as_mut_ptr() as *mut __m256i, packed4);
+                    for (l, &pk) in packed.iter().enumerate() {
+                        let s = s0 + l;
+                        let acc = &mut out[s * p..(s + 1) * p];
+                        for j in 0..n {
+                            let row_idx = ((pk >> (j as u32 * stride)) & mask) as usize;
+                            if row_idx == 0 {
+                                continue;
+                            }
+                            E::shift_add_row_avx2(acc, table.row(row_idx), j as u32);
+                            ctrs[s].shift_adds += p as u64;
+                        }
+                    }
+                    s0 += 4;
+                }
+                // ragged tail: scalar packed-index build, lane-wide adds
+                for s in s0..batch {
+                    let srow = &codes[s * q..(s + 1) * q];
+                    let mut packed = 0u64;
+                    for (e, &col) in chunk.iter().enumerate() {
+                        packed |= spread[srow[col] as usize & code_mask] << e;
+                    }
+                    let acc = &mut out[s * p..(s + 1) * p];
+                    for j in 0..n {
+                        let row_idx = ((packed >> (j as u32 * stride)) & mask) as usize;
+                        if row_idx == 0 {
+                            continue;
+                        }
+                        E::shift_add_row_avx2(acc, table.row(row_idx), j as u32);
+                        ctrs[s].shift_adds += p as u64;
+                    }
+                }
+                continue;
+            }
+            // general path: scalar index build, lane-wide row adds
+            for s in 0..batch {
+                let srow = &codes[s * q..(s + 1) * q];
+                let mut idx = [0usize; 16]; // n <= 16 by FixedFormat invariant
+                for (e, &col) in chunk.iter().enumerate() {
+                    let code = srow[col] as usize;
+                    for (j, slot) in idx[..n].iter_mut().enumerate() {
+                        *slot |= ((code >> j) & 1) << e;
+                    }
+                }
+                let acc = &mut out[s * p..(s + 1) * p];
+                for (j, &row_idx) in idx[..n].iter().enumerate() {
+                    if row_idx == 0 {
+                        continue;
+                    }
+                    E::shift_add_row_avx2(acc, table.row(row_idx), j as u32);
                     ctrs[s].shift_adds += p as u64;
                 }
             }
@@ -440,6 +583,38 @@ mod tests {
                 );
                 assert_eq!(cb[s], cs, "m={m} bits={bits}: sample {s} counters diverge");
                 cb[s].assert_multiplier_less();
+            }
+        }
+    }
+
+    #[test]
+    fn forced_kernels_agree_bit_exactly() {
+        use crate::lut::kernel;
+        let (p, q) = (5, 14);
+        let (w, b, _) = random_case(p, q, 71);
+        let mut rng = Rng::new(72);
+        // singleton, packed, packed paper-config, and general paths;
+        // batches chosen to hit full 4-lane steps and ragged tails
+        for (m, bits) in [(1, 3), (3, 3), (14, 3), (4, 9)] {
+            let fmt = FixedFormat::new(bits);
+            let lut =
+                DenseBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, m), fmt)
+                    .unwrap();
+            for batch in [1usize, 5, 8] {
+                let codes: Vec<u32> = (0..batch * q)
+                    .map(|_| rng.below(fmt.levels() as usize) as u32)
+                    .collect();
+                let run = |k: kernel::Kernel| {
+                    let _g = kernel::force(k);
+                    let mut out = vec![0i64; batch * p];
+                    let mut cb = vec![Counters::default(); batch];
+                    lut.eval_batch(&codes, batch, &mut out, &mut cb);
+                    (out, cb)
+                };
+                let (o_s, c_s) = run(kernel::Kernel::Scalar);
+                let (o_v, c_v) = run(kernel::Kernel::Avx2);
+                assert_eq!(o_s, o_v, "m={m} bits={bits} batch={batch}");
+                assert_eq!(c_s, c_v, "m={m} bits={bits} batch={batch}");
             }
         }
     }

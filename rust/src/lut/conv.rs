@@ -154,7 +154,29 @@ impl ConvLut {
         }
     }
 
-    fn eval_batch_impl<E: ArenaEntry>(
+    /// Dispatches between the scalar reference loops and the AVX2 lane
+    /// kernel (see [`crate::lut::kernel`]); both perform the identical
+    /// per-sample multiset of shifted patch-row adds, so outputs and
+    /// counters are bit-identical.
+    fn eval_batch_impl<E: super::kernel::LaneRow>(
+        &self,
+        codes: &[u32],
+        batch: usize,
+        pad: &mut [i64],
+        ctrs: &mut [Counters],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if crate::lut::kernel::active() == crate::lut::kernel::Kernel::Avx2 {
+                // SAFETY: active() returns Avx2 only on CPUs with AVX2.
+                unsafe { self.eval_batch_avx2::<E>(codes, batch, pad, ctrs) };
+                return;
+            }
+        }
+        self.eval_batch_scalar::<E>(codes, batch, pad, ctrs);
+    }
+
+    fn eval_batch_scalar<E: ArenaEntry>(
         &self,
         codes: &[u32],
         batch: usize,
@@ -205,6 +227,69 @@ impl ConvLut {
                                 }
                             }
                             ctrs[s].shift_adds += (pe * pe * self.cout) as u64;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// AVX2 twin of [`Self::eval_batch_scalar`]: the block-bit index
+    /// build is unchanged (m² single-bit deposits), but each of the pe
+    /// patch-row accumulations (`pe·cout` entries wide) runs 4×i64
+    /// lanes per step. Same per-sample adds as the scalar path.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn eval_batch_avx2<E: super::kernel::LaneRow>(
+        &self,
+        codes: &[u32],
+        batch: usize,
+        pad: &mut [i64],
+        ctrs: &mut [Counters],
+    ) {
+        let (h, w, r, m, pe) = (self.h, self.w, self.r, self.m, self.pe);
+        let n = self.fmt.bits;
+        let (ph, pw) = (h + 2 * r, w + 2 * r);
+        let pimg = ph * pw * self.cout;
+        let simg = h * w * self.cin;
+        let patch = pe * pe * self.cout;
+        for ci in 0..self.cin {
+            let table = self.arena.chunk_table::<E>(ci);
+            for s in 0..batch {
+                let scodes = &codes[s * simg..(s + 1) * simg];
+                let spad = &mut pad[s * pimg..(s + 1) * pimg];
+                for by in 0..h / m {
+                    for bx in 0..w / m {
+                        for j in 0..n {
+                            let mut idx = 0usize;
+                            for dy in 0..m {
+                                for dx in 0..m {
+                                    let pix = ((by * m + dy) * w + (bx * m + dx))
+                                        * self.cin
+                                        + ci;
+                                    idx |= (((scodes[pix] >> j) & 1) as usize)
+                                        << (dy * m + dx);
+                                }
+                            }
+                            if idx == 0 {
+                                continue;
+                            }
+                            let prow = table.row(idx);
+                            let oy0 = by * m;
+                            let ox0 = bx * m;
+                            for py in 0..pe {
+                                let dst = ((oy0 + py) * pw + ox0) * self.cout;
+                                let src = py * pe * self.cout;
+                                E::shift_add_row_avx2(
+                                    &mut spad[dst..dst + pe * self.cout],
+                                    &prow[src..src + pe * self.cout],
+                                    j,
+                                );
+                            }
+                            ctrs[s].shift_adds += patch as u64;
                         }
                     }
                 }
@@ -388,6 +473,36 @@ mod tests {
             assert_eq!(&out[s * oimg..(s + 1) * oimg], single.as_slice(), "sample {s}");
             assert_eq!(cb[s], cs, "per-sample counter attribution at sample {s}");
             cb[s].assert_multiplier_less();
+        }
+    }
+
+    #[test]
+    fn forced_kernels_agree_bit_exactly() {
+        use crate::lut::kernel;
+        let (h, w, cin, cout, r, m, bits) = (4, 4, 2, 3, 1, 2, 3);
+        let fs = 2 * r + 1;
+        let mut rng = Rng::new(93);
+        let filter: Vec<f32> =
+            (0..fs * fs * cin * cout).map(|_| rng.normal() * 0.3).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+        let fmt = FixedFormat::new(bits);
+        let lut = ConvLut::build(&filter, &bias, h, w, cin, cout, r, m, fmt).unwrap();
+        let simg = h * w * cin;
+        for batch in [1usize, 3] {
+            let codes: Vec<u32> =
+                (0..batch * simg).map(|_| rng.below(1 << bits) as u32).collect();
+            let run = |k: kernel::Kernel| {
+                let _g = kernel::force(k);
+                let mut out = vec![0i64; batch * h * w * cout];
+                let mut pad = Vec::new();
+                let mut cb = vec![Counters::default(); batch];
+                lut.eval_batch(&codes, batch, &mut out, &mut pad, &mut cb);
+                (out, cb)
+            };
+            let (o_s, c_s) = run(kernel::Kernel::Scalar);
+            let (o_v, c_v) = run(kernel::Kernel::Avx2);
+            assert_eq!(o_s, o_v, "batch={batch}");
+            assert_eq!(c_s, c_v, "batch={batch}");
         }
     }
 

@@ -142,7 +142,29 @@ impl ConvFloatLut {
         }
     }
 
-    fn eval_batch_impl<E: ArenaEntry>(
+    /// Dispatches between the scalar reference loops and the AVX2 lane
+    /// kernel (see [`crate::lut::kernel`]); both perform the identical
+    /// per-sample multiset of shifted patch-row adds, so outputs and
+    /// counters are bit-identical.
+    fn eval_batch_impl<E: super::kernel::LaneRow>(
+        &self,
+        x: &[F16],
+        batch: usize,
+        pad: &mut [i64],
+        ctrs: &mut [Counters],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if crate::lut::kernel::active() == crate::lut::kernel::Kernel::Avx2 {
+                // SAFETY: active() returns Avx2 only on CPUs with AVX2.
+                unsafe { self.eval_batch_avx2::<E>(x, batch, pad, ctrs) };
+                return;
+            }
+        }
+        self.eval_batch_scalar::<E>(x, batch, pad, ctrs);
+    }
+
+    fn eval_batch_scalar<E: ArenaEntry>(
         &self,
         x: &[F16],
         batch: usize,
@@ -191,6 +213,68 @@ impl ConvFloatLut {
                                 for (d, t) in dstrow.iter_mut().zip(srcrow) {
                                     *d += t.widen() << j;
                                 }
+                            }
+                            ctrs[s].shift_adds += patch as u64;
+                            sig &= sig - 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// AVX2 twin of [`Self::eval_batch_scalar`]: the per-pixel
+    /// (exponent, set-bit) walk is unchanged, but each of the pe
+    /// patch-row accumulations (`pe·cout` entries wide) runs 4×i64
+    /// lanes per step. Same per-sample adds as the scalar path.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn eval_batch_avx2<E: super::kernel::LaneRow>(
+        &self,
+        x: &[F16],
+        batch: usize,
+        pad: &mut [i64],
+        ctrs: &mut [Counters],
+    ) {
+        let (h, w, r) = (self.h, self.w, self.r);
+        let fs = 2 * r + 1;
+        let pe = fs;
+        let patch = pe * pe * self.cout;
+        let (ph, pw) = (h + 2 * r, w + 2 * r);
+        let pimg = ph * pw * self.cout;
+        let simg = h * w * self.cin;
+        let lo_plane = SIG_BITS - self.planes.min(SIG_BITS);
+        for ci in 0..self.cin {
+            let table = self.arena.chunk_table::<E>(ci);
+            for s in 0..batch {
+                let sx = &x[s * simg..(s + 1) * simg];
+                let spad = &mut pad[s * pimg..(s + 1) * pimg];
+                for y in 0..h {
+                    for xx in 0..w {
+                        let hval = sx[(y * w + xx) * self.cin + ci];
+                        debug_assert_eq!(
+                            hval.sign(),
+                            0,
+                            "conv float LUT expects nonneg input"
+                        );
+                        let mut sig = (hval.significand11() >> lo_plane) << lo_plane;
+                        if sig == 0 {
+                            continue;
+                        }
+                        let prow = table.row(((hval.exponent() << 1) | 1) as usize);
+                        while sig != 0 {
+                            let j = sig.trailing_zeros();
+                            for py in 0..pe {
+                                let dst = ((y + py) * pw + xx) * self.cout;
+                                let src = py * pe * self.cout;
+                                E::shift_add_row_avx2(
+                                    &mut spad[dst..dst + pe * self.cout],
+                                    &prow[src..src + pe * self.cout],
+                                    j,
+                                );
                             }
                             ctrs[s].shift_adds += patch as u64;
                             sig &= sig - 1;
@@ -333,6 +417,36 @@ mod tests {
             assert_eq!(&out[s * oimg..(s + 1) * oimg], single.as_slice(), "sample {s}");
             assert_eq!(cb[s], cs, "per-sample counter attribution at sample {s}");
             cb[s].assert_multiplier_less();
+        }
+    }
+
+    #[test]
+    fn forced_kernels_agree_bit_exactly() {
+        use crate::lut::kernel;
+        let (h, w, cin, cout, r) = (4, 4, 2, 2, 1);
+        let fs = 2 * r + 1;
+        let mut rng = Rng::new(99);
+        let filter: Vec<f32> =
+            (0..fs * fs * cin * cout).map(|_| rng.normal() * 0.3).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+        let lut =
+            ConvFloatLut::build(&filter, &bias, h, w, cin, cout, r, SIG_BITS).unwrap();
+        let simg = h * w * cin;
+        for batch in [1usize, 3] {
+            let x: Vec<F16> =
+                (0..batch * simg).map(|_| F16::from_f32(rng.f32() * 4.0)).collect();
+            let run = |k: kernel::Kernel| {
+                let _g = kernel::force(k);
+                let mut out = vec![0i64; batch * h * w * cout];
+                let mut pad = Vec::new();
+                let mut cb = vec![Counters::default(); batch];
+                lut.eval_batch_f16(&x, batch, &mut out, &mut pad, &mut cb);
+                (out, cb)
+            };
+            let (o_s, c_s) = run(kernel::Kernel::Scalar);
+            let (o_v, c_v) = run(kernel::Kernel::Avx2);
+            assert_eq!(o_s, o_v, "batch={batch}");
+            assert_eq!(c_s, c_v, "batch={batch}");
         }
     }
 

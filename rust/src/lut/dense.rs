@@ -123,7 +123,27 @@ impl DenseWholeLut {
         }
     }
 
-    fn eval_batch_impl<E: ArenaEntry>(&self, codes: &[u32], batch: usize, out: &mut [i64]) {
+    /// Dispatches between the scalar reference loop and the AVX2 lane
+    /// kernel (see [`crate::lut::kernel`]); both perform the identical
+    /// per-sample row adds, so outputs are bit-identical.
+    fn eval_batch_impl<E: super::kernel::LaneRow>(
+        &self,
+        codes: &[u32],
+        batch: usize,
+        out: &mut [i64],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if crate::lut::kernel::active() == crate::lut::kernel::Kernel::Avx2 {
+                // SAFETY: active() returns Avx2 only on CPUs with AVX2.
+                unsafe { self.eval_batch_avx2::<E>(codes, batch, out) };
+                return;
+            }
+        }
+        self.eval_batch_scalar::<E>(codes, batch, out);
+    }
+
+    fn eval_batch_scalar<E: ArenaEntry>(&self, codes: &[u32], batch: usize, out: &mut [i64]) {
         let q = self.partition.q;
         let p = self.p;
         let r_i = self.fmt.bits;
@@ -140,6 +160,67 @@ impl DenseWholeLut {
                 for (a, r) in acc.iter_mut().zip(row) {
                     *a += r.widen();
                 }
+            }
+        }
+    }
+
+    /// AVX2 twin of [`Self::eval_batch_scalar`]: four samples' arena
+    /// indices are built per step — one `vpgatherdd` per chunk element
+    /// pulls the four samples' codes, zero-extended to u64 lanes and
+    /// OR-shifted into place — and row adds run 4×i64 lanes per step.
+    /// Same per-sample adds as the scalar path, bit-identical output.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn eval_batch_avx2<E: super::kernel::LaneRow>(
+        &self,
+        codes: &[u32],
+        batch: usize,
+        out: &mut [i64],
+    ) {
+        use std::arch::x86_64::*;
+        let q = self.partition.q;
+        let p = self.p;
+        let r_i = self.fmt.bits;
+        for (c, chunk) in self.partition.chunks.iter().enumerate() {
+            let table = self.arena.chunk_table::<E>(c);
+            debug_assert!(3 * q <= i32::MAX as usize);
+            let lane_off = _mm_setr_epi32(0, q as i32, (2 * q) as i32, (3 * q) as i32);
+            let mut s0 = 0usize;
+            while s0 + 4 <= batch {
+                let mut idx4 = _mm256_setzero_si256();
+                for (e, &col) in chunk.iter().enumerate() {
+                    // SAFETY: gathered element offsets are (s0 + l)·q +
+                    // col with l < 4 and s0 + 3 < batch, all below
+                    // codes.len() = batch·q.
+                    let base = codes.as_ptr().add(s0 * q + col) as *const i32;
+                    let cv = _mm_i32gather_epi32::<4>(base, lane_off);
+                    let wide = _mm256_cvtepu32_epi64(cv);
+                    idx4 = _mm256_or_si256(
+                        idx4,
+                        _mm256_sll_epi64(wide, _mm_cvtsi32_si128((e as u32 * r_i) as i32)),
+                    );
+                }
+                let mut idx = [0u64; 4];
+                _mm256_storeu_si256(idx.as_mut_ptr() as *mut __m256i, idx4);
+                for (l, &i) in idx.iter().enumerate() {
+                    let s = s0 + l;
+                    let acc = &mut out[s * p..(s + 1) * p];
+                    E::add_row_avx2(acc, table.row(i as usize));
+                }
+                s0 += 4;
+            }
+            // ragged tail: scalar index build, lane-wide row adds
+            for s in s0..batch {
+                let srow = &codes[s * q..(s + 1) * q];
+                let mut idx = 0usize;
+                for (e, &col) in chunk.iter().enumerate() {
+                    idx |= (srow[col] as usize) << (e as u32 * r_i);
+                }
+                let acc = &mut out[s * p..(s + 1) * p];
+                E::add_row_avx2(acc, table.row(idx));
             }
         }
     }
@@ -315,6 +396,36 @@ mod tests {
             assert_eq!(&out[s * p..(s + 1) * p], single.as_slice(), "sample {s}");
             assert_eq!(cb[s], cs, "per-sample counter attribution at sample {s}");
             cb[s].assert_multiplier_less();
+        }
+    }
+
+    #[test]
+    fn forced_kernels_agree_bit_exactly() {
+        use crate::lut::kernel;
+        let (p, q) = (6, 10);
+        let (w, b, _) = random_case(p, q, 91);
+        let fmt = FixedFormat::new(3);
+        let mut rng = Rng::new(92);
+        for m in [1usize, 2, 5] {
+            let lut =
+                DenseWholeLut::build(&w, &b, p, q, Partition::contiguous(q, m), fmt)
+                    .unwrap();
+            for batch in [1usize, 6, 8] {
+                let codes: Vec<u32> = (0..batch * q)
+                    .map(|_| rng.below(fmt.levels() as usize) as u32)
+                    .collect();
+                let run = |k: kernel::Kernel| {
+                    let _g = kernel::force(k);
+                    let mut out = vec![0i64; batch * p];
+                    let mut cb = vec![Counters::default(); batch];
+                    lut.eval_batch(&codes, batch, &mut out, &mut cb);
+                    (out, cb)
+                };
+                let (o_s, c_s) = run(kernel::Kernel::Scalar);
+                let (o_v, c_v) = run(kernel::Kernel::Avx2);
+                assert_eq!(o_s, o_v, "m={m} batch={batch}");
+                assert_eq!(c_s, c_v, "m={m} batch={batch}");
+            }
         }
     }
 

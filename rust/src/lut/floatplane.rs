@@ -158,7 +158,29 @@ impl DenseFloatLut {
         }
     }
 
-    fn eval_batch_impl<E: ArenaEntry>(
+    /// Dispatches between the scalar reference loops and the AVX2 lane
+    /// kernel (see [`crate::lut::kernel`]); both perform the identical
+    /// per-sample multiset of shifted row adds, so outputs and counters
+    /// are bit-identical.
+    fn eval_batch_impl<E: super::kernel::LaneRow>(
+        &self,
+        x: &[F16],
+        batch: usize,
+        out: &mut [i64],
+        ctrs: &mut [Counters],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if crate::lut::kernel::active() == crate::lut::kernel::Kernel::Avx2 {
+                // SAFETY: active() returns Avx2 only on CPUs with AVX2.
+                unsafe { self.eval_batch_avx2::<E>(x, batch, out, ctrs) };
+                return;
+            }
+        }
+        self.eval_batch_scalar::<E>(x, batch, out, ctrs);
+    }
+
+    fn eval_batch_scalar<E: ArenaEntry>(
         &self,
         x: &[F16],
         batch: usize,
@@ -167,7 +189,6 @@ impl DenseFloatLut {
     ) {
         let q = self.partition.q;
         let p = self.p;
-        let per_elem_bits = 1 + EXP_BITS;
         let planes = self.cfg.planes.min(SIG_BITS);
         let lo = SIG_BITS - planes;
         for (c, chunk) in self.partition.chunks.iter().enumerate() {
@@ -198,33 +219,114 @@ impl DenseFloatLut {
                 }
                 continue;
             }
+            // packed (mantissa, exponent) path: all m ≤ 4 index fields
+            // of a sample ride one u64 pair — `exp_part` holds each
+            // element's (exponent << 1) at bit 6e (the per-element
+            // index field is 1 + EXP_BITS = 6 bits wide), `sigs` holds
+            // its 11-bit significand at bit 16e. Per plane j the index
+            // is `exp_part | mant`, where `mant` folds bit j of every
+            // significand down to its element's bit 6e (16e → 6e is a
+            // right shift by 10e, so three shifted ORs cover e ≤ 3).
+            let m = chunk.len();
+            debug_assert!(m <= 4); // idx_bits = 6m < 26 by build/read_wire
+            let fold_mask: u64 = (0..m).map(|e| 1u64 << (6 * e)).sum();
             for s in 0..batch {
                 let srow = &x[s * q..(s + 1) * q];
+                let mut exp_part = 0u64;
+                let mut sigs = 0u64;
+                for (e, &col) in chunk.iter().enumerate() {
+                    let h = srow[col];
+                    debug_assert_eq!(h.sign(), 0, "float LUT path expects ReLU-nonneg input");
+                    exp_part |= ((h.exponent() as u64) << 1) << (6 * e);
+                    sigs |= (h.significand11() as u64) << (16 * e);
+                }
                 let acc = &mut out[s * p..(s + 1) * p];
                 // drop the lowest (SIG_BITS - planes) planes if truncating
                 for j in lo..SIG_BITS {
-                    let mut idx = 0usize;
-                    // rows whose mantissa bits are ALL zero are identically
-                    // zero (the exponent only scales a set bit), so track
-                    // the bit mask and skip the gather+add entirely — in
-                    // hardware this is the row-enable line; the lookup is
-                    // still charged (per sample, in eval_batch_f16).
-                    let mut bits = 0u32;
-                    for (e, &col) in chunk.iter().enumerate() {
-                        let h = srow[col];
-                        debug_assert_eq!(h.sign(), 0, "float LUT path expects ReLU-nonneg input");
-                        let bit = h.sig_bitplane(j);
-                        bits |= bit;
-                        let field = (bit | (h.exponent() << 1)) as usize;
-                        idx |= field << (e as u32 * per_elem_bits);
-                    }
-                    if bits == 0 {
+                    let y = (sigs >> j) & 0x0001_0001_0001_0001;
+                    let mant = (y | (y >> 10) | (y >> 20) | (y >> 30)) & fold_mask;
+                    if mant == 0 {
+                        // rows whose mantissa bits are ALL zero are
+                        // identically zero (the exponent only scales a
+                        // set bit) — skip the gather+add entirely; in
+                        // hardware this is the row-enable line; the
+                        // lookup is still charged (in eval_batch_f16).
                         continue;
                     }
+                    let idx = (exp_part | mant) as usize;
                     let row = &table[idx * p..(idx + 1) * p];
                     for (a, r) in acc.iter_mut().zip(row) {
                         *a += r.widen() << j;
                     }
+                    ctrs[s].shift_adds += p as u64;
+                }
+            }
+        }
+    }
+
+    /// AVX2 twin of [`Self::eval_batch_scalar`]: the index packing is
+    /// the same u64 (mantissa, exponent) fold — the F16 fields are too
+    /// narrow to gather safely in lanes — but every row accumulation
+    /// runs 4×i64 lanes per step. Same per-sample add multiset as the
+    /// scalar path, so outputs and counters match bit-for-bit.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn eval_batch_avx2<E: super::kernel::LaneRow>(
+        &self,
+        x: &[F16],
+        batch: usize,
+        out: &mut [i64],
+        ctrs: &mut [Counters],
+    ) {
+        let q = self.partition.q;
+        let p = self.p;
+        let planes = self.cfg.planes.min(SIG_BITS);
+        let lo = SIG_BITS - planes;
+        for (c, chunk) in self.partition.chunks.iter().enumerate() {
+            let table = self.arena.chunk_table::<E>(c);
+            if let [col] = chunk.as_slice() {
+                for s in 0..batch {
+                    let h = x[s * q + col];
+                    debug_assert_eq!(h.sign(), 0, "float LUT path expects ReLU-nonneg input");
+                    let mut sig = (h.significand11() >> lo) << lo;
+                    if sig == 0 {
+                        continue;
+                    }
+                    let row = table.row(((h.exponent() << 1) | 1) as usize);
+                    let acc = &mut out[s * p..(s + 1) * p];
+                    while sig != 0 {
+                        let j = sig.trailing_zeros();
+                        E::shift_add_row_avx2(acc, row, j);
+                        ctrs[s].shift_adds += p as u64;
+                        sig &= sig - 1;
+                    }
+                }
+                continue;
+            }
+            let m = chunk.len();
+            debug_assert!(m <= 4); // idx_bits = 6m < 26 by build/read_wire
+            let fold_mask: u64 = (0..m).map(|e| 1u64 << (6 * e)).sum();
+            for s in 0..batch {
+                let srow = &x[s * q..(s + 1) * q];
+                let mut exp_part = 0u64;
+                let mut sigs = 0u64;
+                for (e, &col) in chunk.iter().enumerate() {
+                    let h = srow[col];
+                    debug_assert_eq!(h.sign(), 0, "float LUT path expects ReLU-nonneg input");
+                    exp_part |= ((h.exponent() as u64) << 1) << (6 * e);
+                    sigs |= (h.significand11() as u64) << (16 * e);
+                }
+                let acc = &mut out[s * p..(s + 1) * p];
+                for j in lo..SIG_BITS {
+                    let y = (sigs >> j) & 0x0001_0001_0001_0001;
+                    let mant = (y | (y >> 10) | (y >> 20) | (y >> 30)) & fold_mask;
+                    if mant == 0 {
+                        continue;
+                    }
+                    E::shift_add_row_avx2(acc, table.row((exp_part | mant) as usize), j);
                     ctrs[s].shift_adds += p as u64;
                 }
             }
@@ -412,6 +514,38 @@ mod tests {
                 assert_eq!(&out[s * p..(s + 1) * p], single.as_slice(), "m={m} s={s}");
                 assert_eq!(cb[s], cs, "m={m}: sample {s} counters diverge");
                 cb[s].assert_multiplier_less();
+            }
+        }
+    }
+
+    #[test]
+    fn forced_kernels_agree_bit_exactly() {
+        use crate::lut::kernel;
+        let (p, q) = (4, 9);
+        let (w, b, _) = random_case(p, q, 81);
+        let mut rng = Rng::new(82);
+        // m=1 singleton fast path, m=2/3 packed-fold path; truncated
+        // planes exercise the lo-plane drop; batches hit ragged tails
+        for (m, planes) in [(1, 11), (2, 11), (3, 7)] {
+            let lut = DenseFloatLut::build(
+                &w, &b, p, q, Partition::contiguous(q, m), FloatLutConfig { planes },
+            )
+            .unwrap();
+            for batch in [1usize, 6] {
+                let x: Vec<F16> = (0..batch * q)
+                    .map(|_| F16::from_f32(rng.f32() * 6.0))
+                    .collect();
+                let run = |k: kernel::Kernel| {
+                    let _g = kernel::force(k);
+                    let mut out = vec![0i64; batch * p];
+                    let mut cb = vec![Counters::default(); batch];
+                    lut.eval_batch_f16(&x, batch, &mut out, &mut cb);
+                    (out, cb)
+                };
+                let (o_s, c_s) = run(kernel::Kernel::Scalar);
+                let (o_v, c_v) = run(kernel::Kernel::Avx2);
+                assert_eq!(o_s, o_v, "m={m} planes={planes} batch={batch}");
+                assert_eq!(c_s, c_v, "m={m} planes={planes} batch={batch}");
             }
         }
     }

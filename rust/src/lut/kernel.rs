@@ -1,0 +1,446 @@
+//! Kernel dispatch: one switch between the scalar evaluation loops and
+//! the AVX2 multi-lane gather/accumulate paths (§Perf).
+//!
+//! Every LUT bank's `eval_batch` funnels through [`active`] exactly
+//! once per call and then runs either its scalar implementation or its
+//! `#[target_feature(enable = "avx2")]` twin. Selection order:
+//!
+//! 1. a thread-local scoped override installed by [`force`] — used by
+//!    tests and benches to compare both paths in-process without
+//!    touching global state;
+//! 2. the `TABLENET_KERNEL` environment variable (`scalar` | `avx2`),
+//!    read once per process — the operational override for CI legs and
+//!    A/B runs. An unknown value fails loudly; `avx2` on a CPU without
+//!    AVX2 prints a visible notice and falls back to scalar rather
+//!    than executing illegal instructions;
+//! 3. runtime feature detection (`is_x86_64_feature_detected!`).
+//!
+//! The scalar path is the reference: both kernels perform the *same*
+//! multiset of row adds per sample (i64 adds and left-shifts are
+//! associative and commutative, and lane order never crosses a sample
+//! boundary), so outputs and per-sample [`Counters`] are bit-identical
+//! — asserted by the kernel-parity proptests.
+//!
+//! [`Counters`]: crate::engine::counters::Counters
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+use super::arena::ArenaEntry;
+
+/// Environment variable that pins the kernel for the whole process.
+pub const ENV_VAR: &str = "TABLENET_KERNEL";
+
+/// An evaluation kernel: which implementation of the bank hot loops
+/// runs. `Scalar` exists on every target; `Avx2` is only ever selected
+/// on x86_64 CPUs that report the feature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable one-row-at-a-time loops — the bit-exact reference.
+    Scalar,
+    /// 4×i64-lane row accumulation and `vpgatherdd`/`vpgatherqq` index
+    /// gathers via `core::arch::x86_64`.
+    Avx2,
+}
+
+impl Kernel {
+    /// Stable lowercase name (used in `TABLENET_KERNEL`, bench JSON and
+    /// the inspect/serve banners).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// True when this CPU can execute the AVX2 paths.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_64_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Process-wide `TABLENET_KERNEL` override, parsed once. Unknown values
+/// abort (a typo must never silently run the wrong kernel); a forced
+/// `avx2` without CPU support degrades to scalar with a visible notice
+/// so CI legs on heterogeneous runners skip gracefully.
+fn env_kernel() -> Option<Kernel> {
+    static ENV: OnceLock<Option<Kernel>> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var(ENV_VAR) {
+        Err(_) => None,
+        Ok(v) => match v.as_str() {
+            "scalar" => Some(Kernel::Scalar),
+            "avx2" => {
+                if avx2_available() {
+                    Some(Kernel::Avx2)
+                } else {
+                    eprintln!(
+                        "tablenet: {ENV_VAR}=avx2 requested but this CPU lacks AVX2; \
+                         running the scalar kernel"
+                    );
+                    Some(Kernel::Scalar)
+                }
+            }
+            other => panic!("{ENV_VAR} must be 'scalar' or 'avx2', got '{other}'"),
+        },
+    })
+}
+
+thread_local! {
+    /// Scoped per-thread override (tests/benches); beats the env var so
+    /// an in-process A/B comparison works even under `TABLENET_KERNEL`.
+    static FORCED: Cell<Option<Kernel>> = const { Cell::new(None) };
+}
+
+/// Guard returned by [`force`]; restores the previous per-thread
+/// override (supporting nesting) when dropped.
+pub struct ForceGuard {
+    prev: Option<Kernel>,
+}
+
+impl Drop for ForceGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        FORCED.with(|f| f.set(prev));
+    }
+}
+
+/// Force `k` on the current thread until the guard drops. Forcing
+/// `Avx2` on a CPU without AVX2 degrades to `Scalar` (with a notice):
+/// the guard must never cause an illegal-instruction fault.
+#[must_use = "the forced kernel reverts when this guard is dropped"]
+pub fn force(k: Kernel) -> ForceGuard {
+    let k = if k == Kernel::Avx2 && !avx2_available() {
+        eprintln!("tablenet: kernel::force(avx2) without CPU support; forcing scalar");
+        Kernel::Scalar
+    } else {
+        k
+    };
+    let prev = FORCED.with(|f| f.replace(Some(k)));
+    ForceGuard { prev }
+}
+
+/// The kernel the bank hot loops run right now on this thread:
+/// [`force`] override, then `TABLENET_KERNEL`, then CPU detection.
+/// Guaranteed to return `Avx2` only when [`avx2_available`] is true.
+pub fn active() -> Kernel {
+    if let Some(k) = FORCED.with(|f| f.get()) {
+        return k;
+    }
+    if let Some(k) = env_kernel() {
+        return k;
+    }
+    static DETECTED: OnceLock<Kernel> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        if avx2_available() {
+            Kernel::Avx2
+        } else {
+            Kernel::Scalar
+        }
+    })
+}
+
+/// One-line provenance for banners (`tablenet inspect`, serve startup):
+/// which kernel is active and why.
+pub fn describe() -> String {
+    if let Some(k) = FORCED.with(|f| f.get()) {
+        return format!("{} (forced)", k.name());
+    }
+    if let Some(k) = env_kernel() {
+        return format!("{} ({ENV_VAR})", k.name());
+    }
+    if avx2_available() {
+        "avx2 (auto-detected)".to_string()
+    } else {
+        "scalar (cpu lacks avx2)".to_string()
+    }
+}
+
+/// Row-accumulate primitives the AVX2 bank paths are generic over —
+/// the software analogue of the exemplar's N parallel units per cycle:
+/// four i64 accumulator lanes per step, with a scalar tail for the
+/// remainder, bit-exact with the scalar loops (same wrapping adds and
+/// left-shifts, independent per element).
+pub trait LaneRow: ArenaEntry {
+    /// `acc[i] += (row[i] as i64) << j` across the whole row.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (callers are dispatched via
+    /// [`active`], which guarantees it). `acc` and `row` must have
+    /// equal lengths and `j < 64`.
+    unsafe fn shift_add_row_avx2(acc: &mut [i64], row: &[Self], j: u32);
+
+    /// `acc[i] += row[i] as i64` across the whole row.
+    ///
+    /// # Safety
+    /// Same contract as [`LaneRow::shift_add_row_avx2`].
+    unsafe fn add_row_avx2(acc: &mut [i64], row: &[Self]);
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! The `#[target_feature]` bodies. Kept as free functions because
+    //! trait methods cannot carry the attribute; the [`LaneRow`] impls
+    //! delegate here.
+
+    use super::LaneRow;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// AVX2 required; `acc.len() == row.len()`; `j < 64`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn shift_add_row_i32(acc: &mut [i64], row: &[i32], j: u32) {
+        debug_assert_eq!(acc.len(), row.len());
+        debug_assert!(j < 64);
+        let n = acc.len();
+        let cnt = _mm_cvtsi32_si128(j as i32);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let r = _mm_loadu_si128(row.as_ptr().add(i) as *const __m128i);
+            let wide = _mm256_cvtepi32_epi64(r);
+            let shifted = _mm256_sll_epi64(wide, cnt);
+            let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(
+                acc.as_mut_ptr().add(i) as *mut __m256i,
+                _mm256_add_epi64(a, shifted),
+            );
+            i += 4;
+        }
+        while i < n {
+            *acc.get_unchecked_mut(i) =
+                acc.get_unchecked(i).wrapping_add((*row.get_unchecked(i) as i64) << j);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// AVX2 required; `acc.len() == row.len()`; `j < 64`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn shift_add_row_i64(acc: &mut [i64], row: &[i64], j: u32) {
+        debug_assert_eq!(acc.len(), row.len());
+        debug_assert!(j < 64);
+        let n = acc.len();
+        let cnt = _mm_cvtsi32_si128(j as i32);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let r = _mm256_loadu_si256(row.as_ptr().add(i) as *const __m256i);
+            let shifted = _mm256_sll_epi64(r, cnt);
+            let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(
+                acc.as_mut_ptr().add(i) as *mut __m256i,
+                _mm256_add_epi64(a, shifted),
+            );
+            i += 4;
+        }
+        while i < n {
+            *acc.get_unchecked_mut(i) =
+                acc.get_unchecked(i).wrapping_add(*row.get_unchecked(i) << j);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// AVX2 required; `acc.len() == row.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_row_i32(acc: &mut [i64], row: &[i32]) {
+        debug_assert_eq!(acc.len(), row.len());
+        let n = acc.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let r = _mm_loadu_si128(row.as_ptr().add(i) as *const __m128i);
+            let wide = _mm256_cvtepi32_epi64(r);
+            let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(
+                acc.as_mut_ptr().add(i) as *mut __m256i,
+                _mm256_add_epi64(a, wide),
+            );
+            i += 4;
+        }
+        while i < n {
+            *acc.get_unchecked_mut(i) =
+                acc.get_unchecked(i).wrapping_add(*row.get_unchecked(i) as i64);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// AVX2 required; `acc.len() == row.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_row_i64(acc: &mut [i64], row: &[i64]) {
+        debug_assert_eq!(acc.len(), row.len());
+        let n = acc.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let r = _mm256_loadu_si256(row.as_ptr().add(i) as *const __m256i);
+            let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(
+                acc.as_mut_ptr().add(i) as *mut __m256i,
+                _mm256_add_epi64(a, r),
+            );
+            i += 4;
+        }
+        while i < n {
+            *acc.get_unchecked_mut(i) =
+                acc.get_unchecked(i).wrapping_add(*row.get_unchecked(i));
+            i += 1;
+        }
+    }
+
+    impl LaneRow for i32 {
+        #[inline]
+        unsafe fn shift_add_row_avx2(acc: &mut [i64], row: &[i32], j: u32) {
+            shift_add_row_i32(acc, row, j);
+        }
+        #[inline]
+        unsafe fn add_row_avx2(acc: &mut [i64], row: &[i32]) {
+            add_row_i32(acc, row);
+        }
+    }
+
+    impl LaneRow for i64 {
+        #[inline]
+        unsafe fn shift_add_row_avx2(acc: &mut [i64], row: &[i64], j: u32) {
+            shift_add_row_i64(acc, row, j);
+        }
+        #[inline]
+        unsafe fn add_row_avx2(acc: &mut [i64], row: &[i64]) {
+            add_row_i64(acc, row);
+        }
+    }
+}
+
+// Non-x86_64 targets still need the trait implemented (the bank code is
+// generic over it), but `active()` can never select Avx2 there, so the
+// bodies are the plain scalar loops and are unreachable in practice.
+#[cfg(not(target_arch = "x86_64"))]
+mod fallback {
+    use super::LaneRow;
+
+    impl LaneRow for i32 {
+        unsafe fn shift_add_row_avx2(acc: &mut [i64], row: &[i32], j: u32) {
+            for (a, &r) in acc.iter_mut().zip(row) {
+                *a = a.wrapping_add((r as i64) << j);
+            }
+        }
+        unsafe fn add_row_avx2(acc: &mut [i64], row: &[i32]) {
+            for (a, &r) in acc.iter_mut().zip(row) {
+                *a = a.wrapping_add(r as i64);
+            }
+        }
+    }
+
+    impl LaneRow for i64 {
+        unsafe fn shift_add_row_avx2(acc: &mut [i64], row: &[i64], j: u32) {
+            for (a, &r) in acc.iter_mut().zip(row) {
+                *a = a.wrapping_add(r << j);
+            }
+        }
+        unsafe fn add_row_avx2(acc: &mut [i64], row: &[i64]) {
+            for (a, &r) in acc.iter_mut().zip(row) {
+                *a = a.wrapping_add(r);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        assert_eq!(Kernel::Scalar.name(), "scalar");
+        assert_eq!(Kernel::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn active_is_consistent_with_detection() {
+        // without a force guard, active() never invents AVX2 on a CPU
+        // that lacks it (the env var may legitimately pin scalar)
+        let k = active();
+        if k == Kernel::Avx2 {
+            assert!(avx2_available());
+        }
+        assert!(!describe().is_empty());
+    }
+
+    #[test]
+    fn force_guard_nests_and_restores() {
+        let outer = active();
+        {
+            let _g1 = force(Kernel::Scalar);
+            assert_eq!(active(), Kernel::Scalar);
+            {
+                let _g2 = force(Kernel::Avx2);
+                // either avx2 (supported) or the documented degrade
+                let inner = active();
+                assert_eq!(
+                    inner,
+                    if avx2_available() { Kernel::Avx2 } else { Kernel::Scalar }
+                );
+                assert!(describe().ends_with("(forced)"));
+            }
+            assert_eq!(active(), Kernel::Scalar);
+        }
+        assert_eq!(active(), outer);
+    }
+
+    #[test]
+    fn lane_primitives_match_scalar_reference() {
+        if !avx2_available() {
+            eprintln!("skipping lane primitive test: no AVX2 on this CPU");
+            return;
+        }
+        // odd lengths exercise the scalar tails; extreme values
+        // exercise wrapping behavior
+        let row32: Vec<i32> = (0..11)
+            .map(|i| [i32::MIN, -3, 0, 7, i32::MAX][i % 5] ^ (i as i32))
+            .collect();
+        let row64: Vec<i64> = (0..11)
+            .map(|i| [i64::MIN / 2, -9, 0, 13, i64::MAX / 2][i % 5] ^ (i as i64))
+            .collect();
+        for j in [0u32, 1, 7, 31, 63] {
+            let base: Vec<i64> = (0..11).map(|i| (i as i64) * 1_000_003 - 5).collect();
+            let mut want = base.clone();
+            for (a, &r) in want.iter_mut().zip(&row32) {
+                *a = a.wrapping_add((r as i64) << j);
+            }
+            let mut got = base.clone();
+            // SAFETY: avx2_available() checked above
+            unsafe { i32::shift_add_row_avx2(&mut got, &row32, j) };
+            assert_eq!(got, want, "i32 shift_add j={j}");
+
+            let mut want = base.clone();
+            for (a, &r) in want.iter_mut().zip(&row64) {
+                *a = a.wrapping_add(r << j);
+            }
+            let mut got = base.clone();
+            // SAFETY: avx2_available() checked above
+            unsafe { i64::shift_add_row_avx2(&mut got, &row64, j) };
+            assert_eq!(got, want, "i64 shift_add j={j}");
+        }
+        let base: Vec<i64> = (0..11).map(|i| (i as i64) - 4).collect();
+        let mut want = base.clone();
+        for (a, &r) in want.iter_mut().zip(&row32) {
+            *a = a.wrapping_add(r as i64);
+        }
+        let mut got = base.clone();
+        // SAFETY: avx2_available() checked above
+        unsafe { i32::add_row_avx2(&mut got, &row32) };
+        assert_eq!(got, want, "i32 add");
+        let mut want = base.clone();
+        for (a, &r) in want.iter_mut().zip(&row64) {
+            *a = a.wrapping_add(r);
+        }
+        let mut got = base;
+        // SAFETY: avx2_available() checked above
+        unsafe { i64::add_row_avx2(&mut got, &row64) };
+        assert_eq!(got, want, "i64 add");
+    }
+}

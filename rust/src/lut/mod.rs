@@ -20,6 +20,9 @@
 //! * [`cost`]       — the paper's size/op formulas, used by the planner.
 //! * [`arena`]      — contiguous i32/i64 table arenas backing every bank
 //!                    (the batched, table-stationary hot path).
+//! * [`kernel`]     — scalar-vs-AVX2 kernel dispatch for the bank hot
+//!                    loops (runtime feature detection, `TABLENET_KERNEL`
+//!                    override, bit-exact by construction).
 
 pub mod arena;
 pub mod dense;
@@ -29,6 +32,7 @@ pub mod signed;
 pub mod conv;
 pub mod convfloat;
 pub mod cost;
+pub mod kernel;
 pub mod scalar;
 pub mod wire;
 

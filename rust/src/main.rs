@@ -556,6 +556,7 @@ fn serve(args: &Args) -> Result<()> {
         }
     }
     let names: Vec<String> = registry.client().models();
+    println!("eval kernel: {}", tablenet::lut::kernel::describe());
     if net_mode {
         println!(
             "serving {} model(s) {:?} | network mode, {}",
@@ -1249,6 +1250,7 @@ fn inspect(args: &Args) -> Result<()> {
         if info.mapped { "yes (arenas may borrow in place)" } else { "no" }
     );
     println!("  total bytes       : {}", info.total_bytes);
+    println!("  eval kernel       : {}", tablenet::lut::kernel::describe());
     println!(
         "  tables            : {} ({} bits)",
         fmt_bits(info.size_bits),

@@ -227,6 +227,151 @@ fn prop_float_eval_batch_bit_exact_with_per_sample() {
 }
 
 #[test]
+fn prop_kernel_parity_dense_banks() {
+    // forced scalar vs forced avx2 must agree BIT-EXACTLY — outputs AND
+    // per-sample counters — across random partitions, bit-widths, plane
+    // counts and ragged batch sizes (1..=9 straddles the 4-lane width)
+    use tablenet::lut::floatplane::{DenseFloatLut, FloatLutConfig};
+    use tablenet::lut::kernel;
+    if !kernel::avx2_available() {
+        eprintln!("skipping kernel-parity property: host CPU lacks AVX2");
+        return;
+    }
+    forall("kernel-parity-dense", 60, |rng| {
+        let p = 1 + rng.below(8);
+        let q = 2 + rng.below(24);
+        let m = 1 + rng.below(8.min(q));
+        let bits = 1 + rng.below(9) as u32; // crosses the packed-path gate
+        let batch = 1 + rng.below(9);
+        let fmt = FixedFormat::new(bits);
+        let (w, b, _) = rand_affine(rng, p, q);
+        let codes: Vec<u32> = (0..batch * q)
+            .map(|_| rng.below(fmt.levels() as usize) as u32)
+            .collect();
+
+        let plane =
+            DenseBitplaneLut::build(&w, &b, p, q, Partition::contiguous(q, m), fmt)
+                .unwrap();
+        let run = |k: kernel::Kernel| {
+            let _g = kernel::force(k);
+            let mut out = vec![0i64; batch * p];
+            let mut ctrs = vec![Counters::default(); batch];
+            plane.eval_batch(&codes, batch, &mut out, &mut ctrs);
+            (out, ctrs)
+        };
+        let (o_s, c_s) = run(kernel::Kernel::Scalar);
+        let (o_v, c_v) = run(kernel::Kernel::Avx2);
+        assert_eq!(o_s, o_v, "bitplane p={p} q={q} m={m} bits={bits} batch={batch}");
+        assert_eq!(c_s, c_v, "bitplane counters p={p} q={q} m={m} bits={bits}");
+
+        // whole-code bank (small m·bits only: table is 2^(m·bits) rows)
+        if m as u32 * bits < 12 {
+            let whole =
+                DenseWholeLut::build(&w, &b, p, q, Partition::contiguous(q, m), fmt)
+                    .unwrap();
+            let run = |k: kernel::Kernel| {
+                let _g = kernel::force(k);
+                let mut out = vec![0i64; batch * p];
+                let mut ctrs = vec![Counters::default(); batch];
+                whole.eval_batch(&codes, batch, &mut out, &mut ctrs);
+                (out, ctrs)
+            };
+            let (o_s, c_s) = run(kernel::Kernel::Scalar);
+            let (o_v, c_v) = run(kernel::Kernel::Avx2);
+            assert_eq!(o_s, o_v, "whole p={p} q={q} m={m} bits={bits} batch={batch}");
+            assert_eq!(c_s, c_v, "whole counters p={p} q={q} m={m} bits={bits}");
+        }
+
+        // binary16 mantissa-plane bank (m ≤ 2 keeps the 2^(6m)-row
+        // build cheap across many cases; m=3 has a dedicated unit test)
+        let fm = 1 + rng.below(2.min(q));
+        let planes = 1 + rng.below(11) as u32;
+        let flut = DenseFloatLut::build(
+            &w, &b, p, q, Partition::contiguous(q, fm), FloatLutConfig { planes },
+        )
+        .unwrap();
+        let xs: Vec<F16> = (0..batch * q)
+            .map(|_| F16::from_f32(rng.f32() * 8.0))
+            .collect();
+        let run = |k: kernel::Kernel| {
+            let _g = kernel::force(k);
+            let mut out = vec![0i64; batch * p];
+            let mut ctrs = vec![Counters::default(); batch];
+            flut.eval_batch_f16(&xs, batch, &mut out, &mut ctrs);
+            (out, ctrs)
+        };
+        let (o_s, c_s) = run(kernel::Kernel::Scalar);
+        let (o_v, c_v) = run(kernel::Kernel::Avx2);
+        assert_eq!(o_s, o_v, "float p={p} q={q} m={fm} planes={planes} batch={batch}");
+        assert_eq!(c_s, c_v, "float counters p={p} q={q} m={fm} planes={planes}");
+    });
+}
+
+#[test]
+fn prop_kernel_parity_conv_banks() {
+    // same guarantee for the conv banks: forced scalar vs forced avx2,
+    // bit-exact outputs and per-sample counters over random geometries
+    use tablenet::lut::conv::ConvLut;
+    use tablenet::lut::convfloat::ConvFloatLut;
+    use tablenet::lut::kernel;
+    if !kernel::avx2_available() {
+        eprintln!("skipping kernel-parity property: host CPU lacks AVX2");
+        return;
+    }
+    forall("kernel-parity-conv", 24, |rng| {
+        let m = 1 + rng.below(2);
+        let h = m * (1 + rng.below(3));
+        let w = m * (1 + rng.below(3));
+        let cin = 1 + rng.below(3);
+        let cout = 1 + rng.below(3);
+        let r = 1;
+        let bits = 1 + rng.below(3) as u32;
+        let batch = 1 + rng.below(5);
+        let fs = 2 * r + 1;
+        let filter: Vec<f32> = (0..fs * fs * cin * cout)
+            .map(|_| rng.normal() * 0.3)
+            .collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+        let fmt = FixedFormat::new(bits);
+
+        let conv = ConvLut::build(&filter, &bias, h, w, cin, cout, r, m, fmt).unwrap();
+        let codes: Vec<u32> = (0..batch * h * w * cin)
+            .map(|_| rng.below(fmt.levels() as usize) as u32)
+            .collect();
+        let run = |k: kernel::Kernel| {
+            let _g = kernel::force(k);
+            let mut out = vec![0i64; batch * h * w * cout];
+            let mut pad = Vec::new();
+            let mut ctrs = vec![Counters::default(); batch];
+            conv.eval_batch(&codes, batch, &mut out, &mut pad, &mut ctrs);
+            (out, ctrs)
+        };
+        let (o_s, c_s) = run(kernel::Kernel::Scalar);
+        let (o_v, c_v) = run(kernel::Kernel::Avx2);
+        assert_eq!(o_s, o_v, "conv h={h} w={w} cin={cin} cout={cout} m={m} bits={bits}");
+        assert_eq!(c_s, c_v, "conv counters h={h} w={w} m={m} bits={bits}");
+
+        let planes = 1 + rng.below(11) as u32;
+        let cf = ConvFloatLut::build(&filter, &bias, h, w, cin, cout, r, planes).unwrap();
+        let xs: Vec<F16> = (0..batch * h * w * cin)
+            .map(|_| F16::from_f32(rng.f32() * 4.0))
+            .collect();
+        let run = |k: kernel::Kernel| {
+            let _g = kernel::force(k);
+            let mut out = vec![0i64; batch * h * w * cout];
+            let mut pad = Vec::new();
+            let mut ctrs = vec![Counters::default(); batch];
+            cf.eval_batch_f16(&xs, batch, &mut out, &mut pad, &mut ctrs);
+            (out, ctrs)
+        };
+        let (o_s, c_s) = run(kernel::Kernel::Scalar);
+        let (o_v, c_v) = run(kernel::Kernel::Avx2);
+        assert_eq!(o_s, o_v, "convfloat h={h} w={w} cin={cin} planes={planes}");
+        assert_eq!(c_s, c_v, "convfloat counters h={h} w={w} planes={planes}");
+    });
+}
+
+#[test]
 fn prop_engine_infer_batch_matches_per_sample() {
     // whole-pipeline parity: classes, logits and counter TOTALS of
     // infer_batch equal the per-sample infer results, and the batched

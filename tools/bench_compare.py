@@ -15,13 +15,24 @@ threshold (default 15%).
 Metrics under the `net/` prefix (the socket-tier soak) are **tracked,
 not gated**: loopback TCP throughput on shared CI runners is too noisy
 to fail a build on, so their deltas are reported in the table but never
-produce a gate failure (including when they go missing).
+produce a gate failure (including when they go missing). The `kernel/`
+prefix (forced scalar-vs-avx2 A/B cases and the derived speedups from
+the hotpath bench) is likewise tracked-not-gated: the ratio depends on
+the runner's CPU, and a runner without AVX2 legitimately drops the
+avx2 cases entirely.
 
 Usage:
   tools/bench_compare.py BENCH_baseline.json BENCH_hotpath.json BENCH_serve.json
   tools/bench_compare.py --threshold 0.15 baseline.json fresh1.json [fresh2.json ...]
   tools/bench_compare.py --write-baseline BENCH_baseline.json BENCH_hotpath.json BENCH_serve.json
+  tools/bench_compare.py --write-baseline --headroom 0.4 BENCH_baseline.json BENCH_*.json
   tools/bench_compare.py --self-test
+
+`--headroom FRAC` (only with --write-baseline) haircuts every gateable
+metric by FRAC before writing, so a baseline ratcheted from one trusted
+runner still passes on somewhat slower machines while remaining a real
+measured band rather than a made-up floor. Tracked-only metrics are
+written as measured.
 
 Baseline schema (BENCH_baseline.json):
   {
@@ -44,7 +55,7 @@ DEFAULT_THRESHOLD = 0.15
 
 def is_tracked_only(name):
     """Metrics reported for trend visibility but never gated."""
-    return name.startswith("net/")
+    return name.startswith("net/") or name.startswith("kernel/")
 
 
 def extract_metrics(doc):
@@ -54,11 +65,23 @@ def extract_metrics(doc):
     if bench == "engine_hotpath":
         for case in doc.get("cases", []):
             sps = case.get("samples_per_sec")
-            if sps is not None:
-                out[f"hotpath/{case['name']}/samples_per_sec"] = float(sps)
+            if sps is None:
+                continue
+            name = case["name"]
+            if name.startswith("kernel:"):
+                # Forced-kernel A/B cases: CPU-dependent, tracked only.
+                out[f"kernel/{name}/samples_per_sec"] = float(sps)
+            else:
+                out[f"hotpath/{name}/samples_per_sec"] = float(sps)
         rps = doc.get("coordinator_throughput_rps")
         if rps is not None:
             out["hotpath/coordinator_throughput_rps"] = float(rps)
+        for bank, tps in (doc.get("bank_tables_per_sec") or {}).items():
+            if tps is not None:
+                out[f"hotpath/bank/{bank}/tables_per_sec"] = float(tps)
+        for bank, ratio in (doc.get("kernel_speedup") or {}).items():
+            if ratio is not None:
+                out[f"kernel/speedup/{bank}"] = float(ratio)
     elif bench == "serve_throughput":
         total = doc.get("total_rps")
         if total is not None:
@@ -78,6 +101,16 @@ def extract_metrics(doc):
     else:
         raise SystemExit(f"unrecognised bench document: bench={bench!r}")
     return out
+
+
+def apply_headroom(metrics, headroom):
+    """Haircut gateable metrics by `headroom`; tracked-only stay as measured."""
+    if not headroom:
+        return dict(metrics)
+    return {
+        name: value if is_tracked_only(name) else value * (1.0 - headroom)
+        for name, value in metrics.items()
+    }
 
 
 def load_fresh(paths):
@@ -160,8 +193,11 @@ def self_test():
         "cases": [
             {"name": "a", "samples_per_sec": 100.0},
             {"name": "b", "samples_per_sec": 50.0},
+            {"name": "kernel:avx2 a", "samples_per_sec": 300.0},
         ],
         "coordinator_throughput_rps": 1000.0,
+        "bank_tables_per_sec": {"bitplane_m14": 2.0e6},
+        "kernel_speedup": {"bitplane": 3.0, "float": None},
     }
     doc_serve = {
         "bench": "serve_throughput",
@@ -182,18 +218,37 @@ def self_test():
     assert fresh["hotpath/a/samples_per_sec"] == 100.0
     assert fresh["serve/total_rps"] == 500.0
     assert fresh["net/c2/rps"] == 400.0
-    assert len(fresh) == 8, fresh
+    # kernel: cases route to the tracked kernel/ prefix, not hotpath/
+    assert fresh["kernel/kernel:avx2 a/samples_per_sec"] == 300.0
+    assert "hotpath/kernel:avx2 a/samples_per_sec" not in fresh
+    # per-bank table throughput is gated; null speedups are dropped
+    assert fresh["hotpath/bank/bitplane_m14/tables_per_sec"] == 2.0e6
+    assert fresh["kernel/speedup/bitplane"] == 3.0
+    assert "kernel/speedup/float" not in fresh
+    assert len(fresh) == 11, fresh
 
-    # net/ metrics are tracked, never gated: a 90% collapse and an
-    # outright disappearance both pass
+    # net/ and kernel/ metrics are tracked, never gated: a 90% collapse
+    # and an outright disappearance both pass
     base = dict(fresh)
     base["net/total_rps"] = 9000.0
     base["net/gone/rps"] = 123.0
+    base["kernel/speedup/bitplane"] = 30.0
+    base["kernel/kernel:gone/samples_per_sec"] = 1.0
     rows, reg = compare(base, fresh, 0.15)
     assert not reg, reg
     statuses = {r[0]: r[4] for r in rows}
     assert statuses["net/total_rps"] == "TRACKED", statuses
     assert statuses["net/gone/rps"] == "TRACKED", statuses
+    assert statuses["kernel/speedup/bitplane"] == "TRACKED", statuses
+    assert statuses["kernel/kernel:gone/samples_per_sec"] == "TRACKED", statuses
+
+    # headroom haircuts gateable metrics only
+    cut = apply_headroom(fresh, 0.4)
+    assert cut["hotpath/a/samples_per_sec"] == 60.0, cut
+    assert cut["hotpath/bank/bitplane_m14/tables_per_sec"] == 1.2e6, cut
+    assert cut["kernel/speedup/bitplane"] == 3.0, cut
+    assert cut["net/total_rps"] == 900.0, cut
+    assert apply_headroom(fresh, 0.0) == fresh
 
     # within threshold: pass (13% down on one metric)
     base = dict(fresh)
@@ -230,6 +285,9 @@ def main():
                     help="max allowed fractional regression (default 0.15)")
     ap.add_argument("--write-baseline", action="store_true",
                     help="write BASELINE from the fresh files instead of comparing")
+    ap.add_argument("--headroom", type=float, default=0.0, metavar="FRAC",
+                    help="with --write-baseline: haircut gateable metrics by "
+                         "FRAC (0..1) so the baseline tolerates slower runners")
     ap.add_argument("--out", default="BENCH_diff.md", help="markdown diff output path")
     ap.add_argument("--self-test", action="store_true")
     args = ap.parse_args()
@@ -240,16 +298,22 @@ def main():
     if not args.baseline or not args.fresh:
         ap.error("need a baseline and at least one fresh BENCH_*.json")
 
+    if args.headroom and not args.write_baseline:
+        ap.error("--headroom only makes sense with --write-baseline")
+    if not 0.0 <= args.headroom < 1.0:
+        ap.error("--headroom must be in [0, 1)")
+
     fresh = load_fresh(args.fresh)
     if args.write_baseline:
-        doc = {
-            "note": "generated by tools/bench_compare.py --write-baseline",
-            "metrics": fresh,
-        }
+        metrics = apply_headroom(fresh, args.headroom)
+        note = "generated by tools/bench_compare.py --write-baseline"
+        if args.headroom:
+            note += f" --headroom {args.headroom:g}"
+        doc = {"note": note, "metrics": metrics}
         with open(args.baseline, "w", encoding="utf-8") as f:
             json.dump(doc, f, indent=2, sort_keys=True)
             f.write("\n")
-        print(f"wrote {args.baseline} ({len(fresh)} metrics)")
+        print(f"wrote {args.baseline} ({len(metrics)} metrics)")
         return 0
 
     with open(args.baseline, encoding="utf-8") as f:
