@@ -27,6 +27,7 @@ use tablenet::lut::dense::DenseWholeLut;
 use tablenet::lut::floatplane::{DenseFloatLut, FloatLutConfig};
 use tablenet::lut::kernel;
 use tablenet::lut::{Partition, ACC_FRAC};
+use tablenet::nn::Model;
 use tablenet::quant::f16::F16;
 use tablenet::quant::FixedFormat;
 use tablenet::tensor::ops::matmul;
@@ -308,6 +309,34 @@ fn main() {
         drop(guard);
     }
 
+    // ---- stage folding A/B: fused epilogues vs naive lowering ---------
+    // (fusion:* cases are tracked-not-gated by tools/bench_compare.py:
+    // the fused-plan hotpath metric lands as informative first and gets
+    // ratcheted into the gate once a baseline exists)
+    Bench::header("stage folding A/B: fused vs unfused MLP pipeline (batch=32)");
+    let mlp = Model::mlp(vec![
+        (Tensor::randn(&[32, 784], 0.05, &mut rng), Tensor::zeros(&[32])),
+        (Tensor::randn(&[16, 32], 0.2, &mut rng), Tensor::zeros(&[16])),
+        (Tensor::randn(&[10, 16], 0.3, &mut rng), Tensor::zeros(&[10])),
+    ]);
+    let fused_mlp = Compiler::new(&mlp).plan(&EnginePlan::mlp_default()).build().unwrap();
+    let unfused_mlp = Compiler::new(&mlp)
+        .plan(&EnginePlan::mlp_default())
+        .fuse(false)
+        .build()
+        .unwrap();
+    let mlp_imgs: Vec<f32> = (0..32 * q).map(|_| rng.f32()).collect();
+    let mut fused_scratch = Scratch::new();
+    track("fusion:fused mlp infer_batch (batch=32)", 32, &mut case_samples);
+    bench.run("fusion:fused mlp infer_batch (batch=32)", || {
+        fused_mlp.infer_batch(&mlp_imgs, 32, &mut fused_scratch).classes[0]
+    });
+    let mut unfused_scratch = Scratch::new();
+    track("fusion:unfused mlp infer_batch (batch=32)", 32, &mut case_samples);
+    bench.run("fusion:unfused mlp infer_batch (batch=32)", || {
+        unfused_mlp.infer_batch(&mlp_imgs, 32, &mut unfused_scratch).classes[0]
+    });
+
     Bench::header("layer-boundary encode");
     let accs: Vec<i64> = (0..1024).map(|_| (rng.next_u64() >> 20) as i64).collect();
     track("acc -> f16 encode x1024", 1, &mut case_samples);
@@ -449,6 +478,25 @@ fn main() {
         println!("  {bank:<14} {:.0} tables/sec", rate);
     }
 
+    // fused-vs-unfused pipeline speedup (fewer ActBuf sweeps; the op
+    // stream itself is identical, so this measures the deleted stage
+    // boundaries)
+    let fusion_speedup = match (
+        find("fusion:fused mlp infer_batch (batch=32)"),
+        find("fusion:unfused mlp infer_batch (batch=32)"),
+    ) {
+        (Some(f), Some(u)) => {
+            let s = samples_per_sec(f, 32) / samples_per_sec(u, 32).max(1e-9);
+            println!(
+                "fusion speedup (fused {} stages vs unfused {}): {s:.2}x samples/sec",
+                fused_mlp.num_stages(),
+                unfused_mlp.num_stages()
+            );
+            Some(s)
+        }
+        _ => None,
+    };
+
     let kernel_pair = |case: &str| -> Option<f64> {
         let s = find(&format!("kernel:scalar {case}"))?;
         let v = find(&format!("kernel:avx2 {case}"))?;
@@ -514,6 +562,16 @@ fn main() {
         ));
     }
     json.push_str("},\n");
+    json.push_str(&format!(
+        "  \"fusion\": {{\"speedup\": {}, \"fused_stages\": {}, \"unfused_stages\": {}, \
+         \"stages_folded\": {}}},\n",
+        fusion_speedup
+            .map(|s| format!("{s:.2}"))
+            .unwrap_or_else(|| "null".to_string()),
+        fused_mlp.num_stages(),
+        unfused_mlp.num_stages(),
+        unfused_mlp.num_stages() - fused_mlp.num_stages(),
+    ));
     json.push_str(&format!(
         "  \"speedup_batch32_vs_batch1_path\": {}\n",
         speedup.map(|s| format!("{s:.2}")).unwrap_or_else(|| "null".to_string())

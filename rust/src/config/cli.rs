@@ -62,6 +62,7 @@ impl Args {
         "help",
         "version",
         "no-ref",
+        "no-fuse",
         "csv",
         "quiet",
         "drain",

@@ -18,6 +18,33 @@
 //! ([`super::router::FleetClient`]); clients resolve names against the
 //! live table, so registrations, swaps and retirements are visible
 //! without re-handing out clients.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use tablenet::config::ServeConfig;
+//! use tablenet::coordinator::registry::ModelRegistry;
+//! use tablenet::coordinator::{Backend, InferOutput};
+//! use tablenet::engine::counters::Counters;
+//!
+//! struct Echo(usize);
+//! impl Backend for Echo {
+//!     fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+//!         images
+//!             .iter()
+//!             .map(|_| InferOutput { class: self.0, logits: vec![1.0], counters: Counters::default() })
+//!             .collect()
+//!     }
+//! }
+//!
+//! let registry = ModelRegistry::new();
+//! registry.register("echo", Arc::new(Echo(0)), &ServeConfig::default()).unwrap();
+//! let client = registry.client();
+//! assert_eq!(client.infer("echo", vec![0.0]).unwrap().version, 1);
+//! registry.swap("echo", Arc::new(Echo(1))).unwrap();   // zero-downtime bump
+//! let served = client.infer("echo", vec![0.0]).unwrap();
+//! assert_eq!((served.version, served.class), (2, 1));
+//! registry.shutdown().assert_multiplier_less();
+//! ```
 
 pub mod watcher;
 

@@ -10,6 +10,40 @@
 //! model keeps serving without the client noticing (beyond the bumped
 //! `Response::version`). Each model's pipeline batches independently,
 //! so one saturated tenant cannot stall another.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use tablenet::config::ServeConfig;
+//! use tablenet::coordinator::registry::ModelRegistry;
+//! use tablenet::coordinator::router::RouteError;
+//! use tablenet::coordinator::{Backend, InferOutput};
+//! use tablenet::engine::counters::Counters;
+//!
+//! struct Echo;
+//! impl Backend for Echo {
+//!     fn infer_batch(&self, images: &[Vec<f32>]) -> Vec<InferOutput> {
+//!         images
+//!             .iter()
+//!             .map(|row| InferOutput {
+//!                 class: 0,
+//!                 logits: vec![row.len() as f32],
+//!                 counters: Counters::default(),
+//!             })
+//!             .collect()
+//!     }
+//! }
+//!
+//! let registry = ModelRegistry::new();
+//! let client = registry.client();              // handed out BEFORE any model
+//! assert!(matches!(
+//!     client.infer("echo", vec![0.0]),
+//!     Err(RouteError::UnknownModel(_))
+//! ));
+//! registry.register("echo", Arc::new(Echo), &ServeConfig::default()).unwrap();
+//! let r = client.infer("echo", vec![0.0; 3]).unwrap();   // routable now
+//! assert_eq!(r.logits, vec![3.0]);
+//! registry.shutdown().assert_multiplier_less();
+//! ```
 
 use super::registry::RegistryShared;
 use super::{Client, Pending, Response, SubmitError};

@@ -14,6 +14,21 @@
 //! buffers (e.g. gather from `codes` while accumulating into `acc`).
 //! The `repr`/`batch` tags stay private so retagging goes through
 //! [`ActBuf::set_repr`] / [`ActBuf::load_f32`].
+//!
+//! ```
+//! use tablenet::engine::act::{ActBuf, Repr};
+//!
+//! let mut act = ActBuf::new();
+//! act.load_f32(&[0.5, -1.0, 2.0, 0.0], 2);   // 2 samples × 2 features
+//! assert_eq!(act.batch(), 2);
+//! assert_eq!(act.repr(), Repr::F32);
+//! assert_eq!(act.f32s.len(), 4);
+//! // a quantizing stage would now write `codes` and retag:
+//! act.codes.clear();
+//! act.codes.extend([3u32, 0, 7, 1]);
+//! act.set_repr(Repr::Codes(3));
+//! assert_eq!(act.repr(), Repr::Codes(3));
+//! ```
 
 use crate::quant::f16::F16;
 use crate::quant::FixedFormat;

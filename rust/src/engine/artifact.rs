@@ -355,23 +355,16 @@ fn validate_pipeline(stages: &[Box<dyn Stage>]) -> Result<()> {
     }
     // mirror the runtime contract (inference argmaxes integer
     // accumulators): walking back over the Acc-preserving stages
-    // (ReLU, max-pool), the pipeline must reach an affine bank. This
-    // accepts exactly the pipelines `infer` can finish.
+    // (ReLU, max-pool), the pipeline must reach an affine bank whose
+    // fused epilogue (if any) still ends on accumulators. This accepts
+    // exactly the pipelines `infer` can finish.
     let tail_bank = stages
         .iter()
         .rev()
-        .map(|s| s.kind())
-        .find(|k| !matches!(k, StageKind::ReluInt | StageKind::MaxPool2Int));
-    let ends_in_acc = matches!(
-        tail_bank,
-        Some(
-            StageKind::DenseWhole
-                | StageKind::DenseBitplane
-                | StageKind::DenseFloat
-                | StageKind::ConvFixed
-                | StageKind::ConvFloat
-        )
-    );
+        .find(|s| !matches!(s.kind(), StageKind::ReluInt | StageKind::MaxPool2Int));
+    let ends_in_acc = tail_bank.is_some_and(|s| {
+        s.kind().is_bank() && s.fused_chain().is_none_or(|c| c.ends_in_acc())
+    });
     if !ends_in_acc {
         bail!(
             "artifact pipeline ends with {} — inference must end on integer accumulators",
@@ -500,6 +493,24 @@ pub struct StageInfo {
     /// Decoded table residency: bytes / narrowing / borrowed-vs-owned
     /// (`None` for table-free stages).
     pub storage: Option<ArenaResidency>,
+    /// Kinds of the elementwise chain fused into this bank by the
+    /// stage-folding optimizer (empty for unfused stages). `inspect`
+    /// renders it as a `+`-joined suffix, e.g.
+    /// `dense-whole+relu-int+to-fixed`.
+    pub fused: Vec<StageKind>,
+}
+
+impl StageInfo {
+    /// Display name of the stage including its fused chain
+    /// (`dense-float+relu-int+to-half`; bare kind name when unfused).
+    pub fn display_name(&self) -> String {
+        let mut s = self.kind.name().to_string();
+        for k in &self.fused {
+            s.push('+');
+            s.push_str(k.name());
+        }
+        s
+    }
 }
 
 fn inspect_container(bytes: &[u8], ctx_backing: Option<&Arc<ArtifactBytes>>) -> Result<ArtifactInfo> {
@@ -524,6 +535,7 @@ fn inspect_container(bytes: &[u8], ctx_backing: Option<&Arc<ArtifactBytes>>) -> 
             offset: rec.offset,
             checksum: rec.checksum,
             storage: stage.storage(),
+            fused: stage.fused_chain().map(|c| c.kinds()).unwrap_or_default(),
         });
     }
     Ok(ArtifactInfo {

@@ -4,13 +4,34 @@
 //! [`LutModel::load`](crate::engine::LutModel::load), which revives a
 //! previously compiled `.ltm` artifact without touching weights.
 //!
-//! ```no_run
-//! # use tablenet::engine::{Compiler, plan::EnginePlan};
-//! # fn demo(model: &tablenet::nn::Model) -> Result<(), tablenet::lut::LutError> {
-//! let lut = Compiler::new(model)
-//!     .plan(&EnginePlan::default_for(model.arch))
-//!     .build()?;
-//! # Ok(()) }
+//! Compilation is **optimize-then-emit**: lowering first produces the
+//! naive 1:1 stage list (one authored layer → one or two stages), then
+//! the optimizer passes in [`crate::engine::optimize`] rewrite it —
+//! today, stage folding moves each bank's trailing elementwise chain
+//! (`relu`/`tofixed`/`tohalf`/`sigmoid`) into the bank as a fused
+//! epilogue, deleting whole stages from the plan. Fusion is on by
+//! default and bit-exact with the unfused plan; disable it per build
+//! with [`Compiler::fuse`] (the CLI's `compile --no-fuse`).
+//!
+//! ```
+//! use tablenet::engine::{plan::EnginePlan, Compiler};
+//! use tablenet::nn::Model;
+//! use tablenet::tensor::Tensor;
+//! use tablenet::util::Rng;
+//!
+//! let mut rng = Rng::new(7);
+//! let model = Model::mlp(vec![
+//!     (Tensor::randn(&[12, 16], 0.3, &mut rng), Tensor::zeros(&[12])),
+//!     (Tensor::randn(&[8, 12], 0.3, &mut rng), Tensor::zeros(&[8])),
+//!     (Tensor::randn(&[4, 8], 0.3, &mut rng), Tensor::zeros(&[4])),
+//! ]);
+//! let plan = EnginePlan::mlp_default();
+//! let fused = Compiler::new(&model).plan(&plan).build().unwrap();
+//! let naive = Compiler::new(&model).plan(&plan).fuse(false).build().unwrap();
+//! // same op stream, strictly fewer stages
+//! assert!(fused.num_stages() < naive.num_stages());
+//! let x = vec![0.5; 16];
+//! assert_eq!(fused.infer(&x).logits, naive.infer(&x).logits);
 //! ```
 
 use crate::engine::plan::{AffineMode, EnginePlan};
@@ -32,18 +53,29 @@ use crate::quant::FixedFormat;
 pub struct Compiler<'m> {
     model: &'m Model,
     plan: Option<EnginePlan>,
+    fuse: bool,
 }
 
 impl<'m> Compiler<'m> {
     /// Start compiling `model`. Without an explicit [`Compiler::plan`],
-    /// the architecture's default plan is used.
+    /// the architecture's default plan is used. Stage folding is on.
     pub fn new(model: &'m Model) -> Compiler<'m> {
-        Compiler { model, plan: None }
+        Compiler { model, plan: None, fuse: true }
     }
 
     /// Use `plan` for the affine layers.
     pub fn plan(mut self, plan: &EnginePlan) -> Compiler<'m> {
         self.plan = Some(plan.clone());
+        self
+    }
+
+    /// Enable/disable the stage-folding optimizer pass
+    /// ([`crate::engine::optimize::fold_elementwise`]). Default on;
+    /// `false` emits the naive 1:1 lowering (the CLI escape hatch
+    /// `compile --no-fuse`, and the reference side of the
+    /// fused-vs-unfused bit-exactness tests).
+    pub fn fuse(mut self, fuse: bool) -> Compiler<'m> {
+        self.fuse = fuse;
         self
     }
 
@@ -210,6 +242,11 @@ impl<'m> Compiler<'m> {
                 }
             }
         }
+        // optimize-then-emit: rewrite the lowered pipeline before
+        // sealing it (stage folding today; dedup/pruning passes later)
+        if self.fuse {
+            stages = crate::engine::optimize::fold_elementwise(stages).0;
+        }
         Ok(LutModel::from_parts(stages, plan))
     }
 }
@@ -236,16 +273,21 @@ mod tests {
         assert_eq!(lut.stages()[0].kind(), StageKind::DenseBitplane);
     }
 
-    #[test]
-    fn mlp_pipeline_emits_boundary_stages() {
+    fn three_layer_mlp() -> Model {
         let mut rng = Rng::new(4);
-        let model = Model::mlp(vec![
+        Model::mlp(vec![
             (Tensor::randn(&[32, 784], 0.05, &mut rng), Tensor::zeros(&[32])),
             (Tensor::randn(&[16, 32], 0.2, &mut rng), Tensor::zeros(&[16])),
             (Tensor::randn(&[10, 16], 0.3, &mut rng), Tensor::zeros(&[10])),
-        ]);
+        ])
+    }
+
+    #[test]
+    fn unfused_mlp_pipeline_emits_boundary_stages() {
+        let model = three_layer_mlp();
         let lut = Compiler::new(&model)
             .plan(&EnginePlan::mlp_default())
+            .fuse(false)
             .build()
             .unwrap();
         let kinds: Vec<StageKind> = lut.stages().iter().map(|s| s.kind()).collect();
@@ -261,5 +303,35 @@ mod tests {
                 StageKind::DenseFloat,
             ]
         );
+        assert!(lut.stages().iter().all(|s| s.fused_chain().is_none()));
+    }
+
+    #[test]
+    fn default_build_folds_elementwise_chains_into_banks() {
+        let model = three_layer_mlp();
+        let lut = Compiler::new(&model)
+            .plan(&EnginePlan::mlp_default())
+            .build()
+            .unwrap();
+        // [dense+relu+tohalf, dense+relu+tohalf, dense] — strictly
+        // fewer stages than the 7-stage naive lowering
+        let kinds: Vec<StageKind> = lut.stages().iter().map(|s| s.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec![StageKind::DenseFloat, StageKind::DenseFloat, StageKind::DenseFloat]
+        );
+        for bank in &lut.stages()[..2] {
+            let chain = bank.fused_chain().expect("interior banks fused");
+            assert_eq!(chain.kinds(), vec![StageKind::ReluInt, StageKind::ToHalf]);
+        }
+        assert!(lut.stages()[2].fused_chain().is_none());
+        // the fused plan accounts the same table storage
+        let unfused = Compiler::new(&model)
+            .plan(&EnginePlan::mlp_default())
+            .fuse(false)
+            .build()
+            .unwrap();
+        assert_eq!(lut.size_bits(), unfused.size_bits());
+        assert!(lut.num_stages() < unfused.num_stages());
     }
 }

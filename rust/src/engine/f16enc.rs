@@ -103,7 +103,10 @@ pub fn acc_to_f16_signed(acc: i64, frac_scale: u32, ctr: &mut Counters) -> F16 {
     if acc >= 0 {
         acc_to_f16(acc, frac_scale, ctr)
     } else {
-        let mag = acc_to_f16(-acc, frac_scale, ctr);
+        // saturating_neg: i64::MIN has no positive counterpart; its
+        // magnitude saturates (to f16 max anyway) instead of
+        // overflowing the negation
+        let mag = acc_to_f16(acc.saturating_neg(), frac_scale, ctr);
         F16(mag.0 | 0x8000)
     }
 }

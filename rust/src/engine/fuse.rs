@@ -1,0 +1,337 @@
+//! Fused elementwise epilogues: the chain of `relu` / `tofixed` /
+//! `tohalf` / `sigmoid` stages a LUT bank absorbs at compile time.
+//!
+//! The paper's core observation is that a table lookup computes *any*
+//! function of its input chunk at zero extra cost, so running the
+//! activation/boundary ops as separate full-width passes over the
+//! activation buffer wastes memory sweeps. Rewriting the bank's table
+//! entries literally, however, is only exact for banks with a single
+//! lookup per output: every bank here computes `acc = Σ_chunks
+//! T_c[idx_c]` (plus shifted bitplane / mantissa-plane sums), and a
+//! nonlinear function of the *sum* does not distribute over the
+//! summands — and the single-lookup configuration blows past the table
+//! materialisation cap at real layer widths. So the optimizer fuses the
+//! honest way: the absorbed chain's stage objects move *into* the bank
+//! and run as an epilogue over the bank's just-written accumulator
+//! rows, while still hot, inside one [`Stage::eval_batch`] call. The
+//! executed op stream is identical to the unfused plan — bit-exactness
+//! and exact per-sample counters hold by construction — but the plan
+//! has strictly fewer stages, the artifact has fewer index records, and
+//! `inspect` reports the fused pipeline honestly
+//! (e.g. `dense-whole+relu-int+to-fixed`).
+//!
+//! Legality is a tiny representation state machine ([`elem_transition`])
+//! starting at the bank's output representation (integer accumulators):
+//! a chain element is fusible only when the standalone stage would have
+//! accepted that representation. Chains never cross a bank or a
+//! `maxpool` (it reshapes the activation; fusing across it is a ROADMAP
+//! follow-up), and a chain on the *final* bank is trimmed to the
+//! longest prefix that still ends on accumulators, because inference
+//! argmaxes integers ([`crate::engine::LutModel`]).
+
+use crate::engine::act::ActBuf;
+use crate::engine::counters::Counters;
+use crate::engine::scratch::Scratch;
+use crate::engine::stages::{read_stage, Stage, StageKind};
+use crate::lut::wire::{self, WireCtx};
+
+/// Upper bound on fused-chain length accepted from an artifact (a real
+/// compiled chain is ≤ 3 elements; this is a decode sanity cap).
+pub const MAX_CHAIN: usize = 16;
+
+/// Activation representation flowing through a fused chain (the subset
+/// of [`crate::engine::act::Repr`] reachable after a bank).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChainState {
+    /// Integer accumulators (every bank's output).
+    Acc,
+    /// Fixed-point codes (after `tofixed`).
+    Codes,
+    /// Binary16 codes (after `tohalf` / `sigmoid`).
+    Half,
+}
+
+/// Representation transition of fusing `kind` onto a chain in `state`,
+/// or `None` when the standalone stage would not accept that
+/// representation (then the stage stays standalone and the chain ends).
+pub fn elem_transition(state: ChainState, kind: StageKind) -> Option<ChainState> {
+    use ChainState::*;
+    match kind {
+        // relu clamps accumulators; on codes/binary16 it is the same
+        // pass-through it is standalone
+        StageKind::ReluInt => Some(state),
+        // boundary encodes consume accumulators
+        StageKind::ToFixed => (state == Acc).then_some(Codes),
+        StageKind::ToHalf => match state {
+            Acc | Half => Some(Half),
+            Codes => Some(Codes), // standalone pass-through
+        },
+        // the scalar LUT reads binary16 (or signed-encodes accumulators
+        // itself); it panics on codes — not fusible there
+        StageKind::SigmoidLut => match state {
+            Acc | Half => Some(Half),
+            Codes => None,
+        },
+        // banks / maxpool are never chain elements
+        _ => None,
+    }
+}
+
+/// An elementwise stage chain absorbed into a LUT bank. The chain owns
+/// the very stage objects the compiler originally emitted; applying it
+/// replays their `eval_batch` calls in order, so a fused plan executes
+/// the exact op stream of the unfused plan.
+pub struct FusedChain {
+    stages: Vec<Box<dyn Stage>>,
+    out_state: ChainState,
+}
+
+impl FusedChain {
+    /// Build a chain from stages, validating the representation state
+    /// machine from `Acc`. Returns the stages back unchanged when the
+    /// chain is empty or not fusible.
+    pub fn from_stages(stages: Vec<Box<dyn Stage>>) -> Result<FusedChain, Vec<Box<dyn Stage>>> {
+        if stages.is_empty() || stages.len() > MAX_CHAIN {
+            return Err(stages);
+        }
+        let mut state = ChainState::Acc;
+        for s in &stages {
+            match elem_transition(state, s.kind()) {
+                Some(next) => state = next,
+                None => return Err(stages),
+            }
+        }
+        Ok(FusedChain { stages, out_state: state })
+    }
+
+    /// Give the stages back (un-fusing; used when a bank refuses a
+    /// chain so the optimizer can re-emit them standalone).
+    pub fn into_stages(self) -> Vec<Box<dyn Stage>> {
+        self.stages
+    }
+
+    /// Chain length in stages.
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Never true for a constructed chain ([`FusedChain::from_stages`]
+    /// rejects empty chains); here for the `len`/`is_empty` pairing.
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Kinds of the absorbed stages, in execution order.
+    pub fn kinds(&self) -> Vec<StageKind> {
+        self.stages.iter().map(|s| s.kind()).collect()
+    }
+
+    /// Representation the chain leaves behind.
+    pub fn out_state(&self) -> ChainState {
+        self.out_state
+    }
+
+    /// Whether the chain output is still integer accumulators (required
+    /// of the final pipeline stage).
+    pub fn ends_in_acc(&self) -> bool {
+        self.out_state == ChainState::Acc
+    }
+
+    /// Diagnostics suffix, e.g. `+relu-int+to-half` — `inspect` and the
+    /// compile banner append it to the bank's kind name.
+    pub fn display_suffix(&self) -> String {
+        let mut s = String::new();
+        for st in &self.stages {
+            s.push('+');
+            s.push_str(st.kind().name());
+        }
+        s
+    }
+
+    /// Run the absorbed chain over the bank's just-written output.
+    /// Identical calls, identical order, identical buffers as the
+    /// standalone stages — bit-exact by construction.
+    pub fn apply(&self, act: &mut ActBuf, scratch: &mut Scratch, counters: &mut [Counters]) {
+        for stage in &self.stages {
+            stage.eval_batch(act, scratch, counters);
+        }
+    }
+
+    /// Table storage the chain contributes (the 128 KiB scalar LUT when
+    /// a sigmoid is fused; the boundary/relu stages are table-free).
+    pub fn size_bits(&self, r_o: u32) -> u64 {
+        self.stages.iter().map(|s| s.size_bits(r_o)).sum()
+    }
+
+    /// Serialize the chain at the end of the owning bank's payload:
+    /// `u16 count`, then per element `u16 kind tag | u64 payload len |
+    /// payload bytes`. Unfused banks write nothing, so their artifact
+    /// bytes are identical to pre-fusion builds (back-compat is "the
+    /// payload reader is empty").
+    pub fn write_wire(&self, out: &mut Vec<u8>) {
+        wire::put_u16(out, self.stages.len() as u16);
+        let mut payload = Vec::new();
+        for stage in &self.stages {
+            payload.clear();
+            // chain elements are table-free or heap-decoded (sigmoid) —
+            // the v2 arena alignment machinery does not apply to them
+            stage.write_payload(&mut payload, false);
+            wire::put_u16(out, stage.kind().tag());
+            wire::put_u64(out, payload.len() as u64);
+            out.extend_from_slice(&payload);
+        }
+    }
+
+    /// Decode an optional chain from the tail of a bank payload: `None`
+    /// when the reader is already empty (an unfused / pre-fusion
+    /// artifact). Enforces the same state machine as the optimizer, so
+    /// a crafted artifact cannot smuggle an illegal or nested chain.
+    pub fn read_wire_opt(r: &mut wire::Reader) -> wire::Result<Option<FusedChain>> {
+        if r.is_empty() {
+            return Ok(None);
+        }
+        let n = r.u16()? as usize;
+        if n == 0 || n > MAX_CHAIN {
+            return wire::err(format!("fused chain: bad element count {n}"));
+        }
+        let ctx = WireCtx::v1();
+        let mut stages: Vec<Box<dyn Stage>> = Vec::with_capacity(n);
+        let mut state = ChainState::Acc;
+        for i in 0..n {
+            let tag = r.u16()?;
+            let kind = StageKind::from_tag(tag)
+                .ok_or_else(|| wire::WireError(format!("fused chain: unknown kind tag {tag}")))?;
+            state = elem_transition(state, kind).ok_or_else(|| {
+                wire::WireError(format!(
+                    "fused chain: {} is not fusible at element {i}",
+                    kind.name()
+                ))
+            })?;
+            let len = r.u64()? as usize;
+            let payload = r.take(len)?;
+            let mut pr = wire::Reader::new(payload);
+            let stage = read_stage(kind, &mut pr, &ctx)?;
+            if !pr.is_empty() {
+                return wire::err(format!(
+                    "fused chain element {i} ({}) has {} trailing bytes",
+                    kind.name(),
+                    pr.remaining()
+                ));
+            }
+            stages.push(stage);
+        }
+        Ok(Some(FusedChain { stages, out_state: state }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::act::Repr;
+    use crate::engine::stages::{ReluIntStage, SigmoidLutStage, ToFixedStage, ToHalfStage};
+    use crate::lut::scalar::ScalarLut;
+
+    fn chain(stages: Vec<Box<dyn Stage>>) -> FusedChain {
+        FusedChain::from_stages(stages).unwrap_or_else(|_| panic!("chain rejected"))
+    }
+
+    #[test]
+    fn transitions_follow_stage_contracts() {
+        use ChainState::*;
+        assert_eq!(elem_transition(Acc, StageKind::ReluInt), Some(Acc));
+        assert_eq!(elem_transition(Acc, StageKind::ToFixed), Some(Codes));
+        assert_eq!(elem_transition(Acc, StageKind::ToHalf), Some(Half));
+        assert_eq!(elem_transition(Acc, StageKind::SigmoidLut), Some(Half));
+        assert_eq!(elem_transition(Half, StageKind::SigmoidLut), Some(Half));
+        assert_eq!(elem_transition(Codes, StageKind::ToFixed), None);
+        assert_eq!(elem_transition(Codes, StageKind::SigmoidLut), None);
+        assert_eq!(elem_transition(Acc, StageKind::DenseWhole), None);
+        assert_eq!(elem_transition(Acc, StageKind::MaxPool2Int), None);
+    }
+
+    #[test]
+    fn apply_matches_standalone_stages() {
+        let fc = chain(vec![
+            Box::new(ReluIntStage),
+            Box::new(ToFixedStage { bits: 3, range_exp: 0 }),
+        ]);
+        assert!(!fc.ends_in_acc());
+        assert_eq!(fc.kinds(), vec![StageKind::ReluInt, StageKind::ToFixed]);
+        assert_eq!(fc.display_suffix(), "+relu-int+to-fixed");
+
+        let run_fused = |accs: &[i64]| {
+            let mut act = ActBuf::new();
+            act.load_f32(&vec![0.0; accs.len()], 1);
+            act.acc.clear();
+            act.acc.extend_from_slice(accs);
+            act.set_repr(Repr::Acc(32));
+            let mut scratch = Scratch::new();
+            let mut ctrs = vec![Counters::default()];
+            fc.apply(&mut act, &mut scratch, &mut ctrs);
+            (act.codes.clone(), ctrs[0])
+        };
+        let run_standalone = |accs: &[i64]| {
+            let mut act = ActBuf::new();
+            act.load_f32(&vec![0.0; accs.len()], 1);
+            act.acc.clear();
+            act.acc.extend_from_slice(accs);
+            act.set_repr(Repr::Acc(32));
+            let mut scratch = Scratch::new();
+            let mut ctrs = vec![Counters::default()];
+            ReluIntStage.eval_batch(&mut act, &mut scratch, &mut ctrs);
+            ToFixedStage { bits: 3, range_exp: 0 }.eval_batch(&mut act, &mut scratch, &mut ctrs);
+            (act.codes.clone(), ctrs[0])
+        };
+        let accs = [1i64 << 31, -5, 0, i64::MAX / 2];
+        assert_eq!(run_fused(&accs), run_standalone(&accs));
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_chain() {
+        let fc = chain(vec![
+            Box::new(ReluIntStage),
+            Box::new(ToHalfStage),
+            Box::new(SigmoidLutStage::new(ScalarLut::sigmoid())),
+        ]);
+        let mut buf = Vec::new();
+        fc.write_wire(&mut buf);
+        let back = FusedChain::read_wire_opt(&mut wire::Reader::new(&buf))
+            .unwrap()
+            .unwrap();
+        assert_eq!(back.kinds(), fc.kinds());
+        assert_eq!(back.out_state(), fc.out_state());
+        // empty reader = no chain (pre-fusion artifacts)
+        assert!(FusedChain::read_wire_opt(&mut wire::Reader::new(&[])).unwrap().is_none());
+    }
+
+    #[test]
+    fn illegal_chains_are_rejected() {
+        // tofixed after tohalf would panic standalone — not fusible
+        let bad = FusedChain::from_stages(vec![
+            Box::new(ToHalfStage) as Box<dyn Stage>,
+            Box::new(ToFixedStage { bits: 3, range_exp: 0 }),
+        ]);
+        assert!(bad.is_err());
+        assert!(FusedChain::from_stages(Vec::new()).is_err());
+        // crafted wire bytes with an illegal transition must not decode
+        let mut buf = Vec::new();
+        wire::put_u16(&mut buf, 2);
+        wire::put_u16(&mut buf, StageKind::ToFixed.tag());
+        wire::put_u64(&mut buf, 8);
+        wire::put_u32(&mut buf, 3); // bits
+        wire::put_i32(&mut buf, 0); // range_exp
+        wire::put_u16(&mut buf, StageKind::SigmoidLut.tag());
+        wire::put_u64(&mut buf, 0);
+        let err = FusedChain::read_wire_opt(&mut wire::Reader::new(&buf));
+        assert!(err.is_err(), "sigmoid on codes must not decode");
+    }
+
+    #[test]
+    fn size_bits_counts_fused_tables() {
+        let fc = chain(vec![Box::new(SigmoidLutStage::new(ScalarLut::sigmoid()))]);
+        assert_eq!(fc.size_bits(16), (1u64 << 16) * 16);
+        let fc = chain(vec![Box::new(ReluIntStage)]);
+        assert_eq!(fc.size_bits(16), 0);
+        assert!(fc.ends_in_acc());
+    }
+}

@@ -16,12 +16,43 @@
 //! batch-of-one through the same batched stages, so per-sample and
 //! batched results are bit-exact by construction, and op counters are
 //! attributed exactly per sample (`BatchInference::per_sample`).
+//!
+//! Compilation is optimize-then-emit: after the 1:1 lowering, the
+//! passes in [`optimize`] rewrite the stage list — today, stage
+//! folding fuses each bank's trailing elementwise chain into the bank
+//! as an epilogue ([`fuse`]), so the compiled plan usually has fewer
+//! stages than the authored plan (see `docs/ARCHITECTURE.md`).
+//!
+//! ```
+//! use tablenet::engine::{plan::EnginePlan, Compiler};
+//! use tablenet::nn::Model;
+//! use tablenet::tensor::Tensor;
+//! use tablenet::util::Rng;
+//!
+//! let mut rng = Rng::new(11);
+//! let model = Model::mlp(vec![
+//!     (Tensor::randn(&[12, 16], 0.3, &mut rng), Tensor::zeros(&[12])),
+//!     (Tensor::randn(&[8, 12], 0.3, &mut rng), Tensor::zeros(&[8])),
+//!     (Tensor::randn(&[4, 8], 0.3, &mut rng), Tensor::zeros(&[4])),
+//! ]);
+//! let lut = Compiler::new(&model)
+//!     .plan(&EnginePlan::mlp_default())
+//!     .build()
+//!     .unwrap();
+//! // relu/encode chains folded into the banks: 3 stages, not 7
+//! assert_eq!(lut.num_stages(), 3);
+//! let out = lut.infer(&vec![0.5; 16]);
+//! assert!(out.class < 4);
+//! out.counters.assert_multiplier_less();   // zero multiplies, proven
+//! ```
 
 pub mod act;
 pub mod artifact;
 pub mod compiler;
 pub mod counters;
 pub mod f16enc;
+pub mod fuse;
+pub mod optimize;
 pub mod plan;
 pub mod scratch;
 pub mod stages;

@@ -1,0 +1,207 @@
+//! The compile-time plan optimizer: passes that rewrite the lowered
+//! stage pipeline before it is sealed into a
+//! [`LutModel`](crate::engine::LutModel).
+//!
+//! [`Compiler::build`](crate::engine::Compiler::build) used to be a
+//! pure 1:1 lowering (one authored layer → one or two stages). This
+//! module turns it into an **optimize-then-emit** pipeline: lowering
+//! produces the naive stage list, then each optimizer pass rewrites it,
+//! and only the result is sealed/serialized. The executed plan may
+//! therefore differ from the authored plan — `tablenet inspect` always
+//! shows the *optimized* plan (see `docs/ARCHITECTURE.md`, "compiled
+//! plan vs authored plan"). Later passes (table dedup, chunk pruning —
+//! ROADMAP) slot in after [`fold_elementwise`] as further
+//! `Vec<Box<dyn Stage>> -> Vec<Box<dyn Stage>>` rewrites.
+//!
+//! The one pass implemented today is **stage folding**
+//! ([`fold_elementwise`]): each LUT bank absorbs its trailing
+//! elementwise chain (`relu`/`tofixed`/`tohalf`/`sigmoid`) as a fused
+//! epilogue — see [`crate::engine::fuse`] for the legality rules and
+//! why this is exact where table-entry rewriting would not be.
+
+use crate::engine::fuse::{elem_transition, ChainState, FusedChain};
+use crate::engine::stages::Stage;
+
+/// What [`fold_elementwise`] did — surfaced by `tablenet compile`'s
+/// summary banner and asserted by tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FoldStats {
+    /// Banks that absorbed a chain.
+    pub chains_fused: usize,
+    /// Standalone stages removed from the plan (now running as fused
+    /// epilogues).
+    pub stages_folded: usize,
+}
+
+/// Stage-folding pass: walk the lowered pipeline and move every LUT
+/// bank's trailing elementwise chain into the bank as a fused epilogue
+/// ([`FusedChain`]), deleting the standalone stages from the plan.
+///
+/// Legality per element is [`elem_transition`] (exactly the
+/// representations the standalone stage would accept); a chain on the
+/// final bank is trimmed to the longest prefix still ending on integer
+/// accumulators, because inference argmaxes integers. Anything not
+/// fusible — `maxpool`, a chain a bank refuses, an illegal transition —
+/// stays standalone, bit-identical to the unfused plan.
+pub fn fold_elementwise(stages: Vec<Box<dyn Stage>>) -> (Vec<Box<dyn Stage>>, FoldStats) {
+    let mut out: Vec<Box<dyn Stage>> = Vec::with_capacity(stages.len());
+    let mut stats = FoldStats::default();
+    let mut it = stages.into_iter().peekable();
+    while let Some(mut stage) = it.next() {
+        if !stage.kind().is_bank() {
+            out.push(stage);
+            continue;
+        }
+        // collect the longest legal elementwise chain after the bank
+        let mut chain: Vec<Box<dyn Stage>> = Vec::new();
+        let mut state = ChainState::Acc;
+        while let Some(next) = it.peek() {
+            match elem_transition(state, next.kind()) {
+                Some(ns) => {
+                    state = ns;
+                    chain.push(it.next().expect("peeked"));
+                }
+                None => break,
+            }
+        }
+        // terminal bank: keep only the longest prefix that still ends
+        // on accumulators; the rest stays standalone (and will fail
+        // pipeline validation exactly like the unfused plan would)
+        let mut spill: Vec<Box<dyn Stage>> = Vec::new();
+        if it.peek().is_none() {
+            let mut st = ChainState::Acc;
+            let states: Vec<ChainState> = chain
+                .iter()
+                .map(|s| {
+                    st = elem_transition(st, s.kind()).expect("validated above");
+                    st
+                })
+                .collect();
+            let keep = states
+                .iter()
+                .rposition(|&s| s == ChainState::Acc)
+                .map_or(0, |i| i + 1);
+            spill = chain.split_off(keep);
+        }
+        if !chain.is_empty() {
+            let n = chain.len();
+            match FusedChain::from_stages(chain) {
+                Ok(fc) => match stage.absorb_chain(fc) {
+                    Ok(()) => {
+                        stats.chains_fused += 1;
+                        stats.stages_folded += n;
+                    }
+                    Err(fc) => {
+                        let mut back = fc.into_stages();
+                        back.append(&mut spill);
+                        spill = back;
+                    }
+                },
+                Err(orig) => {
+                    let mut back = orig;
+                    back.append(&mut spill);
+                    spill = back;
+                }
+            }
+        }
+        out.push(stage);
+        out.append(&mut spill);
+    }
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::stages::{
+        MaxPool2IntStage, ReluIntStage, StageKind, ToFixedStage, ToHalfStage,
+    };
+    use crate::lut::dense::DenseWholeLut;
+    use crate::lut::Partition;
+    use crate::quant::FixedFormat;
+    use crate::util::Rng;
+
+    fn bank(seed: u64) -> Box<dyn Stage> {
+        let (p, q) = (3, 4);
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..p * q).map(|_| rng.normal() * 0.4).collect();
+        let b: Vec<f32> = (0..p).map(|_| rng.normal() * 0.1).collect();
+        let lut = DenseWholeLut::build(
+            &w,
+            &b,
+            p,
+            q,
+            Partition::contiguous(q, 2),
+            FixedFormat::new(3),
+        )
+        .unwrap();
+        Box::new(crate::engine::stages::DenseWholeStage::new(lut))
+    }
+
+    fn kinds(stages: &[Box<dyn Stage>]) -> Vec<StageKind> {
+        stages.iter().map(|s| s.kind()).collect()
+    }
+
+    #[test]
+    fn folds_interior_chain_into_bank() {
+        let stages: Vec<Box<dyn Stage>> = vec![
+            bank(1),
+            Box::new(ReluIntStage),
+            Box::new(ToFixedStage { bits: 3, range_exp: 0 }),
+            bank(2),
+        ];
+        let (out, stats) = fold_elementwise(stages);
+        assert_eq!(kinds(&out), vec![StageKind::DenseWhole, StageKind::DenseWhole]);
+        assert_eq!(stats, FoldStats { chains_fused: 1, stages_folded: 2 });
+        let chain = out[0].fused_chain().expect("bank 0 fused");
+        assert_eq!(chain.kinds(), vec![StageKind::ReluInt, StageKind::ToFixed]);
+        assert!(out[1].fused_chain().is_none());
+    }
+
+    #[test]
+    fn terminal_chain_trims_to_acc() {
+        // trailing relu keeps accumulators -> fused; trailing tohalf
+        // would break the argmax contract -> stays standalone
+        let (out, stats) =
+            fold_elementwise(vec![bank(3), Box::new(ReluIntStage)]);
+        assert_eq!(kinds(&out), vec![StageKind::DenseWhole]);
+        assert_eq!(stats.stages_folded, 1);
+        assert!(out[0].fused_chain().unwrap().ends_in_acc());
+
+        let (out, stats) = fold_elementwise(vec![
+            bank(4),
+            Box::new(ReluIntStage),
+            Box::new(ToHalfStage),
+        ]);
+        // relu prefix ends in Acc -> fused; tohalf spills back
+        assert_eq!(kinds(&out), vec![StageKind::DenseWhole, StageKind::ToHalf]);
+        assert_eq!(stats, FoldStats { chains_fused: 1, stages_folded: 1 });
+    }
+
+    #[test]
+    fn maxpool_stops_the_chain() {
+        let (out, stats) = fold_elementwise(vec![
+            bank(5),
+            Box::new(ReluIntStage),
+            Box::new(MaxPool2IntStage { h: 4, w: 4, c: 1 }),
+            bank(6),
+        ]);
+        assert_eq!(
+            kinds(&out),
+            vec![StageKind::DenseWhole, StageKind::MaxPool2Int, StageKind::DenseWhole]
+        );
+        // the relu before the pool is still fusible (Acc -> Acc)
+        assert_eq!(stats, FoldStats { chains_fused: 1, stages_folded: 1 });
+        assert_eq!(out[0].fused_chain().unwrap().kinds(), vec![StageKind::ReluInt]);
+    }
+
+    #[test]
+    fn bankless_pipeline_is_untouched() {
+        let (out, stats) = fold_elementwise(vec![
+            Box::new(ReluIntStage) as Box<dyn Stage>,
+            Box::new(ToHalfStage),
+        ]);
+        assert_eq!(kinds(&out), vec![StageKind::ReluInt, StageKind::ToHalf]);
+        assert_eq!(stats, FoldStats::default());
+    }
+}

@@ -3,6 +3,7 @@
 use super::{Stage, StageKind};
 use crate::engine::act::{ActBuf, Repr};
 use crate::engine::counters::Counters;
+use crate::engine::fuse::FusedChain;
 use crate::engine::scratch::{reset_len_i64, Scratch};
 use crate::lut::convfloat::ConvFloatLut;
 use crate::lut::floatplane::FACC;
@@ -10,18 +11,24 @@ use crate::lut::wire;
 
 pub struct ConvFloatStage {
     pub lut: ConvFloatLut,
+    /// Elementwise chain absorbed by the stage-folding optimizer
+    /// pass, run as an epilogue over the just-written accumulators
+    /// (`None` = unfused; artifact bytes then match pre-fusion builds).
+    epilogue: Option<FusedChain>,
 }
 
 impl ConvFloatStage {
     pub fn new(lut: ConvFloatLut) -> ConvFloatStage {
-        ConvFloatStage { lut }
+        ConvFloatStage { lut, epilogue: None }
     }
 
     pub fn read_payload(
         r: &mut wire::Reader,
         ctx: &wire::WireCtx,
     ) -> wire::Result<ConvFloatStage> {
-        Ok(ConvFloatStage { lut: ConvFloatLut::read_wire(r, ctx)? })
+        let lut = ConvFloatLut::read_wire(r, ctx)?;
+        let epilogue = FusedChain::read_wire_opt(r)?;
+        Ok(ConvFloatStage { lut, epilogue })
     }
 }
 
@@ -38,10 +45,14 @@ impl Stage for ConvFloatStage {
         self.lut
             .eval_batch_f16(&act.half, batch, &mut act.acc, &mut scratch.pad, counters);
         act.set_repr(Repr::Acc(FACC as u32));
+        if let Some(chain) = &self.epilogue {
+            chain.apply(act, scratch, counters);
+        }
     }
 
     fn size_bits(&self, r_o: u32) -> u64 {
         self.lut.size_bits(r_o)
+            + self.epilogue.as_ref().map_or(0, |c| c.size_bits(r_o))
     }
 
     fn in_elems(&self) -> Option<usize> {
@@ -50,6 +61,18 @@ impl Stage for ConvFloatStage {
 
     fn write_payload(&self, out: &mut Vec<u8>, aligned: bool) {
         self.lut.write_wire(out, aligned);
+        if let Some(chain) = &self.epilogue {
+            chain.write_wire(out);
+        }
+    }
+
+    fn absorb_chain(&mut self, chain: FusedChain) -> Result<(), FusedChain> {
+        self.epilogue = Some(chain);
+        Ok(())
+    }
+
+    fn fused_chain(&self) -> Option<&FusedChain> {
+        self.epilogue.as_ref()
     }
 
     fn storage(&self) -> Option<crate::lut::arena::ArenaResidency> {

@@ -3,24 +3,31 @@
 use super::{Stage, StageKind};
 use crate::engine::act::{ActBuf, Repr};
 use crate::engine::counters::Counters;
+use crate::engine::fuse::FusedChain;
 use crate::engine::scratch::{reset_len_i64, Scratch};
 use crate::lut::bitplane::DenseBitplaneLut;
 use crate::lut::{wire, ACC_FRAC};
 
 pub struct DenseBitplaneStage {
     pub lut: DenseBitplaneLut,
+    /// Elementwise chain absorbed by the stage-folding optimizer
+    /// pass, run as an epilogue over the just-written accumulators
+    /// (`None` = unfused; artifact bytes then match pre-fusion builds).
+    epilogue: Option<FusedChain>,
 }
 
 impl DenseBitplaneStage {
     pub fn new(lut: DenseBitplaneLut) -> DenseBitplaneStage {
-        DenseBitplaneStage { lut }
+        DenseBitplaneStage { lut, epilogue: None }
     }
 
     pub fn read_payload(
         r: &mut wire::Reader,
         ctx: &wire::WireCtx,
     ) -> wire::Result<DenseBitplaneStage> {
-        Ok(DenseBitplaneStage { lut: DenseBitplaneLut::read_wire(r, ctx)? })
+        let lut = DenseBitplaneLut::read_wire(r, ctx)?;
+        let epilogue = FusedChain::read_wire_opt(r)?;
+        Ok(DenseBitplaneStage { lut, epilogue })
     }
 }
 
@@ -29,16 +36,20 @@ impl Stage for DenseBitplaneStage {
         StageKind::DenseBitplane
     }
 
-    fn eval_batch(&self, act: &mut ActBuf, _scratch: &mut Scratch, counters: &mut [Counters]) {
+    fn eval_batch(&self, act: &mut ActBuf, scratch: &mut Scratch, counters: &mut [Counters]) {
         act.ensure_codes(self.lut.fmt);
         let batch = act.batch();
         reset_len_i64(&mut act.acc, batch * self.lut.p);
         self.lut.eval_batch(&act.codes, batch, &mut act.acc, counters);
         act.set_repr(Repr::Acc(ACC_FRAC));
+        if let Some(chain) = &self.epilogue {
+            chain.apply(act, scratch, counters);
+        }
     }
 
     fn size_bits(&self, r_o: u32) -> u64 {
         self.lut.size_bits(r_o)
+            + self.epilogue.as_ref().map_or(0, |c| c.size_bits(r_o))
     }
 
     fn in_elems(&self) -> Option<usize> {
@@ -47,6 +58,18 @@ impl Stage for DenseBitplaneStage {
 
     fn write_payload(&self, out: &mut Vec<u8>, aligned: bool) {
         self.lut.write_wire(out, aligned);
+        if let Some(chain) = &self.epilogue {
+            chain.write_wire(out);
+        }
+    }
+
+    fn absorb_chain(&mut self, chain: FusedChain) -> Result<(), FusedChain> {
+        self.epilogue = Some(chain);
+        Ok(())
+    }
+
+    fn fused_chain(&self) -> Option<&FusedChain> {
+        self.epilogue.as_ref()
     }
 
     fn storage(&self) -> Option<crate::lut::arena::ArenaResidency> {

@@ -13,6 +13,28 @@
 //! [`crate::engine::Compiler`], and register its decoder in
 //! [`read_stage`] — no engine match arms to edit.
 //!
+//! Driving one stage by hand (the pipeline normally does this):
+//!
+//! ```
+//! use tablenet::engine::act::{ActBuf, Repr};
+//! use tablenet::engine::counters::Counters;
+//! use tablenet::engine::scratch::Scratch;
+//! use tablenet::engine::stages::{ReluIntStage, Stage, StageKind};
+//!
+//! let mut act = ActBuf::new();
+//! act.load_f32(&[0.0; 3], 1);          // size: 1 sample × 3 features
+//! act.acc.clear();
+//! act.acc.extend_from_slice(&[5, -7, 0]);
+//! act.set_repr(Repr::Acc(32));         // pretend a bank just wrote accs
+//! let mut scratch = Scratch::new();
+//! let mut counters = vec![Counters::default()];
+//! let relu = ReluIntStage;
+//! assert_eq!(relu.kind(), StageKind::ReluInt);
+//! relu.eval_batch(&mut act, &mut scratch, &mut counters);
+//! assert_eq!(&act.acc[..], &[5, 0, 0]);
+//! counters[0].assert_multiplier_less();
+//! ```
+//!
 //! Each built-in stage lives in its own module:
 //!
 //! | module             | stage                         | paper section |
@@ -52,6 +74,7 @@ pub use tohalf::ToHalfStage;
 
 use crate::engine::act::ActBuf;
 use crate::engine::counters::Counters;
+use crate::engine::fuse::FusedChain;
 use crate::engine::scratch::Scratch;
 use crate::lut::arena::ArenaResidency;
 use crate::lut::wire;
@@ -106,6 +129,22 @@ pub trait Stage: Send + Sync {
     fn storage(&self) -> Option<ArenaResidency> {
         None
     }
+
+    /// Absorb a fused elementwise chain as this stage's epilogue (the
+    /// stage-folding optimizer pass, [`crate::engine::optimize`]). LUT
+    /// banks override this to take ownership of the chain; everything
+    /// else keeps the default, which refuses by handing the chain back
+    /// so the optimizer re-emits its stages standalone.
+    fn absorb_chain(&mut self, chain: FusedChain) -> Result<(), FusedChain> {
+        Err(chain)
+    }
+
+    /// The fused epilogue chain this stage absorbed, if any — drives
+    /// `tablenet inspect`'s `bank+elem+elem` display, artifact
+    /// validation, and the fused-plan accounting.
+    fn fused_chain(&self) -> Option<&FusedChain> {
+        None
+    }
 }
 
 /// Stable stage identifiers. The `u16` tags are the on-disk artifact
@@ -156,6 +195,19 @@ impl StageKind {
             10 => StageKind::ToFixed,
             _ => return None,
         })
+    }
+
+    /// Whether this kind is a LUT bank (owns affine tables, outputs
+    /// integer accumulators, can absorb a fused elementwise chain).
+    pub fn is_bank(self) -> bool {
+        matches!(
+            self,
+            StageKind::DenseWhole
+                | StageKind::DenseBitplane
+                | StageKind::DenseFloat
+                | StageKind::ConvFixed
+                | StageKind::ConvFloat
+        )
     }
 
     /// Human-readable name (diagnostics).

@@ -21,6 +21,18 @@
 //! boundary), so outputs and per-sample [`Counters`] are bit-identical
 //! — asserted by the kernel-parity proptests.
 //!
+//! ```
+//! use tablenet::lut::kernel::{self, Kernel};
+//!
+//! let ambient = kernel::active();       // whatever env/CPU selects
+//! {
+//!     let _guard = kernel::force(Kernel::Scalar);
+//!     assert_eq!(kernel::active(), Kernel::Scalar);
+//!     assert!(kernel::describe().ends_with("(forced)"));
+//! }                                     // guard dropped: override gone
+//! assert_eq!(kernel::active(), ambient);
+//! ```
+//!
 //! [`Counters`]: crate::engine::counters::Counters
 
 use std::cell::Cell;

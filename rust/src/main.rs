@@ -76,7 +76,9 @@ fn print_help() {
          \x20 gen-data         --dir data/synth --train 4000 --test 1000 --seed 7\n\
          \x20 train            --arch linear|mlp --dataset mnist|fashion --steps N --out w.bin\n\
          \x20 compile          --arch A --weights w.bin [--plan plan.json] --out model.ltm\n\
-         \x20 inspect          model.ltm\n\
+         \x20                  [--no-fuse]  (skip the stage-folding optimizer: keep the naive\n\
+         \x20                   1:1 lowering instead of folding elementwise chains into banks)\n\
+         \x20 inspect          model.ltm   (fused banks print as e.g. dense-float+relu-int+to-half)\n\
          \x20 eval             --arch A --weights w.bin --dataset D [--plan plan.json] [--artifact model.ltm] [--n 500]\n\
          \x20 sweep-bits       --arch linear --weights w.bin --dataset D [--csv-out f.csv]\n\
          \x20 sweep-partitions --arch linear|mlp|cnn [--weights w.bin --dataset D]\n\
@@ -227,6 +229,7 @@ fn compile(args: &Args) -> Result<()> {
     let plan = plan_from_args(args, model.arch)?;
     let lut = Compiler::new(&model)
         .plan(&plan)
+        .fuse(!args.has("no-fuse"))
         .build()
         .map_err(|e| anyhow!("plan not materialisable: {e}"))?;
     let out = PathBuf::from(
@@ -241,6 +244,10 @@ fn compile(args: &Args) -> Result<()> {
         }
     }
     lut.save(&out)?;
+    let (chains, folded) = lut.stages().iter().filter_map(|s| s.fused_chain()).fold(
+        (0usize, 0usize),
+        |(c, f), chain| (c + 1, f + chain.len()),
+    );
     println!(
         "wrote {} ({} stages, {} of tables at r_o={})",
         out.display(),
@@ -248,6 +255,17 @@ fn compile(args: &Args) -> Result<()> {
         fmt_bits(lut.size_bits()),
         lut.plan().r_o
     );
+    if args.has("no-fuse") {
+        println!("  fusion: disabled (--no-fuse), naive 1:1 lowering");
+    } else if chains > 0 {
+        println!(
+            "  fusion: {folded} elementwise stage{} folded into {chains} bank{}",
+            if folded == 1 { "" } else { "s" },
+            if chains == 1 { "" } else { "s" }
+        );
+    } else {
+        println!("  fusion: on, no foldable elementwise chains");
+    }
     Ok(())
 }
 
@@ -277,6 +295,7 @@ fn engine_from_args(args: &Args, model: Option<&Model>) -> Result<LutModel> {
     let plan = plan_from_args(args, model.arch)?;
     Compiler::new(model)
         .plan(&plan)
+        .fuse(!args.has("no-fuse"))
         .build()
         .map_err(|e| anyhow!("plan not materialisable: {e}"))
 }
@@ -1272,7 +1291,16 @@ fn inspect(args: &Args) -> Result<()> {
         "  storage           : {borrowed}/{banks} table banks borrowed zero-copy{}",
         if banks > 0 && borrowed == banks { " (served in place from the mapping)" } else { "" }
     );
-    println!("  stages            : {}", info.stages.len());
+    let folded: usize = info.stages.iter().map(|s| s.fused.len()).sum();
+    println!(
+        "  stages            : {}{}",
+        info.stages.len(),
+        if folded > 0 {
+            format!(" ({folded} elementwise folded into bank epilogues)")
+        } else {
+            String::new()
+        }
+    );
     for (i, s) in info.stages.iter().enumerate() {
         let checksum = s
             .checksum
@@ -1287,9 +1315,9 @@ fn inspect(args: &Args) -> Result<()> {
             None => "-".to_string(),
         };
         println!(
-            "    [{i:2}] {:<16} payload {:>12} B @ {:#010x}  fnv {checksum}  \
+            "    [{i:2}] {:<28} payload {:>12} B @ {:#010x}  fnv {checksum}  \
              tables {:<12} {storage}",
-            s.kind.name(),
+            s.display_name(),
             s.payload_bytes,
             s.offset,
             fmt_bits(s.size_bits),

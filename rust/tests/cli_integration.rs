@@ -34,6 +34,7 @@ fn help_lists_commands() {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
     assert!(text.contains("--artifact"), "help missing --artifact flag");
+    assert!(text.contains("--no-fuse"), "help missing --no-fuse flag");
     assert!(text.contains("--swap"), "help missing --swap flag");
     assert!(text.contains("--watch-dir"), "help missing --watch-dir flag");
     assert!(text.contains("--listen"), "help missing --listen flag");
@@ -259,6 +260,60 @@ fn train_and_compile(dir: &std::path::Path, tag: &str, seed: u64) -> PathBuf {
         .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     ltm
+}
+
+#[test]
+fn compile_no_fuse_flag_and_fusion_banner() {
+    // linear has a single bank and no elementwise stages, so the
+    // optimizer has nothing to fold: the fused and unfused artifacts
+    // must be byte-identical (the epilogue encoding appends nothing
+    // when a bank carries no chain — pre-fusion readers stay
+    // compatible), while the compile banner reports the fusion mode
+    let dir = sandbox("nofuse");
+    let weights = dir.join("w.bin");
+    let out = bin()
+        .args(["train", "--arch", "linear", "--steps", "250", "--dir"])
+        .arg(dir.join("synth"))
+        .args(["--train", "400", "--test", "100", "--out"])
+        .arg(&weights)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let fused = dir.join("fused.ltm");
+    let out = bin()
+        .args(["compile", "--arch", "linear", "--weights"])
+        .arg(&weights)
+        .args(["--out"])
+        .arg(&fused)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("fusion: on, no foldable elementwise chains"),
+        "compile banner must report the fusion outcome: {text}"
+    );
+
+    let unfused = dir.join("unfused.ltm");
+    let out = bin()
+        .args(["compile", "--arch", "linear", "--weights"])
+        .arg(&weights)
+        .args(["--out"])
+        .arg(&unfused)
+        .arg("--no-fuse")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fusion: disabled (--no-fuse)"), "{text}");
+
+    assert_eq!(
+        std::fs::read(&fused).unwrap(),
+        std::fs::read(&unfused).unwrap(),
+        "chainless pipeline must compile to identical bytes either way"
+    );
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

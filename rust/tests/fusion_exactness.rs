@@ -1,0 +1,399 @@
+//! Stage-folding correctness: a fused pipeline (elementwise chains
+//! folded into bank epilogues by `engine::optimize::fold_elementwise`)
+//! must be BIT-EXACT with the naive unfused lowering — classes, logits
+//! and per-sample counters — across every fusible (model, plan) shape,
+//! ragged batch sizes, both forced kernels, and artifact round-trips
+//! through both container versions. Plus elementwise boundary-stage
+//! edge cases (saturation / rounding / domain clamping) pinned against
+//! f64 oracles, identical under scalar and AVX2 dispatch.
+
+use tablenet::engine::act::{ActBuf, Repr};
+use tablenet::engine::counters::Counters;
+use tablenet::engine::plan::{AffineMode, EnginePlan};
+use tablenet::engine::scratch::Scratch;
+use tablenet::engine::stages::{SigmoidLutStage, Stage, StageKind, ToFixedStage, ToHalfStage};
+use tablenet::engine::{artifact, Compiler, LutModel};
+use tablenet::lut::kernel;
+use tablenet::lut::scalar::ScalarLut;
+use tablenet::nn::Model;
+use tablenet::quant::f16::F16;
+use tablenet::tensor::Tensor;
+use tablenet::util::Rng;
+
+fn mlp_model(rng: &mut Rng) -> Model {
+    Model::mlp(vec![
+        (Tensor::randn(&[32, 784], 0.05, rng), Tensor::zeros(&[32])),
+        (Tensor::randn(&[16, 32], 0.2, rng), Tensor::zeros(&[16])),
+        (Tensor::randn(&[10, 16], 0.3, rng), Tensor::zeros(&[10])),
+    ])
+}
+
+fn sigmoid_model(rng: &mut Rng) -> Model {
+    Model {
+        arch: tablenet::nn::Arch::Mlp,
+        layers: vec![
+            tablenet::nn::Layer::Dense {
+                w: Tensor::randn(&[24, 784], 0.05, rng),
+                b: Tensor::zeros(&[24]),
+            },
+            tablenet::nn::Layer::Sigmoid,
+            tablenet::nn::Layer::Dense {
+                w: Tensor::randn(&[10, 24], 0.3, rng),
+                b: Tensor::zeros(&[10]),
+            },
+        ],
+        input_shape: vec![784],
+    }
+}
+
+fn cnn_model(rng: &mut Rng) -> Model {
+    Model {
+        arch: tablenet::nn::Arch::Cnn,
+        layers: vec![
+            tablenet::nn::Layer::Conv2d {
+                filter: Tensor::randn(&[3, 3, 1, 2], 0.3, rng),
+                b: Tensor::randn(&[2], 0.05, rng),
+            },
+            tablenet::nn::Layer::Relu,
+            tablenet::nn::Layer::MaxPool2,
+            tablenet::nn::Layer::Conv2d {
+                filter: Tensor::randn(&[3, 3, 2, 3], 0.2, rng),
+                b: Tensor::randn(&[3], 0.05, rng),
+            },
+            tablenet::nn::Layer::Relu,
+            tablenet::nn::Layer::Flatten,
+            tablenet::nn::Layer::Dense {
+                w: Tensor::randn(&[10, 4 * 4 * 3], 0.2, rng),
+                b: Tensor::zeros(&[10]),
+            },
+        ],
+        input_shape: vec![8, 8, 1],
+    }
+}
+
+/// Every chain shape the optimizer can fold: `relu+tohalf` (float MLP),
+/// `relu+tofixed` (fixed inner layers), `sigmoid+tohalf` (scalar LUT),
+/// and the CNN's `conv+relu` before maxpool / `conv+relu+tohalf` after.
+fn cases(rng: &mut Rng) -> Vec<(&'static str, Model, EnginePlan)> {
+    let float11 = AffineMode::Float { planes: 11, m: 1 };
+    vec![
+        ("mlp-float", mlp_model(rng), EnginePlan::mlp_default()),
+        (
+            "mlp-fixed-inner",
+            mlp_model(rng),
+            EnginePlan {
+                affine: vec![
+                    AffineMode::WholeFixed { bits: 8, m: 1, range_exp: 0 },
+                    AffineMode::BitplaneFixed { bits: 8, m: 4, range_exp: 3 },
+                    AffineMode::BitplaneFixed { bits: 8, m: 4, range_exp: 3 },
+                ],
+                fallback: float11,
+                r_o: 16,
+            },
+        ),
+        (
+            "sigmoid",
+            sigmoid_model(rng),
+            EnginePlan { affine: vec![float11, float11], fallback: float11, r_o: 16 },
+        ),
+        (
+            "cnn",
+            cnn_model(rng),
+            EnginePlan {
+                affine: vec![
+                    AffineMode::BitplaneFixed { bits: 3, m: 2, range_exp: 0 },
+                    float11,
+                    float11,
+                ],
+                fallback: float11,
+                r_o: 16,
+            },
+        ),
+    ]
+}
+
+fn compile(model: &Model, plan: &EnginePlan, fuse: bool) -> LutModel {
+    Compiler::new(model).plan(plan).fuse(fuse).build().unwrap()
+}
+
+/// The tentpole property: fused and unfused builds agree bit-exactly —
+/// classes, logits, per-sample counters and counter totals — across
+/// ragged batches (1..=9 straddles the 4-lane AVX2 width) under BOTH
+/// forced kernels, while the fused plan has strictly fewer stages and
+/// identical table accounting.
+#[test]
+fn prop_fused_matches_unfused_bit_exact() {
+    let mut rng = Rng::new(0xF05E);
+    for (name, model, plan) in cases(&mut rng) {
+        let fused = compile(&model, &plan, true);
+        let unfused = compile(&model, &plan, false);
+        assert!(
+            fused.num_stages() < unfused.num_stages(),
+            "{name}: fusible plan must get strictly fewer stages \
+             ({} vs {})",
+            fused.num_stages(),
+            unfused.num_stages()
+        );
+        assert!(
+            fused.stages().iter().any(|s| s.fused_chain().is_some()),
+            "{name}: expected at least one fused bank"
+        );
+        assert!(
+            unfused.stages().iter().all(|s| s.fused_chain().is_none()),
+            "{name}: --no-fuse build must carry no epilogues"
+        );
+        assert_eq!(fused.size_bits(), unfused.size_bits(), "{name}: table accounting");
+        // the pipeline still ends in integer accumulators (terminal
+        // chains are trimmed, never folded past the final bank)
+        let last = fused.stages().last().unwrap();
+        assert!(
+            last.fused_chain().is_none_or(|c| c.ends_in_acc()),
+            "{name}: terminal epilogue must preserve Acc output"
+        );
+
+        let features: usize = model.input_shape.iter().product();
+        let mut kernels = vec![kernel::Kernel::Scalar];
+        if kernel::avx2_available() {
+            kernels.push(kernel::Kernel::Avx2);
+        }
+        for k in kernels {
+            let _g = kernel::force(k);
+            for batch in 1..=9usize {
+                let images: Vec<f32> =
+                    (0..batch * features).map(|_| rng.f32()).collect();
+                let mut s1 = Scratch::new();
+                let mut s2 = Scratch::new();
+                let a = fused.infer_batch(&images, batch, &mut s1);
+                let b = unfused.infer_batch(&images, batch, &mut s2);
+                a.counters.assert_multiplier_less();
+                assert_eq!(a.classes, b.classes, "{name} k={k:?} batch={batch}");
+                assert_eq!(a.logits, b.logits, "{name} k={k:?} batch={batch}");
+                assert_eq!(
+                    a.per_sample, b.per_sample,
+                    "{name} k={k:?} batch={batch}: per-sample counters"
+                );
+                assert_eq!(a.counters, b.counters, "{name} k={k:?} batch={batch}");
+            }
+        }
+    }
+}
+
+/// Fused artifacts round-trip through BOTH container versions: the
+/// epilogue chain survives save -> load (same kinds on the same banks)
+/// and the revived model infers bit-exactly against the in-memory one.
+#[test]
+fn fused_artifact_roundtrip_both_versions() {
+    let mut rng = Rng::new(0xF0A7);
+    for (name, model, plan) in cases(&mut rng) {
+        let lut = compile(&model, &plan, true);
+        let chains: Vec<Option<Vec<StageKind>>> = lut
+            .stages()
+            .iter()
+            .map(|s| s.fused_chain().map(|c| c.kinds()))
+            .collect();
+        for (ver, bytes) in
+            [(2u32, artifact::to_bytes(&lut)), (1u32, artifact::to_bytes_v1(&lut))]
+        {
+            let back = artifact::from_bytes(&bytes).unwrap();
+            assert_eq!(back.num_stages(), lut.num_stages(), "{name} v{ver}");
+            let got: Vec<Option<Vec<StageKind>>> = back
+                .stages()
+                .iter()
+                .map(|s| s.fused_chain().map(|c| c.kinds()))
+                .collect();
+            assert_eq!(got, chains, "{name} v{ver}: epilogue chains diverged");
+
+            let features: usize = model.input_shape.iter().product();
+            let batch = 3usize;
+            let images: Vec<f32> = (0..batch * features).map(|_| rng.f32()).collect();
+            let mut s1 = Scratch::new();
+            let mut s2 = Scratch::new();
+            let a = lut.infer_batch(&images, batch, &mut s1);
+            let b = back.infer_batch(&images, batch, &mut s2);
+            assert_eq!(a.classes, b.classes, "{name} v{ver}");
+            assert_eq!(a.logits, b.logits, "{name} v{ver}");
+            assert_eq!(a.per_sample, b.per_sample, "{name} v{ver}");
+        }
+    }
+}
+
+/// An unfused build writes byte-identical payloads whether or not the
+/// epilogue encoding exists: banks without chains append nothing, so
+/// `--no-fuse` artifacts stay readable by pre-fusion builds.
+#[test]
+fn unfused_artifact_carries_no_chain_bytes() {
+    let mut rng = Rng::new(0xF0B3);
+    let model = mlp_model(&mut rng);
+    let lut = compile(&model, &EnginePlan::mlp_default(), false);
+    let back = artifact::from_bytes(&artifact::to_bytes(&lut)).unwrap();
+    assert!(back.stages().iter().all(|s| s.fused_chain().is_none()));
+    // and the inspect metadata agrees: no fused kinds anywhere
+    let dir = std::env::temp_dir().join("tablenet_fusion_inspect");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("unfused.ltm");
+    lut.save(&path).unwrap();
+    let info = artifact::inspect(&path).unwrap();
+    assert!(info.stages.iter().all(|s| s.fused.is_empty()));
+    std::fs::remove_file(&path).ok();
+}
+
+/// Fused inspect metadata names the whole chain: the MLP's interior
+/// banks display as `dense-float+relu-int+to-half`.
+#[test]
+fn inspect_reports_fused_chain_display_names() {
+    let mut rng = Rng::new(0xF0C9);
+    let model = mlp_model(&mut rng);
+    let lut = compile(&model, &EnginePlan::mlp_default(), true);
+    let dir = std::env::temp_dir().join("tablenet_fusion_inspect");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fused.ltm");
+    lut.save(&path).unwrap();
+    let info = artifact::inspect(&path).unwrap();
+    let names: Vec<String> = info.stages.iter().map(|s| s.display_name()).collect();
+    assert_eq!(
+        names,
+        vec![
+            "dense-float+relu-int+to-half",
+            "dense-float+relu-int+to-half",
+            "dense-float",
+        ]
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------
+// Elementwise boundary-stage edge cases. The stages are scalar code, but
+// running them under both forced kernels pins that kernel dispatch can
+// never change boundary behaviour (the epilogue path runs inside bank
+// eval, where the kernel guard is active).
+// ---------------------------------------------------------------------
+
+fn with_each_kernel(mut body: impl FnMut()) {
+    let mut kernels = vec![kernel::Kernel::Scalar];
+    if kernel::avx2_available() {
+        kernels.push(kernel::Kernel::Avx2);
+    }
+    for k in kernels {
+        let _g = kernel::force(k);
+        body();
+    }
+}
+
+/// Drive a single elementwise stage over accumulators and return the
+/// resulting buffer snapshots.
+fn run_on_accs(stage: &dyn Stage, accs: &[i64], frac: u32) -> ActBuf {
+    let mut act = ActBuf::new();
+    act.load_f32(&vec![0.0; accs.len()], 1);
+    act.acc.clear();
+    act.acc.extend_from_slice(accs);
+    act.set_repr(Repr::Acc(frac));
+    let mut scratch = Scratch::new();
+    let mut ctrs = vec![Counters::default()];
+    stage.eval_batch(&mut act, &mut scratch, &mut ctrs);
+    act
+}
+
+#[test]
+fn tofixed_saturates_and_rounds_at_code_boundaries() {
+    with_each_kernel(|| {
+        // bits=3, range_exp=0 at frac 16 -> shift 13: codes floor the
+        // accumulator, negatives and zero clamp to code 0, anything at
+        // or above code 8 saturates to the 7 max code
+        let stage = ToFixedStage { bits: 3, range_exp: 0 };
+        let accs = [
+            i64::MIN,       // deep negative -> 0
+            -1,             // -> 0
+            0,              // zero is not positive -> 0
+            (1 << 13) - 1,  // one below the first boundary -> 0 (floor)
+            1 << 13,        // exactly code 1
+            (7 << 13) - 1,  // floor keeps 6
+            7 << 13,        // top in-range code
+            8 << 13,        // first out-of-range value -> saturate 7
+            i64::MAX,       // -> saturate 7
+        ];
+        let act = run_on_accs(&stage, &accs, 16);
+        assert_eq!(act.repr(), Repr::Codes(3));
+        assert_eq!(act.codes, vec![0, 0, 0, 0, 1, 6, 7, 7, 7]);
+
+        // negative shift (frac 0, bits 8): codes scale UP and must
+        // still clamp to the max code instead of overflowing
+        let stage = ToFixedStage { bits: 8, range_exp: 0 };
+        let act = run_on_accs(&stage, &[1, 2], 0);
+        assert_eq!(act.codes, vec![255, 255]);
+
+        // extreme range_exp exercises the +/-63 shift clamp: every
+        // positive value shifts to code 0 instead of hitting a masked
+        // or overflowing shift amount
+        let stage = ToFixedStage { bits: 1, range_exp: 64 };
+        let act = run_on_accs(&stage, &[123_456, i64::MAX], 16);
+        assert_eq!(act.codes, vec![0, 0]);
+    });
+}
+
+#[test]
+fn tohalf_matches_f64_oracle_on_boundaries() {
+    // oracle: ReLU then encode through f64, saturating the overflow
+    // to f16 max like the engine does (no infinities in activations)
+    fn oracle(a: i64, frac: u32) -> F16 {
+        if a <= 0 {
+            return F16(0);
+        }
+        let f = F16::from_f32((a as f64 * (-(frac as f64)).exp2()) as f32);
+        if f.0 == 0x7C00 {
+            F16(0x7BFF)
+        } else {
+            f
+        }
+    }
+    with_each_kernel(|| {
+        let frac = 16u32;
+        let accs = [
+            i64::MIN,
+            -1,
+            0,
+            1,                  // subnormal territory
+            (1 << 16) - 1,      // just below 1.0
+            1 << 16,            // exactly 1.0
+            (1 << 16) + 32,     // round-to-even boundary inside the mantissa
+            (1 << 16) + 33,     // just past it
+            (3 << 15),          // 1.5
+            (1 << 31) - 1,      // large, still finite in f16? -> oracle decides
+            1 << 37,            // beyond f16 max -> saturates like the oracle
+            i64::MAX,
+        ];
+        let stage = ToHalfStage;
+        let act = run_on_accs(&stage, &accs, frac);
+        assert_eq!(act.repr(), Repr::Half);
+        for (i, (&a, got)) in accs.iter().zip(&act.half).enumerate() {
+            assert_eq!(
+                got.0,
+                oracle(a, frac).0,
+                "acc {a} (case {i}): {} vs oracle {}",
+                got.to_f32(),
+                oracle(a, frac).to_f32()
+            );
+        }
+    });
+}
+
+#[test]
+fn sigmoid_clamps_domain_extremes() {
+    with_each_kernel(|| {
+        let stage = SigmoidLutStage::new(ScalarLut::sigmoid());
+        let frac = 8u32;
+        // pre-activations: deep negative, zero, deep positive (values
+        // -4096, 0, +4096 after scaling — far outside where sigmoid is
+        // representably different from its asymptotes)
+        let act = run_on_accs(&stage, &[-(1 << 20), 0, 1 << 20], frac);
+        assert_eq!(act.repr(), Repr::Half);
+        let got: Vec<f32> = act.half.iter().map(|h| h.to_f32()).collect();
+        assert_eq!(got, vec![0.0, 0.5, 1.0]);
+        // and every f16 the table can produce is finite and in [0,1]
+        let probes = [i64::MIN, -(1 << 30), -3, 17, 1 << 30, i64::MAX];
+        let act = run_on_accs(&stage, &probes, frac);
+        for h in &act.half {
+            let v = h.to_f32();
+            assert!((0.0..=1.0).contains(&v), "sigmoid out of range: {v}");
+        }
+    });
+}

@@ -19,7 +19,11 @@ produce a gate failure (including when they go missing). The `kernel/`
 prefix (forced scalar-vs-avx2 A/B cases and the derived speedups from
 the hotpath bench) is likewise tracked-not-gated: the ratio depends on
 the runner's CPU, and a runner without AVX2 legitimately drops the
-avx2 cases entirely.
+avx2 cases entirely. The `fusion/` prefix (stage-folding A/B cases and
+the derived fused-vs-unfused speedup) is tracked-not-gated while the
+fused-plan hotpath metric establishes its baseline; ratchet it into
+the gate by moving the prefix out of `is_tracked_only` once a trusted
+baseline exists.
 
 Usage:
   tools/bench_compare.py BENCH_baseline.json BENCH_hotpath.json BENCH_serve.json
@@ -55,7 +59,11 @@ DEFAULT_THRESHOLD = 0.15
 
 def is_tracked_only(name):
     """Metrics reported for trend visibility but never gated."""
-    return name.startswith("net/") or name.startswith("kernel/")
+    return (
+        name.startswith("net/")
+        or name.startswith("kernel/")
+        or name.startswith("fusion/")
+    )
 
 
 def extract_metrics(doc):
@@ -71,6 +79,10 @@ def extract_metrics(doc):
             if name.startswith("kernel:"):
                 # Forced-kernel A/B cases: CPU-dependent, tracked only.
                 out[f"kernel/{name}/samples_per_sec"] = float(sps)
+            elif name.startswith("fusion:"):
+                # Stage-folding A/B cases: tracked-not-gated while the
+                # fused-plan metric establishes its baseline.
+                out[f"fusion/{name}/samples_per_sec"] = float(sps)
             else:
                 out[f"hotpath/{name}/samples_per_sec"] = float(sps)
         rps = doc.get("coordinator_throughput_rps")
@@ -82,6 +94,11 @@ def extract_metrics(doc):
         for bank, ratio in (doc.get("kernel_speedup") or {}).items():
             if ratio is not None:
                 out[f"kernel/speedup/{bank}"] = float(ratio)
+        fusion = doc.get("fusion") or {}
+        if fusion.get("speedup") is not None:
+            out["fusion/speedup"] = float(fusion["speedup"])
+        if fusion.get("stages_folded") is not None:
+            out["fusion/stages_folded"] = float(fusion["stages_folded"])
     elif bench == "serve_throughput":
         total = doc.get("total_rps")
         if total is not None:
@@ -194,10 +211,17 @@ def self_test():
             {"name": "a", "samples_per_sec": 100.0},
             {"name": "b", "samples_per_sec": 50.0},
             {"name": "kernel:avx2 a", "samples_per_sec": 300.0},
+            {"name": "fusion:fused a", "samples_per_sec": 80.0},
         ],
         "coordinator_throughput_rps": 1000.0,
         "bank_tables_per_sec": {"bitplane_m14": 2.0e6},
         "kernel_speedup": {"bitplane": 3.0, "float": None},
+        "fusion": {
+            "speedup": 1.1,
+            "fused_stages": 3,
+            "unfused_stages": 7,
+            "stages_folded": 4,
+        },
     }
     doc_serve = {
         "bench": "serve_throughput",
@@ -225,15 +249,21 @@ def self_test():
     assert fresh["hotpath/bank/bitplane_m14/tables_per_sec"] == 2.0e6
     assert fresh["kernel/speedup/bitplane"] == 3.0
     assert "kernel/speedup/float" not in fresh
-    assert len(fresh) == 11, fresh
+    # fusion: cases and derived metrics route to the tracked fusion/ prefix
+    assert fresh["fusion/fusion:fused a/samples_per_sec"] == 80.0
+    assert "hotpath/fusion:fused a/samples_per_sec" not in fresh
+    assert fresh["fusion/speedup"] == 1.1
+    assert fresh["fusion/stages_folded"] == 4.0
+    assert len(fresh) == 14, fresh
 
-    # net/ and kernel/ metrics are tracked, never gated: a 90% collapse
-    # and an outright disappearance both pass
+    # net/, kernel/ and fusion/ metrics are tracked, never gated: a 90%
+    # collapse and an outright disappearance both pass
     base = dict(fresh)
     base["net/total_rps"] = 9000.0
     base["net/gone/rps"] = 123.0
     base["kernel/speedup/bitplane"] = 30.0
     base["kernel/kernel:gone/samples_per_sec"] = 1.0
+    base["fusion/speedup"] = 11.0
     rows, reg = compare(base, fresh, 0.15)
     assert not reg, reg
     statuses = {r[0]: r[4] for r in rows}
@@ -241,6 +271,7 @@ def self_test():
     assert statuses["net/gone/rps"] == "TRACKED", statuses
     assert statuses["kernel/speedup/bitplane"] == "TRACKED", statuses
     assert statuses["kernel/kernel:gone/samples_per_sec"] == "TRACKED", statuses
+    assert statuses["fusion/speedup"] == "TRACKED", statuses
 
     # headroom haircuts gateable metrics only
     cut = apply_headroom(fresh, 0.4)
@@ -248,6 +279,7 @@ def self_test():
     assert cut["hotpath/bank/bitplane_m14/tables_per_sec"] == 1.2e6, cut
     assert cut["kernel/speedup/bitplane"] == 3.0, cut
     assert cut["net/total_rps"] == 900.0, cut
+    assert cut["fusion/speedup"] == 1.1, cut
     assert apply_headroom(fresh, 0.0) == fresh
 
     # within threshold: pass (13% down on one metric)
